@@ -1,0 +1,47 @@
+//! Parallel-pruning scaling (paper §3.4 / §5): decoder layers are
+//! independent units, so pruning parallelizes across "devices" (worker
+//! threads with their own PJRT clients). Reports wall-clock vs workers.
+//!
+//!     cargo run --release --example parallel_scaling [model]
+
+use std::time::Instant;
+
+use fistapruner::bench_support::Lab;
+use fistapruner::config::{PruneMode, PruneOptions};
+use fistapruner::metrics::TableBuilder;
+use fistapruner::pruner::scheduler::Method;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(String::as_str).unwrap_or("topt-s3").to_string();
+    let corpus = "c4-syn";
+
+    let mut lab = Lab::new()?;
+    let dense = lab.trained(&model, corpus)?;
+    let calib = lab.calib(corpus, lab.calib_samples(), 0)?;
+
+    let mut t = TableBuilder::new(
+        &format!("parallel pruning scaling: {model}"),
+        &["mode", "workers", "wall s", "ppl"],
+    );
+
+    // Sequential reference (error propagation between layers).
+    let t0 = Instant::now();
+    let opts = PruneOptions { mode: PruneMode::Sequential, ..Default::default() };
+    let (pruned, _) = lab.prune(&model, &dense, &calib, Method::Fista, &opts)?;
+    let seq_s = t0.elapsed().as_secs_f64();
+    let ppl = lab.ppl(&model, &pruned, corpus)?;
+    t.row(vec!["sequential".into(), "1".into(), format!("{seq_s:.1}"), TableBuilder::f(ppl)]);
+
+    for workers in [1usize, 2, 4] {
+        let opts = PruneOptions { mode: PruneMode::Parallel, workers, ..Default::default() };
+        let t0 = Instant::now();
+        let (pruned, _) = lab.prune(&model, &dense, &calib, Method::Fista, &opts)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let ppl = lab.ppl(&model, &pruned, corpus)?;
+        t.row(vec!["parallel".into(), workers.to_string(), format!("{wall:.1}"), TableBuilder::f(ppl)]);
+    }
+    t.print();
+    println!("(parallel mode skips inter-layer propagation — the paper's independence assumption)");
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! End-to-end driver (DESIGN.md §5, EXPERIMENTS.md §E2E): proves all three
+//! layers compose on a real workload.
+//!
+//! 1. Train a transformer LM (L2 train artifact driven by the L3 trainer)
+//!    on a synthetic corpus and log the loss curve.
+//! 2. Prune it with every method (magnitude / Wanda / SparseGPT /
+//!    FISTAPruner) at 50% unstructured AND 2:4 semi-structured sparsity
+//!    (L1 Pallas FISTA kernel inside the L2 solve artifact, orchestrated
+//!    by the L3 unit/scheduler with intra-layer error correction).
+//! 3. Evaluate held-out perplexity and the 7 zero-shot probes.
+//!
+//!     cargo run --release --example prune_pipeline [model] [corpus]
+//!
+//! Defaults: topt-s3 (≈1.0M params) on wikitext-syn. Set FP_TRAIN_STEPS to
+//! lengthen training.
+
+use fistapruner::bench_support::Lab;
+use fistapruner::config::{PruneOptions, Sparsity};
+use fistapruner::eval::zeroshot::run_all_tasks;
+use fistapruner::metrics::TableBuilder;
+use fistapruner::pruner::scheduler::Method;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(String::as_str).unwrap_or("topt-s3").to_string();
+    let corpus = args.get(1).map(String::as_str).unwrap_or("wikitext-syn").to_string();
+
+    let mut lab = Lab::new()?;
+    println!("== end-to-end pipeline: {model} on {corpus} ==");
+
+    // ---- [1] train ----
+    println!("\n[1/3] training ({} steps; cached if already trained)", lab.train_steps());
+    let dense = lab.trained(&model, &corpus)?;
+    let spec = lab.presets.model(&model)?.clone();
+    println!(
+        "model: {} layers, d={}, {:.2}M params",
+        spec.layers,
+        spec.d,
+        fistapruner::model::spec::param_count(&spec) as f64 / 1e6
+    );
+
+    // ---- [2] prune × method × sparsity ----
+    let calib = lab.calib(&corpus, lab.calib_samples(), 0)?;
+    use fistapruner::baselines::BaselineKind::*;
+    let methods = [
+        Method::Baseline(Magnitude),
+        Method::Baseline(Wanda),
+        Method::Baseline(SparseGpt),
+        Method::Fista,
+    ];
+    let sparsities = [Sparsity::Unstructured(0.5), Sparsity::Semi(2, 4)];
+
+    println!("\n[2/3] pruning with {} methods × {} sparsity patterns", methods.len(), sparsities.len());
+    let mut table = TableBuilder::new(
+        &format!("{model} on {corpus}"),
+        &["Method", "Sparsity", "PPL", "ZS mean", "prune s"],
+    );
+    let ppl_dense = lab.ppl(&model, &dense, &corpus)?;
+    let zs_corpus = fistapruner::data::Corpus::generate(lab.presets.corpus(&corpus)?);
+    let items = if fistapruner::bench_support::fast_mode() { 32 } else { 100 };
+    let (_, zs_dense) =
+        run_all_tasks(&lab.session, &lab.presets, &spec, &dense, &zs_corpus, items, 1)?;
+    table.row(vec![
+        "Dense".into(),
+        "0%".into(),
+        TableBuilder::f(ppl_dense),
+        TableBuilder::acc(zs_dense),
+        "-".into(),
+    ]);
+
+    for sp in sparsities {
+        for method in methods {
+            let opts = PruneOptions { sparsity: sp, ..Default::default() };
+            let (pruned, report) = lab.prune(&model, &dense, &calib, method, &opts)?;
+            let ppl = lab.ppl(&model, &pruned, &corpus)?;
+            let (_, zs) =
+                run_all_tasks(&lab.session, &lab.presets, &spec, &pruned, &zs_corpus, items, 1)?;
+            println!("  {} @ {}: ppl {ppl:.2}, zs {zs:.3}", method.name(), sp.label());
+            table.row(vec![
+                method.name().to_string(),
+                sp.label(),
+                TableBuilder::f(ppl),
+                TableBuilder::acc(zs),
+                format!("{:.1}", report.elapsed.as_secs_f64()),
+            ]);
+        }
+    }
+
+    // ---- [3] report ----
+    println!("\n[3/3] results (record in EXPERIMENTS.md)");
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,36 @@
+//! Quickstart: train a tiny model, prune it with FISTAPruner at 50%
+//! unstructured sparsity, and compare held-out perplexity.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Uses the smallest preset (topt-s1) and short training so it finishes in
+//! about a minute on CPU. See prune_pipeline.rs for the full experiment.
+
+use fistapruner::bench_support::Lab;
+use fistapruner::config::PruneOptions;
+use fistapruner::pruner::scheduler::Method;
+
+fn main() -> anyhow::Result<()> {
+    let mut lab = Lab::new()?;
+    let (model, corpus) = ("topt-s1", "wikitext-syn");
+
+    println!("== FISTAPruner quickstart: {model} on {corpus} ==");
+    println!("[1/4] train (or load cached checkpoint)");
+    let dense = lab.trained(model, corpus)?;
+
+    println!("[2/4] sample calibration data ({} sequences)", lab.calib_samples());
+    let calib = lab.calib(corpus, lab.calib_samples(), 0)?;
+
+    println!("[3/4] prune with FISTAPruner (Algorithm 1, 50% unstructured)");
+    let opts = PruneOptions::default();
+    let (pruned, report) = lab.prune(model, &dense, &calib, Method::Fista, &opts)?;
+    println!("      {}", report.summary());
+
+    println!("[4/4] evaluate");
+    let ppl_dense = lab.ppl(model, &dense, corpus)?;
+    let ppl_pruned = lab.ppl(model, &pruned, corpus)?;
+    println!();
+    println!("held-out perplexity: dense {ppl_dense:.2} → 50% sparse {ppl_pruned:.2}");
+    println!("achieved weight sparsity: {:.1}%", pruned.weight_sparsity() * 100.0);
+    Ok(())
+}

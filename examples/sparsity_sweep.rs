@@ -1,0 +1,43 @@
+//! Sparsity-vs-perplexity sweep (paper Figure 3) on one model:
+//! FISTAPruner vs SparseGPT vs Wanda at 10–80% unstructured sparsity.
+//!
+//!     cargo run --release --example sparsity_sweep [model] [corpus]
+
+use fistapruner::bench_support::Lab;
+use fistapruner::config::{PruneOptions, Sparsity};
+use fistapruner::metrics::TableBuilder;
+use fistapruner::pruner::scheduler::Method;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(String::as_str).unwrap_or("topt-s1").to_string();
+    let corpus = args.get(1).map(String::as_str).unwrap_or("wikitext-syn").to_string();
+
+    let mut lab = Lab::new()?;
+    let dense = lab.trained(&model, &corpus)?;
+    let calib = lab.calib(&corpus, lab.calib_samples(), 0)?;
+    let ppl_dense = lab.ppl(&model, &dense, &corpus)?;
+    println!("dense ppl: {ppl_dense:.2}");
+
+    use fistapruner::baselines::BaselineKind::*;
+    let methods = [Method::Baseline(Wanda), Method::Baseline(SparseGpt), Method::Fista];
+    let rates = [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8];
+
+    let mut t = TableBuilder::new(
+        &format!("Figure 3 analog: {model} on {corpus}"),
+        &["sparsity", "Wanda", "SparseGPT", "FISTAPruner"],
+    );
+    for rate in rates {
+        let mut row = vec![format!("{:.0}%", rate * 100.0)];
+        for method in methods {
+            let opts =
+                PruneOptions { sparsity: Sparsity::Unstructured(rate), ..Default::default() };
+            let (pruned, _) = lab.prune(&model, &dense, &calib, method, &opts)?;
+            let ppl = lab.ppl(&model, &pruned, &corpus)?;
+            row.push(TableBuilder::f(ppl));
+        }
+        t.row(row);
+    }
+    t.print();
+    Ok(())
+}

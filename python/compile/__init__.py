@@ -1,0 +1,4 @@
+"""Build-time compile package: JAX/Pallas → HLO-text artifacts.
+
+Never imported by the runtime — rust loads artifacts/*.hlo.txt via PJRT.
+"""

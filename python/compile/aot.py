@@ -1,0 +1,222 @@
+"""AOT compile path: lower every L2 graph to HLO text + write the manifest.
+
+Run once via `make artifacts` (python -m compile.aot). The rust runtime is
+self-contained afterwards: it loads artifacts/*.hlo.txt through
+HloModuleProto::from_text_file and binds inputs by the order recorded in
+artifacts/manifest.json.
+
+HLO *text* is the interchange format (NOT serialized protos): jax >= 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .shapes import (
+    PRESETS_PATH,
+    all_model_cfgs,
+    fista_shapes,
+    gram_dims,
+    load_presets,
+    model_param_specs,
+    layer_param_specs,
+    pruned_ops,
+)
+
+F32 = "f32"
+I32 = "i32"
+_DTYPES = {F32: jnp.float32, I32: jnp.int32}
+
+# Which capture output feeds which pruned operator (paper Fig. 2 topology).
+CAPTURE_KEY = {
+    "wq": "attn_in", "wk": "attn_in", "wv": "attn_in", "wo": "o_in",
+    "w1": "mlp_in", "w2": "mlp2_in",
+    "wg": "mlp_in", "wu": "mlp_in", "wd": "mlp2_in",
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(dims, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(dims), _DTYPES[dtype])
+
+
+class Builder:
+    def __init__(self, out_dir: str, only: str | None = None, force: bool = False):
+        self.out_dir = out_dir
+        self.only = only
+        self.force = force
+        self.manifest_artifacts: dict = {}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name: str, fn, inputs: list, n_outputs: int, meta: dict | None = None):
+        """Lower fn over `inputs` = [(arg name, dims, dtype)] and record it."""
+        entry = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [{"name": nm, "dims": list(dims), "dtype": dt} for nm, dims, dt in inputs],
+            "outputs": n_outputs,
+            "meta": meta or {},
+        }
+        self.manifest_artifacts[name] = entry
+        if self.only and self.only not in name:
+            return
+        path = os.path.join(self.out_dir, entry["file"])
+        if not self.force and os.path.exists(path) and os.path.getmtime(path) > os.path.getmtime(PRESETS_PATH):
+            return
+        t0 = time.time()
+        specs = [_spec(dims, dt) for _, dims, dt in inputs]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  {name}: {len(text)} chars in {time.time() - t0:.1f}s", flush=True)
+
+
+def build_all(out_dir: str, only: str | None = None, force: bool = False) -> dict:
+    presets = load_presets()
+    fista_cfg = presets["fista"]
+    chunk = presets["gram_chunk"]
+    b = Builder(out_dir, only=only, force=force)
+
+    # ---- solver artifacts (shape-specialized, model-agnostic) ----
+    solve = M.make_fista_solve(iters=fista_cfg["max_iters"], tol=fista_cfg["stop_tol"])
+    for m, n in fista_shapes(presets):
+        b.emit(
+            f"fista_{m}x{n}",
+            solve,
+            [("a", (n, n), F32), ("b", (m, n), F32), ("w0", (m, n), F32), ("lam", (), F32), ("l_max", (), F32)],
+            2,
+            meta={"kind": "fista", "m": m, "n": n, "iters": fista_cfg["max_iters"]},
+        )
+        b.emit(
+            f"obj_{m}x{n}",
+            M.quad_obj,
+            [("a", (n, n), F32), ("b", (m, n), F32), ("w", (m, n), F32)],
+            1,
+            meta={"kind": "obj", "m": m, "n": n},
+        )
+        b.emit(
+            f"prep_{m}x{n}",
+            M.prep_op,
+            [("w", (m, n), F32), ("c", (n, n), F32), ("d", (n, n), F32)],
+            2,
+            meta={"kind": "prep", "m": m, "n": n},
+        )
+    for n in gram_dims(presets):
+        b.emit(
+            f"gram_{n}",
+            M.gram_chunk,
+            [("xd", (n, chunk), F32), ("xs", (n, chunk), F32)],
+            3,
+            meta={"kind": "gram", "n": n, "chunk": chunk},
+        )
+        b.emit(
+            f"power_{n}",
+            lambda a: M.power_l(a, iters=fista_cfg["power_iters"], safety=fista_cfg["power_safety"]),
+            [("a", (n, n), F32)],
+            1,
+            meta={"kind": "power", "n": n},
+        )
+
+    # ---- per-model artifacts ----
+    cb = presets["capture_batch"]
+    tb = presets["train_batch"]
+    seq = presets["seq_len"]
+    td = presets["train_defaults"]
+    models_meta = {}
+    for cfg in all_model_cfgs(presets):
+        lspecs = layer_param_specs(cfg, None)
+        capture, _ = M.make_layer_capture(cfg)
+        b.emit(
+            f"capture_{cfg.name}",
+            capture,
+            [("x", (cb, seq, cfg.d), F32)] + [(sp.name, sp.shape, F32) for sp in lspecs],
+            5,
+            meta={"kind": "capture", "model": cfg.name, "captures": ["attn_in", "o_in", "mlp_in", "mlp2_in", "y"]},
+        )
+        score, mspecs = M.make_score(cfg)
+        b.emit(
+            f"score_{cfg.name}",
+            score,
+            [(sp.name, sp.shape, F32) for sp in mspecs]
+            + [("tokens", (cb, seq + 1), I32), ("mask", (cb, seq), F32)],
+            1,
+            meta={"kind": "score", "model": cfg.name},
+        )
+        train, _ = M.make_train_step(
+            cfg, beta1=td["beta1"], beta2=td["beta2"], wd=td["weight_decay"]
+        )
+        b.emit(
+            f"train_{cfg.name}",
+            train,
+            [(sp.name, sp.shape, F32) for sp in mspecs]
+            + [("m." + sp.name, sp.shape, F32) for sp in mspecs]
+            + [("v." + sp.name, sp.shape, F32) for sp in mspecs]
+            + [("t", (), F32), ("lr", (), F32), ("tokens", (tb, seq + 1), I32)],
+            3 * len(mspecs) + 1,
+            meta={"kind": "train", "model": cfg.name},
+        )
+        models_meta[cfg.name] = {
+            "family": cfg.family,
+            "size": cfg.size,
+            "d": cfg.d,
+            "layers": cfg.layers,
+            "heads": cfg.heads,
+            "ffn": cfg.ffn,
+            "params": [
+                {"name": sp.name, "dims": list(sp.shape), "decay": sp.decay}
+                for sp in model_param_specs(cfg)
+            ],
+            "layer_params": [
+                {"name": sp.name, "dims": list(sp.shape), "decay": sp.decay} for sp in lspecs
+            ],
+            "ops": [
+                {"name": nm, "m": mn[0], "n": mn[1], "capture": CAPTURE_KEY[nm]}
+                for nm, mn in pruned_ops(cfg)
+            ],
+        }
+
+    manifest = {
+        "seq_len": seq,
+        "vocab_size": presets["vocab_size"],
+        "capture_batch": cb,
+        "train_batch": tb,
+        "gram_chunk": chunk,
+        "fista": fista_cfg,
+        "models": models_meta,
+        "artifacts": b.manifest_artifacts,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"manifest: {len(b.manifest_artifacts)} artifacts")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None, help="output dir (default <repo>/artifacts)")
+    ap.add_argument("--only", default=None, help="substring filter: only lower matching artifacts")
+    ap.add_argument("--force", action="store_true", help="re-lower even if up to date")
+    args = ap.parse_args()
+    out = args.out or os.path.normpath(os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    build_all(out, only=args.only, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

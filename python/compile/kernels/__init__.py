@@ -1,0 +1,5 @@
+"""L1 Pallas kernels (interpret=True) + their pure-jnp oracles."""
+
+from .fista_step import fista_step_pallas  # noqa: F401
+from .matmul_nt import matmul_nt_pallas  # noqa: F401
+from . import ref  # noqa: F401

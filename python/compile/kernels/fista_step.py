@@ -1,0 +1,149 @@
+"""Fused FISTA iteration as a Pallas kernel (the paper's compute hot-spot).
+
+One iteration of paper eqs. (5a), (5b), (5d) on the Gram form:
+
+    grad   = W_k A − B                     (5a, gradient of ½||W X* − WX||²)
+    W_13   = W_k − (1/L) grad              (5a, gradient step)
+    W_23   = SoftShrink_{λ/L}(W_13)        (5b, proximal step)
+    W_next = W_23 + coef (W_23 − W_k)      (5d, Nesterov combination)
+
+Hardware adaptation (DESIGN.md §6): the paper runs these as separate cuBLAS/
+elementwise CUDA launches on A100s, round-tripping W through HBM three times
+per iteration. On a TPU-shaped memory hierarchy we instead tile W into
+(bm × bn) VMEM-resident blocks, stream A through the grid's contraction
+dimension so each partial product is an MXU-shaped matmul, and apply the
+shrinkage + Nesterov epilogue in-register on the final contraction step —
+one HBM read and one HBM write of W per iteration.
+
+interpret=True throughout: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; correctness is validated against kernels/ref.py and real-TPU
+efficiency is estimated analytically in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def pick_block(dim: int, preferred=(128, 64, 32)) -> int:
+    """Largest MXU-friendly block size that divides `dim`.
+
+    All operator dims in configs/presets.json are multiples of 32; on a real
+    TPU the 128-lane choice maps a block row/column onto full MXU tiles.
+    """
+    for b in preferred:
+        if dim % b == 0:
+            return b
+    raise ValueError(f"dimension {dim} is not a multiple of 32")
+
+
+# §Perf budget: stay well under a TPU core's ~16 MiB of VMEM so weights,
+# Gram panel, outputs and the accumulator co-reside with double-buffering
+# headroom. 2 MiF (f32 words) ≈ 8 MiB.
+VMEM_BUDGET_F32 = 2 * 1024 * 1024
+
+
+def _divisor_blocks(dim: int):
+    """Divisors of dim that are multiples of 32, descending."""
+    return [b for b in range(dim, 31, -32) if dim % b == 0]
+
+
+def pick_blocks_3d(m: int, n: int, k: int, weight_bufs: int = 5) -> tuple:
+    """(bm, bn, bk) maximizing block volume under the VMEM budget.
+
+    §Perf L1 optimization (EXPERIMENTS.md): the original fixed 32–128
+    blocks produced O(100) grid steps per FISTA iteration; on CPU-interpret
+    the per-step overhead dominated, and on a real TPU small blocks
+    under-fill the MXU pipeline. Larger blocks shrink the grid — often to a
+    single step for our operator shapes — while the VMEM estimate
+    (`bm·bk + bk·bn + weight_bufs·bm·bn`) stays inside the budget.
+    """
+    best = None
+    for bm in _divisor_blocks(m):
+        for bn in _divisor_blocks(n):
+            for bk in _divisor_blocks(k):
+                vmem = bm * bk + bk * bn + weight_bufs * bm * bn
+                if vmem > VMEM_BUDGET_F32:
+                    continue
+                # minimize grid steps; tiebreak toward larger k-panels
+                steps = (m // bm) * (n // bn) * (k // bk)
+                key = (steps, -bk, -(bm * bn))
+                if best is None or key < best[0]:
+                    best = (key, (bm, bn, bk))
+    if best is None:
+        raise ValueError(f"no feasible blocks for {m}x{n}x{k}")
+    return best[1]
+
+
+def _fista_kernel(w_mm_ref, a_ref, w_el_ref, b_ref, s_ref, w23_ref, wnext_ref, acc_ref):
+    """Grid point (i, j, k): accumulate block (i,j) of W_k @ A over k panels.
+
+    w_mm_ref : W_k block (bm, bk) at (i, k)   — matmul operand
+    a_ref    : A   block (bk, bn) at (k, j)
+    w_el_ref : W_k block (bm, bn) at (i, j)   — elementwise operand
+    b_ref    : B   block (bm, bn) at (i, j)
+    s_ref    : scalars [inv_l, thresh, coef]
+    acc_ref  : VMEM scratch accumulator (bm, bn)
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(w_mm_ref[...], a_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _epilogue():
+        inv_l = s_ref[0]
+        thresh = s_ref[1]
+        coef = s_ref[2]
+        w_blk = w_el_ref[...]
+        w13 = w_blk - inv_l * (acc_ref[...] - b_ref[...])
+        w23 = jnp.sign(w13) * jnp.maximum(jnp.abs(w13) - thresh, 0.0)
+        w23_ref[...] = w23
+        wnext_ref[...] = w23 + coef * (w23 - w_blk)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fista_step_pallas(w, a, b, inv_l, thresh, coef, interpret=True):
+    """Fused FISTA step. Returns (W_{k+2/3}, W_{k+1}). See module docstring."""
+    m, n = w.shape
+    assert a.shape == (n, n) and b.shape == (m, n)
+    bm, bn, bk = pick_blocks_3d(m, n, n)
+    scalars = jnp.stack(
+        [jnp.asarray(inv_l, jnp.float32), jnp.asarray(thresh, jnp.float32), jnp.asarray(coef, jnp.float32)]
+    )
+    grid = (m // bm, n // bn, n // bk)
+    out_shape = [
+        jax.ShapeDtypeStruct((m, n), jnp.float32),
+        jax.ShapeDtypeStruct((m, n), jnp.float32),
+    ]
+    return tuple(
+        pl.pallas_call(
+            _fista_kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),  # W for matmul
+                pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),  # A panel
+                pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),  # W for epilogue
+                pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),  # B
+                pl.BlockSpec((3,), lambda i, j, k: (0,)),        # scalars
+            ],
+            out_specs=[
+                pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+                pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+            ],
+            out_shape=out_shape,
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+            interpret=interpret,
+        )(w, a, w, b, scalars)
+    )
+
+
+def vmem_footprint_bytes(m: int, n: int) -> int:
+    """Analytic VMEM working set of one grid step (EXPERIMENTS.md §Perf)."""
+    bm, bn, bk = pick_blocks_3d(m, n, n)
+    blocks = bm * bk + bk * bn + 3 * (bm * bn) + bm * bn  # inputs + outputs + acc
+    return 4 * blocks + 12  # f32 + 3 scalars

@@ -1,0 +1,53 @@
+"""Tiled X @ Y^T Pallas kernel — the Gram accumulation building block.
+
+Used by the L2 `gram_chunk` graph to form A = X* X*^T, C = X X*^T and
+D = X X^T from fixed-width activation chunks (DESIGN.md §3.1): zero-padded
+columns contribute nothing to a Gram product, so the rust coordinator can
+stream any calibration-set size through one compiled shape.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .fista_step import pick_blocks_3d
+
+
+def _matmul_nt_kernel(x_ref, y_ref, o_ref, acc_ref):
+    """Grid point (i, j, k): o[i,j] += x[i,k] @ y[j,k]^T."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...].T, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _store():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def matmul_nt_pallas(x, y, interpret=True):
+    """out[m, n] = x[m, p] @ y[n, p]^T with (bm, bn, bk) VMEM tiling."""
+    m, p = x.shape
+    n, p2 = y.shape
+    assert p == p2, (x.shape, y.shape)
+    # out + acc = 2 (m,n)-sized buffers in VMEM (§Perf: see pick_blocks_3d)
+    bm, bn, bk = pick_blocks_3d(m, n, p, weight_bufs=2)
+    return pl.pallas_call(
+        _matmul_nt_kernel,
+        grid=(m // bm, n // bn, p // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, y)

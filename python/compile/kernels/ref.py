@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: python/tests sweeps shapes and
+random inputs (hypothesis) and asserts the Pallas kernels match these to
+float32 tolerance. They are also small enough to audit against the paper's
+equations by eye.
+"""
+
+import jax.numpy as jnp
+
+
+def softshrink_ref(x, rho):
+    """Elementwise SoftShrinkage_rho (paper eq. after 5d)."""
+    return jnp.sign(x) * jnp.maximum(jnp.abs(x) - rho, 0.0)
+
+
+def fista_step_ref(w, a, b, inv_l, thresh, coef):
+    """One fused FISTA iteration (paper eqs. 5a, 5b, 5d).
+
+    w      : current iterate W_k (the extrapolated point)          [m, n]
+    a      : Gram matrix A = X* (X*)^T                              [n, n]
+    b      : B = W X (X*)^T                                        [m, n]
+    inv_l  : 1/L, step size (L = lambda_max(A))
+    thresh : lambda / L, shrinkage threshold
+    coef   : (t_k - 1) / t_{k+1}, Nesterov combination weight
+
+    Returns (W_{k+2/3}, W_{k+1}).
+    """
+    grad = w @ a - b                       # ∇f(W_k) = W_k A − B   (5a)
+    w13 = w - inv_l * grad                 # gradient step          (5a)
+    w23 = softshrink_ref(w13, thresh)      # proximal step          (5b)
+    w_next = w23 + coef * (w23 - w)        # Nesterov combination   (5d)
+    return w23, w_next
+
+
+def matmul_nt_ref(x, y):
+    """out = X @ Y^T — the Gram building block (A, C, D accumulation)."""
+    return x @ y.T
+
+
+def fista_solve_ref(a, b, w0, lam, l_max, iters=20, tol=1e-6):
+    """Reference FISTA loop on the Gram form (paper eqs. 5a-5d + eq. 7 stop).
+
+    Minimizes  ½ tr(W A W^T) − ⟨W, B⟩ + λ Σ_i ||W_i,:||_1 ,
+    which equals ½||W X* − W_dense X||_F² + λΣ||·||₁ up to a constant.
+    """
+    inv_l = 1.0 / l_max
+    thresh = lam * inv_l
+    w_k = w0
+    w23 = w0
+    t = 1.0
+    for _ in range(iters):
+        t_next = 0.5 * (1.0 + (1.0 + 4.0 * t * t) ** 0.5)
+        coef = (t - 1.0) / t_next
+        w23, w_next = fista_step_ref(w_k, a, b, inv_l, thresh, coef)
+        diff = jnp.linalg.norm(w_next - w_k)
+        w_k = w_next
+        t = t_next
+        if float(diff) < tol:
+            break
+    return w23
+
+
+def quad_obj_ref(a, b, w):
+    """tr(W A W^T) − 2⟨W, B⟩ — the Gram form of ||W X* − WX||² − ||WX||²."""
+    return jnp.sum((w @ a) * w) - 2.0 * jnp.sum(w * b)
+
+
+def power_iter_ref(a, iters=64, safety=1.02):
+    """Largest eigenvalue of PSD matrix A via power iteration + Rayleigh."""
+    n = a.shape[0]
+    v = jnp.ones((n,), a.dtype) / jnp.sqrt(jnp.asarray(float(n), a.dtype))
+    for _ in range(iters):
+        av = a @ v
+        v = av / jnp.maximum(jnp.linalg.norm(av), 1e-30)
+    return jnp.maximum(v @ (a @ v), 1e-12) * safety

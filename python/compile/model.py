@@ -1,0 +1,305 @@
+"""L2: JAX compute graphs, AOT-lowered to HLO text by aot.py.
+
+Every public builder here returns a plain jax function over f32/i32 arrays
+whose *positional* argument order is recorded in artifacts/manifest.json —
+the rust runtime binds literals by that order. Python never runs at request
+time; these graphs execute inside the rust coordinator via PJRT.
+
+Graph inventory (DESIGN.md §3):
+  fista_solve   — K FISTA iterations (lax.while_loop) over the Pallas kernel
+  power_l       — L = lambda_max(A) by power iteration (paper step size 1/L)
+  gram_chunk    — A/C/D Gram accumulation for one activation chunk
+  quad_obj      — tr(W A W^T) − 2<W,B>  (Gram form of the output error)
+  layer capture — one decoder layer forward returning all operator inputs
+                  (the intra-layer error-correction replay, paper §3.1)
+  score         — full forward → per-sequence masked NLL (perplexity, probes)
+  train_step    — AdamW causal-LM step (substrate: models are trained in-repo)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fista_step import fista_step_pallas
+from .kernels.matmul_nt import matmul_nt_pallas
+from .shapes import ModelCfg, ParamSpec, layer_param_specs, model_param_specs
+
+
+# --------------------------------------------------------------------------
+# Pruning-solver graphs
+# --------------------------------------------------------------------------
+
+def make_fista_solve(iters: int = 20, tol: float = 1e-6):
+    """FISTA on the Gram form (paper eqs. 5a–5d, stop eq. 7).
+
+    Args (runtime): A[n,n], B[m,n], W0[m,n], lam[], l_max[].
+    Returns W_K = the last proximal point W_{k+2/3} (the sparse candidate
+    that Algorithm 1 rounds), plus the number of iterations actually run.
+    """
+
+    def fista_solve(a, b, w0, lam, l_max):
+        inv_l = 1.0 / l_max
+        thresh = lam * inv_l
+
+        def cond(state):
+            k, _wk, _w23, _t, diff = state
+            return jnp.logical_and(k < iters, diff >= tol)
+
+        def body(state):
+            k, w_k, _w23, t, _diff = state
+            t_next = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+            coef = (t - 1.0) / t_next
+            w23, w_next = fista_step_pallas(w_k, a, b, inv_l, thresh, coef)
+            diff = jnp.linalg.norm(w_next - w_k)
+            return k + 1, w_next, w23, t_next, diff
+
+        init = (
+            jnp.asarray(0, jnp.int32),
+            w0,
+            w0,
+            jnp.asarray(1.0, jnp.float32),
+            jnp.asarray(jnp.inf, jnp.float32),
+        )
+        k, _wk, w23, _t, _diff = jax.lax.while_loop(cond, body, init)
+        return w23, k
+
+    return fista_solve
+
+
+def power_l(a, iters: int = 64, safety: float = 1.02):
+    """Step-size constant L = lambda_max(A) (power method + Rayleigh).
+
+    Power iteration lower-bounds lambda_max; the small safety factor keeps
+    1/L a valid (slightly conservative) FISTA step size.
+    """
+    n = a.shape[0]
+    v0 = jnp.ones((n,), jnp.float32) / jnp.sqrt(jnp.asarray(float(n), jnp.float32))
+
+    def body(_, v):
+        av = a @ v
+        return av / jnp.maximum(jnp.linalg.norm(av), 1e-30)
+
+    v = jax.lax.fori_loop(0, iters, body, v0)
+    return jnp.maximum(v @ (a @ v), 1e-12) * safety
+
+
+def gram_chunk(xd, xs):
+    """One chunk of Gram accumulation (DESIGN.md §3.1).
+
+    xd, xs : [n, chunk] dense / pruned-path activations (zero-padded tails
+    are exact no-ops). Returns (A_c, C_c, D_c) = (Xs Xs^T, Xd Xs^T, Xd Xd^T).
+    """
+    a_c = matmul_nt_pallas(xs, xs)
+    c_c = matmul_nt_pallas(xd, xs)
+    d_c = matmul_nt_pallas(xd, xd)
+    return a_c, c_c, d_c
+
+
+def quad_obj(a, b, w):
+    """tr(W A W^T) − 2<W, B>; add ||WX||² (from D) to get ||W X* − WX||²."""
+    return jnp.sum((w @ a) * w) - 2.0 * jnp.sum(w * b)
+
+
+def prep_op(w, c, d):
+    """Per-operator solver prep, fused into one artifact call:
+
+    B = W·C (the FISTA linear term, paper eq. 5a with C = X X*^T) and
+    c_norm = tr(W D W^T) = ||W X||² (the constant completing the error).
+    """
+    b = w @ c
+    c_norm = jnp.sum((w @ d) * w)
+    return b, c_norm
+
+
+# --------------------------------------------------------------------------
+# Transformer substrate (topt = OPT-style, tllama = LLaMA-style)
+# --------------------------------------------------------------------------
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _rmsnorm(x, g, eps=1e-5):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x / jnp.sqrt(ms + eps) * g
+
+
+def _rope(x, base=10000.0):
+    """Rotary embeddings over [b, h, s, hd] (hd even)."""
+    b, h, s, hd = x.shape
+    half = hd // 2
+    freqs = base ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    pos = jnp.arange(s, dtype=jnp.float32)
+    ang = pos[:, None] * freqs[None, :]          # [s, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _attention(q, k, v, heads):
+    """Causal multi-head attention. q/k/v: [b, s, d] already projected."""
+    bsz, s, d = q.shape
+    hd = d // heads
+
+    def split(t):
+        return t.reshape(bsz, s, heads, hd).transpose(0, 2, 1, 3)
+
+    return split(q), split(k), split(v), hd
+
+
+def _attn_merge(ctx):
+    bsz, h, s, hd = ctx.shape
+    return ctx.transpose(0, 2, 1, 3).reshape(bsz, s, h * hd)
+
+
+def _causal_softmax(scores):
+    s = scores.shape[-1]
+    mask = jnp.tril(jnp.ones((s, s), jnp.bool_))
+    scores = jnp.where(mask[None, None, :, :], scores, -1e30)
+    return jax.nn.softmax(scores, axis=-1)
+
+
+def _pdict(specs: list[ParamSpec], flat):
+    assert len(specs) == len(flat), (len(specs), len(flat))
+    return {sp.name: t for sp, t in zip(specs, flat)}
+
+
+def _layer_fwd(cfg: ModelCfg, x, p, prefix=""):
+    """One decoder layer. Returns (y, captures) where captures holds the
+    input activation of every pruned operator (paper Fig. 2 replay points).
+
+    capture keys: attn_in (input of wq/wk/wv), o_in (input of wo),
+    mlp_in (input of w1 / wg+wu), mlp2_in (input of w2 / wd).
+    """
+    g = lambda nm: p[prefix + nm]  # noqa: E731
+    if cfg.norm == "layernorm":
+        h = _layernorm(x, g("ln1_g"), g("ln1_b"))
+    else:
+        h = _rmsnorm(x, g("rms1_g"))
+    attn_in = h
+
+    def lin(t, wname):
+        y = t @ g(wname).T
+        if cfg.bias:
+            y = y + g("b" + wname[1])
+        return y
+
+    q, k, v = lin(h, "wq"), lin(h, "wk"), lin(h, "wv")
+    qh, kh, vh, hd = _attention(q, k, v, cfg.heads)
+    if cfg.pos == "rope":
+        qh, kh = _rope(qh), _rope(kh)
+    scores = jnp.einsum("bhsd,bhtd->bhst", qh, kh) / jnp.sqrt(jnp.asarray(float(hd), jnp.float32))
+    ctx = jnp.einsum("bhst,bhtd->bhsd", _causal_softmax(scores), vh)
+    o_in = _attn_merge(ctx)
+    x = x + lin(o_in, "wo")
+
+    if cfg.norm == "layernorm":
+        h2 = _layernorm(x, g("ln2_g"), g("ln2_b"))
+    else:
+        h2 = _rmsnorm(x, g("rms2_g"))
+    mlp_in = h2
+    if cfg.mlp == "gelu4x":
+        f1 = jax.nn.gelu(lin(h2, "w1"))
+        mlp2_in = f1
+        x = x + lin(f1, "w2")
+    else:  # swiglu
+        gate = jax.nn.silu(h2 @ g("wg").T)
+        up = h2 @ g("wu").T
+        mlp2_in = gate * up
+        x = x + mlp2_in @ g("wd").T
+    captures = {"attn_in": attn_in, "o_in": o_in, "mlp_in": mlp_in, "mlp2_in": mlp2_in}
+    return x, captures
+
+
+def make_layer_capture(cfg: ModelCfg):
+    """Layer-generic capture artifact: (x, *layer_params) →
+    (attn_in, o_in, mlp_in, mlp2_in, y). Used by the rust pruning unit to
+    replay a layer under dense or partially-pruned weights (paper §3.1)."""
+    specs = layer_param_specs(cfg, None)
+
+    def capture(x, *flat):
+        p = _pdict(specs, flat)
+        y, c = _layer_fwd(cfg, x, p)
+        return c["attn_in"], c["o_in"], c["mlp_in"], c["mlp2_in"], y
+
+    return capture, specs
+
+
+def _model_apply(cfg: ModelCfg, p, tokens):
+    """Full forward: tokens [b, s] (int32) → logits [b, s, vocab]."""
+    x = p["embed"][tokens]
+    if cfg.pos == "learned":
+        x = x + p["pos"][None, : tokens.shape[1], :]
+    for li in range(cfg.layers):
+        x, _ = _layer_fwd(cfg, x, p, prefix=f"l{li}.")
+    if cfg.norm == "layernorm":
+        x = _layernorm(x, p["lnf_g"], p["lnf_b"])
+    else:
+        x = _rmsnorm(x, p["rmsf_g"])
+    return x @ p["embed"].T  # tied unembedding (paper: head never pruned)
+
+
+def make_score(cfg: ModelCfg):
+    """Score artifact: (*params, tokens[b,s+1], mask[b,s]) → nll[b].
+
+    nll[b] = sum_t mask[b,t] * −log p(tokens[b,t+1] | tokens[b,:t+1]).
+    Perplexity and the zero-shot probes are both computed from this in rust.
+    """
+    specs = model_param_specs(cfg)
+
+    def score(*args):
+        flat, tokens, mask = args[:-2], args[-2], args[-1]
+        p = _pdict(specs, flat)
+        logits = _model_apply(cfg, p, tokens[:, :-1])
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        tgt = tokens[:, 1:]
+        nll_tok = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+        return jnp.sum(nll_tok * mask, axis=-1)
+
+    return score, specs
+
+
+def make_train_step(cfg: ModelCfg, beta1=0.9, beta2=0.95, eps=1e-8, wd=0.01):
+    """AdamW causal-LM training step (the in-repo substrate trainer).
+
+    Args: (*params, *m, *v, t[], lr[], tokens[B, s+1])
+    Returns: (*params', *m', *v', loss[]).
+    Weight decay applies only to ParamSpec.decay (2-D matmul weights).
+    """
+    specs = model_param_specs(cfg)
+    n = len(specs)
+
+    def loss_fn(flat, tokens):
+        p = _pdict(specs, flat)
+        logits = _model_apply(cfg, p, tokens[:, :-1])
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        tgt = tokens[:, 1:]
+        nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+        return jnp.mean(nll)
+
+    def train_step(*args):
+        flat = list(args[:n])
+        m = list(args[n : 2 * n])
+        v = list(args[2 * n : 3 * n])
+        t, lr, tokens = args[3 * n], args[3 * n + 1], args[3 * n + 2]
+        loss, grads = jax.value_and_grad(loss_fn)(flat, tokens)
+        bc1 = 1.0 - beta1 ** t
+        bc2 = 1.0 - beta2 ** t
+        out_p, out_m, out_v = [], [], []
+        for sp, pi, mi, vi, gi in zip(specs, flat, m, v, grads):
+            mi = beta1 * mi + (1.0 - beta1) * gi
+            vi = beta2 * vi + (1.0 - beta2) * gi * gi
+            upd = (mi / bc1) / (jnp.sqrt(vi / bc2) + eps)
+            if sp.decay:
+                upd = upd + wd * pi
+            out_p.append(pi - lr * upd)
+            out_m.append(mi)
+            out_v.append(vi)
+        return (*out_p, *out_m, *out_v, loss)
+
+    return train_step, specs

@@ -1,0 +1,159 @@
+"""Shape manifest shared between the python compile path and the rust runtime.
+
+Everything is derived from configs/presets.json — the single source of truth.
+The rust side reads the same file through its own JSON parser; the two sides
+meet at artifacts/manifest.json, which records the exact input order, shapes
+and dtypes of every lowered artifact.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+PRESETS_PATH = os.path.normpath(os.path.join(_HERE, "..", "..", "configs", "presets.json"))
+
+
+def load_presets(path: str = PRESETS_PATH) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+@dataclass(frozen=True)
+class ModelCfg:
+    """Resolved configuration for one (family, size) model."""
+
+    family: str
+    size: str
+    d: int
+    layers: int
+    heads: int
+    ffn: int
+    vocab: int
+    seq: int
+    norm: str
+    mlp: str
+    pos: str
+    bias: bool
+
+    @property
+    def head_dim(self) -> int:
+        return self.d // self.heads
+
+    @property
+    def name(self) -> str:
+        return f"{self.family}-{self.size}"
+
+
+def model_cfg(presets: dict, family: str, size: str) -> ModelCfg:
+    fam = presets["families"][family]
+    sz = fam["sizes"][size]
+    return ModelCfg(
+        family=family,
+        size=size,
+        d=sz["d"],
+        layers=sz["layers"],
+        heads=sz["heads"],
+        ffn=sz["ffn"],
+        vocab=presets["vocab_size"],
+        seq=presets["seq_len"],
+        norm=fam["norm"],
+        mlp=fam["mlp"],
+        pos=fam["pos"],
+        bias=fam["bias"],
+    )
+
+
+def all_model_cfgs(presets: dict) -> list[ModelCfg]:
+    out = []
+    for family, fam in presets["families"].items():
+        for size in fam["sizes"]:
+            out.append(model_cfg(presets, family, size))
+    return out
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    """One model parameter: name, shape, and whether weight decay applies."""
+
+    name: str
+    shape: tuple
+    decay: bool = False
+
+
+def layer_param_specs(cfg: ModelCfg, li: int | None = None) -> list[ParamSpec]:
+    """Parameters of one decoder layer, in canonical order.
+
+    `li` prefixes names with the layer index (None for the layer-generic
+    capture artifact).
+    """
+    p = f"l{li}." if li is not None else ""
+    d, ffn = cfg.d, cfg.ffn
+    specs: list[ParamSpec] = []
+    if cfg.norm == "layernorm":
+        specs += [ParamSpec(p + "ln1_g", (d,)), ParamSpec(p + "ln1_b", (d,))]
+    else:
+        specs += [ParamSpec(p + "rms1_g", (d,))]
+    for nm in ("wq", "wk", "wv", "wo"):
+        specs.append(ParamSpec(p + nm, (d, d), decay=True))
+        if cfg.bias:
+            specs.append(ParamSpec(p + "b" + nm[1], (d,)))
+    if cfg.norm == "layernorm":
+        specs += [ParamSpec(p + "ln2_g", (d,)), ParamSpec(p + "ln2_b", (d,))]
+    else:
+        specs += [ParamSpec(p + "rms2_g", (d,))]
+    if cfg.mlp == "gelu4x":
+        specs.append(ParamSpec(p + "w1", (ffn, d), decay=True))
+        if cfg.bias:
+            specs.append(ParamSpec(p + "b1", (ffn,)))
+        specs.append(ParamSpec(p + "w2", (d, ffn), decay=True))
+        if cfg.bias:
+            specs.append(ParamSpec(p + "b2", (d,)))
+    else:  # swiglu
+        specs.append(ParamSpec(p + "wg", (ffn, d), decay=True))
+        specs.append(ParamSpec(p + "wu", (ffn, d), decay=True))
+        specs.append(ParamSpec(p + "wd", (d, ffn), decay=True))
+    return specs
+
+
+def model_param_specs(cfg: ModelCfg) -> list[ParamSpec]:
+    """All parameters of the model, in the canonical (manifest) order."""
+    specs = [ParamSpec("embed", (cfg.vocab, cfg.d), decay=False)]
+    if cfg.pos == "learned":
+        specs.append(ParamSpec("pos", (cfg.seq, cfg.d)))
+    for li in range(cfg.layers):
+        specs += layer_param_specs(cfg, li)
+    if cfg.norm == "layernorm":
+        specs += [ParamSpec("lnf_g", (cfg.d,)), ParamSpec("lnf_b", (cfg.d,))]
+    else:
+        specs += [ParamSpec("rmsf_g", (cfg.d,))]
+    return specs
+
+
+# Linear operators pruned per layer, in the paper's sequential order
+# (q,k,v share an input; o follows attention; then the MLP pair/triple).
+def pruned_ops(cfg: ModelCfg) -> list[tuple]:
+    """(op name, (m, n)) in intra-layer pruning order."""
+    d, ffn = cfg.d, cfg.ffn
+    ops = [("wq", (d, d)), ("wk", (d, d)), ("wv", (d, d)), ("wo", (d, d))]
+    if cfg.mlp == "gelu4x":
+        ops += [("w1", (ffn, d)), ("w2", (d, ffn))]
+    else:
+        ops += [("wg", (ffn, d)), ("wu", (ffn, d)), ("wd", (d, ffn))]
+    return ops
+
+
+def fista_shapes(presets: dict) -> list[tuple]:
+    """Distinct (m, n) shapes across all pruned operators of all models."""
+    seen = set()
+    for cfg in all_model_cfgs(presets):
+        for _, mn in pruned_ops(cfg):
+            seen.add(mn)
+    return sorted(seen)
+
+
+def gram_dims(presets: dict) -> list[int]:
+    """Distinct operator-input dims n (Gram matrices are n×n)."""
+    return sorted({mn[1] for mn in fista_shapes(presets)})

@@ -1,0 +1,78 @@
+"""The cross-language contract: manifest.json must agree with shapes.py and
+every referenced HLO file must exist after `make artifacts`."""
+
+import json
+import os
+
+import pytest
+
+from compile.shapes import (
+    all_model_cfgs,
+    fista_shapes,
+    gram_dims,
+    load_presets,
+    model_param_specs,
+    pruned_ops,
+)
+
+ART = os.path.normpath(os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("run `make artifacts` first")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_every_artifact_file_exists(manifest):
+    missing = [
+        name
+        for name, a in manifest["artifacts"].items()
+        if not os.path.exists(os.path.join(ART, a["file"]))
+    ]
+    assert not missing, f"missing HLO files: {missing}"
+
+
+def test_solver_artifacts_cover_all_shapes(manifest):
+    presets = load_presets()
+    arts = manifest["artifacts"]
+    for m, n in fista_shapes(presets):
+        for kind in ("fista", "obj", "prep"):
+            assert f"{kind}_{m}x{n}" in arts
+    for n in gram_dims(presets):
+        assert f"gram_{n}" in arts
+        assert f"power_{n}" in arts
+
+
+def test_model_params_match_manifest_order(manifest):
+    presets = load_presets()
+    for cfg in all_model_cfgs(presets):
+        specs = model_param_specs(cfg)
+        rec = manifest["models"][cfg.name]["params"]
+        assert [r["name"] for r in rec] == [s.name for s in specs]
+        assert [tuple(r["dims"]) for r in rec] == [s.shape for s in specs]
+        # score artifact's leading inputs are exactly the param specs
+        score = manifest["artifacts"][f"score_{cfg.name}"]
+        lead = score["inputs"][: len(specs)]
+        assert [i["name"] for i in lead] == [s.name for s in specs]
+
+
+def test_ops_capture_keys_recorded(manifest):
+    presets = load_presets()
+    for cfg in all_model_cfgs(presets):
+        ops = manifest["models"][cfg.name]["ops"]
+        assert [o["name"] for o in ops] == [nm for nm, _ in pruned_ops(cfg)]
+        for o in ops:
+            assert o["capture"] in ("attn_in", "o_in", "mlp_in", "mlp2_in")
+
+
+def test_train_artifact_arity(manifest):
+    presets = load_presets()
+    cfg = all_model_cfgs(presets)[0]
+    n = len(model_param_specs(cfg))
+    train = manifest["artifacts"][f"train_{cfg.name}"]
+    assert len(train["inputs"]) == 3 * n + 3
+    assert train["outputs"] == 3 * n + 1

@@ -1,0 +1,67 @@
+"""L2 correctness: fista_solve / power_l / gram_chunk / quad_obj / prep_op."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+from compile.kernels import ref
+
+
+def _gram_setup(seed, m, n, p):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(n, p)), jnp.float32) * 0.5
+    a = x @ x.T
+    b = w @ a
+    return w, x, a, b
+
+
+def test_fista_solve_matches_ref_loop():
+    w, _x, a, b = _gram_setup(0, 32, 32, 128)
+    l = float(np.linalg.eigvalsh(np.asarray(a, np.float64)).max()) * 1.02
+    solve = M.make_fista_solve(iters=20, tol=1e-6)
+    w0 = jnp.zeros_like(w)
+    got, k = jax.jit(solve)(a, b, w0, jnp.float32(0.05), jnp.float32(l))
+    want = ref.fista_solve_ref(a, b, w0, 0.05, l, iters=20, tol=1e-6)
+    assert int(k) > 0
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4, rtol=1e-3)
+
+
+def test_fista_solve_lambda_zero_recovers_w():
+    # dims must be multiples of 32 (Pallas block constraint)
+    w, _x, a, b = _gram_setup(1, 32, 32, 256)
+    l = float(np.linalg.eigvalsh(np.asarray(a, np.float64)).max()) * 1.02
+    solve = M.make_fista_solve(iters=400, tol=1e-9)
+    got, _ = jax.jit(solve)(a, b, jnp.zeros_like(w), jnp.float32(0.0), jnp.float32(l))
+    rel = float(jnp.linalg.norm(got - w) / jnp.linalg.norm(w))
+    assert rel < 0.05, rel
+
+
+def test_power_l_matches_numpy():
+    _w, _x, a, _b = _gram_setup(2, 8, 48, 200)
+    got = float(jax.jit(lambda a: M.power_l(a, iters=128, safety=1.0))(a))
+    want = float(np.linalg.eigvalsh(np.asarray(a, np.float64)).max())
+    assert abs(got - want) < 0.01 * want
+
+
+def test_gram_chunk_outputs():
+    rng = np.random.default_rng(3)
+    xd = jnp.asarray(rng.normal(size=(64, 512)), jnp.float32)
+    xs = jnp.asarray(rng.normal(size=(64, 512)), jnp.float32)
+    a, c, d = jax.jit(M.gram_chunk)(xd, xs)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(xs @ xs.T), atol=1e-2, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(xd @ xs.T), atol=1e-2, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(xd @ xd.T), atol=1e-2, rtol=1e-4)
+
+
+def test_quad_obj_and_prep_complete_the_square():
+    # quad(A,B,W*) + tr(W D Wᵀ) == ‖W* X − W X‖² when X* = X
+    w, x, a, b = _gram_setup(4, 8, 16, 128)
+    rng = np.random.default_rng(5)
+    cand = jnp.asarray(rng.normal(size=w.shape), jnp.float32)
+    b_prep, c_norm = jax.jit(M.prep_op)(w, a, a)  # C = D = A when X* = X
+    np.testing.assert_allclose(np.asarray(b_prep), np.asarray(b), atol=1e-2, rtol=1e-4)
+    quad = float(jax.jit(M.quad_obj)(a, b, cand))
+    direct = float(jnp.sum((cand @ x - w @ x) ** 2))
+    assert abs(quad + float(c_norm) - direct) < 2e-2 * max(direct, 1.0)

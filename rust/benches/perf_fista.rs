@@ -1,0 +1,86 @@
+//! §Perf microbench: the FISTA solve hot path — XLA artifact (Pallas
+//! kernel in a while-loop) vs the native rust reference, across the
+//! operator shapes of every model family, plus the λ-tuner cost breakdown.
+//!
+//!     cargo bench --bench perf_fista
+
+use std::sync::Arc;
+
+use fistapruner::metrics::{csv::CsvWriter, TableBuilder};
+use fistapruner::pruner::engine::{NativeEngine, SolverEngine, XlaEngine};
+use fistapruner::runtime::{Manifest, Session};
+use fistapruner::tensor::Tensor;
+use fistapruner::util::{timer::measure, Pcg64};
+
+fn main() -> anyhow::Result<()> {
+    let session = Session::new(Arc::new(Manifest::load_default()?))?;
+    let xla = XlaEngine::new(&session);
+    let native = NativeEngine::default();
+    let mut rng = Pcg64::seeded(7);
+
+    let shapes = [(64usize, 64usize), (128, 128), (512, 128), (192, 192), (768, 192), (192, 768)];
+    let reps = if std::env::var("FP_BENCH_FAST").is_ok() { 3 } else { 7 };
+
+    let root = fistapruner::config::repo_root()?;
+    let mut csv = CsvWriter::create(
+        &root.join("artifacts/bench_out/perf_fista.csv"),
+        &["m", "n", "xla_ms", "native_ms", "speedup"],
+    )?;
+    let mut t = TableBuilder::new(
+        "perf: fista solve (K=20) — XLA artifact vs native rust",
+        &["shape", "xla ms", "native ms", "xla speedup"],
+    );
+    for (m, n) in shapes {
+        let w = Tensor::from_vec(vec![m, n], rng.normal_vec(m * n, 1.0));
+        let x = Tensor::from_vec(vec![n, 512], rng.normal_vec(n * 512, 0.5));
+        let (a, c, d) = native.gram(&x, &x)?;
+        let (b, _) = native.prep(&w, &c, &d)?;
+        let l = native.power(&a)?;
+        let w0 = Tensor::zeros(vec![m, n]);
+        // warm up the executable cache before timing
+        xla.fista(&a, &b, &w0, 0.01, l)?;
+        let xla_s = measure(reps, || {
+            xla.fista(&a, &b, &w0, 0.01, l).unwrap();
+        });
+        let nat_s = measure(reps.min(3), || {
+            native.fista(&a, &b, &w0, 0.01, l).unwrap();
+        });
+        csv.write_row(&[
+            &m.to_string(),
+            &n.to_string(),
+            &format!("{:.2}", xla_s * 1e3),
+            &format!("{:.2}", nat_s * 1e3),
+            &format!("{:.2}", nat_s / xla_s),
+        ])?;
+        t.row(vec![
+            format!("{m}x{n}"),
+            format!("{:.2}", xla_s * 1e3),
+            format!("{:.2}", nat_s * 1e3),
+            format!("{:.2}x", nat_s / xla_s),
+        ]);
+        let _ = d;
+    }
+    t.print();
+
+    // λ-tuner end-to-end on one op: where does the time go?
+    let (m, n) = (512usize, 128usize);
+    let w = Tensor::from_vec(vec![m, n], rng.normal_vec(m * n, 1.0));
+    let x = Tensor::from_vec(vec![n, 2048], rng.normal_vec(n * 2048, 0.5));
+    let mut sw = fistapruner::util::Stopwatch::new();
+    let em = fistapruner::pruner::objective::ErrorModel::build(&xla, &w, &x, &x)?;
+    sw.lap("gram+prep+power");
+    let warm = fistapruner::pruner::round_to_sparsity(&w, fistapruner::config::Sparsity::Unstructured(0.5));
+    sw.lap("warm_start");
+    let cfg = fistapruner::pruner::TuneCfg {
+        lambda_init: 1e-5,
+        lambda_hi: 1e6,
+        xi: 0.3,
+        patience: 3,
+        eps: 1e-6,
+        max_rounds: 12,
+    };
+    let res = fistapruner::pruner::tune_lambda(&xla, &em, &warm, fistapruner::config::Sparsity::Unstructured(0.5), &cfg)?;
+    sw.lap("lambda_tune");
+    println!("tuner breakdown ({m}x{n}, p=2048, {} rounds, {} fista iters): {}", res.rounds, res.fista_iters, sw.report());
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! §Perf microbench: Gram accumulation throughput (the wall-clock hot path
+//! of a pruning run) — XLA chunked artifact vs native rust, across
+//! operator input dims; plus capture-batch throughput.
+//!
+//!     cargo bench --bench perf_gram
+
+use std::sync::Arc;
+
+use fistapruner::metrics::{csv::CsvWriter, TableBuilder};
+use fistapruner::pruner::engine::{NativeEngine, SolverEngine, XlaEngine};
+use fistapruner::runtime::{Manifest, Session};
+use fistapruner::tensor::Tensor;
+use fistapruner::util::{timer::measure, Pcg64};
+
+fn main() -> anyhow::Result<()> {
+    let session = Session::new(Arc::new(Manifest::load_default()?))?;
+    let xla = XlaEngine::new(&session);
+    let native = NativeEngine::default();
+    let mut rng = Pcg64::seeded(9);
+    let p = 4096usize; // 64 calibration sequences × seq 64
+    let reps = if std::env::var("FP_BENCH_FAST").is_ok() { 3 } else { 5 };
+
+    let root = fistapruner::config::repo_root()?;
+    let mut csv = CsvWriter::create(
+        &root.join("artifacts/bench_out/perf_gram.csv"),
+        &["n", "p", "xla_ms", "native_ms", "xla_gflops"],
+    )?;
+    let mut t = TableBuilder::new(
+        &format!("perf: gram accumulation (A,C,D over p={p})"),
+        &["n", "xla ms", "native ms", "xla GFLOP/s"],
+    );
+    for n in [64usize, 128, 192, 512, 768] {
+        let xd = Tensor::from_vec(vec![n, p], rng.normal_vec(n * p, 1.0));
+        let xs = Tensor::from_vec(vec![n, p], rng.normal_vec(n * p, 1.0));
+        xla.gram(&xd, &xs)?; // warm the executable cache
+        let xla_s = measure(reps, || {
+            xla.gram(&xd, &xs).unwrap();
+        });
+        let nat_s = measure(2, || {
+            native.gram(&xd, &xs).unwrap();
+        });
+        let flops = 3.0 * 2.0 * (n * n * p) as f64; // 3 Gram products
+        csv.write_row(&[
+            &n.to_string(),
+            &p.to_string(),
+            &format!("{:.1}", xla_s * 1e3),
+            &format!("{:.1}", nat_s * 1e3),
+            &format!("{:.2}", flops / xla_s / 1e9),
+        ])?;
+        t.row(vec![
+            n.to_string(),
+            format!("{:.1}", xla_s * 1e3),
+            format!("{:.1}", nat_s * 1e3),
+            format!("{:.2}", flops / xla_s / 1e9),
+        ]);
+    }
+    t.print();
+
+    // Capture throughput (the other request-path artifact).
+    let manifest = session.manifest();
+    let presets = fistapruner::config::Presets::load(&root)?;
+    let spec = presets.model("topt-s3")?.clone();
+    let params = fistapruner::model::init::init_params(&spec, 1);
+    let layer: Vec<Tensor> = params.layer_tensors(&spec, 0).into_iter().cloned().collect();
+    let x = Tensor::from_vec(
+        vec![manifest.capture_batch, spec.seq, spec.d],
+        rng.normal_vec(manifest.capture_batch * spec.seq * spec.d, 0.5),
+    );
+    let name = format!("capture_{}", spec.name());
+    let mut args: Vec<fistapruner::runtime::Arg<'_>> = vec![fistapruner::runtime::Arg::T(&x)];
+    for t_ in &layer {
+        args.push(fistapruner::runtime::Arg::T(t_));
+    }
+    session.run(&name, &args)?;
+    let cap_s = measure(reps, || {
+        session.run(&name, &args).unwrap();
+    });
+    println!(
+        "capture_{}: {:.1} ms/batch ({} tokens) → {:.0} tokens/s",
+        spec.name(),
+        cap_s * 1e3,
+        manifest.capture_batch * spec.seq,
+        (manifest.capture_batch * spec.seq) as f64 / cap_s
+    );
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Paper §5 (Discussion): pruning wall-clock per method and model size.
+//! The paper reports FISTAPruner is slower than SparseGPT/Wanda (iterative
+//! FISTA + λ tuning) — ~10 min for OPT-125M vs hours for 70B — mitigated
+//! by parallel pruning. This bench reproduces the *relative* cost picture.
+//!
+//!     cargo bench --bench prune_time
+
+use std::time::Instant;
+
+use fistapruner::baselines::BaselineKind::*;
+use fistapruner::bench_support::{fast_mode, Lab};
+use fistapruner::config::PruneOptions;
+use fistapruner::metrics::{csv::CsvWriter, TableBuilder};
+use fistapruner::pruner::scheduler::Method;
+
+fn main() -> anyhow::Result<()> {
+    let mut lab = Lab::new()?;
+    let corpus = "c4-syn";
+    let models: &[&str] =
+        if fast_mode() { &["topt-s1"] } else { &["topt-s1", "topt-s3", "topt-s5", "tllama-s2"] };
+    let methods = [
+        ("Magnitude", Method::Baseline(Magnitude)),
+        ("Wanda", Method::Baseline(Wanda)),
+        ("SparseGPT", Method::Baseline(SparseGpt)),
+        ("FISTAPruner", Method::Fista),
+    ];
+
+    let csv_path = lab.bench_out().join("prune_time.csv");
+    let mut csv = CsvWriter::create(&csv_path, &["model", "method", "seconds", "fista_iters"])?;
+    let mut t = TableBuilder::new(
+        "§5 analog: pruning wall-clock (s)",
+        &["model", "Magnitude", "Wanda", "SparseGPT", "FISTAPruner"],
+    );
+    for model in models {
+        let dense = lab.trained(model, corpus)?;
+        let calib = lab.calib(corpus, lab.calib_samples(), 0)?;
+        let mut row = vec![model.to_string()];
+        for (label, method) in methods {
+            let opts = PruneOptions::default();
+            let t0 = Instant::now();
+            let (_, report) = lab.prune(model, &dense, &calib, method, &opts)?;
+            let secs = t0.elapsed().as_secs_f64();
+            let secs_cell = format!("{secs:.2}");
+            let iters_cell = report.total_fista_iters().to_string();
+            csv.write_row(&[model, label, secs_cell.as_str(), iters_cell.as_str()])?;
+            row.push(format!("{secs:.1}"));
+        }
+        t.row(row);
+    }
+    t.print();
+    println!("csv: {}", csv_path.display());
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Paper Table 1: WikiText perplexity of pruned OPT-family models under
+//! 50% unstructured and 2:4 semi-structured sparsity.
+//! Analog: topt-s1..s5 on wikitext-syn (DESIGN.md §2 substitutions).
+//!
+//!     cargo bench --bench table1
+//! Env: FP_BENCH_FAST=1 for a smoke run, FP_TRAIN_STEPS / FP_CALIB to tune.
+
+use fistapruner::bench_support::{fast_mode, run_grid, GridSpec, Lab};
+use fistapruner::bench_support::grid::paper_rows;
+
+fn main() -> anyhow::Result<()> {
+    let mut lab = Lab::new()?;
+    let models: Vec<String> = if fast_mode() {
+        vec!["topt-s1".into(), "topt-s2".into()]
+    } else {
+        vec!["topt-s1".into(), "topt-s2".into(), "topt-s3".into(), "topt-s4".into(), "topt-s5".into()]
+    };
+    let grid = GridSpec {
+        title: "Table 1 analog: WikiText-syn perplexity, topt family".into(),
+        models,
+        rows: paper_rows(),
+        eval_corpus: "wikitext-syn".into(),
+        csv: "table1.csv".into(),
+    };
+    let triples = run_grid(&mut lab, &grid)?;
+    check_paper_ordering(&triples);
+    Ok(())
+}
+
+/// Assert the paper's qualitative result per model column:
+/// fista ≤ sparsegpt AND fista ≤ wanda at both sparsity patterns.
+pub fn check_paper_ordering(triples: &[(String, String, f64)]) {
+    let get = |row: &str, model: &str| {
+        triples.iter().find(|(r, m, _)| r == row && m == model).map(|(_, _, p)| *p)
+    };
+    let models: std::collections::BTreeSet<&str> =
+        triples.iter().map(|(_, m, _)| m.as_str()).collect();
+    let mut wins = 0;
+    let mut total = 0;
+    for model in models {
+        for sp in ["50%", "2:4"] {
+            if let (Some(f), Some(s), Some(w)) = (
+                get(&format!("fista@{sp}"), model),
+                get(&format!("sparsegpt@{sp}"), model),
+                get(&format!("wanda@{sp}"), model),
+            ) {
+                total += 2;
+                if f <= s + 1e-6 {
+                    wins += 1;
+                }
+                if f <= w + 1e-6 {
+                    wins += 1;
+                }
+            }
+        }
+    }
+    println!("paper-ordering check: FISTAPruner wins {wins}/{total} comparisons");
+}

@@ -1,0 +1,25 @@
+//! Paper Table 2: WikiText perplexity of pruned LLaMA-family models.
+//! Analog: tllama-s1..s3 on wikitext-syn.
+//!
+//!     cargo bench --bench table2
+
+use fistapruner::bench_support::{fast_mode, run_grid, GridSpec, Lab};
+use fistapruner::bench_support::grid::paper_rows;
+
+fn main() -> anyhow::Result<()> {
+    let mut lab = Lab::new()?;
+    let models: Vec<String> = if fast_mode() {
+        vec!["tllama-s1".into()]
+    } else {
+        vec!["tllama-s1".into(), "tllama-s2".into(), "tllama-s3".into()]
+    };
+    let grid = GridSpec {
+        title: "Table 2 analog: WikiText-syn perplexity, tllama family".into(),
+        models,
+        rows: paper_rows(),
+        eval_corpus: "wikitext-syn".into(),
+        csv: "table2.csv".into(),
+    };
+    run_grid(&mut lab, &grid)?;
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Paper Table 3: zero-shot accuracy of the pruned largest LLaMA model
+//! across 7 tasks. Analog: tllama-s3 (largest tllama) on the 7 synthetic
+//! probes (DESIGN.md §2), dense + {SparseGPT, Wanda, FISTAPruner} × {50%, 2:4}.
+//!
+//!     cargo bench --bench table3
+
+use fistapruner::baselines::BaselineKind::*;
+use fistapruner::bench_support::{fast_mode, Lab};
+use fistapruner::config::{PruneOptions, Sparsity};
+use fistapruner::eval::zeroshot::run_all_tasks;
+use fistapruner::metrics::{csv::CsvWriter, TableBuilder};
+use fistapruner::pruner::scheduler::Method;
+
+fn main() -> anyhow::Result<()> {
+    let mut lab = Lab::new()?;
+    let model = if fast_mode() { "tllama-s1" } else { "tllama-s3" };
+    let corpus = "wikitext-syn";
+    let items = if fast_mode() { 40 } else { 150 };
+
+    let dense = lab.trained(model, corpus)?;
+    let spec = lab.presets.model(model)?.clone();
+    let calib = lab.calib(corpus, lab.calib_samples(), lab.presets.calib_seed)?;
+    let c = fistapruner::data::Corpus::generate(lab.presets.corpus(corpus)?);
+
+    let task_names = ["arc_e-syn", "arc_c-syn", "wino-syn", "boolq-syn", "rte-syn", "qnli-syn", "wnli-syn"];
+    let mut header = vec!["Method", "Sparsity"];
+    header.extend(task_names);
+    header.push("Mean");
+    let mut table = TableBuilder::new(&format!("Table 3 analog: zero-shot accuracy, {model}"), &header);
+    let csv_path = lab.bench_out().join("table3.csv");
+    let mut csv = CsvWriter::create(&csv_path, &["method", "sparsity", "task", "accuracy"])?;
+
+    let mut add_row = |lab: &mut Lab, name: &str, sp_label: &str, params: &fistapruner::model::ModelParams|
+     -> anyhow::Result<f64> {
+        let (results, mean) = run_all_tasks(&lab.session, &lab.presets, &spec, params, &c, items, 1)?;
+        let mut row = vec![name.to_string(), sp_label.to_string()];
+        for r in &results {
+            row.push(TableBuilder::acc(r.accuracy));
+            csv.write_row(&[name, sp_label, r.name, &format!("{:.4}", r.accuracy)])?;
+        }
+        row.push(TableBuilder::acc(mean));
+        csv.write_row(&[name, sp_label, "mean", &format!("{mean:.4}")])?;
+        table.row(row);
+        Ok(mean)
+    };
+
+    let dense_mean = add_row(&mut lab, "Dense", "0%", &dense)?;
+    let mut fista_means = Vec::new();
+    for sp in [Sparsity::Unstructured(0.5), Sparsity::Semi(2, 4)] {
+        for (label, method) in [
+            ("SparseGPT", Method::Baseline(SparseGpt)),
+            ("Wanda", Method::Baseline(Wanda)),
+            ("FISTAPruner", Method::Fista),
+        ] {
+            let opts = PruneOptions { sparsity: sp, ..Default::default() };
+            let (pruned, _) = lab.prune(model, &dense, &calib, method, &opts)?;
+            let mean = add_row(&mut lab, label, &sp.label(), &pruned)?;
+            if label == "FISTAPruner" {
+                fista_means.push(mean);
+            }
+        }
+    }
+    table.print();
+    println!("csv: {}", csv_path.display());
+    println!(
+        "dense mean {dense_mean:.4}; FISTAPruner means: {:?}",
+        fista_means.iter().map(|m| format!("{m:.4}")).collect::<Vec<_>>()
+    );
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! Paper Tables 4 & 5: PTB perplexity of pruned OPT- and LLaMA-family
+//! models. Analog: topt + tllama on ptb-syn. (Larger sizes are covered by
+//! tables 1/2; here we run the first three topt and two tllama sizes to
+//! bound CPU time — documented truncation, EXPERIMENTS.md.)
+//!
+//!     cargo bench --bench table4_5
+
+use fistapruner::bench_support::{fast_mode, run_grid, GridSpec, Lab};
+use fistapruner::bench_support::grid::paper_rows;
+
+fn main() -> anyhow::Result<()> {
+    let mut lab = Lab::new()?;
+    let (topt, tllama): (Vec<String>, Vec<String>) = if fast_mode() {
+        (vec!["topt-s1".into()], vec!["tllama-s1".into()])
+    } else {
+        (
+            vec!["topt-s1".into(), "topt-s2".into(), "topt-s3".into()],
+            vec!["tllama-s1".into(), "tllama-s2".into()],
+        )
+    };
+    run_grid(
+        &mut lab,
+        &GridSpec {
+            title: "Table 4 analog: PTB-syn perplexity, topt family".into(),
+            models: topt,
+            rows: paper_rows(),
+            eval_corpus: "ptb-syn".into(),
+            csv: "table4.csv".into(),
+        },
+    )?;
+    run_grid(
+        &mut lab,
+        &GridSpec {
+            title: "Table 5 analog: PTB-syn perplexity, tllama family".into(),
+            models: tllama,
+            rows: paper_rows(),
+            eval_corpus: "ptb-syn".into(),
+            csv: "table5.csv".into(),
+        },
+    )?;
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Paper Tables 6 & 7: C4 perplexity of pruned OPT- and LLaMA-family
+//! models. Analog: topt + tllama on c4-syn (same truncation note as
+//! table4_5).
+//!
+//!     cargo bench --bench table6_7
+
+use fistapruner::bench_support::{fast_mode, run_grid, GridSpec, Lab};
+use fistapruner::bench_support::grid::paper_rows;
+
+fn main() -> anyhow::Result<()> {
+    let mut lab = Lab::new()?;
+    let (topt, tllama): (Vec<String>, Vec<String>) = if fast_mode() {
+        (vec!["topt-s1".into()], vec!["tllama-s1".into()])
+    } else {
+        (
+            vec!["topt-s1".into(), "topt-s2".into(), "topt-s3".into()],
+            vec!["tllama-s1".into(), "tllama-s2".into()],
+        )
+    };
+    run_grid(
+        &mut lab,
+        &GridSpec {
+            title: "Table 6 analog: C4-syn perplexity, topt family".into(),
+            models: topt,
+            rows: paper_rows(),
+            eval_corpus: "c4-syn".into(),
+            csv: "table6.csv".into(),
+        },
+    )?;
+    run_grid(
+        &mut lab,
+        &GridSpec {
+            title: "Table 7 analog: C4-syn perplexity, tllama family".into(),
+            models: tllama,
+            rows: paper_rows(),
+            eval_corpus: "c4-syn".into(),
+            csv: "table7.csv".into(),
+        },
+    )?;
+    Ok(())
+}

@@ -1,0 +1,22 @@
+//! Magnitude pruning: keep the largest-|w| entries. The classical
+//! baseline — identical to the rounding step applied to the dense weights.
+
+use crate::config::Sparsity;
+use crate::pruner::rounding::round_to_sparsity;
+use crate::tensor::Tensor;
+
+pub fn prune(w: &Tensor, sp: Sparsity) -> Tensor {
+    round_to_sparsity(w, sp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_largest() {
+        let w = Tensor::from_vec(vec![2, 2], vec![0.1, 2.0, -3.0, 0.2]);
+        let p = prune(&w, Sparsity::Unstructured(0.5));
+        assert_eq!(p.data(), &[0.0, 2.0, -3.0, 0.0]);
+    }
+}

@@ -1,0 +1,82 @@
+//! Baseline one-shot pruners the paper compares against (§4.1):
+//! magnitude, Wanda (Sun et al. 2023), SparseGPT (Frantar & Alistarh 2023).
+//!
+//! They double as warm starts for FISTA (paper §4.1: SparseGPT for OPT,
+//! Wanda for LLaMA). All operate per weight matrix on the same Gram
+//! statistics the FISTAPruner unit already accumulates (H = X Xᵀ).
+
+pub mod magnitude;
+pub mod sparsegpt;
+pub mod wanda;
+
+use anyhow::Result;
+
+use crate::config::Sparsity;
+use crate::tensor::Tensor;
+
+/// Which baseline pruner to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BaselineKind {
+    Magnitude,
+    Wanda,
+    SparseGpt,
+}
+
+impl BaselineKind {
+    pub fn parse(s: &str) -> Result<BaselineKind> {
+        match s {
+            "magnitude" => Ok(BaselineKind::Magnitude),
+            "wanda" => Ok(BaselineKind::Wanda),
+            "sparsegpt" => Ok(BaselineKind::SparseGpt),
+            other => anyhow::bail!("unknown baseline '{other}'"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BaselineKind::Magnitude => "magnitude",
+            BaselineKind::Wanda => "wanda",
+            BaselineKind::SparseGpt => "sparsegpt",
+        }
+    }
+}
+
+/// Prune one weight matrix with the chosen baseline.
+///
+/// `h` is the input Gram matrix X Xᵀ of the operator (n×n); magnitude
+/// ignores it, Wanda uses its diagonal, SparseGPT uses the full matrix.
+pub fn prune_matrix(kind: BaselineKind, w: &Tensor, h: &Tensor, sp: Sparsity) -> Result<Tensor> {
+    match kind {
+        BaselineKind::Magnitude => Ok(magnitude::prune(w, sp)),
+        BaselineKind::Wanda => Ok(wanda::prune(w, h, sp)),
+        BaselineKind::SparseGpt => sparsegpt::prune(w, h, sp),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruner::rounding::satisfies_sparsity;
+    use crate::tensor::ops::matmul_nt;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn all_baselines_meet_sparsity_patterns() {
+        let mut rng = Pcg64::seeded(21);
+        let w = Tensor::from_vec(vec![16, 32], rng.normal_vec(512, 1.0));
+        let x = Tensor::from_vec(vec![32, 128], rng.normal_vec(32 * 128, 1.0));
+        let h = matmul_nt(&x, &x);
+        for kind in [BaselineKind::Magnitude, BaselineKind::Wanda, BaselineKind::SparseGpt] {
+            for sp in [Sparsity::Unstructured(0.5), Sparsity::Semi(2, 4)] {
+                let p = prune_matrix(kind, &w, &h, sp).unwrap();
+                assert!(satisfies_sparsity(&p, sp), "{kind:?} {sp:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(BaselineKind::parse("wanda").unwrap(), BaselineKind::Wanda);
+        assert!(BaselineKind::parse("obs").is_err());
+    }
+}

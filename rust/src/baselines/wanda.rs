@@ -1,0 +1,96 @@
+//! Wanda (Sun et al. 2023): prune by |W_ij| · ‖X_j‖₂ with no weight update.
+//!
+//! ‖X_j‖₂ is the ℓ₂ norm of feature j across calibration tokens —
+//! exactly sqrt(diag(X Xᵀ)), so the score comes free from the Gram
+//! pipeline. Comparison groups follow the Wanda paper: per output row for
+//! unstructured sparsity, per (row, m-group) for n:m.
+
+use crate::config::Sparsity;
+use crate::tensor::Tensor;
+
+/// Prune `w` [m, n] given the input Gram `h` = X Xᵀ [n, n].
+pub fn prune(w: &Tensor, h: &Tensor, sp: Sparsity) -> Tensor {
+    let (m, n) = (w.rows(), w.cols());
+    assert_eq!(h.rows(), n);
+    let feat_norm: Vec<f32> = (0..n).map(|j| h.at2(j, j).max(0.0).sqrt()).collect();
+    let mut out = w.clone();
+    match sp {
+        Sparsity::Unstructured(s) => {
+            let k = ((n as f64) * s).floor() as usize;
+            if k == 0 {
+                return out;
+            }
+            for i in 0..m {
+                let row = out.row_mut(i);
+                let mut idx: Vec<usize> = (0..n).collect();
+                idx.sort_unstable_by(|&a, &b| {
+                    let sa = row[a].abs() * feat_norm[a];
+                    let sb = row[b].abs() * feat_norm[b];
+                    sa.partial_cmp(&sb).unwrap_or(std::cmp::Ordering::Equal)
+                });
+                for &j in &idx[..k] {
+                    row[j] = 0.0;
+                }
+            }
+        }
+        Sparsity::Semi(keep, grp) => {
+            assert_eq!(n % grp, 0);
+            let drop = grp - keep;
+            for i in 0..m {
+                let row = out.row_mut(i);
+                for g in (0..n).step_by(grp) {
+                    let mut idx: Vec<usize> = (0..grp).collect();
+                    idx.sort_unstable_by(|&a, &b| {
+                        let sa = row[g + a].abs() * feat_norm[g + a];
+                        let sb = row[g + b].abs() * feat_norm[g + b];
+                        sa.partial_cmp(&sb).unwrap_or(std::cmp::Ordering::Equal)
+                    });
+                    for &j in &idx[..drop] {
+                        row[g + j] = 0.0;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruner::rounding::satisfies_sparsity;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn activation_norms_matter() {
+        // Two equal weights; the one fed by the high-norm feature survives.
+        let w = Tensor::from_vec(vec![1, 2], vec![1.0, 1.0]);
+        let h = Tensor::from_vec(vec![2, 2], vec![100.0, 0.0, 0.0, 1.0]);
+        let p = prune(&w, &h, Sparsity::Unstructured(0.5));
+        assert_eq!(p.data(), &[1.0, 0.0]);
+    }
+
+    #[test]
+    fn per_row_sparsity_is_exact() {
+        let mut rng = Pcg64::seeded(5);
+        let w = Tensor::from_vec(vec![6, 20], rng.normal_vec(120, 1.0));
+        let x = Tensor::from_vec(vec![20, 64], rng.normal_vec(20 * 64, 1.0));
+        let h = crate::tensor::ops::matmul_nt(&x, &x);
+        let p = prune(&w, &h, Sparsity::Unstructured(0.5));
+        for i in 0..6 {
+            let zeros = p.row(i).iter().filter(|&&v| v == 0.0).count();
+            assert_eq!(zeros, 10, "row {i}");
+        }
+        assert!(satisfies_sparsity(&p, Sparsity::Unstructured(0.5)));
+    }
+
+    #[test]
+    fn semi_structured_groups() {
+        let mut rng = Pcg64::seeded(6);
+        let w = Tensor::from_vec(vec![4, 16], rng.normal_vec(64, 1.0));
+        let x = Tensor::from_vec(vec![16, 32], rng.normal_vec(512, 1.0));
+        let h = crate::tensor::ops::matmul_nt(&x, &x);
+        let p = prune(&w, &h, Sparsity::Semi(2, 4));
+        assert!(satisfies_sparsity(&p, Sparsity::Semi(2, 4)));
+    }
+}

@@ -1,0 +1,102 @@
+//! The method × sparsity × model grid runner behind the table benches
+//! (paper Tables 1/2/4/5/6/7: rows = method@sparsity, columns = models).
+
+use anyhow::Result;
+
+use crate::config::{PruneOptions, Sparsity};
+use crate::metrics::csv::CsvWriter;
+use crate::metrics::TableBuilder;
+use crate::pruner::scheduler::Method;
+
+use super::Lab;
+
+/// Grid description for one paper table.
+pub struct GridSpec {
+    pub title: String,
+    /// Model preset names = table columns.
+    pub models: Vec<String>,
+    /// (method, sparsity or None for dense) = table rows.
+    pub rows: Vec<(Method, Option<Sparsity>)>,
+    /// Corpus trained on AND evaluated against (the paper trains once and
+    /// evaluates per corpus; our substrate trains per corpus).
+    pub eval_corpus: String,
+    /// CSV basename under artifacts/bench_out/.
+    pub csv: String,
+}
+
+/// Default row set matching the paper's tables: dense, then
+/// {SparseGPT, Wanda, FISTAPruner} × {50%, 2:4}.
+pub fn paper_rows() -> Vec<(Method, Option<Sparsity>)> {
+    use crate::baselines::BaselineKind::*;
+    vec![
+        (Method::Dense, None),
+        (Method::Baseline(SparseGpt), Some(Sparsity::Unstructured(0.5))),
+        (Method::Baseline(Wanda), Some(Sparsity::Unstructured(0.5))),
+        (Method::Fista, Some(Sparsity::Unstructured(0.5))),
+        (Method::Baseline(SparseGpt), Some(Sparsity::Semi(2, 4))),
+        (Method::Baseline(Wanda), Some(Sparsity::Semi(2, 4))),
+        (Method::Fista, Some(Sparsity::Semi(2, 4))),
+    ]
+}
+
+/// Run the grid: train/load each model, prune per row, evaluate perplexity.
+/// Prints the paper-style table and writes a CSV; returns (row label,
+/// model, ppl) triples for callers that assert on ordering.
+pub fn run_grid(lab: &mut Lab, grid: &GridSpec) -> Result<Vec<(String, String, f64)>> {
+    let mut header: Vec<&str> = vec!["Method", "Sparsity"];
+    let model_cols: Vec<String> = grid.models.clone();
+    for m in &model_cols {
+        header.push(m.as_str());
+    }
+    let mut table = TableBuilder::new(&grid.title, &header);
+    let csv_path = lab.bench_out().join(&grid.csv);
+    let mut csv = CsvWriter::create(&csv_path, &["method", "sparsity", "model", "ppl"])?;
+
+    let calib_n = lab.calib_samples();
+    let mut triples = Vec::new();
+    // Evaluate column-by-column so each model trains once.
+    let mut cells: Vec<Vec<String>> =
+        vec![vec![String::new(); model_cols.len()]; grid.rows.len()];
+    for (ci, model) in model_cols.iter().enumerate() {
+        let dense = lab.trained(model, &grid.eval_corpus)?;
+        let calib = lab.calib(&grid.eval_corpus, calib_n, lab.presets.calib_seed)?;
+        for (ri, (method, sp)) in grid.rows.iter().enumerate() {
+            let ppl = match (method, sp) {
+                (Method::Dense, _) => lab.ppl(model, &dense, &grid.eval_corpus)?,
+                (m, Some(sp)) => {
+                    let opts = PruneOptions { sparsity: *sp, ..Default::default() };
+                    let (pruned, report) = lab.prune(model, &dense, &calib, *m, &opts)?;
+                    crate::log_info!("{}", report.summary());
+                    lab.ppl(model, &pruned, &grid.eval_corpus)?
+                }
+                _ => anyhow::bail!("non-dense row needs a sparsity"),
+            };
+            let row_label = method.name().to_string();
+            let sp_label = sp.map(|s| s.label()).unwrap_or_else(|| "0%".into());
+            csv.write_row(&[row_label.as_str(), sp_label.as_str(), model, &format!("{ppl:.4}")])?;
+            cells[ri][ci] = TableBuilder::f(ppl);
+            triples.push((format!("{row_label}@{sp_label}"), model.clone(), ppl));
+        }
+    }
+    for (ri, (method, sp)) in grid.rows.iter().enumerate() {
+        let mut row = vec![
+            pretty_name(method).to_string(),
+            sp.map(|s| s.label()).unwrap_or_else(|| "0%".into()),
+        ];
+        row.extend(cells[ri].iter().cloned());
+        table.row(row);
+    }
+    table.print();
+    println!("csv: {}", csv_path.display());
+    Ok(triples)
+}
+
+fn pretty_name(m: &Method) -> &'static str {
+    match m {
+        Method::Dense => "Dense",
+        Method::Fista => "FISTAPruner",
+        Method::Baseline(crate::baselines::BaselineKind::SparseGpt) => "SparseGPT",
+        Method::Baseline(crate::baselines::BaselineKind::Wanda) => "Wanda",
+        Method::Baseline(crate::baselines::BaselineKind::Magnitude) => "Magnitude",
+    }
+}

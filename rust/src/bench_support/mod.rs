@@ -1,0 +1,149 @@
+//! Shared experiment harness for the benches and examples: a `Lab` that
+//! caches corpora, trained checkpoints and a PJRT session, plus the
+//! method×sparsity grid runner that regenerates the paper's tables.
+//!
+//! Environment knobs (all optional):
+//!   FP_BENCH_FAST=1     — shrink models/steps/items for smoke runs
+//!   FP_TRAIN_STEPS=N    — override training steps
+//!   FP_CALIB=N          — override calibration sample count
+//!   FP_EVAL_WINDOWS=N   — override perplexity window count
+
+pub mod grid;
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::{repo_root, ModelSpec, Presets, PruneOptions, TrainOptions};
+use crate::data::{sampler::calibration_windows, Corpus};
+use crate::eval::perplexity::perplexity;
+use crate::model::params::ModelParams;
+use crate::pruner::scheduler::{prune_model, Method};
+use crate::pruner::PruneReport;
+use crate::runtime::{Manifest, Session};
+use crate::train::ensure_checkpoint;
+
+pub use grid::{run_grid, GridSpec};
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// True when FP_BENCH_FAST=1 (CI smoke mode).
+pub fn fast_mode() -> bool {
+    std::env::var("FP_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Experiment context shared by benches/examples.
+pub struct Lab {
+    pub root: PathBuf,
+    pub presets: Presets,
+    pub session: Session,
+    corpora: BTreeMap<String, Corpus>,
+    checkpoints: BTreeMap<String, ModelParams>,
+}
+
+impl Lab {
+    pub fn new() -> Result<Lab> {
+        crate::util::logging::init();
+        let root = repo_root()?;
+        let presets = Presets::load(&root)?;
+        let session = Session::new(Arc::new(Manifest::load_default()?))?;
+        Ok(Lab { root, presets, session, corpora: BTreeMap::new(), checkpoints: BTreeMap::new() })
+    }
+
+    /// Generate (and cache) a corpus by preset name.
+    pub fn corpus(&mut self, name: &str) -> Result<&Corpus> {
+        if !self.corpora.contains_key(name) {
+            let cfg = self.presets.corpus(name)?.clone();
+            self.corpora.insert(name.to_string(), Corpus::generate(&cfg));
+        }
+        Ok(&self.corpora[name])
+    }
+
+    /// Default training steps (env-overridable; /4 in fast mode).
+    pub fn train_steps(&self) -> usize {
+        let base = env_usize("FP_TRAIN_STEPS", self.presets.train.steps);
+        if fast_mode() {
+            (base / 4).max(20)
+        } else {
+            base
+        }
+    }
+
+    /// Calibration sample count (env-overridable; /4 in fast mode).
+    pub fn calib_samples(&self) -> usize {
+        let base = env_usize("FP_CALIB", self.presets.calib_nsamples);
+        if fast_mode() {
+            (base / 4).max(8)
+        } else {
+            base
+        }
+    }
+
+    /// Perplexity window count.
+    pub fn eval_windows(&self) -> usize {
+        env_usize("FP_EVAL_WINDOWS", if fast_mode() { 32 } else { 128 })
+    }
+
+    /// Train-or-load the canonical checkpoint for (model, train corpus).
+    pub fn trained(&mut self, model: &str, corpus: &str) -> Result<ModelParams> {
+        let key = format!("{model}@{corpus}@{}", self.train_steps());
+        if let Some(p) = self.checkpoints.get(&key) {
+            return Ok(p.clone());
+        }
+        let steps = self.train_steps();
+        let spec = self.presets.model(model)?.clone();
+        self.corpus(corpus)?;
+        let c = &self.corpora[corpus];
+        let opts = TrainOptions {
+            steps,
+            lr: self.presets.train.lr,
+            warmup: self.presets.train.warmup.min(steps / 4),
+            seed: self.presets.train.seed,
+        };
+        let params = ensure_checkpoint(&self.root, &self.session, &self.presets, &spec, c, &opts)?;
+        self.checkpoints.insert(key, params.clone());
+        Ok(params)
+    }
+
+    /// Calibration windows from a corpus train split.
+    pub fn calib(&mut self, corpus: &str, n: usize, seed: u64) -> Result<Vec<Vec<i32>>> {
+        let seq = self.presets.seq_len;
+        self.corpus(corpus)?;
+        Ok(calibration_windows(&self.corpora[corpus], n, seq, seed))
+    }
+
+    /// Prune with a method and options.
+    pub fn prune(
+        &mut self,
+        model: &str,
+        params: &ModelParams,
+        calib: &[Vec<i32>],
+        method: Method,
+        opts: &PruneOptions,
+    ) -> Result<(ModelParams, PruneReport)> {
+        let spec = self.presets.model(model)?.clone();
+        prune_model(&self.session, &self.presets, &spec, params, calib, method, opts)
+    }
+
+    /// Held-out perplexity.
+    pub fn ppl(&mut self, model: &str, params: &ModelParams, corpus: &str) -> Result<f64> {
+        let spec = self.presets.model(model)?.clone();
+        let max_w = self.eval_windows();
+        self.corpus(corpus)?;
+        let c = &self.corpora[corpus];
+        perplexity(&self.session, &self.presets, &spec, params, c, max_w)
+    }
+
+    pub fn spec(&self, model: &str) -> Result<&ModelSpec> {
+        self.presets.model(model)
+    }
+
+    /// Where bench outputs (csv) go.
+    pub fn bench_out(&self) -> PathBuf {
+        self.root.join("artifacts/bench_out")
+    }
+}

@@ -1,0 +1,107 @@
+//! Minimal CLI argument parser (clap substrate): `fistapruner <cmd>
+//! [--flag value]... [--switch]...`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        match it.next() {
+            Some(cmd) if !cmd.starts_with("--") => out.command = cmd.clone(),
+            Some(cmd) => bail!("expected a subcommand before '{cmd}'"),
+            None => out.command = "help".to_string(),
+        }
+        while let Some(arg) = it.next() {
+            let Some(name) = arg.strip_prefix("--") else {
+                bail!("unexpected positional argument '{arg}'");
+            };
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    out.flags.insert(name.to_string(), it.next().unwrap().clone());
+                }
+                _ => out.switches.push(name.to_string()),
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn req(&self, name: &str) -> Result<&str> {
+        self.get(name).ok_or_else(|| anyhow::anyhow!("missing required flag --{name}"))
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn parses_flags_and_switches() {
+        let a = parse(&["prune", "--model", "topt-s1", "--sparsity", "2:4", "--no-correction"]);
+        assert_eq!(a.command, "prune");
+        assert_eq!(a.get("model"), Some("topt-s1"));
+        assert_eq!(a.get("sparsity"), Some("2:4"));
+        assert!(a.has("no-correction"));
+        assert!(!a.has("workers"));
+        assert_eq!(a.usize_or("workers", 2).unwrap(), 2);
+    }
+
+    #[test]
+    fn rejects_positional_after_command() {
+        let argv: Vec<String> = vec!["prune".into(), "stray".into()];
+        assert!(Args::parse(&argv).is_err());
+    }
+
+    #[test]
+    fn missing_required_flag_errors() {
+        let a = parse(&["train"]);
+        assert!(a.req("model").is_err());
+    }
+}

@@ -1,0 +1,227 @@
+//! CLI command implementations, all built on `bench_support::Lab`.
+
+use anyhow::Result;
+
+use crate::bench_support::Lab;
+use crate::config::{Engine, PruneMode, PruneOptions, Sparsity, TrainOptions, WarmStart};
+use crate::metrics::TableBuilder;
+use crate::model::spec::param_count;
+use crate::pruner::scheduler::Method;
+use crate::ser::checkpoint::{self, CheckpointMeta};
+
+use super::args::Args;
+
+pub fn info(_args: &Args) -> Result<()> {
+    let lab = Lab::new()?;
+    let mut t = TableBuilder::new("Models", &["name", "d", "layers", "heads", "ffn", "params"]);
+    for (name, spec) in &lab.presets.models {
+        t.row(vec![
+            name.clone(),
+            spec.d.to_string(),
+            spec.layers.to_string(),
+            spec.heads.to_string(),
+            spec.ffn.to_string(),
+            format!("{:.2}M", param_count(spec) as f64 / 1e6),
+        ]);
+    }
+    t.print();
+    let mut c = TableBuilder::new("Corpora", &["name", "word vocab", "zipf", "noise", "chars"]);
+    for (name, cfg) in &lab.presets.corpora {
+        c.row(vec![
+            name.clone(),
+            cfg.word_vocab.to_string(),
+            format!("{:.2}", cfg.zipf_s),
+            format!("{:.2}", cfg.noise),
+            cfg.chars.to_string(),
+        ]);
+    }
+    c.print();
+    println!(
+        "artifacts: {} in manifest; session compiled {}",
+        lab.session.manifest().artifacts.len(),
+        lab.session.compiled_count()
+    );
+    Ok(())
+}
+
+fn prune_options(args: &Args) -> Result<PruneOptions> {
+    Ok(PruneOptions {
+        sparsity: Sparsity::parse(args.get_or("sparsity", "0.5"))?,
+        engine: Engine::parse(args.get_or("engine", "xla"))?,
+        mode: PruneMode::parse(args.get_or("mode", "sequential"))?,
+        warm_start: WarmStart::parse(args.get_or("warm-start", "auto"))?,
+        error_correction: !args.has("no-correction"),
+        workers: args.usize_or("workers", 2)?,
+        max_rounds: args.get("max-rounds").map(|v| v.parse()).transpose()?,
+        seed: args.u64_or("seed", 0)?,
+    })
+}
+
+fn train_options(lab: &Lab, args: &Args) -> Result<TrainOptions> {
+    let steps = args.usize_or("steps", lab.train_steps())?;
+    Ok(TrainOptions {
+        steps,
+        lr: args.f64_or("lr", lab.presets.train.lr)?,
+        warmup: lab.presets.train.warmup.min(steps / 4),
+        seed: args.u64_or("seed", lab.presets.train.seed)?,
+    })
+}
+
+pub fn train(args: &Args) -> Result<()> {
+    let mut lab = Lab::new()?;
+    let model = args.req("model")?.to_string();
+    let corpus = args.req("corpus")?.to_string();
+    let opts = train_options(&lab, args)?;
+    let spec = lab.presets.model(&model)?.clone();
+    lab.corpus(&corpus)?;
+    let c = crate::data::Corpus::generate(lab.presets.corpus(&corpus)?);
+    let res = crate::train::train(&lab.session, &lab.presets, &spec, &c, &opts)?;
+    println!("final loss: {:.4}", res.final_loss);
+    let path = args
+        .get("out")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| {
+            checkpoint::default_path(&lab.root.join("artifacts"), &model, &corpus, opts.steps, opts.seed)
+        });
+    checkpoint::save(
+        &path,
+        &res.params,
+        &CheckpointMeta {
+            model: model.clone(),
+            corpus,
+            steps: opts.steps,
+            final_loss: res.final_loss,
+            seed: opts.seed,
+        },
+    )?;
+    println!("saved: {}", path.display());
+    Ok(())
+}
+
+fn load_or_train(lab: &mut Lab, args: &Args, model: &str, corpus: &str) -> Result<crate::model::ModelParams> {
+    if let Some(ckpt) = args.get("ckpt") {
+        let (params, meta) = checkpoint::load(std::path::Path::new(ckpt))?;
+        checkpoint::check_model(&meta, model)?;
+        return Ok(params);
+    }
+    lab.trained(model, corpus)
+}
+
+pub fn prune(args: &Args) -> Result<()> {
+    let mut lab = Lab::new()?;
+    let model = args.req("model")?.to_string();
+    let corpus = args.req("corpus")?.to_string();
+    let method = Method::parse(args.get_or("method", "fista"))?;
+    let opts = prune_options(args)?;
+    let calib_n = args.usize_or("calib", lab.calib_samples())?;
+    let dense = load_or_train(&mut lab, args, &model, &corpus)?;
+    let calib = lab.calib(&corpus, calib_n, opts.seed)?;
+    let (pruned, report) = lab.prune(&model, &dense, &calib, method, &opts)?;
+    println!("{}", report.summary());
+    let ppl_dense = lab.ppl(&model, &dense, &corpus)?;
+    let ppl_pruned = lab.ppl(&model, &pruned, &corpus)?;
+    println!("perplexity: dense {ppl_dense:.2} → pruned {ppl_pruned:.2}");
+    if let Some(out) = args.get("out") {
+        checkpoint::save(
+            std::path::Path::new(out),
+            &pruned,
+            &CheckpointMeta {
+                model,
+                corpus,
+                steps: 0,
+                final_loss: ppl_pruned.ln(),
+                seed: opts.seed,
+            },
+        )?;
+        println!("saved: {out}");
+    }
+    Ok(())
+}
+
+pub fn eval(args: &Args) -> Result<()> {
+    let mut lab = Lab::new()?;
+    let model = args.req("model")?.to_string();
+    let corpus = args.req("corpus")?.to_string();
+    let params = load_or_train(&mut lab, args, &model, &corpus)?;
+    let ppl = lab.ppl(&model, &params, &corpus)?;
+    println!("{model} on {corpus}: perplexity {ppl:.3}");
+    Ok(())
+}
+
+pub fn zeroshot(args: &Args) -> Result<()> {
+    let mut lab = Lab::new()?;
+    let model = args.req("model")?.to_string();
+    let corpus = args.req("corpus")?.to_string();
+    let items = args.usize_or("items", 100)?;
+    let params = load_or_train(&mut lab, args, &model, &corpus)?;
+    let spec = lab.presets.model(&model)?.clone();
+    lab.corpus(&corpus)?;
+    let c = crate::data::Corpus::generate(lab.presets.corpus(&corpus)?);
+    let (results, mean) = crate::eval::zeroshot::run_all_tasks(
+        &lab.session, &lab.presets, &spec, &params, &c, items, args.u64_or("seed", 1)?,
+    )?;
+    let mut t = TableBuilder::new("Zero-shot probes", &["task", "accuracy", "items"]);
+    for r in &results {
+        t.row(vec![r.name.to_string(), TableBuilder::acc(r.accuracy), r.items.to_string()]);
+    }
+    t.row(vec!["MEAN".into(), TableBuilder::acc(mean), String::new()]);
+    t.print();
+    Ok(())
+}
+
+pub fn generate(args: &Args) -> Result<()> {
+    let mut lab = Lab::new()?;
+    let model = args.req("model")?.to_string();
+    let corpus = args.req("corpus")?.to_string();
+    let params = load_or_train(&mut lab, args, &model, &corpus)?;
+    let spec = lab.presets.model(&model)?.clone();
+    let opts = crate::eval::generate::GenOptions {
+        max_tokens: args.usize_or("tokens", 200)?,
+        temperature: args.f64_or("temp", 0.8)?,
+        seed: args.u64_or("seed", 0)?,
+    };
+    let prompt = args.get_or("prompt", "the ").to_string();
+    let out = crate::eval::generate::generate(&spec, &params, &prompt, &opts);
+    println!("{prompt}{out}");
+    if params.weight_sparsity() > 0.0 {
+        println!("\n(weight sparsity: {:.1}%)", params.weight_sparsity() * 100.0);
+    }
+    Ok(())
+}
+
+pub fn pipeline(args: &Args) -> Result<()> {
+    let mut lab = Lab::new()?;
+    let model = args.req("model")?.to_string();
+    let corpus = args.req("corpus")?.to_string();
+    let sparsity = Sparsity::parse(args.get_or("sparsity", "0.5"))?;
+    let opts = PruneOptions { sparsity, ..prune_options(args)? };
+    let calib_n = args.usize_or("calib", lab.calib_samples())?;
+
+    println!("[1/3] train/load {model} on {corpus}");
+    let dense = lab.trained(&model, &corpus)?;
+    let calib = lab.calib(&corpus, calib_n, opts.seed)?;
+
+    println!("[2/3] prune with all methods at {}", sparsity.label());
+    use crate::baselines::BaselineKind::*;
+    let methods =
+        [Method::Baseline(Magnitude), Method::Baseline(Wanda), Method::Baseline(SparseGpt), Method::Fista];
+    let mut t = TableBuilder::new(
+        &format!("{model} on {corpus} @ {}", sparsity.label()),
+        &["Method", "PPL", "rel err", "prune s"],
+    );
+    let ppl_dense = lab.ppl(&model, &dense, &corpus)?;
+    t.row(vec!["Dense".into(), TableBuilder::f(ppl_dense), "-".into(), "-".into()]);
+    for method in methods {
+        let (pruned, report) = lab.prune(&model, &dense, &calib, method, &opts)?;
+        let ppl = lab.ppl(&model, &pruned, &corpus)?;
+        t.row(vec![
+            method.name().to_string(),
+            TableBuilder::f(ppl),
+            format!("{:.4}", report.mean_rel_error()),
+            format!("{:.1}", report.elapsed.as_secs_f64()),
+        ]);
+    }
+    println!("[3/3] results");
+    t.print();
+    Ok(())
+}

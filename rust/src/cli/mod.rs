@@ -1,0 +1,63 @@
+//! CLI: `fistapruner <command>`.
+//!
+//! Commands:
+//!   info                         — model/corpus/artifact inventory
+//!   train     --model --corpus [--steps --seed]
+//!   prune     --model --corpus [--method --sparsity --mode --workers ...]
+//!   eval      --model --corpus [--ckpt]
+//!   zeroshot  --model --corpus [--ckpt --items]
+//!   pipeline  --model --corpus [--sparsity ...]   (train→prune×methods→eval)
+
+pub mod args;
+mod commands;
+
+use anyhow::{bail, Result};
+
+use args::Args;
+
+pub fn main() -> Result<()> {
+    crate::util::logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    match args.command.as_str() {
+        "info" => commands::info(&args),
+        "train" => commands::train(&args),
+        "prune" => commands::prune(&args),
+        "eval" => commands::eval(&args),
+        "zeroshot" => commands::zeroshot(&args),
+        "generate" => commands::generate(&args),
+        "pipeline" => commands::pipeline(&args),
+        "help" | "--help" | "-h" => {
+            print!("{}", USAGE);
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+const USAGE: &str = "\
+fistapruner — convex-optimization-based layer-wise post-training pruning
+
+USAGE: fistapruner <command> [flags]
+
+COMMANDS:
+  info                              inventory of models, corpora, artifacts
+  train     --model M --corpus C    train a substrate model
+            [--steps N --seed S]
+  prune     --model M --corpus C    prune a trained model
+            [--method fista|sparsegpt|wanda|magnitude]
+            [--sparsity 0.5|50%|2:4] [--mode sequential|parallel]
+            [--workers N] [--engine xla|native] [--no-correction]
+            [--calib N --seed S] [--out path.fpt]
+  eval      --model M --corpus C    held-out perplexity
+            [--ckpt path.fpt]
+  zeroshot  --model M --corpus C    the 7 synthetic probe tasks
+            [--ckpt path.fpt --items N]
+  generate  --model M --corpus C    sample text from a (pruned) model
+            [--ckpt path.fpt --prompt STR --tokens N --temp T]
+  pipeline  --model M --corpus C    end-to-end: train → prune (all
+            [--sparsity S]          methods) → perplexity table
+
+ENV: FISTAPRUNER_LOG=debug|info|warn|error, FP_TRAIN_STEPS, FP_CALIB,
+     FP_EVAL_WINDOWS, FP_BENCH_FAST=1
+";

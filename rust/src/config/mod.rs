@@ -1,0 +1,11 @@
+//! Configuration system: typed views over configs/presets.json (the single
+//! source of truth shared with python/compile/shapes.py) plus run-level
+//! option structs for pruning / training / evaluation.
+
+pub mod paths;
+pub mod presets;
+pub mod run;
+
+pub use paths::repo_root;
+pub use presets::{CorpusCfg, FamilyKind, FistaCfg, ModelSpec, Presets};
+pub use run::{Engine, PruneMode, PruneOptions, Sparsity, TrainOptions, WarmStart};

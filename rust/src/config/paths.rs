@@ -1,0 +1,61 @@
+//! Repository-root and artifact-path discovery.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+/// Locate the repository root: `FISTAPRUNER_ROOT` env var, else walk up
+/// from the current directory (and from the executable) until a directory
+/// containing `configs/presets.json` is found.
+pub fn repo_root() -> Result<PathBuf> {
+    if let Ok(root) = std::env::var("FISTAPRUNER_ROOT") {
+        let p = PathBuf::from(root);
+        if p.join("configs/presets.json").exists() {
+            return Ok(p);
+        }
+        bail!("FISTAPRUNER_ROOT={} does not contain configs/presets.json", p.display());
+    }
+    let mut candidates: Vec<PathBuf> = Vec::new();
+    if let Ok(cwd) = std::env::current_dir() {
+        candidates.push(cwd);
+    }
+    if let Ok(exe) = std::env::current_exe() {
+        if let Some(dir) = exe.parent() {
+            candidates.push(dir.to_path_buf());
+        }
+    }
+    // Compiled-in fallback (tests, benches).
+    candidates.push(PathBuf::from(env!("CARGO_MANIFEST_DIR")));
+    for start in candidates {
+        let mut cur: Option<&Path> = Some(start.as_path());
+        while let Some(dir) = cur {
+            if dir.join("configs/presets.json").exists() {
+                return Ok(dir.to_path_buf());
+            }
+            cur = dir.parent();
+        }
+    }
+    bail!("could not locate repository root (configs/presets.json)")
+}
+
+/// `<root>/artifacts`, where aot.py writes HLO text + manifest.json.
+pub fn artifacts_dir(root: &Path) -> PathBuf {
+    root.join("artifacts")
+}
+
+/// Scratch outputs (checkpoints, bench csv) — gitignored.
+pub fn out_dir(root: &Path) -> PathBuf {
+    root.join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finds_root() {
+        let root = repo_root().unwrap();
+        assert!(root.join("configs/presets.json").exists());
+        assert!(artifacts_dir(&root).ends_with("artifacts"));
+    }
+}

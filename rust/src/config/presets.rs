@@ -1,0 +1,260 @@
+//! Typed view of configs/presets.json.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::ser::json::Json;
+
+/// Architectural family (paper: OPT vs LLaMA column groups).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FamilyKind {
+    /// OPT-style: LayerNorm, learned positions, GELU 4× MLP, biases.
+    Topt,
+    /// LLaMA-style: RMSNorm, RoPE, SwiGLU, no biases.
+    Tllama,
+}
+
+impl FamilyKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "topt" => Ok(FamilyKind::Topt),
+            "tllama" => Ok(FamilyKind::Tllama),
+            other => bail!("unknown model family '{other}'"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FamilyKind::Topt => "topt",
+            FamilyKind::Tllama => "tllama",
+        }
+    }
+}
+
+/// Fully-resolved model configuration (mirror of python shapes.ModelCfg).
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub family: FamilyKind,
+    pub size: String,
+    pub d: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub bias: bool,
+}
+
+impl ModelSpec {
+    pub fn name(&self) -> String {
+        format!("{}-{}", self.family.name(), self.size)
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d / self.heads
+    }
+}
+
+/// FISTA solver constants (paper §3.2 / §4.1).
+#[derive(Clone, Debug)]
+pub struct FistaCfg {
+    pub max_iters: usize,
+    pub power_iters: usize,
+    pub power_safety: f64,
+    pub stop_tol: f64,
+}
+
+/// Synthetic-corpus generator parameters (WikiText/PTB/C4 analogs).
+#[derive(Clone, Debug)]
+pub struct CorpusCfg {
+    pub name: String,
+    pub seed: u64,
+    pub word_vocab: usize,
+    pub zipf_s: f64,
+    pub noise: f64,
+    pub sentence_len: (usize, usize),
+    pub chars: usize,
+}
+
+/// Adaptive-λ tuner defaults (paper Algorithm 1 / §3.3 / §4.1).
+#[derive(Clone, Debug)]
+pub struct PruneDefaults {
+    pub lambda_init: f64,
+    pub lambda_hi: f64,
+    pub xi: f64,
+    pub max_rounds: usize,
+    pub patience: usize,
+    pub eps_topt: f64,
+    pub eps_tllama: f64,
+}
+
+/// Trainer defaults for the in-repo substrate models.
+#[derive(Clone, Debug)]
+pub struct TrainDefaults {
+    pub steps: usize,
+    pub lr: f64,
+    pub warmup: usize,
+    pub weight_decay: f64,
+    pub seed: u64,
+}
+
+/// The whole presets file.
+#[derive(Clone, Debug)]
+pub struct Presets {
+    pub vocab_size: usize,
+    pub seq_len: usize,
+    pub capture_batch: usize,
+    pub train_batch: usize,
+    pub gram_chunk: usize,
+    pub fista: FistaCfg,
+    pub models: BTreeMap<String, ModelSpec>,
+    pub corpora: BTreeMap<String, CorpusCfg>,
+    pub calib_nsamples: usize,
+    pub calib_corpus: String,
+    pub calib_seed: u64,
+    pub prune: PruneDefaults,
+    pub train: TrainDefaults,
+}
+
+impl Presets {
+    pub fn load(root: &Path) -> Result<Presets> {
+        let v = Json::parse_file(&root.join("configs/presets.json"))?;
+        Self::from_json(&v)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Presets> {
+        let vocab_size = v.req("vocab_size")?.as_usize().context("vocab_size")?;
+        let seq_len = v.req("seq_len")?.as_usize().context("seq_len")?;
+        let fista_v = v.req("fista")?;
+        let fista = FistaCfg {
+            max_iters: fista_v.req("max_iters")?.as_usize().context("max_iters")?,
+            power_iters: fista_v.req("power_iters")?.as_usize().context("power_iters")?,
+            power_safety: fista_v.req("power_safety")?.as_f64().context("power_safety")?,
+            stop_tol: fista_v.req("stop_tol")?.as_f64().context("stop_tol")?,
+        };
+        let mut models = BTreeMap::new();
+        for (fam_name, fam) in v.req("families")?.as_obj().context("families")? {
+            let family = FamilyKind::parse(fam_name)?;
+            let bias = fam.req("bias")?.as_bool().context("bias")?;
+            for (size, sv) in fam.req("sizes")?.as_obj().context("sizes")? {
+                let spec = ModelSpec {
+                    family,
+                    size: size.clone(),
+                    d: sv.req("d")?.as_usize().context("d")?,
+                    layers: sv.req("layers")?.as_usize().context("layers")?,
+                    heads: sv.req("heads")?.as_usize().context("heads")?,
+                    ffn: sv.req("ffn")?.as_usize().context("ffn")?,
+                    vocab: vocab_size,
+                    seq: seq_len,
+                    bias,
+                };
+                if spec.d % spec.heads != 0 {
+                    bail!("{}: d={} not divisible by heads={}", spec.name(), spec.d, spec.heads);
+                }
+                models.insert(spec.name(), spec);
+            }
+        }
+        let mut corpora = BTreeMap::new();
+        for (name, cv) in v.req("corpora")?.as_obj().context("corpora")? {
+            let sl = cv.req("sentence_len")?.as_arr().context("sentence_len")?;
+            corpora.insert(
+                name.clone(),
+                CorpusCfg {
+                    name: name.clone(),
+                    seed: cv.req("seed")?.as_f64().context("seed")? as u64,
+                    word_vocab: cv.req("word_vocab")?.as_usize().context("word_vocab")?,
+                    zipf_s: cv.req("zipf_s")?.as_f64().context("zipf_s")?,
+                    noise: cv.req("noise")?.as_f64().context("noise")?,
+                    sentence_len: (
+                        sl[0].as_usize().context("sentence_len[0]")?,
+                        sl[1].as_usize().context("sentence_len[1]")?,
+                    ),
+                    chars: cv.req("chars")?.as_usize().context("chars")?,
+                },
+            );
+        }
+        let cal = v.req("calibration")?;
+        let pd = v.req("prune_defaults")?;
+        let td = v.req("train_defaults")?;
+        Ok(Presets {
+            vocab_size,
+            seq_len,
+            capture_batch: v.req("capture_batch")?.as_usize().context("capture_batch")?,
+            train_batch: v.req("train_batch")?.as_usize().context("train_batch")?,
+            gram_chunk: v.req("gram_chunk")?.as_usize().context("gram_chunk")?,
+            fista,
+            models,
+            corpora,
+            calib_nsamples: cal.req("nsamples")?.as_usize().context("nsamples")?,
+            calib_corpus: cal.req("corpus")?.as_str().context("corpus")?.to_string(),
+            calib_seed: cal.req("seed")?.as_f64().context("seed")? as u64,
+            prune: PruneDefaults {
+                lambda_init: pd.req("lambda_init")?.as_f64().context("lambda_init")?,
+                lambda_hi: pd.req("lambda_hi")?.as_f64().context("lambda_hi")?,
+                xi: pd.req("xi")?.as_f64().context("xi")?,
+                max_rounds: pd.req("max_rounds")?.as_usize().context("max_rounds")?,
+                patience: pd.req("patience")?.as_usize().context("patience")?,
+                eps_topt: pd.req("eps_topt")?.as_f64().context("eps_topt")?,
+                eps_tllama: pd.req("eps_tllama")?.as_f64().context("eps_tllama")?,
+            },
+            train: TrainDefaults {
+                steps: td.req("steps")?.as_usize().context("steps")?,
+                lr: td.req("lr")?.as_f64().context("lr")?,
+                warmup: td.req("warmup")?.as_usize().context("warmup")?,
+                weight_decay: td.req("weight_decay")?.as_f64().context("weight_decay")?,
+                seed: td.req("seed")?.as_f64().context("seed")? as u64,
+            },
+        })
+    }
+
+    /// Look up `topt-s1`-style names.
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown model '{name}' (have: {:?})", self.models.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn corpus(&self, name: &str) -> Result<&CorpusCfg> {
+        self.corpora
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown corpus '{name}' (have: {:?})", self.corpora.keys().collect::<Vec<_>>()))
+    }
+
+    /// Per-family λ-tuner stop threshold ε (paper §4.1).
+    pub fn eps_for(&self, family: FamilyKind) -> f64 {
+        match family {
+            FamilyKind::Topt => self.prune.eps_topt,
+            FamilyKind::Tllama => self.prune.eps_tllama,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::paths::repo_root;
+
+    #[test]
+    fn loads_presets() {
+        let p = Presets::load(&repo_root().unwrap()).unwrap();
+        assert_eq!(p.vocab_size, 96);
+        assert!(p.models.contains_key("topt-s1"));
+        assert!(p.models.contains_key("tllama-s3"));
+        let m = p.model("topt-s3").unwrap();
+        assert_eq!(m.d, 128);
+        assert_eq!(m.ffn, 512);
+        assert!(m.bias);
+        let l = p.model("tllama-s2").unwrap();
+        assert!(!l.bias);
+        assert_eq!(p.corpus("ptb-syn").unwrap().word_vocab, 900);
+        assert!(p.model("nope").is_err());
+    }
+
+    #[test]
+    fn eps_is_per_family() {
+        let p = Presets::load(&repo_root().unwrap()).unwrap();
+        assert!(p.eps_for(FamilyKind::Topt) < p.eps_for(FamilyKind::Tllama));
+    }
+}

@@ -1,0 +1,176 @@
+//! Run-level option structs: sparsity patterns, engines, prune/train options.
+
+use anyhow::{bail, Result};
+
+/// Target sparsity pattern (paper §2: unstructured s% or n:m semi-structured).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Sparsity {
+    /// Unstructured: zero the given fraction of entries per matrix.
+    Unstructured(f64),
+    /// n:m — at most n *non-zero* entries per group of m consecutive
+    /// entries in a row (the paper's notation: "2:4" keeps 2 of 4).
+    Semi(usize, usize),
+}
+
+impl Sparsity {
+    /// Parse "0.5", "50%", or "2:4".
+    pub fn parse(s: &str) -> Result<Sparsity> {
+        if let Some((n, m)) = s.split_once(':') {
+            let n: usize = n.trim().parse()?;
+            let m: usize = m.trim().parse()?;
+            if n == 0 || m == 0 || n > m {
+                bail!("invalid n:m sparsity '{s}'");
+            }
+            return Ok(Sparsity::Semi(n, m));
+        }
+        let v = s.trim_end_matches('%');
+        let mut x: f64 = v.parse()?;
+        if s.contains('%') {
+            x /= 100.0;
+        }
+        if !(0.0..1.0).contains(&x) {
+            bail!("sparsity fraction must be in [0,1): '{s}'");
+        }
+        Ok(Sparsity::Unstructured(x))
+    }
+
+    /// Overall fraction of zeros this pattern implies.
+    pub fn rate(&self) -> f64 {
+        match self {
+            Sparsity::Unstructured(s) => *s,
+            Sparsity::Semi(n, m) => 1.0 - (*n as f64) / (*m as f64),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Sparsity::Unstructured(s) => format!("{:.0}%", s * 100.0),
+            Sparsity::Semi(n, m) => format!("{n}:{m}"),
+        }
+    }
+}
+
+/// Which engine executes the FISTA/Gram hot loops.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    /// AOT artifacts via PJRT (the production path).
+    Xla,
+    /// Pure-rust reference (tests, environments without artifacts).
+    Native,
+}
+
+impl Engine {
+    pub fn parse(s: &str) -> Result<Engine> {
+        match s {
+            "xla" => Ok(Engine::Xla),
+            "native" => Ok(Engine::Native),
+            other => bail!("unknown engine '{other}' (xla|native)"),
+        }
+    }
+}
+
+/// Inter-layer propagation mode (paper §3.4: units are independent, so
+/// layers can be pruned in parallel; sequential propagates pruned
+/// activations between layers like the SparseGPT evaluation pipeline).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PruneMode {
+    Sequential,
+    Parallel,
+}
+
+impl PruneMode {
+    pub fn parse(s: &str) -> Result<PruneMode> {
+        match s {
+            "sequential" => Ok(PruneMode::Sequential),
+            "parallel" => Ok(PruneMode::Parallel),
+            other => bail!("unknown mode '{other}' (sequential|parallel)"),
+        }
+    }
+}
+
+/// Warm-start source for the FISTA iterations (paper §4.1: SparseGPT for
+/// OPT, Wanda for LLaMA).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WarmStart {
+    Auto,
+    SparseGpt,
+    Wanda,
+    Dense,
+}
+
+impl WarmStart {
+    pub fn parse(s: &str) -> Result<WarmStart> {
+        match s {
+            "auto" => Ok(WarmStart::Auto),
+            "sparsegpt" => Ok(WarmStart::SparseGpt),
+            "wanda" => Ok(WarmStart::Wanda),
+            "dense" => Ok(WarmStart::Dense),
+            other => bail!("unknown warm start '{other}'"),
+        }
+    }
+}
+
+/// Everything a pruning run needs beyond the model + calibration data.
+#[derive(Clone, Debug)]
+pub struct PruneOptions {
+    pub sparsity: Sparsity,
+    pub engine: Engine,
+    pub mode: PruneMode,
+    pub warm_start: WarmStart,
+    /// Intra-layer error correction (paper §3.1); off = Fig. 4a ablation.
+    pub error_correction: bool,
+    pub workers: usize,
+    /// Override Algorithm 1's max tuning rounds (None = presets value).
+    pub max_rounds: Option<usize>,
+    pub seed: u64,
+}
+
+impl Default for PruneOptions {
+    fn default() -> Self {
+        PruneOptions {
+            sparsity: Sparsity::Unstructured(0.5),
+            engine: Engine::Xla,
+            mode: PruneMode::Sequential,
+            warm_start: WarmStart::Auto,
+            error_correction: true,
+            workers: 1,
+            max_rounds: None,
+            seed: 0,
+        }
+    }
+}
+
+/// Trainer options for the substrate models.
+#[derive(Clone, Debug)]
+pub struct TrainOptions {
+    pub steps: usize,
+    pub lr: f64,
+    pub warmup: usize,
+    pub seed: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sparsity() {
+        assert_eq!(Sparsity::parse("0.5").unwrap(), Sparsity::Unstructured(0.5));
+        assert_eq!(Sparsity::parse("30%").unwrap(), Sparsity::Unstructured(0.3));
+        assert_eq!(Sparsity::parse("2:4").unwrap(), Sparsity::Semi(2, 4));
+        assert!(Sparsity::parse("4:2").is_err());
+        assert!(Sparsity::parse("1.5").is_err());
+    }
+
+    #[test]
+    fn rates() {
+        assert!((Sparsity::Semi(2, 4).rate() - 0.5).abs() < 1e-12);
+        assert!((Sparsity::Unstructured(0.3).rate() - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(Sparsity::Semi(2, 4).label(), "2:4");
+        assert_eq!(Sparsity::Unstructured(0.5).label(), "50%");
+    }
+}

@@ -1,0 +1,82 @@
+//! Batching helpers: pack token windows into fixed-size model batches,
+//! zero-padding and masking the tail.
+
+/// A fixed-shape batch for the score/capture artifacts.
+pub struct Batch {
+    /// [batch, seq+1] flattened row-major.
+    pub tokens: Vec<i32>,
+    /// [batch, seq] flattened; 1.0 = real token position, 0.0 = padding.
+    pub mask: Vec<f32>,
+    pub batch: usize,
+    pub seq: usize,
+    /// Number of real (unpadded) rows.
+    pub rows: usize,
+}
+
+/// Pack `windows` (each seq+1 tokens) into batches of exactly `batch` rows.
+/// The final batch is padded with zero rows whose mask is all-zero.
+pub fn pack(windows: &[Vec<i32>], batch: usize, seq: usize) -> Vec<Batch> {
+    assert!(windows.iter().all(|w| w.len() == seq + 1), "window length must be seq+1");
+    let mut out = Vec::new();
+    for chunk in windows.chunks(batch) {
+        let mut tokens = vec![0i32; batch * (seq + 1)];
+        let mut mask = vec![0f32; batch * seq];
+        for (r, w) in chunk.iter().enumerate() {
+            tokens[r * (seq + 1)..(r + 1) * (seq + 1)].copy_from_slice(w);
+            for m in &mut mask[r * seq..(r + 1) * seq] {
+                *m = 1.0;
+            }
+        }
+        out.push(Batch { tokens, mask, batch, seq, rows: chunk.len() });
+    }
+    out
+}
+
+/// Training batches: sample `batch` windows per step from a token stream.
+pub fn train_batch(
+    train: &[i32],
+    batch: usize,
+    seq: usize,
+    rng: &mut crate::util::Pcg64,
+) -> Vec<i32> {
+    let mut tokens = vec![0i32; batch * (seq + 1)];
+    for r in 0..batch {
+        let start = rng.below((train.len() - seq - 1) as u64) as usize;
+        tokens[r * (seq + 1)..(r + 1) * (seq + 1)].copy_from_slice(&train[start..start + seq + 1]);
+    }
+    tokens
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pads_last_batch() {
+        let windows: Vec<Vec<i32>> = (0..5).map(|i| vec![i; 9]).collect();
+        let batches = pack(&windows, 4, 8);
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].rows, 4);
+        assert_eq!(batches[1].rows, 1);
+        // padded row mask is zero
+        let m = &batches[1].mask;
+        assert!(m[8..].iter().all(|&x| x == 0.0));
+        assert!(m[..8].iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn mask_token_counts() {
+        let windows: Vec<Vec<i32>> = (0..3).map(|_| vec![1; 9]).collect();
+        let batches = pack(&windows, 4, 8);
+        let total_mask: f32 = batches.iter().flat_map(|b| b.mask.iter()).sum();
+        assert_eq!(total_mask, 24.0); // 3 rows × 8 positions
+    }
+
+    #[test]
+    fn train_batch_shape() {
+        let mut rng = crate::util::Pcg64::seeded(1);
+        let stream: Vec<i32> = (0..1000).map(|i| i % 96).collect();
+        let b = train_batch(&stream, 4, 16, &mut rng);
+        assert_eq!(b.len(), 4 * 17);
+    }
+}

@@ -1,0 +1,198 @@
+//! Synthetic corpus generators — the WikiText/PTB/C4 analogs.
+//!
+//! Each corpus is produced by a seeded stochastic grammar:
+//!   * a word vocabulary of pronounceable words (CV-alternating) with a
+//!     Zipf(s) frequency law — like natural-language unigram statistics;
+//!   * first-order word-level Markov structure: every word prefers a
+//!     small successor set, so there are bigram regularities for the model
+//!     to learn (perplexity gaps between pruning methods need a model that
+//!     has learned *something* beyond letter frequencies);
+//!   * sentence segmentation and optional character noise (the "c4-syn"
+//!     web-crawl analog is noisier than the "ptb-syn" newswire analog).
+//!
+//! Token stream = char-level ids (see tokenizer.rs). Train split = first
+//! 90%, held-out split = last 10% (perplexity windows never overlap the
+//! calibration source).
+
+use crate::config::CorpusCfg;
+use crate::util::Pcg64;
+
+use super::tokenizer;
+
+/// A generated corpus: token ids plus the train/held-out boundary.
+pub struct Corpus {
+    pub name: String,
+    pub tokens: Vec<i32>,
+    pub train_end: usize,
+}
+
+impl Corpus {
+    /// Generate deterministically from presets.
+    pub fn generate(cfg: &CorpusCfg) -> Corpus {
+        let mut rng = Pcg64::new(cfg.seed, 17);
+        let vocab = WordVocab::build(&mut rng, cfg.word_vocab, cfg.zipf_s);
+        let mut text = String::with_capacity(cfg.chars + 64);
+        let mut prev_word: Option<usize> = None;
+        while text.len() < cfg.chars {
+            let len = cfg.sentence_len.0
+                + rng.below((cfg.sentence_len.1 - cfg.sentence_len.0 + 1) as u64) as usize;
+            for i in 0..len {
+                let w = vocab.next_word(&mut rng, prev_word);
+                prev_word = Some(w);
+                if i > 0 {
+                    text.push(' ');
+                }
+                text.push_str(&vocab.words[w]);
+            }
+            text.push_str(". ");
+        }
+        let mut tokens = tokenizer::encode(&text);
+        // Character-level noise: random printable substitutions.
+        if cfg.noise > 0.0 {
+            let n = tokens.len();
+            let flips = (n as f64 * cfg.noise) as usize;
+            for _ in 0..flips {
+                let i = rng.below(n as u64) as usize;
+                tokens[i] = rng.below(tokenizer::VOCAB_SIZE as u64) as i32;
+            }
+        }
+        let train_end = tokens.len() * 9 / 10;
+        Corpus { name: cfg.name.clone(), tokens, train_end }
+    }
+
+    pub fn train_slice(&self) -> &[i32] {
+        &self.tokens[..self.train_end]
+    }
+
+    pub fn heldout_slice(&self) -> &[i32] {
+        &self.tokens[self.train_end..]
+    }
+}
+
+/// Zipf-weighted word vocabulary with Markov successor structure.
+struct WordVocab {
+    words: Vec<String>,
+    zipf: Vec<f64>,
+    /// Per word: preferred successors (first-order structure).
+    successors: Vec<Vec<usize>>,
+}
+
+const SUCCESSORS_PER_WORD: usize = 12;
+/// Probability of following the Markov preference vs a fresh Zipf draw.
+const MARKOV_P: f64 = 0.7;
+
+impl WordVocab {
+    fn build(rng: &mut Pcg64, n_words: usize, zipf_s: f64) -> WordVocab {
+        let consonants = b"bcdfghjklmnpqrstvwz";
+        let vowels = b"aeiou";
+        let mut words = Vec::with_capacity(n_words);
+        let mut seen = std::collections::HashSet::new();
+        while words.len() < n_words {
+            let syllables = 1 + rng.below(3) as usize;
+            let mut w = String::new();
+            for _ in 0..syllables {
+                w.push(consonants[rng.below(consonants.len() as u64) as usize] as char);
+                w.push(vowels[rng.below(vowels.len() as u64) as usize] as char);
+                if rng.next_f64() < 0.3 {
+                    w.push(consonants[rng.below(consonants.len() as u64) as usize] as char);
+                }
+            }
+            if seen.insert(w.clone()) {
+                words.push(w);
+            }
+        }
+        let zipf: Vec<f64> = (0..n_words).map(|r| 1.0 / ((r + 1) as f64).powf(zipf_s)).collect();
+        let successors = (0..n_words)
+            .map(|_| (0..SUCCESSORS_PER_WORD).map(|_| rng.below(n_words as u64) as usize).collect())
+            .collect();
+        WordVocab { words, zipf, successors }
+    }
+
+    fn next_word(&self, rng: &mut Pcg64, prev: Option<usize>) -> usize {
+        if let Some(p) = prev {
+            if rng.next_f64() < MARKOV_P {
+                let succ = &self.successors[p];
+                return succ[rng.below(succ.len() as u64) as usize];
+            }
+        }
+        rng.sample_weighted(&self.zipf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_cfg(seed: u64, noise: f64) -> CorpusCfg {
+        CorpusCfg {
+            name: "test".into(),
+            seed,
+            word_vocab: 200,
+            zipf_s: 1.05,
+            noise,
+            sentence_len: (3, 8),
+            chars: 20_000,
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = Corpus::generate(&test_cfg(1, 0.0));
+        let b = Corpus::generate(&test_cfg(1, 0.0));
+        assert_eq!(a.tokens, b.tokens);
+        let c = Corpus::generate(&test_cfg(2, 0.0));
+        assert_ne!(a.tokens, c.tokens);
+    }
+
+    #[test]
+    fn split_boundaries() {
+        let c = Corpus::generate(&test_cfg(3, 0.0));
+        assert!(c.tokens.len() >= 20_000);
+        assert_eq!(c.train_slice().len() + c.heldout_slice().len(), c.tokens.len());
+        assert!(c.train_slice().len() > 8 * c.heldout_slice().len());
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let c = Corpus::generate(&test_cfg(4, 0.05));
+        for &t in &c.tokens {
+            assert!((0..tokenizer::VOCAB_SIZE as i32).contains(&t));
+        }
+    }
+
+    #[test]
+    fn has_word_structure() {
+        // Spaces and periods must appear with reasonable frequency.
+        let c = Corpus::generate(&test_cfg(5, 0.0));
+        let space = tokenizer::encode(" ")[0];
+        let spaces = c.tokens.iter().filter(|&&t| t == space).count();
+        assert!(spaces * 12 > c.tokens.len(), "too few spaces");
+    }
+
+    #[test]
+    fn markov_structure_is_learnable() {
+        // Bigram entropy over words should be clearly below unigram entropy:
+        // the successor preference makes some transitions much likelier.
+        let c = Corpus::generate(&test_cfg(6, 0.0));
+        let text = tokenizer::decode(&c.tokens);
+        let words: Vec<&str> = text.split_whitespace().take(2000).collect();
+        let mut uni = std::collections::HashMap::new();
+        let mut bi = std::collections::HashMap::new();
+        for w in words.windows(2) {
+            *uni.entry(w[0]).or_insert(0usize) += 1;
+            *bi.entry((w[0], w[1])).or_insert(0usize) += 1;
+        }
+        // The top-12 successors of the most frequent word should carry most
+        // of its transition mass (MARKOV_P = 0.7 over 12 successors), far
+        // more than the unigram-independence baseline would give 12 words.
+        let (&w1, &c1) = uni.iter().max_by_key(|(_, &c)| c).unwrap();
+        let mut succ: Vec<usize> =
+            bi.iter().filter(|((a, _), _)| *a == w1).map(|(_, &c)| c).collect();
+        succ.sort_unstable_by(|a, b| b.cmp(a));
+        let top12: usize = succ.iter().take(12).sum();
+        assert!(
+            top12 * 2 > c1,
+            "top-12 successors carry {top12}/{c1} transitions — no Markov structure"
+        );
+    }
+}

@@ -1,0 +1,17 @@
+//! Data substrate: synthetic corpora (WikiText/PTB/C4 analogs), the
+//! char-level tokenizer, calibration sampling and evaluation batching.
+//!
+//! The paper calibrates on 128 sequences from the first shard of C4 and
+//! evaluates perplexity on WikiText-2/PTB/C4. Those datasets are not
+//! available offline, so `corpus` generates three *distinct, learnable*
+//! text distributions (Zipfian word vocabularies + first-order word Markov
+//! structure + per-corpus noise) — see DESIGN.md §2 for why this preserves
+//! the behaviour the experiments measure.
+
+pub mod batches;
+pub mod corpus;
+pub mod sampler;
+pub mod tokenizer;
+
+pub use corpus::Corpus;
+pub use tokenizer::{decode, encode, VOCAB_SIZE};

@@ -1,0 +1,78 @@
+//! Calibration sampling (paper §4.1: random sequences from the train
+//! shard; §4.4 varies the count and the sampling seed).
+
+use crate::util::Pcg64;
+
+use super::Corpus;
+
+/// Sample `n` random windows of `len` tokens from the corpus train split.
+pub fn calibration_windows(corpus: &Corpus, n: usize, len: usize, seed: u64) -> Vec<Vec<i32>> {
+    let train = corpus.train_slice();
+    assert!(train.len() > len, "corpus too small for window length {len}");
+    let mut rng = Pcg64::new(seed, 23);
+    (0..n)
+        .map(|_| {
+            let start = rng.below((train.len() - len) as u64) as usize;
+            train[start..start + len].to_vec()
+        })
+        .collect()
+}
+
+/// Non-overlapping evaluation windows from the held-out split
+/// (`len` includes the shifted target, i.e. seq_len + 1).
+pub fn eval_windows(corpus: &Corpus, len: usize, max_windows: usize) -> Vec<Vec<i32>> {
+    let held = corpus.heldout_slice();
+    held.chunks_exact(len).take(max_windows).map(|c| c.to_vec()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CorpusCfg;
+
+    fn corpus() -> Corpus {
+        Corpus::generate(&CorpusCfg {
+            name: "t".into(),
+            seed: 7,
+            word_vocab: 100,
+            zipf_s: 1.0,
+            noise: 0.0,
+            sentence_len: (3, 6),
+            chars: 50_000,
+        })
+    }
+
+    #[test]
+    fn calibration_shapes_and_determinism() {
+        let c = corpus();
+        let a = calibration_windows(&c, 8, 65, 42);
+        let b = calibration_windows(&c, 8, 65, 42);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 8);
+        assert!(a.iter().all(|w| w.len() == 65));
+        let d = calibration_windows(&c, 8, 65, 43);
+        assert_ne!(a, d, "different seed must sample differently");
+    }
+
+    #[test]
+    fn eval_windows_nonoverlapping() {
+        let c = corpus();
+        let w = eval_windows(&c, 65, 1_000);
+        assert!(w.len() > 10);
+        assert!(w.iter().all(|x| x.len() == 65));
+        // windows tile the held-out split
+        let held = c.heldout_slice();
+        assert_eq!(&held[..65], w[0].as_slice());
+        assert_eq!(&held[65..130], w[1].as_slice());
+    }
+
+    #[test]
+    fn calibration_only_from_train_split() {
+        let c = corpus();
+        let train = c.train_slice();
+        for w in calibration_windows(&c, 16, 65, 1) {
+            // every window must be a subslice of train
+            assert!(train.windows(65).any(|t| t == w.as_slice()));
+        }
+    }
+}

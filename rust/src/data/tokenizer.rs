@@ -1,0 +1,54 @@
+//! Char-level tokenizer over printable ASCII.
+//!
+//! Token id = byte − 32, covering 0x20..0x7F (96 symbols — exactly
+//! `vocab_size` in configs/presets.json). Unknown bytes map to '?'.
+
+pub const VOCAB_SIZE: usize = 96;
+const BASE: u8 = 0x20;
+
+/// Encode text to token ids.
+pub fn encode(text: &str) -> Vec<i32> {
+    text.bytes()
+        .map(|b| {
+            if (BASE..BASE + VOCAB_SIZE as u8).contains(&b) {
+                (b - BASE) as i32
+            } else {
+                (b'?' - BASE) as i32
+            }
+        })
+        .collect()
+}
+
+/// Decode token ids back to text.
+pub fn decode(ids: &[i32]) -> String {
+    ids.iter()
+        .map(|&t| {
+            let t = t.clamp(0, VOCAB_SIZE as i32 - 1) as u8;
+            (t + BASE) as char
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_printable() {
+        let s = "the quick brown fox! 123 (etc.)";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn unknown_maps_to_question_mark() {
+        let ids = encode("a\nb");
+        assert_eq!(decode(&ids), "a?b");
+    }
+
+    #[test]
+    fn ids_in_range() {
+        for t in encode("any ascii text ~") {
+            assert!((0..VOCAB_SIZE as i32).contains(&t));
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Evaluation: perplexity over held-out corpora and the zero-shot probe
+//! suite (the paper's Tables 1–7 metrics).
+
+pub mod generate;
+pub mod perplexity;
+pub mod propagation;
+pub mod zeroshot;
+
+pub use perplexity::perplexity;

@@ -1,0 +1,131 @@
+//! Perplexity evaluation over held-out corpus windows via the
+//! `score_{model}` artifact (masked per-sequence NLL; DESIGN.md §5).
+
+use anyhow::{bail, Result};
+
+use crate::config::{ModelSpec, Presets};
+use crate::data::{batches::pack, sampler::eval_windows, Corpus};
+use crate::model::params::ModelParams;
+use crate::runtime::session::{Arg, Session};
+
+/// exp(total NLL / total tokens) over up to `max_windows` non-overlapping
+/// held-out windows.
+pub fn perplexity(
+    session: &Session,
+    presets: &Presets,
+    spec: &ModelSpec,
+    params: &ModelParams,
+    corpus: &Corpus,
+    max_windows: usize,
+) -> Result<f64> {
+    let windows = eval_windows(corpus, spec.seq + 1, max_windows);
+    if windows.is_empty() {
+        bail!("held-out split of '{}' has no full windows", corpus.name);
+    }
+    let (nll, tokens) = score_windows(session, presets, spec, params, &windows)?;
+    Ok((nll / tokens).exp())
+}
+
+/// Sum of masked NLL and token count over arbitrary windows (also used by
+/// the zero-shot harness with custom masks).
+pub fn score_windows(
+    session: &Session,
+    presets: &Presets,
+    spec: &ModelSpec,
+    params: &ModelParams,
+    windows: &[Vec<i32>],
+) -> Result<(f64, f64)> {
+    let mut total_nll = 0f64;
+    let mut total_tokens = 0f64;
+    for nll_row in score_per_window(session, presets, spec, params, windows, None)? {
+        total_nll += nll_row;
+        total_tokens += spec.seq as f64;
+    }
+    Ok((total_nll, total_tokens))
+}
+
+/// Per-window masked NLL. `suffix_mask_from` = Some(t0) restricts scoring
+/// to positions ≥ t0 (the zero-shot continuation region); None scores all.
+pub fn score_per_window(
+    session: &Session,
+    presets: &Presets,
+    spec: &ModelSpec,
+    params: &ModelParams,
+    windows: &[Vec<i32>],
+    suffix_mask_from: Option<usize>,
+) -> Result<Vec<f64>> {
+    let name = format!("score_{}", spec.name());
+    let cb = presets.capture_batch;
+    let seq = spec.seq;
+    let mut packed = pack(windows, cb, seq);
+    if let Some(t0) = suffix_mask_from {
+        for b in &mut packed {
+            for r in 0..b.rows {
+                for t in 0..t0.min(seq) {
+                    b.mask[r * seq + t] = 0.0;
+                }
+            }
+        }
+    }
+    let param_tensors = params.tensors();
+    let tok_dims = [cb, seq + 1];
+    let mut out = Vec::with_capacity(windows.len());
+    for b in &packed {
+        let mut args: Vec<Arg<'_>> = Vec::with_capacity(param_tensors.len() + 2);
+        for t in param_tensors {
+            args.push(Arg::T(t));
+        }
+        args.push(Arg::I32(&b.tokens, &tok_dims));
+        let mask = crate::tensor::Tensor::from_vec(vec![cb, seq], b.mask.clone());
+        args.push(Arg::T(&mask));
+        let res = session.run(&name, &args)?;
+        let nll = &res[0];
+        if nll.len() != cb {
+            bail!("score returned {} rows, expected {cb}", nll.len());
+        }
+        for r in 0..b.rows {
+            out.push(nll.data()[r] as f64);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::repo_root;
+    use crate::model::init::init_params;
+    use crate::runtime::Manifest;
+    use std::sync::Arc;
+
+    #[test]
+    fn random_model_scores_near_uniform() {
+        // An untrained model must score close to ln(vocab) per token.
+        let presets = Presets::load(&repo_root().unwrap()).unwrap();
+        let spec = presets.model("topt-s1").unwrap();
+        let params = init_params(spec, 11);
+        let corpus = Corpus::generate(presets.corpus("ptb-syn").unwrap());
+        let session = Session::new(Arc::new(Manifest::load_default().unwrap())).unwrap();
+        let ppl = perplexity(&session, &presets, spec, &params, &corpus, 16).unwrap();
+        let uniform = spec.vocab as f64;
+        assert!(ppl > 0.3 * uniform && ppl < 3.0 * uniform, "ppl {ppl} vs uniform {uniform}");
+    }
+
+    #[test]
+    fn suffix_mask_reduces_scored_tokens() {
+        let presets = Presets::load(&repo_root().unwrap()).unwrap();
+        let spec = presets.model("topt-s1").unwrap();
+        let params = init_params(spec, 11);
+        let corpus = Corpus::generate(presets.corpus("ptb-syn").unwrap());
+        let windows = eval_windows(&corpus, spec.seq + 1, 4);
+        let session = Session::new(Arc::new(Manifest::load_default().unwrap())).unwrap();
+        let full = score_per_window(&session, &presets, spec, &params, &windows, None).unwrap();
+        let sfx =
+            score_per_window(&session, &presets, spec, &params, &windows, Some(spec.seq - 8))
+                .unwrap();
+        for (f, s) in full.iter().zip(&sfx) {
+            assert!(s < f, "suffix-masked NLL {s} must be below full {f}");
+            assert!(*s > 0.0);
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! Layer-wise error-propagation diagnostic (paper Fig. 2's motivation):
+//! measure ‖y_pruned − y_dense‖/‖y_dense‖ at the output of every decoder
+//! layer, for a pruned model. Error correction should flatten this curve;
+//! without it the relative error compounds layer over layer.
+
+use anyhow::Result;
+
+use crate::config::{ModelSpec, Presets};
+use crate::model::embed::embed_windows;
+use crate::model::params::ModelParams;
+use crate::runtime::session::{Arg, Session};
+use crate::tensor::Tensor;
+
+/// Relative output deviation after each layer: vec[layer] =
+/// ‖y*_ℓ − y_ℓ‖_F / ‖y_ℓ‖_F over the probe windows.
+pub fn layer_errors(
+    session: &Session,
+    presets: &Presets,
+    spec: &ModelSpec,
+    dense: &ModelParams,
+    pruned: &ModelParams,
+    windows: &[Vec<i32>],
+) -> Result<Vec<f64>> {
+    let cb = presets.capture_batch;
+    let (mut xd, valids) = embed_windows(spec, dense, windows, cb)?;
+    let (mut xs, _) = embed_windows(spec, pruned, windows, cb)?;
+    let name = format!("capture_{}", spec.name());
+    let mut out = Vec::with_capacity(spec.layers);
+    for layer in 0..spec.layers {
+        let run = |params: &ModelParams, batches: &[Tensor]| -> Result<Vec<Tensor>> {
+            let tensors = params.layer_tensors(spec, layer);
+            let mut ys = Vec::with_capacity(batches.len());
+            for b in batches {
+                let mut args: Vec<Arg<'_>> = vec![Arg::T(b)];
+                for t in &tensors {
+                    args.push(Arg::T(t));
+                }
+                let res = session.run(&name, &args)?;
+                ys.push(res.into_iter().last().expect("y"));
+            }
+            Ok(ys)
+        };
+        let yd = run(dense, &xd)?;
+        let ys = run(pruned, &xs)?;
+        // relative deviation over valid rows only
+        let (mut num, mut den) = (0f64, 0f64);
+        for ((a, b), &valid) in yd.iter().zip(&ys).zip(&valids) {
+            let row_elems = valid * spec.seq * spec.d;
+            let (da, db) = (&a.data()[..row_elems], &b.data()[..row_elems]);
+            for (&x, &y) in da.iter().zip(db) {
+                let d = (x - y) as f64;
+                num += d * d;
+                den += (x as f64) * (x as f64);
+            }
+        }
+        out.push((num / den.max(1e-30)).sqrt());
+        xd = yd;
+        xs = ys;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::repo_root;
+    use crate::model::init::init_params;
+    use crate::runtime::Manifest;
+    use std::sync::Arc;
+
+    #[test]
+    fn identical_models_have_zero_error() {
+        let presets = Presets::load(&repo_root().unwrap()).unwrap();
+        let spec = presets.model("topt-s1").unwrap();
+        let params = init_params(spec, 31);
+        let session = Session::new(Arc::new(Manifest::load_default().unwrap())).unwrap();
+        let windows: Vec<Vec<i32>> = (0..4).map(|i| vec![(i * 3) as i32; spec.seq]).collect();
+        let errs =
+            layer_errors(&session, &presets, spec, &params, &params, &windows).unwrap();
+        assert_eq!(errs.len(), spec.layers);
+        assert!(errs.iter().all(|&e| e < 1e-6), "{errs:?}");
+    }
+
+    #[test]
+    fn pruned_model_error_grows_with_depth() {
+        let presets = Presets::load(&repo_root().unwrap()).unwrap();
+        let spec = presets.model("topt-s1").unwrap();
+        let dense = init_params(spec, 32);
+        let mut pruned = dense.clone();
+        // magnitude-prune every operator at 60% (no compensation → visible error)
+        for layer in 0..spec.layers {
+            for op in crate::model::ops::pruned_ops(spec) {
+                let nm = format!("l{layer}.{}", op.name);
+                let w = crate::pruner::round_to_sparsity(
+                    pruned.req(&nm).unwrap(),
+                    crate::config::Sparsity::Unstructured(0.6),
+                );
+                pruned.set(&nm, w).unwrap();
+            }
+        }
+        let session = Session::new(Arc::new(Manifest::load_default().unwrap())).unwrap();
+        let windows: Vec<Vec<i32>> = (0..4).map(|i| vec![(i * 5 + 1) as i32; spec.seq]).collect();
+        let errs = layer_errors(&session, &presets, spec, &dense, &pruned, &windows).unwrap();
+        assert!(errs[0] > 1e-4, "layer 0 should deviate: {errs:?}");
+        assert!(errs[spec.layers - 1] >= errs[0] * 0.5, "deep layers should not shrink error to zero: {errs:?}");
+    }
+}

@@ -1,0 +1,91 @@
+//! Zero-shot scoring harness: batch both candidates of every item through
+//! the score artifact with a suffix-only mask and report per-task accuracy
+//! (paper Table 3: per-task + mean).
+
+use anyhow::Result;
+
+use crate::config::{ModelSpec, Presets};
+use crate::data::Corpus;
+use crate::eval::perplexity::score_per_window;
+use crate::model::params::ModelParams;
+use crate::runtime::Session;
+
+use super::tasks::{build_tasks, Task, SUFFIX};
+
+/// Accuracy of one task: fraction of items whose true suffix scores a
+/// strictly lower NLL than the distractor suffix.
+#[derive(Clone, Debug)]
+pub struct TaskResult {
+    pub name: &'static str,
+    pub accuracy: f64,
+    pub items: usize,
+}
+
+/// Run all seven probes; returns per-task results + the mean accuracy.
+pub fn run_all_tasks(
+    session: &Session,
+    presets: &Presets,
+    spec: &ModelSpec,
+    params: &ModelParams,
+    corpus: &Corpus,
+    n_items: usize,
+    seed: u64,
+) -> Result<(Vec<TaskResult>, f64)> {
+    let tasks = build_tasks(corpus, spec.seq, n_items, seed);
+    let mut results = Vec::with_capacity(tasks.len());
+    for task in &tasks {
+        results.push(score_task(session, presets, spec, params, task)?);
+    }
+    let mean = crate::metrics::mean(&results.iter().map(|r| r.accuracy).collect::<Vec<_>>());
+    Ok((results, mean))
+}
+
+fn score_task(
+    session: &Session,
+    presets: &Presets,
+    spec: &ModelSpec,
+    params: &ModelParams,
+    task: &Task,
+) -> Result<TaskResult> {
+    // Interleave true/distractor windows so one batched pass scores both.
+    let mut windows = Vec::with_capacity(task.items.len() * 2);
+    for item in &task.items {
+        windows.push(item.true_window.clone());
+        windows.push(item.distractor_window.clone());
+    }
+    let t0 = spec.seq - SUFFIX;
+    let nll = score_per_window(session, presets, spec, params, &windows, Some(t0))?;
+    let correct = nll
+        .chunks_exact(2)
+        .filter(|pair| pair[0] < pair[1])
+        .count();
+    Ok(TaskResult {
+        name: task.name,
+        accuracy: correct as f64 / task.items.len() as f64,
+        items: task.items.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::repo_root;
+    use crate::model::init::init_params;
+    use crate::runtime::Manifest;
+    use std::sync::Arc;
+
+    #[test]
+    fn random_model_is_near_chance_overall() {
+        // An untrained model has no preference for true text on the harder
+        // probes; overall accuracy must sit well below a trained model's.
+        let presets = Presets::load(&repo_root().unwrap()).unwrap();
+        let spec = presets.model("topt-s1").unwrap();
+        let params = init_params(spec, 13);
+        let corpus = Corpus::generate(presets.corpus("ptb-syn").unwrap());
+        let session = Session::new(Arc::new(Manifest::load_default().unwrap())).unwrap();
+        let (results, mean) =
+            run_all_tasks(&session, &presets, spec, &params, &corpus, 24, 1).unwrap();
+        assert_eq!(results.len(), 7);
+        assert!((0.2..0.8).contains(&mean), "untrained mean {mean} should be near chance");
+    }
+}

@@ -1,0 +1,3 @@
+pub mod harness;
+pub mod tasks;
+pub use harness::run_all_tasks;

@@ -1,0 +1,177 @@
+//! The seven synthetic zero-shot probes (Table 3 analogs).
+//!
+//! Each probe is a binary-choice continuation task: take a real held-out
+//! window, corrupt its final `SUFFIX` tokens with a task-specific
+//! transformation, and ask whether the model assigns lower NLL to the true
+//! suffix than to the corrupted one. The seven corruption types span a
+//! difficulty range like the original seven LM-Harness tasks (DESIGN.md §2):
+//! a pruned model that preserves relative sequence likelihoods keeps its
+//! accuracy; a damaged one decays toward chance (0.5).
+
+use crate::data::{tokenizer::VOCAB_SIZE, Corpus};
+use crate::util::Pcg64;
+
+/// Length of the scored/corrupted continuation region.
+pub const SUFFIX: usize = 16;
+
+/// One binary-choice item: two windows sharing a prefix.
+pub struct Item {
+    pub true_window: Vec<i32>,
+    pub distractor_window: Vec<i32>,
+}
+
+/// A probe task: name + its items.
+pub struct Task {
+    pub name: &'static str,
+    pub items: Vec<Item>,
+}
+
+/// All seven probes over `n_items` held-out windows each.
+pub fn build_tasks(corpus: &Corpus, seq: usize, n_items: usize, seed: u64) -> Vec<Task> {
+    let kinds: [(&'static str, CorruptFn); 7] = [
+        ("arc_e-syn", corrupt_uniform),      // uniform random chars (easy)
+        ("arc_c-syn", corrupt_unigram),      // corpus-unigram chars (harder)
+        ("wino-syn", corrupt_swap_words),    // swap two suffix words
+        ("boolq-syn", corrupt_other_window), // suffix from elsewhere
+        ("rte-syn", corrupt_reverse),        // reversed suffix
+        ("qnli-syn", corrupt_shuffle),       // shuffled suffix chars
+        ("wnli-syn", corrupt_single_flip),   // one char flipped (hardest)
+    ];
+    let held = corpus.heldout_slice();
+    let win = seq + 1;
+    assert!(held.len() > win * 2, "held-out split too small");
+    // Unigram table for corrupt_unigram.
+    let mut unigram = vec![1.0f64; VOCAB_SIZE];
+    for &t in held.iter().take(20_000) {
+        unigram[t as usize] += 1.0;
+    }
+    kinds
+        .iter()
+        .enumerate()
+        .map(|(k, (name, f))| {
+            let mut rng = Pcg64::new(seed ^ (k as u64 + 1), 53);
+            let items = (0..n_items)
+                .map(|_| {
+                    let start = rng.below((held.len() - win) as u64) as usize;
+                    let true_window = held[start..start + win].to_vec();
+                    let mut distractor_window = true_window.clone();
+                    f(&mut distractor_window[win - SUFFIX..], held, &unigram, &mut rng);
+                    Item { true_window, distractor_window }
+                })
+                .collect();
+            Task { name, items }
+        })
+        .collect()
+}
+
+type CorruptFn = fn(&mut [i32], &[i32], &[f64], &mut Pcg64);
+
+fn corrupt_uniform(sfx: &mut [i32], _held: &[i32], _uni: &[f64], rng: &mut Pcg64) {
+    for t in sfx.iter_mut() {
+        *t = rng.below(VOCAB_SIZE as u64) as i32;
+    }
+}
+
+fn corrupt_unigram(sfx: &mut [i32], _held: &[i32], uni: &[f64], rng: &mut Pcg64) {
+    for t in sfx.iter_mut() {
+        *t = rng.sample_weighted(uni) as i32;
+    }
+}
+
+fn corrupt_swap_words(sfx: &mut [i32], _held: &[i32], _uni: &[f64], rng: &mut Pcg64) {
+    // Swap two halves of the suffix (crude "word-order" corruption), then
+    // flip a couple of chars so the bag-of-chars differs too.
+    let mid = sfx.len() / 2;
+    let (a, b) = sfx.split_at_mut(mid);
+    for (x, y) in a.iter_mut().zip(b.iter_mut()) {
+        std::mem::swap(x, y);
+    }
+    for _ in 0..2 {
+        let i = rng.below(sfx.len() as u64) as usize;
+        sfx[i] = rng.below(VOCAB_SIZE as u64) as i32;
+    }
+}
+
+fn corrupt_other_window(sfx: &mut [i32], held: &[i32], _uni: &[f64], rng: &mut Pcg64) {
+    let start = rng.below((held.len() - sfx.len()) as u64) as usize;
+    sfx.copy_from_slice(&held[start..start + sfx.len()]);
+}
+
+fn corrupt_reverse(sfx: &mut [i32], _held: &[i32], _uni: &[f64], _rng: &mut Pcg64) {
+    sfx.reverse();
+}
+
+fn corrupt_shuffle(sfx: &mut [i32], _held: &[i32], _uni: &[f64], rng: &mut Pcg64) {
+    rng.shuffle(sfx);
+}
+
+fn corrupt_single_flip(sfx: &mut [i32], _held: &[i32], _uni: &[f64], rng: &mut Pcg64) {
+    let i = rng.below(sfx.len() as u64) as usize;
+    let old = sfx[i];
+    let mut new = old;
+    while new == old {
+        new = rng.below(VOCAB_SIZE as u64) as i32;
+    }
+    sfx[i] = new;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CorpusCfg;
+
+    fn corpus() -> Corpus {
+        Corpus::generate(&CorpusCfg {
+            name: "t".into(),
+            seed: 3,
+            word_vocab: 150,
+            zipf_s: 1.0,
+            noise: 0.0,
+            sentence_len: (3, 8),
+            chars: 100_000,
+        })
+    }
+
+    #[test]
+    fn seven_tasks_with_items() {
+        let tasks = build_tasks(&corpus(), 64, 20, 1);
+        assert_eq!(tasks.len(), 7);
+        for t in &tasks {
+            assert_eq!(t.items.len(), 20);
+            for item in &t.items {
+                assert_eq!(item.true_window.len(), 65);
+                assert_eq!(item.distractor_window.len(), 65);
+                // prefix shared, suffix differs
+                assert_eq!(item.true_window[..65 - SUFFIX], item.distractor_window[..65 - SUFFIX]);
+                assert_ne!(item.true_window[65 - SUFFIX..], item.distractor_window[65 - SUFFIX..]);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let c = corpus();
+        let a = build_tasks(&c, 64, 5, 9);
+        let b = build_tasks(&c, 64, 5, 9);
+        for (x, y) in a.iter().zip(&b) {
+            for (i, j) in x.items.iter().zip(&y.items) {
+                assert_eq!(i.distractor_window, j.distractor_window);
+            }
+        }
+    }
+
+    #[test]
+    fn single_flip_differs_in_exactly_one_position() {
+        let tasks = build_tasks(&corpus(), 64, 10, 2);
+        let wnli = tasks.iter().find(|t| t.name == "wnli-syn").unwrap();
+        for item in &wnli.items {
+            let diff = item
+                .true_window
+                .iter()
+                .zip(&item.distractor_window)
+                .filter(|(a, b)| a != b)
+                .count();
+            assert_eq!(diff, 1);
+        }
+    }
+}

@@ -1,0 +1,38 @@
+//! FISTAPruner: convex-optimization-based layer-wise post-training pruning
+//! for transformer language models.
+//!
+//! Reproduction of Zhao et al., *"A Convex-optimization-based Layer-wise
+//! Post-training Pruner for Large Language Models"* (2024) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the coordinator: calibration capture, Gram
+//!   accumulation, the adaptive-λ outer loop (paper Algorithm 1), the
+//!   intra-layer error-correction replay (paper §3.1), the parallel
+//!   decoder-layer scheduler (paper §3.4), baselines (SparseGPT, Wanda,
+//!   magnitude), the training / evaluation substrate, and the PJRT runtime
+//!   that executes the AOT artifacts.
+//! * **L2 (python/compile/model.py)** — JAX graphs (FISTA solve, Gram
+//!   chunks, model forward/score/train), lowered once to HLO text.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the FISTA hot
+//!   loop and Gram accumulation.
+//!
+//! Python never runs on the request path: after `make artifacts` the rust
+//! binary is self-contained.
+
+pub mod util;
+pub mod ser;
+pub mod config;
+pub mod tensor;
+pub mod linalg;
+pub mod data;
+pub mod model;
+pub mod runtime;
+pub mod pruner;
+pub mod sparse;
+pub mod baselines;
+pub mod train;
+pub mod eval;
+pub mod metrics;
+pub mod testing;
+pub mod bench_support;
+pub mod cli;

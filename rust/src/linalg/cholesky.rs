@@ -1,0 +1,144 @@
+//! Cholesky factorization and PSD inversion.
+//!
+//! SparseGPT (Frantar & Alistarh 2023) needs the inverse Hessian
+//! H⁻¹ = (X Xᵀ + εI)⁻¹ and, per processed block, the Cholesky of the
+//! remaining submatrix. Our baseline follows the reference implementation:
+//! one upfront Cholesky-based inversion, then the OBS column sweep uses the
+//! Cholesky factor of H⁻¹ (see baselines/sparsegpt.rs).
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+/// Lower-triangular L with A = L Lᵀ. Fails on non-PD input.
+pub fn cholesky(a: &Tensor) -> Result<Tensor> {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "cholesky needs square input");
+    let mut l = Tensor::zeros(vec![n, n]);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.at2(i, j) as f64;
+            for k in 0..j {
+                sum -= (l.at2(i, k) as f64) * (l.at2(j, k) as f64);
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    bail!("matrix not positive definite at pivot {i} (sum={sum:.3e})");
+                }
+                l.set2(i, j, sum.sqrt() as f32);
+            } else {
+                l.set2(i, j, (sum / l.at2(j, j) as f64) as f32);
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve L y = b for lower-triangular L.
+pub fn solve_lower(l: &Tensor, b: &[f32]) -> Vec<f32> {
+    let n = l.rows();
+    assert_eq!(b.len(), n);
+    let mut y = vec![0.0f32; n];
+    for i in 0..n {
+        let mut sum = b[i] as f64;
+        for k in 0..i {
+            sum -= (l.at2(i, k) as f64) * (y[k] as f64);
+        }
+        y[i] = (sum / l.at2(i, i) as f64) as f32;
+    }
+    y
+}
+
+/// Solve Lᵀ x = y for lower-triangular L.
+pub fn solve_upper(l: &Tensor, y: &[f32]) -> Vec<f32> {
+    let n = l.rows();
+    assert_eq!(y.len(), n);
+    let mut x = vec![0.0f32; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i] as f64;
+        for k in (i + 1)..n {
+            sum -= (l.at2(k, i) as f64) * (x[k] as f64);
+        }
+        x[i] = (sum / l.at2(i, i) as f64) as f32;
+    }
+    x
+}
+
+/// A⁻¹ for symmetric positive-definite A, via Cholesky solves per column.
+pub fn cholesky_inverse(a: &Tensor) -> Result<Tensor> {
+    let n = a.rows();
+    let l = cholesky(a)?;
+    let mut inv = Tensor::zeros(vec![n, n]);
+    let mut e = vec![0.0f32; n];
+    for j in 0..n {
+        e[j] = 1.0;
+        let y = solve_lower(&l, &e);
+        let x = solve_upper(&l, &y);
+        for i in 0..n {
+            inv.set2(i, j, x[i]);
+        }
+        e[j] = 0.0;
+    }
+    Ok(inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::{matmul, matmul_nt, transpose};
+    use crate::util::Pcg64;
+
+    fn random_spd(rng: &mut Pcg64, n: usize, jitter: f32) -> Tensor {
+        let x = Tensor::from_vec(vec![n, n + 4], rng.normal_vec(n * (n + 4), 1.0));
+        let mut a = matmul_nt(&x, &x);
+        for i in 0..n {
+            let v = a.at2(i, i) + jitter;
+            a.set2(i, i, v);
+        }
+        a
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let mut rng = Pcg64::seeded(1);
+        let a = random_spd(&mut rng, 16, 0.1);
+        let l = cholesky(&a).unwrap();
+        let back = matmul(&l, &transpose(&l));
+        assert!(crate::tensor::ops::frob_dist(&back, &a) < 1e-2 * a.frob_norm());
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        let mut rng = Pcg64::seeded(2);
+        let a = random_spd(&mut rng, 12, 0.5);
+        let inv = cholesky_inverse(&a).unwrap();
+        let prod = matmul(&a, &inv);
+        for i in 0..12 {
+            for j in 0..12 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((prod.at2(i, j) - want).abs() < 1e-3, "({i},{j}) = {}", prod.at2(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn triangular_solves() {
+        let mut rng = Pcg64::seeded(3);
+        let a = random_spd(&mut rng, 8, 0.5);
+        let l = cholesky(&a).unwrap();
+        let b: Vec<f32> = rng.normal_vec(8, 1.0);
+        let y = solve_lower(&l, &b);
+        let x = solve_upper(&l, &y);
+        // L Lᵀ x = b  ⇒  A x = b
+        let ax = crate::tensor::ops::matvec(&a, &x);
+        for i in 0..8 {
+            assert!((ax[i] - b[i]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Tensor::from_vec(vec![2, 2], vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(cholesky(&a).is_err());
+    }
+}

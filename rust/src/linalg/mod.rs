@@ -1,0 +1,9 @@
+//! Dense linear algebra for the baselines and native solver fallback:
+//! Cholesky factorization / inversion (SparseGPT's Hessian pipeline) and
+//! power iteration (FISTA step-size constant when running natively).
+
+pub mod cholesky;
+pub mod power;
+
+pub use cholesky::{cholesky, cholesky_inverse, solve_lower, solve_upper};
+pub use power::power_iteration;

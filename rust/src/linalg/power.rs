@@ -1,0 +1,66 @@
+//! Power iteration for the largest eigenvalue of a PSD Gram matrix —
+//! the FISTA step-size constant L = λ_max(X* X*ᵀ) (paper eq. 5a).
+//!
+//! Mirrors python/compile/model.py::power_l so the native fallback and the
+//! `power_{n}` artifact agree (tested in rust/tests/runtime_parity.rs).
+
+use crate::tensor::{ops::matvec, Tensor};
+
+/// λ_max(A)·safety for symmetric PSD A.
+///
+/// Power iteration converges from below, so `safety` (default 1.02 in
+/// configs/presets.json) keeps 1/L a valid descent step.
+pub fn power_iteration(a: &Tensor, iters: usize, safety: f64) -> f64 {
+    let n = a.rows();
+    assert_eq!(n, a.cols());
+    let mut v = vec![1.0f32 / (n as f32).sqrt(); n];
+    for _ in 0..iters {
+        let av = matvec(a, &v);
+        let norm = av.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+        if norm < 1e-30 {
+            return 1e-12 * safety; // zero matrix
+        }
+        for (vi, &ai) in v.iter_mut().zip(&av) {
+            *vi = (ai as f64 / norm) as f32;
+        }
+    }
+    let av = matvec(a, &v);
+    let rayleigh: f64 = v.iter().zip(&av).map(|(&x, &y)| (x as f64) * (y as f64)).sum();
+    rayleigh.max(1e-12) * safety
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::matmul_nt;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = Tensor::from_vec(vec![3, 3], vec![2., 0., 0., 0., 5., 0., 0., 0., 1.]);
+        let l = power_iteration(&a, 100, 1.0);
+        assert!((l - 5.0).abs() < 1e-3, "{l}");
+    }
+
+    #[test]
+    fn upper_bounds_gram_spectrum() {
+        let mut rng = Pcg64::seeded(4);
+        let x = Tensor::from_vec(vec![24, 100], rng.normal_vec(2400, 1.0));
+        let a = matmul_nt(&x, &x);
+        let l = power_iteration(&a, 64, 1.02);
+        // Validate against many random Rayleigh quotients.
+        for _ in 0..50 {
+            let v = rng.normal_vec(24, 1.0);
+            let av = matvec(&a, &v);
+            let num: f64 = v.iter().zip(&av).map(|(&a, &b)| (a as f64) * (b as f64)).sum();
+            let den: f64 = v.iter().map(|&a| (a as f64) * (a as f64)).sum();
+            assert!(num / den <= l * 1.001, "rayleigh {} > L {}", num / den, l);
+        }
+    }
+
+    #[test]
+    fn zero_matrix_guard() {
+        let a = Tensor::zeros(vec![4, 4]);
+        assert!(power_iteration(&a, 10, 1.02) > 0.0);
+    }
+}

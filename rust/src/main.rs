@@ -1,0 +1,7 @@
+//! FISTAPruner CLI entrypoint. See `cli` for subcommands.
+fn main() {
+    if let Err(e) = fistapruner::cli::main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,52 @@
+//! CSV output for bench results (consumed by EXPERIMENTS.md tables).
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Result;
+
+/// Incremental CSV writer with quoting for commas/quotes.
+pub struct CsvWriter {
+    file: std::fs::File,
+}
+
+impl CsvWriter {
+    pub fn create(path: &Path, header: &[&str]) -> Result<CsvWriter> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut w = CsvWriter { file: std::fs::File::create(path)? };
+        w.write_row(header)?;
+        Ok(w)
+    }
+
+    pub fn write_row<S: AsRef<str>>(&mut self, cells: &[S]) -> Result<()> {
+        let line = cells.iter().map(|c| quote(c.as_ref())).collect::<Vec<_>>().join(",");
+        writeln!(self.file, "{line}")?;
+        Ok(())
+    }
+}
+
+fn quote(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_quotes() {
+        let path = std::env::temp_dir().join("fp_csv_test.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        w.write_row(&["1", "x,y"]).unwrap();
+        drop(w);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,\"x,y\"\n");
+        std::fs::remove_file(&path).ok();
+    }
+}

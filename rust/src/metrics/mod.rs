@@ -1,0 +1,9 @@
+//! Reporting: ASCII tables (the paper-style bench output), CSV writers,
+//! and summary statistics.
+
+pub mod csv;
+pub mod stats;
+pub mod table;
+
+pub use stats::{mean, mean_std};
+pub use table::TableBuilder;

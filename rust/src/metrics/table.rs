@@ -1,0 +1,91 @@
+//! ASCII tables shaped like the paper's (method × model, value cells).
+
+/// Builds aligned text tables with a header row.
+pub struct TableBuilder {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TableBuilder {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        TableBuilder {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Format a float cell like the paper (2 decimal places).
+    pub fn f(x: f64) -> String {
+        format!("{x:.2}")
+    }
+
+    /// 4-decimal accuracy cell (paper Table 3 style).
+    pub fn acc(x: f64) -> String {
+        format!("{x:.4}")
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("| ");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!("{c:>w$} | ", w = w));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        let total: usize = widths.iter().map(|w| w + 3).sum::<usize>() + 1;
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    /// Render and print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = TableBuilder::new("T", &["Method", "s1", "s2"]);
+        t.row(vec!["Dense".into(), TableBuilder::f(27.66), TableBuilder::f(22.0)]);
+        t.row(vec!["FISTAPruner".into(), "33.54".into(), "28.89".into()]);
+        let s = t.render();
+        assert!(s.contains("== T =="));
+        assert!(s.contains("FISTAPruner"));
+        assert!(s.contains("27.66"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[1].len(), lines[3].len(), "rows must align");
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_width_panics() {
+        let mut t = TableBuilder::new("T", &["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+}

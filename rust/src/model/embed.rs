@@ -1,0 +1,94 @@
+//! Native embedding lookup — the only piece of the forward pass the
+//! coordinator computes itself (a table gather; everything downstream runs
+//! in the capture/score artifacts).
+
+use anyhow::Result;
+
+use crate::config::{FamilyKind, ModelSpec};
+use crate::tensor::Tensor;
+
+use super::params::ModelParams;
+
+/// Embed token windows into capture-batch inputs.
+///
+/// Returns ([num_batches] of [cb, seq, d] tensors, valid rows per batch).
+/// Windows shorter than a full batch are zero-padded; callers must harvest
+/// activations only from the first `valid` rows.
+pub fn embed_windows(
+    spec: &ModelSpec,
+    params: &ModelParams,
+    windows: &[Vec<i32>],
+    cb: usize,
+) -> Result<(Vec<Tensor>, Vec<usize>)> {
+    let (seq, d) = (spec.seq, spec.d);
+    let embed = params.req("embed")?;
+    let pos = match spec.family {
+        FamilyKind::Topt => Some(params.req("pos")?),
+        FamilyKind::Tllama => None,
+    };
+    let mut batches = Vec::new();
+    let mut valids = Vec::new();
+    for chunk in windows.chunks(cb) {
+        let mut buf = vec![0f32; cb * seq * d];
+        for (r, w) in chunk.iter().enumerate() {
+            assert!(w.len() >= seq, "window shorter than seq");
+            for t in 0..seq {
+                let tok = w[t] as usize;
+                assert!(tok < spec.vocab, "token {tok} out of vocab");
+                let dst = &mut buf[(r * seq + t) * d..(r * seq + t + 1) * d];
+                dst.copy_from_slice(&embed.data()[tok * d..(tok + 1) * d]);
+                if let Some(p) = pos {
+                    for (x, &pv) in dst.iter_mut().zip(&p.data()[t * d..(t + 1) * d]) {
+                        *x += pv;
+                    }
+                }
+            }
+        }
+        batches.push(Tensor::from_vec(vec![cb, seq, d], buf));
+        valids.push(chunk.len());
+    }
+    Ok((batches, valids))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{repo_root, Presets};
+    use crate::model::init::init_params;
+
+    #[test]
+    fn shapes_and_padding() {
+        let presets = Presets::load(&repo_root().unwrap()).unwrap();
+        let spec = presets.model("topt-s1").unwrap();
+        let params = init_params(spec, 1);
+        let windows: Vec<Vec<i32>> = (0..10).map(|i| vec![(i % 96) as i32; spec.seq]).collect();
+        let (batches, valids) = embed_windows(spec, &params, &windows, 8).unwrap();
+        assert_eq!(batches.len(), 2);
+        assert_eq!(valids, vec![8, 2]);
+        assert_eq!(batches[0].shape(), &[8, spec.seq, spec.d]);
+        // padded rows are zero
+        let b1 = &batches[1];
+        let row3 = &b1.data()[3 * spec.seq * spec.d..4 * spec.seq * spec.d];
+        assert!(row3.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn topt_adds_positions() {
+        let presets = Presets::load(&repo_root().unwrap()).unwrap();
+        let spec = presets.model("topt-s1").unwrap();
+        let params = init_params(spec, 2);
+        // same token at two positions must embed differently (pos added)
+        let windows = vec![vec![5i32; spec.seq]];
+        let (batches, _) = embed_windows(spec, &params, &windows, 8).unwrap();
+        let d = spec.d;
+        let t0 = &batches[0].data()[0..d];
+        let t1 = &batches[0].data()[d..2 * d];
+        assert_ne!(t0, t1);
+        // tllama does not add positions
+        let lspec = presets.model("tllama-s1").unwrap();
+        let lparams = init_params(lspec, 2);
+        let (lb, _) = embed_windows(lspec, &lparams, &vec![vec![5i32; lspec.seq]], 8).unwrap();
+        let ld = lspec.d;
+        assert_eq!(&lb[0].data()[0..ld], &lb[0].data()[ld..2 * ld]);
+    }
+}

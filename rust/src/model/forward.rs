@@ -1,0 +1,310 @@
+//! Native rust forward pass — a from-scratch mirror of the L2 JAX graphs.
+//!
+//! Two jobs:
+//! 1. **Differential oracle**: rust/tests/forward_parity.rs checks this
+//!    implementation against the `score_{model}` artifact token-for-token,
+//!    which pins down the cross-language semantics of every architectural
+//!    detail (pre-LN placement, RoPE convention, SwiGLU order, tied head).
+//! 2. **Artifact-free inference**: text generation (`eval::generate`) and
+//!    the sparse-inference demo (`sparse::forward`) run on this path.
+
+use crate::config::{FamilyKind, ModelSpec};
+use crate::tensor::Tensor;
+
+use super::params::ModelParams;
+
+const EPS: f32 = 1e-5;
+
+/// Forward one sequence of token ids; returns logits [len, vocab].
+pub fn logits(spec: &ModelSpec, params: &ModelParams, tokens: &[i32]) -> Tensor {
+    let s = tokens.len();
+    assert!(s <= spec.seq, "sequence longer than model context");
+    let d = spec.d;
+    let embed = params.req("embed").expect("embed");
+    // x: [s, d]
+    let mut x = Tensor::zeros(vec![s, d]);
+    for (t, &tok) in tokens.iter().enumerate() {
+        let row = &embed.data()[tok as usize * d..(tok as usize + 1) * d];
+        x.row_mut(t).copy_from_slice(row);
+    }
+    if spec.family == FamilyKind::Topt {
+        let pos = params.req("pos").expect("pos");
+        for t in 0..s {
+            for (xi, &pv) in x.row_mut(t).iter_mut().zip(pos.row(t)) {
+                *xi += pv;
+            }
+        }
+    }
+    for li in 0..spec.layers {
+        x = layer_forward(spec, params, li, &x, |_name, w, input| {
+            crate::tensor::ops::matmul_nt(input, w)
+        });
+    }
+    x = logits_final_norm(spec, params, &x);
+    // tied unembedding: logits = x @ embedᵀ
+    crate::tensor::ops::matmul_nt(&x, embed)
+}
+
+/// One decoder layer over x [s, d]. `linop(name, W, input) → input @ Wᵀ`
+/// is pluggable so the sparse path can substitute CSR matmuls.
+pub fn layer_forward<F>(
+    spec: &ModelSpec,
+    params: &ModelParams,
+    layer: usize,
+    x: &Tensor,
+    mut linop: F,
+) -> Tensor
+where
+    F: FnMut(&str, &Tensor, &Tensor) -> Tensor,
+{
+    let p = |n: &str| params.req(&format!("l{layer}.{n}")).expect("layer param");
+    let (s, d) = (x.rows(), spec.d);
+    let h = match spec.family {
+        FamilyKind::Topt => layernorm(x, p("ln1_g"), p("ln1_b")),
+        FamilyKind::Tllama => rmsnorm(x, p("rms1_g")),
+    };
+    let mut q = linop("wq", p("wq"), &h);
+    let mut k = linop("wk", p("wk"), &h);
+    let v = {
+        let mut v = linop("wv", p("wv"), &h);
+        if spec.bias {
+            add_bias(&mut v, p("bv"));
+        }
+        v
+    };
+    if spec.bias {
+        add_bias(&mut q, p("bq"));
+        add_bias(&mut k, p("bk"));
+    }
+    if spec.family == FamilyKind::Tllama {
+        rope_inplace(&mut q, spec.heads);
+        rope_inplace(&mut k, spec.heads);
+    }
+    let ctx = causal_attention(&q, &k, &v, spec.heads);
+    let mut attn_out = linop("wo", p("wo"), &ctx);
+    if spec.bias {
+        add_bias(&mut attn_out, p("bo"));
+    }
+    let mut x1 = x.clone();
+    for (a, b) in x1.data_mut().iter_mut().zip(attn_out.data()) {
+        *a += b;
+    }
+
+    let h2 = match spec.family {
+        FamilyKind::Topt => layernorm(&x1, p("ln2_g"), p("ln2_b")),
+        FamilyKind::Tllama => rmsnorm(&x1, p("rms2_g")),
+    };
+    let mlp_out = match spec.family {
+        FamilyKind::Topt => {
+            let mut f1 = linop("w1", p("w1"), &h2);
+            if spec.bias {
+                add_bias(&mut f1, p("b1"));
+            }
+            for v in f1.data_mut() {
+                *v = gelu(*v);
+            }
+            let mut f2 = linop("w2", p("w2"), &f1);
+            if spec.bias {
+                add_bias(&mut f2, p("b2"));
+            }
+            f2
+        }
+        FamilyKind::Tllama => {
+            let gate = linop("wg", p("wg"), &h2);
+            let up = linop("wu", p("wu"), &h2);
+            let mut hidden = Tensor::zeros(vec![s, spec.ffn]);
+            for ((h, &g), &u) in hidden.data_mut().iter_mut().zip(gate.data()).zip(up.data()) {
+                *h = silu(g) * u;
+            }
+            linop("wd", p("wd"), &hidden)
+        }
+    };
+    for (a, b) in x1.data_mut().iter_mut().zip(mlp_out.data()) {
+        *a += b;
+    }
+    let _ = d;
+    x1
+}
+
+/// Final pre-head norm (public so the sparse path can reuse it).
+pub fn logits_final_norm(spec: &ModelSpec, params: &ModelParams, x: &Tensor) -> Tensor {
+    match spec.family {
+        FamilyKind::Topt => layernorm(
+            x,
+            params.req("lnf_g").expect("lnf_g"),
+            params.req("lnf_b").expect("lnf_b"),
+        ),
+        FamilyKind::Tllama => rmsnorm(x, params.req("rmsf_g").expect("rmsf_g")),
+    }
+}
+
+fn layernorm(x: &Tensor, g: &Tensor, b: &Tensor) -> Tensor {
+    let (s, d) = (x.rows(), x.cols());
+    let mut out = Tensor::zeros(vec![s, d]);
+    for t in 0..s {
+        let row = x.row(t);
+        let mean: f32 = row.iter().sum::<f32>() / d as f32;
+        let var: f32 = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + EPS).sqrt();
+        for (j, o) in out.row_mut(t).iter_mut().enumerate() {
+            *o = (row[j] - mean) * inv * g.data()[j] + b.data()[j];
+        }
+    }
+    out
+}
+
+fn rmsnorm(x: &Tensor, g: &Tensor) -> Tensor {
+    let (s, d) = (x.rows(), x.cols());
+    let mut out = Tensor::zeros(vec![s, d]);
+    for t in 0..s {
+        let row = x.row(t);
+        let ms: f32 = row.iter().map(|&v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + EPS).sqrt();
+        for (j, o) in out.row_mut(t).iter_mut().enumerate() {
+            *o = row[j] * inv * g.data()[j];
+        }
+    }
+    out
+}
+
+fn add_bias(x: &mut Tensor, b: &Tensor) {
+    let n = x.cols();
+    for row in x.data_mut().chunks_mut(n) {
+        for (v, &bv) in row.iter_mut().zip(b.data()) {
+            *v += bv;
+        }
+    }
+}
+
+fn gelu(x: f32) -> f32 {
+    // tanh approximation — matches jax.nn.gelu's default
+    0.5 * x * (1.0 + ((2.0 / std::f32::consts::PI).sqrt() * (x + 0.044715 * x * x * x)).tanh())
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// RoPE over [s, d] with `heads` heads (first/second half pairing, matching
+/// python/compile/model.py::_rope).
+fn rope_inplace(x: &mut Tensor, heads: usize) {
+    let (s, d) = (x.rows(), x.cols());
+    let hd = d / heads;
+    let half = hd / 2;
+    for t in 0..s {
+        let row = x.row_mut(t);
+        for h in 0..heads {
+            let base = h * hd;
+            for i in 0..half {
+                let freq = (10000f32).powf(-(i as f32) / half as f32);
+                let ang = t as f32 * freq;
+                let (sin, cos) = ang.sin_cos();
+                let a = row[base + i];
+                let b = row[base + half + i];
+                row[base + i] = a * cos - b * sin;
+                row[base + half + i] = a * sin + b * cos;
+            }
+        }
+    }
+}
+
+/// Causal multi-head attention over [s, d] projections.
+fn causal_attention(q: &Tensor, k: &Tensor, v: &Tensor, heads: usize) -> Tensor {
+    let (s, d) = (q.rows(), q.cols());
+    let hd = d / heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out = Tensor::zeros(vec![s, d]);
+    let mut scores = vec![0f32; s];
+    for h in 0..heads {
+        let base = h * hd;
+        for t in 0..s {
+            // scores over positions 0..=t
+            let qrow = &q.row(t)[base..base + hd];
+            let mut max = f32::NEG_INFINITY;
+            for (u, sc) in scores.iter_mut().enumerate().take(t + 1) {
+                let krow = &k.row(u)[base..base + hd];
+                let dot: f32 = qrow.iter().zip(krow).map(|(&a, &b)| a * b).sum();
+                *sc = dot * scale;
+                max = max.max(*sc);
+            }
+            let mut z = 0f32;
+            for sc in scores.iter_mut().take(t + 1) {
+                *sc = (*sc - max).exp();
+                z += *sc;
+            }
+            let orow = &mut out.row_mut(t)[base..base + hd];
+            for (u, &w) in scores.iter().enumerate().take(t + 1) {
+                let vrow = &v.row(u)[base..base + hd];
+                let wn = w / z;
+                for (o, &vv) in orow.iter_mut().zip(vrow) {
+                    *o += wn * vv;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Per-token NLL of `tokens[1..]` given the prefix (native mirror of the
+/// score artifact).
+pub fn nll(spec: &ModelSpec, params: &ModelParams, tokens: &[i32]) -> f64 {
+    let lg = logits(spec, params, &tokens[..tokens.len() - 1]);
+    let vocab = spec.vocab;
+    let mut total = 0f64;
+    for t in 0..lg.rows() {
+        let row = lg.row(t);
+        let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let z: f64 = row.iter().map(|&v| ((v - max) as f64).exp()).sum();
+        let tgt = tokens[t + 1] as usize;
+        assert!(tgt < vocab);
+        total += -((row[tgt] - max) as f64 - z.ln());
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{repo_root, Presets};
+    use crate::model::init::init_params;
+
+    #[test]
+    fn logits_shapes_and_finite() {
+        let presets = Presets::load(&repo_root().unwrap()).unwrap();
+        for m in ["topt-s1", "tllama-s1"] {
+            let spec = presets.model(m).unwrap();
+            let params = init_params(spec, 3);
+            let tokens: Vec<i32> = (0..16).map(|i| (i * 5) % 96).collect();
+            let lg = logits(spec, &params, &tokens);
+            assert_eq!(lg.shape(), &[16, 96]);
+            assert!(lg.data().iter().all(|v| v.is_finite()), "{m}");
+        }
+    }
+
+    #[test]
+    fn causality_native() {
+        let presets = Presets::load(&repo_root().unwrap()).unwrap();
+        let spec = presets.model("tllama-s1").unwrap();
+        let params = init_params(spec, 5);
+        let a: Vec<i32> = (0..12).map(|i| i % 96).collect();
+        let mut b = a.clone();
+        *b.last_mut().unwrap() = 77;
+        let la = logits(spec, &params, &a);
+        let lb = logits(spec, &params, &b);
+        for t in 0..11 {
+            assert_eq!(la.row(t), lb.row(t), "position {t} changed");
+        }
+        assert_ne!(la.row(11), lb.row(11));
+    }
+
+    #[test]
+    fn nll_near_uniform_for_random_model() {
+        let presets = Presets::load(&repo_root().unwrap()).unwrap();
+        let spec = presets.model("topt-s1").unwrap();
+        let params = init_params(spec, 7);
+        let tokens: Vec<i32> = (0..33).map(|i| (i * 7) % 96).collect();
+        let per_tok = nll(spec, &params, &tokens) / 32.0;
+        let uniform = (96f64).ln();
+        assert!((per_tok - uniform).abs() < 1.0, "per-token nll {per_tok} vs ln96 {uniform}");
+    }
+}

@@ -1,0 +1,59 @@
+//! Deterministic parameter initialization (GPT-2-style scheme).
+
+use crate::config::ModelSpec;
+use crate::tensor::Tensor;
+use crate::util::Pcg64;
+
+use super::params::ModelParams;
+
+const INIT_STD: f32 = 0.02;
+
+/// Initialize: N(0, 0.02²) for matrices/embeddings, 1 for norm gains,
+/// 0 for biases. Residual-output projections (wo, w2/wd) are scaled by
+/// 1/√(2·layers) per GPT-2 to keep the residual stream variance flat.
+pub fn init_params(spec: &ModelSpec, seed: u64) -> ModelParams {
+    let mut rng = Pcg64::new(seed, 31);
+    let resid_scale = 1.0 / ((2 * spec.layers) as f32).sqrt();
+    ModelParams::build(spec, |ps| {
+        let len: usize = ps.shape.iter().product();
+        let is_gain = ps.name.ends_with("_g");
+        let is_bias = ps.name.contains(".b") || ps.name.ends_with("_b");
+        if is_gain {
+            Tensor::from_vec(ps.shape.clone(), vec![1.0; len])
+        } else if is_bias {
+            Tensor::zeros(ps.shape.clone())
+        } else {
+            let mut std = INIT_STD;
+            if ps.name.ends_with("wo") || ps.name.ends_with("w2") || ps.name.ends_with("wd") {
+                std *= resid_scale;
+            }
+            Tensor::from_vec(ps.shape.clone(), rng.normal_vec(len, std))
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{repo_root, Presets};
+
+    #[test]
+    fn deterministic_and_structured() {
+        let presets = Presets::load(&repo_root().unwrap()).unwrap();
+        let spec = presets.model("topt-s1").unwrap();
+        let a = init_params(spec, 1);
+        let b = init_params(spec, 1);
+        for ((_, x), (_, y)) in a.iter().zip(b.iter()) {
+            assert_eq!(x, y);
+        }
+        let c = init_params(spec, 2);
+        assert_ne!(a.req("embed").unwrap(), c.req("embed").unwrap());
+        // gains are ones, biases zeros
+        assert!(a.req("l0.ln1_g").unwrap().data().iter().all(|&v| v == 1.0));
+        assert!(a.req("l0.bq").unwrap().data().iter().all(|&v| v == 0.0));
+        // weights have roughly the right std
+        let w = a.req("l0.wq").unwrap();
+        let std = (w.data().iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / w.len() as f64).sqrt();
+        assert!((std - 0.02).abs() < 0.005, "std {std}");
+    }
+}

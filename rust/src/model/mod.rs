@@ -1,0 +1,15 @@
+//! Model substrate: parameter specifications (mirroring
+//! python/compile/shapes.py exactly — validated against
+//! artifacts/manifest.json in tests), parameter containers, initialization,
+//! and the pruned-operator enumeration the coordinator iterates over.
+
+pub mod embed;
+pub mod forward;
+pub mod init;
+pub mod ops;
+pub mod params;
+pub mod spec;
+
+pub use ops::{pruned_ops, CaptureKey, PrunedOp};
+pub use params::ModelParams;
+pub use spec::{layer_param_specs, model_param_specs, ParamSpec};

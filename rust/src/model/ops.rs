@@ -1,0 +1,110 @@
+//! Enumeration of the pruned linear operators, in the paper's intra-layer
+//! sequential order (Fig. 2: q,k,v → o → MLP in → MLP out).
+//!
+//! Mirrors python/compile/shapes.py::pruned_ops + aot.py::CAPTURE_KEY;
+//! checked against artifacts/manifest.json in rust/tests/manifest_parity.rs.
+
+use crate::config::{FamilyKind, ModelSpec};
+
+/// Which capture-artifact output feeds an operator (paper Fig. 2 topology).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CaptureKey {
+    /// Post-norm input of wq/wk/wv.
+    AttnIn = 0,
+    /// Merged attention context — input of wo.
+    OIn = 1,
+    /// Post-norm input of the MLP first matmuls (w1 / wg+wu).
+    MlpIn = 2,
+    /// Hidden MLP activation — input of w2 / wd.
+    Mlp2In = 3,
+}
+
+impl CaptureKey {
+    /// Index into the capture artifact's output tuple.
+    pub fn output_index(&self) -> usize {
+        *self as usize
+    }
+
+    pub fn parse(s: &str) -> Option<CaptureKey> {
+        match s {
+            "attn_in" => Some(CaptureKey::AttnIn),
+            "o_in" => Some(CaptureKey::OIn),
+            "mlp_in" => Some(CaptureKey::MlpIn),
+            "mlp2_in" => Some(CaptureKey::Mlp2In),
+            _ => None,
+        }
+    }
+}
+
+/// One pruned linear operator within a decoder layer.
+#[derive(Clone, Debug)]
+pub struct PrunedOp {
+    /// Bare name within the layer, e.g. "wq" (parameter is `l{i}.wq`).
+    pub name: &'static str,
+    pub m: usize,
+    pub n: usize,
+    pub capture: CaptureKey,
+}
+
+/// Pruned operators in the sequential intra-layer order.
+pub fn pruned_ops(spec: &ModelSpec) -> Vec<PrunedOp> {
+    let (d, ffn) = (spec.d, spec.ffn);
+    let mut ops = vec![
+        PrunedOp { name: "wq", m: d, n: d, capture: CaptureKey::AttnIn },
+        PrunedOp { name: "wk", m: d, n: d, capture: CaptureKey::AttnIn },
+        PrunedOp { name: "wv", m: d, n: d, capture: CaptureKey::AttnIn },
+        PrunedOp { name: "wo", m: d, n: d, capture: CaptureKey::OIn },
+    ];
+    match spec.family {
+        FamilyKind::Topt => {
+            ops.push(PrunedOp { name: "w1", m: ffn, n: d, capture: CaptureKey::MlpIn });
+            ops.push(PrunedOp { name: "w2", m: d, n: ffn, capture: CaptureKey::Mlp2In });
+        }
+        FamilyKind::Tllama => {
+            ops.push(PrunedOp { name: "wg", m: ffn, n: d, capture: CaptureKey::MlpIn });
+            ops.push(PrunedOp { name: "wu", m: ffn, n: d, capture: CaptureKey::MlpIn });
+            ops.push(PrunedOp { name: "wd", m: d, n: ffn, capture: CaptureKey::Mlp2In });
+        }
+    }
+    ops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{repo_root, Presets};
+
+    #[test]
+    fn op_sets_per_family() {
+        let p = Presets::load(&repo_root().unwrap()).unwrap();
+        let t = pruned_ops(p.model("topt-s3").unwrap());
+        assert_eq!(t.len(), 6);
+        assert_eq!(t[5].name, "w2");
+        assert_eq!(t[5].n, 512);
+        let l = pruned_ops(p.model("tllama-s3").unwrap());
+        assert_eq!(l.len(), 7);
+        assert_eq!(l[4].name, "wg");
+        assert_eq!(l[4].capture, CaptureKey::MlpIn);
+    }
+
+    #[test]
+    fn capture_ordering_is_topological() {
+        // Operators must appear after the capture point they consume.
+        let p = Presets::load(&repo_root().unwrap()).unwrap();
+        for m in ["topt-s1", "tllama-s1"] {
+            let ops = pruned_ops(p.model(m).unwrap());
+            let mut max_seen = 0usize;
+            for op in &ops {
+                assert!(op.capture.output_index() >= max_seen.saturating_sub(1));
+                max_seen = max_seen.max(op.capture.output_index());
+            }
+        }
+    }
+
+    #[test]
+    fn capture_key_parse() {
+        assert_eq!(CaptureKey::parse("attn_in"), Some(CaptureKey::AttnIn));
+        assert_eq!(CaptureKey::parse("mlp2_in"), Some(CaptureKey::Mlp2In));
+        assert_eq!(CaptureKey::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,177 @@
+//! Parameter container: named tensors in canonical spec order.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{ModelSpec, Presets};
+use crate::tensor::Tensor;
+
+use super::spec::{model_param_specs, ParamSpec};
+
+/// A model's parameters, stored in the canonical artifact-input order.
+#[derive(Clone)]
+pub struct ModelParams {
+    model: String,
+    specs: Vec<ParamSpec>,
+    tensors: Vec<Tensor>,
+    index: BTreeMap<String, usize>,
+}
+
+impl ModelParams {
+    /// Build from spec + per-parameter constructor.
+    pub fn build(spec: &ModelSpec, mut f: impl FnMut(&ParamSpec) -> Tensor) -> Self {
+        let specs = model_param_specs(spec);
+        let tensors: Vec<Tensor> = specs
+            .iter()
+            .map(|s| {
+                let t = f(s);
+                assert_eq!(t.shape(), s.shape.as_slice(), "init shape mismatch for {}", s.name);
+                t
+            })
+            .collect();
+        let index = specs.iter().enumerate().map(|(i, s)| (s.name.clone(), i)).collect();
+        ModelParams { model: spec.name(), specs, tensors, index }
+    }
+
+    /// Reassemble from a name→tensor map (checkpoint load); validates the
+    /// tensor set exactly matches the model spec.
+    pub fn from_map(model: &str, mut map: BTreeMap<String, Tensor>) -> Result<Self> {
+        let root = crate::config::repo_root()?;
+        let presets = Presets::load(&root)?;
+        let spec = presets.model(model)?;
+        let specs = model_param_specs(spec);
+        let mut tensors = Vec::with_capacity(specs.len());
+        for s in &specs {
+            let t = map
+                .remove(&s.name)
+                .with_context(|| format!("checkpoint missing parameter '{}'", s.name))?;
+            if t.shape() != s.shape.as_slice() {
+                bail!("parameter '{}' has shape {:?}, expected {:?}", s.name, t.shape(), s.shape);
+            }
+            tensors.push(t);
+        }
+        if !map.is_empty() {
+            bail!("checkpoint has unexpected tensors: {:?}", map.keys().collect::<Vec<_>>());
+        }
+        let index = specs.iter().enumerate().map(|(i, s)| (s.name.clone(), i)).collect();
+        Ok(ModelParams { model: model.to_string(), specs, tensors, index })
+    }
+
+    pub fn model_name(&self) -> &str {
+        &self.model
+    }
+
+    pub fn specs(&self) -> &[ParamSpec] {
+        &self.specs
+    }
+
+    pub fn tensors(&self) -> &[Tensor] {
+        &self.tensors
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.index.get(name).map(|&i| &self.tensors[i])
+    }
+
+    pub fn req(&self, name: &str) -> Result<&Tensor> {
+        self.get(name).ok_or_else(|| anyhow::anyhow!("no parameter '{name}' in {}", self.model))
+    }
+
+    pub fn set(&mut self, name: &str, t: Tensor) -> Result<()> {
+        let &i = self
+            .index
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("no parameter '{name}' in {}", self.model))?;
+        if t.shape() != self.specs[i].shape.as_slice() {
+            bail!("set('{name}'): shape {:?} != spec {:?}", t.shape(), self.specs[i].shape);
+        }
+        self.tensors[i] = t;
+        Ok(())
+    }
+
+    /// Replace all tensors (e.g. after a train step); shapes are checked.
+    pub fn replace_all(&mut self, tensors: Vec<Tensor>) -> Result<()> {
+        if tensors.len() != self.specs.len() {
+            bail!("replace_all: {} tensors for {} specs", tensors.len(), self.specs.len());
+        }
+        for (s, t) in self.specs.iter().zip(&tensors) {
+            if t.shape() != s.shape.as_slice() {
+                bail!("replace_all('{}'): shape {:?} != {:?}", s.name, t.shape(), s.shape);
+            }
+        }
+        self.tensors = tensors;
+        Ok(())
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Tensor)> {
+        self.specs.iter().zip(&self.tensors).map(|(s, t)| (s.name.as_str(), t))
+    }
+
+    /// The tensors of one decoder layer, in capture-artifact order.
+    pub fn layer_tensors(&self, spec: &ModelSpec, layer: usize) -> Vec<&Tensor> {
+        super::spec::layer_param_specs(spec, Some(layer))
+            .iter()
+            .map(|s| self.get(&s.name).expect("layer param must exist"))
+            .collect()
+    }
+
+    /// Overall sparsity of the pruned (2-D, decaying) weights.
+    pub fn weight_sparsity(&self) -> f64 {
+        let (mut zeros, mut total) = (0usize, 0usize);
+        for (s, t) in self.specs.iter().zip(&self.tensors) {
+            if s.decay {
+                zeros += t.data().iter().filter(|&&x| x == 0.0).count();
+                total += t.len();
+            }
+        }
+        if total == 0 {
+            0.0
+        } else {
+            zeros as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::repo_root;
+    use crate::model::init;
+
+    #[test]
+    fn build_get_set_roundtrip() {
+        let root = repo_root().unwrap();
+        let presets = Presets::load(&root).unwrap();
+        let spec = presets.model("topt-s1").unwrap();
+        let mut p = init::init_params(spec, 3);
+        assert_eq!(p.model_name(), "topt-s1");
+        let w = p.req("l0.wq").unwrap().clone();
+        assert_eq!(w.shape(), &[64, 64]);
+        let z = Tensor::zeros(vec![64, 64]);
+        p.set("l0.wq", z.clone()).unwrap();
+        assert_eq!(p.req("l0.wq").unwrap(), &z);
+        assert!(p.set("l0.wq", Tensor::zeros(vec![2, 2])).is_err());
+        assert!(p.set("nope", z).is_err());
+    }
+
+    #[test]
+    fn from_map_validates() {
+        let root = repo_root().unwrap();
+        let presets = Presets::load(&root).unwrap();
+        let spec = presets.model("tllama-s1").unwrap();
+        let p = init::init_params(spec, 1);
+        let map: BTreeMap<String, Tensor> =
+            p.iter().map(|(n, t)| (n.to_string(), t.clone())).collect();
+        let q = ModelParams::from_map("tllama-s1", map.clone()).unwrap();
+        assert_eq!(q.tensors().len(), p.tensors().len());
+        // missing tensor
+        let mut bad = map.clone();
+        bad.remove("l0.wq");
+        assert!(ModelParams::from_map("tllama-s1", bad).is_err());
+        // extra tensor
+        let mut extra = map;
+        extra.insert("bogus".into(), Tensor::zeros(vec![1]));
+        assert!(ModelParams::from_map("tllama-s1", extra).is_err());
+    }
+}

@@ -1,0 +1,126 @@
+//! Parameter specifications — the rust mirror of
+//! python/compile/shapes.py::{layer_param_specs, model_param_specs}.
+//!
+//! The artifact input order is THE contract between the two languages:
+//! rust/tests/manifest_parity.rs asserts this module agrees with
+//! artifacts/manifest.json name-for-name and shape-for-shape.
+
+use crate::config::{FamilyKind, ModelSpec};
+
+/// One model parameter: canonical name, shape, weight-decay flag.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub decay: bool,
+}
+
+impl ParamSpec {
+    fn new(name: impl Into<String>, shape: Vec<usize>, decay: bool) -> Self {
+        ParamSpec { name: name.into(), shape, decay }
+    }
+}
+
+/// Parameters of one decoder layer in canonical order.
+/// `layer` = Some(i) prefixes names with `l{i}.` (full model); None is the
+/// layer-generic order used by the capture artifact.
+pub fn layer_param_specs(spec: &ModelSpec, layer: Option<usize>) -> Vec<ParamSpec> {
+    let p = layer.map(|i| format!("l{i}.")).unwrap_or_default();
+    let (d, ffn) = (spec.d, spec.ffn);
+    let mut out = Vec::new();
+    match spec.family {
+        FamilyKind::Topt => {
+            out.push(ParamSpec::new(format!("{p}ln1_g"), vec![d], false));
+            out.push(ParamSpec::new(format!("{p}ln1_b"), vec![d], false));
+            for nm in ["wq", "wk", "wv", "wo"] {
+                out.push(ParamSpec::new(format!("{p}{nm}"), vec![d, d], true));
+                if spec.bias {
+                    out.push(ParamSpec::new(format!("{p}b{}", &nm[1..2]), vec![d], false));
+                }
+            }
+            out.push(ParamSpec::new(format!("{p}ln2_g"), vec![d], false));
+            out.push(ParamSpec::new(format!("{p}ln2_b"), vec![d], false));
+            out.push(ParamSpec::new(format!("{p}w1"), vec![ffn, d], true));
+            if spec.bias {
+                out.push(ParamSpec::new(format!("{p}b1"), vec![ffn], false));
+            }
+            out.push(ParamSpec::new(format!("{p}w2"), vec![d, ffn], true));
+            if spec.bias {
+                out.push(ParamSpec::new(format!("{p}b2"), vec![d], false));
+            }
+        }
+        FamilyKind::Tllama => {
+            out.push(ParamSpec::new(format!("{p}rms1_g"), vec![d], false));
+            for nm in ["wq", "wk", "wv", "wo"] {
+                out.push(ParamSpec::new(format!("{p}{nm}"), vec![d, d], true));
+            }
+            out.push(ParamSpec::new(format!("{p}rms2_g"), vec![d], false));
+            out.push(ParamSpec::new(format!("{p}wg"), vec![ffn, d], true));
+            out.push(ParamSpec::new(format!("{p}wu"), vec![ffn, d], true));
+            out.push(ParamSpec::new(format!("{p}wd"), vec![d, ffn], true));
+        }
+    }
+    out
+}
+
+/// All model parameters in the canonical (manifest) order.
+pub fn model_param_specs(spec: &ModelSpec) -> Vec<ParamSpec> {
+    let mut out = vec![ParamSpec::new("embed", vec![spec.vocab, spec.d], false)];
+    if spec.family == FamilyKind::Topt {
+        out.push(ParamSpec::new("pos", vec![spec.seq, spec.d], false));
+    }
+    for li in 0..spec.layers {
+        out.extend(layer_param_specs(spec, Some(li)));
+    }
+    match spec.family {
+        FamilyKind::Topt => {
+            out.push(ParamSpec::new("lnf_g", vec![spec.d], false));
+            out.push(ParamSpec::new("lnf_b", vec![spec.d], false));
+        }
+        FamilyKind::Tllama => {
+            out.push(ParamSpec::new("rmsf_g", vec![spec.d], false));
+        }
+    }
+    out
+}
+
+/// Total parameter count of the model.
+pub fn param_count(spec: &ModelSpec) -> usize {
+    model_param_specs(spec).iter().map(|s| s.shape.iter().product::<usize>()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{repo_root, Presets};
+
+    #[test]
+    fn topt_has_biases_tllama_does_not() {
+        let p = Presets::load(&repo_root().unwrap()).unwrap();
+        let t = model_param_specs(p.model("topt-s1").unwrap());
+        assert!(t.iter().any(|s| s.name == "l0.bq"));
+        assert!(t.iter().any(|s| s.name == "pos"));
+        let l = model_param_specs(p.model("tllama-s1").unwrap());
+        assert!(l.iter().all(|s| !s.name.contains(".b")));
+        assert!(l.iter().any(|s| s.name == "l1.wg"));
+        assert!(!l.iter().any(|s| s.name == "pos"));
+    }
+
+    #[test]
+    fn decay_only_on_matrices() {
+        let p = Presets::load(&repo_root().unwrap()).unwrap();
+        for m in ["topt-s2", "tllama-s2"] {
+            for s in model_param_specs(p.model(m).unwrap()) {
+                assert_eq!(s.decay, s.shape.len() == 2 && s.name != "embed" && s.name != "pos", "{}", s.name);
+            }
+        }
+    }
+
+    #[test]
+    fn param_counts_scale_with_size() {
+        let p = Presets::load(&repo_root().unwrap()).unwrap();
+        let c1 = param_count(p.model("topt-s1").unwrap());
+        let c5 = param_count(p.model("topt-s5").unwrap());
+        assert!(c5 > 5 * c1, "s5 ({c5}) should dwarf s1 ({c1})");
+    }
+}

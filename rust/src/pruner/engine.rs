@@ -1,0 +1,231 @@
+//! Solver backends: the XLA artifact path (production) and the native
+//! reference. Both implement `SolverEngine`, so Algorithm 1 and the
+//! pruning unit are backend-agnostic; parity between the two is asserted
+//! in rust/tests/engine_parity.rs.
+
+use anyhow::{bail, Result};
+
+use crate::config::FistaCfg;
+use crate::runtime::session::{Arg, Session};
+use crate::tensor::{ops, Tensor};
+
+/// Backend-agnostic per-matrix solver operations.
+pub trait SolverEngine {
+    /// Gram accumulation over [n, p] activations (any p):
+    /// returns (A = Xs Xsᵀ, C = Xd Xsᵀ, D = Xd Xdᵀ).
+    fn gram(&self, xd: &Tensor, xs: &Tensor) -> Result<(Tensor, Tensor, Tensor)>;
+
+    /// Per-op prep: (B = W·C, c = tr(W D Wᵀ)).
+    fn prep(&self, w: &Tensor, c: &Tensor, d: &Tensor) -> Result<(Tensor, f64)>;
+
+    /// L = λ_max(A) (with safety factor).
+    fn power(&self, a: &Tensor) -> Result<f64>;
+
+    /// FISTA solve from warm start; returns (W_K, iterations run).
+    fn fista(&self, a: &Tensor, b: &Tensor, w0: &Tensor, lam: f64, l: f64) -> Result<(Tensor, usize)>;
+
+    /// quad(A,B,W) = tr(W A Wᵀ) − 2⟨W,B⟩.
+    fn obj(&self, a: &Tensor, b: &Tensor, w: &Tensor) -> Result<f64>;
+}
+
+// ---------------------------------------------------------------------
+// Native reference engine
+// ---------------------------------------------------------------------
+
+/// Pure-rust engine (no artifacts needed). Mirrors the L2 graphs.
+pub struct NativeEngine {
+    pub cfg: FistaCfg,
+}
+
+impl Default for NativeEngine {
+    fn default() -> Self {
+        NativeEngine {
+            cfg: FistaCfg { max_iters: 20, power_iters: 64, power_safety: 1.02, stop_tol: 1e-6 },
+        }
+    }
+}
+
+impl SolverEngine for NativeEngine {
+    fn gram(&self, xd: &Tensor, xs: &Tensor) -> Result<(Tensor, Tensor, Tensor)> {
+        if xd.shape() != xs.shape() {
+            bail!("gram: xd {:?} != xs {:?}", xd.shape(), xs.shape());
+        }
+        Ok((ops::matmul_nt(xs, xs), ops::matmul_nt(xd, xs), ops::matmul_nt(xd, xd)))
+    }
+
+    fn prep(&self, w: &Tensor, c: &Tensor, d: &Tensor) -> Result<(Tensor, f64)> {
+        let b = ops::matmul(w, c);
+        let wd = ops::matmul(w, d);
+        Ok((b, ops::dot(&wd, w)))
+    }
+
+    fn power(&self, a: &Tensor) -> Result<f64> {
+        Ok(crate::linalg::power_iteration(a, self.cfg.power_iters, self.cfg.power_safety))
+    }
+
+    fn fista(&self, a: &Tensor, b: &Tensor, w0: &Tensor, lam: f64, l: f64) -> Result<(Tensor, usize)> {
+        Ok(super::fista::fista_solve(a, b, w0, lam, l, self.cfg.max_iters, self.cfg.stop_tol))
+    }
+
+    fn obj(&self, a: &Tensor, b: &Tensor, w: &Tensor) -> Result<f64> {
+        Ok(ops::quad_obj(a, b, w))
+    }
+}
+
+// ---------------------------------------------------------------------
+// XLA artifact engine
+// ---------------------------------------------------------------------
+
+/// Production engine: all solver math runs in the AOT artifacts through a
+/// PJRT session (Pallas FISTA kernel, Gram matmul kernel, fused prep).
+pub struct XlaEngine<'s> {
+    session: &'s Session,
+}
+
+impl<'s> XlaEngine<'s> {
+    pub fn new(session: &'s Session) -> Self {
+        XlaEngine { session }
+    }
+
+    pub fn session(&self) -> &Session {
+        self.session
+    }
+
+    /// Slice [n, p] activations into zero-padded gram_chunk columns.
+    fn chunked(&self, x: &Tensor, chunk: usize) -> Vec<Tensor> {
+        let (n, p) = (x.rows(), x.cols());
+        let mut out = Vec::with_capacity(p.div_ceil(chunk));
+        for c0 in (0..p).step_by(chunk) {
+            let c1 = (c0 + chunk).min(p);
+            let mut buf = vec![0f32; n * chunk];
+            for r in 0..n {
+                let src = &x.data()[r * p + c0..r * p + c1];
+                buf[r * chunk..r * chunk + (c1 - c0)].copy_from_slice(src);
+            }
+            out.push(Tensor::from_vec(vec![n, chunk], buf));
+        }
+        out
+    }
+}
+
+impl SolverEngine for XlaEngine<'_> {
+    fn gram(&self, xd: &Tensor, xs: &Tensor) -> Result<(Tensor, Tensor, Tensor)> {
+        if xd.shape() != xs.shape() {
+            bail!("gram: xd {:?} != xs {:?}", xd.shape(), xs.shape());
+        }
+        let n = xd.rows();
+        let chunk = self.session.manifest().gram_chunk;
+        let name = format!("gram_{n}");
+        let mut acc: Option<(Tensor, Tensor, Tensor)> = None;
+        for (cd, cs) in self.chunked(xd, chunk).iter().zip(self.chunked(xs, chunk).iter()) {
+            let out = self.session.run(&name, &[Arg::T(cd), Arg::T(cs)])?;
+            let [a, c, d] = <[Tensor; 3]>::try_from(out).map_err(|_| anyhow::anyhow!("gram arity"))?;
+            acc = Some(match acc {
+                None => (a, c, d),
+                Some((pa, pc, pd)) => (
+                    ops::add_scaled(&pa, &a, 1.0),
+                    ops::add_scaled(&pc, &c, 1.0),
+                    ops::add_scaled(&pd, &d, 1.0),
+                ),
+            });
+        }
+        acc.ok_or_else(|| anyhow::anyhow!("gram: empty activations"))
+    }
+
+    fn prep(&self, w: &Tensor, c: &Tensor, d: &Tensor) -> Result<(Tensor, f64)> {
+        let name = format!("prep_{}x{}", w.rows(), w.cols());
+        let out = self.session.run(&name, &[Arg::T(w), Arg::T(c), Arg::T(d)])?;
+        let [b, cn] = <[Tensor; 2]>::try_from(out).map_err(|_| anyhow::anyhow!("prep arity"))?;
+        Ok((b, cn.first() as f64))
+    }
+
+    fn power(&self, a: &Tensor) -> Result<f64> {
+        let name = format!("power_{}", a.rows());
+        let out = self.session.run(&name, &[Arg::T(a)])?;
+        Ok(out[0].first() as f64)
+    }
+
+    fn fista(&self, a: &Tensor, b: &Tensor, w0: &Tensor, lam: f64, l: f64) -> Result<(Tensor, usize)> {
+        let name = format!("fista_{}x{}", w0.rows(), w0.cols());
+        let out = self.session.run(
+            &name,
+            &[Arg::T(a), Arg::T(b), Arg::T(w0), Arg::Scalar(lam as f32), Arg::Scalar(l as f32)],
+        )?;
+        let [w, k] = <[Tensor; 2]>::try_from(out).map_err(|_| anyhow::anyhow!("fista arity"))?;
+        Ok((w, k.first() as usize))
+    }
+
+    fn obj(&self, a: &Tensor, b: &Tensor, w: &Tensor) -> Result<f64> {
+        let name = format!("obj_{}x{}", w.rows(), w.cols());
+        let out = self.session.run(&name, &[Arg::T(a), Arg::T(b), Arg::T(w)])?;
+        Ok(out[0].first() as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+    use crate::util::Pcg64;
+    use std::sync::Arc;
+
+    #[test]
+    fn xla_gram_chunks_equal_native_gram() {
+        let session = Session::new(Arc::new(Manifest::load_default().unwrap())).unwrap();
+        let xla = XlaEngine::new(&session);
+        let native = NativeEngine::default();
+        let mut rng = Pcg64::seeded(11);
+        // p deliberately NOT a multiple of gram_chunk to exercise padding
+        let (n, p) = (64, 700);
+        let xd = Tensor::from_vec(vec![n, p], rng.normal_vec(n * p, 1.0));
+        let xs = Tensor::from_vec(vec![n, p], rng.normal_vec(n * p, 1.0));
+        let (a1, c1, d1) = xla.gram(&xd, &xs).unwrap();
+        let (a2, c2, d2) = native.gram(&xd, &xs).unwrap();
+        for (x, y) in [(&a1, &a2), (&c1, &c2), (&d1, &d2)] {
+            assert!(ops::frob_dist(x, y) < 1e-2 * y.frob_norm().max(1.0));
+        }
+    }
+
+    #[test]
+    fn xla_fista_matches_native() {
+        let session = Session::new(Arc::new(Manifest::load_default().unwrap())).unwrap();
+        let xla = XlaEngine::new(&session);
+        let native = NativeEngine::default();
+        let mut rng = Pcg64::seeded(12);
+        let (m, n, p) = (64, 64, 256);
+        let w = Tensor::from_vec(vec![m, n], rng.normal_vec(m * n, 1.0));
+        let x = Tensor::from_vec(vec![n, p], rng.normal_vec(n * p, 0.5));
+        let (a, c, d) = native.gram(&x, &x).unwrap();
+        let (b, _) = native.prep(&w, &c, &d).unwrap();
+        let l = native.power(&a).unwrap();
+        let w0 = Tensor::zeros(vec![m, n]);
+        let (w_xla, k_xla) = xla.fista(&a, &b, &w0, 0.05, l).unwrap();
+        let (w_nat, k_nat) = native.fista(&a, &b, &w0, 0.05, l).unwrap();
+        assert_eq!(k_xla, k_nat, "iteration counts must agree");
+        assert!(
+            ops::frob_dist(&w_xla, &w_nat) < 1e-3 * w_nat.frob_norm().max(1.0),
+            "dist {}",
+            ops::frob_dist(&w_xla, &w_nat)
+        );
+        let _ = d;
+    }
+
+    #[test]
+    fn xla_prep_and_obj_match_native() {
+        let session = Session::new(Arc::new(Manifest::load_default().unwrap())).unwrap();
+        let xla = XlaEngine::new(&session);
+        let native = NativeEngine::default();
+        let mut rng = Pcg64::seeded(13);
+        let (m, n) = (256, 64);
+        let w = Tensor::from_vec(vec![m, n], rng.normal_vec(m * n, 1.0));
+        let x = Tensor::from_vec(vec![n, 300], rng.normal_vec(n * 300, 0.5));
+        let (a, c, d) = native.gram(&x, &x).unwrap();
+        let (b_x, cn_x) = xla.prep(&w, &c, &d).unwrap();
+        let (b_n, cn_n) = native.prep(&w, &c, &d).unwrap();
+        assert!(ops::frob_dist(&b_x, &b_n) < 1e-2 * b_n.frob_norm());
+        assert!((cn_x - cn_n).abs() < 1e-2 * cn_n.abs());
+        let o_x = xla.obj(&a, &b_n, &w).unwrap();
+        let o_n = native.obj(&a, &b_n, &w).unwrap();
+        assert!((o_x - o_n).abs() < 1e-2 * o_n.abs().max(1.0), "{o_x} vs {o_n}");
+    }
+}

@@ -1,0 +1,169 @@
+//! Native FISTA iterations on the Gram form — the rust mirror of
+//! python/compile/kernels/ref.py::fista_solve_ref (paper eqs. 5a–5d,
+//! stopping criterion eq. 7).
+//!
+//! Production runs use the `fista_{m}x{n}` artifact (Pallas kernel inside
+//! an XLA while-loop); this implementation is the cross-language oracle
+//! and the `Engine::Native` fallback.
+
+use crate::tensor::{ops, Tensor};
+
+/// Elementwise SoftShrinkage_ρ (paper's proximal operator).
+pub fn soft_shrink(w: &Tensor, rho: f32) -> Tensor {
+    Tensor::from_vec(
+        w.shape().to_vec(),
+        w.data()
+            .iter()
+            .map(|&x| {
+                if x > rho {
+                    x - rho
+                } else if x < -rho {
+                    x + rho
+                } else {
+                    0.0
+                }
+            })
+            .collect(),
+    )
+}
+
+/// Run up to `iters` FISTA iterations minimizing
+/// ½·tr(W A Wᵀ) − ⟨W, B⟩ + λ Σᵢ ‖W_{i,:}‖₁  (the Gram form of paper eq. 4).
+///
+/// Returns (W_K = last proximal point, iterations actually run).
+pub fn fista_solve(
+    a: &Tensor,
+    b: &Tensor,
+    w0: &Tensor,
+    lam: f64,
+    l_max: f64,
+    iters: usize,
+    tol: f64,
+) -> (Tensor, usize) {
+    let inv_l = (1.0 / l_max) as f32;
+    let thresh = (lam / l_max) as f32;
+    let mut w_k = w0.clone();
+    let mut w23 = w0.clone();
+    let mut t = 1.0f64;
+    let mut k = 0;
+    while k < iters {
+        let t_next = 0.5 * (1.0 + (1.0 + 4.0 * t * t).sqrt());
+        let coef = ((t - 1.0) / t_next) as f32;
+        // (5a) gradient step at the extrapolated point W_k
+        let grad = ops::sub(&ops::matmul(&w_k, a), b);
+        let w13 = ops::add_scaled(&w_k, &grad, -inv_l);
+        // (5b) proximal step
+        w23 = soft_shrink(&w13, thresh);
+        // (5d) Nesterov combination
+        let w_next = Tensor::from_vec(
+            w23.shape().to_vec(),
+            w23.data()
+                .iter()
+                .zip(w_k.data())
+                .map(|(&p, &c)| p + coef * (p - c))
+                .collect(),
+        );
+        let diff = ops::frob_dist(&w_next, &w_k);
+        w_k = w_next;
+        t = t_next;
+        k += 1;
+        if diff < tol {
+            break;
+        }
+    }
+    (w23, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::{matmul, matmul_nt, quad_obj};
+    use crate::util::Pcg64;
+
+    fn setup(seed: u64, m: usize, n: usize, p: usize) -> (Tensor, Tensor, Tensor, f64) {
+        let mut rng = Pcg64::seeded(seed);
+        let w_dense = Tensor::from_vec(vec![m, n], rng.normal_vec(m * n, 1.0));
+        let x = Tensor::from_vec(vec![n, p], rng.normal_vec(n * p, 0.5));
+        let a = matmul_nt(&x, &x);
+        let b = matmul(&w_dense, &a); // X* = X case: B = W A
+        let l = crate::linalg::power_iteration(&a, 64, 1.02);
+        (w_dense, a, b, l)
+    }
+
+    #[test]
+    fn lam_zero_recovers_dense_weights() {
+        // With λ=0 and X*=X, the minimizer of ½‖WX − W₀X‖² is W₀.
+        let (w_dense, a, b, l) = setup(1, 8, 16, 64);
+        let w0 = Tensor::zeros(vec![8, 16]);
+        let (w, _k) = fista_solve(&a, &b, &w0, 0.0, l, 400, 1e-9);
+        let err = crate::tensor::ops::frob_dist(&w, &w_dense) / w_dense.frob_norm();
+        assert!(err < 0.05, "relative err {err}");
+    }
+
+    #[test]
+    fn objective_decreases() {
+        let (_, a, b, l) = setup(2, 12, 24, 96);
+        let w0 = Tensor::zeros(vec![12, 24]);
+        let lam = 0.1;
+        let obj = |w: &Tensor| {
+            0.5 * quad_obj(&a, &b, w)
+                + lam * w.data().iter().map(|&x| x.abs() as f64).sum::<f64>()
+        };
+        let (w5, _) = fista_solve(&a, &b, &w0, lam, l, 5, 0.0);
+        let (w20, _) = fista_solve(&a, &b, &w0, lam, l, 20, 0.0);
+        let (w80, _) = fista_solve(&a, &b, &w0, lam, l, 80, 0.0);
+        assert!(obj(&w20) <= obj(&w5) + 1e-3);
+        assert!(obj(&w80) <= obj(&w20) + 1e-3);
+    }
+
+    #[test]
+    fn larger_lambda_gives_sparser_solutions() {
+        let (_, a, b, l) = setup(3, 8, 16, 64);
+        let w0 = Tensor::zeros(vec![8, 16]);
+        let mut prev_nnz = usize::MAX;
+        for lam in [0.01, 1.0, 100.0] {
+            let (w, _) = fista_solve(&a, &b, &w0, lam, l, 100, 1e-9);
+            let nnz = w.data().iter().filter(|&&x| x != 0.0).count();
+            assert!(nnz <= prev_nnz, "λ={lam}: nnz {nnz} > previous {prev_nnz}");
+            prev_nnz = nnz;
+        }
+        assert!(prev_nnz < 8 * 16, "large λ must produce zeros");
+    }
+
+    #[test]
+    fn early_stop_on_tolerance() {
+        let (_, a, b, l) = setup(4, 8, 16, 64);
+        let w0 = Tensor::zeros(vec![8, 16]);
+        let (_, k) = fista_solve(&a, &b, &w0, 0.0, l, 10_000, 1e-4);
+        assert!(k < 10_000, "should stop early, ran {k}");
+    }
+
+    #[test]
+    fn soft_shrink_cases() {
+        let w = Tensor::from_vec(vec![5], vec![-2.0, -0.5, 0.0, 0.5, 2.0]);
+        let s = soft_shrink(&w, 1.0);
+        assert_eq!(s.data(), &[-1.0, 0.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn matches_proximal_definition_property() {
+        // prox point must satisfy the subgradient optimality of eq. (6):
+        // |w23 - w13| <= thresh where w23 = 0, else w23 = w13 ∓ thresh.
+        crate::testing::check("soft shrink optimality", 30, |g| {
+            let n = g.int(1, 64);
+            let x = Tensor::from_vec(vec![n], g.vec_normal(n, 2.0));
+            let rho = g.f32_in(0.0, 1.5);
+            let y = soft_shrink(&x, rho);
+            for (&xi, &yi) in x.data().iter().zip(y.data()) {
+                if yi == 0.0 {
+                    if xi.abs() > rho + 1e-6 {
+                        return Err(format!("zeroed |{xi}| > rho {rho}"));
+                    }
+                } else if (yi.abs() + rho - xi.abs()).abs() > 1e-5 || yi.signum() != xi.signum() {
+                    return Err(format!("shrink wrong: {xi} -> {yi} (rho {rho})"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

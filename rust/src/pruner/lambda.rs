@@ -1,0 +1,224 @@
+//! Algorithm 1: the adaptive-λ outer loop (paper §3.3 / §3.4).
+//!
+//! Each round runs FISTA from the current best solution, rounds to the
+//! exact target sparsity (eq. 8), and measures
+//!   E_total = ‖W*_{K+1} X* − WX‖,  E_round = E_total − ‖W*_K X* − WX‖.
+//! A high E_round/E_total means FISTA under-sparsified (λ too small); a low
+//! ratio means λ can be reduced to chase output error (paper §3.3). λ is
+//! bisected on [0, λ_hi] against the threshold ξ. We bisect in *log space*
+//! (geometric midpoint, floor 1e-8): the paper specifies "the bisection
+//! method on [0, 10⁶]" with λ₀ = 10⁻⁵, which is only consistent if the
+//! bisection is logarithmic — an arithmetic midpoint would jump to 5·10⁵
+//! on the first round and never revisit small λ. Documented deviation.
+//!
+//! Termination: `patience` (= paper T) consecutive non-improving rounds,
+//! or improvement ratio (E_best − E_total)/E_best < ε (paper §3.4).
+
+use anyhow::Result;
+
+use crate::config::Sparsity;
+use crate::tensor::Tensor;
+
+use super::engine::SolverEngine;
+use super::objective::ErrorModel;
+use super::rounding::round_to_sparsity;
+
+/// Tuner configuration (paper symbols in comments).
+#[derive(Clone, Debug)]
+pub struct TuneCfg {
+    /// λ₀ (paper §4.1: 1e-5).
+    pub lambda_init: f64,
+    /// Upper end of the bisection interval (paper: 1e6).
+    pub lambda_hi: f64,
+    /// ξ — threshold on E_round/E_total (paper: 0.3).
+    pub xi: f64,
+    /// T — consecutive non-improving rounds before stopping (paper: 3).
+    pub patience: usize,
+    /// ε — improvement-ratio stop (paper: 1e-6 OPT / 1e-3 LLaMA).
+    pub eps: f64,
+    /// Hard cap on tuning rounds (not in the paper; guards runtime).
+    pub max_rounds: usize,
+}
+
+impl TuneCfg {
+    pub fn from_presets(p: &crate::config::Presets, family: crate::config::FamilyKind) -> TuneCfg {
+        TuneCfg {
+            lambda_init: p.prune.lambda_init,
+            lambda_hi: p.prune.lambda_hi,
+            xi: p.prune.xi,
+            patience: p.prune.patience,
+            eps: p.eps_for(family),
+            max_rounds: p.prune.max_rounds,
+        }
+    }
+}
+
+/// Outcome of Algorithm 1 for one operator.
+#[derive(Clone, Debug)]
+pub struct TuneResult {
+    /// W*_best — satisfies the target sparsity exactly.
+    pub w: Tensor,
+    /// E_best = ‖W*_best X* − W X‖_F.
+    pub e_total: f64,
+    /// Final λ.
+    pub lambda: f64,
+    /// Tuning rounds executed.
+    pub rounds: usize,
+    /// Total FISTA iterations across rounds (perf accounting).
+    pub fista_iters: usize,
+}
+
+const LAMBDA_FLOOR: f64 = 1e-8;
+
+/// Algorithm 1 (paper, verbatim structure): returns the best rounded W*.
+pub fn tune_lambda(
+    engine: &dyn SolverEngine,
+    em: &ErrorModel,
+    w0: &Tensor,
+    sparsity: Sparsity,
+    cfg: &TuneCfg,
+) -> Result<TuneResult> {
+    // W*_best ← round(W*_0); E_best ← ‖W*_best X* − WX‖.
+    // (The warm start comes from a baseline pruner and is already sparse;
+    // rounding is then a no-op, but guarantees the invariant regardless.)
+    let mut w_best = round_to_sparsity(w0, sparsity);
+    let mut e_best = em.error(engine, &w_best)?;
+
+    let mut lam = cfg.lambda_init;
+    let mut lo = 0.0f64;
+    let mut hi = cfg.lambda_hi;
+    let mut t = 0usize; // consecutive non-improving rounds
+    let mut rounds = 0usize;
+    let mut fista_iters = 0usize;
+    let mut final_lambda = lam;
+
+    while rounds < cfg.max_rounds {
+        rounds += 1;
+        // W*_K ← FISTA(WX, X*, λ, W*_best, K)
+        let (w_k, iters) = engine.fista(&em.a, &em.b, &w_best, lam, em.l)?;
+        fista_iters += iters;
+        // W*_{K+1} ← round(W*_K)
+        let w_k1 = round_to_sparsity(&w_k, sparsity);
+        let e_total = em.error(engine, &w_k1)?;
+        let e_fista = em.error(engine, &w_k)?;
+        let e_round = (e_total - e_fista).max(0.0);
+
+        let mut e_stop = f64::INFINITY;
+        if e_total < e_best {
+            e_stop = (e_best - e_total) / e_best.max(1e-30);
+            w_best = w_k1;
+            e_best = e_total;
+            t = 0;
+        } else {
+            t += 1;
+        }
+        final_lambda = lam;
+
+        // Bisection update on the E_round/E_total ratio (paper §3.3).
+        let ratio = if e_total > 0.0 { (e_round / e_total).clamp(0.0, 1.0) } else { 0.0 };
+        if ratio > cfg.xi {
+            lo = lam; // under-sparsified → increase λ
+        } else {
+            hi = lam; // sparse enough → chase output error with smaller λ
+        }
+        lam = (lo.max(LAMBDA_FLOOR) * hi.max(LAMBDA_FLOOR)).sqrt();
+
+        if t >= cfg.patience || e_stop < cfg.eps {
+            break;
+        }
+    }
+
+    Ok(TuneResult { w: w_best, e_total: e_best, lambda: final_lambda, rounds, fista_iters })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruner::engine::NativeEngine;
+    use crate::pruner::rounding::satisfies_sparsity;
+    use crate::tensor::ops;
+    use crate::util::Pcg64;
+
+    fn fixture(seed: u64, m: usize, n: usize, p: usize) -> (NativeEngine, ErrorModel, Tensor) {
+        let mut rng = Pcg64::seeded(seed);
+        let w = Tensor::from_vec(vec![m, n], rng.normal_vec(m * n, 1.0));
+        let x = Tensor::from_vec(vec![n, p], rng.normal_vec(n * p, 0.6));
+        let engine = NativeEngine::default();
+        let em = ErrorModel::build(&engine, &w, &x, &x).unwrap();
+        (engine, em, w)
+    }
+
+    fn cfg() -> TuneCfg {
+        TuneCfg { lambda_init: 1e-5, lambda_hi: 1e6, xi: 0.3, patience: 3, eps: 1e-6, max_rounds: 10 }
+    }
+
+    #[test]
+    fn output_satisfies_sparsity_and_beats_magnitude_warm_start() {
+        let (engine, em, w) = fixture(1, 16, 32, 128);
+        let sp = Sparsity::Unstructured(0.5);
+        let warm = round_to_sparsity(&w, sp); // magnitude pruning as warm start
+        let e_warm = em.error(&engine, &warm).unwrap();
+        let res = tune_lambda(&engine, &em, &warm, sp, &cfg()).unwrap();
+        assert!(satisfies_sparsity(&res.w, sp));
+        assert!(res.e_total <= e_warm + 1e-9, "tuner must never regress: {} vs {e_warm}", res.e_total);
+        assert!(res.e_total < e_warm * 0.999, "tuner should improve on magnitude warm start");
+        assert!(res.rounds >= 1);
+    }
+
+    #[test]
+    fn semi_structured_pattern_holds() {
+        let (engine, em, w) = fixture(2, 8, 32, 96);
+        let sp = Sparsity::Semi(2, 4);
+        let warm = round_to_sparsity(&w, sp);
+        let res = tune_lambda(&engine, &em, &warm, sp, &cfg()).unwrap();
+        assert!(satisfies_sparsity(&res.w, sp));
+        assert!(res.e_total <= em.error(&engine, &warm).unwrap() + 1e-9);
+    }
+
+    #[test]
+    fn respects_max_rounds() {
+        let (engine, em, w) = fixture(3, 8, 16, 64);
+        let sp = Sparsity::Unstructured(0.5);
+        let mut c = cfg();
+        c.max_rounds = 2;
+        c.patience = 100;
+        c.eps = 0.0;
+        let res = tune_lambda(&engine, &em, &round_to_sparsity(&w, sp), sp, &c).unwrap();
+        assert_eq!(res.rounds, 2);
+    }
+
+    #[test]
+    fn zero_sparsity_returns_near_dense() {
+        let (engine, em, w) = fixture(4, 8, 16, 64);
+        let sp = Sparsity::Unstructured(0.0);
+        let res = tune_lambda(&engine, &em, &w, sp, &cfg()).unwrap();
+        // with no sparsity requirement the best solution tracks the dense W
+        let rel = ops::frob_dist(&res.w, &w) / w.frob_norm();
+        assert!(rel < 0.2, "rel {rel}");
+    }
+
+    #[test]
+    fn error_reduction_property() {
+        crate::testing::check("tuner never regresses vs warm start", 8, |g| {
+            let m = 4 * g.int(1, 4);
+            let n = 8 * g.int(1, 4);
+            let p = 64;
+            let mut rng = Pcg64::seeded(g.rng.next_u64());
+            let w = Tensor::from_vec(vec![m, n], rng.normal_vec(m * n, 1.0));
+            let x = Tensor::from_vec(vec![n, p], rng.normal_vec(n * p, 0.6));
+            let engine = NativeEngine::default();
+            let em = ErrorModel::build(&engine, &w, &x, &x).unwrap();
+            let sp = Sparsity::Unstructured(g.f32_in(0.2, 0.7) as f64);
+            let warm = round_to_sparsity(&w, sp);
+            let e_warm = em.error(&engine, &warm).unwrap();
+            let res = tune_lambda(&engine, &em, &warm, sp, &cfg()).unwrap();
+            if !satisfies_sparsity(&res.w, sp) {
+                return Err("sparsity violated".into());
+            }
+            if res.e_total > e_warm + 1e-6 {
+                return Err(format!("regressed: {} vs {e_warm}", res.e_total));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,30 @@
+//! FISTAPruner core (the paper's contribution):
+//!
+//! * `rounding`  — eq. (8): exact-sparsity rounding (s% unstructured, n:m).
+//! * `engine`    — solver backends: XLA artifacts (production) and a
+//!   native-rust reference; both expose FISTA / Gram / power / objective.
+//! * `fista`     — native FISTA iterations (paper eqs. 5a–5d), the oracle
+//!   the artifact path is tested against.
+//! * `objective` — Gram-form output error ‖W X* − WX‖_F (DESIGN.md §3.1).
+//! * `lambda`    — Algorithm 1: adaptive λ bisection on E_round/E_total.
+//! * `unit`      — a decoder layer as a pruning unit: sequential operator
+//!   pruning with intra-layer error correction (paper §3.1, Fig. 2).
+//! * `scheduler` — full-model pruning; parallel decoder-layer dispatch
+//!   over the PJRT worker pool (paper §3.4).
+//! * `report`    — per-op/per-layer diagnostics for EXPERIMENTS.md.
+
+pub mod admm;
+pub mod engine;
+pub mod fista;
+pub mod lambda;
+pub mod objective;
+pub mod report;
+pub mod rounding;
+pub mod scheduler;
+pub mod unit;
+
+pub use engine::{NativeEngine, SolverEngine, XlaEngine};
+pub use lambda::{tune_lambda, TuneCfg, TuneResult};
+pub use report::{LayerReport, OpReport, PruneReport};
+pub use rounding::{round_to_sparsity, satisfies_sparsity};
+pub use scheduler::{prune_model, Method};

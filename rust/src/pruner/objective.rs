@@ -1,0 +1,103 @@
+//! The Gram-form output-error model (DESIGN.md §3.1).
+//!
+//! Everything Algorithm 1 needs about an operator reduces to
+//!   A = X*(X*)ᵀ, B = W·C with C = X(X*)ᵀ, c = ‖WX‖² = tr(W D Wᵀ),
+//! so the error ‖W* X* − W X‖_F = sqrt(tr(W* A W*ᵀ) − 2⟨W*,B⟩ + c) is
+//! computable for any candidate W* without touching the p-sized
+//! activations again. This is what lets one compiled artifact set serve
+//! every calibration size (and the paper's 40GB-for-70B memory story).
+
+use anyhow::Result;
+
+use crate::tensor::Tensor;
+
+use super::engine::SolverEngine;
+
+/// Per-operator error model: Gram matrices + the constant term.
+pub struct ErrorModel {
+    /// A = X*(X*)ᵀ — pruned-path input Gram.
+    pub a: Tensor,
+    /// B = W·C — the linear term of the objective.
+    pub b: Tensor,
+    /// c = ‖WX‖²_F — constant completing the squared error.
+    pub c: f64,
+    /// L = λ_max(A) — FISTA step-size constant.
+    pub l: f64,
+}
+
+impl ErrorModel {
+    /// Assemble from activations: `xd`/`xs` are [n, p] dense / pruned-path
+    /// inputs (columns = calibration tokens), `w` the dense weight [m, n].
+    pub fn build(engine: &dyn SolverEngine, w: &Tensor, xd: &Tensor, xs: &Tensor) -> Result<ErrorModel> {
+        let (a, c_gram, d) = engine.gram(xd, xs)?;
+        let (b, c_norm) = engine.prep(w, &c_gram, &d)?;
+        let l = engine.power(&a)?;
+        Ok(ErrorModel { a, b, c: c_norm, l })
+    }
+
+    /// ‖W* X* − W X‖²_F for a candidate (clamped at 0 against f32 noise).
+    pub fn sq_error(&self, engine: &dyn SolverEngine, w: &Tensor) -> Result<f64> {
+        let quad = engine.obj(&self.a, &self.b, w)?;
+        Ok((quad + self.c).max(0.0))
+    }
+
+    /// ‖W* X* − W X‖_F.
+    pub fn error(&self, engine: &dyn SolverEngine, w: &Tensor) -> Result<f64> {
+        Ok(self.sq_error(engine, w)?.sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruner::engine::NativeEngine;
+    use crate::tensor::ops;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn error_matches_direct_computation() {
+        let mut rng = Pcg64::seeded(7);
+        let (m, n, p) = (12, 16, 200);
+        let w = Tensor::from_vec(vec![m, n], rng.normal_vec(m * n, 1.0));
+        let xd = Tensor::from_vec(vec![n, p], rng.normal_vec(n * p, 0.7));
+        // xs = xd + small perturbation (a "pruned path" input)
+        let noise = Tensor::from_vec(vec![n, p], rng.normal_vec(n * p, 0.05));
+        let xs = ops::add_scaled(&xd, &noise, 1.0);
+        let engine = NativeEngine::default();
+        let em = ErrorModel::build(&engine, &w, &xd, &xs).unwrap();
+
+        let cand = Tensor::from_vec(vec![m, n], rng.normal_vec(m * n, 1.0));
+        let direct = ops::frob_dist(&ops::matmul(&cand, &xs), &ops::matmul(&w, &xd));
+        let via_gram = em.error(&engine, &cand).unwrap();
+        assert!(
+            (via_gram - direct).abs() < 2e-2 * direct,
+            "gram {via_gram} vs direct {direct}"
+        );
+    }
+
+    #[test]
+    fn dense_weight_has_zero_error_when_paths_match() {
+        let mut rng = Pcg64::seeded(8);
+        let (m, n, p) = (8, 8, 100);
+        let w = Tensor::from_vec(vec![m, n], rng.normal_vec(m * n, 1.0));
+        let x = Tensor::from_vec(vec![n, p], rng.normal_vec(n * p, 1.0));
+        let engine = NativeEngine::default();
+        let em = ErrorModel::build(&engine, &w, &x, &x).unwrap();
+        let e = em.error(&engine, &w).unwrap();
+        let scale = ops::matmul(&w, &x).frob_norm();
+        assert!(e < 1e-2 * scale, "error {e} vs scale {scale}");
+    }
+
+    #[test]
+    fn l_bounds_gram_spectrum() {
+        let mut rng = Pcg64::seeded(9);
+        let x = Tensor::from_vec(vec![16, 100], rng.normal_vec(1600, 1.0));
+        let w = Tensor::from_vec(vec![4, 16], rng.normal_vec(64, 1.0));
+        let engine = NativeEngine::default();
+        let em = ErrorModel::build(&engine, &w, &x, &x).unwrap();
+        assert!(em.l > 0.0);
+        // L ≥ max diagonal entry of A (a cheap lower bound on λ_max)
+        let max_diag = (0..16).map(|i| em.a.at2(i, i)).fold(0.0f32, f32::max);
+        assert!(em.l >= max_diag as f64 * 0.99);
+    }
+}

@@ -1,0 +1,106 @@
+//! Structured diagnostics from a pruning run (feeds EXPERIMENTS.md and the
+//! `prune` CLI output).
+
+use std::time::Duration;
+
+/// Per-operator outcome.
+#[derive(Clone, Debug)]
+pub struct OpReport {
+    pub layer: usize,
+    pub op: String,
+    /// ‖W* X* − WX‖_F after tuning.
+    pub error: f64,
+    /// Relative error ‖W* X* − WX‖ / ‖WX‖.
+    pub rel_error: f64,
+    pub lambda: f64,
+    pub rounds: usize,
+    pub fista_iters: usize,
+    pub sparsity: f64,
+    pub elapsed: Duration,
+}
+
+/// Per-layer rollup.
+#[derive(Clone, Debug, Default)]
+pub struct LayerReport {
+    pub layer: usize,
+    pub ops: Vec<OpReport>,
+    pub elapsed: Duration,
+}
+
+/// Whole-model pruning report.
+#[derive(Clone, Debug, Default)]
+pub struct PruneReport {
+    pub model: String,
+    pub method: String,
+    pub sparsity_label: String,
+    pub layers: Vec<LayerReport>,
+    pub elapsed: Duration,
+}
+
+impl PruneReport {
+    /// Mean relative operator error (a cheap overall quality signal).
+    pub fn mean_rel_error(&self) -> f64 {
+        let errs: Vec<f64> =
+            self.layers.iter().flat_map(|l| l.ops.iter().map(|o| o.rel_error)).collect();
+        crate::metrics::mean(&errs)
+    }
+
+    /// Achieved weight sparsity across all pruned operators.
+    pub fn mean_sparsity(&self) -> f64 {
+        let sp: Vec<f64> =
+            self.layers.iter().flat_map(|l| l.ops.iter().map(|o| o.sparsity)).collect();
+        crate::metrics::mean(&sp)
+    }
+
+    pub fn total_fista_iters(&self) -> usize {
+        self.layers.iter().flat_map(|l| l.ops.iter().map(|o| o.fista_iters)).sum()
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} {} {}: rel_err {:.4}, sparsity {:.3}, {} fista iters, {:.1}s",
+            self.model,
+            self.method,
+            self.sparsity_label,
+            self.mean_rel_error(),
+            self.mean_sparsity(),
+            self.total_fista_iters(),
+            self.elapsed.as_secs_f64()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rollups() {
+        let op = |layer, err, sp| OpReport {
+            layer,
+            op: "wq".into(),
+            error: err,
+            rel_error: err / 10.0,
+            lambda: 1e-5,
+            rounds: 2,
+            fista_iters: 40,
+            sparsity: sp,
+            elapsed: Duration::from_millis(5),
+        };
+        let rep = PruneReport {
+            model: "topt-s1".into(),
+            method: "fista".into(),
+            sparsity_label: "50%".into(),
+            layers: vec![
+                LayerReport { layer: 0, ops: vec![op(0, 1.0, 0.5), op(0, 2.0, 0.5)], elapsed: Duration::ZERO },
+                LayerReport { layer: 1, ops: vec![op(1, 3.0, 0.5)], elapsed: Duration::ZERO },
+            ],
+            elapsed: Duration::from_secs(1),
+        };
+        assert!((rep.mean_rel_error() - 0.2).abs() < 1e-12);
+        assert!((rep.mean_sparsity() - 0.5).abs() < 1e-12);
+        assert_eq!(rep.total_fista_iters(), 120);
+        assert!(rep.summary().contains("topt-s1"));
+    }
+}

@@ -1,0 +1,183 @@
+//! The rounding step, paper eq. (8): FISTA's near-zero values are snapped
+//! to exact zeros so the matrix meets the target sparsity pattern exactly.
+//!
+//! * Unstructured s%: zero the s% entries of smallest |·| in the matrix
+//!   (paper: "the s% elements with the smallest absolute values in W*_K").
+//! * n:m semi-structured: in every group of m consecutive entries of a
+//!   row, keep the n of largest |·| (paper §2 / eq. 8).
+
+use crate::config::Sparsity;
+use crate::tensor::Tensor;
+
+/// Return a copy of `w` rounded to the exact sparsity pattern.
+pub fn round_to_sparsity(w: &Tensor, sp: Sparsity) -> Tensor {
+    let mut out = w.clone();
+    round_in_place(&mut out, sp);
+    out
+}
+
+/// In-place variant.
+pub fn round_in_place(w: &mut Tensor, sp: Sparsity) {
+    match sp {
+        Sparsity::Unstructured(s) => round_unstructured(w, s),
+        Sparsity::Semi(n, m) => round_semi(w, n, m),
+    }
+}
+
+fn round_unstructured(w: &mut Tensor, s: f64) {
+    let len = w.len();
+    let k = ((len as f64) * s).floor() as usize;
+    if k == 0 {
+        return;
+    }
+    // Quickselect the k-th smallest |value| via an index permutation.
+    let data = w.data_mut();
+    let mut idx: Vec<u32> = (0..len as u32).collect();
+    let (smallest, _, _) = idx.select_nth_unstable_by(k - 1, |&a, &b| {
+        data[a as usize]
+            .abs()
+            .partial_cmp(&data[b as usize].abs())
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    for &i in smallest.iter() {
+        data[i as usize] = 0.0;
+    }
+    data[idx[k - 1] as usize] = 0.0; // the pivot itself is the k-th smallest
+}
+
+fn round_semi(w: &mut Tensor, n: usize, m: usize) {
+    assert!(n <= m && m > 0);
+    let cols = w.cols();
+    assert_eq!(cols % m, 0, "row length {cols} not divisible by group size {m}");
+    let rows = w.rows();
+    let data = w.data_mut();
+    let drop = m - n;
+    let mut order: Vec<usize> = vec![0; m];
+    for r in 0..rows {
+        let row = &mut data[r * cols..(r + 1) * cols];
+        for g in (0..cols).step_by(m) {
+            let grp = &mut row[g..g + m];
+            for (i, o) in order.iter_mut().enumerate() {
+                *o = i;
+            }
+            order.sort_unstable_by(|&a, &b| {
+                grp[a].abs().partial_cmp(&grp[b].abs()).unwrap_or(std::cmp::Ordering::Equal)
+            });
+            for &i in &order[..drop] {
+                grp[i] = 0.0;
+            }
+        }
+    }
+}
+
+/// Check a matrix satisfies the sparsity pattern (used by tests and the
+/// scheduler's post-conditions).
+pub fn satisfies_sparsity(w: &Tensor, sp: Sparsity) -> bool {
+    match sp {
+        Sparsity::Unstructured(s) => {
+            let need = ((w.len() as f64) * s).floor() as usize;
+            w.data().iter().filter(|&&x| x == 0.0).count() >= need
+        }
+        Sparsity::Semi(n, m) => {
+            let cols = w.cols();
+            if cols % m != 0 {
+                return false;
+            }
+            w.data()
+                .chunks(cols)
+                .all(|row| row.chunks(m).all(|g| g.iter().filter(|&&x| x != 0.0).count() <= n))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn randw(seed: u64, m: usize, n: usize) -> Tensor {
+        let mut rng = Pcg64::seeded(seed);
+        Tensor::from_vec(vec![m, n], rng.normal_vec(m * n, 1.0))
+    }
+
+    #[test]
+    fn unstructured_exact_count() {
+        for s in [0.1, 0.25, 0.5, 0.8] {
+            let w = round_to_sparsity(&randw(1, 16, 24), Sparsity::Unstructured(s));
+            let zeros = w.data().iter().filter(|&&x| x == 0.0).count();
+            assert_eq!(zeros, ((16 * 24) as f64 * s).floor() as usize, "s={s}");
+            assert!(satisfies_sparsity(&w, Sparsity::Unstructured(s)));
+        }
+    }
+
+    #[test]
+    fn unstructured_keeps_largest() {
+        let w = Tensor::from_vec(vec![1, 4], vec![0.1, -5.0, 0.2, 3.0]);
+        let r = round_to_sparsity(&w, Sparsity::Unstructured(0.5));
+        assert_eq!(r.data(), &[0.0, -5.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn semi_2_4_per_group() {
+        let w = randw(2, 8, 32);
+        let r = round_to_sparsity(&w, Sparsity::Semi(2, 4));
+        assert!(satisfies_sparsity(&r, Sparsity::Semi(2, 4)));
+        // overall rate is exactly 50%
+        assert!((r.sparsity() - 0.5).abs() < 1e-9);
+        // kept entries are the group-wise largest
+        for r_i in 0..8 {
+            for g in (0..32).step_by(4) {
+                let orig: Vec<f32> = (0..4).map(|j| w.at2(r_i, g + j).abs()).collect();
+                let mut sorted = orig.clone();
+                sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+                for j in 0..4 {
+                    if r.at2(r_i, g + j) != 0.0 {
+                        assert!(orig[j] >= sorted[2] - 1e-9);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn semi_1_4_and_4_4() {
+        let w = randw(3, 4, 16);
+        let r14 = round_to_sparsity(&w, Sparsity::Semi(1, 4));
+        assert!((r14.sparsity() - 0.75).abs() < 1e-9);
+        let r44 = round_to_sparsity(&w, Sparsity::Semi(4, 4));
+        assert_eq!(&r44, &w, "4:4 must be identity");
+    }
+
+    #[test]
+    fn idempotent() {
+        let w = randw(4, 10, 20);
+        let once = round_to_sparsity(&w, Sparsity::Unstructured(0.5));
+        let twice = round_to_sparsity(&once, Sparsity::Unstructured(0.5));
+        assert_eq!(once, twice);
+    }
+
+    #[test]
+    fn property_random_shapes_and_rates() {
+        crate::testing::check("rounding meets sparsity", 25, |g| {
+            let m = g.int(1, 24);
+            let n = 4 * g.int(1, 16);
+            let w = Tensor::from_vec(vec![m, n], g.vec_normal(m * n, 1.0));
+            let sp = if g.bool() {
+                Sparsity::Unstructured(g.f32_in(0.05, 0.9) as f64)
+            } else {
+                Sparsity::Semi(1 + g.int(0, 2), 4)
+            };
+            let r = round_to_sparsity(&w, sp);
+            if !satisfies_sparsity(&r, sp) {
+                return Err(format!("pattern violated for {m}x{n} {sp:?}"));
+            }
+            // rounding must only zero entries, never alter survivors
+            for (a, b) in w.data().iter().zip(r.data()) {
+                if *b != 0.0 && a != b {
+                    return Err("survivor entry changed".into());
+                }
+            }
+            Ok(())
+        });
+    }
+}

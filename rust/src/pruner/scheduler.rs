@@ -1,0 +1,189 @@
+//! Full-model pruning: decoder layers as independent pruning units
+//! (paper §3.4), scheduled sequentially (pruned activations propagate
+//! between layers, the paper's evaluation pipeline) or in parallel across
+//! the PJRT worker pool (the paper's multi-device pruning claim — each
+//! unit then consumes the dense layer input).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::baselines::BaselineKind;
+use crate::config::{ModelSpec, Presets, PruneMode, PruneOptions};
+use crate::model::embed::embed_windows;
+use crate::model::params::ModelParams;
+use crate::runtime::{ExecutorPool, Manifest, Session};
+use crate::tensor::Tensor;
+
+use super::report::PruneReport;
+use super::unit::{prune_unit, UnitResult};
+
+/// The pruning method a run executes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// No pruning (evaluation convenience).
+    Dense,
+    /// FISTAPruner (the paper's method, Algorithm 1).
+    Fista,
+    /// A baseline one-shot pruner.
+    Baseline(BaselineKind),
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method> {
+        match s {
+            "dense" => Ok(Method::Dense),
+            "fista" | "fistapruner" => Ok(Method::Fista),
+            other => Ok(Method::Baseline(BaselineKind::parse(other)?)),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Dense => "dense",
+            Method::Fista => "fista",
+            Method::Baseline(k) => k.name(),
+        }
+    }
+}
+
+/// Prune a model on calibration windows (each ≥ seq tokens).
+///
+/// Returns the pruned parameters and a per-op report. `session` is used
+/// for sequential mode; parallel mode spins up `opts.workers` pool workers
+/// with their own sessions.
+pub fn prune_model(
+    session: &Session,
+    presets: &Presets,
+    spec: &ModelSpec,
+    params: &ModelParams,
+    calib_windows: &[Vec<i32>],
+    method: Method,
+    opts: &PruneOptions,
+) -> Result<(ModelParams, PruneReport)> {
+    let t0 = Instant::now();
+    let mut out = params.clone();
+    let (x0, valids) = embed_windows(spec, params, calib_windows, presets.capture_batch)?;
+
+    let mut report = PruneReport {
+        model: spec.name(),
+        method: method.name().to_string(),
+        sparsity_label: opts.sparsity.label(),
+        ..Default::default()
+    };
+
+    if matches!(method, Method::Dense) {
+        report.elapsed = t0.elapsed();
+        return Ok((out, report));
+    }
+
+    match opts.mode {
+        PruneMode::Sequential => {
+            let mut xd = x0.clone();
+            let mut xs = x0;
+            for layer in 0..spec.layers {
+                let layer_tensors: Vec<Tensor> =
+                    out.layer_tensors(spec, layer).into_iter().cloned().collect();
+                let res = prune_unit(
+                    session, presets, spec, &method, opts, layer, &layer_tensors, &xd, &xs, &valids,
+                )
+                .with_context(|| format!("pruning layer {layer}"))?;
+                apply_unit(&mut out, layer, &res)?;
+                crate::log_debug!("layer {layer}: {} ops pruned", res.pruned.len());
+                xd = res.y_dense;
+                xs = res.y_pruned;
+                report.layers.push(res.report);
+            }
+        }
+        PruneMode::Parallel => {
+            // Pass 1 (cheap): dense layer inputs for every layer.
+            let mut inputs: Vec<Vec<Tensor>> = Vec::with_capacity(spec.layers);
+            let mut cur = x0;
+            for layer in 0..spec.layers {
+                inputs.push(cur.clone());
+                let layer_tensors: Vec<Tensor> =
+                    out.layer_tensors(spec, layer).into_iter().cloned().collect();
+                let res = prune_unit(
+                    session,
+                    presets,
+                    spec,
+                    &Method::Dense,
+                    opts,
+                    layer,
+                    &layer_tensors,
+                    &cur,
+                    &cur,
+                    &valids,
+                )?;
+                cur = res.y_dense;
+            }
+            // Pass 2: independent units over the worker pool.
+            let manifest = Arc::new(Manifest::load(&session.manifest().dir)?);
+            let pool = ExecutorPool::new(manifest, opts.workers.max(1))?;
+            let presets_arc = Arc::new(presets.clone());
+            let spec_arc = Arc::new(spec.clone());
+            let opts_arc = Arc::new(opts.clone());
+            let (tx, rx) = std::sync::mpsc::channel::<(usize, Result<UnitResult>)>();
+            for layer in 0..spec.layers {
+                let layer_tensors: Vec<Tensor> =
+                    out.layer_tensors(spec, layer).into_iter().cloned().collect();
+                let xin = inputs[layer].clone();
+                let valids = valids.clone();
+                let (p, s, o) = (presets_arc.clone(), spec_arc.clone(), opts_arc.clone());
+                let tx = tx.clone();
+                pool.submit(move |session| {
+                    let res = prune_unit(
+                        session, &p, &s, &method, &o, layer, &layer_tensors, &xin, &xin, &valids,
+                    );
+                    let _ = tx.send((layer, res));
+                });
+            }
+            drop(tx);
+            let mut results: Vec<(usize, UnitResult)> = Vec::with_capacity(spec.layers);
+            for (layer, res) in rx.iter() {
+                results.push((layer, res.with_context(|| format!("pruning layer {layer}"))?));
+            }
+            results.sort_by_key(|(l, _)| *l);
+            for (layer, res) in results {
+                apply_unit(&mut out, layer, &res)?;
+                report.layers.push(res.report);
+            }
+        }
+    }
+
+    // Post-condition: every pruned operator satisfies the target pattern.
+    for layer in 0..spec.layers {
+        for op in crate::model::ops::pruned_ops(spec) {
+            let w = out.req(&format!("l{layer}.{}", op.name))?;
+            debug_assert!(
+                super::rounding::satisfies_sparsity(w, opts.sparsity),
+                "sparsity violated at l{layer}.{}",
+                op.name
+            );
+        }
+    }
+
+    report.elapsed = t0.elapsed();
+    Ok((out, report))
+}
+
+fn apply_unit(params: &mut ModelParams, layer: usize, res: &UnitResult) -> Result<()> {
+    for (name, w) in &res.pruned {
+        params.set(&format!("l{layer}.{name}"), w.clone())?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse() {
+        assert_eq!(Method::parse("fista").unwrap(), Method::Fista);
+        assert_eq!(Method::parse("dense").unwrap(), Method::Dense);
+        assert_eq!(Method::parse("wanda").unwrap(), Method::Baseline(BaselineKind::Wanda));
+        assert!(Method::parse("nope").is_err());
+    }
+}

@@ -1,0 +1,262 @@
+//! The pruning unit: one decoder layer, pruned operator-by-operator in
+//! topological order with intra-layer error correction (paper §3.1, Fig. 2).
+//!
+//! For each operator W the unit needs two activation matrices:
+//!   X  — the operator input on the *dense* path (the target WX), and
+//!   X* — the input on the *pruned* path (what W* will actually see).
+//! X comes from one capture of the layer under dense weights; X* is
+//! re-captured under the current partially-pruned weights whenever the
+//! next operator reads a capture point downstream of a pruned operator.
+//! With error correction disabled (the Fig. 4a ablation) X* ≡ X and both
+//! come from a single capture — exactly eq. (1) instead of eq. (2).
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::baselines::{self, BaselineKind};
+use crate::config::{Engine, FamilyKind, ModelSpec, Presets, PruneOptions, WarmStart};
+use crate::model::ops::{pruned_ops, CaptureKey};
+use crate::runtime::session::{Arg, Session};
+use crate::tensor::Tensor;
+
+use super::engine::{NativeEngine, SolverEngine, XlaEngine};
+use super::lambda::{tune_lambda, TuneCfg};
+use super::objective::ErrorModel;
+use super::report::{LayerReport, OpReport};
+use super::scheduler::Method;
+
+/// Result of pruning one layer.
+pub struct UnitResult {
+    /// (bare op name, pruned weight) for every pruned operator.
+    pub pruned: Vec<(String, Tensor)>,
+    /// Layer outputs under dense weights (input to the next dense layer).
+    pub y_dense: Vec<Tensor>,
+    /// Layer outputs under pruned weights (input to the next pruned layer).
+    pub y_pruned: Vec<Tensor>,
+    pub report: LayerReport,
+}
+
+/// Captured activations of one layer: X matrices per capture key + y.
+struct Captures {
+    /// Indexed by CaptureKey::output_index(): [n_key, p] matrices.
+    acts: Vec<Tensor>,
+    /// Per-batch [cb, s, d] layer outputs.
+    y: Vec<Tensor>,
+}
+
+/// Prune one decoder layer.
+///
+/// `layer_params` must be in capture-artifact order (layer_param_specs);
+/// `xd/xs_batches` are [cb, s, d] layer inputs on the dense/pruned paths;
+/// `valid_rows[i]` is the number of real (unpadded) rows in batch i.
+#[allow(clippy::too_many_arguments)]
+pub fn prune_unit(
+    session: &Session,
+    presets: &Presets,
+    spec: &ModelSpec,
+    method: &Method,
+    opts: &PruneOptions,
+    layer: usize,
+    layer_params: &[Tensor],
+    xd_batches: &[Tensor],
+    xs_batches: &[Tensor],
+    valid_rows: &[usize],
+) -> Result<UnitResult> {
+    let t_layer = Instant::now();
+    let native;
+    let xla;
+    let engine: &dyn SolverEngine = match opts.engine {
+        Engine::Xla => {
+            xla = XlaEngine::new(session);
+            &xla
+        }
+        Engine::Native => {
+            native = NativeEngine { cfg: presets.fista.clone() };
+            &native
+        }
+    };
+
+    let mut cur: Vec<Tensor> = layer_params.to_vec();
+    let param_names: Vec<String> = crate::model::spec::layer_param_specs(spec, None)
+        .iter()
+        .map(|s| s.name.clone())
+        .collect();
+    let op_index = |name: &str| -> usize {
+        param_names.iter().position(|n| n == name).expect("op in layer params")
+    };
+
+    // One dense capture: targets WX (and the dense-path layer output).
+    let dense_caps = run_capture(session, spec, layer_params, xd_batches, valid_rows)?;
+    // Correction on: X* starts as the pruned-path capture under the still-
+    // dense current layer. Correction off: X* = X (single capture, eq. 1).
+    let correction = opts.error_correction && !matches!(method, Method::Dense);
+    let mut star_caps = if correction {
+        run_capture(session, spec, &cur, xs_batches, valid_rows)?
+    } else {
+        run_capture(session, spec, layer_params, xs_batches, valid_rows)?
+    };
+
+    let tune_cfg = {
+        let mut c = TuneCfg::from_presets(presets, spec.family);
+        if let Some(r) = opts.max_rounds {
+            c.max_rounds = r;
+        }
+        c
+    };
+    let warm_kind = match (opts.warm_start, spec.family) {
+        (WarmStart::SparseGpt, _) | (WarmStart::Auto, FamilyKind::Topt) => Some(BaselineKind::SparseGpt),
+        (WarmStart::Wanda, _) | (WarmStart::Auto, FamilyKind::Tllama) => Some(BaselineKind::Wanda),
+        (WarmStart::Dense, _) => None,
+    };
+
+    let mut report = LayerReport { layer, ..Default::default() };
+    let mut pruned: Vec<(String, Tensor)> = Vec::new();
+    let mut dirty = false; // ops pruned since the last X* capture
+    let mut last_key = CaptureKey::AttnIn;
+
+    if !matches!(method, Method::Dense) {
+        for op in pruned_ops(spec) {
+            let t_op = Instant::now();
+            // Re-capture X* when moving to a new capture point after mutations.
+            if correction && dirty && op.capture != last_key {
+                // (dirty stays true: the next op prunes again regardless)
+                star_caps = run_capture(session, spec, &cur, xs_batches, valid_rows)?;
+            }
+            last_key = op.capture;
+
+            let w = &cur[op_index(op.name)];
+            if w.shape() != [op.m, op.n] {
+                bail!("op {} shape {:?} != ({}, {})", op.name, w.shape(), op.m, op.n);
+            }
+            let xd = &dense_caps.acts[op.capture.output_index()];
+            let xs = if correction { &star_caps.acts[op.capture.output_index()] } else { xd };
+            let em = ErrorModel::build(engine, w, xd, xs)
+                .with_context(|| format!("layer {layer} op {}", op.name))?;
+
+            let (w_star, lambda, rounds, fista_iters) = match method {
+                Method::Dense => unreachable!(),
+                Method::Baseline(kind) => {
+                    (baselines::prune_matrix(*kind, w, &em.a, opts.sparsity)?, 0.0, 0, 0)
+                }
+                Method::Fista => {
+                    let w0 = match warm_kind {
+                        Some(kind) => baselines::prune_matrix(kind, w, &em.a, opts.sparsity)?,
+                        None => w.clone(),
+                    };
+                    let res = tune_lambda(engine, &em, &w0, opts.sparsity, &tune_cfg)?;
+                    (res.w, res.lambda, res.rounds, res.fista_iters)
+                }
+            };
+
+            let error = em.error(engine, &w_star)?;
+            let scale = em.c.max(0.0).sqrt();
+            report.ops.push(OpReport {
+                layer,
+                op: op.name.to_string(),
+                error,
+                rel_error: if scale > 0.0 { error / scale } else { 0.0 },
+                lambda,
+                rounds,
+                fista_iters,
+                sparsity: w_star.sparsity(),
+                elapsed: t_op.elapsed(),
+            });
+            cur[op_index(op.name)] = w_star.clone();
+            pruned.push((op.name.to_string(), w_star));
+            dirty = true;
+        }
+    }
+
+    // Final pruned-path capture → the next layer's x* input.
+    let final_caps = run_capture(session, spec, &cur, xs_batches, valid_rows)?;
+    report.elapsed = t_layer.elapsed();
+    Ok(UnitResult { pruned, y_dense: dense_caps.y, y_pruned: final_caps.y, report })
+}
+
+/// Run the layer-generic capture artifact over all batches, harvesting
+/// X matrices ([n, p], columns = valid calibration tokens) per capture key.
+fn run_capture(
+    session: &Session,
+    spec: &ModelSpec,
+    layer_params: &[Tensor],
+    batches: &[Tensor],
+    valid_rows: &[usize],
+) -> Result<Captures> {
+    let name = format!("capture_{}", spec.name());
+    let seq = spec.seq;
+    let p_total: usize = valid_rows.iter().map(|&v| v * seq).sum();
+    let dims = [spec.d, spec.d, spec.d, spec.ffn]; // attn_in, o_in, mlp_in, mlp2_in
+    let mut acts: Vec<Tensor> = dims.iter().map(|&n| Tensor::zeros(vec![n, p_total])).collect();
+    let mut y = Vec::with_capacity(batches.len());
+    let mut col0 = 0usize;
+    for (batch, &valid) in batches.iter().zip(valid_rows) {
+        let mut args: Vec<Arg<'_>> = Vec::with_capacity(1 + layer_params.len());
+        args.push(Arg::T(batch));
+        for p in layer_params {
+            args.push(Arg::T(p));
+        }
+        let mut out = session.run(&name, &args)?;
+        if out.len() != 5 {
+            bail!("capture returned {} outputs", out.len());
+        }
+        let y_b = out.pop().expect("y");
+        for (k, act) in out.into_iter().enumerate() {
+            // act: [cb, s, n] — scatter valid rows' tokens into X columns.
+            let n = dims[k];
+            let x = &mut acts[k];
+            let xdata = x.data_mut();
+            let adata = act.data();
+            for r in 0..valid {
+                for t in 0..seq {
+                    let col = col0 + r * seq + t;
+                    let src = &adata[(r * seq + t) * n..(r * seq + t + 1) * n];
+                    for (d_i, &v) in src.iter().enumerate() {
+                        xdata[d_i * p_total + col] = v;
+                    }
+                }
+            }
+        }
+        y.push(y_b);
+        col0 += valid * seq;
+    }
+    Ok(Captures { acts, y })
+}
+
+#[cfg(test)]
+mod tests {
+    // prune_unit is exercised end-to-end in rust/tests/ (pipeline tests);
+    // unit tests here cover the capture scatter logic via a dense run.
+    use super::*;
+    use crate::config::repo_root;
+    use crate::model::init::init_params;
+    use crate::runtime::Manifest;
+    use std::sync::Arc;
+
+    #[test]
+    fn dense_unit_roundtrip_produces_consistent_outputs() {
+        let root = repo_root().unwrap();
+        let presets = Presets::load(&root).unwrap();
+        let spec = presets.model("topt-s1").unwrap();
+        let params = init_params(spec, 5);
+        let session = Session::new(Arc::new(Manifest::load_default().unwrap())).unwrap();
+        let windows: Vec<Vec<i32>> = (0..4).map(|i| vec![(i * 7 % 96) as i32; spec.seq]).collect();
+        let (batches, valids) =
+            crate::model::embed::embed_windows(spec, &params, &windows, presets.capture_batch).unwrap();
+        let layer_tensors: Vec<Tensor> =
+            params.layer_tensors(spec, 0).into_iter().cloned().collect();
+        let opts = PruneOptions::default();
+        let res = prune_unit(
+            &session, &presets, spec, &Method::Dense, &opts, 0, &layer_tensors, &batches, &batches,
+            &valids,
+        )
+        .unwrap();
+        assert!(res.pruned.is_empty());
+        assert_eq!(res.y_dense.len(), res.y_pruned.len());
+        // dense and "pruned" paths are identical when nothing was pruned
+        for (a, b) in res.y_dense.iter().zip(&res.y_pruned) {
+            assert_eq!(a.shape(), b.shape());
+            assert!(crate::tensor::ops::frob_dist(a, b) < 1e-5);
+        }
+    }
+}

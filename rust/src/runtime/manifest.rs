@@ -1,0 +1,146 @@
+//! artifacts/manifest.json — the contract between aot.py and the runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::ser::json::Json;
+
+/// Element type of an artifact argument.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unknown dtype '{other}' in manifest"),
+        }
+    }
+}
+
+/// One artifact input: name, dims, dtype (in positional order).
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub dtype: DType,
+}
+
+/// One lowered artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<ArgSpec>,
+    pub outputs: usize,
+}
+
+/// The whole manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub seq_len: usize,
+    pub capture_batch: usize,
+    pub train_batch: usize,
+    pub gram_chunk: usize,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+    /// Raw model metadata (params/ops) for cross-language parity tests.
+    pub models_json: Json,
+}
+
+impl Manifest {
+    /// Load from `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let v = Json::parse_file(&dir.join("manifest.json"))
+            .context("manifest.json missing — run `make artifacts` first")?;
+        let mut artifacts = BTreeMap::new();
+        for (name, av) in v.req("artifacts")?.as_obj().context("artifacts")? {
+            let mut inputs = Vec::new();
+            for iv in av.req("inputs")?.as_arr().context("inputs")? {
+                inputs.push(ArgSpec {
+                    name: iv.req("name")?.as_str().context("input name")?.to_string(),
+                    dims: iv
+                        .req("dims")?
+                        .as_arr()
+                        .context("dims")?
+                        .iter()
+                        .map(|d| d.as_usize().context("dim"))
+                        .collect::<Result<_>>()?,
+                    dtype: DType::parse(iv.req("dtype")?.as_str().context("dtype")?)?,
+                });
+            }
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    name: name.clone(),
+                    file: dir.join(av.req("file")?.as_str().context("file")?),
+                    inputs,
+                    outputs: av.req("outputs")?.as_usize().context("outputs")?,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            seq_len: v.req("seq_len")?.as_usize().context("seq_len")?,
+            capture_batch: v.req("capture_batch")?.as_usize().context("capture_batch")?,
+            train_batch: v.req("train_batch")?.as_usize().context("train_batch")?,
+            gram_chunk: v.req("gram_chunk")?.as_usize().context("gram_chunk")?,
+            artifacts,
+            models_json: v.req("models")?.clone(),
+        })
+    }
+
+    /// Load from the repository's default artifacts directory.
+    pub fn load_default() -> Result<Manifest> {
+        let root = crate::config::repo_root()?;
+        Self::load(&crate::config::paths::artifacts_dir(&root))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.artifacts.get(name).ok_or_else(|| {
+            anyhow::anyhow!("artifact '{name}' not in manifest (run `make artifacts`?)")
+        })
+    }
+
+    /// True if the HLO file for `name` exists on disk.
+    pub fn available(&self, name: &str) -> bool {
+        self.artifacts.get(name).map(|a| a.file.exists()).unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_manifest_and_artifacts_exist() {
+        let m = Manifest::load_default().unwrap();
+        assert_eq!(m.seq_len, 64);
+        assert!(m.artifacts.len() >= 70, "expected ~74 artifacts, got {}", m.artifacts.len());
+        for key in ["fista_64x64", "gram_64", "power_64", "capture_topt-s1", "score_topt-s1", "train_topt-s1"] {
+            let a = m.artifact(key).unwrap();
+            assert!(a.file.exists(), "{} missing on disk", a.file.display());
+        }
+        let f = m.artifact("fista_64x64").unwrap();
+        assert_eq!(f.inputs.len(), 5);
+        assert_eq!(f.inputs[0].name, "a");
+        assert_eq!(f.inputs[0].dims, vec![64, 64]);
+        assert_eq!(f.outputs, 2);
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn score_has_i32_tokens() {
+        let m = Manifest::load_default().unwrap();
+        let s = m.artifact("score_tllama-s1").unwrap();
+        let tok = s.inputs.iter().find(|i| i.name == "tokens").unwrap();
+        assert_eq!(tok.dtype, DType::I32);
+        assert_eq!(tok.dims, vec![m.capture_batch, m.seq_len + 1]);
+    }
+}

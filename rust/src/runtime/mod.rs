@@ -1,0 +1,19 @@
+//! PJRT runtime: loads the AOT artifacts (HLO text) produced by
+//! `make artifacts` and executes them from the coordinator hot path.
+//!
+//! * `manifest`  — typed view of artifacts/manifest.json (the cross-language
+//!   contract: artifact → input order/shapes/dtypes → output arity).
+//! * `session`   — one PJRT CPU client + a lazily-compiled executable cache.
+//!   `PjRtClient` is `Rc`-backed (not `Send`), so a `Session` is pinned to
+//!   its thread.
+//! * `pool`      — the "device fleet": N worker threads, each owning its own
+//!   `Session`, pulling prune-unit jobs from a shared queue (the paper's
+//!   parallel layer-wise pruning, §3.4).
+
+pub mod manifest;
+pub mod pool;
+pub mod session;
+
+pub use manifest::{ArgSpec, ArtifactInfo, DType, Manifest};
+pub use pool::ExecutorPool;
+pub use session::{Arg, Session};

@@ -1,0 +1,149 @@
+//! The device fleet: N worker threads, each owning a `Session`.
+//!
+//! The paper's parallel pruning (§3.4) treats each decoder layer as an
+//! independent unit schedulable on its own device. Here a "device" is one
+//! worker thread with its own PJRT CPU client (the client is not `Send`,
+//! so sessions cannot be shared). Jobs are `FnOnce(&Session)` closures
+//! pulled from a shared FIFO queue; results flow back through per-caller
+//! channels embedded in the closures.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use super::manifest::Manifest;
+use super::session::Session;
+
+type Job = Box<dyn FnOnce(&Session) + Send + 'static>;
+
+struct Queue {
+    jobs: Mutex<(VecDeque<Job>, bool)>, // (queue, shutdown)
+    cv: Condvar,
+}
+
+/// A pool of PJRT worker threads.
+pub struct ExecutorPool {
+    queue: Arc<Queue>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ExecutorPool {
+    /// Spawn `n` workers, each with its own `Session` over `manifest`.
+    pub fn new(manifest: Arc<Manifest>, n: usize) -> Result<ExecutorPool> {
+        assert!(n > 0);
+        let queue = Arc::new(Queue { jobs: Mutex::new((VecDeque::new(), false)), cv: Condvar::new() });
+        let mut workers = Vec::with_capacity(n);
+        for wid in 0..n {
+            let q = queue.clone();
+            let m = manifest.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("pjrt-worker-{wid}"))
+                    .spawn(move || worker_loop(q, m))
+                    .expect("spawn worker"),
+            );
+        }
+        Ok(ExecutorPool { queue, workers })
+    }
+
+    /// Enqueue a job; it will run on some worker's session.
+    pub fn submit(&self, job: impl FnOnce(&Session) + Send + 'static) {
+        let mut guard = self.queue.jobs.lock().unwrap();
+        guard.0.push_back(Box::new(job));
+        drop(guard);
+        self.queue.cv.notify_one();
+    }
+
+    /// Convenience: run `f` on a worker and block for its value.
+    pub fn run_blocking<T: Send + 'static>(
+        &self,
+        f: impl FnOnce(&Session) -> T + Send + 'static,
+    ) -> T {
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.submit(move |s| {
+            let _ = tx.send(f(s));
+        });
+        rx.recv().expect("worker dropped result (panicked?)")
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ExecutorPool {
+    fn drop(&mut self) {
+        {
+            let mut guard = self.queue.jobs.lock().unwrap();
+            guard.1 = true;
+        }
+        self.queue.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(queue: Arc<Queue>, manifest: Arc<Manifest>) {
+    let session = match Session::new(manifest) {
+        Ok(s) => s,
+        Err(e) => {
+            crate::log_error!("worker failed to create PJRT session: {e}");
+            return;
+        }
+    };
+    loop {
+        let job = {
+            let mut guard = queue.jobs.lock().unwrap();
+            loop {
+                if let Some(job) = guard.0.pop_front() {
+                    break job;
+                }
+                if guard.1 {
+                    return;
+                }
+                guard = queue.cv.wait(guard).unwrap();
+            }
+        };
+        job(&session);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::session::Arg;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn pool_runs_jobs_on_all_workers() {
+        let manifest = Arc::new(Manifest::load_default().unwrap());
+        let pool = ExecutorPool::new(manifest.clone(), 2).unwrap();
+        let chunk = manifest.gram_chunk;
+        let (tx, rx) = std::sync::mpsc::channel();
+        for i in 0..4 {
+            let tx = tx.clone();
+            pool.submit(move |s| {
+                let x = Tensor::from_vec(vec![64, chunk], vec![1.0; 64 * chunk]);
+                let out = s.run("gram_64", &[Arg::T(&x), Arg::T(&x)]).unwrap();
+                tx.send((i, out[0].first())).unwrap();
+            });
+        }
+        drop(tx);
+        let results: Vec<_> = rx.iter().collect();
+        assert_eq!(results.len(), 4);
+        for (_, v) in results {
+            assert_eq!(v, chunk as f32); // row of ones dotted with itself
+        }
+    }
+
+    #[test]
+    fn run_blocking_returns_value() {
+        let manifest = Arc::new(Manifest::load_default().unwrap());
+        let pool = ExecutorPool::new(manifest, 1).unwrap();
+        let x = pool.run_blocking(|_s| 41 + 1);
+        assert_eq!(x, 42);
+    }
+}

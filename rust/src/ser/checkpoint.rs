@@ -1,0 +1,142 @@
+//! Model checkpoints: named parameter tensors + a JSON sidecar with the
+//! model identity and training metadata.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::json::Json;
+use super::tensorfile;
+use crate::model::params::ModelParams;
+
+/// Metadata stored next to the `.fpt` payload.
+#[derive(Clone, Debug)]
+pub struct CheckpointMeta {
+    pub model: String,
+    pub corpus: String,
+    pub steps: usize,
+    pub final_loss: f64,
+    pub seed: u64,
+}
+
+impl CheckpointMeta {
+    fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("model".into(), Json::Str(self.model.clone()));
+        m.insert("corpus".into(), Json::Str(self.corpus.clone()));
+        m.insert("steps".into(), Json::Num(self.steps as f64));
+        m.insert("final_loss".into(), Json::Num(self.final_loss));
+        m.insert("seed".into(), Json::Num(self.seed as f64));
+        Json::Obj(m)
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(CheckpointMeta {
+            model: v.req("model")?.as_str().context("model")?.to_string(),
+            corpus: v.req("corpus")?.as_str().context("corpus")?.to_string(),
+            steps: v.req("steps")?.as_usize().context("steps")?,
+            final_loss: v.req("final_loss")?.as_f64().context("final_loss")?,
+            seed: v.req("seed")?.as_f64().context("seed")? as u64,
+        })
+    }
+}
+
+fn meta_path(path: &Path) -> PathBuf {
+    path.with_extension("meta.json")
+}
+
+/// Save parameters + metadata (`<path>.fpt` + `<path>.meta.json`).
+pub fn save(path: &Path, params: &ModelParams, meta: &CheckpointMeta) -> Result<()> {
+    let entries: Vec<(String, &crate::tensor::Tensor)> =
+        params.iter().map(|(n, t)| (n.to_string(), t)).collect();
+    tensorfile::write_tensors(path, &entries)?;
+    std::fs::write(meta_path(path), meta.to_json().to_string_compact())?;
+    Ok(())
+}
+
+/// Load a checkpoint; validates the tensor set matches the spec of `meta.model`.
+pub fn load(path: &Path) -> Result<(ModelParams, CheckpointMeta)> {
+    let meta_file = meta_path(path);
+    let meta = CheckpointMeta::from_json(&Json::parse_file(&meta_file)?)?;
+    let tensors = tensorfile::read_tensor_map(path)?;
+    let params = ModelParams::from_map(&meta.model, tensors)?;
+    Ok((params, meta))
+}
+
+/// True if both the payload and the sidecar exist.
+pub fn exists(path: &Path) -> bool {
+    path.exists() && meta_path(path).exists()
+}
+
+/// Conventional checkpoint location for a (model, corpus, steps, seed) run.
+pub fn default_path(root: &Path, model: &str, corpus: &str, steps: usize, seed: u64) -> PathBuf {
+    root.join("checkpoints").join(format!("{model}_{corpus}_{steps}_{seed}.fpt"))
+}
+
+/// Guard against loading a checkpoint for a different model spec.
+pub fn check_model(meta: &CheckpointMeta, expected: &str) -> Result<()> {
+    if meta.model != expected {
+        bail!("checkpoint is for model '{}', expected '{}'", meta.model, expected);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{repo_root, Presets};
+    use crate::model::init::init_params;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("fp_ckpt_{name}_{}.fpt", std::process::id()))
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let presets = Presets::load(&repo_root().unwrap()).unwrap();
+        let spec = presets.model("topt-s1").unwrap();
+        let params = init_params(spec, 17);
+        let meta = CheckpointMeta {
+            model: "topt-s1".into(),
+            corpus: "ptb-syn".into(),
+            steps: 42,
+            final_loss: 2.5,
+            seed: 17,
+        };
+        let path = tmp("roundtrip");
+        save(&path, &params, &meta).unwrap();
+        assert!(exists(&path));
+        let (back, bmeta) = load(&path).unwrap();
+        assert_eq!(bmeta.steps, 42);
+        assert_eq!(bmeta.corpus, "ptb-syn");
+        for ((n1, t1), (_n2, t2)) in params.iter().zip(back.iter()) {
+            assert_eq!(t1, t2, "mismatch at {n1}");
+        }
+        assert!(check_model(&bmeta, "topt-s1").is_ok());
+        assert!(check_model(&bmeta, "topt-s2").is_err());
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(meta_path(&path)).ok();
+    }
+
+    #[test]
+    fn missing_sidecar_fails() {
+        let presets = Presets::load(&repo_root().unwrap()).unwrap();
+        let spec = presets.model("topt-s1").unwrap();
+        let params = init_params(spec, 1);
+        let path = tmp("nosidecar");
+        let entries: Vec<(String, &crate::tensor::Tensor)> =
+            params.iter().map(|(n, t)| (n.to_string(), t)).collect();
+        tensorfile::write_tensors(&path, &entries).unwrap();
+        assert!(!exists(&path));
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn default_path_is_deterministic() {
+        let a = default_path(Path::new("/x"), "m", "c", 10, 3);
+        let b = default_path(Path::new("/x"), "m", "c", 10, 3);
+        assert_eq!(a, b);
+        assert_ne!(a, default_path(Path::new("/x"), "m", "c", 11, 3));
+    }
+}

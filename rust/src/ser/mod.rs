@@ -1,0 +1,8 @@
+//! Serialization substrates: a JSON parser/writer (serde is not available
+//! in the offline image) and a binary tensor/checkpoint format.
+
+pub mod checkpoint;
+pub mod json;
+pub mod tensorfile;
+
+pub use json::Json;

@@ -1,0 +1,130 @@
+//! `.fpt` — a minimal binary multi-tensor container (npz substrate).
+//!
+//! Layout (little-endian):
+//! ```text
+//!   magic   "FPT1" (4 bytes)
+//!   count   u32
+//!   repeat count times:
+//!     name_len u32, name utf-8 bytes
+//!     ndim     u32, dims u64 × ndim
+//!     data     f32 × prod(dims)
+//! ```
+//! Used for model checkpoints, optimizer state and cached Gram matrices.
+
+use std::collections::BTreeMap;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 4] = b"FPT1";
+
+/// Write named tensors; entries are written in the order given.
+pub fn write_tensors(path: &Path, entries: &[(String, &Tensor)]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut w = BufWriter::new(std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?);
+    w.write_all(MAGIC)?;
+    w.write_all(&(entries.len() as u32).to_le_bytes())?;
+    for (name, t) in entries {
+        let nb = name.as_bytes();
+        w.write_all(&(nb.len() as u32).to_le_bytes())?;
+        w.write_all(nb)?;
+        w.write_all(&(t.shape().len() as u32).to_le_bytes())?;
+        for &d in t.shape() {
+            w.write_all(&(d as u64).to_le_bytes())?;
+        }
+        // bulk-write the f32 payload
+        let data = t.data();
+        let bytes = unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+        w.write_all(bytes)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read all tensors, preserving insertion order in the returned Vec and
+/// providing a name index.
+pub fn read_tensors(path: &Path) -> Result<Vec<(String, Tensor)>> {
+    let mut r = BufReader::new(std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: not an FPT1 file", path.display());
+    }
+    let count = read_u32(&mut r)? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = read_u32(&mut r)? as usize;
+        if name_len > 1 << 20 {
+            bail!("corrupt tensorfile: name too long");
+        }
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let name = String::from_utf8(name).context("tensor name not utf-8")?;
+        let ndim = read_u32(&mut r)? as usize;
+        if ndim > 8 {
+            bail!("corrupt tensorfile: ndim {ndim}");
+        }
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            let mut b = [0u8; 8];
+            r.read_exact(&mut b)?;
+            dims.push(u64::from_le_bytes(b) as usize);
+        }
+        let len: usize = dims.iter().product();
+        if len > 1 << 30 {
+            bail!("corrupt tensorfile: tensor too large");
+        }
+        let mut data = vec![0f32; len];
+        let bytes = unsafe { std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, len * 4) };
+        r.read_exact(bytes)?;
+        out.push((name, Tensor::from_vec(dims, data)));
+    }
+    Ok(out)
+}
+
+/// Read into a name → tensor map.
+pub fn read_tensor_map(path: &Path) -> Result<BTreeMap<String, Tensor>> {
+    Ok(read_tensors(path)?.into_iter().collect())
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("fpt_test");
+        let path = dir.join("t.fpt");
+        let a = Tensor::from_vec(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = Tensor::from_vec(vec![4], vec![-1., 0., 1., 2.]);
+        write_tensors(&path, &[("a".into(), &a), ("b".into(), &b)]).unwrap();
+        let back = read_tensors(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].0, "a");
+        assert_eq!(back[0].1.shape(), &[2, 3]);
+        assert_eq!(back[0].1.data(), a.data());
+        assert_eq!(back[1].1.data(), b.data());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("fpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.fpt");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(read_tensors(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,165 @@
+//! Compressed sparse row (CSR) matrices for pruned weights.
+
+use crate::tensor::Tensor;
+
+/// CSR storage of a pruned weight matrix W [m, n].
+#[derive(Clone, Debug)]
+pub struct CsrMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row start offsets, len = rows + 1.
+    pub indptr: Vec<u32>,
+    /// Column indices of nonzeros.
+    pub indices: Vec<u32>,
+    /// Nonzero values.
+    pub values: Vec<f32>,
+}
+
+impl CsrMatrix {
+    /// Compress a dense matrix, dropping exact zeros.
+    pub fn from_dense(w: &Tensor) -> CsrMatrix {
+        let (m, n) = (w.rows(), w.cols());
+        let mut indptr = Vec::with_capacity(m + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0u32);
+        for i in 0..m {
+            for (j, &v) in w.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    indices.push(j as u32);
+                    values.push(v);
+                }
+            }
+            indptr.push(indices.len() as u32);
+        }
+        CsrMatrix { rows: m, cols: n, indptr, indices, values }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Fraction of zero entries.
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// Storage bytes (values + indices + indptr) vs 4·m·n dense.
+    pub fn storage_bytes(&self) -> usize {
+        4 * self.values.len() + 4 * self.indices.len() + 4 * self.indptr.len()
+    }
+
+    /// Decompress back to dense (testing).
+    pub fn to_dense(&self) -> Tensor {
+        let mut out = Tensor::zeros(vec![self.rows, self.cols]);
+        for i in 0..self.rows {
+            let (a, b) = (self.indptr[i] as usize, self.indptr[i + 1] as usize);
+            let row = out.row_mut(i);
+            for k in a..b {
+                row[self.indices[k] as usize] = self.values[k];
+            }
+        }
+        out
+    }
+
+    /// y = W x for dense x [n].
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0f32; self.rows];
+        for i in 0..self.rows {
+            let (a, b) = (self.indptr[i] as usize, self.indptr[i + 1] as usize);
+            let mut acc = 0f32;
+            for k in a..b {
+                acc += self.values[k] * x[self.indices[k] as usize];
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    /// out = X @ Wᵀ for dense X [s, n] → [s, rows]. Same contract as the
+    /// dense `linop` in model::forward so the two paths interchange.
+    pub fn matmul_t(&self, x: &Tensor) -> Tensor {
+        let s = x.rows();
+        assert_eq!(x.cols(), self.cols);
+        let mut out = Tensor::zeros(vec![s, self.rows]);
+        for t in 0..s {
+            let xrow = x.row(t);
+            let orow = out.row_mut(t);
+            for i in 0..self.rows {
+                let (a, b) = (self.indptr[i] as usize, self.indptr[i + 1] as usize);
+                let mut acc = 0f32;
+                for k in a..b {
+                    acc += self.values[k] * xrow[self.indices[k] as usize];
+                }
+                orow[i] = acc;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Sparsity;
+    use crate::pruner::round_to_sparsity;
+    use crate::tensor::ops;
+    use crate::util::Pcg64;
+
+    fn sparse_fixture(seed: u64, m: usize, n: usize, rate: f64) -> (Tensor, CsrMatrix) {
+        let mut rng = Pcg64::seeded(seed);
+        let w = round_to_sparsity(
+            &Tensor::from_vec(vec![m, n], rng.normal_vec(m * n, 1.0)),
+            Sparsity::Unstructured(rate),
+        );
+        let csr = CsrMatrix::from_dense(&w);
+        (w, csr)
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let (w, csr) = sparse_fixture(1, 13, 29, 0.6);
+        assert_eq!(csr.to_dense(), w);
+        assert!((csr.sparsity() - 0.6).abs() < 0.02);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let (w, csr) = sparse_fixture(2, 24, 48, 0.5);
+        let mut rng = Pcg64::seeded(3);
+        let x = rng.normal_vec(48, 1.0);
+        let sparse_y = csr.matvec(&x);
+        let dense_y = ops::matvec(&w, &x);
+        for (a, b) in sparse_y.iter().zip(&dense_y) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn matmul_t_matches_dense() {
+        let (w, csr) = sparse_fixture(4, 32, 64, 0.75);
+        let mut rng = Pcg64::seeded(5);
+        let x = Tensor::from_vec(vec![7, 64], rng.normal_vec(7 * 64, 1.0));
+        let sparse = csr.matmul_t(&x);
+        let dense = ops::matmul_nt(&x, &w);
+        assert!(ops::frob_dist(&sparse, &dense) < 1e-3);
+    }
+
+    #[test]
+    fn storage_shrinks_with_sparsity() {
+        let (_w50, c50) = sparse_fixture(6, 64, 64, 0.5);
+        let (_w90, c90) = sparse_fixture(6, 64, 64, 0.9);
+        let dense_bytes = 4 * 64 * 64;
+        assert!(c90.storage_bytes() < c50.storage_bytes());
+        assert!(c90.storage_bytes() < dense_bytes / 2);
+    }
+
+    #[test]
+    fn empty_rows_are_fine() {
+        let w = Tensor::from_vec(vec![3, 4], vec![0.; 12]);
+        let csr = CsrMatrix::from_dense(&w);
+        assert_eq!(csr.nnz(), 0);
+        assert_eq!(csr.matvec(&[1., 2., 3., 4.]), vec![0., 0., 0.]);
+    }
+}

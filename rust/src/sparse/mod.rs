@@ -1,0 +1,13 @@
+//! Sparse inference: the payoff side of pruning.
+//!
+//! The paper's motivation (§1–2) is that pruned weights reduce memory and
+//! compute — 2:4 sparsity yields up to 2× speedup on Ampere tensor cores.
+//! This module provides the CPU analog: CSR weight storage, sparse×dense
+//! kernels, and a sparse model forward, so the repo can *measure* the
+//! inference win its own pruner produces (bench `sparse_speedup`).
+
+pub mod csr;
+pub mod forward;
+
+pub use csr::CsrMatrix;
+pub use forward::{sparse_logits, sparse_nll, SparseModel};

@@ -1,0 +1,163 @@
+//! Dense f32 tensors with row-major layout.
+//!
+//! This is the coordinator-side tensor substrate: weights, activations and
+//! Gram matrices live here between PJRT calls. Heavy math runs in the AOT
+//! artifacts; the native ops below (blocked matmul, reductions) exist for
+//! the warm-start baselines, tests, and the native FISTA fallback.
+
+pub mod ops;
+
+use std::fmt;
+
+/// A dense, row-major f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)?;
+        if self.data.len() <= 8 {
+            write!(f, " {:?}", self.data)?;
+        }
+        Ok(())
+    }
+}
+
+impl Tensor {
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let len = shape.iter().product();
+        Tensor { shape, data: vec![0.0; len] }
+    }
+
+    pub fn from_vec(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape, data }
+    }
+
+    pub fn scalar(x: f32) -> Self {
+        Tensor { shape: vec![], data: vec![x] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Number of rows for a 2-D tensor.
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.shape.len(), 2, "rows() needs 2-D, got {:?}", self.shape);
+        self.shape[0]
+    }
+
+    /// Number of columns for a 2-D tensor.
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.shape.len(), 2, "cols() needs 2-D, got {:?}", self.shape);
+        self.shape[1]
+    }
+
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.shape[1] + j]
+    }
+
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.shape[1] + j] = v;
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols();
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// Reshape without copying (len must match).
+    pub fn reshaped(mut self, shape: Vec<usize>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape;
+        self
+    }
+
+    pub fn first(&self) -> f32 {
+        self.data[0]
+    }
+
+    /// Fraction of exactly-zero entries.
+    pub fn sparsity(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().filter(|&&x| x == 0.0).count() as f64 / self.data.len() as f64
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let t = Tensor::from_vec(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.cols(), 3);
+        assert_eq!(t.at2(1, 2), 6.0);
+        assert_eq!(t.row(0), &[1., 2., 3.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::from_vec(vec![2, 2], vec![1., 2., 3.]);
+    }
+
+    #[test]
+    fn sparsity_counts_zeros() {
+        let t = Tensor::from_vec(vec![4], vec![0., 1., 0., 2.]);
+        assert!((t.sparsity() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn frob_norm() {
+        let t = Tensor::from_vec(vec![2], vec![3., 4.]);
+        assert!((t.frob_norm() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).reshaped(vec![3, 2]);
+        assert_eq!(t.shape(), &[3, 2]);
+        assert_eq!(t.at2(2, 1), 6.0);
+    }
+}

@@ -1,0 +1,234 @@
+//! Native tensor ops: cache-blocked matmul variants, transposes, reductions.
+//!
+//! These back the warm-start baselines (SparseGPT/Wanda), the native FISTA
+//! reference, and B = W·C in the pruning unit. The request-path hot loops
+//! (FISTA iterations, Gram accumulation, model forward) run in the AOT
+//! artifacts instead — see `perf_gram`/`perf_fista` benches for the
+//! native-vs-XLA comparison that justifies the split.
+
+use super::Tensor;
+
+const BLOCK: usize = 64;
+
+/// C = A @ B  for A[m,k], B[k,n] (cache-blocked, k-innermost).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul inner dims: {k} vs {k2}");
+    let mut out = Tensor::zeros(vec![m, n]);
+    let ad = a.data();
+    let bd = b.data();
+    let od = out.data_mut();
+    for i0 in (0..m).step_by(BLOCK) {
+        let i1 = (i0 + BLOCK).min(m);
+        for k0 in (0..k).step_by(BLOCK) {
+            let k1 = (k0 + BLOCK).min(k);
+            for i in i0..i1 {
+                let arow = &ad[i * k..(i + 1) * k];
+                let orow = &mut od[i * n..(i + 1) * n];
+                for kk in k0..k1 {
+                    let av = arow[kk];
+                    if av == 0.0 {
+                        continue; // sparse weights: skip zero rows cheaply
+                    }
+                    let brow = &bd[kk * n..(kk + 1) * n];
+                    for j in 0..n {
+                        orow[j] += av * brow[j];
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// C = A @ B^T for A[m,k], B[n,k] — rows dot rows (contiguous, fast).
+pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let (n, k2) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul_nt inner dims: {k} vs {k2}");
+    let mut out = Tensor::zeros(vec![m, n]);
+    let ad = a.data();
+    let bd = b.data();
+    let od = out.data_mut();
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &bd[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += arow[kk] * brow[kk];
+            }
+            od[i * n + j] = acc;
+        }
+    }
+    out
+}
+
+/// B = A^T (2-D transpose).
+pub fn transpose(a: &Tensor) -> Tensor {
+    let (m, n) = (a.rows(), a.cols());
+    let mut out = Tensor::zeros(vec![n, m]);
+    let ad = a.data();
+    let od = out.data_mut();
+    for i0 in (0..m).step_by(BLOCK) {
+        for j0 in (0..n).step_by(BLOCK) {
+            for i in i0..(i0 + BLOCK).min(m) {
+                for j in j0..(j0 + BLOCK).min(n) {
+                    od[j * m + i] = ad[i * n + j];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// y = A @ x for A[m,n], x[n].
+pub fn matvec(a: &Tensor, x: &[f32]) -> Vec<f32> {
+    let (m, n) = (a.rows(), a.cols());
+    assert_eq!(n, x.len());
+    let ad = a.data();
+    (0..m)
+        .map(|i| {
+            let row = &ad[i * n..(i + 1) * n];
+            row.iter().zip(x).map(|(&a, &b)| a * b).sum()
+        })
+        .collect()
+}
+
+/// out = a − b (elementwise).
+pub fn sub(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.shape(), b.shape());
+    Tensor::from_vec(
+        a.shape().to_vec(),
+        a.data().iter().zip(b.data()).map(|(&x, &y)| x - y).collect(),
+    )
+}
+
+/// out = a + s·b (axpy).
+pub fn add_scaled(a: &Tensor, b: &Tensor, s: f32) -> Tensor {
+    assert_eq!(a.shape(), b.shape());
+    Tensor::from_vec(
+        a.shape().to_vec(),
+        a.data().iter().zip(b.data()).map(|(&x, &y)| x + s * y).collect(),
+    )
+}
+
+/// ⟨a, b⟩ (flattened dot product, f64 accumulation).
+pub fn dot(a: &Tensor, b: &Tensor) -> f64 {
+    assert_eq!(a.shape(), b.shape());
+    a.data().iter().zip(b.data()).map(|(&x, &y)| (x as f64) * (y as f64)).sum()
+}
+
+/// ‖a − b‖_F.
+pub fn frob_dist(a: &Tensor, b: &Tensor) -> f64 {
+    assert_eq!(a.shape(), b.shape());
+    a.data()
+        .iter()
+        .zip(b.data())
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// tr(W A Wᵀ) − 2⟨W, B⟩: the Gram form of ‖WX* − W₀X‖² − ‖W₀X‖².
+pub fn quad_obj(a: &Tensor, b: &Tensor, w: &Tensor) -> f64 {
+    let wa = matmul(w, a);
+    dot(&wa, w) - 2.0 * dot(w, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn randt(rng: &mut Pcg64, shape: Vec<usize>) -> Tensor {
+        let len = shape.iter().product();
+        Tensor::from_vec(shape, rng.normal_vec(len, 1.0))
+    }
+
+    fn naive_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        let mut out = Tensor::zeros(vec![m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for kk in 0..k {
+                    acc += a.at2(i, kk) * b.at2(kk, j);
+                }
+                out.set2(i, j, acc);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Pcg64::seeded(1);
+        for (m, k, n) in [(3, 4, 5), (64, 64, 64), (65, 33, 17), (1, 128, 1)] {
+            let a = randt(&mut rng, vec![m, k]);
+            let b = randt(&mut rng, vec![k, n]);
+            let got = matmul(&a, &b);
+            let want = naive_matmul(&a, &b);
+            assert!(frob_dist(&got, &want) < 1e-3 * (want.frob_norm() + 1.0), "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn matmul_nt_matches_matmul() {
+        let mut rng = Pcg64::seeded(2);
+        let a = randt(&mut rng, vec![20, 30]);
+        let b = randt(&mut rng, vec![25, 30]);
+        let got = matmul_nt(&a, &b);
+        let want = matmul(&a, &transpose(&b));
+        assert!(frob_dist(&got, &want) < 1e-3);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg64::seeded(3);
+        let a = randt(&mut rng, vec![7, 13]);
+        assert_eq!(transpose(&transpose(&a)), a);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Pcg64::seeded(4);
+        let a = randt(&mut rng, vec![9, 6]);
+        let x = rng.normal_vec(6, 1.0);
+        let xv = Tensor::from_vec(vec![6, 1], x.clone());
+        let want = matmul(&a, &xv);
+        let got = matvec(&a, &x);
+        for i in 0..9 {
+            assert!((got[i] - want.at2(i, 0)).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn quad_obj_matches_direct() {
+        // quad_obj(A,B,W) with A = X Xᵀ, B = W0 X Xᵀ must equal
+        // ‖W X − W0 X‖² − ‖W0 X‖².
+        let mut rng = Pcg64::seeded(5);
+        let w0 = randt(&mut rng, vec![4, 6]);
+        let w = randt(&mut rng, vec![4, 6]);
+        let x = randt(&mut rng, vec![6, 50]);
+        let a = matmul_nt(&x, &x);
+        let b = matmul(&w0, &a);
+        let wx = matmul(&w, &x);
+        let w0x = matmul(&w0, &x);
+        let direct = frob_dist(&wx, &w0x).powi(2) - w0x.frob_norm().powi(2);
+        let got = quad_obj(&a, &b, &w);
+        assert!((got - direct).abs() < 1e-2 * direct.abs().max(1.0), "{got} vs {direct}");
+    }
+
+    #[test]
+    fn add_scaled_and_sub() {
+        let a = Tensor::from_vec(vec![3], vec![1., 2., 3.]);
+        let b = Tensor::from_vec(vec![3], vec![1., 1., 1.]);
+        assert_eq!(add_scaled(&a, &b, 2.0).data(), &[3., 4., 5.]);
+        assert_eq!(sub(&a, &b).data(), &[0., 1., 2.]);
+    }
+}

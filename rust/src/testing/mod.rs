@@ -1,0 +1,141 @@
+//! Mini property-based testing framework (proptest substrate).
+//!
+//! `check` runs a property over `cases` random inputs drawn from a
+//! generator; on failure it retries with a simple halving shrink of the
+//! failing seed's size parameter and reports the smallest reproduction.
+
+use crate::util::Pcg64;
+
+/// Size-parameterized random input generator.
+pub struct Gen<'a> {
+    pub rng: &'a mut Pcg64,
+    /// Size hint in [0, 1]: generators should scale dimensions with it.
+    pub size: f64,
+}
+
+impl<'a> Gen<'a> {
+    /// Integer in [lo, hi], biased toward lo as size shrinks.
+    pub fn int(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        let span = ((hi - lo) as f64 * self.size).round() as usize;
+        lo + self.rng.below(span as u64 + 1) as usize
+    }
+
+    /// Multiple-of-32 dimension in [32, cap] (artifact-friendly shapes).
+    pub fn dim32(&mut self, cap: usize) -> usize {
+        32 * self.int(1, (cap / 32).max(1))
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.next_f32() * (hi - lo)
+    }
+
+    pub fn vec_normal(&mut self, len: usize, std: f32) -> Vec<f32> {
+        self.rng.normal_vec(len, std)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+}
+
+/// Run `prop` over `cases` random inputs. Panics with the failing seed and
+/// the smallest failing size found by halving.
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen<'_>) -> Result<(), String>,
+{
+    let base_seed = 0xF15A_u64;
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut failure: Option<(f64, String)> = None;
+        {
+            let mut rng = Pcg64::new(seed, 77);
+            let mut g = Gen { rng: &mut rng, size: 1.0 };
+            if let Err(msg) = prop(&mut g) {
+                failure = Some((1.0, msg));
+            }
+        }
+        if let Some((_, first_msg)) = failure {
+            // Shrink: replay the same seed at smaller sizes.
+            let mut smallest = (1.0, first_msg);
+            let mut size = 0.5;
+            while size > 0.05 {
+                let mut rng = Pcg64::new(seed, 77);
+                let mut g = Gen { rng: &mut rng, size };
+                if let Err(msg) = prop(&mut g) {
+                    smallest = (size, msg);
+                    size /= 2.0;
+                } else {
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}, smallest size {:.2}): {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// Assert two f32 slices are close (atol + rtol), reporting the worst index.
+pub fn assert_allclose(a: &[f32], b: &[f32], atol: f64, rtol: f64) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length {} vs {}", a.len(), b.len()));
+    }
+    let mut worst = (0usize, 0.0f64);
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let err = (x as f64 - y as f64).abs();
+        let bound = atol + rtol * (y as f64).abs();
+        if err > bound && err > worst.1 {
+            worst = (i, err);
+        }
+    }
+    if worst.1 > 0.0 {
+        return Err(format!(
+            "allclose failed at index {} ({} vs {}), err {:.3e}",
+            worst.0, a[worst.0], b[worst.0], worst.1
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs() {
+        check("commutative add", 50, |g| {
+            let x = g.f32_in(-10.0, 10.0);
+            let y = g.f32_in(-10.0, 10.0);
+            if (x + y - (y + x)).abs() < 1e-6 {
+                Ok(())
+            } else {
+                Err("add not commutative".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", 3, |_g| Err("nope".into()));
+    }
+
+    #[test]
+    fn allclose_reports_worst() {
+        assert!(assert_allclose(&[1.0, 2.0], &[1.0, 2.0], 1e-6, 0.0).is_ok());
+        let e = assert_allclose(&[1.0, 3.0], &[1.0, 2.0], 1e-6, 0.0).unwrap_err();
+        assert!(e.contains("index 1"));
+    }
+
+    #[test]
+    fn dim32_is_multiple_of_32() {
+        let mut rng = Pcg64::seeded(1);
+        let mut g = Gen { rng: &mut rng, size: 1.0 };
+        for _ in 0..100 {
+            assert_eq!(g.dim32(256) % 32, 0);
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! Training substrate: drives the AOT `train_{model}` artifact (AdamW
+//! causal-LM step) from rust to produce the real trained models the
+//! pruning experiments operate on.
+
+pub mod trainer;
+
+pub use trainer::{ensure_checkpoint, train, TrainResult};

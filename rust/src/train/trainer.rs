@@ -1,0 +1,167 @@
+//! Trainer: drives the `train_{model}` artifact (AdamW causal-LM step
+//! with warmup-cosine learning rate) to produce the real trained models
+//! the pruning experiments operate on. Checkpoints cache under
+//! artifacts/checkpoints/ so benches re-use trained models.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{ModelSpec, Presets, TrainOptions};
+use crate::data::{batches::train_batch, Corpus};
+use crate::model::init::init_params;
+use crate::model::params::ModelParams;
+use crate::runtime::session::{Arg, Session};
+use crate::ser::checkpoint::{self, CheckpointMeta};
+use crate::tensor::Tensor;
+use crate::util::{progress::Progress, Pcg64};
+
+/// Outcome of a training run.
+pub struct TrainResult {
+    pub params: ModelParams,
+    pub losses: Vec<f64>,
+    pub final_loss: f64,
+}
+
+/// Warmup-then-cosine learning rate (a standard LM schedule).
+pub fn lr_at(step: usize, opts: &TrainOptions) -> f64 {
+    let s = step as f64;
+    if step < opts.warmup {
+        return opts.lr * (s + 1.0) / opts.warmup as f64;
+    }
+    let total = (opts.steps.max(opts.warmup + 1) - opts.warmup) as f64;
+    let t = ((s - opts.warmup as f64) / total).clamp(0.0, 1.0);
+    opts.lr * (0.5 * (1.0 + (std::f64::consts::PI * t).cos())).max(0.02)
+}
+
+/// Train from scratch on the corpus train split.
+pub fn train(
+    session: &Session,
+    presets: &Presets,
+    spec: &ModelSpec,
+    corpus: &Corpus,
+    opts: &TrainOptions,
+) -> Result<TrainResult> {
+    let name = format!("train_{}", spec.name());
+    let tb = presets.train_batch;
+    let seq = spec.seq;
+    let mut params = init_params(spec, opts.seed);
+    let n = params.tensors().len();
+    let mut m: Vec<Tensor> =
+        params.specs().iter().map(|s| Tensor::zeros(s.shape.clone())).collect();
+    let mut v: Vec<Tensor> =
+        params.specs().iter().map(|s| Tensor::zeros(s.shape.clone())).collect();
+    let mut rng = Pcg64::new(opts.seed, 41);
+    let train_tokens = corpus.train_slice();
+    if train_tokens.len() < (seq + 1) * tb {
+        bail!("corpus '{}' too small to train on", corpus.name);
+    }
+
+    let tok_dims = [tb, seq + 1];
+    let mut losses = Vec::with_capacity(opts.steps);
+    let mut prog = Progress::new(&format!("train {}", spec.name()), opts.steps);
+    for step in 0..opts.steps {
+        let batch = train_batch(train_tokens, tb, seq, &mut rng);
+        let lr = lr_at(step, opts);
+        let t_in = (step + 1) as f32; // Adam bias-correction time index
+        let mut args: Vec<Arg<'_>> = Vec::with_capacity(3 * n + 3);
+        for t in params.tensors() {
+            args.push(Arg::T(t));
+        }
+        for t in &m {
+            args.push(Arg::T(t));
+        }
+        for t in &v {
+            args.push(Arg::T(t));
+        }
+        args.push(Arg::Scalar(t_in));
+        args.push(Arg::Scalar(lr as f32));
+        args.push(Arg::I32(&batch, &tok_dims));
+        let mut out = session.run(&name, &args).with_context(|| format!("train step {step}"))?;
+        if out.len() != 3 * n + 1 {
+            bail!("train artifact returned {} outputs, expected {}", out.len(), 3 * n + 1);
+        }
+        let loss = out.pop().expect("loss").first() as f64;
+        if !loss.is_finite() {
+            bail!("training diverged at step {step} (loss = {loss})");
+        }
+        v = out.split_off(2 * n);
+        m = out.split_off(n);
+        params.replace_all(out)?;
+        losses.push(loss);
+        prog.step(step + 1);
+    }
+    prog.finish();
+    let tail = &losses[losses.len().saturating_sub(20)..];
+    let final_loss = crate::metrics::mean(tail);
+    Ok(TrainResult { params, losses, final_loss })
+}
+
+/// Train-or-load: returns a cached checkpoint when one exists for this
+/// (model, corpus, steps, seed) tuple.
+pub fn ensure_checkpoint(
+    root: &Path,
+    session: &Session,
+    presets: &Presets,
+    spec: &ModelSpec,
+    corpus: &Corpus,
+    opts: &TrainOptions,
+) -> Result<ModelParams> {
+    let path = checkpoint::default_path(
+        &crate::config::paths::out_dir(root),
+        &spec.name(),
+        &corpus.name,
+        opts.steps,
+        opts.seed,
+    );
+    if checkpoint::exists(&path) {
+        let (params, meta) = checkpoint::load(&path)?;
+        checkpoint::check_model(&meta, &spec.name())?;
+        crate::log_info!("loaded checkpoint {} (loss {:.3})", path.display(), meta.final_loss);
+        return Ok(params);
+    }
+    crate::log_info!("training {} on {} for {} steps", spec.name(), corpus.name, opts.steps);
+    let res = train(session, presets, spec, corpus, opts)?;
+    checkpoint::save(
+        &path,
+        &res.params,
+        &CheckpointMeta {
+            model: spec.name(),
+            corpus: corpus.name.clone(),
+            steps: opts.steps,
+            final_loss: res.final_loss,
+            seed: opts.seed,
+        },
+    )?;
+    Ok(res.params)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::repo_root;
+    use crate::runtime::Manifest;
+    use std::sync::Arc;
+
+    #[test]
+    fn lr_schedule_shape() {
+        let opts = TrainOptions { steps: 100, lr: 1e-3, warmup: 10, seed: 0 };
+        assert!(lr_at(0, &opts) < lr_at(5, &opts));
+        assert!((lr_at(9, &opts) - 1e-3).abs() < 1e-4);
+        assert!(lr_at(50, &opts) < lr_at(10, &opts));
+        assert!(lr_at(99, &opts) > 0.0);
+    }
+
+    #[test]
+    fn loss_decreases_over_short_run() {
+        let presets = Presets::load(&repo_root().unwrap()).unwrap();
+        let spec = presets.model("topt-s1").unwrap();
+        let corpus = Corpus::generate(presets.corpus("ptb-syn").unwrap());
+        let session = Session::new(Arc::new(Manifest::load_default().unwrap())).unwrap();
+        let opts = TrainOptions { steps: 30, lr: 1e-3, warmup: 5, seed: 7 };
+        let res = train(&session, &presets, spec, &corpus, &opts).unwrap();
+        let first = crate::metrics::mean(&res.losses[..5]);
+        let last = crate::metrics::mean(&res.losses[res.losses.len() - 5..]);
+        assert!(last < first - 0.1, "loss should drop: first {first:.3} last {last:.3}");
+    }
+}

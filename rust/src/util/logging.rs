@@ -1,0 +1,88 @@
+//! Minimal leveled logger (env_logger substrate; offline image has no
+//! logging crates). Controlled by `FISTAPRUNER_LOG` = error|warn|info|debug.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(2); // Info by default
+static INIT: std::sync::Once = std::sync::Once::new();
+
+/// Initialize the level from `FISTAPRUNER_LOG` (idempotent).
+pub fn init() {
+    INIT.call_once(|| {
+        if let Ok(v) = std::env::var("FISTAPRUNER_LOG") {
+            let lvl = match v.to_ascii_lowercase().as_str() {
+                "error" => Level::Error,
+                "warn" => Level::Warn,
+                "info" => Level::Info,
+                "debug" => Level::Debug,
+                _ => Level::Info,
+            };
+            MAX_LEVEL.store(lvl as u8, Ordering::Relaxed);
+        }
+    });
+}
+
+pub fn set_level(lvl: Level) {
+    MAX_LEVEL.store(lvl as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(lvl: Level) -> bool {
+    init();
+    (lvl as u8) <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(lvl: Level, module: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(lvl) {
+        return;
+    }
+    let t = SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default();
+    let tag = match lvl {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+    };
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(err, "[{:>10}.{:03} {tag} {module}] {msg}", t.as_secs(), t.subsec_millis());
+}
+
+#[macro_export]
+macro_rules! log_error { ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Error, module_path!(), format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! log_warn { ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, module_path!(), format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! log_info { ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, module_path!(), format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! log_debug { ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, module_path!(), format_args!($($a)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn enabled_respects_level() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Debug));
+        set_level(Level::Info);
+    }
+}

@@ -1,0 +1,13 @@
+//! Small shared utilities: deterministic RNG, logging, timing, progress.
+//!
+//! The offline image vendors only the `xla` crate's dependency closure, so
+//! these are hand-built substrates for `rand`, `env_logger` etc. (see
+//! DESIGN.md §2).
+
+pub mod logging;
+pub mod progress;
+pub mod rng;
+pub mod timer;
+
+pub use rng::Pcg64;
+pub use timer::Stopwatch;

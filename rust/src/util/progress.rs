@@ -1,0 +1,75 @@
+//! One-line progress reporting for long-running commands (train, prune).
+
+use std::io::Write;
+use std::time::Instant;
+
+/// Prints `label i/total (rate/s, eta)` on a single updating line.
+pub struct Progress {
+    label: String,
+    total: usize,
+    done: usize,
+    start: Instant,
+    enabled: bool,
+}
+
+impl Progress {
+    pub fn new(label: &str, total: usize) -> Self {
+        Progress {
+            label: label.to_string(),
+            total,
+            done: 0,
+            start: Instant::now(),
+            enabled: std::env::var("FISTAPRUNER_NO_PROGRESS").is_err(),
+        }
+    }
+
+    pub fn inc(&mut self) {
+        self.step(self.done + 1);
+    }
+
+    pub fn step(&mut self, done: usize) {
+        self.done = done;
+        if !self.enabled {
+            return;
+        }
+        let el = self.start.elapsed().as_secs_f64();
+        let rate = if el > 0.0 { self.done as f64 / el } else { 0.0 };
+        let eta = if rate > 0.0 { (self.total.saturating_sub(self.done)) as f64 / rate } else { 0.0 };
+        let mut out = std::io::stderr().lock();
+        let _ = write!(
+            out,
+            "\r{} {}/{} ({:.1}/s, eta {:.0}s)   ",
+            self.label, self.done, self.total, rate, eta
+        );
+        let _ = out.flush();
+    }
+
+    pub fn finish(&mut self) {
+        if self.enabled {
+            let mut out = std::io::stderr().lock();
+            let _ = writeln!(
+                out,
+                "\r{} {}/{} done in {:.1}s          ",
+                self.label,
+                self.done,
+                self.total,
+                self.start.elapsed().as_secs_f64()
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn progress_counts() {
+        std::env::set_var("FISTAPRUNER_NO_PROGRESS", "1");
+        let mut p = Progress::new("test", 3);
+        p.inc();
+        p.inc();
+        assert_eq!(p.done, 2);
+        p.finish();
+    }
+}

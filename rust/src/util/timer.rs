@@ -1,0 +1,96 @@
+//! Wall-clock timing helpers for the benches and EXPERIMENTS.md §Perf.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch that accumulates named phases.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+    last: Instant,
+    phases: Vec<(String, Duration)>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        let now = Instant::now();
+        Stopwatch { start: now, last: now, phases: Vec::new() }
+    }
+
+    /// Record the time since the previous lap under `name`.
+    pub fn lap(&mut self, name: &str) -> Duration {
+        let now = Instant::now();
+        let d = now - self.last;
+        self.last = now;
+        self.phases.push((name.to_string(), d));
+        d
+    }
+
+    pub fn total(&self) -> Duration {
+        self.last - self.start
+    }
+
+    pub fn phases(&self) -> &[(String, Duration)] {
+        &self.phases
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for (name, d) in &self.phases {
+            s.push_str(&format!("{name}: {:.3}s  ", d.as_secs_f64()));
+        }
+        s.push_str(&format!("total: {:.3}s", self.total().as_secs_f64()));
+        s
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Robust repeated measurement: runs `f` `reps` times, returns seconds per
+/// rep (median). Used by the custom bench harness (criterion substrate).
+pub fn measure(reps: usize, mut f: impl FnMut()) -> f64 {
+    assert!(reps > 0);
+    let mut times: Vec<f64> = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn laps_accumulate() {
+        let mut sw = Stopwatch::new();
+        std::thread::sleep(Duration::from_millis(2));
+        sw.lap("a");
+        std::thread::sleep(Duration::from_millis(2));
+        sw.lap("b");
+        assert_eq!(sw.phases().len(), 2);
+        assert!(sw.total() >= Duration::from_millis(4));
+        assert!(sw.report().contains("a:"));
+    }
+
+    #[test]
+    fn measure_returns_positive() {
+        let t = measure(3, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(t >= 0.0);
+    }
+}

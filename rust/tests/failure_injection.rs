@@ -1,0 +1,64 @@
+//! Failure-injection tests: the coordinator must fail loudly and
+//! informatively, never silently compute garbage.
+
+use std::sync::Arc;
+
+use fistapruner::runtime::{Arg, Manifest, Session};
+use fistapruner::tensor::Tensor;
+
+#[test]
+fn unknown_artifact_is_reported() {
+    let session = Session::new(Arc::new(Manifest::load_default().unwrap())).unwrap();
+    let err = session.run("fista_1x1", &[]).unwrap_err().to_string();
+    assert!(err.contains("not in manifest"), "{err}");
+}
+
+#[test]
+fn wrong_arity_is_reported() {
+    let session = Session::new(Arc::new(Manifest::load_default().unwrap())).unwrap();
+    let t = Tensor::zeros(vec![64, 64]);
+    let err = session.run("power_64", &[Arg::T(&t), Arg::T(&t)]).unwrap_err().to_string();
+    assert!(err.contains("expected"), "{err}");
+}
+
+#[test]
+fn wrong_dtype_is_reported() {
+    let session = Session::new(Arc::new(Manifest::load_default().unwrap())).unwrap();
+    // power_64 wants f32 [64,64]; give i32
+    let data = vec![0i32; 64 * 64];
+    let err = session.run("power_64", &[Arg::I32(&data, &[64, 64])]).unwrap_err().to_string();
+    assert!(err.contains("F32") || err.contains("expected"), "{err}");
+}
+
+#[test]
+fn missing_hlo_file_is_reported_at_run() {
+    // Point a manifest at a directory without the HLO payloads.
+    let dir = std::env::temp_dir().join(format!("fp_empty_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let root = fistapruner::config::repo_root().unwrap();
+    let manifest_text = std::fs::read_to_string(root.join("artifacts/manifest.json")).unwrap();
+    std::fs::write(dir.join("manifest.json"), manifest_text).unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    assert!(!manifest.available("power_64"));
+    let session = Session::new(Arc::new(manifest)).unwrap();
+    let t = Tensor::zeros(vec![64, 64]);
+    assert!(session.run("power_64", &[Arg::T(&t)]).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupt_manifest_is_reported() {
+    let dir = std::env::temp_dir().join(format!("fp_corrupt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), "{ not json").unwrap();
+    assert!(Manifest::load(&dir).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn shape_mismatch_names_the_argument() {
+    let session = Session::new(Arc::new(Manifest::load_default().unwrap())).unwrap();
+    let bad = Tensor::zeros(vec![32, 32]);
+    let err = session.run("power_64", &[Arg::T(&bad)]).unwrap_err().to_string();
+    assert!(err.contains("arg 0") && err.contains('a'), "{err}");
+}

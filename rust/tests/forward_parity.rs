@@ -1,0 +1,62 @@
+//! Differential test: the native rust forward pass must agree with the
+//! score artifact (L2 JAX graph) on per-sequence NLL, for both families.
+//! This pins the cross-language semantics of every architectural detail
+//! (norm placement, GELU variant, RoPE convention, tied unembedding).
+
+use std::sync::Arc;
+
+use fistapruner::config::{repo_root, Presets};
+use fistapruner::data::Corpus;
+use fistapruner::eval::perplexity::score_per_window;
+use fistapruner::model::forward::nll;
+use fistapruner::model::init::init_params;
+use fistapruner::runtime::{Manifest, Session};
+
+#[test]
+fn native_forward_matches_score_artifact() {
+    let presets = Presets::load(&repo_root().unwrap()).unwrap();
+    let session = Session::new(Arc::new(Manifest::load_default().unwrap())).unwrap();
+    let corpus = Corpus::generate(presets.corpus("ptb-syn").unwrap());
+    for model in ["topt-s1", "tllama-s1"] {
+        let spec = presets.model(model).unwrap();
+        let params = init_params(spec, 41);
+        let windows = fistapruner::data::sampler::eval_windows(&corpus, spec.seq + 1, 4);
+        let artifact = score_per_window(&session, &presets, spec, &params, &windows, None).unwrap();
+        for (w, &art) in windows.iter().zip(&artifact) {
+            let native = nll(spec, &params, w);
+            let rel = (native - art).abs() / art.max(1e-9);
+            assert!(
+                rel < 5e-3,
+                "{model}: native {native:.4} vs artifact {art:.4} (rel {rel:.2e})"
+            );
+        }
+    }
+}
+
+#[test]
+fn sparse_forward_matches_artifact_on_pruned_model() {
+    // dense-artifact score of a pruned model == CSR sparse-native score
+    let presets = Presets::load(&repo_root().unwrap()).unwrap();
+    let session = Session::new(Arc::new(Manifest::load_default().unwrap())).unwrap();
+    let corpus = Corpus::generate(presets.corpus("ptb-syn").unwrap());
+    let spec = presets.model("topt-s1").unwrap();
+    let mut params = init_params(spec, 43);
+    for layer in 0..spec.layers {
+        for op in fistapruner::model::ops::pruned_ops(spec) {
+            let nm = format!("l{layer}.{}", op.name);
+            let w = fistapruner::pruner::round_to_sparsity(
+                params.req(&nm).unwrap(),
+                fistapruner::config::Sparsity::Semi(2, 4),
+            );
+            params.set(&nm, w).unwrap();
+        }
+    }
+    let sm = fistapruner::sparse::SparseModel::compress(spec, &params).unwrap();
+    let windows = fistapruner::data::sampler::eval_windows(&corpus, spec.seq + 1, 3);
+    let artifact = score_per_window(&session, &presets, spec, &params, &windows, None).unwrap();
+    for (w, &art) in windows.iter().zip(&artifact) {
+        let sparse = fistapruner::sparse::sparse_nll(&sm, w);
+        let rel = (sparse - art).abs() / art.max(1e-9);
+        assert!(rel < 5e-3, "sparse {sparse:.4} vs artifact {art:.4}");
+    }
+}

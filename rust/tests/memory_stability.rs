@@ -1,0 +1,42 @@
+//! Memory-stability regression test: repeated artifact executions must not
+//! grow RSS. Guards against the xla crate's literal-execute leak (the
+//! session deliberately routes inputs through PjRtBuffers — see
+//! runtime/session.rs::run).
+
+use std::sync::Arc;
+
+use fistapruner::runtime::{Arg, Manifest, Session};
+use fistapruner::tensor::Tensor;
+
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/status").unwrap();
+    for l in s.lines() {
+        if let Some(rest) = l.strip_prefix("VmRSS:") {
+            let kb: f64 = rest.split_whitespace().next().unwrap().parse().unwrap();
+            return kb / 1024.0;
+        }
+    }
+    0.0
+}
+
+#[test]
+fn repeated_execution_does_not_grow_rss() {
+    let session = Session::new(Arc::new(Manifest::load_default().unwrap())).unwrap();
+    let n = 512usize;
+    let x = Tensor::from_vec(vec![n, n], vec![0.5; n * n]);
+    // warm up: compile + arena growth
+    for _ in 0..20 {
+        session.run("power_512", &[Arg::T(&x)]).unwrap();
+    }
+    let before = rss_mb();
+    for _ in 0..200 {
+        session.run("power_512", &[Arg::T(&x)]).unwrap();
+    }
+    let after = rss_mb();
+    // 200 × 1 MiB inputs leaked would be +200 MB; allow 40 MB of noise.
+    assert!(
+        after - before < 40.0,
+        "RSS grew {:.0} MB over 200 executions (leak?)",
+        after - before
+    );
+}

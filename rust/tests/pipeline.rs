@@ -1,0 +1,102 @@
+//! End-to-end integration: train → prune (every method × both sparsity
+//! patterns) → evaluate. Asserts the structural invariants every run must
+//! satisfy plus the paper's qualitative ordering on output error.
+
+use fistapruner::baselines::BaselineKind;
+use fistapruner::bench_support::Lab;
+use fistapruner::config::{PruneOptions, Sparsity};
+use fistapruner::model::ops::pruned_ops;
+use fistapruner::pruner::rounding::satisfies_sparsity;
+use fistapruner::pruner::scheduler::Method;
+
+fn tiny_lab() -> Lab {
+    std::env::set_var("FP_TRAIN_STEPS", "60");
+    std::env::set_var("FP_CALIB", "16");
+    std::env::set_var("FP_EVAL_WINDOWS", "24");
+    Lab::new().unwrap()
+}
+
+#[test]
+fn full_pipeline_all_methods() {
+    let mut lab = tiny_lab();
+    let (model, corpus) = ("topt-s1", "ptb-syn");
+    let dense = lab.trained(model, corpus).unwrap();
+    let calib = lab.calib(corpus, 16, 0).unwrap();
+    let ppl_dense = lab.ppl(model, &dense, corpus).unwrap();
+    assert!(ppl_dense.is_finite() && ppl_dense > 1.0);
+
+    let spec = lab.spec(model).unwrap().clone();
+    let methods = [
+        Method::Baseline(BaselineKind::Magnitude),
+        Method::Baseline(BaselineKind::Wanda),
+        Method::Baseline(BaselineKind::SparseGpt),
+        Method::Fista,
+    ];
+    for sp in [Sparsity::Unstructured(0.5), Sparsity::Semi(2, 4)] {
+        let mut errs = Vec::new();
+        for method in methods {
+            let opts = PruneOptions { sparsity: sp, ..Default::default() };
+            let (pruned, report) = lab.prune(model, &dense, &calib, method, &opts).unwrap();
+            // every pruned operator satisfies the pattern
+            for layer in 0..spec.layers {
+                for op in pruned_ops(&spec) {
+                    let w = pruned.req(&format!("l{layer}.{}", op.name)).unwrap();
+                    assert!(satisfies_sparsity(w, sp), "{method:?} {sp:?} l{layer}.{}", op.name);
+                }
+            }
+            // non-pruned params untouched
+            assert_eq!(pruned.req("embed").unwrap(), dense.req("embed").unwrap());
+            assert_eq!(pruned.req("l0.ln1_g").unwrap(), dense.req("l0.ln1_g").unwrap());
+            let ppl = lab.ppl(model, &pruned, corpus).unwrap();
+            assert!(ppl.is_finite() && ppl >= ppl_dense * 0.8, "{method:?} ppl {ppl}");
+            errs.push((method.name(), report.mean_rel_error()));
+        }
+        // paper ordering on operator output error:
+        // fista ≤ sparsegpt and fista ≤ wanda ≤/≈ magnitude
+        let get = |n: &str| errs.iter().find(|(m, _)| *m == n).unwrap().1;
+        assert!(
+            get("fista") <= get("sparsegpt") + 1e-9,
+            "{sp:?}: fista {} vs sparsegpt {}",
+            get("fista"),
+            get("sparsegpt")
+        );
+        assert!(get("fista") <= get("wanda") + 1e-9);
+        assert!(get("fista") <= get("magnitude") + 1e-9);
+    }
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let mut lab = tiny_lab();
+    let (model, corpus) = ("topt-s1", "ptb-syn");
+    let dense = lab.trained(model, corpus).unwrap();
+    let calib = lab.calib(corpus, 8, 3).unwrap();
+    let opts = PruneOptions::default();
+    let (a, _) = lab.prune(model, &dense, &calib, Method::Fista, &opts).unwrap();
+    let (b, _) = lab.prune(model, &dense, &calib, Method::Fista, &opts).unwrap();
+    for ((n1, t1), (_n2, t2)) in a.iter().zip(b.iter()) {
+        assert_eq!(t1, t2, "nondeterministic at {n1}");
+    }
+}
+
+#[test]
+fn zeroshot_trained_beats_untrained() {
+    let mut lab = tiny_lab();
+    let (model, corpus) = ("topt-s1", "ptb-syn");
+    let trained = lab.trained(model, corpus).unwrap();
+    let spec = lab.spec(model).unwrap().clone();
+    let untrained = fistapruner::model::init::init_params(&spec, 99);
+    let c = fistapruner::data::Corpus::generate(lab.presets.corpus(corpus).unwrap());
+    let (_, zs_trained) = fistapruner::eval::zeroshot::run_all_tasks(
+        &lab.session, &lab.presets, &spec, &trained, &c, 32, 1,
+    )
+    .unwrap();
+    let (_, zs_untrained) = fistapruner::eval::zeroshot::run_all_tasks(
+        &lab.session, &lab.presets, &spec, &untrained, &c, 32, 1,
+    )
+    .unwrap();
+    assert!(
+        zs_trained > zs_untrained + 0.05,
+        "trained {zs_trained:.3} vs untrained {zs_untrained:.3}"
+    );
+}

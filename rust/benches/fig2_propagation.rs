@@ -28,7 +28,7 @@ fn main() -> anyhow::Result<()> {
             ..Default::default()
         };
         let (pruned, _) = lab.prune(model, &dense, &calib, Method::Fista, &opts)?;
-        layer_errors(&lab.session, &lab.presets, &spec, &dense, &pruned, &probe)
+        layer_errors(lab.require_session()?, &lab.presets, &spec, &dense, &pruned, &probe)
     };
     let with_c = run(&mut lab, true)?;
     let without = run(&mut lab, false)?;

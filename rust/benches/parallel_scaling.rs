@@ -1,6 +1,7 @@
 //! Paper §3.4/§5: parallel pruning across devices. Decoder layers are
-//! independent units; this bench measures wall-clock vs worker count
-//! (threads with private PJRT clients) and verifies result invariance.
+//! independent units; this bench measures wall-clock vs worker count and
+//! verifies result invariance. Workers are PJRT sessions on the XLA path
+//! or native scoped threads on a clean checkout — same scheduler shape.
 //!
 //!     cargo bench --bench parallel_scaling
 
@@ -16,20 +17,25 @@ fn main() -> anyhow::Result<()> {
     let model = if fast_mode() { "topt-s1" } else { "topt-s5" };
     let corpus = "c4-syn";
     let worker_counts: &[usize] = if fast_mode() { &[1, 2] } else { &[1, 2, 4, 6] };
+    let engine = lab.default_engine();
 
-    let dense = lab.trained(model, corpus)?;
+    // weight quality is irrelevant to scaling; fall back to init weights
+    let dense = lab.trained_or_init(model, corpus)?;
     let calib = lab.calib(corpus, lab.calib_samples(), 0)?;
 
     let csv_path = lab.bench_out().join("parallel_scaling.csv");
     let mut csv = CsvWriter::create(&csv_path, &["mode", "workers", "seconds", "speedup"])?;
     let mut t = TableBuilder::new(
-        &format!("§3.4 analog: parallel pruning, {model} ({} layers)", lab.spec(model)?.layers),
+        &format!(
+            "§3.4 analog: parallel pruning, {model} ({} layers, {engine:?} engine)",
+            lab.spec(model)?.layers
+        ),
         &["mode", "workers", "wall s", "speedup"],
     );
 
     // Sequential reference.
     let t0 = Instant::now();
-    let opts = PruneOptions { mode: PruneMode::Sequential, ..Default::default() };
+    let opts = PruneOptions { mode: PruneMode::Sequential, engine, ..Default::default() };
     lab.prune(model, &dense, &calib, Method::Fista, &opts)?;
     let seq_s = t0.elapsed().as_secs_f64();
     csv.write_row(&["sequential", "1", &format!("{seq_s:.2}"), "1.00"])?;
@@ -37,7 +43,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut base_par = None;
     for &workers in worker_counts {
-        let opts = PruneOptions { mode: PruneMode::Parallel, workers, ..Default::default() };
+        let opts = PruneOptions { mode: PruneMode::Parallel, engine, workers, ..Default::default() };
         let t0 = Instant::now();
         lab.prune(model, &dense, &calib, Method::Fista, &opts)?;
         let secs = t0.elapsed().as_secs_f64();

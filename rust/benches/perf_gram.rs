@@ -1,86 +1,133 @@
 //! §Perf microbench: Gram accumulation throughput (the wall-clock hot path
-//! of a pruning run) — XLA chunked artifact vs native rust, across
-//! operator input dims; plus capture-batch throughput.
+//! of a pruning run).
+//!
+//! Primary axis: the native fused `gram3` kernel across thread counts —
+//! the acceptance bar is ≥2× wall-clock speedup at 4 threads vs the
+//! single-thread configuration on the larger operator dims. When the XLA
+//! artifacts are available the chunked `gram_{n}` artifact is timed as an
+//! extra column, plus the capture-batch throughput.
 //!
 //!     cargo bench --bench perf_gram
-
-use std::sync::Arc;
+//!     FP_BENCH_FAST=1 cargo bench --bench perf_gram   # smoke
 
 use fistapruner::metrics::{csv::CsvWriter, TableBuilder};
-use fistapruner::pruner::engine::{NativeEngine, SolverEngine, XlaEngine};
-use fistapruner::runtime::{Manifest, Session};
-use fistapruner::tensor::Tensor;
+use fistapruner::pruner::engine::{SolverEngine, XlaEngine};
+use fistapruner::tensor::{kernels, par, Tensor};
 use fistapruner::util::{timer::measure, Pcg64};
 
 fn main() -> anyhow::Result<()> {
-    let session = Session::new(Arc::new(Manifest::load_default()?))?;
-    let xla = XlaEngine::new(&session);
-    let native = NativeEngine::default();
+    let session = fistapruner::testing::try_session();
     let mut rng = Pcg64::seeded(9);
-    let p = 4096usize; // 64 calibration sequences × seq 64
-    let reps = if std::env::var("FP_BENCH_FAST").is_ok() { 3 } else { 5 };
+    let fast = std::env::var("FP_BENCH_FAST").is_ok();
+    let p = if fast { 1024usize } else { 4096 }; // calibration tokens
+    let reps = if fast { 3 } else { 5 };
+    let dims: &[usize] = if fast { &[64, 192] } else { &[64, 128, 192, 512, 768] };
+    let auto = {
+        par::set_threads(0);
+        par::effective_threads()
+    };
 
     let root = fistapruner::config::repo_root()?;
     let mut csv = CsvWriter::create(
         &root.join("artifacts/bench_out/perf_gram.csv"),
-        &["n", "p", "xla_ms", "native_ms", "xla_gflops"],
+        &["n", "p", "t1_ms", "t2_ms", "t4_ms", "auto_ms", "speedup_4t", "gflops_auto", "xla_ms"],
     )?;
+    let auto_col = format!("auto({auto}) ms");
     let mut t = TableBuilder::new(
-        &format!("perf: gram accumulation (A,C,D over p={p})"),
-        &["n", "xla ms", "native ms", "xla GFLOP/s"],
+        &format!("perf: fused gram3 (A,C,D over p={p}), native thread scaling"),
+        &["n", "1t ms", "2t ms", "4t ms", &auto_col, "4t speedup", "GFLOP/s", "xla ms"],
     );
-    for n in [64usize, 128, 192, 512, 768] {
+
+    let mut worst_speedup = f64::INFINITY;
+    for &n in dims {
         let xd = Tensor::from_vec(vec![n, p], rng.normal_vec(n * p, 1.0));
         let xs = Tensor::from_vec(vec![n, p], rng.normal_vec(n * p, 1.0));
-        xla.gram(&xd, &xs)?; // warm the executable cache
-        let xla_s = measure(reps, || {
-            xla.gram(&xd, &xs).unwrap();
-        });
-        let nat_s = measure(2, || {
-            native.gram(&xd, &xs).unwrap();
-        });
-        let flops = 3.0 * 2.0 * (n * n * p) as f64; // 3 Gram products
+        let time_with = |threads: usize| {
+            par::set_threads(threads);
+            let s = measure(reps, || {
+                std::hint::black_box(kernels::gram3(&xd, &xs));
+            });
+            par::set_threads(0);
+            s
+        };
+        let s1 = time_with(1);
+        let s2 = time_with(2);
+        let s4 = time_with(4);
+        let sa = time_with(0);
+        let speedup4 = s1 / s4;
+        if n >= 128 {
+            worst_speedup = worst_speedup.min(speedup4);
+        }
+        let flops = 3.0 * 2.0 * (n * n * p) as f64; // 3 fused Gram products
+        let xla_ms = match &session {
+            Some(sess) => {
+                let xla = XlaEngine::new(sess);
+                xla.gram(&xd, &xs)?; // warm the executable cache
+                let s = measure(reps, || {
+                    xla.gram(&xd, &xs).unwrap();
+                });
+                format!("{:.1}", s * 1e3)
+            }
+            None => "-".to_string(),
+        };
         csv.write_row(&[
             &n.to_string(),
             &p.to_string(),
-            &format!("{:.1}", xla_s * 1e3),
-            &format!("{:.1}", nat_s * 1e3),
-            &format!("{:.2}", flops / xla_s / 1e9),
+            &format!("{:.1}", s1 * 1e3),
+            &format!("{:.1}", s2 * 1e3),
+            &format!("{:.1}", s4 * 1e3),
+            &format!("{:.1}", sa * 1e3),
+            &format!("{speedup4:.2}"),
+            &format!("{:.2}", flops / sa / 1e9),
+            &xla_ms,
         ])?;
         t.row(vec![
             n.to_string(),
-            format!("{:.1}", xla_s * 1e3),
-            format!("{:.1}", nat_s * 1e3),
-            format!("{:.2}", flops / xla_s / 1e9),
+            format!("{:.1}", s1 * 1e3),
+            format!("{:.1}", s2 * 1e3),
+            format!("{:.1}", s4 * 1e3),
+            format!("{:.1}", sa * 1e3),
+            format!("{speedup4:.2}x"),
+            format!("{:.2}", flops / sa / 1e9),
+            xla_ms,
         ]);
     }
     t.print();
-
-    // Capture throughput (the other request-path artifact).
-    let manifest = session.manifest();
-    let presets = fistapruner::config::Presets::load(&root)?;
-    let spec = presets.model("topt-s3")?.clone();
-    let params = fistapruner::model::init::init_params(&spec, 1);
-    let layer: Vec<Tensor> = params.layer_tensors(&spec, 0).into_iter().cloned().collect();
-    let x = Tensor::from_vec(
-        vec![manifest.capture_batch, spec.seq, spec.d],
-        rng.normal_vec(manifest.capture_batch * spec.seq * spec.d, 0.5),
-    );
-    let name = format!("capture_{}", spec.name());
-    let mut args: Vec<fistapruner::runtime::Arg<'_>> = vec![fistapruner::runtime::Arg::T(&x)];
-    for t_ in &layer {
-        args.push(fistapruner::runtime::Arg::T(t_));
-    }
-    session.run(&name, &args)?;
-    let cap_s = measure(reps, || {
-        session.run(&name, &args).unwrap();
-    });
     println!(
-        "capture_{}: {:.1} ms/batch ({} tokens) → {:.0} tokens/s",
-        spec.name(),
-        cap_s * 1e3,
-        manifest.capture_batch * spec.seq,
-        (manifest.capture_batch * spec.seq) as f64 / cap_s
+        "worst 4-thread speedup on n>=128: {worst_speedup:.2}x (target: >=2x; \
+         machine has {auto} hardware threads)"
     );
+
+    // Capture throughput: the other request-path hot loop (XLA only; the
+    // native capture path is measured end-to-end by parallel_scaling).
+    if let Some(sess) = &session {
+        let manifest = sess.manifest();
+        let presets = fistapruner::config::Presets::load(&root)?;
+        let spec = presets.model("topt-s3")?.clone();
+        let params = fistapruner::model::init::init_params(&spec, 1);
+        let layer: Vec<Tensor> = params.layer_tensors(&spec, 0).into_iter().cloned().collect();
+        let x = Tensor::from_vec(
+            vec![manifest.capture_batch, spec.seq, spec.d],
+            rng.normal_vec(manifest.capture_batch * spec.seq * spec.d, 0.5),
+        );
+        let name = format!("capture_{}", spec.name());
+        let mut args: Vec<fistapruner::runtime::Arg<'_>> = vec![fistapruner::runtime::Arg::T(&x)];
+        for t_ in &layer {
+            args.push(fistapruner::runtime::Arg::T(t_));
+        }
+        sess.run(&name, &args)?;
+        let cap_s = measure(reps, || {
+            sess.run(&name, &args).unwrap();
+        });
+        println!(
+            "capture_{}: {:.1} ms/batch ({} tokens) → {:.0} tokens/s",
+            spec.name(),
+            cap_s * 1e3,
+            manifest.capture_batch * spec.seq,
+            (manifest.capture_batch * spec.seq) as f64 / cap_s
+        );
+    } else {
+        println!("(XLA artifacts unavailable — native columns only)");
+    }
     Ok(())
 }

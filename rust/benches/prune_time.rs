@@ -32,11 +32,12 @@ fn main() -> anyhow::Result<()> {
         &["model", "Magnitude", "Wanda", "SparseGPT", "FISTAPruner"],
     );
     for model in models {
-        let dense = lab.trained(model, corpus)?;
+        // untrained weights are fine here: this bench measures wall-clock
+        let dense = lab.trained_or_init(model, corpus)?;
         let calib = lab.calib(corpus, lab.calib_samples(), 0)?;
         let mut row = vec![model.to_string()];
         for (label, method) in methods {
-            let opts = PruneOptions::default();
+            let opts: PruneOptions = lab.default_prune_options();
             let t0 = Instant::now();
             let (_, report) = lab.prune(model, &dense, &calib, method, &opts)?;
             let secs = t0.elapsed().as_secs_f64();

@@ -7,7 +7,6 @@
 use fistapruner::baselines::BaselineKind::*;
 use fistapruner::bench_support::{fast_mode, Lab};
 use fistapruner::config::{PruneOptions, Sparsity};
-use fistapruner::eval::zeroshot::run_all_tasks;
 use fistapruner::metrics::{csv::CsvWriter, TableBuilder};
 use fistapruner::pruner::scheduler::Method;
 
@@ -18,9 +17,7 @@ fn main() -> anyhow::Result<()> {
     let items = if fast_mode() { 40 } else { 150 };
 
     let dense = lab.trained(model, corpus)?;
-    let spec = lab.presets.model(model)?.clone();
     let calib = lab.calib(corpus, lab.calib_samples(), lab.presets.calib_seed)?;
-    let c = fistapruner::data::Corpus::generate(lab.presets.corpus(corpus)?);
 
     let task_names = ["arc_e-syn", "arc_c-syn", "wino-syn", "boolq-syn", "rte-syn", "qnli-syn", "wnli-syn"];
     let mut header = vec!["Method", "Sparsity"];
@@ -32,7 +29,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut add_row = |lab: &mut Lab, name: &str, sp_label: &str, params: &fistapruner::model::ModelParams|
      -> anyhow::Result<f64> {
-        let (results, mean) = run_all_tasks(&lab.session, &lab.presets, &spec, params, &c, items, 1)?;
+        let (results, mean) = lab.zeroshot(model, params, corpus, items, 1)?;
         let mut row = vec![name.to_string(), sp_label.to_string()];
         for r in &results {
             row.push(TableBuilder::acc(r.accuracy));

@@ -17,7 +17,8 @@ fn main() -> anyhow::Result<()> {
     let corpus = "c4-syn";
 
     let mut lab = Lab::new()?;
-    let dense = lab.trained(&model, corpus)?;
+    let engine = lab.default_engine();
+    let dense = lab.trained_or_init(&model, corpus)?;
     let calib = lab.calib(corpus, lab.calib_samples(), 0)?;
 
     let mut t = TableBuilder::new(
@@ -27,14 +28,14 @@ fn main() -> anyhow::Result<()> {
 
     // Sequential reference (error propagation between layers).
     let t0 = Instant::now();
-    let opts = PruneOptions { mode: PruneMode::Sequential, ..Default::default() };
+    let opts = PruneOptions { mode: PruneMode::Sequential, engine, ..Default::default() };
     let (pruned, _) = lab.prune(&model, &dense, &calib, Method::Fista, &opts)?;
     let seq_s = t0.elapsed().as_secs_f64();
     let ppl = lab.ppl(&model, &pruned, corpus)?;
     t.row(vec!["sequential".into(), "1".into(), format!("{seq_s:.1}"), TableBuilder::f(ppl)]);
 
     for workers in [1usize, 2, 4] {
-        let opts = PruneOptions { mode: PruneMode::Parallel, workers, ..Default::default() };
+        let opts = PruneOptions { mode: PruneMode::Parallel, engine, workers, ..Default::default() };
         let t0 = Instant::now();
         let (pruned, _) = lab.prune(&model, &dense, &calib, Method::Fista, &opts)?;
         let wall = t0.elapsed().as_secs_f64();

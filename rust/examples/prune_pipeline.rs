@@ -16,7 +16,6 @@
 
 use fistapruner::bench_support::Lab;
 use fistapruner::config::{PruneOptions, Sparsity};
-use fistapruner::eval::zeroshot::run_all_tasks;
 use fistapruner::metrics::TableBuilder;
 use fistapruner::pruner::scheduler::Method;
 
@@ -56,10 +55,8 @@ fn main() -> anyhow::Result<()> {
         &["Method", "Sparsity", "PPL", "ZS mean", "prune s"],
     );
     let ppl_dense = lab.ppl(&model, &dense, &corpus)?;
-    let zs_corpus = fistapruner::data::Corpus::generate(lab.presets.corpus(&corpus)?);
     let items = if fistapruner::bench_support::fast_mode() { 32 } else { 100 };
-    let (_, zs_dense) =
-        run_all_tasks(&lab.session, &lab.presets, &spec, &dense, &zs_corpus, items, 1)?;
+    let (_, zs_dense) = lab.zeroshot(&model, &dense, &corpus, items, 1)?;
     table.row(vec![
         "Dense".into(),
         "0%".into(),
@@ -70,11 +67,10 @@ fn main() -> anyhow::Result<()> {
 
     for sp in sparsities {
         for method in methods {
-            let opts = PruneOptions { sparsity: sp, ..Default::default() };
+            let opts = PruneOptions { sparsity: sp, ..lab.default_prune_options() };
             let (pruned, report) = lab.prune(&model, &dense, &calib, method, &opts)?;
             let ppl = lab.ppl(&model, &pruned, &corpus)?;
-            let (_, zs) =
-                run_all_tasks(&lab.session, &lab.presets, &spec, &pruned, &zs_corpus, items, 1)?;
+            let (_, zs) = lab.zeroshot(&model, &pruned, &corpus, items, 1)?;
             println!("  {} @ {}: ppl {ppl:.2}, zs {zs:.3}", method.name(), sp.label());
             table.row(vec![
                 method.name().to_string(),

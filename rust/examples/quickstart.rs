@@ -1,13 +1,14 @@
-//! Quickstart: train a tiny model, prune it with FISTAPruner at 50%
-//! unstructured sparsity, and compare held-out perplexity.
+//! Quickstart: prune a tiny model with FISTAPruner at 50% unstructured
+//! sparsity and compare held-out perplexity.
 //!
 //!     cargo run --release --example quickstart
 //!
-//! Uses the smallest preset (topt-s1) and short training so it finishes in
-//! about a minute on CPU. See prune_pipeline.rs for the full experiment.
+//! Works from a clean checkout: without the XLA artifacts it runs the
+//! native multithreaded kernel path end-to-end on deterministic random
+//! weights; with artifacts (`make artifacts`) it first trains the model
+//! and uses the XLA engine. See prune_pipeline.rs for the full experiment.
 
 use fistapruner::bench_support::Lab;
-use fistapruner::config::PruneOptions;
 use fistapruner::pruner::scheduler::Method;
 
 fn main() -> anyhow::Result<()> {
@@ -15,14 +16,18 @@ fn main() -> anyhow::Result<()> {
     let (model, corpus) = ("topt-s1", "wikitext-syn");
 
     println!("== FISTAPruner quickstart: {model} on {corpus} ==");
-    println!("[1/4] train (or load cached checkpoint)");
-    let dense = lab.trained(model, corpus)?;
+    if !lab.has_artifacts() {
+        println!("(no XLA artifacts found — running the native kernel path on init weights)");
+    }
+
+    println!("[1/4] obtain dense weights (trained checkpoint if available)");
+    let dense = lab.trained_or_init(model, corpus)?;
 
     println!("[2/4] sample calibration data ({} sequences)", lab.calib_samples());
     let calib = lab.calib(corpus, lab.calib_samples(), 0)?;
 
     println!("[3/4] prune with FISTAPruner (Algorithm 1, 50% unstructured)");
-    let opts = PruneOptions::default();
+    let opts = lab.default_prune_options();
     let (pruned, report) = lab.prune(model, &dense, &calib, Method::Fista, &opts)?;
     println!("      {}", report.summary());
 

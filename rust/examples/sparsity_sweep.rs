@@ -14,7 +14,7 @@ fn main() -> anyhow::Result<()> {
     let corpus = args.get(1).map(String::as_str).unwrap_or("wikitext-syn").to_string();
 
     let mut lab = Lab::new()?;
-    let dense = lab.trained(&model, &corpus)?;
+    let dense = lab.trained_or_init(&model, &corpus)?;
     let calib = lab.calib(&corpus, lab.calib_samples(), 0)?;
     let ppl_dense = lab.ppl(&model, &dense, &corpus)?;
     println!("dense ppl: {ppl_dense:.2}");
@@ -30,8 +30,10 @@ fn main() -> anyhow::Result<()> {
     for rate in rates {
         let mut row = vec![format!("{:.0}%", rate * 100.0)];
         for method in methods {
-            let opts =
-                PruneOptions { sparsity: Sparsity::Unstructured(rate), ..Default::default() };
+            let opts = PruneOptions {
+                sparsity: Sparsity::Unstructured(rate),
+                ..lab.default_prune_options()
+            };
             let (pruned, _) = lab.prune(&model, &dense, &calib, method, &opts)?;
             let ppl = lab.ppl(&model, &pruned, &corpus)?;
             row.push(TableBuilder::f(ppl));

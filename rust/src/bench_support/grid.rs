@@ -64,7 +64,7 @@ pub fn run_grid(lab: &mut Lab, grid: &GridSpec) -> Result<Vec<(String, String, f
             let ppl = match (method, sp) {
                 (Method::Dense, _) => lab.ppl(model, &dense, &grid.eval_corpus)?,
                 (m, Some(sp)) => {
-                    let opts = PruneOptions { sparsity: *sp, ..Default::default() };
+                    let opts = PruneOptions { sparsity: *sp, ..lab.default_prune_options() };
                     let (pruned, report) = lab.prune(model, &dense, &calib, *m, &opts)?;
                     crate::log_info!("{}", report.summary());
                     lab.ppl(model, &pruned, &grid.eval_corpus)?

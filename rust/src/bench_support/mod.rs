@@ -1,12 +1,20 @@
 //! Shared experiment harness for the benches and examples: a `Lab` that
-//! caches corpora, trained checkpoints and a PJRT session, plus the
-//! method×sparsity grid runner that regenerates the paper's tables.
+//! caches corpora, trained checkpoints and (when artifacts exist) a PJRT
+//! session, plus the method×sparsity grid runner that regenerates the
+//! paper's tables.
+//!
+//! The Lab degrades gracefully: on a clean checkout with no
+//! `artifacts/manifest.json` (or a build without the `xla-pjrt` feature)
+//! it runs entirely on the native multithreaded kernels — pruning uses
+//! `Engine::Native`, evaluation uses the native forward pass, and only
+//! training (which needs the `train_{model}` artifact) is unavailable.
 //!
 //! Environment knobs (all optional):
 //!   FP_BENCH_FAST=1     — shrink models/steps/items for smoke runs
 //!   FP_TRAIN_STEPS=N    — override training steps
 //!   FP_CALIB=N          — override calibration sample count
 //!   FP_EVAL_WINDOWS=N   — override perplexity window count
+//!   FP_THREADS=N        — native kernel thread count (0 = auto)
 
 pub mod grid;
 
@@ -14,11 +22,11 @@ use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use crate::config::{repo_root, ModelSpec, Presets, PruneOptions, TrainOptions};
+use crate::config::{repo_root, Engine, ModelSpec, Presets, PruneOptions, TrainOptions};
 use crate::data::{sampler::calibration_windows, Corpus};
-use crate::eval::perplexity::perplexity;
+use crate::eval::perplexity::{perplexity, perplexity_native};
 use crate::model::params::ModelParams;
 use crate::pruner::scheduler::{prune_model, Method};
 use crate::pruner::PruneReport;
@@ -40,18 +48,85 @@ pub fn fast_mode() -> bool {
 pub struct Lab {
     pub root: PathBuf,
     pub presets: Presets,
-    pub session: Session,
+    session: Option<Session>,
     corpora: BTreeMap<String, Corpus>,
     checkpoints: BTreeMap<String, ModelParams>,
 }
 
 impl Lab {
+    /// Build a Lab. Never fails for missing artifacts — the session is
+    /// simply absent then and everything runs on the native path.
     pub fn new() -> Result<Lab> {
         crate::util::logging::init();
         let root = repo_root()?;
         let presets = Presets::load(&root)?;
-        let session = Session::new(Arc::new(Manifest::load_default()?))?;
+        if let Some(n) = std::env::var("FP_THREADS").ok().and_then(|v| v.parse().ok()) {
+            crate::tensor::par::set_threads(n);
+        }
+        let session = match Manifest::load(&crate::config::paths::artifacts_dir(&root)) {
+            Ok(m) => match Session::new(Arc::new(m)) {
+                Ok(s) => Some(s),
+                Err(e) => {
+                    crate::log_warn!("PJRT session unavailable ({e:#}); native-only mode");
+                    None
+                }
+            },
+            Err(e) => {
+                crate::log_warn!("artifacts unavailable ({e:#}); native-only mode");
+                None
+            }
+        };
         Ok(Lab { root, presets, session, corpora: BTreeMap::new(), checkpoints: BTreeMap::new() })
+    }
+
+    /// Lab for artifact-dependent tests/benches, or `None` (with a note on
+    /// stderr) when the XLA path is unavailable and the caller should skip.
+    pub fn try_with_artifacts() -> Option<Lab> {
+        match Lab::new() {
+            Ok(lab) if lab.has_artifacts() => Some(lab),
+            Ok(_) => {
+                eprintln!("skipping: artifacts/PJRT backend unavailable");
+                None
+            }
+            Err(e) => {
+                eprintln!("skipping: {e:#}");
+                None
+            }
+        }
+    }
+
+    /// True when the XLA artifact path is usable.
+    pub fn has_artifacts(&self) -> bool {
+        self.session.is_some()
+    }
+
+    pub fn session(&self) -> Option<&Session> {
+        self.session.as_ref()
+    }
+
+    /// The session, or a descriptive error for callers that require it.
+    pub fn require_session(&self) -> Result<&Session> {
+        self.session.as_ref().ok_or_else(|| {
+            anyhow::anyhow!(
+                "this path needs the XLA artifacts (run `make artifacts` and build with the \
+                 xla-pjrt feature); the native engine covers pruning and evaluation without them"
+            )
+        })
+    }
+
+    /// The solver engine this environment supports best.
+    pub fn default_engine(&self) -> Engine {
+        if self.has_artifacts() {
+            Engine::Xla
+        } else {
+            Engine::Native
+        }
+    }
+
+    /// Prune options wired for this environment (engine picked by
+    /// `default_engine`, everything else default).
+    pub fn default_prune_options(&self) -> PruneOptions {
+        PruneOptions { engine: self.default_engine(), ..Default::default() }
     }
 
     /// Generate (and cache) a corpus by preset name.
@@ -89,6 +164,7 @@ impl Lab {
     }
 
     /// Train-or-load the canonical checkpoint for (model, train corpus).
+    /// Fails without artifacts unless a cached checkpoint exists.
     pub fn trained(&mut self, model: &str, corpus: &str) -> Result<ModelParams> {
         let key = format!("{model}@{corpus}@{}", self.train_steps());
         if let Some(p) = self.checkpoints.get(&key) {
@@ -104,9 +180,24 @@ impl Lab {
             warmup: self.presets.train.warmup.min(steps / 4),
             seed: self.presets.train.seed,
         };
-        let params = ensure_checkpoint(&self.root, &self.session, &self.presets, &spec, c, &opts)?;
+        let params =
+            ensure_checkpoint(&self.root, self.session.as_ref(), &self.presets, &spec, c, &opts)?;
         self.checkpoints.insert(key, params.clone());
         Ok(params)
+    }
+
+    /// `trained`, falling back to deterministic random initialization when
+    /// no checkpoint can be produced (perf/scaling benches where weight
+    /// quality is irrelevant).
+    pub fn trained_or_init(&mut self, model: &str, corpus: &str) -> Result<ModelParams> {
+        match self.trained(model, corpus) {
+            Ok(p) => Ok(p),
+            Err(e) => {
+                crate::log_warn!("using untrained weights for {model} ({e:#})");
+                let spec = self.presets.model(model)?.clone();
+                Ok(crate::model::init::init_params(&spec, self.presets.train.seed))
+            }
+        }
     }
 
     /// Calibration windows from a corpus train split.
@@ -126,16 +217,42 @@ impl Lab {
         opts: &PruneOptions,
     ) -> Result<(ModelParams, PruneReport)> {
         let spec = self.presets.model(model)?.clone();
-        prune_model(&self.session, &self.presets, &spec, params, calib, method, opts)
+        if matches!(opts.engine, Engine::Xla) && self.session.is_none() {
+            bail!("Engine::Xla requested but artifacts are unavailable; use Engine::Native");
+        }
+        prune_model(self.session.as_ref(), &self.presets, &spec, params, calib, method, opts)
     }
 
-    /// Held-out perplexity.
+    /// Held-out perplexity (artifact scorer when available, else native).
     pub fn ppl(&mut self, model: &str, params: &ModelParams, corpus: &str) -> Result<f64> {
         let spec = self.presets.model(model)?.clone();
         let max_w = self.eval_windows();
         self.corpus(corpus)?;
         let c = &self.corpora[corpus];
-        perplexity(&self.session, &self.presets, &spec, params, c, max_w)
+        match &self.session {
+            Some(s) => perplexity(s, &self.presets, &spec, params, c, max_w),
+            None => perplexity_native(&spec, params, c, max_w),
+        }
+    }
+
+    /// Zero-shot probe mean accuracy (artifact scorer when available).
+    pub fn zeroshot(
+        &mut self,
+        model: &str,
+        params: &ModelParams,
+        corpus: &str,
+        items: usize,
+        seed: u64,
+    ) -> Result<(Vec<crate::eval::zeroshot::TaskResult>, f64)> {
+        let spec = self.presets.model(model)?.clone();
+        self.corpus(corpus)?;
+        let c = &self.corpora[corpus];
+        match &self.session {
+            Some(s) => {
+                crate::eval::zeroshot::run_all_tasks(s, &self.presets, &spec, params, c, items, seed)
+            }
+            None => Ok(crate::eval::zeroshot::run_all_tasks_native(&spec, params, c, items, seed)),
+        }
     }
 
     pub fn spec(&self, model: &str) -> Result<&ModelSpec> {

@@ -36,22 +36,34 @@ pub fn info(_args: &Args) -> Result<()> {
         ]);
     }
     c.print();
-    println!(
-        "artifacts: {} in manifest; session compiled {}",
-        lab.session.manifest().artifacts.len(),
-        lab.session.compiled_count()
-    );
+    match lab.session() {
+        Some(s) => println!(
+            "artifacts: {} in manifest; session compiled {}; kernel threads: {}",
+            s.manifest().artifacts.len(),
+            s.compiled_count(),
+            crate::tensor::par::effective_threads(),
+        ),
+        None => println!(
+            "artifacts: unavailable (native-only mode); kernel threads: {}",
+            crate::tensor::par::effective_threads()
+        ),
+    }
     Ok(())
 }
 
-fn prune_options(args: &Args) -> Result<PruneOptions> {
+fn prune_options(lab: &Lab, args: &Args) -> Result<PruneOptions> {
+    let engine = match args.get("engine") {
+        Some(s) => Engine::parse(s)?,
+        None => lab.default_engine(),
+    };
     Ok(PruneOptions {
         sparsity: Sparsity::parse(args.get_or("sparsity", "0.5"))?,
-        engine: Engine::parse(args.get_or("engine", "xla"))?,
+        engine,
         mode: PruneMode::parse(args.get_or("mode", "sequential"))?,
         warm_start: WarmStart::parse(args.get_or("warm-start", "auto"))?,
         error_correction: !args.has("no-correction"),
         workers: args.usize_or("workers", 2)?,
+        threads: args.usize_or("threads", 0)?,
         max_rounds: args.get("max-rounds").map(|v| v.parse()).transpose()?,
         seed: args.u64_or("seed", 0)?,
     })
@@ -75,7 +87,7 @@ pub fn train(args: &Args) -> Result<()> {
     let spec = lab.presets.model(&model)?.clone();
     lab.corpus(&corpus)?;
     let c = crate::data::Corpus::generate(lab.presets.corpus(&corpus)?);
-    let res = crate::train::train(&lab.session, &lab.presets, &spec, &c, &opts)?;
+    let res = crate::train::train(lab.require_session()?, &lab.presets, &spec, &c, &opts)?;
     println!("final loss: {:.4}", res.final_loss);
     let path = args
         .get("out")
@@ -104,7 +116,10 @@ fn load_or_train(lab: &mut Lab, args: &Args, model: &str, corpus: &str) -> Resul
         checkpoint::check_model(&meta, model)?;
         return Ok(params);
     }
-    lab.trained(model, corpus)
+    // Without train artifacts this falls back to deterministic init
+    // weights (with a logged warning) so every command still runs on a
+    // clean checkout.
+    lab.trained_or_init(model, corpus)
 }
 
 pub fn prune(args: &Args) -> Result<()> {
@@ -112,7 +127,7 @@ pub fn prune(args: &Args) -> Result<()> {
     let model = args.req("model")?.to_string();
     let corpus = args.req("corpus")?.to_string();
     let method = Method::parse(args.get_or("method", "fista"))?;
-    let opts = prune_options(args)?;
+    let opts = prune_options(&lab, args)?;
     let calib_n = args.usize_or("calib", lab.calib_samples())?;
     let dense = load_or_train(&mut lab, args, &model, &corpus)?;
     let calib = lab.calib(&corpus, calib_n, opts.seed)?;
@@ -154,12 +169,8 @@ pub fn zeroshot(args: &Args) -> Result<()> {
     let corpus = args.req("corpus")?.to_string();
     let items = args.usize_or("items", 100)?;
     let params = load_or_train(&mut lab, args, &model, &corpus)?;
-    let spec = lab.presets.model(&model)?.clone();
-    lab.corpus(&corpus)?;
-    let c = crate::data::Corpus::generate(lab.presets.corpus(&corpus)?);
-    let (results, mean) = crate::eval::zeroshot::run_all_tasks(
-        &lab.session, &lab.presets, &spec, &params, &c, items, args.u64_or("seed", 1)?,
-    )?;
+    let (results, mean) =
+        lab.zeroshot(&model, &params, &corpus, items, args.u64_or("seed", 1)?)?;
     let mut t = TableBuilder::new("Zero-shot probes", &["task", "accuracy", "items"]);
     for r in &results {
         t.row(vec![r.name.to_string(), TableBuilder::acc(r.accuracy), r.items.to_string()]);
@@ -194,11 +205,11 @@ pub fn pipeline(args: &Args) -> Result<()> {
     let model = args.req("model")?.to_string();
     let corpus = args.req("corpus")?.to_string();
     let sparsity = Sparsity::parse(args.get_or("sparsity", "0.5"))?;
-    let opts = PruneOptions { sparsity, ..prune_options(args)? };
+    let opts = PruneOptions { sparsity, ..prune_options(&lab, args)? };
     let calib_n = args.usize_or("calib", lab.calib_samples())?;
 
     println!("[1/3] train/load {model} on {corpus}");
-    let dense = lab.trained(&model, &corpus)?;
+    let dense = lab.trained_or_init(&model, &corpus)?;
     let calib = lab.calib(&corpus, calib_n, opts.seed)?;
 
     println!("[2/3] prune with all methods at {}", sparsity.label());

@@ -47,8 +47,8 @@ COMMANDS:
   prune     --model M --corpus C    prune a trained model
             [--method fista|sparsegpt|wanda|magnitude]
             [--sparsity 0.5|50%|2:4] [--mode sequential|parallel]
-            [--workers N] [--engine xla|native] [--no-correction]
-            [--calib N --seed S] [--out path.fpt]
+            [--workers N] [--threads N] [--engine xla|native]
+            [--no-correction] [--calib N --seed S] [--out path.fpt]
   eval      --model M --corpus C    held-out perplexity
             [--ckpt path.fpt]
   zeroshot  --model M --corpus C    the 7 synthetic probe tasks
@@ -59,5 +59,8 @@ COMMANDS:
             [--sparsity S]          methods) → perplexity table
 
 ENV: FISTAPRUNER_LOG=debug|info|warn|error, FP_TRAIN_STEPS, FP_CALIB,
-     FP_EVAL_WINDOWS, FP_BENCH_FAST=1
+     FP_EVAL_WINDOWS, FP_BENCH_FAST=1, FP_THREADS=N (kernel threads)
+
+Without artifacts/ (clean checkout) everything except `train` runs on the
+native multithreaded kernels; `--engine` defaults to what is available.
 ";

@@ -64,6 +64,10 @@ pub struct FistaCfg {
     pub power_iters: usize,
     pub power_safety: f64,
     pub stop_tol: f64,
+    /// Native kernel thread count for solver math (0 = auto). Applied by
+    /// `prune_model`; an explicit `PruneOptions::threads` wins over this
+    /// presets default. See `tensor::par`.
+    pub threads: usize,
 }
 
 /// Synthetic-corpus generator parameters (WikiText/PTB/C4 analogs).
@@ -133,6 +137,8 @@ impl Presets {
             power_iters: fista_v.req("power_iters")?.as_usize().context("power_iters")?,
             power_safety: fista_v.req("power_safety")?.as_f64().context("power_safety")?,
             stop_tol: fista_v.req("stop_tol")?.as_f64().context("stop_tol")?,
+            // optional for backwards-compatible presets files
+            threads: fista_v.get("threads").and_then(|v| v.as_usize()).unwrap_or(0),
         };
         let mut models = BTreeMap::new();
         for (fam_name, fam) in v.req("families")?.as_obj().context("families")? {

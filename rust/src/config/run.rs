@@ -119,7 +119,13 @@ pub struct PruneOptions {
     pub warm_start: WarmStart,
     /// Intra-layer error correction (paper §3.1); off = Fig. 4a ablation.
     pub error_correction: bool,
+    /// Scheduler workers: parallel-mode layer units, and (when > 1) the
+    /// sequential-mode intra-layer operator overlap on the native engine.
     pub workers: usize,
+    /// Native kernel threads (0 = auto). Applied process-globally at the
+    /// start of `prune_model`; see `tensor::par` for the determinism
+    /// guarantees that make this safe.
+    pub threads: usize,
     /// Override Algorithm 1's max tuning rounds (None = presets value).
     pub max_rounds: Option<usize>,
     pub seed: u64,
@@ -134,6 +140,7 @@ impl Default for PruneOptions {
             warm_start: WarmStart::Auto,
             error_correction: true,
             workers: 1,
+            threads: 0,
             max_rounds: None,
             seed: 0,
         }

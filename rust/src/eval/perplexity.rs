@@ -1,5 +1,6 @@
-//! Perplexity evaluation over held-out corpus windows via the
-//! `score_{model}` artifact (masked per-sequence NLL; DESIGN.md §5).
+//! Perplexity evaluation over held-out corpus windows: the
+//! `score_{model}` artifact (masked per-sequence NLL; DESIGN.md §5) when a
+//! PJRT session is available, or the native forward pass otherwise.
 
 use anyhow::{bail, Result};
 
@@ -7,6 +8,7 @@ use crate::config::{ModelSpec, Presets};
 use crate::data::{batches::pack, sampler::eval_windows, Corpus};
 use crate::model::params::ModelParams;
 use crate::runtime::session::{Arg, Session};
+use crate::tensor::par;
 
 /// exp(total NLL / total tokens) over up to `max_windows` non-overlapping
 /// held-out windows.
@@ -24,6 +26,29 @@ pub fn perplexity(
     }
     let (nll, tokens) = score_windows(session, presets, spec, params, &windows)?;
     Ok((nll / tokens).exp())
+}
+
+/// Artifact-free perplexity: identical window selection, scored by the
+/// native forward pass, windows evaluated in parallel over the kernel
+/// worker abstraction.
+pub fn perplexity_native(
+    spec: &ModelSpec,
+    params: &ModelParams,
+    corpus: &Corpus,
+    max_windows: usize,
+) -> Result<f64> {
+    let windows = eval_windows(corpus, spec.seq + 1, max_windows);
+    if windows.is_empty() {
+        bail!("held-out split of '{}' has no full windows", corpus.name);
+    }
+    let mut nlls = vec![0f64; windows.len()];
+    par::for_each_row_block(&mut nlls, windows.len(), 1, 1, |r0, _r1, out| {
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = crate::model::forward::nll(spec, params, &windows[r0 + i]);
+        }
+    });
+    let total: f64 = nlls.iter().sum();
+    Ok((total / (windows.len() * spec.seq) as f64).exp())
 }
 
 /// Sum of masked NLL and token count over arbitrary windows (also used by
@@ -95,30 +120,41 @@ mod tests {
     use super::*;
     use crate::config::repo_root;
     use crate::model::init::init_params;
-    use crate::runtime::Manifest;
-    use std::sync::Arc;
 
     #[test]
-    fn random_model_scores_near_uniform() {
+    fn native_random_model_scores_near_uniform() {
         // An untrained model must score close to ln(vocab) per token.
         let presets = Presets::load(&repo_root().unwrap()).unwrap();
         let spec = presets.model("topt-s1").unwrap();
         let params = init_params(spec, 11);
         let corpus = Corpus::generate(presets.corpus("ptb-syn").unwrap());
-        let session = Session::new(Arc::new(Manifest::load_default().unwrap())).unwrap();
-        let ppl = perplexity(&session, &presets, spec, &params, &corpus, 16).unwrap();
+        let ppl = perplexity_native(spec, &params, &corpus, 16).unwrap();
         let uniform = spec.vocab as f64;
         assert!(ppl > 0.3 * uniform && ppl < 3.0 * uniform, "ppl {ppl} vs uniform {uniform}");
     }
 
     #[test]
+    fn artifact_random_model_scores_near_uniform() {
+        let Some(session) = crate::testing::try_session() else { return };
+        let presets = Presets::load(&repo_root().unwrap()).unwrap();
+        let spec = presets.model("topt-s1").unwrap();
+        let params = init_params(spec, 11);
+        let corpus = Corpus::generate(presets.corpus("ptb-syn").unwrap());
+        let ppl = perplexity(&session, &presets, spec, &params, &corpus, 16).unwrap();
+        let native = perplexity_native(spec, &params, &corpus, 16).unwrap();
+        let uniform = spec.vocab as f64;
+        assert!(ppl > 0.3 * uniform && ppl < 3.0 * uniform, "ppl {ppl} vs uniform {uniform}");
+        assert!((ppl - native).abs() < 0.05 * native, "artifact {ppl} vs native {native}");
+    }
+
+    #[test]
     fn suffix_mask_reduces_scored_tokens() {
+        let Some(session) = crate::testing::try_session() else { return };
         let presets = Presets::load(&repo_root().unwrap()).unwrap();
         let spec = presets.model("topt-s1").unwrap();
         let params = init_params(spec, 11);
         let corpus = Corpus::generate(presets.corpus("ptb-syn").unwrap());
         let windows = eval_windows(&corpus, spec.seq + 1, 4);
-        let session = Session::new(Arc::new(Manifest::load_default().unwrap())).unwrap();
         let full = score_per_window(&session, &presets, spec, &params, &windows, None).unwrap();
         let sfx =
             score_per_window(&session, &presets, spec, &params, &windows, Some(spec.seq - 8))

@@ -65,15 +65,13 @@ mod tests {
     use super::*;
     use crate::config::repo_root;
     use crate::model::init::init_params;
-    use crate::runtime::Manifest;
-    use std::sync::Arc;
 
     #[test]
     fn identical_models_have_zero_error() {
+        let Some(session) = crate::testing::try_session() else { return };
         let presets = Presets::load(&repo_root().unwrap()).unwrap();
         let spec = presets.model("topt-s1").unwrap();
         let params = init_params(spec, 31);
-        let session = Session::new(Arc::new(Manifest::load_default().unwrap())).unwrap();
         let windows: Vec<Vec<i32>> = (0..4).map(|i| vec![(i * 3) as i32; spec.seq]).collect();
         let errs =
             layer_errors(&session, &presets, spec, &params, &params, &windows).unwrap();
@@ -83,6 +81,7 @@ mod tests {
 
     #[test]
     fn pruned_model_error_grows_with_depth() {
+        let Some(session) = crate::testing::try_session() else { return };
         let presets = Presets::load(&repo_root().unwrap()).unwrap();
         let spec = presets.model("topt-s1").unwrap();
         let dense = init_params(spec, 32);
@@ -98,7 +97,6 @@ mod tests {
                 pruned.set(&nm, w).unwrap();
             }
         }
-        let session = Session::new(Arc::new(Manifest::load_default().unwrap())).unwrap();
         let windows: Vec<Vec<i32>> = (0..4).map(|i| vec![(i * 5 + 1) as i32; spec.seq]).collect();
         let errs = layer_errors(&session, &presets, spec, &dense, &pruned, &windows).unwrap();
         assert!(errs[0] > 1e-4, "layer 0 should deviate: {errs:?}");

@@ -1,3 +1,8 @@
+//! The seven synthetic zero-shot probes (paper Table 3 analogs): task
+//! construction in `tasks`, scoring (artifact and native backends) in
+//! `harness`.
+
 pub mod harness;
 pub mod tasks;
-pub use harness::run_all_tasks;
+
+pub use harness::{run_all_tasks, run_all_tasks_native, TaskResult};

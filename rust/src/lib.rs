@@ -18,6 +18,36 @@
 //!
 //! Python never runs on the request path: after `make artifacts` the rust
 //! binary is self-contained.
+//!
+//! # Compute backends
+//!
+//! Every solver-facing operation goes through one of two backends behind
+//! the `pruner::engine::SolverEngine` trait:
+//!
+//! * **Native** (always available) — the multithreaded, cache-blocked
+//!   kernel layer in `tensor::{par, kernels, ops}`: row-block parallel
+//!   matmuls, a fused three-way Gram product, a fused FISTA iteration, and
+//!   a native activation-capture path hooked into the model forward. All
+//!   kernels are deterministic with respect to the thread count (see
+//!   `tensor::par`), which is what makes the scheduler's parallel modes
+//!   bit-exact across worker counts.
+//! * **XLA** (`xla-pjrt` cargo feature + `make artifacts`) — the AOT
+//!   artifacts executed through PJRT; `runtime::Session`/`ExecutorPool`
+//!   manage clients and the device-fleet worker pool.
+//!
+//! A clean checkout builds and runs the whole pruning + evaluation stack
+//! (`cargo build --release && cargo test -q`, `cargo run --release
+//! --example quickstart`) on the native backend alone; the XLA path layers
+//! on top without changing any caller.
+//!
+//! # Pipeline at a glance
+//!
+//! calibration corpus → `model::embed` → per-layer capture
+//! (`pruner::unit`) → Gram statistics (`tensor::kernels::gram3` or the
+//! `gram_{n}` artifact) → warm start (`baselines`) → Algorithm 1
+//! (`pruner::lambda` over `pruner::fista`) → exact-sparsity rounding
+//! (`pruner::rounding`) → report (`pruner::report`) → evaluation
+//! (`eval::perplexity`, `eval::zeroshot`) and sparse inference (`sparse`).
 
 pub mod util;
 pub mod ser;

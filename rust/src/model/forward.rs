@@ -8,6 +8,8 @@
 //! 2. **Artifact-free inference**: text generation (`eval::generate`) and
 //!    the sparse-inference demo (`sparse::forward`) run on this path.
 
+use std::collections::BTreeMap;
+
 use crate::config::{FamilyKind, ModelSpec};
 use crate::tensor::Tensor;
 
@@ -52,12 +54,36 @@ pub fn layer_forward<F>(
     params: &ModelParams,
     layer: usize,
     x: &Tensor,
+    linop: F,
+) -> Tensor
+where
+    F: FnMut(&str, &Tensor, &Tensor) -> Tensor,
+{
+    let specs = super::spec::layer_param_specs(spec, None);
+    let map: BTreeMap<&str, &Tensor> = specs
+        .iter()
+        .map(|sp| {
+            let t = params.req(&format!("l{layer}.{}", sp.name)).expect("layer param");
+            (sp.name.as_str(), t)
+        })
+        .collect();
+    layer_forward_mapped(spec, &map, x, linop)
+}
+
+/// Layer-generic variant of [`layer_forward`]: parameters are supplied as
+/// a bare-name → tensor map (the capture-artifact order, no `l{i}.`
+/// prefix). This is what the native capture path in the pruning unit runs
+/// on — it holds a layer's tensors without a full `ModelParams`.
+pub fn layer_forward_mapped<F>(
+    spec: &ModelSpec,
+    params: &BTreeMap<&str, &Tensor>,
+    x: &Tensor,
     mut linop: F,
 ) -> Tensor
 where
     F: FnMut(&str, &Tensor, &Tensor) -> Tensor,
 {
-    let p = |n: &str| params.req(&format!("l{layer}.{n}")).expect("layer param");
+    let p = |n: &str| *params.get(n).unwrap_or_else(|| panic!("layer param '{n}'"));
     let (s, d) = (x.rows(), spec.d);
     let h = match spec.family {
         FamilyKind::Topt => layernorm(x, p("ln1_g"), p("ln1_b")),
@@ -248,10 +274,17 @@ fn causal_attention(q: &Tensor, k: &Tensor, v: &Tensor, heads: usize) -> Tensor 
 /// Per-token NLL of `tokens[1..]` given the prefix (native mirror of the
 /// score artifact).
 pub fn nll(spec: &ModelSpec, params: &ModelParams, tokens: &[i32]) -> f64 {
+    nll_from(spec, params, tokens, 0)
+}
+
+/// NLL of `tokens[t0+1..]` given the prefix — the native mirror of the
+/// score artifact's suffix mask (zero-shot probes score only the
+/// continuation region).
+pub fn nll_from(spec: &ModelSpec, params: &ModelParams, tokens: &[i32], t0: usize) -> f64 {
     let lg = logits(spec, params, &tokens[..tokens.len() - 1]);
     let vocab = spec.vocab;
     let mut total = 0f64;
-    for t in 0..lg.rows() {
+    for t in t0..lg.rows() {
         let row = lg.row(t);
         let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
         let z: f64 = row.iter().map(|&v| ((v - max) as f64).exp()).sum();

@@ -7,7 +7,7 @@ use anyhow::{bail, Result};
 
 use crate::config::FistaCfg;
 use crate::runtime::session::{Arg, Session};
-use crate::tensor::{ops, Tensor};
+use crate::tensor::{kernels, ops, Tensor};
 
 /// Backend-agnostic per-matrix solver operations.
 pub trait SolverEngine {
@@ -32,15 +32,33 @@ pub trait SolverEngine {
 // Native reference engine
 // ---------------------------------------------------------------------
 
-/// Pure-rust engine (no artifacts needed). Mirrors the L2 graphs.
+/// Pure-rust engine (no artifacts needed). Mirrors the L2 graphs, running
+/// on the multithreaded blocked kernels in `tensor::kernels`: the Gram
+/// triple is one fused pass, `prep` never materializes W·D, and the FISTA
+/// loop reuses its gradient buffer across iterations.
 pub struct NativeEngine {
     pub cfg: FistaCfg,
+}
+
+impl NativeEngine {
+    /// Engine over explicit solver constants. Thread-count plumbing lives
+    /// in `prune_model` (PruneOptions::threads beats FistaCfg::threads);
+    /// the engine itself never mutates process-global state.
+    pub fn new(cfg: FistaCfg) -> NativeEngine {
+        NativeEngine { cfg }
+    }
 }
 
 impl Default for NativeEngine {
     fn default() -> Self {
         NativeEngine {
-            cfg: FistaCfg { max_iters: 20, power_iters: 64, power_safety: 1.02, stop_tol: 1e-6 },
+            cfg: FistaCfg {
+                max_iters: 20,
+                power_iters: 64,
+                power_safety: 1.02,
+                stop_tol: 1e-6,
+                threads: 0,
+            },
         }
     }
 }
@@ -50,13 +68,12 @@ impl SolverEngine for NativeEngine {
         if xd.shape() != xs.shape() {
             bail!("gram: xd {:?} != xs {:?}", xd.shape(), xs.shape());
         }
-        Ok((ops::matmul_nt(xs, xs), ops::matmul_nt(xd, xs), ops::matmul_nt(xd, xd)))
+        Ok(kernels::gram3(xd, xs))
     }
 
     fn prep(&self, w: &Tensor, c: &Tensor, d: &Tensor) -> Result<(Tensor, f64)> {
         let b = ops::matmul(w, c);
-        let wd = ops::matmul(w, d);
-        Ok((b, ops::dot(&wd, w)))
+        Ok((b, kernels::quad_form(w, d)))
     }
 
     fn power(&self, a: &Tensor) -> Result<f64> {
@@ -165,13 +182,11 @@ impl SolverEngine for XlaEngine<'_> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::Manifest;
     use crate::util::Pcg64;
-    use std::sync::Arc;
 
     #[test]
     fn xla_gram_chunks_equal_native_gram() {
-        let session = Session::new(Arc::new(Manifest::load_default().unwrap())).unwrap();
+        let Some(session) = crate::testing::try_session() else { return };
         let xla = XlaEngine::new(&session);
         let native = NativeEngine::default();
         let mut rng = Pcg64::seeded(11);
@@ -188,7 +203,7 @@ mod tests {
 
     #[test]
     fn xla_fista_matches_native() {
-        let session = Session::new(Arc::new(Manifest::load_default().unwrap())).unwrap();
+        let Some(session) = crate::testing::try_session() else { return };
         let xla = XlaEngine::new(&session);
         let native = NativeEngine::default();
         let mut rng = Pcg64::seeded(12);
@@ -212,7 +227,7 @@ mod tests {
 
     #[test]
     fn xla_prep_and_obj_match_native() {
-        let session = Session::new(Arc::new(Manifest::load_default().unwrap())).unwrap();
+        let Some(session) = crate::testing::try_session() else { return };
         let xla = XlaEngine::new(&session);
         let native = NativeEngine::default();
         let mut rng = Pcg64::seeded(13);

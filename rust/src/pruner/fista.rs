@@ -6,7 +6,7 @@
 //! an XLA while-loop); this implementation is the cross-language oracle
 //! and the `Engine::Native` fallback.
 
-use crate::tensor::{ops, Tensor};
+use crate::tensor::{kernels, Tensor};
 
 /// Elementwise SoftShrinkage_ρ (paper's proximal operator).
 pub fn soft_shrink(w: &Tensor, rho: f32) -> Tensor {
@@ -31,6 +31,14 @@ pub fn soft_shrink(w: &Tensor, rho: f32) -> Tensor {
 /// ½·tr(W A Wᵀ) − ⟨W, B⟩ + λ Σᵢ ‖W_{i,:}‖₁  (the Gram form of paper eq. 4).
 ///
 /// Returns (W_K = last proximal point, iterations actually run).
+///
+/// The whole 5a–5d update is two fused kernel passes per iteration — one
+/// gradient GEMM into a reused buffer (`kernels::matmul_sub_into`) and one
+/// elementwise sweep (`kernels::fista_step`) that performs the gradient
+/// step, the SoftShrinkage prox, the Nesterov combination and the eq. (7)
+/// stopping norm in a single pass over the data. No per-iteration tensor
+/// allocations (only `fista_step`'s m-element reduction partials), and
+/// results are identical for any kernel thread count.
 pub fn fista_solve(
     a: &Tensor,
     b: &Tensor,
@@ -44,30 +52,20 @@ pub fn fista_solve(
     let thresh = (lam / l_max) as f32;
     let mut w_k = w0.clone();
     let mut w23 = w0.clone();
+    let mut grad = Tensor::zeros(w0.shape().to_vec());
     let mut t = 1.0f64;
     let mut k = 0;
     while k < iters {
         let t_next = 0.5 * (1.0 + (1.0 + 4.0 * t * t).sqrt());
         let coef = ((t - 1.0) / t_next) as f32;
-        // (5a) gradient step at the extrapolated point W_k
-        let grad = ops::sub(&ops::matmul(&w_k, a), b);
-        let w13 = ops::add_scaled(&w_k, &grad, -inv_l);
-        // (5b) proximal step
-        w23 = soft_shrink(&w13, thresh);
-        // (5d) Nesterov combination
-        let w_next = Tensor::from_vec(
-            w23.shape().to_vec(),
-            w23.data()
-                .iter()
-                .zip(w_k.data())
-                .map(|(&p, &c)| p + coef * (p - c))
-                .collect(),
-        );
-        let diff = ops::frob_dist(&w_next, &w_k);
-        w_k = w_next;
+        // (5a) gradient at the extrapolated point: grad = W_k·A − B
+        kernels::matmul_sub_into(&mut grad, &w_k, a, b);
+        // (5a cont.), (5b), (5d) and the eq. (7) norm in one fused sweep;
+        // w23 receives the prox point, w_k the next Nesterov iterate.
+        let diff2 = kernels::fista_step(&grad, &mut w_k, &mut w23, inv_l, thresh, coef);
         t = t_next;
         k += 1;
-        if diff < tol {
+        if diff2.sqrt() < tol {
             break;
         }
     }

@@ -1,20 +1,29 @@
 //! Full-model pruning: decoder layers as independent pruning units
 //! (paper §3.4), scheduled sequentially (pruned activations propagate
 //! between layers, the paper's evaluation pipeline) or in parallel across
-//! the PJRT worker pool (the paper's multi-device pruning claim — each
-//! unit then consumes the dense layer input).
+//! a worker fleet (the paper's multi-device pruning claim — each unit
+//! then consumes the dense layer input).
+//!
+//! Parallel mode has two backends sharing one shape:
+//! * `Engine::Xla` — the PJRT `ExecutorPool` (one session per worker
+//!   thread, jobs over a shared queue).
+//! * `Engine::Native` — scoped worker threads over the same layer queue,
+//!   no session required; inner kernels run inline per worker (the
+//!   `tensor::par` nesting guard), so results are identical for any
+//!   worker count.
 
-use std::sync::Arc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::baselines::BaselineKind;
-use crate::config::{ModelSpec, Presets, PruneMode, PruneOptions};
+use crate::config::{Engine, ModelSpec, Presets, PruneMode, PruneOptions};
 use crate::model::embed::embed_windows;
 use crate::model::params::ModelParams;
 use crate::runtime::{ExecutorPool, Manifest, Session};
-use crate::tensor::Tensor;
+use crate::tensor::{par, Tensor};
 
 use super::report::PruneReport;
 use super::unit::{prune_unit, UnitResult};
@@ -50,11 +59,12 @@ impl Method {
 
 /// Prune a model on calibration windows (each ≥ seq tokens).
 ///
-/// Returns the pruned parameters and a per-op report. `session` is used
-/// for sequential mode; parallel mode spins up `opts.workers` pool workers
-/// with their own sessions.
+/// Returns the pruned parameters and a per-op report. `session` backs the
+/// XLA engine and capture artifacts; pass `None` to run fully natively
+/// (requires `opts.engine == Engine::Native`). `opts.threads` configures
+/// the native kernel fan-out, `opts.workers` the layer/op-level overlap.
 pub fn prune_model(
-    session: &Session,
+    session: Option<&Session>,
     presets: &Presets,
     spec: &ModelSpec,
     params: &ModelParams,
@@ -63,6 +73,15 @@ pub fn prune_model(
     opts: &PruneOptions,
 ) -> Result<(ModelParams, PruneReport)> {
     let t0 = Instant::now();
+    // Explicit run option beats the presets default; 0 leaves the current
+    // global setting (auto unless FP_THREADS / a previous run set it).
+    let threads = if opts.threads != 0 { opts.threads } else { presets.fista.threads };
+    if threads != 0 {
+        par::set_threads(threads);
+    }
+    if matches!(opts.engine, Engine::Xla) && session.is_none() {
+        bail!("Engine::Xla needs a PJRT session; pass one or use Engine::Native");
+    }
     let mut out = params.clone();
     let (x0, valids) = embed_windows(spec, params, calib_windows, presets.capture_batch)?;
 
@@ -86,7 +105,8 @@ pub fn prune_model(
                 let layer_tensors: Vec<Tensor> =
                     out.layer_tensors(spec, layer).into_iter().cloned().collect();
                 let res = prune_unit(
-                    session, presets, spec, &method, opts, layer, &layer_tensors, &xd, &xs, &valids,
+                    session, presets, spec, &method, opts, layer, &layer_tensors, &xd, &xs,
+                    &valids,
                 )
                 .with_context(|| format!("pruning layer {layer}"))?;
                 apply_unit(&mut out, layer, &res)?;
@@ -97,7 +117,8 @@ pub fn prune_model(
             }
         }
         PruneMode::Parallel => {
-            // Pass 1 (cheap): dense layer inputs for every layer.
+            // Pass 1 (cheap): dense layer inputs for every layer. The unit
+            // recognizes xd ≡ xs and performs a single capture per layer.
             let mut inputs: Vec<Vec<Tensor>> = Vec::with_capacity(spec.layers);
             let mut cur = x0;
             for layer in 0..spec.layers {
@@ -118,33 +139,31 @@ pub fn prune_model(
                 )?;
                 cur = res.y_dense;
             }
-            // Pass 2: independent units over the worker pool.
-            let manifest = Arc::new(Manifest::load(&session.manifest().dir)?);
-            let pool = ExecutorPool::new(manifest, opts.workers.max(1))?;
-            let presets_arc = Arc::new(presets.clone());
-            let spec_arc = Arc::new(spec.clone());
-            let opts_arc = Arc::new(opts.clone());
-            let (tx, rx) = std::sync::mpsc::channel::<(usize, Result<UnitResult>)>();
-            for layer in 0..spec.layers {
-                let layer_tensors: Vec<Tensor> =
-                    out.layer_tensors(spec, layer).into_iter().cloned().collect();
-                let xin = inputs[layer].clone();
-                let valids = valids.clone();
-                let (p, s, o) = (presets_arc.clone(), spec_arc.clone(), opts_arc.clone());
-                let tx = tx.clone();
-                pool.submit(move |session| {
-                    let res = prune_unit(
-                        session, &p, &s, &method, &o, layer, &layer_tensors, &xin, &xin, &valids,
-                    );
-                    let _ = tx.send((layer, res));
-                });
-            }
-            drop(tx);
-            let mut results: Vec<(usize, UnitResult)> = Vec::with_capacity(spec.layers);
-            for (layer, res) in rx.iter() {
-                results.push((layer, res.with_context(|| format!("pruning layer {layer}"))?));
-            }
-            results.sort_by_key(|(l, _)| *l);
+            // Pass 2: independent units over a worker fleet.
+            let layer_tensor_sets: Vec<Vec<Tensor>> = (0..spec.layers)
+                .map(|layer| out.layer_tensors(spec, layer).into_iter().cloned().collect())
+                .collect();
+            let results = match opts.engine {
+                Engine::Xla => run_units_pjrt(
+                    session.expect("checked above"),
+                    presets,
+                    spec,
+                    &method,
+                    opts,
+                    layer_tensor_sets,
+                    inputs,
+                    &valids,
+                )?,
+                Engine::Native => run_units_native(
+                    presets,
+                    spec,
+                    &method,
+                    opts,
+                    &layer_tensor_sets,
+                    &inputs,
+                    &valids,
+                )?,
+            };
             for (layer, res) in results {
                 apply_unit(&mut out, layer, &res)?;
                 report.layers.push(res.report);
@@ -166,6 +185,117 @@ pub fn prune_model(
 
     report.elapsed = t0.elapsed();
     Ok((out, report))
+}
+
+/// Parallel units over the PJRT worker pool (each worker owns a session).
+#[allow(clippy::too_many_arguments)]
+fn run_units_pjrt(
+    session: &Session,
+    presets: &Presets,
+    spec: &ModelSpec,
+    method: &Method,
+    opts: &PruneOptions,
+    layer_tensor_sets: Vec<Vec<Tensor>>,
+    inputs: Vec<Vec<Tensor>>,
+    valids: &[usize],
+) -> Result<Vec<(usize, UnitResult)>> {
+    let manifest = Arc::new(Manifest::load(&session.manifest().dir)?);
+    let pool = ExecutorPool::new(manifest, opts.workers.max(1))?;
+    let presets_arc = Arc::new(presets.clone());
+    let spec_arc = Arc::new(spec.clone());
+    let opts_arc = Arc::new(opts.clone());
+    let method = *method;
+    let (tx, rx) = std::sync::mpsc::channel::<(usize, Result<UnitResult>)>();
+    for (layer, (layer_tensors, xin)) in
+        layer_tensor_sets.into_iter().zip(inputs.into_iter()).enumerate()
+    {
+        let valids = valids.to_vec();
+        let (p, s, o) = (presets_arc.clone(), spec_arc.clone(), opts_arc.clone());
+        let tx = tx.clone();
+        pool.submit(move |session| {
+            let res = prune_unit(
+                Some(session), &p, &s, &method, &o, layer, &layer_tensors, &xin, &xin, &valids,
+            );
+            let _ = tx.send((layer, res));
+        });
+    }
+    drop(tx);
+    let mut results: Vec<(usize, UnitResult)> = Vec::with_capacity(spec.layers);
+    for (layer, res) in rx.iter() {
+        results.push((layer, res.with_context(|| format!("pruning layer {layer}"))?));
+    }
+    results.sort_by_key(|(l, _)| *l);
+    Ok(results)
+}
+
+/// Parallel units over native scoped workers: a shared atomic layer queue,
+/// `opts.workers` threads, no sessions. Kernels inside each worker run
+/// inline (nesting guard), except with a single worker, which keeps the
+/// full kernel fan-out.
+fn run_units_native(
+    presets: &Presets,
+    spec: &ModelSpec,
+    method: &Method,
+    opts: &PruneOptions,
+    layer_tensor_sets: &[Vec<Tensor>],
+    inputs: &[Vec<Tensor>],
+    valids: &[usize],
+) -> Result<Vec<(usize, UnitResult)>> {
+    let layers = spec.layers;
+    let n_workers = opts.workers.max(1).min(layers.max(1));
+    if n_workers <= 1 {
+        let mut results = Vec::with_capacity(layers);
+        for layer in 0..layers {
+            let res = prune_unit(
+                None,
+                presets,
+                spec,
+                method,
+                opts,
+                layer,
+                &layer_tensor_sets[layer],
+                &inputs[layer],
+                &inputs[layer],
+                valids,
+            )
+            .with_context(|| format!("pruning layer {layer}"))?;
+            results.push((layer, res));
+        }
+        return Ok(results);
+    }
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<(usize, Result<UnitResult>)>> = Mutex::new(Vec::with_capacity(layers));
+    std::thread::scope(|s| {
+        for _ in 0..n_workers {
+            s.spawn(|| {
+                par::enter_worker(|| loop {
+                    let layer = next.fetch_add(1, Ordering::Relaxed);
+                    if layer >= layers {
+                        break;
+                    }
+                    let res = prune_unit(
+                        None,
+                        presets,
+                        spec,
+                        method,
+                        opts,
+                        layer,
+                        &layer_tensor_sets[layer],
+                        &inputs[layer],
+                        &inputs[layer],
+                        valids,
+                    );
+                    results.lock().expect("results poisoned").push((layer, res));
+                })
+            });
+        }
+    });
+    let mut collected: Vec<(usize, UnitResult)> = Vec::with_capacity(layers);
+    for (layer, res) in results.into_inner().expect("results poisoned") {
+        collected.push((layer, res.with_context(|| format!("pruning layer {layer}"))?));
+    }
+    collected.sort_by_key(|(l, _)| *l);
+    Ok(collected)
 }
 
 fn apply_unit(params: &mut ModelParams, layer: usize, res: &UnitResult) -> Result<()> {

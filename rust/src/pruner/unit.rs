@@ -9,16 +9,29 @@
 //! next operator reads a capture point downstream of a pruned operator.
 //! With error correction disabled (the Fig. 4a ablation) X* ≡ X and both
 //! come from a single capture — exactly eq. (1) instead of eq. (2).
+//!
+//! Capture runs on either backend: the `capture_{model}` XLA artifact when
+//! a PJRT session is supplied, or the native forward pass (hooked through
+//! `model::forward::layer_forward_mapped`) when it is not — so the whole
+//! unit is self-contained on the native engine.
+//!
+//! Operators that share a capture point (q/k/v; the SwiGLU gate/up pair)
+//! are solved concurrently on the native engine when `opts.workers > 1`:
+//! their solves read the same X/X* and are independent, so overlapping
+//! them is exact, not an approximation.
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 use crate::baselines::{self, BaselineKind};
 use crate::config::{Engine, FamilyKind, ModelSpec, Presets, PruneOptions, WarmStart};
-use crate::model::ops::{pruned_ops, CaptureKey};
+use crate::model::forward::layer_forward_mapped;
+use crate::model::ops::{pruned_ops, CaptureKey, PrunedOp};
+use crate::model::spec::layer_param_specs;
 use crate::runtime::session::{Arg, Session};
-use crate::tensor::Tensor;
+use crate::tensor::{ops, par, Tensor};
 
 use super::engine::{NativeEngine, SolverEngine, XlaEngine};
 use super::lambda::{tune_lambda, TuneCfg};
@@ -45,14 +58,28 @@ struct Captures {
     y: Vec<Tensor>,
 }
 
+/// What one operator solve produced (collected before mutating the layer).
+struct SolveOut {
+    w_star: Tensor,
+    lambda: f64,
+    rounds: usize,
+    fista_iters: usize,
+    error: f64,
+    /// ‖WX‖ from the error model's constant term (relative-error scale).
+    scale: f64,
+    elapsed: std::time::Duration,
+}
+
 /// Prune one decoder layer.
 ///
 /// `layer_params` must be in capture-artifact order (layer_param_specs);
 /// `xd/xs_batches` are [cb, s, d] layer inputs on the dense/pruned paths;
 /// `valid_rows[i]` is the number of real (unpadded) rows in batch i.
+/// `session` is required for `Engine::Xla`; `Engine::Native` ignores it
+/// and runs capture + solve entirely on the native kernels.
 #[allow(clippy::too_many_arguments)]
 pub fn prune_unit(
-    session: &Session,
+    session: Option<&Session>,
     presets: &Presets,
     spec: &ModelSpec,
     method: &Method,
@@ -66,35 +93,56 @@ pub fn prune_unit(
     let t_layer = Instant::now();
     let native;
     let xla;
-    let engine: &dyn SolverEngine = match opts.engine {
+    let (engine, cap_session): (&dyn SolverEngine, Option<&Session>) = match opts.engine {
         Engine::Xla => {
-            xla = XlaEngine::new(session);
-            &xla
+            let Some(s) = session else {
+                bail!("Engine::Xla needs a PJRT session (artifacts); use Engine::Native otherwise")
+            };
+            xla = XlaEngine::new(s);
+            (&xla, Some(s))
         }
         Engine::Native => {
-            native = NativeEngine { cfg: presets.fista.clone() };
-            &native
+            native = NativeEngine::new(presets.fista.clone());
+            (&native, None)
         }
     };
 
     let mut cur: Vec<Tensor> = layer_params.to_vec();
-    let param_names: Vec<String> = crate::model::spec::layer_param_specs(spec, None)
-        .iter()
-        .map(|s| s.name.clone())
-        .collect();
+    let param_names: Vec<String> =
+        layer_param_specs(spec, None).iter().map(|s| s.name.clone()).collect();
     let op_index = |name: &str| -> usize {
         param_names.iter().position(|n| n == name).expect("op in layer params")
     };
+    // The scheduler's parallel pass 1 feeds the same batches as both paths;
+    // detecting that saves two identical captures per layer.
+    let same_input = std::ptr::eq(xd_batches.as_ptr(), xs_batches.as_ptr())
+        && xd_batches.len() == xs_batches.len();
 
     // One dense capture: targets WX (and the dense-path layer output).
-    let dense_caps = run_capture(session, spec, layer_params, xd_batches, valid_rows)?;
+    let dense_caps = run_capture(cap_session, spec, layer_params, xd_batches, valid_rows)?;
+
+    let mut report = LayerReport { layer, ..Default::default() };
+    if matches!(method, Method::Dense) {
+        let y_pruned = if same_input {
+            dense_caps.y.clone()
+        } else {
+            run_capture(cap_session, spec, layer_params, xs_batches, valid_rows)?.y
+        };
+        report.elapsed = t_layer.elapsed();
+        return Ok(UnitResult { pruned: Vec::new(), y_dense: dense_caps.y, y_pruned, report });
+    }
+
     // Correction on: X* starts as the pruned-path capture under the still-
-    // dense current layer. Correction off: X* = X (single capture, eq. 1).
-    let correction = opts.error_correction && !matches!(method, Method::Dense);
-    let mut star_caps = if correction {
-        run_capture(session, spec, &cur, xs_batches, valid_rows)?
+    // dense current layer, re-captured after downstream mutations. When
+    // both paths feed identical batches (parallel mode) the initial star
+    // capture would equal the dense one — `None` falls back to X below, so
+    // the duplicate capture is skipped and recomputed only once ops have
+    // actually been pruned. Correction off: X* ≡ X (single capture, eq. 1).
+    let correction = opts.error_correction;
+    let mut star_caps: Option<Captures> = if correction && !same_input {
+        Some(run_capture(cap_session, spec, &cur, xs_batches, valid_rows)?)
     } else {
-        run_capture(session, spec, layer_params, xs_batches, valid_rows)?
+        None
     };
 
     let tune_cfg = {
@@ -110,73 +158,143 @@ pub fn prune_unit(
         (WarmStart::Dense, _) => None,
     };
 
-    let mut report = LayerReport { layer, ..Default::default() };
+    // Solve one operator against its (X, X*) pair — pure w.r.t. the layer
+    // state, so same-capture-point operators can run concurrently.
+    let solve_one = |engine: &dyn SolverEngine, op: &PrunedOp, w: &Tensor, xd: &Tensor, xs: &Tensor| -> Result<SolveOut> {
+        let t_op = Instant::now();
+        if w.shape() != [op.m, op.n] {
+            bail!("op {} shape {:?} != ({}, {})", op.name, w.shape(), op.m, op.n);
+        }
+        let em = ErrorModel::build(engine, w, xd, xs)
+            .with_context(|| format!("layer {layer} op {}", op.name))?;
+        let (w_star, lambda, rounds, fista_iters) = match method {
+            Method::Dense => unreachable!("dense handled above"),
+            Method::Baseline(kind) => {
+                (baselines::prune_matrix(*kind, w, &em.a, opts.sparsity)?, 0.0, 0, 0)
+            }
+            Method::Fista => {
+                let w0 = match warm_kind {
+                    Some(kind) => baselines::prune_matrix(kind, w, &em.a, opts.sparsity)?,
+                    None => w.clone(),
+                };
+                let res = tune_lambda(engine, &em, &w0, opts.sparsity, &tune_cfg)?;
+                (res.w, res.lambda, res.rounds, res.fista_iters)
+            }
+        };
+        let error = em.error(engine, &w_star)?;
+        let scale = em.c.max(0.0).sqrt();
+        Ok(SolveOut { w_star, lambda, rounds, fista_iters, error, scale, elapsed: t_op.elapsed() })
+    };
+
     let mut pruned: Vec<(String, Tensor)> = Vec::new();
     let mut dirty = false; // ops pruned since the last X* capture
-    let mut last_key = CaptureKey::AttnIn;
 
-    if !matches!(method, Method::Dense) {
-        for op in pruned_ops(spec) {
-            let t_op = Instant::now();
-            // Re-capture X* when moving to a new capture point after mutations.
-            if correction && dirty && op.capture != last_key {
-                // (dirty stays true: the next op prunes again regardless)
-                star_caps = run_capture(session, spec, &cur, xs_batches, valid_rows)?;
-            }
-            last_key = op.capture;
+    // Group consecutive operators sharing a capture point: q/k/v, o, the
+    // MLP in pair/single, the MLP out. Groups preserve the paper's
+    // intra-layer order; within a group the solves are independent.
+    let all_ops = pruned_ops(spec);
+    let mut groups: Vec<Vec<PrunedOp>> = Vec::new();
+    for op in all_ops {
+        match groups.last_mut() {
+            Some(g) if g[0].capture == op.capture => g.push(op),
+            _ => groups.push(vec![op]),
+        }
+    }
 
-            let w = &cur[op_index(op.name)];
-            if w.shape() != [op.m, op.n] {
-                bail!("op {} shape {:?} != ({}, {})", op.name, w.shape(), op.m, op.n);
-            }
-            let xd = &dense_caps.acts[op.capture.output_index()];
-            let xs = if correction { &star_caps.acts[op.capture.output_index()] } else { xd };
-            let em = ErrorModel::build(engine, w, xd, xs)
-                .with_context(|| format!("layer {layer} op {}", op.name))?;
+    for group in &groups {
+        // Re-capture X* when moving to a new capture point after mutations
+        // (consecutive groups always differ in capture key).
+        if correction && dirty {
+            star_caps = Some(run_capture(cap_session, spec, &cur, xs_batches, valid_rows)?);
+        }
+        let key = group[0].capture.output_index();
+        let xd = &dense_caps.acts[key];
+        let xs = match (&star_caps, correction) {
+            (Some(star), true) => &star.acts[key],
+            _ => xd,
+        };
 
-            let (w_star, lambda, rounds, fista_iters) = match method {
-                Method::Dense => unreachable!(),
-                Method::Baseline(kind) => {
-                    (baselines::prune_matrix(*kind, w, &em.a, opts.sparsity)?, 0.0, 0, 0)
-                }
-                Method::Fista => {
-                    let w0 = match warm_kind {
-                        Some(kind) => baselines::prune_matrix(kind, w, &em.a, opts.sparsity)?,
-                        None => w.clone(),
-                    };
-                    let res = tune_lambda(engine, &em, &w0, opts.sparsity, &tune_cfg)?;
-                    (res.w, res.lambda, res.rounds, res.fista_iters)
-                }
-            };
+        // Overlap only when nothing upstream is already fanned out (the
+        // parallel-mode layer workers would otherwise double-subscribe).
+        let overlap = matches!(opts.engine, Engine::Native)
+            && opts.workers > 1
+            && group.len() > 1
+            && !par::in_worker();
+        let outs: Vec<Result<SolveOut>> = if overlap {
+            // Native-engine overlap: one worker per operator, each with its
+            // own engine; inner kernels run inline (par nesting guard), so
+            // results match the sequential path exactly.
+            std::thread::scope(|s| {
+                let handles: Vec<_> = group
+                    .iter()
+                    .map(|op| {
+                        let w = &cur[op_index(op.name)];
+                        let cfg = presets.fista.clone();
+                        let solve_one = &solve_one;
+                        s.spawn(move || {
+                            par::enter_worker(|| {
+                                let eng = NativeEngine { cfg };
+                                solve_one(&eng, op, w, xd, xs)
+                            })
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| match h.join() {
+                        Ok(r) => r,
+                        Err(_) => Err(anyhow::anyhow!("operator solve thread panicked")),
+                    })
+                    .collect()
+            })
+        } else {
+            group.iter().map(|op| solve_one(engine, op, &cur[op_index(op.name)], xd, xs)).collect()
+        };
 
-            let error = em.error(engine, &w_star)?;
-            let scale = em.c.max(0.0).sqrt();
+        for (op, out) in group.iter().zip(outs) {
+            let out = out?;
+            let scale = out.scale;
             report.ops.push(OpReport {
                 layer,
                 op: op.name.to_string(),
-                error,
-                rel_error: if scale > 0.0 { error / scale } else { 0.0 },
-                lambda,
-                rounds,
-                fista_iters,
-                sparsity: w_star.sparsity(),
-                elapsed: t_op.elapsed(),
+                error: out.error,
+                rel_error: if scale > 0.0 { out.error / scale } else { 0.0 },
+                lambda: out.lambda,
+                rounds: out.rounds,
+                fista_iters: out.fista_iters,
+                sparsity: out.w_star.sparsity(),
+                elapsed: out.elapsed,
             });
-            cur[op_index(op.name)] = w_star.clone();
-            pruned.push((op.name.to_string(), w_star));
+            cur[op_index(op.name)] = out.w_star.clone();
+            pruned.push((op.name.to_string(), out.w_star));
             dirty = true;
         }
     }
 
     // Final pruned-path capture → the next layer's x* input.
-    let final_caps = run_capture(session, spec, &cur, xs_batches, valid_rows)?;
+    let final_caps = run_capture(cap_session, spec, &cur, xs_batches, valid_rows)?;
     report.elapsed = t_layer.elapsed();
     Ok(UnitResult { pruned, y_dense: dense_caps.y, y_pruned: final_caps.y, report })
 }
 
+/// Capture one layer's activations over all batches: dispatches to the
+/// `capture_{model}` artifact (session supplied) or the native forward.
+fn run_capture(
+    session: Option<&Session>,
+    spec: &ModelSpec,
+    layer_params: &[Tensor],
+    batches: &[Tensor],
+    valid_rows: &[usize],
+) -> Result<Captures> {
+    match session {
+        Some(s) => run_capture_artifact(s, spec, layer_params, batches, valid_rows),
+        None => run_capture_native(spec, layer_params, batches, valid_rows),
+    }
+}
+
 /// Run the layer-generic capture artifact over all batches, harvesting
 /// X matrices ([n, p], columns = valid calibration tokens) per capture key.
-fn run_capture(
+fn run_capture_artifact(
     session: &Session,
     spec: &ModelSpec,
     layer_params: &[Tensor],
@@ -223,40 +341,175 @@ fn run_capture(
     Ok(Captures { acts, y })
 }
 
+/// Activations captured from one sequence's native layer forward.
+struct RowCapture {
+    /// Indexed by CaptureKey::output_index(); [s, n_key] operator inputs.
+    caps: [Option<Tensor>; 4],
+    /// [s, d] layer output.
+    y: Tensor,
+}
+
+/// Native capture: run the rust layer forward per valid sequence with a
+/// capturing `linop`, in parallel across sequences, then scatter the
+/// captured inputs into the same [n, p] column layout the artifact path
+/// produces.
+fn run_capture_native(
+    spec: &ModelSpec,
+    layer_params: &[Tensor],
+    batches: &[Tensor],
+    valid_rows: &[usize],
+) -> Result<Captures> {
+    let specs = layer_param_specs(spec, None);
+    if layer_params.len() != specs.len() {
+        bail!("native capture: {} layer params, spec has {}", layer_params.len(), specs.len());
+    }
+    let map: BTreeMap<&str, &Tensor> =
+        specs.iter().zip(layer_params).map(|(s, t)| (s.name.as_str(), t)).collect();
+
+    let (seq, d) = (spec.seq, spec.d);
+    let p_total: usize = valid_rows.iter().map(|&v| v * seq).sum();
+    let dims = [spec.d, spec.d, spec.d, spec.ffn];
+    let mut acts: Vec<Tensor> = dims.iter().map(|&n| Tensor::zeros(vec![n, p_total])).collect();
+    let mut y = Vec::with_capacity(batches.len());
+    let mut col0 = 0usize;
+    for (batch, &valid) in batches.iter().zip(valid_rows) {
+        if batch.shape().len() != 3 || batch.shape()[1] != seq || batch.shape()[2] != d {
+            bail!("native capture: batch shape {:?} != [cb, {seq}, {d}]", batch.shape());
+        }
+        let cb = batch.shape()[0];
+        if valid > cb {
+            bail!("native capture: {valid} valid rows in a batch of {cb}");
+        }
+        let bdata = batch.data();
+        let mut rows: Vec<Option<RowCapture>> = (0..valid).map(|_| None).collect();
+        par::for_each_row_block(&mut rows, valid, 1, 1, |r0, _r1, slots| {
+            for (i, slot) in slots.iter_mut().enumerate() {
+                let r = r0 + i;
+                let x = Tensor::from_vec(
+                    vec![seq, d],
+                    bdata[r * seq * d..(r + 1) * seq * d].to_vec(),
+                );
+                *slot = Some(capture_row(spec, &map, &x));
+            }
+        });
+        let mut y_b = Tensor::zeros(vec![cb, seq, d]);
+        for (r, slot) in rows.into_iter().enumerate() {
+            let rc = slot.expect("row capture filled");
+            for (k, cap) in rc.caps.iter().enumerate() {
+                let cap = cap.as_ref().expect("capture key visited by layer forward");
+                let n = dims[k];
+                debug_assert_eq!(cap.shape(), [seq, n]);
+                let xdata = acts[k].data_mut();
+                let cdata = cap.data();
+                for t in 0..seq {
+                    let col = col0 + r * seq + t;
+                    for d_i in 0..n {
+                        xdata[d_i * p_total + col] = cdata[t * n + d_i];
+                    }
+                }
+            }
+            y_b.data_mut()[r * seq * d..(r + 1) * seq * d].copy_from_slice(rc.y.data());
+        }
+        y.push(y_b);
+        col0 += valid * seq;
+    }
+    Ok(Captures { acts, y })
+}
+
+/// One sequence through the layer, capturing the four operator inputs.
+fn capture_row(spec: &ModelSpec, map: &BTreeMap<&str, &Tensor>, x: &Tensor) -> RowCapture {
+    let mut caps: [Option<Tensor>; 4] = [None, None, None, None];
+    let y = layer_forward_mapped(spec, map, x, |name, w, input| {
+        let key = match name {
+            "wq" => Some(CaptureKey::AttnIn), // shared by wk/wv
+            "wo" => Some(CaptureKey::OIn),
+            "w1" | "wg" => Some(CaptureKey::MlpIn), // wu shares wg's input
+            "w2" | "wd" => Some(CaptureKey::Mlp2In),
+            _ => None,
+        };
+        if let Some(k) = key {
+            caps[k.output_index()] = Some(input.clone());
+        }
+        ops::matmul_nt(input, w)
+    });
+    RowCapture { caps, y }
+}
+
 #[cfg(test)]
 mod tests {
-    // prune_unit is exercised end-to-end in rust/tests/ (pipeline tests);
-    // unit tests here cover the capture scatter logic via a dense run.
+    // prune_unit is exercised end-to-end in rust/tests/ (pipeline +
+    // scheduler-parity tests); unit tests here cover the capture scatter
+    // logic (native and, when artifacts exist, artifact vs native parity).
     use super::*;
     use crate::config::repo_root;
     use crate::model::init::init_params;
-    use crate::runtime::Manifest;
-    use std::sync::Arc;
 
-    #[test]
-    fn dense_unit_roundtrip_produces_consistent_outputs() {
-        let root = repo_root().unwrap();
-        let presets = Presets::load(&root).unwrap();
-        let spec = presets.model("topt-s1").unwrap();
-        let params = init_params(spec, 5);
-        let session = Session::new(Arc::new(Manifest::load_default().unwrap())).unwrap();
+    fn setup(model: &str) -> (Presets, ModelSpec, crate::model::ModelParams, Vec<Tensor>, Vec<usize>) {
+        let presets = Presets::load(&repo_root().unwrap()).unwrap();
+        let spec = presets.model(model).unwrap().clone();
+        let params = init_params(&spec, 5);
         let windows: Vec<Vec<i32>> = (0..4).map(|i| vec![(i * 7 % 96) as i32; spec.seq]).collect();
         let (batches, valids) =
-            crate::model::embed::embed_windows(spec, &params, &windows, presets.capture_batch).unwrap();
+            crate::model::embed::embed_windows(&spec, &params, &windows, presets.capture_batch)
+                .unwrap();
+        (presets, spec, params, batches, valids)
+    }
+
+    #[test]
+    fn dense_unit_roundtrip_produces_consistent_outputs_native() {
+        for model in ["topt-s1", "tllama-s1"] {
+            let (presets, spec, params, batches, valids) = setup(model);
+            let layer_tensors: Vec<Tensor> =
+                params.layer_tensors(&spec, 0).into_iter().cloned().collect();
+            let opts = PruneOptions { engine: Engine::Native, ..Default::default() };
+            let res = prune_unit(
+                None, &presets, &spec, &Method::Dense, &opts, 0, &layer_tensors, &batches,
+                &batches, &valids,
+            )
+            .unwrap();
+            assert!(res.pruned.is_empty());
+            assert_eq!(res.y_dense.len(), res.y_pruned.len());
+            for (a, b) in res.y_dense.iter().zip(&res.y_pruned) {
+                assert_eq!(a.shape(), b.shape());
+                assert!(ops::frob_dist(a, b) < 1e-5, "{model}");
+            }
+        }
+    }
+
+    #[test]
+    fn native_capture_matches_native_forward() {
+        // The captured AttnIn of layer 0 must equal the layer's normed
+        // input; y must equal layer_forward on each valid row.
+        let (_presets, spec, params, batches, valids) = setup("topt-s1");
         let layer_tensors: Vec<Tensor> =
-            params.layer_tensors(spec, 0).into_iter().cloned().collect();
-        let opts = PruneOptions::default();
-        let res = prune_unit(
-            &session, &presets, spec, &Method::Dense, &opts, 0, &layer_tensors, &batches, &batches,
-            &valids,
-        )
-        .unwrap();
-        assert!(res.pruned.is_empty());
-        assert_eq!(res.y_dense.len(), res.y_pruned.len());
-        // dense and "pruned" paths are identical when nothing was pruned
-        for (a, b) in res.y_dense.iter().zip(&res.y_pruned) {
-            assert_eq!(a.shape(), b.shape());
-            assert!(crate::tensor::ops::frob_dist(a, b) < 1e-5);
+            params.layer_tensors(&spec, 0).into_iter().cloned().collect();
+        let caps = run_capture_native(&spec, &layer_tensors, &batches, &valids).unwrap();
+        let p_total: usize = valids.iter().map(|&v| v * spec.seq).sum();
+        assert_eq!(caps.acts[0].shape(), &[spec.d, p_total]);
+        assert_eq!(caps.acts[3].shape(), &[spec.ffn, p_total]);
+        let (seq, d) = (spec.seq, spec.d);
+        let x0 = Tensor::from_vec(vec![seq, d], batches[0].data()[..seq * d].to_vec());
+        let y0 = crate::model::forward::layer_forward(&spec, &params, 0, &x0, |_n, w, inp| {
+            ops::matmul_nt(inp, w)
+        });
+        let got = &caps.y[0].data()[..seq * d];
+        for (a, b) in got.iter().zip(y0.data()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn artifact_capture_matches_native_capture() {
+        let Some(session) = crate::testing::try_session() else { return };
+        let (_presets, spec, params, batches, valids) = setup("topt-s1");
+        let layer_tensors: Vec<Tensor> =
+            params.layer_tensors(&spec, 0).into_iter().cloned().collect();
+        let art = run_capture_artifact(&session, &spec, &layer_tensors, &batches, &valids).unwrap();
+        let nat = run_capture_native(&spec, &layer_tensors, &batches, &valids).unwrap();
+        for k in 0..4 {
+            let rel = ops::frob_dist(&art.acts[k], &nat.acts[k])
+                / nat.acts[k].frob_norm().max(1.0);
+            assert!(rel < 5e-3, "capture key {k}: rel {rel}");
         }
     }
 }

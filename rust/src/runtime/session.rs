@@ -3,16 +3,21 @@
 //! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax ≥ 0.5
 //! serialized protos use 64-bit instruction ids that xla_extension 0.5.1
 //! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The real backend requires the vendored `xla` crate and is compiled only
+//! under the `xla-pjrt` feature (see rust/Cargo.toml). Without it this
+//! module provides a stub with the identical API whose constructor fails —
+//! callers that can run natively (`Engine::Native`, the whole pruning and
+//! evaluation stack) are unaffected; callers that genuinely need artifacts
+//! get a clear error instead of a link failure.
 
-use std::cell::RefCell;
-use std::collections::HashMap;
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::Result;
 
 use crate::tensor::Tensor;
 
-use super::manifest::{ArtifactInfo, DType, Manifest};
+use super::manifest::Manifest;
 
 /// An argument to an artifact execution.
 pub enum Arg<'a> {
@@ -24,161 +29,208 @@ pub enum Arg<'a> {
     I32(&'a [i32], &'a [usize]),
 }
 
-/// One PJRT client + compiled-executable cache. Not `Send` (the client is
-/// `Rc`-backed); each pool worker owns its own session.
-pub struct Session {
-    client: xla::PjRtClient,
-    manifest: Arc<Manifest>,
-    exes: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+pub use backend::Session;
+
+#[cfg(not(feature = "xla-pjrt"))]
+mod backend {
+    use super::*;
+    use anyhow::bail;
+
+    /// Stub session for builds without the PJRT backend. `new` and `run`
+    /// fail with an explanatory error; `Engine::Native` never needs one.
+    pub struct Session {
+        manifest: Arc<Manifest>,
+    }
+
+    const UNAVAILABLE: &str = "PJRT backend not built: enable the `xla-pjrt` cargo feature \
+         (requires the vendored `xla` crate) or run with the native engine";
+
+    impl Session {
+        pub fn new(manifest: Arc<Manifest>) -> Result<Session> {
+            let _ = &manifest;
+            bail!("{UNAVAILABLE}")
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        /// Number of executables compiled so far (always 0 in the stub).
+        pub fn compiled_count(&self) -> usize {
+            0
+        }
+
+        /// Execute artifact `name` — always an error in the stub.
+        pub fn run(&self, name: &str, _args: &[Arg<'_>]) -> Result<Vec<Tensor>> {
+            bail!("cannot execute artifact '{name}': {UNAVAILABLE}")
+        }
+    }
 }
 
-impl Session {
-    pub fn new(manifest: Arc<Manifest>) -> Result<Session> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e}"))?;
-        Ok(Session { client, manifest, exes: RefCell::new(HashMap::new()) })
+#[cfg(feature = "xla-pjrt")]
+mod backend {
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+
+    use anyhow::{bail, Context};
+
+    use super::*;
+    use crate::runtime::manifest::{ArtifactInfo, DType};
+
+    /// One PJRT client + compiled-executable cache. Not `Send` (the client
+    /// is `Rc`-backed); each pool worker owns its own session.
+    pub struct Session {
+        client: xla::PjRtClient,
+        manifest: Arc<Manifest>,
+        exes: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
     }
 
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    /// Compile (or fetch from cache) the executable for `name`.
-    fn executable(&self, name: &str) -> Result<()> {
-        if self.exes.borrow().contains_key(name) {
-            return Ok(());
+    impl Session {
+        pub fn new(manifest: Arc<Manifest>) -> Result<Session> {
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e}"))?;
+            Ok(Session { client, manifest, exes: RefCell::new(HashMap::new()) })
         }
-        let info = self.manifest.artifact(name)?;
-        let path = info
-            .file
-            .to_str()
-            .with_context(|| format!("non-utf8 path {:?}", info.file))?;
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?;
-        self.exes.borrow_mut().insert(name.to_string(), exe);
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        /// Compile (or fetch from cache) the executable for `name`.
+        fn executable(&self, name: &str) -> Result<()> {
+            if self.exes.borrow().contains_key(name) {
+                return Ok(());
+            }
+            let info = self.manifest.artifact(name)?;
+            let path = info
+                .file
+                .to_str()
+                .with_context(|| format!("non-utf8 path {:?}", info.file))?;
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?;
+            self.exes.borrow_mut().insert(name.to_string(), exe);
+            Ok(())
+        }
+
+        /// Number of executables compiled so far (perf introspection).
+        pub fn compiled_count(&self) -> usize {
+            self.exes.borrow().len()
+        }
+
+        /// Execute artifact `name` with positional `args`; returns the output
+        /// tuple as f32 tensors (i32 outputs are widened to f32).
+        ///
+        /// Inputs go through `buffer_from_host_buffer` + `execute_b`, NOT
+        /// `execute(&[Literal])`: the crate's literal-execute path leaks the
+        /// device buffers it creates per call (~input size per execution,
+        /// found via OOM during training); `PjRtBuffer`s we own are freed on
+        /// drop.
+        pub fn run(&self, name: &str, args: &[Arg<'_>]) -> Result<Vec<Tensor>> {
+            let info = self.manifest.artifact(name)?;
+            validate_args(info, args)?;
+            self.executable(name)?;
+            let buffers: Vec<xla::PjRtBuffer> =
+                args.iter().map(|a| self.to_buffer(a)).collect::<Result<_>>()?;
+            let exes = self.exes.borrow();
+            let exe = exes.get(name).expect("compiled above");
+            let outputs = exe
+                .execute_b::<xla::PjRtBuffer>(&buffers)
+                .map_err(|e| anyhow::anyhow!("executing {name}: {e}"))?;
+            drop(buffers);
+            let lit = outputs
+                .first()
+                .and_then(|d| d.first())
+                .context("no output buffer")?
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("fetching {name} output: {e}"))?;
+            // aot.py lowers with return_tuple=True: the single output is a tuple.
+            let parts = lit
+                .to_tuple()
+                .map_err(|e| anyhow::anyhow!("untupling {name} output: {e}"))?;
+            if parts.len() != info.outputs {
+                bail!("{name}: got {} outputs, manifest says {}", parts.len(), info.outputs);
+            }
+            parts.into_iter().map(|l| literal_to_tensor(&l)).collect()
+        }
+
+        fn to_buffer(&self, arg: &Arg<'_>) -> Result<xla::PjRtBuffer> {
+            match arg {
+                Arg::T(t) => self
+                    .client
+                    .buffer_from_host_buffer::<f32>(t.data(), t.shape(), None)
+                    .map_err(|e| anyhow::anyhow!("f32 buffer: {e}")),
+                Arg::Scalar(x) => self
+                    .client
+                    .buffer_from_host_buffer::<f32>(&[*x], &[], None)
+                    .map_err(|e| anyhow::anyhow!("scalar buffer: {e}")),
+                Arg::I32(data, dims) => self
+                    .client
+                    .buffer_from_host_buffer::<i32>(data, dims, None)
+                    .map_err(|e| anyhow::anyhow!("i32 buffer: {e}")),
+            }
+        }
+    }
+
+    fn validate_args(info: &ArtifactInfo, args: &[Arg<'_>]) -> Result<()> {
+        if args.len() != info.inputs.len() {
+            bail!("{}: {} args given, {} expected", info.name, args.len(), info.inputs.len());
+        }
+        for (i, (arg, spec)) in args.iter().zip(&info.inputs).enumerate() {
+            let (dims, dtype): (Vec<usize>, DType) = match arg {
+                Arg::T(t) => (t.shape().to_vec(), DType::F32),
+                Arg::Scalar(_) => (vec![], DType::F32),
+                Arg::I32(data, dims) => {
+                    if data.len() != dims.iter().product::<usize>() {
+                        bail!("{} arg {i} ({}): i32 data/dims mismatch", info.name, spec.name);
+                    }
+                    (dims.to_vec(), DType::I32)
+                }
+            };
+            if dims != spec.dims || dtype != spec.dtype {
+                bail!(
+                    "{} arg {i} ({}): got {:?}/{:?}, expected {:?}/{:?}",
+                    info.name, spec.name, dims, dtype, spec.dims, spec.dtype
+                );
+            }
+        }
         Ok(())
     }
 
-    /// Number of executables compiled so far (perf introspection).
-    pub fn compiled_count(&self) -> usize {
-        self.exes.borrow().len()
-    }
-
-    /// Execute artifact `name` with positional `args`; returns the output
-    /// tuple as f32 tensors (i32 outputs are widened to f32).
-    ///
-    /// Inputs go through `buffer_from_host_buffer` + `execute_b`, NOT
-    /// `execute(&[Literal])`: the crate's literal-execute path leaks the
-    /// device buffers it creates per call (~input size per execution,
-    /// found via OOM during training); `PjRtBuffer`s we own are freed on
-    /// drop.
-    pub fn run(&self, name: &str, args: &[Arg<'_>]) -> Result<Vec<Tensor>> {
-        let info = self.manifest.artifact(name)?;
-        validate_args(info, args)?;
-        self.executable(name)?;
-        let buffers: Vec<xla::PjRtBuffer> =
-            args.iter().map(|a| self.to_buffer(a)).collect::<Result<_>>()?;
-        let exes = self.exes.borrow();
-        let exe = exes.get(name).expect("compiled above");
-        let outputs = exe
-            .execute_b::<xla::PjRtBuffer>(&buffers)
-            .map_err(|e| anyhow::anyhow!("executing {name}: {e}"))?;
-        drop(buffers);
-        let lit = outputs
-            .first()
-            .and_then(|d| d.first())
-            .context("no output buffer")?
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetching {name} output: {e}"))?;
-        // aot.py lowers with return_tuple=True: the single output is a tuple.
-        let parts = lit
-            .to_tuple()
-            .map_err(|e| anyhow::anyhow!("untupling {name} output: {e}"))?;
-        if parts.len() != info.outputs {
-            bail!("{name}: got {} outputs, manifest says {}", parts.len(), info.outputs);
-        }
-        parts.into_iter().map(|l| literal_to_tensor(&l)).collect()
-    }
-}
-
-fn validate_args(info: &ArtifactInfo, args: &[Arg<'_>]) -> Result<()> {
-    if args.len() != info.inputs.len() {
-        bail!("{}: {} args given, {} expected", info.name, args.len(), info.inputs.len());
-    }
-    for (i, (arg, spec)) in args.iter().zip(&info.inputs).enumerate() {
-        let (dims, dtype): (Vec<usize>, DType) = match arg {
-            Arg::T(t) => (t.shape().to_vec(), DType::F32),
-            Arg::Scalar(_) => (vec![], DType::F32),
-            Arg::I32(data, dims) => {
-                if data.len() != dims.iter().product::<usize>() {
-                    bail!("{} arg {i} ({}): i32 data/dims mismatch", info.name, spec.name);
-                }
-                (dims.to_vec(), DType::I32)
+    fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape().map_err(|e| anyhow::anyhow!("output shape: {e}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let ty = lit.ty().map_err(|e| anyhow::anyhow!("output ty: {e}"))?;
+        let data: Vec<f32> = match ty {
+            xla::ElementType::F32 => {
+                lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec f32: {e}"))?
             }
+            xla::ElementType::S32 => lit
+                .to_vec::<i32>()
+                .map_err(|e| anyhow::anyhow!("to_vec i32: {e}"))?
+                .into_iter()
+                .map(|x| x as f32)
+                .collect(),
+            other => bail!("unsupported output element type {other:?}"),
         };
-        if dims != spec.dims || dtype != spec.dtype {
-            bail!(
-                "{} arg {i} ({}): got {:?}/{:?}, expected {:?}/{:?}",
-                info.name, spec.name, dims, dtype, spec.dims, spec.dtype
-            );
-        }
+        Ok(Tensor::from_vec(dims, data))
     }
-    Ok(())
-}
-
-impl Session {
-    fn to_buffer(&self, arg: &Arg<'_>) -> Result<xla::PjRtBuffer> {
-        match arg {
-            Arg::T(t) => self
-                .client
-                .buffer_from_host_buffer::<f32>(t.data(), t.shape(), None)
-                .map_err(|e| anyhow::anyhow!("f32 buffer: {e}")),
-            Arg::Scalar(x) => self
-                .client
-                .buffer_from_host_buffer::<f32>(&[*x], &[], None)
-                .map_err(|e| anyhow::anyhow!("scalar buffer: {e}")),
-            Arg::I32(data, dims) => self
-                .client
-                .buffer_from_host_buffer::<i32>(data, dims, None)
-                .map_err(|e| anyhow::anyhow!("i32 buffer: {e}")),
-        }
-    }
-}
-
-fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
-    let shape = lit.array_shape().map_err(|e| anyhow::anyhow!("output shape: {e}"))?;
-    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-    let ty = lit.ty().map_err(|e| anyhow::anyhow!("output ty: {e}"))?;
-    let data: Vec<f32> = match ty {
-        xla::ElementType::F32 => lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec f32: {e}"))?,
-        xla::ElementType::S32 => lit
-            .to_vec::<i32>()
-            .map_err(|e| anyhow::anyhow!("to_vec i32: {e}"))?
-            .into_iter()
-            .map(|x| x as f32)
-            .collect(),
-        other => bail!("unsupported output element type {other:?}"),
-    };
-    Ok(Tensor::from_vec(dims, data))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::tensor::ops as tops;
+    use crate::tensor::Tensor;
     use crate::util::Pcg64;
-
-    fn session() -> Session {
-        Session::new(Arc::new(Manifest::load_default().unwrap())).unwrap()
-    }
 
     #[test]
     fn gram_artifact_matches_native() {
-        let s = session();
+        let Some(s) = crate::testing::try_session() else { return };
         let chunk = s.manifest().gram_chunk;
         let mut rng = Pcg64::seeded(1);
         let xd = Tensor::from_vec(vec![64, chunk], rng.normal_vec(64 * chunk, 1.0));
@@ -195,7 +247,7 @@ mod tests {
 
     #[test]
     fn power_artifact_matches_native() {
-        let s = session();
+        let Some(s) = crate::testing::try_session() else { return };
         let mut rng = Pcg64::seeded(2);
         let x = Tensor::from_vec(vec![64, 200], rng.normal_vec(64 * 200, 1.0));
         let a = tops::matmul_nt(&x, &x);
@@ -207,10 +259,23 @@ mod tests {
 
     #[test]
     fn arg_validation_rejects_bad_shapes() {
-        let s = session();
+        let Some(s) = crate::testing::try_session() else { return };
         let t = Tensor::zeros(vec![3, 3]);
         assert!(s.run("gram_64", &[Arg::T(&t), Arg::T(&t)]).is_err());
         let good = Tensor::zeros(vec![64, s.manifest().gram_chunk]);
         assert!(s.run("gram_64", &[Arg::T(&good)]).is_err(), "arity check");
+    }
+
+    #[test]
+    fn stub_backend_reports_unavailable() {
+        // Without the xla-pjrt feature Session::new must fail loudly, not
+        // hang or panic — the native engine is the supported path then.
+        if cfg!(feature = "xla-pjrt") {
+            return;
+        }
+        if let Some(m) = crate::testing::try_manifest() {
+            let err = Session::new(Arc::new(m));
+            assert!(err.is_err());
+        }
     }
 }

@@ -1,0 +1,527 @@
+//! Multithreaded, cache-blocked native kernels.
+//!
+//! Every hot native-path operation lives here: the blocked matmul family,
+//! the fused three-way Gram product, the fused FISTA iteration update, and
+//! the quadratic-form reductions that back the pruning objective. All
+//! kernels fan out over [`super::par`] and therefore inherit its
+//! guarantees: contiguous per-row ownership, no nested fan-out, and
+//! results that are bitwise independent of the thread count.
+//!
+//! `tensor::ops` re-exposes the general-purpose subset with the original
+//! signatures; the fused solver kernels (`matmul_sub_into`, `fista_step`,
+//! `gram3`, `quad_form`) are called directly by `pruner::fista` and
+//! `pruner::engine`.
+
+use super::par;
+use super::Tensor;
+
+/// Cache tile edge for the blocked loops (f32: 64×64 tile = 16 KiB).
+pub const BLOCK: usize = 64;
+
+/// Rough per-chunk work floor (flops) below which fan-out is not worth a
+/// thread spawn.
+const MIN_CHUNK_FLOPS: usize = 1 << 18;
+
+/// Elementwise-chunk floor for memory-bound kernels.
+const MIN_ELEMS: usize = 1 << 14;
+
+fn min_rows_for(per_row_flops: usize) -> usize {
+    (MIN_CHUNK_FLOPS / per_row_flops.max(1)).max(1)
+}
+
+// ---------------------------------------------------------------------
+// Matmul family
+// ---------------------------------------------------------------------
+
+/// C = A @ B for A[m,k], B[k,n] — row-block parallel, k-tiled per block,
+/// with a cheap skip for zero A entries (pruned weights).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul inner dims: {k} vs {k2}");
+    let mut out = Tensor::zeros(vec![m, n]);
+    let (ad, bd) = (a.data(), b.data());
+    par::for_each_row_block(
+        out.data_mut(),
+        m,
+        n,
+        min_rows_for(2 * k * n),
+        |r0, r1, block| matmul_rows(ad, bd, block, r0, r1, k, n, None),
+    );
+    out
+}
+
+/// out = W @ A − B for W[m,k], A[k,n], B[m,n] — the FISTA gradient
+/// (paper eq. 5a), fused so no intermediate W·A tensor is materialized.
+pub fn matmul_sub_into(out: &mut Tensor, w: &Tensor, a: &Tensor, b: &Tensor) {
+    let (m, k) = (w.rows(), w.cols());
+    let (k2, n) = (a.rows(), a.cols());
+    assert_eq!(k, k2, "matmul_sub inner dims: {k} vs {k2}");
+    assert_eq!(b.shape(), [m, n], "matmul_sub bias shape");
+    assert_eq!(out.shape(), [m, n], "matmul_sub out shape");
+    let (wd, ad, bd) = (w.data(), a.data(), b.data());
+    par::for_each_row_block(
+        out.data_mut(),
+        m,
+        n,
+        min_rows_for(2 * k * n),
+        |r0, r1, block| matmul_rows(wd, ad, block, r0, r1, k, n, Some(bd)),
+    );
+}
+
+/// Shared inner loop: block rows [r0, r1) of `out` get A[r,:] @ B, on top
+/// of either zeros or `-neg[r,:]`. Per-row accumulation order is fixed
+/// (ascending k tiles), so any row split yields identical results.
+#[allow(clippy::too_many_arguments)]
+fn matmul_rows(
+    ad: &[f32],
+    bd: &[f32],
+    out: &mut [f32],
+    r0: usize,
+    r1: usize,
+    k: usize,
+    n: usize,
+    neg: Option<&[f32]>,
+) {
+    if let Some(neg) = neg {
+        for i in r0..r1 {
+            let orow = &mut out[(i - r0) * n..(i - r0 + 1) * n];
+            for (o, &v) in orow.iter_mut().zip(&neg[i * n..(i + 1) * n]) {
+                *o = -v;
+            }
+        }
+    }
+    for i0 in (r0..r1).step_by(BLOCK) {
+        let i1 = (i0 + BLOCK).min(r1);
+        for k0 in (0..k).step_by(BLOCK) {
+            let k1 = (k0 + BLOCK).min(k);
+            for i in i0..i1 {
+                let arow = &ad[i * k..(i + 1) * k];
+                let orow = &mut out[(i - r0) * n..(i - r0 + 1) * n];
+                for kk in k0..k1 {
+                    let av = arow[kk];
+                    if av == 0.0 {
+                        continue; // sparse weights: skip zero rows cheaply
+                    }
+                    let brow = &bd[kk * n..(kk + 1) * n];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// C = A @ Bᵀ for A[m,k], B[n,k] — rows dot rows (contiguous, fast),
+/// row-block parallel.
+pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let (n, k2) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul_nt inner dims: {k} vs {k2}");
+    let mut out = Tensor::zeros(vec![m, n]);
+    let (ad, bd) = (a.data(), b.data());
+    par::for_each_row_block(
+        out.data_mut(),
+        m,
+        n,
+        min_rows_for(2 * k * n),
+        |r0, r1, block| {
+            for i in r0..r1 {
+                let arow = &ad[i * k..(i + 1) * k];
+                let orow = out_row(block, i - r0, n);
+                for (j, o) in orow.iter_mut().enumerate() {
+                    let brow = &bd[j * k..(j + 1) * k];
+                    let mut acc = 0.0f32;
+                    for (&x, &y) in arow.iter().zip(brow) {
+                        acc += x * y;
+                    }
+                    *o = acc;
+                }
+            }
+        },
+    );
+    out
+}
+
+fn out_row(block: &mut [f32], local_row: usize, n: usize) -> &mut [f32] {
+    &mut block[local_row * n..(local_row + 1) * n]
+}
+
+/// B = Aᵀ (2-D transpose), tiled and parallel over output rows.
+pub fn transpose(a: &Tensor) -> Tensor {
+    let (m, n) = (a.rows(), a.cols());
+    let mut out = Tensor::zeros(vec![n, m]);
+    let ad = a.data();
+    par::for_each_row_block(out.data_mut(), n, m, BLOCK, |j0, j1, block| {
+        for jb in (j0..j1).step_by(BLOCK) {
+            let jb1 = (jb + BLOCK).min(j1);
+            for i0 in (0..m).step_by(BLOCK) {
+                let i1 = (i0 + BLOCK).min(m);
+                for j in jb..jb1 {
+                    let orow = &mut block[(j - j0) * m..(j - j0 + 1) * m];
+                    for i in i0..i1 {
+                        orow[i] = ad[i * n + j];
+                    }
+                }
+            }
+        }
+    });
+    out
+}
+
+/// y = A @ x for A[m,n], x[n] — parallel over output rows.
+pub fn matvec(a: &Tensor, x: &[f32]) -> Vec<f32> {
+    let (m, n) = (a.rows(), a.cols());
+    assert_eq!(n, x.len());
+    let ad = a.data();
+    let mut out = vec![0f32; m];
+    par::for_each_row_block(&mut out, m, 1, min_rows_for(2 * n), |r0, _r1, block| {
+        for (i, o) in block.iter_mut().enumerate() {
+            let row = &ad[(r0 + i) * n..(r0 + i + 1) * n];
+            *o = row.iter().zip(x).map(|(&p, &q)| p * q).sum();
+        }
+    });
+    out
+}
+
+// ---------------------------------------------------------------------
+// Fused Gram accumulation
+// ---------------------------------------------------------------------
+
+/// The three Gram products of one operator in a single pass:
+/// A = Xs·Xsᵀ, C = Xd·Xsᵀ, D = Xd·Xdᵀ for Xd, Xs of shape [n, p].
+///
+/// Row i of all three outputs is computed together so each Xs/Xd row is
+/// streamed from memory once per (i, j) pair instead of three times —
+/// the native half of the `gram_{n}` artifact contract.
+pub fn gram3(xd: &Tensor, xs: &Tensor) -> (Tensor, Tensor, Tensor) {
+    assert_eq!(xd.shape(), xs.shape(), "gram3 needs matching activations");
+    let (n, p) = (xd.rows(), xd.cols());
+    let (xdd, xsd) = (xd.data(), xs.data());
+    // Packed row layout: [A_i | C_i | D_i], unpacked below. Packing keeps
+    // the parallel dispatch a single contiguous row-block split.
+    let mut packed = vec![0f32; n * 3 * n];
+    par::for_each_row_block(
+        &mut packed,
+        n,
+        3 * n,
+        min_rows_for(6 * n * p),
+        |r0, r1, block| {
+            for i in r0..r1 {
+                let xsi = &xsd[i * p..(i + 1) * p];
+                let xdi = &xdd[i * p..(i + 1) * p];
+                let row = &mut block[(i - r0) * 3 * n..(i - r0 + 1) * 3 * n];
+                let (arow, rest) = row.split_at_mut(n);
+                let (crow, drow) = rest.split_at_mut(n);
+                for j in 0..n {
+                    let xsj = &xsd[j * p..(j + 1) * p];
+                    let xdj = &xdd[j * p..(j + 1) * p];
+                    let (mut sa, mut sc, mut sd) = (0f32, 0f32, 0f32);
+                    for t in 0..p {
+                        sa += xsi[t] * xsj[t];
+                        sc += xdi[t] * xsj[t];
+                        sd += xdi[t] * xdj[t];
+                    }
+                    arow[j] = sa;
+                    crow[j] = sc;
+                    drow[j] = sd;
+                }
+            }
+        },
+    );
+    let mut a = Tensor::zeros(vec![n, n]);
+    let mut c = Tensor::zeros(vec![n, n]);
+    let mut d = Tensor::zeros(vec![n, n]);
+    for i in 0..n {
+        let row = &packed[i * 3 * n..(i + 1) * 3 * n];
+        a.row_mut(i).copy_from_slice(&row[..n]);
+        c.row_mut(i).copy_from_slice(&row[n..2 * n]);
+        d.row_mut(i).copy_from_slice(&row[2 * n..]);
+    }
+    (a, c, d)
+}
+
+// ---------------------------------------------------------------------
+// Fused FISTA update
+// ---------------------------------------------------------------------
+
+/// One fused FISTA iteration tail (paper eqs. 5a–5d) over the whole
+/// matrix in a single pass:
+///
+/// given `grad` = W_k·A − B, per element
+///   w13  = w_k − (1/L)·grad              (5a, gradient step)
+///   prox = SoftShrink_{λ/L}(w13)         (5b, proximal step)
+///   next = prox + coef·(prox − w_k)      (5d, Nesterov combination)
+///
+/// writes `prox` into `w23`, `next` into `w_k`, and returns
+/// ‖next − w_k‖²_F accumulated as deterministic per-row partials.
+pub fn fista_step(
+    grad: &Tensor,
+    w_k: &mut Tensor,
+    w23: &mut Tensor,
+    inv_l: f32,
+    thresh: f32,
+    coef: f32,
+) -> f64 {
+    assert_eq!(grad.shape(), w_k.shape());
+    assert_eq!(grad.shape(), w23.shape());
+    let (m, n) = (w_k.rows(), w_k.cols());
+    let gd = grad.data();
+    let mut partials = vec![0f64; m];
+    let nt = par::plan(m, (MIN_ELEMS / n.max(1)).max(1));
+    if nt <= 1 {
+        fista_step_rows(gd, w_k.data_mut(), w23.data_mut(), &mut partials, 0, m, n, inv_l, thresh, coef);
+    } else {
+        let per = m.div_ceil(nt);
+        let wkd = w_k.data_mut();
+        let w23d = w23.data_mut();
+        std::thread::scope(|s| {
+            let mut wk_rest = wkd;
+            let mut w23_rest = w23d;
+            let mut part_rest = partials.as_mut_slice();
+            let mut r0 = 0usize;
+            while r0 < m {
+                let r1 = (r0 + per).min(m);
+                let rows = r1 - r0;
+                let (wk_h, wk_t) = std::mem::take(&mut wk_rest).split_at_mut(rows * n);
+                wk_rest = wk_t;
+                let (w23_h, w23_t) = std::mem::take(&mut w23_rest).split_at_mut(rows * n);
+                w23_rest = w23_t;
+                let (p_h, p_t) = std::mem::take(&mut part_rest).split_at_mut(rows);
+                part_rest = p_t;
+                s.spawn(move || {
+                    par::enter_worker(|| {
+                        fista_step_rows(gd, wk_h, w23_h, p_h, r0, r1, n, inv_l, thresh, coef)
+                    })
+                });
+                r0 = r1;
+            }
+        });
+    }
+    partials.iter().sum()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn fista_step_rows(
+    gd: &[f32],
+    wk: &mut [f32],
+    w23: &mut [f32],
+    partials: &mut [f64],
+    r0: usize,
+    r1: usize,
+    n: usize,
+    inv_l: f32,
+    thresh: f32,
+    coef: f32,
+) {
+    for row in 0..(r1 - r0) {
+        let gbase = (r0 + row) * n;
+        let mut acc = 0f64;
+        for j in 0..n {
+            let g = gd[gbase + j];
+            let wkv = wk[row * n + j];
+            let w13 = wkv + (-inv_l) * g;
+            let prox = if w13 > thresh {
+                w13 - thresh
+            } else if w13 < -thresh {
+                w13 + thresh
+            } else {
+                0.0
+            };
+            let next = prox + coef * (prox - wkv);
+            let d = (next - wkv) as f64;
+            acc += d * d;
+            w23[row * n + j] = prox;
+            wk[row * n + j] = next;
+        }
+        partials[row] = acc;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Quadratic-form reductions
+// ---------------------------------------------------------------------
+
+/// tr(W G Wᵀ) for W[m,n], G[n,n], without materializing W·G. Used for the
+/// prep constant c = ‖W X‖² = tr(W D Wᵀ).
+pub fn quad_form(w: &Tensor, g: &Tensor) -> f64 {
+    let (m, n) = (w.rows(), w.cols());
+    assert_eq!(g.shape(), [n, n], "quad_form needs square G");
+    let gd = g.data();
+    par::sum_rows(m, min_rows_for(2 * n * n), |r| {
+        let wr = w.row(r);
+        let t = row_times_square(wr, gd, n);
+        t.iter().zip(wr).map(|(&x, &y)| (x as f64) * (y as f64)).sum()
+    })
+}
+
+/// tr(W A Wᵀ) − 2⟨W, B⟩: the Gram form of ‖WX* − W₀X‖² − ‖W₀X‖², fused
+/// per output row (one A-row sweep, no W·A allocation).
+pub fn quad_obj(a: &Tensor, b: &Tensor, w: &Tensor) -> f64 {
+    let (m, n) = (w.rows(), w.cols());
+    assert_eq!(a.shape(), [n, n], "quad_obj needs square A");
+    assert_eq!(b.shape(), [m, n], "quad_obj B shape");
+    let ad = a.data();
+    par::sum_rows(m, min_rows_for(2 * n * n), |r| {
+        let wr = w.row(r);
+        let t = row_times_square(wr, ad, n);
+        let quad: f64 = t.iter().zip(wr).map(|(&x, &y)| (x as f64) * (y as f64)).sum();
+        let lin: f64 = wr.iter().zip(b.row(r)).map(|(&x, &y)| (x as f64) * (y as f64)).sum();
+        quad - 2.0 * lin
+    })
+}
+
+/// t = w_r @ G for a square row-major G (zero entries of w_r skipped).
+fn row_times_square(wr: &[f32], gd: &[f32], n: usize) -> Vec<f32> {
+    let mut t = vec![0f32; n];
+    for (k, &wv) in wr.iter().enumerate() {
+        if wv == 0.0 {
+            continue;
+        }
+        let grow = &gd[k * n..(k + 1) * n];
+        for (o, &gv) in t.iter_mut().zip(grow) {
+            *o += wv * gv;
+        }
+    }
+    t
+}
+
+// ---------------------------------------------------------------------
+// Elementwise + flat reductions
+// ---------------------------------------------------------------------
+
+/// out[i] = f(a[i], b[i]) with parallel fixed-size chunking.
+pub fn zip_map(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32 + Sync) -> Tensor {
+    assert_eq!(a.shape(), b.shape());
+    let len = a.len();
+    let mut out = Tensor::zeros(a.shape().to_vec());
+    let (ad, bd) = (a.data(), b.data());
+    par::for_each_row_block(out.data_mut(), len, 1, MIN_ELEMS, |i0, _i1, block| {
+        for (k, o) in block.iter_mut().enumerate() {
+            *o = f(ad[i0 + k], bd[i0 + k]);
+        }
+    });
+    out
+}
+
+/// ⟨a, b⟩ with f64 accumulation over fixed chunks (thread-count stable).
+pub fn dot(a: &Tensor, b: &Tensor) -> f64 {
+    assert_eq!(a.shape(), b.shape());
+    let (ad, bd) = (a.data(), b.data());
+    par::sum_flat(ad.len(), |s, e| {
+        ad[s..e].iter().zip(&bd[s..e]).map(|(&x, &y)| (x as f64) * (y as f64)).sum()
+    })
+}
+
+/// ‖a − b‖²_F with f64 accumulation over fixed chunks.
+pub fn sq_dist(a: &Tensor, b: &Tensor) -> f64 {
+    assert_eq!(a.shape(), b.shape());
+    let (ad, bd) = (a.data(), b.data());
+    par::sum_flat(ad.len(), |s, e| {
+        ad[s..e]
+            .iter()
+            .zip(&bd[s..e])
+            .map(|(&x, &y)| {
+                let d = (x - y) as f64;
+                d * d
+            })
+            .sum()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn randt(rng: &mut Pcg64, shape: Vec<usize>) -> Tensor {
+        let len = shape.iter().product();
+        Tensor::from_vec(shape, rng.normal_vec(len, 1.0))
+    }
+
+    #[test]
+    fn gram3_matches_individual_products() {
+        let mut rng = Pcg64::seeded(41);
+        for (n, p) in [(5, 17), (33, 70), (64, 256)] {
+            let xd = randt(&mut rng, vec![n, p]);
+            let xs = randt(&mut rng, vec![n, p]);
+            let (a, c, d) = gram3(&xd, &xs);
+            let a2 = matmul_nt(&xs, &xs);
+            let c2 = matmul_nt(&xd, &xs);
+            let d2 = matmul_nt(&xd, &xd);
+            for (got, want) in [(&a, &a2), (&c, &c2), (&d, &d2)] {
+                assert!(sq_dist(got, want).sqrt() < 1e-3 * want.frob_norm().max(1.0), "{n}x{p}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_sub_matches_two_step() {
+        let mut rng = Pcg64::seeded(42);
+        let w = randt(&mut rng, vec![9, 13]);
+        let a = randt(&mut rng, vec![13, 13]);
+        let b = randt(&mut rng, vec![9, 13]);
+        let mut out = Tensor::zeros(vec![9, 13]);
+        matmul_sub_into(&mut out, &w, &a, &b);
+        let want = zip_map(&matmul(&w, &a), &b, |x, y| x - y);
+        assert!(sq_dist(&out, &want).sqrt() < 1e-3);
+    }
+
+    #[test]
+    fn fista_step_matches_unfused_reference() {
+        let mut rng = Pcg64::seeded(43);
+        let (m, n) = (21, 37);
+        let grad = randt(&mut rng, vec![m, n]);
+        let w0 = randt(&mut rng, vec![m, n]);
+        let (inv_l, thresh, coef) = (0.25f32, 0.1f32, 0.6f32);
+
+        let mut w_k = w0.clone();
+        let mut w23 = Tensor::zeros(vec![m, n]);
+        let diff2 = fista_step(&grad, &mut w_k, &mut w23, inv_l, thresh, coef);
+
+        // unfused reference: the five-step original
+        let w13 = zip_map(&w0, &grad, |x, g| x + (-inv_l) * g);
+        let prox = Tensor::from_vec(
+            vec![m, n],
+            w13.data()
+                .iter()
+                .map(|&x| {
+                    if x > thresh {
+                        x - thresh
+                    } else if x < -thresh {
+                        x + thresh
+                    } else {
+                        0.0
+                    }
+                })
+                .collect(),
+        );
+        let next = Tensor::from_vec(
+            vec![m, n],
+            prox.data().iter().zip(w0.data()).map(|(&p, &c)| p + coef * (p - c)).collect(),
+        );
+        assert_eq!(w23, prox, "prox point must match the unfused steps exactly");
+        assert_eq!(w_k, next, "Nesterov point must match the unfused steps exactly");
+        let want = sq_dist(&next, &w0);
+        assert!((diff2 - want).abs() < 1e-6 * want.max(1.0));
+    }
+
+    #[test]
+    fn quad_forms_match_matmul_route() {
+        let mut rng = Pcg64::seeded(44);
+        let w = randt(&mut rng, vec![11, 19]);
+        let g = {
+            let x = randt(&mut rng, vec![19, 40]);
+            matmul_nt(&x, &x)
+        };
+        let wg = matmul(&w, &g);
+        let want = dot(&wg, &w);
+        let got = quad_form(&w, &g);
+        assert!((got - want).abs() < 1e-4 * want.abs().max(1.0), "{got} vs {want}");
+        let b = randt(&mut rng, vec![11, 19]);
+        let want_obj = want - 2.0 * dot(&w, &b);
+        let got_obj = quad_obj(&g, &b, &w);
+        assert!((got_obj - want_obj).abs() < 1e-4 * want_obj.abs().max(1.0));
+    }
+}

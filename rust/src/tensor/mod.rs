@@ -1,11 +1,26 @@
-//! Dense f32 tensors with row-major layout.
+//! Dense f32 tensors with row-major layout, plus the native kernel stack.
 //!
 //! This is the coordinator-side tensor substrate: weights, activations and
-//! Gram matrices live here between PJRT calls. Heavy math runs in the AOT
-//! artifacts; the native ops below (blocked matmul, reductions) exist for
-//! the warm-start baselines, tests, and the native FISTA fallback.
+//! Gram matrices live here between backend calls. The module splits in
+//! three:
+//!
+//! * [`par`] — the worker abstraction: deterministic row-block
+//!   parallelism over scoped threads, with a process-global thread count
+//!   and a nested-fan-out guard shared by every native kernel and the
+//!   prune scheduler.
+//! * [`kernels`] — the multithreaded cache-blocked kernels (matmul
+//!   family, fused Gram accumulation, the fused FISTA update, quadratic
+//!   forms).
+//! * [`ops`] — the stable general-purpose facade over `kernels` used by
+//!   baselines, the model forward, tests, and the solver engines.
+//!
+//! When the `xla-pjrt` feature is enabled the request-path hot loops can
+//! run in AOT artifacts instead; `ops`/`kernels` remain the reference
+//! implementation both paths are tested against.
 
+pub mod kernels;
 pub mod ops;
+pub mod par;
 
 use std::fmt;
 
@@ -27,40 +42,49 @@ impl fmt::Debug for Tensor {
 }
 
 impl Tensor {
+    /// All-zero tensor of the given shape.
     pub fn zeros(shape: Vec<usize>) -> Self {
         let len = shape.iter().product();
         Tensor { shape, data: vec![0.0; len] }
     }
 
+    /// Wrap a row-major buffer; panics if the shape does not match.
     pub fn from_vec(shape: Vec<usize>, data: Vec<f32>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
         Tensor { shape, data }
     }
 
+    /// Rank-0 tensor holding one value.
     pub fn scalar(x: f32) -> Self {
         Tensor { shape: vec![], data: vec![x] }
     }
 
+    /// The dimension sizes, outermost first.
     pub fn shape(&self) -> &[usize] {
         &self.shape
     }
 
+    /// Total number of elements.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// True when the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// The flat row-major element buffer.
     pub fn data(&self) -> &[f32] {
         &self.data
     }
 
+    /// Mutable access to the flat row-major element buffer.
     pub fn data_mut(&mut self) -> &mut [f32] {
         &mut self.data
     }
 
+    /// Consume the tensor, returning its buffer.
     pub fn into_vec(self) -> Vec<f32> {
         self.data
     }
@@ -77,19 +101,23 @@ impl Tensor {
         self.shape[1]
     }
 
+    /// Element (i, j) of a 2-D tensor.
     pub fn at2(&self, i: usize, j: usize) -> f32 {
         self.data[i * self.shape[1] + j]
     }
 
+    /// Set element (i, j) of a 2-D tensor.
     pub fn set2(&mut self, i: usize, j: usize, v: f32) {
         self.data[i * self.shape[1] + j] = v;
     }
 
+    /// Row i of a 2-D tensor as a contiguous slice.
     pub fn row(&self, i: usize) -> &[f32] {
         let c = self.cols();
         &self.data[i * c..(i + 1) * c]
     }
 
+    /// Mutable row i of a 2-D tensor.
     pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
         let c = self.cols();
         &mut self.data[i * c..(i + 1) * c]
@@ -102,6 +130,7 @@ impl Tensor {
         self
     }
 
+    /// The first element (scalar artifact outputs).
     pub fn first(&self) -> f32 {
         self.data[0]
     }
@@ -114,10 +143,12 @@ impl Tensor {
         self.data.iter().filter(|&&x| x == 0.0).count() as f64 / self.data.len() as f64
     }
 
+    /// Frobenius norm (f64 accumulation).
     pub fn frob_norm(&self) -> f64 {
         self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
     }
 
+    /// Largest absolute element (0 for an empty tensor).
     pub fn max_abs(&self) -> f32 {
         self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
     }

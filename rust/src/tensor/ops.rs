@@ -1,143 +1,57 @@
-//! Native tensor ops: cache-blocked matmul variants, transposes, reductions.
+//! Native tensor ops: the stable facade over the multithreaded blocked
+//! kernels in [`super::kernels`].
 //!
 //! These back the warm-start baselines (SparseGPT/Wanda), the native FISTA
-//! reference, and B = W·C in the pruning unit. The request-path hot loops
-//! (FISTA iterations, Gram accumulation, model forward) run in the AOT
-//! artifacts instead — see `perf_gram`/`perf_fista` benches for the
-//! native-vs-XLA comparison that justifies the split.
+//! solver, B = W·C in the pruning unit, and the native capture path. Every
+//! function here is deterministic with respect to the kernel thread count
+//! (see `tensor::par`), so callers can change `FP_THREADS` /
+//! `PruneOptions::threads` freely without perturbing results.
 
-use super::Tensor;
+use super::{kernels, Tensor};
 
-const BLOCK: usize = 64;
-
-/// C = A @ B  for A[m,k], B[k,n] (cache-blocked, k-innermost).
+/// C = A @ B for A[m,k], B[k,n] (cache-blocked, row-parallel).
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
-    let (m, k) = (a.rows(), a.cols());
-    let (k2, n) = (b.rows(), b.cols());
-    assert_eq!(k, k2, "matmul inner dims: {k} vs {k2}");
-    let mut out = Tensor::zeros(vec![m, n]);
-    let ad = a.data();
-    let bd = b.data();
-    let od = out.data_mut();
-    for i0 in (0..m).step_by(BLOCK) {
-        let i1 = (i0 + BLOCK).min(m);
-        for k0 in (0..k).step_by(BLOCK) {
-            let k1 = (k0 + BLOCK).min(k);
-            for i in i0..i1 {
-                let arow = &ad[i * k..(i + 1) * k];
-                let orow = &mut od[i * n..(i + 1) * n];
-                for kk in k0..k1 {
-                    let av = arow[kk];
-                    if av == 0.0 {
-                        continue; // sparse weights: skip zero rows cheaply
-                    }
-                    let brow = &bd[kk * n..(kk + 1) * n];
-                    for j in 0..n {
-                        orow[j] += av * brow[j];
-                    }
-                }
-            }
-        }
-    }
-    out
+    kernels::matmul(a, b)
 }
 
-/// C = A @ B^T for A[m,k], B[n,k] — rows dot rows (contiguous, fast).
+/// C = A @ Bᵀ for A[m,k], B[n,k] — rows dot rows (contiguous, fast).
 pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
-    let (m, k) = (a.rows(), a.cols());
-    let (n, k2) = (b.rows(), b.cols());
-    assert_eq!(k, k2, "matmul_nt inner dims: {k} vs {k2}");
-    let mut out = Tensor::zeros(vec![m, n]);
-    let ad = a.data();
-    let bd = b.data();
-    let od = out.data_mut();
-    for i in 0..m {
-        let arow = &ad[i * k..(i + 1) * k];
-        for j in 0..n {
-            let brow = &bd[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for kk in 0..k {
-                acc += arow[kk] * brow[kk];
-            }
-            od[i * n + j] = acc;
-        }
-    }
-    out
+    kernels::matmul_nt(a, b)
 }
 
-/// B = A^T (2-D transpose).
+/// B = Aᵀ (2-D transpose).
 pub fn transpose(a: &Tensor) -> Tensor {
-    let (m, n) = (a.rows(), a.cols());
-    let mut out = Tensor::zeros(vec![n, m]);
-    let ad = a.data();
-    let od = out.data_mut();
-    for i0 in (0..m).step_by(BLOCK) {
-        for j0 in (0..n).step_by(BLOCK) {
-            for i in i0..(i0 + BLOCK).min(m) {
-                for j in j0..(j0 + BLOCK).min(n) {
-                    od[j * m + i] = ad[i * n + j];
-                }
-            }
-        }
-    }
-    out
+    kernels::transpose(a)
 }
 
 /// y = A @ x for A[m,n], x[n].
 pub fn matvec(a: &Tensor, x: &[f32]) -> Vec<f32> {
-    let (m, n) = (a.rows(), a.cols());
-    assert_eq!(n, x.len());
-    let ad = a.data();
-    (0..m)
-        .map(|i| {
-            let row = &ad[i * n..(i + 1) * n];
-            row.iter().zip(x).map(|(&a, &b)| a * b).sum()
-        })
-        .collect()
+    kernels::matvec(a, x)
 }
 
 /// out = a − b (elementwise).
 pub fn sub(a: &Tensor, b: &Tensor) -> Tensor {
-    assert_eq!(a.shape(), b.shape());
-    Tensor::from_vec(
-        a.shape().to_vec(),
-        a.data().iter().zip(b.data()).map(|(&x, &y)| x - y).collect(),
-    )
+    kernels::zip_map(a, b, |x, y| x - y)
 }
 
 /// out = a + s·b (axpy).
 pub fn add_scaled(a: &Tensor, b: &Tensor, s: f32) -> Tensor {
-    assert_eq!(a.shape(), b.shape());
-    Tensor::from_vec(
-        a.shape().to_vec(),
-        a.data().iter().zip(b.data()).map(|(&x, &y)| x + s * y).collect(),
-    )
+    kernels::zip_map(a, b, move |x, y| x + s * y)
 }
 
 /// ⟨a, b⟩ (flattened dot product, f64 accumulation).
 pub fn dot(a: &Tensor, b: &Tensor) -> f64 {
-    assert_eq!(a.shape(), b.shape());
-    a.data().iter().zip(b.data()).map(|(&x, &y)| (x as f64) * (y as f64)).sum()
+    kernels::dot(a, b)
 }
 
 /// ‖a − b‖_F.
 pub fn frob_dist(a: &Tensor, b: &Tensor) -> f64 {
-    assert_eq!(a.shape(), b.shape());
-    a.data()
-        .iter()
-        .zip(b.data())
-        .map(|(&x, &y)| {
-            let d = (x - y) as f64;
-            d * d
-        })
-        .sum::<f64>()
-        .sqrt()
+    kernels::sq_dist(a, b).sqrt()
 }
 
 /// tr(W A Wᵀ) − 2⟨W, B⟩: the Gram form of ‖WX* − W₀X‖² − ‖W₀X‖².
 pub fn quad_obj(a: &Tensor, b: &Tensor, w: &Tensor) -> f64 {
-    let wa = matmul(w, a);
-    dot(&wa, w) - 2.0 * dot(w, b)
+    kernels::quad_obj(a, b, w)
 }
 
 #[cfg(test)]

@@ -1,0 +1,229 @@
+//! The shared worker abstraction behind every native kernel: deterministic
+//! row-block parallelism over scoped threads.
+//!
+//! Design rules that every kernel in this crate follows:
+//!
+//! 1. **Work is split by output rows.** Each worker owns a contiguous,
+//!    disjoint row range of the output buffer, so no synchronization is
+//!    needed beyond the scope join.
+//! 2. **Results are independent of the thread count.** Per-row arithmetic
+//!    never depends on which worker computes the row, and reductions are
+//!    materialized as per-row (or fixed-size-chunk) partials that are then
+//!    summed in a fixed order on the calling thread. A run with 1 thread
+//!    and a run with 16 threads produce bitwise-identical tensors — this
+//!    is what makes the scheduler's worker-count-invariance tests possible
+//!    and keeps every experiment reproducible.
+//! 3. **No nested fan-out.** When a higher layer (the prune scheduler's
+//!    layer workers, or the intra-layer op overlap) already runs inside a
+//!    worker, inner kernels execute inline on the current thread. The
+//!    thread-local guard below enforces this automatically.
+//!
+//! The thread count is process-global: 0 (the default) means "use
+//! `std::thread::available_parallelism`", 1 forces the deterministic
+//! single-thread fallback (which never spawns), and any other value caps
+//! the fan-out. It is configured from `PruneOptions::threads`,
+//! `FistaCfg::threads`, or the `FP_THREADS` environment variable (read by
+//! the bench `Lab`).
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static THREADS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static IN_WORKER: Cell<bool> = Cell::new(false);
+}
+
+/// Set the process-global kernel thread count (0 = auto).
+pub fn set_threads(n: usize) {
+    THREADS.store(n, Ordering::Relaxed);
+}
+
+/// The configured thread count (0 = auto).
+pub fn configured_threads() -> usize {
+    THREADS.load(Ordering::Relaxed)
+}
+
+/// The thread count kernels will actually fan out to right now: 1 inside
+/// a worker (no nested parallelism), the configured count otherwise, with
+/// 0 resolved against the machine's available parallelism.
+pub fn effective_threads() -> usize {
+    if in_worker() {
+        return 1;
+    }
+    match THREADS.load(Ordering::Relaxed) {
+        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        n => n,
+    }
+}
+
+/// True when the current thread is already a kernel/scheduler worker.
+pub fn in_worker() -> bool {
+    IN_WORKER.with(|c| c.get())
+}
+
+/// Run `f` with the nested-parallelism guard set: any kernel `f` calls
+/// executes inline instead of fanning out again.
+pub fn enter_worker<R>(f: impl FnOnce() -> R) -> R {
+    IN_WORKER.with(|c| c.set(true));
+    let out = f();
+    IN_WORKER.with(|c| c.set(false));
+    out
+}
+
+/// How many chunks to split `rows` into, given at least `min_rows` of work
+/// per chunk. Returns 1 (run inline) for small problems or when
+/// parallelism is disabled/nested.
+pub fn plan(rows: usize, min_rows: usize) -> usize {
+    if rows == 0 {
+        return 1;
+    }
+    let t = effective_threads();
+    if t <= 1 {
+        return 1;
+    }
+    t.min(rows.div_ceil(min_rows.max(1))).max(1)
+}
+
+/// Split `out` (a buffer of `rows` rows × `row_stride` elements) into
+/// contiguous row blocks and run `f(row_start, row_end, block)` on each,
+/// in parallel when worthwhile. `f` must compute rows purely from their
+/// global index so results are identical for any split.
+pub fn for_each_row_block<T: Send>(
+    out: &mut [T],
+    rows: usize,
+    row_stride: usize,
+    min_rows: usize,
+    f: impl Fn(usize, usize, &mut [T]) + Sync,
+) {
+    debug_assert_eq!(out.len(), rows * row_stride, "buffer/row geometry mismatch");
+    let nt = plan(rows, min_rows);
+    if nt <= 1 {
+        f(0, rows, out);
+        return;
+    }
+    let per = rows.div_ceil(nt);
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut rest = out;
+        let mut r0 = 0usize;
+        while r0 < rows {
+            let r1 = (r0 + per).min(rows);
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut((r1 - r0) * row_stride);
+            rest = tail;
+            s.spawn(move || enter_worker(|| f(r0, r1, head)));
+            r0 = r1;
+        }
+    });
+}
+
+/// Deterministic parallel reduction: computes `f(row)` for every row into
+/// a per-row partial and sums the partials in row order. The sum is
+/// independent of the thread count by construction.
+pub fn sum_rows(rows: usize, min_rows: usize, f: impl Fn(usize) -> f64 + Sync) -> f64 {
+    if rows == 0 {
+        return 0.0;
+    }
+    let mut partials = vec![0f64; rows];
+    for_each_row_block(&mut partials, rows, 1, min_rows, |r0, _r1, out| {
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = f(r0 + i);
+        }
+    });
+    partials.iter().sum()
+}
+
+/// Elements per virtual row when reducing over a flat buffer; fixed so the
+/// partial grouping (and therefore the result) never depends on the
+/// thread count.
+pub const FLAT_CHUNK: usize = 8192;
+
+/// Deterministic parallel reduction over a flat range `0..len`:
+/// `f(start, end)` must return the partial for that element span.
+pub fn sum_flat(len: usize, f: impl Fn(usize, usize) -> f64 + Sync) -> f64 {
+    let rows = len.div_ceil(FLAT_CHUNK);
+    sum_rows(rows, 4, |r| {
+        let start = r * FLAT_CHUNK;
+        f(start, (start + FLAT_CHUNK).min(len))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The thread count is process-global and these tests mutate it, so they
+    // serialize among themselves (other tests are thread-count-agnostic by
+    // the determinism rule above).
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    fn locked() -> std::sync::MutexGuard<'static, ()> {
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn plan_respects_limits() {
+        let _g = locked();
+        set_threads(4);
+        assert_eq!(plan(0, 8), 1);
+        assert_eq!(plan(3, 8), 1); // too little work
+        assert!(plan(1024, 8) <= 4);
+        set_threads(1);
+        assert_eq!(plan(1024, 8), 1);
+        set_threads(0);
+    }
+
+    #[test]
+    fn row_blocks_cover_every_row_once() {
+        let _g = locked();
+        set_threads(3);
+        let rows = 17;
+        let mut out = vec![0u32; rows * 2];
+        for_each_row_block(&mut out, rows, 2, 1, |r0, r1, block| {
+            for (i, pair) in block.chunks_mut(2).enumerate() {
+                pair[0] = (r0 + i) as u32;
+                pair[1] = (r1 - r0) as u32;
+            }
+        });
+        for r in 0..rows {
+            assert_eq!(out[2 * r], r as u32, "row {r} written by wrong block");
+            assert!(out[2 * r + 1] > 0);
+        }
+        set_threads(0);
+    }
+
+    #[test]
+    fn reductions_are_thread_count_invariant() {
+        let _g = locked();
+        let f = |r: usize| ((r * 2654435761) % 1000) as f64 * 1e-3;
+        set_threads(1);
+        let one = sum_rows(1000, 1, f);
+        set_threads(7);
+        let many = sum_rows(1000, 1, f);
+        set_threads(0);
+        assert_eq!(one.to_bits(), many.to_bits(), "partial sums must be order-stable");
+    }
+
+    #[test]
+    fn nested_calls_run_inline() {
+        let _g = locked();
+        set_threads(8);
+        enter_worker(|| {
+            assert!(in_worker());
+            assert_eq!(effective_threads(), 1);
+            assert_eq!(plan(10_000, 1), 1);
+        });
+        assert!(!in_worker());
+        set_threads(0);
+    }
+
+    #[test]
+    fn sum_flat_covers_entire_range() {
+        let _g = locked();
+        set_threads(4);
+        let len = 3 * FLAT_CHUNK + 11;
+        let total = sum_flat(len, |a, b| (b - a) as f64);
+        set_threads(0);
+        assert_eq!(total as usize, len);
+    }
+}

@@ -6,6 +6,34 @@
 
 use crate::util::Pcg64;
 
+/// Load the default artifact manifest, or `None` (with a note on stderr)
+/// when `artifacts/manifest.json` is absent. Artifact-dependent tests use
+/// this to skip gracefully on a clean checkout, where only the native
+/// kernel path is available.
+pub fn try_manifest() -> Option<crate::runtime::Manifest> {
+    match crate::runtime::Manifest::load_default() {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("skipping artifact-dependent test: {e:#}");
+            None
+        }
+    }
+}
+
+/// Create a PJRT session over the default artifacts, or `None` (with a
+/// note on stderr) when the artifacts or the `xla-pjrt` backend are
+/// unavailable.
+pub fn try_session() -> Option<crate::runtime::Session> {
+    let m = try_manifest()?;
+    match crate::runtime::Session::new(std::sync::Arc::new(m)) {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("skipping XLA-dependent test: {e:#}");
+            None
+        }
+    }
+}
+
 /// Size-parameterized random input generator.
 pub struct Gen<'a> {
     pub rng: &'a mut Pcg64,

@@ -1,0 +1,171 @@
+//! Kernel-layer parity: the multithreaded blocked kernels must produce
+//! results within 1e-5 relative Frobenius error of the single-threaded
+//! configuration across odd / non-block-aligned shapes — and, for the
+//! pure per-row kernels, bitwise-identical results (the determinism
+//! guarantee documented in tensor::par). Also pins the fused FISTA loop
+//! against an unfused five-step reference built from `ops` primitives.
+
+use fistapruner::pruner::fista::{fista_solve, soft_shrink};
+use fistapruner::tensor::{kernels, ops, par, Tensor};
+use fistapruner::util::Pcg64;
+
+// The kernel thread count is process-global; serialize the tests that
+// toggle it. Every kernel is thread-count-invariant by design, so other
+// concurrently running tests are unaffected.
+static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn locked() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn randt(rng: &mut Pcg64, shape: Vec<usize>) -> Tensor {
+    let len = shape.iter().product();
+    Tensor::from_vec(shape, rng.normal_vec(len, 1.0))
+}
+
+/// Run `f` single-threaded and with 4 threads; return both results.
+fn both<T>(mut f: impl FnMut() -> T) -> (T, T) {
+    par::set_threads(1);
+    let single = f();
+    par::set_threads(4);
+    let multi = f();
+    par::set_threads(0);
+    (single, multi)
+}
+
+fn assert_close(a: &Tensor, b: &Tensor, what: &str) {
+    let rel = ops::frob_dist(a, b) / b.frob_norm().max(1.0);
+    assert!(rel < 1e-5, "{what}: multithreaded drifted, rel {rel:.3e}");
+}
+
+const ODD_SHAPES: &[(usize, usize, usize)] =
+    &[(1, 1, 1), (3, 129, 7), (65, 33, 17), (127, 64, 5), (64, 64, 64), (200, 3, 190)];
+
+#[test]
+fn matmul_family_is_thread_count_invariant() {
+    let _g = locked();
+    let mut rng = Pcg64::seeded(7);
+    for &(m, k, n) in ODD_SHAPES {
+        let a = randt(&mut rng, vec![m, k]);
+        let b = randt(&mut rng, vec![k, n]);
+        let bt = randt(&mut rng, vec![n, k]);
+        let (s1, s4) = both(|| ops::matmul(&a, &b));
+        assert_eq!(s1, s4, "matmul {m}x{k}x{n} must be bitwise thread-invariant");
+        assert_close(&s4, &s1, "matmul");
+        let (t1, t4) = both(|| ops::matmul_nt(&a, &bt));
+        assert_eq!(t1, t4, "matmul_nt {m}x{k}x{n}");
+        let (x1, x4) = both(|| ops::transpose(&a));
+        assert_eq!(x1, x4, "transpose {m}x{k}");
+    }
+}
+
+#[test]
+fn gram3_is_thread_count_invariant_and_matches_products() {
+    let _g = locked();
+    let mut rng = Pcg64::seeded(8);
+    for (n, p) in [(5, 13), (33, 100), (65, 257), (128, 384)] {
+        let xd = randt(&mut rng, vec![n, p]);
+        let xs = randt(&mut rng, vec![n, p]);
+        let (g1, g4) = both(|| kernels::gram3(&xd, &xs));
+        assert_eq!(g1.0, g4.0, "gram3 A {n}x{p}");
+        assert_eq!(g1.1, g4.1, "gram3 C {n}x{p}");
+        assert_eq!(g1.2, g4.2, "gram3 D {n}x{p}");
+        assert_close(&g4.0, &ops::matmul_nt(&xs, &xs), "gram3 A vs matmul_nt");
+        assert_close(&g4.1, &ops::matmul_nt(&xd, &xs), "gram3 C vs matmul_nt");
+        assert_close(&g4.2, &ops::matmul_nt(&xd, &xd), "gram3 D vs matmul_nt");
+    }
+}
+
+#[test]
+fn reductions_are_thread_count_invariant() {
+    let _g = locked();
+    let mut rng = Pcg64::seeded(9);
+    let a = randt(&mut rng, vec![65, 257]);
+    let b = randt(&mut rng, vec![65, 257]);
+    let g = {
+        let x = randt(&mut rng, vec![257, 300]);
+        ops::matmul_nt(&x, &x)
+    };
+    let (d1, d4) = both(|| ops::dot(&a, &b));
+    assert_eq!(d1.to_bits(), d4.to_bits(), "dot");
+    let (f1, f4) = both(|| ops::frob_dist(&a, &b));
+    assert_eq!(f1.to_bits(), f4.to_bits(), "frob_dist");
+    let (q1, q4) = both(|| kernels::quad_form(&a, &g));
+    assert_eq!(q1.to_bits(), q4.to_bits(), "quad_form");
+    let (o1, o4) = both(|| ops::quad_obj(&g, &b, &a));
+    assert_eq!(o1.to_bits(), o4.to_bits(), "quad_obj");
+}
+
+fn fista_fixture(seed: u64, m: usize, n: usize, p: usize) -> (Tensor, Tensor, Tensor, f64) {
+    let mut rng = Pcg64::seeded(seed);
+    let w = randt(&mut rng, vec![m, n]);
+    let x = randt(&mut rng, vec![n, p]);
+    let a = ops::matmul_nt(&x, &x);
+    let b = ops::matmul(&w, &a);
+    let l = fistapruner::linalg::power_iteration(&a, 64, 1.02);
+    (a, b, w, l)
+}
+
+#[test]
+fn fista_solve_is_thread_count_invariant() {
+    let _g = locked();
+    for (seed, m, n) in [(11u64, 65, 33), (12, 7, 129), (13, 64, 64)] {
+        let (a, b, _w, l) = fista_fixture(seed, m, n, 150);
+        let w0 = Tensor::zeros(vec![m, n]);
+        let (r1, r4) = both(|| fista_solve(&a, &b, &w0, 0.05, l, 20, 1e-9));
+        assert_eq!(r1.1, r4.1, "iteration counts must agree across thread counts");
+        assert_eq!(r1.0, r4.0, "fista {m}x{n} solution must be bitwise thread-invariant");
+    }
+}
+
+/// The unfused five-step original (one allocation per step), kept here as
+/// the reference the fused production loop is measured against.
+fn fista_solve_unfused(
+    a: &Tensor,
+    b: &Tensor,
+    w0: &Tensor,
+    lam: f64,
+    l_max: f64,
+    iters: usize,
+    tol: f64,
+) -> (Tensor, usize) {
+    let inv_l = (1.0 / l_max) as f32;
+    let thresh = (lam / l_max) as f32;
+    let mut w_k = w0.clone();
+    let mut w23 = w0.clone();
+    let mut t = 1.0f64;
+    let mut k = 0;
+    while k < iters {
+        let t_next = 0.5 * (1.0 + (1.0 + 4.0 * t * t).sqrt());
+        let coef = ((t - 1.0) / t_next) as f32;
+        let grad = ops::sub(&ops::matmul(&w_k, a), b);
+        let w13 = ops::add_scaled(&w_k, &grad, -inv_l);
+        w23 = soft_shrink(&w13, thresh);
+        let w_next = Tensor::from_vec(
+            w23.shape().to_vec(),
+            w23.data().iter().zip(w_k.data()).map(|(&p, &c)| p + coef * (p - c)).collect(),
+        );
+        let diff = ops::frob_dist(&w_next, &w_k);
+        w_k = w_next;
+        t = t_next;
+        k += 1;
+        if diff < tol {
+            break;
+        }
+    }
+    (w23, k)
+}
+
+#[test]
+fn fused_fista_matches_unfused_reference() {
+    let _g = locked();
+    for (seed, m, n, lam) in [(21u64, 16, 32, 0.0), (22, 65, 33, 0.1), (23, 12, 24, 1.0)] {
+        let (a, b, _w, l) = fista_fixture(seed, m, n, 120);
+        let w0 = Tensor::zeros(vec![m, n]);
+        let (fused, k_f) = fista_solve(&a, &b, &w0, lam, l, 20, 0.0);
+        let (naive, k_n) = fista_solve_unfused(&a, &b, &w0, lam, l, 20, 0.0);
+        assert_eq!(k_f, k_n);
+        let rel = ops::frob_dist(&fused, &naive) / naive.frob_norm().max(1.0);
+        assert!(rel < 1e-4, "fused vs unfused {m}x{n} λ={lam}: rel {rel:.3e}");
+    }
+}

@@ -9,16 +9,18 @@ use fistapruner::model::ops::pruned_ops;
 use fistapruner::pruner::rounding::satisfies_sparsity;
 use fistapruner::pruner::scheduler::Method;
 
-fn tiny_lab() -> Lab {
+fn tiny_lab() -> Option<Lab> {
     std::env::set_var("FP_TRAIN_STEPS", "60");
     std::env::set_var("FP_CALIB", "16");
     std::env::set_var("FP_EVAL_WINDOWS", "24");
-    Lab::new().unwrap()
+    // Training needs the train artifacts; without them these end-to-end
+    // tests skip (the native pipeline is covered in scheduler_parity.rs).
+    Lab::try_with_artifacts()
 }
 
 #[test]
 fn full_pipeline_all_methods() {
-    let mut lab = tiny_lab();
+    let Some(mut lab) = tiny_lab() else { return };
     let (model, corpus) = ("topt-s1", "ptb-syn");
     let dense = lab.trained(model, corpus).unwrap();
     let calib = lab.calib(corpus, 16, 0).unwrap();
@@ -67,7 +69,7 @@ fn full_pipeline_all_methods() {
 
 #[test]
 fn deterministic_given_seed() {
-    let mut lab = tiny_lab();
+    let Some(mut lab) = tiny_lab() else { return };
     let (model, corpus) = ("topt-s1", "ptb-syn");
     let dense = lab.trained(model, corpus).unwrap();
     let calib = lab.calib(corpus, 8, 3).unwrap();
@@ -81,20 +83,13 @@ fn deterministic_given_seed() {
 
 #[test]
 fn zeroshot_trained_beats_untrained() {
-    let mut lab = tiny_lab();
+    let Some(mut lab) = tiny_lab() else { return };
     let (model, corpus) = ("topt-s1", "ptb-syn");
     let trained = lab.trained(model, corpus).unwrap();
     let spec = lab.spec(model).unwrap().clone();
     let untrained = fistapruner::model::init::init_params(&spec, 99);
-    let c = fistapruner::data::Corpus::generate(lab.presets.corpus(corpus).unwrap());
-    let (_, zs_trained) = fistapruner::eval::zeroshot::run_all_tasks(
-        &lab.session, &lab.presets, &spec, &trained, &c, 32, 1,
-    )
-    .unwrap();
-    let (_, zs_untrained) = fistapruner::eval::zeroshot::run_all_tasks(
-        &lab.session, &lab.presets, &spec, &untrained, &c, 32, 1,
-    )
-    .unwrap();
+    let (_, zs_trained) = lab.zeroshot(model, &trained, corpus, 32, 1).unwrap();
+    let (_, zs_untrained) = lab.zeroshot(model, &untrained, corpus, 32, 1).unwrap();
     assert!(
         zs_trained > zs_untrained + 0.05,
         "trained {zs_trained:.3} vs untrained {zs_untrained:.3}"

@@ -1,0 +1,50 @@
+//! Serving throughput: full-recompute `eval::generate` vs KV-cached
+//! incremental decode vs CSR decode on pruned weights, with continuous
+//! batching and a greedy-parity check. CSV + BENCH_serve.json land in
+//! artifacts/bench_out/.
+//!
+//!     cargo bench --bench serve_decode
+//!     FP_BENCH_FAST=1 cargo bench --bench serve_decode   # CI smoke
+
+use fistapruner::bench_support::{fast_mode, Lab};
+use fistapruner::config::Sparsity;
+use fistapruner::metrics::csv::CsvWriter;
+use fistapruner::serve::{run_serve_bench, ServeBenchConfig};
+
+fn main() -> anyhow::Result<()> {
+    let mut lab = Lab::new()?;
+    let model = if fast_mode() { "topt-s1" } else { "topt-s3" };
+    let corpus = "c4-syn";
+    let params = lab.trained_or_init(model, corpus)?;
+    let spec = lab.spec(model)?.clone();
+    let cfg = ServeBenchConfig {
+        tokens: if fast_mode() { 16 } else { 32 },
+        batch: 4,
+        requests: if fast_mode() { 4 } else { 8 },
+        sparsity: Sparsity::Unstructured(0.5),
+    };
+    let report = run_serve_bench(&spec, &params, &cfg)?;
+    report.print();
+
+    let out_dir = lab.bench_out();
+    let mut csv = CsvWriter::create(
+        &out_dir.join("serve_decode.csv"),
+        &["path", "requests", "tokens", "tokens_per_s", "p50_ms", "p99_ms"],
+    )?;
+    for p in &report.paths {
+        csv.write_row(&[
+            p.label.clone(),
+            p.requests.to_string(),
+            p.total_tokens.to_string(),
+            format!("{:.2}", p.tokens_per_s),
+            format!("{:.3}", p.p50_ms),
+            format!("{:.3}", p.p99_ms),
+        ])?;
+    }
+    let json_path = out_dir.join("BENCH_serve.json");
+    std::fs::create_dir_all(&out_dir)?;
+    std::fs::write(&json_path, report.to_json().to_string_compact() + "\n")?;
+    println!("wrote {}", json_path.display());
+    anyhow::ensure!(report.parity_ok, "greedy parity check failed");
+    Ok(())
+}

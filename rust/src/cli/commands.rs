@@ -200,6 +200,145 @@ pub fn generate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `serve`: continuous-batching JSONL server over stdin, or a
+/// self-driving synthetic load with `--synthetic N`.
+pub fn serve(args: &Args) -> Result<()> {
+    let mut lab = Lab::new()?;
+    let model = args.req("model")?.to_string();
+    let corpus = args.req("corpus")?.to_string();
+    let params = load_or_train(&mut lab, args, &model, &corpus)?;
+    let spec = lab.presets.model(&model)?.clone();
+    let serve_model = match args.get_or("weights", "dense") {
+        "dense" => crate::serve::ServeModel::dense(&spec, &params),
+        "csr" => {
+            let m = crate::serve::ServeModel::sparse(&spec, &params)?;
+            match m.density() {
+                Some(d) if d > 0.999 => crate::log_warn!(
+                    "serving CSR over dense weights (density {d:.3}); pass a pruned --ckpt"
+                ),
+                Some(d) => eprintln!("serving CSR weights, density {d:.3}"),
+                None => {}
+            }
+            m
+        }
+        other => anyhow::bail!("unknown --weights '{other}' (dense|csr)"),
+    };
+    let cfg = crate::serve::EngineConfig {
+        max_batch: args.usize_or("batch", 4)?,
+        queue_cap: args.usize_or("queue", 64)?,
+        transcript: args.get("transcript").map(std::path::PathBuf::from),
+    };
+    let mut engine = crate::serve::Engine::new(&serve_model, &cfg)?;
+    eprintln!(
+        "serving {model} — {} slots, queue {}, KV pool {:.1} KiB",
+        cfg.max_batch,
+        cfg.queue_cap,
+        engine.kv_bytes() as f64 / 1024.0
+    );
+
+    // Stream responses as requests retire. Intake interleaves with engine
+    // steps: whenever the queue is at capacity the engine decodes until
+    // room opens up, so a long request stream is served continuously
+    // (join-on-arrival) instead of rejected while slots sit idle.
+    fn emit(engine: &mut crate::serve::Engine<'_>) {
+        for r in engine.take_responses() {
+            println!("{}", r.to_json_line());
+        }
+    }
+    let take =
+        |engine: &mut crate::serve::Engine<'_>, req: crate::serve::ServeRequest| -> Result<()> {
+            while engine.queued() >= cfg.queue_cap {
+                engine.step()?;
+                emit(engine);
+            }
+            engine.submit_or_reject(req);
+            emit(engine);
+            Ok(())
+        };
+
+    let mut next_id = 0usize;
+    if let Some(n) = args.get("synthetic") {
+        let n: usize = n.parse()?;
+        let tokens = args.usize_or("tokens", 32)?;
+        let temp = args.f64_or("temp", 0.0)?;
+        for i in 0..n {
+            let req = crate::serve::ServeRequest {
+                id: format!("syn-{i}"),
+                prompt: format!("req {i}: the "),
+                max_tokens: tokens,
+                temperature: temp,
+                seed: i as u64,
+                stop: None,
+            };
+            take(&mut engine, req)?;
+        }
+    } else {
+        use std::io::BufRead;
+        for line in std::io::stdin().lock().lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            match crate::serve::ServeRequest::from_json_line(&line) {
+                Ok(mut req) => {
+                    if req.id.is_empty() {
+                        req.id = format!("req-{next_id}");
+                        next_id += 1;
+                    }
+                    take(&mut engine, req)?;
+                }
+                Err(e) => eprintln!("bad request line: {e:#}"),
+            }
+        }
+    }
+    while !engine.is_idle() {
+        engine.step()?;
+        emit(&mut engine);
+    }
+    emit(&mut engine);
+    let s = engine.stats;
+    eprintln!(
+        "served {} requests: {} decode steps, {} tokens ({} prefill)",
+        s.retired, s.steps, s.decoded_tokens, s.prefill_tokens
+    );
+    Ok(())
+}
+
+/// `serve-bench`: tokens/s + latency for recompute vs KV-cached vs CSR
+/// decode, with greedy parity checked against `eval::generate`.
+pub fn serve_bench(args: &Args) -> Result<()> {
+    let mut lab = Lab::new()?;
+    let smoke = args.has("smoke");
+    let fast = smoke || crate::bench_support::fast_mode();
+    let default_model = if fast { "topt-s1" } else { "topt-s3" };
+    let model = args.get_or("model", default_model).to_string();
+    let corpus = args.get_or("corpus", "c4-syn").to_string();
+    let params = load_or_train(&mut lab, args, &model, &corpus)?;
+    let spec = lab.presets.model(&model)?.clone();
+    let cfg = crate::serve::ServeBenchConfig {
+        tokens: args.usize_or("tokens", if smoke { 16 } else { 32 })?,
+        batch: args.usize_or("batch", 4)?,
+        requests: args.usize_or("requests", if smoke { 4 } else { 8 })?,
+        sparsity: Sparsity::parse(args.get_or("sparsity", "0.5"))?,
+    };
+    let report = crate::serve::run_serve_bench(&spec, &params, &cfg)?;
+    report.print();
+    if let Some(path) = args.get("json") {
+        let path = std::path::Path::new(path);
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, report.to_json().to_string_compact() + "\n")?;
+        println!("wrote {}", path.display());
+    }
+    if !report.parity_ok {
+        anyhow::bail!("serve-bench parity check failed: served output != eval::generate");
+    }
+    Ok(())
+}
+
 pub fn pipeline(args: &Args) -> Result<()> {
     let mut lab = Lab::new()?;
     let model = args.req("model")?.to_string();

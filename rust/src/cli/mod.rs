@@ -6,6 +6,8 @@
 //!   prune     --model --corpus [--method --sparsity --mode --workers ...]
 //!   eval      --model --corpus [--ckpt]
 //!   zeroshot  --model --corpus [--ckpt --items]
+//!   serve     --model --corpus [--batch --queue --weights dense|csr ...]
+//!   serve-bench [--model --smoke --json path ...]
 //!   pipeline  --model --corpus [--sparsity ...]   (train→prune×methods→eval)
 
 pub mod args;
@@ -26,6 +28,8 @@ pub fn main() -> Result<()> {
         "eval" => commands::eval(&args),
         "zeroshot" => commands::zeroshot(&args),
         "generate" => commands::generate(&args),
+        "serve" => commands::serve(&args),
+        "serve-bench" => commands::serve_bench(&args),
         "pipeline" => commands::pipeline(&args),
         "help" | "--help" | "-h" => {
             print!("{}", USAGE);
@@ -55,6 +59,13 @@ COMMANDS:
             [--ckpt path.fpt --items N]
   generate  --model M --corpus C    sample text from a (pruned) model
             [--ckpt path.fpt --prompt STR --tokens N --temp T]
+  serve     --model M --corpus C    continuous-batching JSONL server
+            [--ckpt path.fpt --weights dense|csr --batch N --queue N]
+            [--transcript out.jsonl --synthetic N --tokens N --temp T]
+            (reads one JSON request per stdin line unless --synthetic)
+  serve-bench                       tokens/s + p50/p99: full recompute vs
+            [--model M --smoke]     KV-cached vs CSR decode, greedy parity
+            [--tokens N --batch N --requests N --sparsity S --json path]
   pipeline  --model M --corpus C    end-to-end: train → prune (all
             [--sparsity S]          methods) → perplexity table
 

@@ -42,9 +42,20 @@ impl Sparsity {
         }
     }
 
+    /// Human label, chosen so `Sparsity::parse(&self.label())` round-trips
+    /// (CLI flags, bench CSVs and serve-bench JSON all echo labels back
+    /// into `parse`): "2:4" ⇄ `Semi(2, 4)`, "50%"/"62.5%" ⇄
+    /// `Unstructured(0.5/0.625)`.
     pub fn label(&self) -> String {
         match self {
-            Sparsity::Unstructured(s) => format!("{:.0}%", s * 100.0),
+            Sparsity::Unstructured(s) => {
+                let pct = s * 100.0;
+                if (pct - pct.round()).abs() < 1e-9 {
+                    format!("{pct:.0}%")
+                } else {
+                    format!("{pct}%")
+                }
+            }
             Sparsity::Semi(n, m) => format!("{n}:{m}"),
         }
     }
@@ -179,5 +190,33 @@ mod tests {
     fn labels() {
         assert_eq!(Sparsity::Semi(2, 4).label(), "2:4");
         assert_eq!(Sparsity::Unstructured(0.5).label(), "50%");
+        assert_eq!(Sparsity::Unstructured(0.625).label(), "62.5%");
+    }
+
+    #[test]
+    fn parse_label_round_trip() {
+        let cases = [
+            Sparsity::Semi(2, 4),
+            Sparsity::Semi(1, 2),
+            Sparsity::Semi(4, 8),
+            Sparsity::Unstructured(0.5),
+            Sparsity::Unstructured(0.625),
+            Sparsity::Unstructured(0.9),
+        ];
+        for s in cases {
+            let back = Sparsity::parse(&s.label()).unwrap();
+            assert_eq!(back, s, "label {:?} did not round-trip", s.label());
+        }
+        // and labels are stable through a second cycle
+        for s in cases {
+            assert_eq!(Sparsity::parse(&s.label()).unwrap().label(), s.label());
+        }
+    }
+
+    #[test]
+    fn parse_accepts_whitespace_in_nm() {
+        assert_eq!(Sparsity::parse("2 : 4").unwrap(), Sparsity::Semi(2, 4));
+        assert!(Sparsity::parse("0:4").is_err());
+        assert!(Sparsity::parse(":4").is_err());
     }
 }

@@ -33,14 +33,22 @@ pub fn generate(spec: &ModelSpec, params: &ModelParams, prompt: &str, opts: &Gen
         let ctx_start = tokens.len().saturating_sub(spec.seq);
         let lg = logits(spec, params, &tokens[ctx_start..]);
         let row = lg.row(lg.rows() - 1);
-        let next = if opts.temperature <= 0.0 {
-            row.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0
-        } else {
-            sample_softmax(row, opts.temperature, &mut rng)
-        };
+        let next = next_token(row, opts.temperature, &mut rng);
         tokens.push(next as i32);
     }
     tokenizer::decode(&tokens[start..])
+}
+
+/// Pick the next token from a logits row: argmax at temperature ≤ 0, else
+/// seeded softmax sampling. Shared by [`generate`] and the serving engine
+/// so a served request with the same seed draws the identical stream
+/// (`Pcg64::new(seed, 61)`, one draw per sampled token).
+pub fn next_token(row: &[f32], temperature: f64, rng: &mut Pcg64) -> usize {
+    if temperature <= 0.0 {
+        row.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0
+    } else {
+        sample_softmax(row, temperature, rng)
+    }
 }
 
 fn sample_softmax(row: &[f32], temperature: f64, rng: &mut Pcg64) -> usize {

@@ -48,6 +48,10 @@
 //! (`pruner::lambda` over `pruner::fista`) → exact-sparsity rounding
 //! (`pruner::rounding`) → report (`pruner::report`) → evaluation
 //! (`eval::perplexity`, `eval::zeroshot`) and sparse inference (`sparse`).
+//!
+//! The pruned artifact is then the hot path of the serving stack
+//! (`serve`): KV-cached incremental decode with continuous batching over
+//! dense or CSR weights, behind the `serve` / `serve-bench` CLI commands.
 
 pub mod util;
 pub mod ser;
@@ -59,6 +63,7 @@ pub mod model;
 pub mod runtime;
 pub mod pruner;
 pub mod sparse;
+pub mod serve;
 pub mod baselines;
 pub mod train;
 pub mod eval;

@@ -5,5 +5,5 @@ pub mod csv;
 pub mod stats;
 pub mod table;
 
-pub use stats::{mean, mean_std};
+pub use stats::{mean, mean_std, percentile};
 pub use table::TableBuilder;

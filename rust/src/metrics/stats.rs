@@ -17,6 +17,24 @@ pub fn mean_std(xs: &[f64]) -> (f64, f64) {
     (m, var.sqrt())
 }
 
+/// Linearly-interpolated percentile of unsorted samples, `p` in [0, 100]
+/// (p50/p99 serving-latency reporting). NaN for an empty slice.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).expect("percentile over NaN-free samples"));
+    let rank = (p.clamp(0.0, 100.0) / 100.0) * (s.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (rank - lo as f64) * (s[hi] - s[lo])
+    }
+}
+
 /// Geometric mean (perplexities combine multiplicatively).
 pub fn geomean(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
@@ -43,5 +61,16 @@ mod tests {
     #[test]
     fn geomean_known() {
         assert!((geomean(&[1.0, 100.0]) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_known_values() {
+        let xs = [4.0, 1.0, 3.0, 2.0]; // sorted: 1 2 3 4
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+        assert!((percentile(&xs, 25.0) - 1.75).abs() < 1e-12);
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+        assert!(percentile(&[], 50.0).is_nan());
     }
 }

@@ -164,7 +164,7 @@ pub fn logits_final_norm(spec: &ModelSpec, params: &ModelParams, x: &Tensor) -> 
     }
 }
 
-fn layernorm(x: &Tensor, g: &Tensor, b: &Tensor) -> Tensor {
+pub(crate) fn layernorm(x: &Tensor, g: &Tensor, b: &Tensor) -> Tensor {
     let (s, d) = (x.rows(), x.cols());
     let mut out = Tensor::zeros(vec![s, d]);
     for t in 0..s {
@@ -179,7 +179,7 @@ fn layernorm(x: &Tensor, g: &Tensor, b: &Tensor) -> Tensor {
     out
 }
 
-fn rmsnorm(x: &Tensor, g: &Tensor) -> Tensor {
+pub(crate) fn rmsnorm(x: &Tensor, g: &Tensor) -> Tensor {
     let (s, d) = (x.rows(), x.cols());
     let mut out = Tensor::zeros(vec![s, d]);
     for t in 0..s {
@@ -193,7 +193,7 @@ fn rmsnorm(x: &Tensor, g: &Tensor) -> Tensor {
     out
 }
 
-fn add_bias(x: &mut Tensor, b: &Tensor) {
+pub(crate) fn add_bias(x: &mut Tensor, b: &Tensor) {
     let n = x.cols();
     for row in x.data_mut().chunks_mut(n) {
         for (v, &bv) in row.iter_mut().zip(b.data()) {
@@ -202,34 +202,41 @@ fn add_bias(x: &mut Tensor, b: &Tensor) {
     }
 }
 
-fn gelu(x: f32) -> f32 {
+pub(crate) fn gelu(x: f32) -> f32 {
     // tanh approximation — matches jax.nn.gelu's default
     0.5 * x * (1.0 + ((2.0 / std::f32::consts::PI).sqrt() * (x + 0.044715 * x * x * x)).tanh())
 }
 
-fn silu(x: f32) -> f32 {
+pub(crate) fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
 }
 
 /// RoPE over [s, d] with `heads` heads (first/second half pairing, matching
 /// python/compile/model.py::_rope).
 fn rope_inplace(x: &mut Tensor, heads: usize) {
-    let (s, d) = (x.rows(), x.cols());
+    let s = x.rows();
+    for t in 0..s {
+        rope_row(x.row_mut(t), heads, t);
+    }
+}
+
+/// RoPE over one projection row at absolute position `pos` — the
+/// incremental-decode form of [`rope_inplace`], arithmetic identical so a
+/// cached K row is bitwise equal to the same row of a full-sequence pass.
+pub fn rope_row(row: &mut [f32], heads: usize, pos: usize) {
+    let d = row.len();
     let hd = d / heads;
     let half = hd / 2;
-    for t in 0..s {
-        let row = x.row_mut(t);
-        for h in 0..heads {
-            let base = h * hd;
-            for i in 0..half {
-                let freq = (10000f32).powf(-(i as f32) / half as f32);
-                let ang = t as f32 * freq;
-                let (sin, cos) = ang.sin_cos();
-                let a = row[base + i];
-                let b = row[base + half + i];
-                row[base + i] = a * cos - b * sin;
-                row[base + half + i] = a * sin + b * cos;
-            }
+    for h in 0..heads {
+        let base = h * hd;
+        for i in 0..half {
+            let freq = (10000f32).powf(-(i as f32) / half as f32);
+            let ang = pos as f32 * freq;
+            let (sin, cos) = ang.sin_cos();
+            let a = row[base + i];
+            let b = row[base + half + i];
+            row[base + i] = a * cos - b * sin;
+            row[base + half + i] = a * sin + b * cos;
         }
     }
 }
@@ -269,6 +276,272 @@ fn causal_attention(q: &Tensor, k: &Tensor, v: &Tensor, heads: usize) -> Tensor 
         }
     }
     out
+}
+
+// ---------------------------------------------------------------------
+// Incremental (KV-cached) decode
+// ---------------------------------------------------------------------
+
+/// One decoder layer's key/value cache for incremental decode: up to
+/// `capacity` rows of projected K and V, appended one position at a time.
+///
+/// The serving stack (`serve::kv`) stacks one of these per layer per
+/// request slot. Rows are stored exactly as the full-sequence forward
+/// computes them (bias and RoPE already applied), so attention against the
+/// cache reproduces `causal_attention` bitwise — see [`attend_one`].
+#[derive(Clone, Debug)]
+pub struct KvLayer {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    d: usize,
+    len: usize,
+}
+
+impl KvLayer {
+    /// Empty cache with room for `capacity` positions of width `d`.
+    pub fn new(capacity: usize, d: usize) -> KvLayer {
+        KvLayer { k: vec![0.0; capacity * d], v: vec![0.0; capacity * d], d, len: 0 }
+    }
+
+    /// Cached positions so far.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Maximum positions this cache can hold.
+    pub fn capacity(&self) -> usize {
+        self.k.len() / self.d.max(1)
+    }
+
+    /// Forget all cached positions (the buffers are reused).
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    /// Heap bytes held by the K and V buffers.
+    pub fn bytes(&self) -> usize {
+        4 * (self.k.len() + self.v.len())
+    }
+
+    /// Append the K/V projection rows of the next position.
+    pub fn push(&mut self, k_row: &[f32], v_row: &[f32]) {
+        assert_eq!(k_row.len(), self.d, "K row width");
+        assert_eq!(v_row.len(), self.d, "V row width");
+        assert!(self.len < self.capacity(), "KV cache overflow (capacity {})", self.capacity());
+        let at = self.len * self.d;
+        self.k[at..at + self.d].copy_from_slice(k_row);
+        self.v[at..at + self.d].copy_from_slice(v_row);
+        self.len += 1;
+    }
+
+    /// Cached K row for position `t`.
+    pub fn k_row(&self, t: usize) -> &[f32] {
+        debug_assert!(t < self.len);
+        &self.k[t * self.d..(t + 1) * self.d]
+    }
+
+    /// Cached V row for position `t`.
+    pub fn v_row(&self, t: usize) -> &[f32] {
+        debug_assert!(t < self.len);
+        &self.v[t * self.d..(t + 1) * self.d]
+    }
+}
+
+/// Single-query causal attention of `q` (the latest position) against a
+/// KV cache that already contains that position's K/V rows.
+///
+/// Arithmetic is a line-for-line mirror of the last row of
+/// [`causal_attention`] — same score order, same softmax, same
+/// value-accumulation order — so the result is bitwise identical to the
+/// full-recompute path.
+pub fn attend_one(q: &[f32], kv: &KvLayer, heads: usize) -> Vec<f32> {
+    attend_prefix(q, kv, heads, kv.len())
+}
+
+/// [`attend_one`] over only the first `len` cached positions — the
+/// batched-prefill form: prompt row t attends over rows 0..len (len =
+/// t + 1) of a cache that already holds the whole prompt.
+pub fn attend_prefix(q: &[f32], kv: &KvLayer, heads: usize, len: usize) -> Vec<f32> {
+    let d = q.len();
+    let hd = d / heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    assert!(len > 0, "attention needs at least the query's own K/V row");
+    assert!(len <= kv.len(), "prefix {len} beyond cached {}", kv.len());
+    let mut out = vec![0f32; d];
+    let mut scores = vec![0f32; len];
+    for h in 0..heads {
+        let base = h * hd;
+        let qrow = &q[base..base + hd];
+        let mut max = f32::NEG_INFINITY;
+        for (u, sc) in scores.iter_mut().enumerate() {
+            let krow = &kv.k_row(u)[base..base + hd];
+            let dot: f32 = qrow.iter().zip(krow).map(|(&a, &b)| a * b).sum();
+            *sc = dot * scale;
+            max = max.max(*sc);
+        }
+        let mut z = 0f32;
+        for sc in scores.iter_mut() {
+            *sc = (*sc - max).exp();
+            z += *sc;
+        }
+        let orow = &mut out[base..base + hd];
+        for (u, &w) in scores.iter().enumerate() {
+            let vrow = &kv.v_row(u)[base..base + hd];
+            let wn = w / z;
+            for (o, &vv) in orow.iter_mut().zip(vrow) {
+                *o += wn * vv;
+            }
+        }
+    }
+    out
+}
+
+/// One decoder layer advanced by a single token. `x` is the [1, d] hidden
+/// row at absolute position `pos`; the layer's K/V rows are appended to
+/// `kv`. Same `linop` contract as [`layer_forward`].
+pub fn layer_decode<F>(
+    spec: &ModelSpec,
+    params: &BTreeMap<&str, &Tensor>,
+    kv: &mut KvLayer,
+    x: &Tensor,
+    pos: usize,
+    mut linop: F,
+) -> Tensor
+where
+    F: FnMut(&str, &Tensor, &Tensor) -> Tensor,
+{
+    let p = |n: &str| *params.get(n).unwrap_or_else(|| panic!("layer param '{n}'"));
+    let h = match spec.family {
+        FamilyKind::Topt => layernorm(x, p("ln1_g"), p("ln1_b")),
+        FamilyKind::Tllama => rmsnorm(x, p("rms1_g")),
+    };
+    let mut q = linop("wq", p("wq"), &h);
+    let mut k = linop("wk", p("wk"), &h);
+    let v = {
+        let mut v = linop("wv", p("wv"), &h);
+        if spec.bias {
+            add_bias(&mut v, p("bv"));
+        }
+        v
+    };
+    if spec.bias {
+        add_bias(&mut q, p("bq"));
+        add_bias(&mut k, p("bk"));
+    }
+    if spec.family == FamilyKind::Tllama {
+        rope_row(q.row_mut(0), spec.heads, pos);
+        rope_row(k.row_mut(0), spec.heads, pos);
+    }
+    kv.push(k.row(0), v.row(0));
+    let ctx = Tensor::from_vec(vec![1, spec.d], attend_one(q.row(0), kv, spec.heads));
+    let mut attn_out = linop("wo", p("wo"), &ctx);
+    if spec.bias {
+        add_bias(&mut attn_out, p("bo"));
+    }
+    let mut x1 = x.clone();
+    for (a, b) in x1.data_mut().iter_mut().zip(attn_out.data()) {
+        *a += b;
+    }
+
+    let h2 = match spec.family {
+        FamilyKind::Topt => layernorm(&x1, p("ln2_g"), p("ln2_b")),
+        FamilyKind::Tllama => rmsnorm(&x1, p("rms2_g")),
+    };
+    let mlp_out = match spec.family {
+        FamilyKind::Topt => {
+            let mut f1 = linop("w1", p("w1"), &h2);
+            if spec.bias {
+                add_bias(&mut f1, p("b1"));
+            }
+            for v in f1.data_mut() {
+                *v = gelu(*v);
+            }
+            let mut f2 = linop("w2", p("w2"), &f1);
+            if spec.bias {
+                add_bias(&mut f2, p("b2"));
+            }
+            f2
+        }
+        FamilyKind::Tllama => {
+            let gate = linop("wg", p("wg"), &h2);
+            let up = linop("wu", p("wu"), &h2);
+            let mut hidden = Tensor::zeros(vec![1, spec.ffn]);
+            for ((h, &g), &u) in hidden.data_mut().iter_mut().zip(gate.data()).zip(up.data()) {
+                *h = silu(g) * u;
+            }
+            linop("wd", p("wd"), &hidden)
+        }
+    };
+    for (a, b) in x1.data_mut().iter_mut().zip(mlp_out.data()) {
+        *a += b;
+    }
+    x1
+}
+
+/// Feed one token through the model with per-layer KV caches and return
+/// its logits row — the O(1)-layer-forwards incremental decode step.
+///
+/// With a cache warmed on `tokens[..pos]`, the result equals row `pos` of
+/// `logits(spec, params, &tokens[..pos + 1])` bitwise: every per-row
+/// operation (norms, projections, RoPE, attention against cached rows)
+/// performs the identical arithmetic in the identical order.
+pub fn decode_next(
+    spec: &ModelSpec,
+    params: &ModelParams,
+    cache: &mut [KvLayer],
+    token: i32,
+    pos: usize,
+) -> Vec<f32> {
+    decode_next_with(spec, params, cache, token, pos, |_layer, _name, w, input| {
+        crate::tensor::ops::matmul_nt(input, w)
+    })
+}
+
+/// [`decode_next`] with a pluggable per-layer linear operator, so the
+/// sparse serving path can substitute CSR kernels.
+pub fn decode_next_with<F>(
+    spec: &ModelSpec,
+    params: &ModelParams,
+    cache: &mut [KvLayer],
+    token: i32,
+    pos: usize,
+    mut linop: F,
+) -> Vec<f32>
+where
+    F: FnMut(usize, &str, &Tensor, &Tensor) -> Tensor,
+{
+    assert_eq!(cache.len(), spec.layers, "one KvLayer per decoder layer");
+    assert!(pos < spec.seq, "position {pos} outside model context {}", spec.seq);
+    assert_eq!(cache[0].len(), pos, "cache must hold exactly the {pos}-token prefix");
+    let d = spec.d;
+    let embed = params.req("embed").expect("embed");
+    let mut x = Tensor::zeros(vec![1, d]);
+    x.row_mut(0).copy_from_slice(&embed.data()[token as usize * d..(token as usize + 1) * d]);
+    if spec.family == FamilyKind::Topt {
+        let pos_t = params.req("pos").expect("pos");
+        for (xi, &pv) in x.row_mut(0).iter_mut().zip(pos_t.row(pos)) {
+            *xi += pv;
+        }
+    }
+    let specs = super::spec::layer_param_specs(spec, None);
+    for li in 0..spec.layers {
+        let map: BTreeMap<&str, &Tensor> = specs
+            .iter()
+            .map(|sp| {
+                let t = params.req(&format!("l{li}.{}", sp.name)).expect("layer param");
+                (sp.name.as_str(), t)
+            })
+            .collect();
+        x = layer_decode(spec, &map, &mut cache[li], &x, pos, |name, w, input| {
+            linop(li, name, w, input)
+        });
+    }
+    let x = logits_final_norm(spec, params, &x);
+    crate::tensor::ops::matmul_nt(&x, embed).into_vec()
 }
 
 /// Per-token NLL of `tokens[1..]` given the prefix (native mirror of the
@@ -328,6 +601,47 @@ mod tests {
             assert_eq!(la.row(t), lb.row(t), "position {t} changed");
         }
         assert_ne!(la.row(11), lb.row(11));
+    }
+
+    #[test]
+    fn incremental_decode_matches_full_forward_bitwise() {
+        let presets = Presets::load(&repo_root().unwrap()).unwrap();
+        for m in ["topt-s1", "tllama-s1"] {
+            let spec = presets.model(m).unwrap();
+            let params = init_params(spec, 11);
+            let tokens: Vec<i32> = (0..20).map(|i| (i * 7 + 3) % 96).collect();
+            let mut cache: Vec<KvLayer> =
+                (0..spec.layers).map(|_| KvLayer::new(spec.seq, spec.d)).collect();
+            for (pos, &tok) in tokens.iter().enumerate() {
+                let inc = decode_next(spec, &params, &mut cache, tok, pos);
+                let full = logits(spec, &params, &tokens[..pos + 1]);
+                let want = full.row(pos);
+                assert_eq!(inc.len(), want.len());
+                for (j, (&a, &b)) in inc.iter().zip(want).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{m} pos {pos} logit {j}: {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kv_layer_push_and_overflow() {
+        let mut kv = KvLayer::new(3, 4);
+        assert!(kv.is_empty());
+        assert_eq!(kv.capacity(), 3);
+        kv.push(&[1., 2., 3., 4.], &[5., 6., 7., 8.]);
+        assert_eq!(kv.len(), 1);
+        assert_eq!(kv.k_row(0), &[1., 2., 3., 4.]);
+        assert_eq!(kv.v_row(0), &[5., 6., 7., 8.]);
+        kv.clear();
+        assert!(kv.is_empty());
+        for _ in 0..3 {
+            kv.push(&[0.; 4], &[0.; 4]);
+        }
+        let full = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            kv.push(&[0.; 4], &[0.; 4]);
+        }));
+        assert!(full.is_err(), "push past capacity must panic");
     }
 
     #[test]

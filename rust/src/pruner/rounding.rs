@@ -6,7 +6,8 @@
 //! * n:m semi-structured: in every group of m consecutive entries of a
 //!   row, keep the n of largest |·| (paper §2 / eq. 8).
 
-use crate::config::Sparsity;
+use crate::config::{ModelSpec, Sparsity};
+use crate::model::params::ModelParams;
 use crate::tensor::Tensor;
 
 /// Return a copy of `w` rounded to the exact sparsity pattern.
@@ -14,6 +15,24 @@ pub fn round_to_sparsity(w: &Tensor, sp: Sparsity) -> Tensor {
     let mut out = w.clone();
     round_in_place(&mut out, sp);
     out
+}
+
+/// Round every pruned operator of a model to `sp` — the quick way to
+/// build a sparse fixture (serve-bench, parity tests) without a full
+/// prune run; weight *quality* is magnitude-only, the *pattern* is exact.
+pub fn round_model_to_sparsity(
+    spec: &ModelSpec,
+    params: &ModelParams,
+    sp: Sparsity,
+) -> anyhow::Result<ModelParams> {
+    let mut out = params.clone();
+    for li in 0..spec.layers {
+        for op in crate::model::ops::pruned_ops(spec) {
+            let name = format!("l{li}.{}", op.name);
+            out.set(&name, round_to_sparsity(out.req(&name)?, sp))?;
+        }
+    }
+    Ok(out)
 }
 
 /// In-place variant.

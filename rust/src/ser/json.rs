@@ -383,7 +383,8 @@ mod tests {
 
     #[test]
     fn parses_presets_file() {
-        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/presets.json");
+        // presets.json lives at the repository root, not the crate root
+        let path = crate::config::repo_root().unwrap().join("configs/presets.json");
         let v = Json::parse_file(&path).unwrap();
         assert!(v.get("families").is_some());
         assert_eq!(v.get("vocab_size").unwrap().as_usize(), Some(96));

@@ -1,0 +1,443 @@
+//! Batched incremental decode: one model forward step that advances every
+//! active request slot by a single token.
+//!
+//! The math is the per-row mirror of `model::forward::layer_forward` —
+//! norms and projections act on a [b, d] stack where row i belongs to slot
+//! i, RoPE is applied per row at the slot's own position, and attention
+//! runs per slot against its KV cache via `model::forward::attend_one`.
+//! Because every operation in the substrate is row-independent with a
+//! fixed per-row accumulation order, a slot's logits are bitwise identical
+//! whether it decodes alone, inside any batch composition, or through the
+//! full-recompute `eval::generate` path — the determinism contract the
+//! serving tests pin down.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::config::{FamilyKind, ModelSpec};
+use crate::model::forward;
+use crate::model::ops::pruned_ops;
+use crate::model::params::ModelParams;
+use crate::sparse::CsrMatrix;
+use crate::tensor::{kernels, par, Tensor};
+
+use super::kv::KvBlock;
+
+/// Weights prepared for serving: per-layer parameter maps resolved once
+/// (no per-token name formatting), plus optional CSR compression of the
+/// pruned operators for the sparse decode path.
+pub struct ServeModel<'p> {
+    pub spec: ModelSpec,
+    params: &'p ModelParams,
+    /// Per-layer bare-name → tensor map in capture order.
+    layers: Vec<BTreeMap<String, &'p Tensor>>,
+    /// Per-layer bare-name → CSR operator (sparse serving only).
+    csr: Option<Vec<BTreeMap<String, CsrMatrix>>>,
+}
+
+fn resolve_layers<'p>(
+    spec: &ModelSpec,
+    params: &'p ModelParams,
+) -> Vec<BTreeMap<String, &'p Tensor>> {
+    let specs = crate::model::spec::layer_param_specs(spec, None);
+    (0..spec.layers)
+        .map(|li| {
+            specs
+                .iter()
+                .map(|sp| {
+                    let t = params
+                        .req(&format!("l{li}.{}", sp.name))
+                        .expect("layer param must exist");
+                    (sp.name.clone(), t)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+impl<'p> ServeModel<'p> {
+    /// Serve the dense weights as-is.
+    pub fn dense(spec: &ModelSpec, params: &'p ModelParams) -> ServeModel<'p> {
+        ServeModel {
+            spec: spec.clone(),
+            params,
+            layers: resolve_layers(spec, params),
+            csr: None,
+        }
+    }
+
+    /// Compress every pruned operator to CSR and serve those through the
+    /// sparse decode kernels (norms/embeddings/attention stay dense).
+    pub fn sparse(spec: &ModelSpec, params: &'p ModelParams) -> Result<ServeModel<'p>> {
+        let mut csr = Vec::with_capacity(spec.layers);
+        for li in 0..spec.layers {
+            let mut ops = BTreeMap::new();
+            for op in pruned_ops(spec) {
+                let w = params.req(&format!("l{li}.{}", op.name))?;
+                ops.insert(op.name.to_string(), CsrMatrix::from_dense(w)?);
+            }
+            csr.push(ops);
+        }
+        Ok(ServeModel {
+            spec: spec.clone(),
+            params,
+            layers: resolve_layers(spec, params),
+            csr: Some(csr),
+        })
+    }
+
+    pub fn params(&self) -> &'p ModelParams {
+        self.params
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        self.csr.is_some()
+    }
+
+    /// nnz fraction across the CSR operators (`None` for dense serving).
+    pub fn density(&self) -> Option<f64> {
+        let csr = self.csr.as_ref()?;
+        let (nnz, total) = csr
+            .iter()
+            .flat_map(|l| l.values())
+            .map(|c| (c.nnz(), c.rows * c.cols))
+            .fold((0usize, 0usize), |(a, b), (x, y)| (a + x, b + y));
+        Some(nnz as f64 / total.max(1) as f64)
+    }
+
+    fn lp(&self, layer: usize, name: &str) -> &Tensor {
+        self.layers[layer]
+            .get(name)
+            .unwrap_or_else(|| panic!("layer {layer} param '{name}'"))
+    }
+
+    /// X @ Wᵀ through CSR when this operator is compressed, the skinny
+    /// dense kernel otherwise (parallel over weight rows — the batch
+    /// dimension is 1–8 at decode time). Same contract as the `linop` in
+    /// `model::forward`: the dense kernel is bitwise equal to `matmul_nt`,
+    /// CSR value-equal (zeros skipped; the sum is unchanged).
+    fn linop(&self, layer: usize, name: &str, x: &Tensor) -> Tensor {
+        if let Some(csr) = &self.csr {
+            if let Some(c) = csr[layer].get(name) {
+                return c.matmul_t_par(x);
+            }
+        }
+        kernels::matmul_nt_skinny(x, self.lp(layer, name))
+    }
+}
+
+/// One decode step for a batch of slots: token `tokens[i]` is fed to KV
+/// block `blocks[i]` at position `positions[i]`. Returns [b, vocab]
+/// logits, row i for slot i.
+pub fn decode_step(
+    model: &ServeModel<'_>,
+    blocks: &mut [&mut KvBlock],
+    tokens: &[i32],
+    positions: &[usize],
+) -> Tensor {
+    let x = decode_hidden(model, blocks, tokens, positions);
+    let x = forward::logits_final_norm(&model.spec, model.params, &x);
+    let embed = model.params.req("embed").expect("embed");
+    // tied unembedding through the skinny kernel (bitwise = matmul_nt)
+    kernels::matmul_nt_skinny(&x, embed)
+}
+
+/// Prefill a whole prompt into a *fresh* KV block in one position-batched
+/// pass: all prompt rows go through each layer together ([p, d] stacks
+/// for norms/projections/MLP, row t attending over cached rows 0..=t), so
+/// admission costs one layer-stack walk instead of `p` serial single-row
+/// forwards that would stall co-batched requests. No logits are computed
+/// — the final norm and the [d × vocab] unembedding matmul would be
+/// discarded. Every per-row operation is the identical arithmetic of
+/// [`decode_step`] fed one token at a time, so the resulting cache is
+/// bitwise the same.
+pub fn prefill_prompt(model: &ServeModel<'_>, block: &mut KvBlock, tokens: &[i32]) {
+    assert!(block.is_empty(), "prefill needs a fresh KV block");
+    let p = tokens.len();
+    if p == 0 {
+        return;
+    }
+    let spec = &model.spec;
+    let d = spec.d;
+    let embed = model.params.req("embed").expect("embed");
+    let mut x = Tensor::zeros(vec![p, d]);
+    for (t, &tok) in tokens.iter().enumerate() {
+        x.row_mut(t)
+            .copy_from_slice(&embed.data()[tok as usize * d..(tok as usize + 1) * d]);
+    }
+    if spec.family == FamilyKind::Topt {
+        let pos_t = model.params.req("pos").expect("pos");
+        for t in 0..p {
+            for (xi, &pv) in x.row_mut(t).iter_mut().zip(pos_t.row(t)) {
+                *xi += pv;
+            }
+        }
+    }
+    for li in 0..spec.layers {
+        x = prefill_layer(model, li, block, &x);
+    }
+}
+
+/// One decoder layer over the whole prompt stack [p, d]: like
+/// [`layer_step`] but all rows belong to one slot at positions 0..p, and
+/// attention row t reads only the first t + 1 freshly-cached positions.
+fn prefill_layer(model: &ServeModel<'_>, li: usize, block: &mut KvBlock, x: &Tensor) -> Tensor {
+    let spec = &model.spec;
+    let p = x.rows();
+    let d = spec.d;
+    let h = match spec.family {
+        FamilyKind::Topt => forward::layernorm(x, model.lp(li, "ln1_g"), model.lp(li, "ln1_b")),
+        FamilyKind::Tllama => forward::rmsnorm(x, model.lp(li, "rms1_g")),
+    };
+    let mut q = model.linop(li, "wq", &h);
+    let mut k = model.linop(li, "wk", &h);
+    let v = {
+        let mut v = model.linop(li, "wv", &h);
+        if spec.bias {
+            forward::add_bias(&mut v, model.lp(li, "bv"));
+        }
+        v
+    };
+    if spec.bias {
+        forward::add_bias(&mut q, model.lp(li, "bq"));
+        forward::add_bias(&mut k, model.lp(li, "bk"));
+    }
+    if spec.family == FamilyKind::Tllama {
+        for t in 0..p {
+            forward::rope_row(q.row_mut(t), spec.heads, t);
+            forward::rope_row(k.row_mut(t), spec.heads, t);
+        }
+    }
+    for t in 0..p {
+        block.layer_mut(li).push(k.row(t), v.row(t));
+    }
+    let mut ctx = Tensor::zeros(vec![p, d]);
+    {
+        let kv = block.layer(li);
+        let qd = q.data();
+        let heads = spec.heads;
+        par::for_each_row_block(ctx.data_mut(), p, d, 1, |r0, _r1, out| {
+            for (i, orow) in out.chunks_mut(d).enumerate() {
+                let t = r0 + i;
+                let row = forward::attend_prefix(&qd[t * d..(t + 1) * d], kv, heads, t + 1);
+                orow.copy_from_slice(&row);
+            }
+        });
+    }
+    let mut attn_out = model.linop(li, "wo", &ctx);
+    if spec.bias {
+        forward::add_bias(&mut attn_out, model.lp(li, "bo"));
+    }
+    let mut x1 = x.clone();
+    for (a, bv) in x1.data_mut().iter_mut().zip(attn_out.data()) {
+        *a += bv;
+    }
+    let h2 = match spec.family {
+        FamilyKind::Topt => forward::layernorm(&x1, model.lp(li, "ln2_g"), model.lp(li, "ln2_b")),
+        FamilyKind::Tllama => forward::rmsnorm(&x1, model.lp(li, "rms2_g")),
+    };
+    let mlp_out = mlp(model, li, p, &h2);
+    for (a, bv) in x1.data_mut().iter_mut().zip(mlp_out.data()) {
+        *a += bv;
+    }
+    x1
+}
+
+/// The shared layer-stack walk: embed rows → every decoder layer (caches
+/// appended) → hidden states [b, d].
+fn decode_hidden(
+    model: &ServeModel<'_>,
+    blocks: &mut [&mut KvBlock],
+    tokens: &[i32],
+    positions: &[usize],
+) -> Tensor {
+    let spec = &model.spec;
+    let b = tokens.len();
+    assert_eq!(blocks.len(), b, "one KV block per batched token");
+    assert_eq!(positions.len(), b, "one position per batched token");
+    let d = spec.d;
+    for (blk, &p) in blocks.iter().zip(positions) {
+        debug_assert_eq!(blk.len(), p, "KV cache length must equal the token's position");
+    }
+    let embed = model.params.req("embed").expect("embed");
+    let pos_t = match spec.family {
+        FamilyKind::Topt => Some(model.params.req("pos").expect("pos")),
+        FamilyKind::Tllama => None,
+    };
+    let mut x = Tensor::zeros(vec![b, d]);
+    for (i, &tok) in tokens.iter().enumerate() {
+        x.row_mut(i)
+            .copy_from_slice(&embed.data()[tok as usize * d..(tok as usize + 1) * d]);
+        if let Some(pos_t) = pos_t {
+            for (xi, &pv) in x.row_mut(i).iter_mut().zip(pos_t.row(positions[i])) {
+                *xi += pv;
+            }
+        }
+    }
+    for li in 0..spec.layers {
+        x = layer_step(model, li, blocks, positions, &x);
+    }
+    x
+}
+
+/// One decoder layer over the [b, d] slot stack.
+fn layer_step(
+    model: &ServeModel<'_>,
+    li: usize,
+    blocks: &mut [&mut KvBlock],
+    positions: &[usize],
+    x: &Tensor,
+) -> Tensor {
+    let spec = &model.spec;
+    let b = x.rows();
+    let d = spec.d;
+    let h = match spec.family {
+        FamilyKind::Topt => forward::layernorm(x, model.lp(li, "ln1_g"), model.lp(li, "ln1_b")),
+        FamilyKind::Tllama => forward::rmsnorm(x, model.lp(li, "rms1_g")),
+    };
+    let mut q = model.linop(li, "wq", &h);
+    let mut k = model.linop(li, "wk", &h);
+    let v = {
+        let mut v = model.linop(li, "wv", &h);
+        if spec.bias {
+            forward::add_bias(&mut v, model.lp(li, "bv"));
+        }
+        v
+    };
+    if spec.bias {
+        forward::add_bias(&mut q, model.lp(li, "bq"));
+        forward::add_bias(&mut k, model.lp(li, "bk"));
+    }
+    if spec.family == FamilyKind::Tllama {
+        for i in 0..b {
+            forward::rope_row(q.row_mut(i), spec.heads, positions[i]);
+            forward::rope_row(k.row_mut(i), spec.heads, positions[i]);
+        }
+    }
+    for i in 0..b {
+        blocks[i].layer_mut(li).push(k.row(i), v.row(i));
+    }
+    // Attention per slot against its own cache, fanned out across slots
+    // (row-block over the [b, d] context stack; each row only reads its
+    // slot's cache, so the split is free of synchronization).
+    let mut ctx = Tensor::zeros(vec![b, d]);
+    {
+        let kv_refs: Vec<&crate::model::forward::KvLayer> =
+            blocks.iter().map(|blk| blk.layer(li)).collect();
+        let qd = q.data();
+        let heads = spec.heads;
+        par::for_each_row_block(ctx.data_mut(), b, d, 1, |r0, _r1, block| {
+            for (i, orow) in block.chunks_mut(d).enumerate() {
+                let s = r0 + i;
+                let row = forward::attend_one(&qd[s * d..(s + 1) * d], kv_refs[s], heads);
+                orow.copy_from_slice(&row);
+            }
+        });
+    }
+    let mut attn_out = model.linop(li, "wo", &ctx);
+    if spec.bias {
+        forward::add_bias(&mut attn_out, model.lp(li, "bo"));
+    }
+    let mut x1 = x.clone();
+    for (a, bv) in x1.data_mut().iter_mut().zip(attn_out.data()) {
+        *a += bv;
+    }
+
+    let h2 = match spec.family {
+        FamilyKind::Topt => forward::layernorm(&x1, model.lp(li, "ln2_g"), model.lp(li, "ln2_b")),
+        FamilyKind::Tllama => forward::rmsnorm(&x1, model.lp(li, "rms2_g")),
+    };
+    let mlp_out = mlp(model, li, b, &h2);
+    for (a, bv) in x1.data_mut().iter_mut().zip(mlp_out.data()) {
+        *a += bv;
+    }
+    x1
+}
+
+/// The family-specific MLP over a [rows, d] post-norm stack (shared by
+/// the decode and prefill layer walks).
+fn mlp(model: &ServeModel<'_>, li: usize, rows: usize, h2: &Tensor) -> Tensor {
+    let spec = &model.spec;
+    match spec.family {
+        FamilyKind::Topt => {
+            let mut f1 = model.linop(li, "w1", h2);
+            if spec.bias {
+                forward::add_bias(&mut f1, model.lp(li, "b1"));
+            }
+            for v in f1.data_mut() {
+                *v = forward::gelu(*v);
+            }
+            let mut f2 = model.linop(li, "w2", &f1);
+            if spec.bias {
+                forward::add_bias(&mut f2, model.lp(li, "b2"));
+            }
+            f2
+        }
+        FamilyKind::Tllama => {
+            let gate = model.linop(li, "wg", h2);
+            let up = model.linop(li, "wu", h2);
+            let mut hidden = Tensor::zeros(vec![rows, spec.ffn]);
+            for ((hv, &g), &u) in hidden.data_mut().iter_mut().zip(gate.data()).zip(up.data()) {
+                *hv = forward::silu(g) * u;
+            }
+            model.linop(li, "wd", &hidden)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{repo_root, Presets};
+    use crate::model::init::init_params;
+
+    #[test]
+    fn batched_step_matches_full_forward_rows() {
+        let presets = Presets::load(&repo_root().unwrap()).unwrap();
+        for m in ["topt-s1", "tllama-s1"] {
+            let spec = presets.model(m).unwrap().clone();
+            let params = init_params(&spec, 17);
+            let model = ServeModel::dense(&spec, &params);
+            // two sequences of different lengths decoding in one batch
+            let seqs: [Vec<i32>; 2] = [
+                (0..9).map(|i| (i * 5 + 1) % 96).collect(),
+                (0..5).map(|i| (i * 3 + 2) % 96).collect(),
+            ];
+            let mut a = KvBlock::new(&spec);
+            let mut c = KvBlock::new(&spec);
+            // warm both caches on all but the last token (batched prefill)
+            prefill_prompt(&model, &mut a, &seqs[0][..seqs[0].len() - 1]);
+            prefill_prompt(&model, &mut c, &seqs[1][..seqs[1].len() - 1]);
+            let mut blocks = [&mut a, &mut c];
+            let toks = [seqs[0][seqs[0].len() - 1], seqs[1][seqs[1].len() - 1]];
+            let pos = [seqs[0].len() - 1, seqs[1].len() - 1];
+            let lg = decode_step(&model, &mut blocks, &toks, &pos);
+            for (row, seq) in [(0usize, &seqs[0]), (1, &seqs[1])] {
+                let full = crate::model::forward::logits(&spec, &params, seq);
+                let want = full.row(seq.len() - 1);
+                for (j, (&got, &w)) in lg.row(row).iter().zip(want).enumerate() {
+                    assert_eq!(got.to_bits(), w.to_bits(), "{m} slot {row} logit {j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_model_reports_density() {
+        let presets = Presets::load(&repo_root().unwrap()).unwrap();
+        let spec = presets.model("topt-s1").unwrap().clone();
+        let dense = init_params(&spec, 19);
+        let params = crate::pruner::round_model_to_sparsity(
+            &spec,
+            &dense,
+            crate::config::Sparsity::Unstructured(0.5),
+        )
+        .unwrap();
+        let model = ServeModel::sparse(&spec, &params).unwrap();
+        assert!(model.is_sparse());
+        let density = model.density().unwrap();
+        assert!((density - 0.5).abs() < 0.02, "density {density}");
+        assert!(ServeModel::dense(&spec, &params).density().is_none());
+    }
+}

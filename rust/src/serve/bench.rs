@@ -1,0 +1,318 @@
+//! The serve-bench core: tokens/s and latency percentiles for the three
+//! decode paths — full-recompute `eval::generate`, KV-cached dense decode,
+//! and KV-cached CSR decode on pruned weights — plus a greedy-parity check
+//! that every served output equals its single-request `eval::generate`
+//! reference. Shared by the `serve-bench` CLI command and
+//! `benches/serve_decode.rs`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Result};
+
+use crate::config::{ModelSpec, Sparsity};
+use crate::eval::generate::{generate, GenOptions};
+use crate::metrics::stats::percentile;
+use crate::metrics::TableBuilder;
+use crate::model::params::ModelParams;
+use crate::pruner::round_model_to_sparsity;
+use crate::ser::json::Json;
+
+use super::batch::ServeModel;
+use super::engine::{Engine, EngineConfig};
+use super::request::ServeRequest;
+
+/// Bench sizing.
+pub struct ServeBenchConfig {
+    /// Decode budget per request.
+    pub tokens: usize,
+    /// Continuous-batch width for the batched paths.
+    pub batch: usize,
+    /// Synthetic requests for the batched paths.
+    pub requests: usize,
+    /// Pruning level for the CSR paths.
+    pub sparsity: Sparsity,
+}
+
+impl Default for ServeBenchConfig {
+    fn default() -> Self {
+        ServeBenchConfig {
+            tokens: 32,
+            batch: 4,
+            requests: 8,
+            sparsity: Sparsity::Unstructured(0.5),
+        }
+    }
+}
+
+/// One measured decode path.
+#[derive(Clone, Debug)]
+pub struct PathStats {
+    pub label: String,
+    pub requests: usize,
+    pub total_tokens: usize,
+    pub wall_s: f64,
+    pub tokens_per_s: f64,
+    /// Per-request submit-to-retire latency percentiles.
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+/// Full serve-bench result.
+#[derive(Clone, Debug)]
+pub struct ServeBenchReport {
+    pub model: String,
+    pub sparsity_label: String,
+    pub paths: Vec<PathStats>,
+    /// KV-cached dense (batch 1) vs full-recompute tokens/s.
+    pub kv_speedup: f64,
+    /// CSR vs dense KV-cached decode tokens/s at the same batch width.
+    pub sparse_speedup: f64,
+    /// Every served greedy output equalled its `eval::generate` reference.
+    pub parity_ok: bool,
+}
+
+impl ServeBenchReport {
+    /// Paper-style ASCII table.
+    pub fn print(&self) {
+        let mut t = TableBuilder::new(
+            &format!("serve-bench ({}, CSR @ {})", self.model, self.sparsity_label),
+            &["path", "reqs", "tokens", "tok/s", "p50 ms", "p99 ms"],
+        );
+        for p in &self.paths {
+            t.row(vec![
+                p.label.clone(),
+                p.requests.to_string(),
+                p.total_tokens.to_string(),
+                format!("{:.1}", p.tokens_per_s),
+                format!("{:.1}", p.p50_ms),
+                format!("{:.1}", p.p99_ms),
+            ]);
+        }
+        t.print();
+        println!(
+            "KV-cached vs full-recompute: {:.2}x   CSR vs dense decode: {:.2}x   greedy parity: {}",
+            self.kv_speedup,
+            self.sparse_speedup,
+            if self.parity_ok { "ok" } else { "MISMATCH" }
+        );
+    }
+
+    /// JSON object for BENCH_serve.json (the CI perf-trajectory record).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("model".to_string(), Json::Str(self.model.clone()));
+        m.insert("sparsity".to_string(), Json::Str(self.sparsity_label.clone()));
+        m.insert("kv_speedup".to_string(), Json::Num(round3(self.kv_speedup)));
+        m.insert("sparse_speedup".to_string(), Json::Num(round3(self.sparse_speedup)));
+        m.insert("parity_ok".to_string(), Json::Bool(self.parity_ok));
+        let mut paths = BTreeMap::new();
+        for p in &self.paths {
+            let mut pm = BTreeMap::new();
+            pm.insert("requests".to_string(), Json::Num(p.requests as f64));
+            pm.insert("total_tokens".to_string(), Json::Num(p.total_tokens as f64));
+            pm.insert("tokens_per_s".to_string(), Json::Num(round3(p.tokens_per_s)));
+            pm.insert("p50_ms".to_string(), Json::Num(round3(p.p50_ms)));
+            pm.insert("p99_ms".to_string(), Json::Num(round3(p.p99_ms)));
+            paths.insert(p.label.clone(), Json::Obj(pm));
+        }
+        m.insert("paths".to_string(), Json::Obj(paths));
+        Json::Obj(m)
+    }
+}
+
+fn round3(x: f64) -> f64 {
+    (x * 1e3).round() / 1e3
+}
+
+/// Deterministic synthetic prompts (distinct so batched outputs are
+/// checked against distinct references).
+fn synthetic_prompts(n: usize) -> Vec<String> {
+    (0..n).map(|i| format!("req {i}: the ")).collect()
+}
+
+fn requests_for(prompts: &[String], tokens: usize) -> Vec<ServeRequest> {
+    prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| ServeRequest {
+            id: format!("r{i}"),
+            prompt: p.clone(),
+            max_tokens: tokens,
+            temperature: 0.0,
+            seed: i as u64,
+            stop: None,
+        })
+        .collect()
+}
+
+/// Serve `requests` through a fresh engine; returns (stats, id → text).
+/// Admission is just-in-time (a request is submitted only when a slot is
+/// free), so `latency_ms` measures service time — comparable to the solo
+/// `eval::generate` reference — rather than artificial queue wait behind
+/// requests submitted upfront.
+fn run_engine(
+    model: &ServeModel<'_>,
+    batch: usize,
+    label: &str,
+    requests: &[ServeRequest],
+) -> Result<(PathStats, BTreeMap<String, String>)> {
+    let cfg = EngineConfig { max_batch: batch, queue_cap: requests.len().max(1), transcript: None };
+    let mut eng = Engine::new(model, &cfg)?;
+    let start = std::time::Instant::now();
+    let mut pending = requests.iter();
+    let mut next = pending.next();
+    let mut responses = Vec::new();
+    loop {
+        // top up: one queued request per free slot (admitted next step)
+        while eng.free_slots() > eng.queued() {
+            match next.take() {
+                Some(r) => {
+                    eng.submit(r.clone())?;
+                    next = pending.next();
+                }
+                None => break,
+            }
+        }
+        if next.is_none() && eng.is_idle() {
+            break;
+        }
+        eng.step()?;
+        responses.extend(eng.take_responses());
+    }
+    let wall_s = start.elapsed().as_secs_f64();
+    let latencies: Vec<f64> = responses.iter().map(|r| r.latency_ms).collect();
+    let total_tokens: usize = responses.iter().map(|r| r.completion_tokens).sum();
+    let texts = responses.into_iter().map(|r| (r.id, r.text)).collect();
+    Ok((
+        PathStats {
+            label: label.to_string(),
+            requests: requests.len(),
+            total_tokens,
+            wall_s,
+            tokens_per_s: total_tokens as f64 / wall_s.max(1e-12),
+            p50_ms: percentile(&latencies, 50.0),
+            p99_ms: percentile(&latencies, 99.0),
+        },
+        texts,
+    ))
+}
+
+/// Measure every path and assemble the report. `dense` should be the
+/// weights to serve; the CSR paths run on a copy pruned to
+/// `cfg.sparsity` via magnitude rounding (weight quality is irrelevant
+/// for throughput, identical outputs are still parity-checked).
+pub fn run_serve_bench(
+    spec: &ModelSpec,
+    dense: &ModelParams,
+    cfg: &ServeBenchConfig,
+) -> Result<ServeBenchReport> {
+    ensure!(cfg.tokens >= 1 && cfg.batch >= 1 && cfg.requests >= 1, "bench sizes must be >= 1");
+    let prompts = synthetic_prompts(cfg.requests);
+    let requests = requests_for(&prompts, cfg.tokens);
+    let mut parity_ok = true;
+
+    // references + full-recompute timing: eval::generate per request
+    let start = std::time::Instant::now();
+    let mut reference = BTreeMap::new();
+    let mut ref_lat = Vec::new();
+    for (r, p) in requests.iter().zip(&prompts) {
+        let t0 = std::time::Instant::now();
+        let text = generate(
+            spec,
+            dense,
+            p,
+            &GenOptions { max_tokens: r.max_tokens, temperature: 0.0, seed: r.seed },
+        );
+        ref_lat.push(t0.elapsed().as_secs_f64() * 1e3);
+        reference.insert(r.id.clone(), text);
+    }
+    let recompute_wall = start.elapsed().as_secs_f64();
+    let recompute_tokens = cfg.tokens * cfg.requests;
+    let recompute = PathStats {
+        label: "recompute (eval::generate)".to_string(),
+        requests: cfg.requests,
+        total_tokens: recompute_tokens,
+        wall_s: recompute_wall,
+        tokens_per_s: recompute_tokens as f64 / recompute_wall.max(1e-12),
+        p50_ms: percentile(&ref_lat, 50.0),
+        p99_ms: percentile(&ref_lat, 99.0),
+    };
+
+    // KV-cached dense, batch 1 and batch B (one weight resolution)
+    let dense_model = ServeModel::dense(spec, dense);
+    let (kv1, texts1) = run_engine(&dense_model, 1, "kv dense b=1", &requests)?;
+    let (kvb, textsb) =
+        run_engine(&dense_model, cfg.batch, &format!("kv dense b={}", cfg.batch), &requests)?;
+    for texts in [&texts1, &textsb] {
+        for (id, text) in texts {
+            parity_ok &= reference.get(id) == Some(text);
+        }
+    }
+
+    // CSR on pruned weights, batch 1 and batch B; parity vs the
+    // full-recompute generate over the same pruned weights
+    let pruned = round_model_to_sparsity(spec, dense, cfg.sparsity)?;
+    let mut pruned_ref = BTreeMap::new();
+    for (r, p) in requests.iter().zip(&prompts) {
+        let text = generate(
+            spec,
+            &pruned,
+            p,
+            &GenOptions { max_tokens: r.max_tokens, temperature: 0.0, seed: r.seed },
+        );
+        pruned_ref.insert(r.id.clone(), text);
+    }
+    let pruned_dense_model = ServeModel::dense(spec, &pruned);
+    let sparse_model = ServeModel::sparse(spec, &pruned)?;
+    let (kv_pruned1, _) = run_engine(&pruned_dense_model, 1, "kv pruned-dense b=1", &requests)?;
+    let (csr1, csr_texts1) = run_engine(&sparse_model, 1, "kv csr b=1", &requests)?;
+    let (csrb, csr_textsb) =
+        run_engine(&sparse_model, cfg.batch, &format!("kv csr b={}", cfg.batch), &requests)?;
+    for texts in [&csr_texts1, &csr_textsb] {
+        for (id, text) in texts {
+            parity_ok &= pruned_ref.get(id) == Some(text);
+        }
+    }
+
+    let kv_speedup = kv1.tokens_per_s / recompute.tokens_per_s.max(1e-12);
+    let sparse_speedup = csr1.tokens_per_s / kv_pruned1.tokens_per_s.max(1e-12);
+    Ok(ServeBenchReport {
+        model: spec.name(),
+        sparsity_label: cfg.sparsity.label(),
+        paths: vec![recompute, kv1, kvb, kv_pruned1, csr1, csrb],
+        kv_speedup,
+        sparse_speedup,
+        parity_ok,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{repo_root, Presets};
+    use crate::model::init::init_params;
+
+    #[test]
+    fn smoke_report_is_consistent() {
+        let presets = Presets::load(&repo_root().unwrap()).unwrap();
+        let spec = presets.model("topt-s1").unwrap().clone();
+        let params = init_params(&spec, 29);
+        let cfg = ServeBenchConfig {
+            tokens: 6,
+            batch: 2,
+            requests: 2,
+            sparsity: Sparsity::Unstructured(0.5),
+        };
+        let report = run_serve_bench(&spec, &params, &cfg).unwrap();
+        assert!(report.parity_ok, "served outputs diverged from eval::generate");
+        assert_eq!(report.paths.len(), 6);
+        for p in &report.paths {
+            assert_eq!(p.total_tokens, 12, "{}", p.label);
+            assert!(p.tokens_per_s > 0.0);
+        }
+        let j = report.to_json().to_string_compact();
+        let v = Json::parse(&j).unwrap();
+        assert_eq!(v.get("parity_ok").unwrap().as_bool(), Some(true));
+        assert!(v.get("paths").unwrap().get("kv dense b=1").is_some());
+    }
+}

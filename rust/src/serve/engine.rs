@@ -1,0 +1,508 @@
+//! The continuous-batching serving engine.
+//!
+//! State machine per request:
+//!
+//! ```text
+//!   submit ──(admission control)──▶ queued ──(free slot)──▶ prefill
+//!       ▲                              │                      │
+//!       └── rejected (error response)  └── aborted            ▼
+//!                                                          decoding ──▶ retired
+//!                                                     (length | stop | abort)
+//! ```
+//!
+//! Scheduling is *continuous*: every [`Engine::step`] advances all active
+//! slots by one token in a single batched forward (`batch::decode_step`),
+//! then retires finished slots and immediately admits queued requests into
+//! the freed slots — new arrivals join the batch mid-flight instead of
+//! waiting for a generation boundary (join-on-arrival / retire-on-EOS).
+//!
+//! Determinism contract: a request's token stream depends only on the
+//! model weights, its own prompt/seed/temperature, and the kernel
+//! determinism guarantees of `tensor::par` — never on batch composition,
+//! admission order, worker thread count, or other requests' lifecycles
+//! (including mid-stream aborts). `rust/tests/serve_parity.rs` and the
+//! abort case in `rust/tests/failure_injection.rs` pin this down against
+//! `eval::generate`.
+
+use std::collections::{BTreeSet, VecDeque};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::tokenizer;
+use crate::eval::generate::next_token;
+use crate::util::Pcg64;
+
+use super::batch::{decode_step, prefill_prompt, ServeModel};
+use super::kv::KvPool;
+use super::request::{FinishReason, ServeRequest, ServeResponse, TranscriptTee};
+
+/// Engine sizing and output knobs.
+pub struct EngineConfig {
+    /// Concurrent decode slots (the continuous-batch width).
+    pub max_batch: usize,
+    /// Waiting-line bound; submissions beyond it are rejected.
+    pub queue_cap: usize,
+    /// Tee every retired request to this JSONL file.
+    pub transcript: Option<std::path::PathBuf>,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { max_batch: 4, queue_cap: 64, transcript: None }
+    }
+}
+
+/// One in-flight request: its token tail, KV block, and sampling state.
+struct Slot {
+    req: ServeRequest,
+    /// Prompt + generated token ids.
+    tokens: Vec<i32>,
+    prompt_len: usize,
+    /// Tokens already fed to the model (== KV cache length). The pending
+    /// token `tokens[fed]` is fed next; its logits sample `tokens[fed+1]`.
+    fed: usize,
+    block: usize,
+    rng: Pcg64,
+    stop_id: Option<i32>,
+    submitted: Instant,
+}
+
+/// Aggregate engine counters (the serving metrics source).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    /// Batched decode steps executed.
+    pub steps: u64,
+    /// Tokens decoded across all requests (prefill excluded).
+    pub decoded_tokens: u64,
+    /// Prompt tokens prefilled across all requests.
+    pub prefill_tokens: u64,
+    /// Requests retired (any finish reason, rejections included).
+    pub retired: u64,
+}
+
+/// The continuous-batching engine over a borrowed [`ServeModel`] (the
+/// model is shared so several engines — e.g. serve-bench's batch-width
+/// sweeps — reuse one weight resolution / CSR compression).
+pub struct Engine<'m> {
+    model: &'m ServeModel<'m>,
+    cfg_queue_cap: usize,
+    pool: KvPool,
+    slots: Vec<Option<Slot>>,
+    queue: VecDeque<(ServeRequest, Instant)>,
+    aborts: BTreeSet<String>,
+    responses: Vec<ServeResponse>,
+    tee: Option<TranscriptTee>,
+    pub stats: EngineStats,
+}
+
+impl<'m> Engine<'m> {
+    pub fn new(model: &'m ServeModel<'m>, cfg: &EngineConfig) -> Result<Engine<'m>> {
+        if cfg.max_batch == 0 {
+            bail!("max_batch must be at least 1");
+        }
+        if cfg.queue_cap == 0 {
+            bail!("queue_cap must be at least 1");
+        }
+        let pool = KvPool::new(&model.spec, cfg.max_batch);
+        let tee = match &cfg.transcript {
+            Some(p) => Some(TranscriptTee::create(p)?),
+            None => None,
+        };
+        Ok(Engine {
+            model,
+            cfg_queue_cap: cfg.queue_cap,
+            pool,
+            slots: (0..cfg.max_batch).map(|_| None).collect(),
+            queue: VecDeque::new(),
+            aborts: BTreeSet::new(),
+            responses: Vec::new(),
+            tee,
+            stats: EngineStats::default(),
+        })
+    }
+
+    /// Admission control: validate and enqueue. Errors name the request
+    /// and the violated bound; nothing is partially admitted.
+    pub fn submit(&mut self, req: ServeRequest) -> Result<()> {
+        let spec = &self.model.spec;
+        let prompt = tokenizer::encode(&req.prompt);
+        if prompt.is_empty() {
+            bail!("request '{}': empty prompt", req.id);
+        }
+        if req.max_tokens == 0 {
+            bail!("request '{}': max_tokens must be at least 1", req.id);
+        }
+        if prompt.len() + req.max_tokens > spec.seq {
+            bail!(
+                "request '{}': prompt ({}) + max_tokens ({}) exceeds the model context ({})",
+                req.id,
+                prompt.len(),
+                req.max_tokens,
+                spec.seq
+            );
+        }
+        if self.queue.len() >= self.cfg_queue_cap {
+            bail!("request '{}': queue full ({} waiting)", req.id, self.queue.len());
+        }
+        self.queue.push_back((req, Instant::now()));
+        Ok(())
+    }
+
+    /// [`Engine::submit`], turning a rejection into an error response so a
+    /// JSONL front end keeps serving. Returns whether it was admitted.
+    pub fn submit_or_reject(&mut self, req: ServeRequest) -> bool {
+        let id = req.id.clone();
+        let prompt_tokens = tokenizer::encode(&req.prompt).len();
+        match self.submit(req) {
+            Ok(()) => true,
+            Err(e) => {
+                self.push_response(ServeResponse {
+                    id,
+                    text: String::new(),
+                    prompt_tokens,
+                    completion_tokens: 0,
+                    finish: FinishReason::Rejected,
+                    latency_ms: 0.0,
+                    error: Some(format!("{e:#}")),
+                });
+                false
+            }
+        }
+    }
+
+    /// Mark a request for mid-stream abort; it retires (with its partial
+    /// text) at the start of the next step, freeing its slot and KV block.
+    pub fn abort(&mut self, id: &str) {
+        self.aborts.insert(id.to_string());
+    }
+
+    /// Requests waiting for a slot.
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Requests currently decoding.
+    pub fn active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// KV blocks available for admission.
+    pub fn free_slots(&self) -> usize {
+        self.pool.free_count()
+    }
+
+    /// KV bytes preallocated by the pool.
+    pub fn kv_bytes(&self) -> usize {
+        self.pool.bytes()
+    }
+
+    /// True when no request is queued or in flight.
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.active() == 0
+    }
+
+    /// Drain completed responses (retire order).
+    pub fn take_responses(&mut self) -> Vec<ServeResponse> {
+        std::mem::take(&mut self.responses)
+    }
+
+    /// Advance every active slot by one token (admitting queued requests
+    /// first). Returns the number of tokens decoded this step — 0 means
+    /// the engine is idle.
+    pub fn step(&mut self) -> Result<usize> {
+        self.apply_aborts()?;
+        self.admit()?;
+        let active: Vec<usize> =
+            (0..self.slots.len()).filter(|&i| self.slots[i].is_some()).collect();
+        if active.is_empty() {
+            return Ok(0);
+        }
+        let mut feed = Vec::with_capacity(active.len());
+        let mut pos = Vec::with_capacity(active.len());
+        let mut block_ids = Vec::with_capacity(active.len());
+        for &si in &active {
+            let slot = self.slots[si].as_ref().expect("active slot");
+            feed.push(slot.tokens[slot.fed]);
+            pos.push(slot.fed);
+            block_ids.push(slot.block);
+        }
+        let logits = {
+            let mut blocks = self.pool.blocks_mut(&block_ids);
+            decode_step(self.model, &mut blocks, &feed, &pos)
+        };
+        self.stats.steps += 1;
+        for (bi, &si) in active.iter().enumerate() {
+            let row = logits.row(bi);
+            let mut finish = None;
+            {
+                let slot = self.slots[si].as_mut().expect("active slot");
+                let next = next_token(row, slot.req.temperature, &mut slot.rng) as i32;
+                slot.fed += 1;
+                if slot.stop_id == Some(next) {
+                    finish = Some(FinishReason::Stop);
+                } else {
+                    slot.tokens.push(next);
+                    if slot.tokens.len() - slot.prompt_len >= slot.req.max_tokens {
+                        finish = Some(FinishReason::Length);
+                    }
+                }
+            }
+            self.stats.decoded_tokens += 1;
+            if let Some(reason) = finish {
+                self.retire(si, reason)?;
+            }
+        }
+        Ok(active.len())
+    }
+
+    /// Run until idle; drain the responses.
+    pub fn run(&mut self) -> Result<Vec<ServeResponse>> {
+        while !self.is_idle() {
+            self.step()?;
+        }
+        Ok(self.take_responses())
+    }
+
+    /// Retire aborted requests, both queued and mid-stream.
+    fn apply_aborts(&mut self) -> Result<()> {
+        if self.aborts.is_empty() {
+            return Ok(());
+        }
+        // queued: respond without ever admitting
+        let aborts = std::mem::take(&mut self.aborts);
+        let mut remaining = VecDeque::new();
+        for (req, t) in std::mem::take(&mut self.queue) {
+            if aborts.contains(&req.id) {
+                let prompt_tokens = tokenizer::encode(&req.prompt).len();
+                self.push_response(ServeResponse {
+                    id: req.id,
+                    text: String::new(),
+                    prompt_tokens,
+                    completion_tokens: 0,
+                    finish: FinishReason::Aborted,
+                    latency_ms: t.elapsed().as_secs_f64() * 1e3,
+                    error: None,
+                });
+            } else {
+                remaining.push_back((req, t));
+            }
+        }
+        self.queue = remaining;
+        // mid-stream: retire with partial text, freeing slot + KV block
+        for si in 0..self.slots.len() {
+            let hit = self.slots[si].as_ref().is_some_and(|s| aborts.contains(&s.req.id));
+            if hit {
+                self.retire(si, FinishReason::Aborted)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Join-on-arrival: move queued requests into free slots and prefill
+    /// their prompts (all but the last prompt token; the last is the first
+    /// decode step's input, mirroring `eval::generate`'s first iteration).
+    fn admit(&mut self) -> Result<()> {
+        while !self.queue.is_empty() && self.pool.free_count() > 0 {
+            let si = self
+                .slots
+                .iter()
+                .position(|s| s.is_none())
+                .context("free KV block without a free slot")?;
+            let (req, submitted) = self.queue.pop_front().expect("queue checked non-empty");
+            let block = self.pool.alloc().context("free_count checked > 0")?;
+            let tokens = tokenizer::encode(&req.prompt);
+            let prompt_len = tokens.len();
+            // one position-batched pass over the prompt (minus the last
+            // token, which is the first decode step's input)
+            prefill_prompt(self.model, self.pool.block_mut(block), &tokens[..prompt_len - 1]);
+            self.stats.prefill_tokens += (prompt_len - 1) as u64;
+            let rng = Pcg64::new(req.seed, 61);
+            let stop_id = req
+                .stop
+                .as_ref()
+                .and_then(|s| tokenizer::encode(s).first().copied());
+            self.slots[si] = Some(Slot {
+                req,
+                tokens,
+                prompt_len,
+                fed: prompt_len - 1,
+                block,
+                rng,
+                stop_id,
+                submitted,
+            });
+        }
+        Ok(())
+    }
+
+    /// Retire slot `si`: build the response, tee it, free the KV block.
+    fn retire(&mut self, si: usize, finish: FinishReason) -> Result<()> {
+        let slot = self.slots[si].take().context("retiring an empty slot")?;
+        self.pool.free(slot.block);
+        let resp = ServeResponse {
+            id: slot.req.id.clone(),
+            text: tokenizer::decode(&slot.tokens[slot.prompt_len..]),
+            prompt_tokens: slot.prompt_len,
+            completion_tokens: slot.tokens.len() - slot.prompt_len,
+            finish,
+            latency_ms: slot.submitted.elapsed().as_secs_f64() * 1e3,
+            error: None,
+        };
+        self.push_response(resp);
+        Ok(())
+    }
+
+    fn push_response(&mut self, resp: ServeResponse) {
+        self.stats.retired += 1;
+        if let Some(tee) = &mut self.tee {
+            if let Err(e) = tee.write(&resp) {
+                crate::log_warn!("transcript tee failed: {e:#}");
+            }
+        }
+        self.responses.push(resp);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{repo_root, Presets};
+    use crate::eval::generate::{generate, GenOptions};
+    use crate::model::init::init_params;
+
+    fn setup() -> (crate::config::ModelSpec, crate::model::params::ModelParams) {
+        let presets = Presets::load(&repo_root().unwrap()).unwrap();
+        let spec = presets.model("topt-s1").unwrap().clone();
+        let params = init_params(&spec, 23);
+        (spec, params)
+    }
+
+    fn req(id: &str, prompt: &str, max_tokens: usize, temperature: f64, seed: u64) -> ServeRequest {
+        ServeRequest {
+            id: id.into(),
+            prompt: prompt.into(),
+            max_tokens,
+            temperature,
+            seed,
+            stop: None,
+        }
+    }
+
+    #[test]
+    fn greedy_single_request_matches_generate() {
+        let (spec, params) = setup();
+        let model = ServeModel::dense(&spec, &params);
+        let mut eng = Engine::new(&model, &EngineConfig::default()).unwrap();
+        eng.submit(req("r1", "abc", 12, 0.0, 1)).unwrap();
+        let out = eng.run().unwrap();
+        assert_eq!(out.len(), 1);
+        let want = generate(
+            &spec,
+            &params,
+            "abc",
+            &GenOptions { max_tokens: 12, temperature: 0.0, seed: 1 },
+        );
+        assert_eq!(out[0].text, want);
+        assert_eq!(out[0].completion_tokens, 12);
+        assert_eq!(out[0].finish, FinishReason::Length);
+        assert!(eng.is_idle());
+        assert_eq!(eng.free_slots(), 4);
+    }
+
+    #[test]
+    fn sampled_request_matches_generate_stream() {
+        let (spec, params) = setup();
+        let model = ServeModel::dense(&spec, &params);
+        let mut eng = Engine::new(&model, &EngineConfig::default()).unwrap();
+        eng.submit(req("r1", "xy", 16, 1.2, 9)).unwrap();
+        let out = eng.run().unwrap();
+        let want = generate(
+            &spec,
+            &params,
+            "xy",
+            &GenOptions { max_tokens: 16, temperature: 1.2, seed: 9 },
+        );
+        assert_eq!(out[0].text, want, "seeded sampling must match eval::generate");
+    }
+
+    #[test]
+    fn queue_overflow_and_context_overflow_are_rejected() {
+        let (spec, params) = setup();
+        let model = ServeModel::dense(&spec, &params);
+        let cfg = EngineConfig { max_batch: 1, queue_cap: 2, transcript: None };
+        let mut eng = Engine::new(&model, &cfg).unwrap();
+        assert!(eng.submit(req("e", "", 4, 0.0, 0)).is_err(), "empty prompt");
+        assert!(eng.submit(req("z", "ab", 0, 0.0, 0)).is_err(), "zero budget");
+        let too_long = eng.submit(req("l", "abcd", spec.seq, 0.0, 0)).unwrap_err().to_string();
+        assert!(too_long.contains("context"), "{too_long}");
+        eng.submit(req("a", "ab", 2, 0.0, 0)).unwrap();
+        eng.submit(req("b", "ab", 2, 0.0, 0)).unwrap();
+        assert!(eng.submit(req("c", "ab", 2, 0.0, 0)).is_err(), "queue full");
+        assert!(!eng.submit_or_reject(req("d", "ab", 2, 0.0, 0)));
+        let rejected: Vec<_> = eng
+            .take_responses()
+            .into_iter()
+            .filter(|r| r.finish == FinishReason::Rejected)
+            .collect();
+        assert_eq!(rejected.len(), 1);
+        assert!(rejected[0].error.as_ref().unwrap().contains("queue full"));
+        // the two admitted requests still complete
+        assert_eq!(eng.run().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn continuous_batching_joins_waiting_requests() {
+        let (spec, params) = setup();
+        let model = ServeModel::dense(&spec, &params);
+        let cfg = EngineConfig { max_batch: 2, queue_cap: 16, transcript: None };
+        let mut eng = Engine::new(&model, &cfg).unwrap();
+        for i in 0..5 {
+            eng.submit(req(&format!("r{i}"), "the ", 6, 0.0, i)).unwrap();
+        }
+        // two slots, five requests: the later ones join as earlier retire
+        let mut seen_join = false;
+        while !eng.is_idle() {
+            let before = eng.active();
+            eng.step().unwrap();
+            if before > 0 && eng.active() > 0 && eng.queued() < 3 {
+                seen_join = true;
+            }
+        }
+        assert!(seen_join);
+        let out = eng.take_responses();
+        assert_eq!(out.len(), 5);
+        let want = generate(
+            &spec,
+            &params,
+            "the ",
+            &GenOptions { max_tokens: 6, temperature: 0.0, seed: 0 },
+        );
+        for r in &out {
+            assert_eq!(r.text, want, "{}: batch composition must not change output", r.id);
+        }
+        assert_eq!(eng.stats.retired, 5);
+        assert_eq!(eng.stats.decoded_tokens, 30);
+    }
+
+    #[test]
+    fn stop_token_retires_early() {
+        let (spec, params) = setup();
+        let model = ServeModel::dense(&spec, &params);
+        let mut eng = Engine::new(&model, &EngineConfig::default()).unwrap();
+        // find what greedy emits first, then use it as the stop char
+        let first = generate(
+            &spec,
+            &params,
+            "abc",
+            &GenOptions { max_tokens: 1, temperature: 0.0, seed: 0 },
+        );
+        let mut r = req("s", "abc", 10, 0.0, 0);
+        r.stop = Some(first.clone());
+        eng.submit(r).unwrap();
+        let out = eng.run().unwrap();
+        assert_eq!(out[0].finish, FinishReason::Stop);
+        assert_eq!(out[0].completion_tokens, 0, "stop token is not emitted");
+        assert!(out[0].text.is_empty());
+    }
+}

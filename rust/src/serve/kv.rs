@@ -1,0 +1,190 @@
+//! Per-request KV state: one fixed-capacity block per decode slot, handed
+//! out by a pool so serving never allocates on the request path.
+//!
+//! Layout: a [`KvBlock`] stacks one [`KvLayer`] (see `model::forward`) per
+//! decoder layer, each sized for the model's full context (`spec.seq`
+//! positions × `spec.d` floats for K and again for V). The [`KvPool`]
+//! preallocates `slots` such blocks up front; admission takes a block,
+//! retirement clears and returns it. A cleared block keeps its buffers, so
+//! steady-state serving is allocation-free apart from per-step activation
+//! tensors.
+
+use crate::config::ModelSpec;
+use crate::model::forward::KvLayer;
+
+/// The KV state of one in-flight request: a cache per decoder layer.
+pub struct KvBlock {
+    layers: Vec<KvLayer>,
+}
+
+impl KvBlock {
+    /// Empty block sized for the model's full context.
+    pub fn new(spec: &ModelSpec) -> KvBlock {
+        KvBlock { layers: (0..spec.layers).map(|_| KvLayer::new(spec.seq, spec.d)).collect() }
+    }
+
+    /// Cache of decoder layer `li`.
+    pub fn layer(&self, li: usize) -> &KvLayer {
+        &self.layers[li]
+    }
+
+    /// Mutable cache of decoder layer `li`.
+    pub fn layer_mut(&mut self, li: usize) -> &mut KvLayer {
+        &mut self.layers[li]
+    }
+
+    /// Cached positions (identical across layers by construction).
+    pub fn len(&self) -> usize {
+        self.layers.first().map(|l| l.len()).unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Forget all cached positions; buffers are retained for reuse.
+    pub fn clear(&mut self) {
+        for l in &mut self.layers {
+            l.clear();
+        }
+    }
+
+    /// Heap bytes held by this block's K/V buffers.
+    pub fn bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.bytes()).sum()
+    }
+}
+
+/// Fixed pool of KV blocks, one per concurrent decode slot.
+pub struct KvPool {
+    blocks: Vec<KvBlock>,
+    free: Vec<usize>,
+}
+
+impl KvPool {
+    /// Preallocate `slots` blocks for `spec`.
+    pub fn new(spec: &ModelSpec, slots: usize) -> KvPool {
+        KvPool {
+            blocks: (0..slots).map(|_| KvBlock::new(spec)).collect(),
+            // reversed so alloc() hands out ids 0, 1, 2, … initially
+            free: (0..slots).rev().collect(),
+        }
+    }
+
+    /// Take a cleared block; `None` when every slot is in flight.
+    pub fn alloc(&mut self) -> Option<usize> {
+        let id = self.free.pop()?;
+        self.blocks[id].clear();
+        Some(id)
+    }
+
+    /// Return a block to the pool (retire-on-EOS / abort path).
+    pub fn free(&mut self, id: usize) {
+        debug_assert!(!self.free.contains(&id), "double free of KV block {id}");
+        self.blocks[id].clear();
+        self.free.push(id);
+    }
+
+    /// Blocks currently available for admission.
+    pub fn free_count(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Total slots.
+    pub fn capacity(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn block(&self, id: usize) -> &KvBlock {
+        &self.blocks[id]
+    }
+
+    pub fn block_mut(&mut self, id: usize) -> &mut KvBlock {
+        &mut self.blocks[id]
+    }
+
+    /// Mutable references to several distinct blocks at once (the batched
+    /// decode step needs every active slot's cache simultaneously).
+    /// Returned in the order of `ids`; panics on out-of-range or duplicate
+    /// ids — both are scheduler bugs.
+    pub fn blocks_mut(&mut self, ids: &[usize]) -> Vec<&mut KvBlock> {
+        let mut picked: Vec<Option<&mut KvBlock>> = ids.iter().map(|_| None).collect();
+        for (i, b) in self.blocks.iter_mut().enumerate() {
+            if let Some(p) = ids.iter().position(|&want| want == i) {
+                debug_assert!(
+                    ids.iter().filter(|&&want| want == i).count() == 1,
+                    "duplicate KV block id {i}"
+                );
+                picked[p] = Some(b);
+            }
+        }
+        picked
+            .into_iter()
+            .enumerate()
+            .map(|(p, b)| b.unwrap_or_else(|| panic!("KV block id {} out of range", ids[p])))
+            .collect()
+    }
+
+    /// Heap bytes across all blocks (capacity planning / `info`).
+    pub fn bytes(&self) -> usize {
+        self.blocks.iter().map(|b| b.bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{repo_root, Presets};
+
+    fn spec() -> crate::config::ModelSpec {
+        let presets = Presets::load(&repo_root().unwrap()).unwrap();
+        presets.model("topt-s1").unwrap().clone()
+    }
+
+    #[test]
+    fn alloc_free_cycle() {
+        let spec = spec();
+        let mut pool = KvPool::new(&spec, 2);
+        assert_eq!(pool.free_count(), 2);
+        let a = pool.alloc().unwrap();
+        let b = pool.alloc().unwrap();
+        assert_ne!(a, b);
+        assert!(pool.alloc().is_none());
+        pool.free(a);
+        assert_eq!(pool.free_count(), 1);
+        let c = pool.alloc().unwrap();
+        assert_eq!(c, a, "freed block is reused");
+    }
+
+    #[test]
+    fn freed_blocks_come_back_cleared() {
+        let spec = spec();
+        let mut pool = KvPool::new(&spec, 1);
+        let id = pool.alloc().unwrap();
+        let row = vec![1.0f32; spec.d];
+        pool.block_mut(id).layer_mut(0).push(&row, &row);
+        assert_eq!(pool.block(id).layer(0).len(), 1);
+        pool.free(id);
+        let id2 = pool.alloc().unwrap();
+        assert!(pool.block(id2).is_empty());
+    }
+
+    #[test]
+    fn blocks_mut_preserves_requested_order() {
+        let spec = spec();
+        let mut pool = KvPool::new(&spec, 3);
+        let row = vec![2.0f32; spec.d];
+        pool.block_mut(2).layer_mut(0).push(&row, &row);
+        let picked = pool.blocks_mut(&[2, 0]);
+        assert_eq!(picked.len(), 2);
+        assert_eq!(picked[0].len(), 1, "first pick is block 2");
+        assert_eq!(picked[1].len(), 0, "second pick is block 0");
+    }
+
+    #[test]
+    fn block_bytes_match_geometry() {
+        let spec = spec();
+        let block = KvBlock::new(&spec);
+        assert_eq!(block.bytes(), spec.layers * 2 * 4 * spec.seq * spec.d);
+    }
+}

@@ -1,0 +1,40 @@
+//! Serving: the payoff side of pruning, end to end.
+//!
+//! The pruner's whole motivation is cheaper inference; this subsystem is
+//! where the pruned artifact becomes the hot path. It turns the
+//! measure-only evaluation stack into a serving engine:
+//!
+//! * [`kv`] — per-request KV state: fixed-capacity blocks (one
+//!   `model::forward::KvLayer` per decoder layer) handed out by a
+//!   preallocated pool, so the request path never allocates cache memory.
+//! * [`batch`] — the batched incremental decode step: every active slot
+//!   advances one token per model forward, O(1) layer passes per token
+//!   instead of the O(seq) full recompute in `eval::generate`. Pruned
+//!   operators run through the parallel CSR kernels
+//!   (`tensor::kernels::csr_matmul_t`) when serving sparse.
+//! * [`engine`] — continuous batching: admission control, a bounded
+//!   request queue, join-on-arrival/retire-on-EOS scheduling, mid-stream
+//!   abort, and per-request seeded sampling identical to
+//!   `eval::generate`.
+//! * [`request`] — the typed request/response pair, the JSONL wire codec
+//!   behind the `serve` CLI command, and the transcript tee.
+//! * [`bench`] — the `serve-bench` core: tokens/s, p50/p99 latency and
+//!   dense-vs-sparse speedups, with greedy outputs parity-checked against
+//!   `eval::generate`.
+//!
+//! Determinism contract (pinned by `rust/tests/serve_parity.rs`): a
+//! request's output depends only on the weights and its own
+//! prompt/seed/temperature — not on batch composition, admission order,
+//! kernel thread count, or other requests (including aborts).
+
+pub mod batch;
+pub mod bench;
+pub mod engine;
+pub mod kv;
+pub mod request;
+
+pub use batch::ServeModel;
+pub use bench::{run_serve_bench, ServeBenchConfig, ServeBenchReport};
+pub use engine::{Engine, EngineConfig, EngineStats};
+pub use kv::{KvBlock, KvPool};
+pub use request::{FinishReason, ServeRequest, ServeResponse};

@@ -1,0 +1,259 @@
+//! Typed serve requests/responses, the JSONL wire codec, and the
+//! transcript tee.
+//!
+//! The wire format is one JSON object per line. Requests:
+//!
+//! ```json
+//! {"id": "r1", "prompt": "the ", "max_tokens": 32, "temperature": 0.0, "seed": 7}
+//! ```
+//!
+//! `prompt` is required; everything else defaults (`id` is assigned by the
+//! front end when absent). Responses mirror back the id plus the decoded
+//! text, token counts, finish reason and latency. Unknown request keys are
+//! rejected — admission control starts at the parser.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::ser::json::Json;
+
+/// One generation request.
+#[derive(Clone, Debug)]
+pub struct ServeRequest {
+    pub id: String,
+    pub prompt: String,
+    /// Decode budget; generation retires with `FinishReason::Length` when
+    /// this many tokens have been produced.
+    pub max_tokens: usize,
+    /// 0 = greedy; otherwise softmax temperature (matches `eval::generate`).
+    pub temperature: f64,
+    /// Per-request sampling seed (stream 61, like `eval::generate`).
+    pub seed: u64,
+    /// Optional single-character stop text: sampling this token retires
+    /// the request early with `FinishReason::Stop` (token not emitted).
+    pub stop: Option<String>,
+}
+
+impl Default for ServeRequest {
+    fn default() -> Self {
+        ServeRequest {
+            id: String::new(),
+            prompt: String::new(),
+            max_tokens: 32,
+            temperature: 0.0,
+            seed: 0,
+            stop: None,
+        }
+    }
+}
+
+const REQUEST_KEYS: &[&str] = &["id", "prompt", "max_tokens", "temperature", "seed", "stop"];
+
+impl ServeRequest {
+    /// Parse one JSONL line.
+    pub fn from_json_line(line: &str) -> Result<ServeRequest> {
+        let v = Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("request line: {e}"))?;
+        let obj = v.as_obj().context("request must be a JSON object")?;
+        for k in obj.keys() {
+            if !REQUEST_KEYS.contains(&k.as_str()) {
+                bail!("unknown request key '{k}' (known: {})", REQUEST_KEYS.join(", "));
+            }
+        }
+        let mut req = ServeRequest::default();
+        if let Some(id) = v.get("id") {
+            req.id = id.as_str().context("'id' must be a string")?.to_string();
+        }
+        req.prompt = v
+            .req("prompt")?
+            .as_str()
+            .context("'prompt' must be a string")?
+            .to_string();
+        if let Some(m) = v.get("max_tokens") {
+            req.max_tokens = m.as_usize().context("'max_tokens' must be a number")?;
+        }
+        if let Some(t) = v.get("temperature") {
+            req.temperature = t.as_f64().context("'temperature' must be a number")?;
+        }
+        if let Some(s) = v.get("seed") {
+            req.seed = s.as_f64().context("'seed' must be a number")? as u64;
+        }
+        if let Some(s) = v.get("stop") {
+            let s = s.as_str().context("'stop' must be a string")?;
+            if s.chars().count() != 1 {
+                bail!("'stop' must be a single character, got {s:?}");
+            }
+            req.stop = Some(s.to_string());
+        }
+        Ok(req)
+    }
+
+    /// Serialize back to one JSON line (synthetic-load generation, tests).
+    pub fn to_json_line(&self) -> String {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("id".to_string(), Json::Str(self.id.clone()));
+        m.insert("prompt".to_string(), Json::Str(self.prompt.clone()));
+        m.insert("max_tokens".to_string(), Json::Num(self.max_tokens as f64));
+        m.insert("temperature".to_string(), Json::Num(self.temperature));
+        m.insert("seed".to_string(), Json::Num(self.seed as f64));
+        if let Some(s) = &self.stop {
+            m.insert("stop".to_string(), Json::Str(s.clone()));
+        }
+        Json::Obj(m).to_string_compact()
+    }
+}
+
+/// Why a request left the engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Produced `max_tokens` tokens.
+    Length,
+    /// Sampled the request's stop token.
+    Stop,
+    /// Aborted mid-stream by the client.
+    Aborted,
+    /// Never admitted (admission control / validation failure).
+    Rejected,
+}
+
+impl FinishReason {
+    pub fn label(&self) -> &'static str {
+        match self {
+            FinishReason::Length => "length",
+            FinishReason::Stop => "stop",
+            FinishReason::Aborted => "aborted",
+            FinishReason::Rejected => "rejected",
+        }
+    }
+}
+
+/// One completed (or rejected) request.
+#[derive(Clone, Debug)]
+pub struct ServeResponse {
+    pub id: String,
+    /// Decoded continuation (prompt excluded). Partial on abort.
+    pub text: String,
+    pub prompt_tokens: usize,
+    pub completion_tokens: usize,
+    pub finish: FinishReason,
+    /// Submit-to-retire wall time.
+    pub latency_ms: f64,
+    /// Validation message for `FinishReason::Rejected`.
+    pub error: Option<String>,
+}
+
+impl ServeResponse {
+    /// Serialize to one JSON line.
+    pub fn to_json_line(&self) -> String {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("id".to_string(), Json::Str(self.id.clone()));
+        m.insert("text".to_string(), Json::Str(self.text.clone()));
+        m.insert("prompt_tokens".to_string(), Json::Num(self.prompt_tokens as f64));
+        m.insert("completion_tokens".to_string(), Json::Num(self.completion_tokens as f64));
+        m.insert("finish".to_string(), Json::Str(self.finish.label().to_string()));
+        m.insert("latency_ms".to_string(), Json::Num((self.latency_ms * 1e3).round() / 1e3));
+        if let Some(e) = &self.error {
+            m.insert("error".to_string(), Json::Str(e.clone()));
+        }
+        Json::Obj(m).to_string_compact()
+    }
+}
+
+/// Appends one JSON line per retired request to a file — the transcript
+/// tee behind `serve --transcript`.
+pub struct TranscriptTee {
+    file: std::fs::File,
+}
+
+impl TranscriptTee {
+    pub fn create(path: &Path) -> Result<TranscriptTee> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        Ok(TranscriptTee {
+            file: std::fs::File::create(path)
+                .with_context(|| format!("creating transcript {}", path.display()))?,
+        })
+    }
+
+    pub fn write(&mut self, resp: &ServeResponse) -> Result<()> {
+        writeln!(self.file, "{}", resp.to_json_line())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let line = r#"{"id":"r1","prompt":"the ","max_tokens":8,"temperature":0.5,"seed":3}"#;
+        let req = ServeRequest::from_json_line(line).unwrap();
+        assert_eq!(req.id, "r1");
+        assert_eq!(req.prompt, "the ");
+        assert_eq!(req.max_tokens, 8);
+        assert_eq!(req.temperature, 0.5);
+        assert_eq!(req.seed, 3);
+        let back = ServeRequest::from_json_line(&req.to_json_line()).unwrap();
+        assert_eq!(back.prompt, req.prompt);
+        assert_eq!(back.max_tokens, req.max_tokens);
+    }
+
+    #[test]
+    fn request_defaults_and_errors() {
+        let req = ServeRequest::from_json_line(r#"{"prompt":"x"}"#).unwrap();
+        assert_eq!(req.max_tokens, 32);
+        assert_eq!(req.temperature, 0.0);
+        assert!(req.id.is_empty());
+        assert!(ServeRequest::from_json_line("not json").is_err());
+        assert!(ServeRequest::from_json_line(r#"{"max_tokens":4}"#).is_err(), "prompt required");
+        assert!(ServeRequest::from_json_line(r#"{"prompt":"x","bogus":1}"#).is_err());
+        assert!(ServeRequest::from_json_line(r#"{"prompt":"x","stop":"ab"}"#).is_err());
+    }
+
+    #[test]
+    fn response_line_is_valid_json() {
+        let resp = ServeResponse {
+            id: "r9".into(),
+            text: "a \"quoted\" bit".into(),
+            prompt_tokens: 4,
+            completion_tokens: 2,
+            finish: FinishReason::Length,
+            latency_ms: 1.23456,
+            error: None,
+        };
+        let line = resp.to_json_line();
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("id").unwrap().as_str(), Some("r9"));
+        assert_eq!(v.get("finish").unwrap().as_str(), Some("length"));
+        assert_eq!(v.get("completion_tokens").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn transcript_tee_appends_lines() {
+        let path = std::env::temp_dir().join(format!("fp_tee_{}.jsonl", std::process::id()));
+        {
+            let mut tee = TranscriptTee::create(&path).unwrap();
+            for id in ["a", "b"] {
+                tee.write(&ServeResponse {
+                    id: id.into(),
+                    text: String::new(),
+                    prompt_tokens: 1,
+                    completion_tokens: 0,
+                    finish: FinishReason::Aborted,
+                    latency_ms: 0.0,
+                    error: None,
+                })
+                .unwrap();
+            }
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.lines().all(|l| Json::parse(l).is_ok()));
+        std::fs::remove_file(&path).ok();
+    }
+}

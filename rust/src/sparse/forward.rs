@@ -29,7 +29,7 @@ impl<'p> SparseModel<'p> {
         for layer in 0..spec.layers {
             for op in pruned_ops(spec) {
                 let name = format!("l{layer}.{}", op.name);
-                csr.insert(name.clone(), CsrMatrix::from_dense(params.req(&name)?));
+                csr.insert(name.clone(), CsrMatrix::from_dense(params.req(&name)?)?);
             }
         }
         Ok(SparseModel { spec: spec.clone(), params, csr })

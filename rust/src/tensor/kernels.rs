@@ -148,6 +148,45 @@ fn out_row(block: &mut [f32], local_row: usize, n: usize) -> &mut [f32] {
     &mut block[local_row * n..(local_row + 1) * n]
 }
 
+/// C = A @ Bᵀ for a *skinny* A [s, k] (s = a decode batch, 1–8 rows):
+/// [`matmul_nt`] splits work by output rows and would run s-wide, so this
+/// variant parallelizes over B's rows into a [n, s] scratch instead and
+/// re-lays it out once (free for s == 1). Every element is the same
+/// ascending-k dot product as `matmul_nt`, so results are bitwise equal.
+pub fn matmul_nt_skinny(a: &Tensor, b: &Tensor) -> Tensor {
+    let (s, k) = (a.rows(), a.cols());
+    let (n, k2) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul_nt_skinny inner dims: {k} vs {k2}");
+    let (ad, bd) = (a.data(), b.data());
+    let mut scratch = vec![0f32; n * s];
+    par::for_each_row_block(&mut scratch, n, s, min_rows_for(2 * s * k), |j0, j1, block| {
+        for j in j0..j1 {
+            let brow = &bd[j * k..(j + 1) * k];
+            let orow = &mut block[(j - j0) * s..(j - j0 + 1) * s];
+            for (t, o) in orow.iter_mut().enumerate() {
+                let arow = &ad[t * k..(t + 1) * k];
+                let mut acc = 0.0f32;
+                for (&x, &y) in arow.iter().zip(brow) {
+                    acc += x * y;
+                }
+                *o = acc;
+            }
+        }
+    });
+    if s == 1 {
+        // [n, 1] and [1, n] share the same flat layout
+        return Tensor::from_vec(vec![1, n], scratch);
+    }
+    let mut out = Tensor::zeros(vec![s, n]);
+    let od = out.data_mut();
+    for j in 0..n {
+        for t in 0..s {
+            od[t * n + j] = scratch[j * s + t];
+        }
+    }
+    out
+}
+
 /// B = Aᵀ (2-D transpose), tiled and parallel over output rows.
 pub fn transpose(a: &Tensor) -> Tensor {
     let (m, n) = (a.rows(), a.cols());
@@ -182,6 +221,95 @@ pub fn matvec(a: &Tensor, x: &[f32]) -> Vec<f32> {
             *o = row.iter().zip(x).map(|(&p, &q)| p * q).sum();
         }
     });
+    out
+}
+
+// ---------------------------------------------------------------------
+// CSR decode kernels (the sparse serving hot path)
+// ---------------------------------------------------------------------
+
+/// y = W x for a CSR matrix W (`rows` rows given by `indptr`/`indices`/
+/// `values`) and dense x — the sparse decode matvec. Row-block parallel
+/// over W's rows like [`matvec`]; per-row accumulation walks the row's
+/// nonzeros in ascending column order, so the result is independent of
+/// the thread count.
+pub fn csr_matvec(
+    indptr: &[u32],
+    indices: &[u32],
+    values: &[f32],
+    rows: usize,
+    x: &[f32],
+) -> Vec<f32> {
+    debug_assert_eq!(indptr.len(), rows + 1, "indptr length");
+    let nnz_per_row = values.len() / rows.max(1);
+    let mut out = vec![0f32; rows];
+    let min_rows = min_rows_for(2 * nnz_per_row.max(1));
+    par::for_each_row_block(&mut out, rows, 1, min_rows, |r0, _r1, block| {
+        for (i, o) in block.iter_mut().enumerate() {
+            let r = r0 + i;
+            let (a, b) = (indptr[r] as usize, indptr[r + 1] as usize);
+            let mut acc = 0f32;
+            for k in a..b {
+                acc += values[k] * x[indices[k] as usize];
+            }
+            *o = acc;
+        }
+    });
+    out
+}
+
+/// out = X @ Wᵀ for a CSR W and a skinny dense X [s, cols] → [s, rows].
+///
+/// At decode time the batch dimension `s` is small (1–8 concurrent
+/// requests), so the parallel split runs over W's rows instead: each
+/// worker fills a contiguous stripe of a [rows, s] scratch, which is then
+/// re-laid-out once into the [s, rows] result (skipped when s == 1).
+/// Per-element accumulation order matches `CsrMatrix::matmul_t` exactly.
+pub fn csr_matmul_t(
+    indptr: &[u32],
+    indices: &[u32],
+    values: &[f32],
+    rows: usize,
+    cols: usize,
+    x: &Tensor,
+) -> Tensor {
+    let (s, n) = (x.rows(), x.cols());
+    assert_eq!(n, cols, "csr_matmul_t inner dims: {n} vs {cols}");
+    debug_assert_eq!(indptr.len(), rows + 1, "indptr length");
+    let xd = x.data();
+    let nnz_per_row = values.len() / rows.max(1);
+    let mut scratch = vec![0f32; rows * s];
+    par::for_each_row_block(
+        &mut scratch,
+        rows,
+        s,
+        min_rows_for(2 * s * nnz_per_row.max(1)),
+        |r0, r1, block| {
+            for r in r0..r1 {
+                let (a, b) = (indptr[r] as usize, indptr[r + 1] as usize);
+                let orow = &mut block[(r - r0) * s..(r - r0 + 1) * s];
+                for (t, o) in orow.iter_mut().enumerate() {
+                    let xrow = &xd[t * n..(t + 1) * n];
+                    let mut acc = 0f32;
+                    for k in a..b {
+                        acc += values[k] * xrow[indices[k] as usize];
+                    }
+                    *o = acc;
+                }
+            }
+        },
+    );
+    if s == 1 {
+        // [rows, 1] and [1, rows] share the same flat layout
+        return Tensor::from_vec(vec![1, rows], scratch);
+    }
+    let mut out = Tensor::zeros(vec![s, rows]);
+    let od = out.data_mut();
+    for r in 0..rows {
+        for t in 0..s {
+            od[t * rows + r] = scratch[r * s + t];
+        }
+    }
     out
 }
 
@@ -505,6 +633,81 @@ mod tests {
         assert_eq!(w_k, next, "Nesterov point must match the unfused steps exactly");
         let want = sq_dist(&next, &w0);
         assert!((diff2 - want).abs() < 1e-6 * want.max(1.0));
+    }
+
+    #[test]
+    fn skinny_matmul_nt_matches_wide_bitwise() {
+        let mut rng = Pcg64::seeded(46);
+        for s in [1usize, 3, 4] {
+            let a = randt(&mut rng, vec![s, 29]);
+            let b = randt(&mut rng, vec![71, 29]);
+            let wide = matmul_nt(&a, &b);
+            let skinny = matmul_nt_skinny(&a, &b);
+            assert_eq!(skinny.shape(), &[s, 71]);
+            for (x, y) in skinny.data().iter().zip(wide.data()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "s={s}");
+            }
+        }
+    }
+
+    /// Toy CSR of a dense matrix (test-local; the real builder lives in
+    /// `sparse::csr` and is parity-tested against these kernels there).
+    fn dense_to_csr(w: &Tensor) -> (Vec<u32>, Vec<u32>, Vec<f32>) {
+        let (mut indptr, mut indices, mut values) = (vec![0u32], Vec::new(), Vec::new());
+        for i in 0..w.rows() {
+            for (j, &v) in w.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    indices.push(j as u32);
+                    values.push(v);
+                }
+            }
+            indptr.push(indices.len() as u32);
+        }
+        (indptr, indices, values)
+    }
+
+    #[test]
+    fn csr_kernels_match_dense_and_are_thread_invariant() {
+        let mut rng = Pcg64::seeded(45);
+        let (m, n, s) = (33, 47, 4);
+        let mut w = randt(&mut rng, vec![m, n]);
+        for v in w.data_mut() {
+            if *v < 0.0 {
+                *v = 0.0; // ~50% sparse
+            }
+        }
+        let (indptr, indices, values) = dense_to_csr(&w);
+        let x = randt(&mut rng, vec![s, n]);
+        let want = matmul_nt(&x, &w);
+
+        let got = csr_matmul_t(&indptr, &indices, &values, m, n, &x);
+        assert_eq!(got.shape(), &[s, m]);
+        assert!(sq_dist(&got, &want).sqrt() < 1e-4 * want.frob_norm().max(1.0));
+
+        // single-row fast path + matvec agree with the dense route
+        let x1 = Tensor::from_vec(vec![1, n], x.row(0).to_vec());
+        let got1 = csr_matmul_t(&indptr, &indices, &values, m, n, &x1);
+        assert_eq!(got1.shape(), &[1, m]);
+        let y = csr_matvec(&indptr, &indices, &values, m, x.row(0));
+        for (a, b) in y.iter().zip(got1.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+
+        // bitwise identical across thread counts
+        let baseline = {
+            par::set_threads(1);
+            let t = csr_matmul_t(&indptr, &indices, &values, m, n, &x);
+            par::set_threads(0);
+            t
+        };
+        for threads in [2, 5] {
+            par::set_threads(threads);
+            let t = csr_matmul_t(&indptr, &indices, &values, m, n, &x);
+            par::set_threads(0);
+            for (a, b) in t.data().iter().zip(baseline.data()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}");
+            }
+        }
     }
 
     #[test]

@@ -69,6 +69,93 @@ fn shape_mismatch_names_the_argument() {
 }
 
 #[test]
+fn mid_stream_abort_frees_kv_and_preserves_other_streams() {
+    // A request aborted mid-decode must retire its slot (partial text,
+    // finish "aborted"), return its KV block to the pool, and leave every
+    // other in-flight request's output byte-identical to a solo run.
+    use fistapruner::config::{repo_root, Presets};
+    use fistapruner::eval::generate::{generate, GenOptions};
+    use fistapruner::model::init::init_params;
+    use fistapruner::serve::{Engine, EngineConfig, FinishReason, ServeModel, ServeRequest};
+
+    let root = repo_root().unwrap();
+    let presets = Presets::load(&root).unwrap();
+    let spec = presets.model("topt-s1").unwrap().clone();
+    let params = init_params(&spec, 47);
+    let prompts = ["alpha ", "beta ", "gamma "];
+    let max_tokens = 16usize;
+
+    let cfg = EngineConfig { max_batch: 3, queue_cap: 8, transcript: None };
+    let serve_model = ServeModel::dense(&spec, &params);
+    let mut eng = Engine::new(&serve_model, &cfg).unwrap();
+    for (i, p) in prompts.iter().enumerate() {
+        eng.submit(ServeRequest {
+            id: format!("r{i}"),
+            prompt: (*p).to_string(),
+            max_tokens,
+            temperature: 0.0,
+            seed: i as u64,
+            stop: None,
+        })
+        .unwrap();
+    }
+    // a few decode steps, then yank the middle request mid-stream
+    for _ in 0..5 {
+        eng.step().unwrap();
+    }
+    assert_eq!(eng.active(), 3);
+    assert_eq!(eng.free_slots(), 0);
+    eng.abort("r1");
+    eng.step().unwrap();
+    assert_eq!(eng.active(), 2, "aborted slot must retire");
+    assert_eq!(eng.free_slots(), 1, "aborted KV block must return to the pool");
+    let mut responses = eng.run().unwrap();
+    responses.sort_by(|a, b| a.id.cmp(&b.id));
+    assert_eq!(responses.len(), 3);
+
+    let aborted = &responses[1];
+    assert_eq!(aborted.id, "r1");
+    assert_eq!(aborted.finish, FinishReason::Aborted);
+    assert!(aborted.completion_tokens < max_tokens, "abort must land mid-stream");
+    // the partial text is a prefix of the solo run
+    let solo_r1 = generate(
+        &spec,
+        &params,
+        prompts[1],
+        &GenOptions { max_tokens, temperature: 0.0, seed: 1 },
+    );
+    assert!(solo_r1.starts_with(&aborted.text), "partial text must be a solo-run prefix");
+
+    for (i, r) in responses.iter().enumerate() {
+        if i == 1 {
+            continue;
+        }
+        assert_eq!(r.finish, FinishReason::Length);
+        let solo = generate(
+            &spec,
+            &params,
+            prompts[i],
+            &GenOptions { max_tokens, temperature: 0.0, seed: i as u64 },
+        );
+        assert_eq!(r.text, solo, "surviving request r{i} must be byte-identical to its solo run");
+    }
+    // the freed slot is reusable afterwards
+    eng.submit(ServeRequest {
+        id: "post".into(),
+        prompt: "delta ".into(),
+        max_tokens: 4,
+        temperature: 0.0,
+        seed: 9,
+        stop: None,
+    })
+    .unwrap();
+    let out = eng.run().unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].finish, FinishReason::Length);
+    assert_eq!(eng.free_slots(), 3);
+}
+
+#[test]
 fn xla_engine_without_session_is_a_clear_error() {
     // prune_model with Engine::Xla and no session must error, not panic.
     let root = fistapruner::config::repo_root().unwrap();

@@ -1,0 +1,163 @@
+//! Decode-parity suite: KV-cached incremental decode — dense and CSR,
+//! across batch sizes and kernel thread counts — must produce greedy
+//! outputs identical to the full-recompute `eval::generate` path. This is
+//! the serving determinism contract (docs/ARCHITECTURE.md §Serving).
+
+use fistapruner::config::{repo_root, Presets, Sparsity};
+use fistapruner::eval::generate::{generate, GenOptions};
+use fistapruner::model::init::init_params;
+use fistapruner::model::params::ModelParams;
+use fistapruner::pruner::round_model_to_sparsity;
+use fistapruner::serve::{Engine, EngineConfig, ServeModel, ServeRequest};
+use fistapruner::tensor::par;
+
+const PROMPTS: [&str; 4] = ["the quick ", "a b c ", "zz top ", "once upon "];
+const GEN_TOKENS: usize = 18;
+
+fn load(model: &str, seed: u64) -> (fistapruner::config::ModelSpec, ModelParams) {
+    let presets = Presets::load(&repo_root().unwrap()).unwrap();
+    let spec = presets.model(model).unwrap().clone();
+    let params = init_params(&spec, seed);
+    (spec, params)
+}
+
+/// Serve every prompt greedily through one engine; returns texts in
+/// request order.
+fn served_texts(model: &ServeModel<'_>, batch: usize) -> Vec<String> {
+    let cfg = EngineConfig { max_batch: batch, queue_cap: PROMPTS.len(), transcript: None };
+    let mut eng = Engine::new(model, &cfg).unwrap();
+    for (i, p) in PROMPTS.iter().enumerate() {
+        eng.submit(ServeRequest {
+            id: format!("r{i}"),
+            prompt: (*p).to_string(),
+            max_tokens: GEN_TOKENS,
+            temperature: 0.0,
+            seed: i as u64,
+            stop: None,
+        })
+        .unwrap();
+    }
+    let mut responses = eng.run().unwrap();
+    responses.sort_by(|a, b| a.id.cmp(&b.id));
+    responses.into_iter().map(|r| r.text).collect()
+}
+
+fn reference_texts(spec: &fistapruner::config::ModelSpec, params: &ModelParams) -> Vec<String> {
+    PROMPTS
+        .iter()
+        .map(|p| {
+            generate(
+                spec,
+                params,
+                p,
+                &GenOptions { max_tokens: GEN_TOKENS, temperature: 0.0, seed: 0 },
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn dense_decode_matches_generate_across_batches_and_threads() {
+    for model in ["topt-s1", "tllama-s1"] {
+        let (spec, params) = load(model, 31);
+        let want = reference_texts(&spec, &params);
+        let serve_model = ServeModel::dense(&spec, &params);
+        for batch in [1usize, 4] {
+            for threads in [1usize, 2, 4] {
+                par::set_threads(threads);
+                let got = served_texts(&serve_model, batch);
+                par::set_threads(0);
+                assert_eq!(got, want, "{model} dense batch={batch} threads={threads}");
+            }
+        }
+    }
+}
+
+#[test]
+fn csr_decode_matches_generate_across_batches_and_threads() {
+    for model in ["topt-s1", "tllama-s1"] {
+        let (spec, params) = load(model, 37);
+        for sp in [Sparsity::Unstructured(0.5), Sparsity::Semi(2, 4)] {
+            let pp = round_model_to_sparsity(&spec, &params, sp).unwrap();
+            // reference: full-recompute generate over the same pruned weights
+            let want = reference_texts(&spec, &pp);
+            let serve_model = ServeModel::sparse(&spec, &pp).unwrap();
+            for batch in [1usize, 4] {
+                for threads in [1usize, 2, 4] {
+                    par::set_threads(threads);
+                    let got = served_texts(&serve_model, batch);
+                    par::set_threads(0);
+                    assert_eq!(
+                        got,
+                        want,
+                        "{model} csr {} batch={batch} threads={threads}",
+                        sp.label()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batch_composition_does_not_change_sampled_streams() {
+    // temperature > 0: per-request seeded sampling must be identical to
+    // eval::generate regardless of who shares the batch.
+    let (spec, params) = load("topt-s1", 41);
+    let cfg = EngineConfig { max_batch: 3, queue_cap: 8, transcript: None };
+    let serve_model = ServeModel::dense(&spec, &params);
+    let mut eng = Engine::new(&serve_model, &cfg).unwrap();
+    for (i, p) in PROMPTS.iter().enumerate() {
+        eng.submit(ServeRequest {
+            id: format!("r{i}"),
+            prompt: (*p).to_string(),
+            max_tokens: 12,
+            temperature: 1.1,
+            seed: 100 + i as u64,
+            stop: None,
+        })
+        .unwrap();
+    }
+    let mut responses = eng.run().unwrap();
+    responses.sort_by(|a, b| a.id.cmp(&b.id));
+    for (i, (r, p)) in responses.iter().zip(PROMPTS.iter()).enumerate() {
+        let want = generate(
+            &spec,
+            &params,
+            p,
+            &GenOptions { max_tokens: 12, temperature: 1.1, seed: 100 + i as u64 },
+        );
+        assert_eq!(r.text, want, "request r{i}");
+    }
+}
+
+#[test]
+fn incremental_logits_match_full_forward_for_sparse_model() {
+    // CSR incremental decode vs CSR full recompute (sparse::sparse_logits):
+    // same values position by position (bitwise up to ±0, compared by value).
+    use fistapruner::model::forward::KvLayer;
+    let (spec, params) = load("tllama-s1", 43);
+    let pp = round_model_to_sparsity(&spec, &params, Sparsity::Unstructured(0.5)).unwrap();
+    let sm = fistapruner::sparse::SparseModel::compress(&spec, &pp).unwrap();
+    let tokens: Vec<i32> = (0..14).map(|i| (i * 9 + 2) % 96).collect();
+    let mut cache: Vec<KvLayer> =
+        (0..spec.layers).map(|_| KvLayer::new(spec.seq, spec.d)).collect();
+    for (pos, &tok) in tokens.iter().enumerate() {
+        let inc = fistapruner::model::forward::decode_next_with(
+            &spec,
+            &pp,
+            &mut cache,
+            tok,
+            pos,
+            |_li, _name, w, input| {
+                // dense fallback linop; CSR equivalence is checked above
+                fistapruner::tensor::ops::matmul_nt(input, w)
+            },
+        );
+        let full = fistapruner::sparse::sparse_logits(&sm, &tokens[..pos + 1]);
+        let want = full.row(pos);
+        for (j, (&a, &b)) in inc.iter().zip(want).enumerate() {
+            assert_eq!(a, b, "pos {pos} logit {j}: {a} vs {b}");
+        }
+    }
+}

@@ -1,13 +1,15 @@
 //! Serving throughput: full-recompute `eval::generate` vs KV-cached
-//! incremental decode vs CSR decode on pruned weights, with continuous
-//! batching and a greedy-parity check. CSV + BENCH_serve.json land in
-//! artifacts/bench_out/.
+//! incremental decode vs compressed decode on pruned weights, with
+//! continuous batching and a greedy-parity check — then the serve-format
+//! grid: the same 2:4-pruned weights through CSR and packed n:m side by
+//! side. CSVs + BENCH_serve.json land in artifacts/bench_out/ (CI emits
+//! BENCH_nm.json via `serve-bench --format nm --smoke`).
 //!
 //!     cargo bench --bench serve_decode
 //!     FP_BENCH_FAST=1 cargo bench --bench serve_decode   # CI smoke
 
-use fistapruner::bench_support::{fast_mode, Lab};
-use fistapruner::config::Sparsity;
+use fistapruner::bench_support::{fast_mode, run_serve_format_grid, Lab};
+use fistapruner::config::{SparseFormat, Sparsity};
 use fistapruner::metrics::csv::CsvWriter;
 use fistapruner::serve::{run_serve_bench, ServeBenchConfig};
 
@@ -17,16 +19,19 @@ fn main() -> anyhow::Result<()> {
     let corpus = "c4-syn";
     let params = lab.trained_or_init(model, corpus)?;
     let spec = lab.spec(model)?.clone();
+    let (tokens, requests) = if fast_mode() { (16, 4) } else { (32, 8) };
     let cfg = ServeBenchConfig {
-        tokens: if fast_mode() { 16 } else { 32 },
+        tokens,
         batch: 4,
-        requests: if fast_mode() { 4 } else { 8 },
+        requests,
         sparsity: Sparsity::Unstructured(0.5),
+        format: SparseFormat::Csr,
     };
     let report = run_serve_bench(&spec, &params, &cfg)?;
     report.print();
 
     let out_dir = lab.bench_out();
+    std::fs::create_dir_all(&out_dir)?;
     let mut csv = CsvWriter::create(
         &out_dir.join("serve_decode.csv"),
         &["path", "requests", "tokens", "tokens_per_s", "p50_ms", "p99_ms"],
@@ -42,9 +47,30 @@ fn main() -> anyhow::Result<()> {
         ])?;
     }
     let json_path = out_dir.join("BENCH_serve.json");
-    std::fs::create_dir_all(&out_dir)?;
     std::fs::write(&json_path, report.to_json().to_string_compact() + "\n")?;
     println!("wrote {}", json_path.display());
     anyhow::ensure!(report.parity_ok, "greedy parity check failed");
+
+    // the 2:4 format axis: csr vs packed n:m over identical pruned
+    // weights (Auto is omitted — on fully 2:4-rounded weights it packs
+    // every operator and would duplicate the nm row)
+    let rows = run_serve_format_grid(
+        &spec,
+        &params,
+        &[SparseFormat::Csr, SparseFormat::Nm],
+        Sparsity::Semi(2, 4),
+        tokens,
+        4,
+        requests,
+        &out_dir.join("serve_formats.csv"),
+    )?;
+    for row in &rows {
+        anyhow::ensure!(
+            row.parity_ok,
+            "format grid greedy parity failed for {} ({})",
+            row.format,
+            row.resolved
+        );
+    }
     Ok(())
 }

@@ -1,9 +1,11 @@
 //! The method × sparsity × model grid runner behind the table benches
-//! (paper Tables 1/2/4/5/6/7: rows = method@sparsity, columns = models).
+//! (paper Tables 1/2/4/5/6/7: rows = method@sparsity, columns = models),
+//! plus the serve-format grid: the same pruned weights measured through
+//! every compressed decode format (CSR vs packed n:m) side by side.
 
 use anyhow::Result;
 
-use crate::config::{PruneOptions, Sparsity};
+use crate::config::{PruneOptions, SparseFormat, Sparsity};
 use crate::metrics::csv::CsvWriter;
 use crate::metrics::TableBuilder;
 use crate::pruner::scheduler::Method;
@@ -89,6 +91,102 @@ pub fn run_grid(lab: &mut Lab, grid: &GridSpec) -> Result<Vec<(String, String, f
     table.print();
     println!("csv: {}", csv_path.display());
     Ok(triples)
+}
+
+/// One row of [`run_serve_format_grid`] output.
+#[derive(Clone, Debug)]
+pub struct ServeFormatRow {
+    /// Requested format axis value ("csr" | "nm" | "auto").
+    pub format: String,
+    /// What actually got compressed ("csr" | "nm" | "csr+nm").
+    pub resolved: String,
+    pub tokens_per_s_b1: f64,
+    pub tokens_per_s_bb: f64,
+    pub storage_bytes: usize,
+    pub storage_ratio: f64,
+    pub parity_ok: bool,
+}
+
+/// The serve-format grid: prune `dense` to `sparsity` once, then measure
+/// the same pruned weights through each format's decode kernels — rows =
+/// formats, columns = tokens/s at batch 1 / batch `batch`, storage, and
+/// greedy parity vs `eval::generate`. The csr-vs-nm side-by-side behind
+/// `benches/serve_decode.rs`; callers gate on each row's `parity_ok`.
+#[allow(clippy::too_many_arguments)]
+pub fn run_serve_format_grid(
+    spec: &crate::config::ModelSpec,
+    dense: &crate::model::params::ModelParams,
+    formats: &[SparseFormat],
+    sparsity: Sparsity,
+    tokens: usize,
+    batch: usize,
+    requests: usize,
+    csv_path: &std::path::Path,
+) -> Result<Vec<ServeFormatRow>> {
+    use crate::serve::bench::{
+        greedy_references, measure_sparse_format, requests_for, synthetic_prompts,
+    };
+
+    let pruned = crate::pruner::round_model_to_sparsity(spec, dense, sparsity)?;
+    let prompts = synthetic_prompts(requests);
+    let reqs = requests_for(&prompts, tokens);
+    let (reference, _) = greedy_references(spec, &pruned, &reqs, &prompts);
+
+    let mut table = TableBuilder::new(
+        &format!("serve formats ({} @ {})", spec.name(), sparsity.label()),
+        &["format", "tok/s b=1", &format!("tok/s b={batch}"), "bytes", "vs dense", "parity"],
+    );
+    let mut csv = CsvWriter::create(
+        csv_path,
+        &[
+            "format",
+            "resolved",
+            "tokens_per_s_b1",
+            "tokens_per_s_bb",
+            "storage_bytes",
+            "storage_ratio",
+            "parity",
+        ],
+    )?;
+    let mut rows = Vec::new();
+    for &fmt in formats {
+        let sp_hint = match fmt {
+            SparseFormat::Csr => None,
+            _ => Some(sparsity),
+        };
+        let stats =
+            measure_sparse_format(spec, &pruned, &reference, &reqs, batch, fmt, sp_hint)?;
+        let row = ServeFormatRow {
+            format: fmt.label().to_string(),
+            resolved: stats.label.to_string(),
+            tokens_per_s_b1: stats.b1.tokens_per_s,
+            tokens_per_s_bb: stats.bb.tokens_per_s,
+            storage_bytes: stats.storage_bytes,
+            storage_ratio: stats.storage_ratio,
+            parity_ok: stats.parity_ok,
+        };
+        table.row(vec![
+            row.resolved.clone(),
+            format!("{:.1}", row.tokens_per_s_b1),
+            format!("{:.1}", row.tokens_per_s_bb),
+            row.storage_bytes.to_string(),
+            format!("{:.3}", row.storage_ratio),
+            if row.parity_ok { "ok".into() } else { "MISMATCH".into() },
+        ]);
+        csv.write_row(&[
+            row.format.clone(),
+            row.resolved.clone(),
+            format!("{:.2}", row.tokens_per_s_b1),
+            format!("{:.2}", row.tokens_per_s_bb),
+            row.storage_bytes.to_string(),
+            format!("{:.4}", row.storage_ratio),
+            row.parity_ok.to_string(),
+        ])?;
+        rows.push(row);
+    }
+    table.print();
+    println!("csv: {}", csv_path.display());
+    Ok(rows)
 }
 
 fn pretty_name(m: &Method) -> &'static str {

@@ -33,7 +33,7 @@ use crate::pruner::PruneReport;
 use crate::runtime::{Manifest, Session};
 use crate::train::ensure_checkpoint;
 
-pub use grid::{run_grid, GridSpec};
+pub use grid::{run_grid, run_serve_format_grid, GridSpec, ServeFormatRow};
 
 fn env_usize(name: &str, default: usize) -> usize {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)

@@ -3,7 +3,9 @@
 use anyhow::Result;
 
 use crate::bench_support::Lab;
-use crate::config::{Engine, PruneMode, PruneOptions, Sparsity, TrainOptions, WarmStart};
+use crate::config::{
+    Engine, PruneMode, PruneOptions, SparseFormat, Sparsity, TrainOptions, WarmStart,
+};
 use crate::metrics::TableBuilder;
 use crate::model::spec::param_count;
 use crate::pruner::scheduler::Method;
@@ -208,20 +210,47 @@ pub fn serve(args: &Args) -> Result<()> {
     let corpus = args.req("corpus")?.to_string();
     let params = load_or_train(&mut lab, args, &model, &corpus)?;
     let spec = lab.presets.model(&model)?.clone();
-    let serve_model = match args.get_or("weights", "dense") {
-        "dense" => crate::serve::ServeModel::dense(&spec, &params),
-        "csr" => {
-            let m = crate::serve::ServeModel::sparse(&spec, &params)?;
+    // --format csr|nm|auto serves compressed weights through that
+    // backend; --weights dense|csr is kept as the older spelling
+    // (csr ≡ --format csr). nm/auto check weights against --sparsity
+    // (default 2:4, the paper's hardware pattern). Unknown values and
+    // contradictory combinations are rejected, never silently resolved.
+    let weights = args.get("weights");
+    if let Some(w) = weights {
+        if w != "dense" && w != "csr" {
+            anyhow::bail!("unknown --weights '{w}' (dense|csr, or --format)");
+        }
+    }
+    let format = match (args.get("format"), weights) {
+        (Some(f), Some("dense")) => {
+            anyhow::bail!("--weights dense conflicts with --format {f}; drop one of the two")
+        }
+        (Some(f), Some("csr")) if f != "csr" => {
+            anyhow::bail!("--weights csr conflicts with --format {f}; drop one of the two")
+        }
+        (Some(f), _) => Some(SparseFormat::parse(f)?),
+        (None, Some("csr")) => Some(SparseFormat::Csr),
+        (None, _) => None,
+    };
+    let serve_model = match format {
+        None => crate::serve::ServeModel::dense(&spec, &params),
+        Some(f) => {
+            let sp_hint = match (args.get("sparsity"), f) {
+                (Some(s), _) => Some(Sparsity::parse(s)?),
+                (None, SparseFormat::Csr) => None,
+                (None, _) => Some(Sparsity::Semi(2, 4)),
+            };
+            let m = crate::serve::ServeModel::sparse_as(&spec, &params, f, sp_hint)?;
             match m.density() {
                 Some(d) if d > 0.999 => crate::log_warn!(
-                    "serving CSR over dense weights (density {d:.3}); pass a pruned --ckpt"
+                    "serving {} over dense weights (density {d:.3}); pass a pruned --ckpt",
+                    m.format_label()
                 ),
-                Some(d) => eprintln!("serving CSR weights, density {d:.3}"),
+                Some(d) => eprintln!("serving {} weights, density {d:.3}", m.format_label()),
                 None => {}
             }
             m
         }
-        other => anyhow::bail!("unknown --weights '{other}' (dense|csr)"),
     };
     let cfg = crate::serve::EngineConfig {
         max_batch: args.usize_or("batch", 4)?,
@@ -304,8 +333,10 @@ pub fn serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `serve-bench`: tokens/s + latency for recompute vs KV-cached vs CSR
-/// decode, with greedy parity checked against `eval::generate`.
+/// `serve-bench`: tokens/s + latency for recompute vs KV-cached vs
+/// compressed decode (CSR, plus packed n:m side by side under
+/// `--format nm|auto`), with greedy parity checked against
+/// `eval::generate`.
 pub fn serve_bench(args: &Args) -> Result<()> {
     let mut lab = Lab::new()?;
     let smoke = args.has("smoke");
@@ -315,11 +346,15 @@ pub fn serve_bench(args: &Args) -> Result<()> {
     let corpus = args.get_or("corpus", "c4-syn").to_string();
     let params = load_or_train(&mut lab, args, &model, &corpus)?;
     let spec = lab.presets.model(&model)?.clone();
+    let format = SparseFormat::parse(args.get_or("format", "csr"))?;
+    // the nm axis needs an n:m pattern; 2:4 is the paper's hardware mode
+    let default_sparsity = if format == SparseFormat::Csr { "0.5" } else { "2:4" };
     let cfg = crate::serve::ServeBenchConfig {
         tokens: args.usize_or("tokens", if smoke { 16 } else { 32 })?,
         batch: args.usize_or("batch", 4)?,
         requests: args.usize_or("requests", if smoke { 4 } else { 8 })?,
-        sparsity: Sparsity::parse(args.get_or("sparsity", "0.5"))?,
+        sparsity: Sparsity::parse(args.get_or("sparsity", default_sparsity))?,
+        format,
     };
     let report = crate::serve::run_serve_bench(&spec, &params, &cfg)?;
     report.print();

@@ -6,8 +6,8 @@
 //!   prune     --model --corpus [--method --sparsity --mode --workers ...]
 //!   eval      --model --corpus [--ckpt]
 //!   zeroshot  --model --corpus [--ckpt --items]
-//!   serve     --model --corpus [--batch --queue --weights dense|csr ...]
-//!   serve-bench [--model --smoke --json path ...]
+//!   serve     --model --corpus [--batch --queue --format csr|nm|auto ...]
+//!   serve-bench [--model --smoke --format csr|nm|auto --json path ...]
 //!   pipeline  --model --corpus [--sparsity ...]   (train→prune×methods→eval)
 
 pub mod args;
@@ -60,11 +60,13 @@ COMMANDS:
   generate  --model M --corpus C    sample text from a (pruned) model
             [--ckpt path.fpt --prompt STR --tokens N --temp T]
   serve     --model M --corpus C    continuous-batching JSONL server
-            [--ckpt path.fpt --weights dense|csr --batch N --queue N]
+            [--ckpt path.fpt --format csr|nm|auto --sparsity S]
+            [--weights dense|csr --batch N --queue N]
             [--transcript out.jsonl --synthetic N --tokens N --temp T]
             (reads one JSON request per stdin line unless --synthetic)
   serve-bench                       tokens/s + p50/p99: full recompute vs
-            [--model M --smoke]     KV-cached vs CSR decode, greedy parity
+            [--model M --smoke]     KV-cached vs compressed decode (csr,
+            [--format csr|nm|auto]  plus packed n:m side by side), parity
             [--tokens N --batch N --requests N --sparsity S --json path]
   pipeline  --model M --corpus C    end-to-end: train → prune (all
             [--sparsity S]          methods) → perplexity table

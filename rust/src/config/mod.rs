@@ -8,4 +8,4 @@ pub mod run;
 
 pub use paths::repo_root;
 pub use presets::{CorpusCfg, FamilyKind, FistaCfg, ModelSpec, Presets};
-pub use run::{Engine, PruneMode, PruneOptions, Sparsity, TrainOptions, WarmStart};
+pub use run::{Engine, PruneMode, PruneOptions, SparseFormat, Sparsity, TrainOptions, WarmStart};

@@ -13,13 +13,23 @@ pub enum Sparsity {
 }
 
 impl Sparsity {
-    /// Parse "0.5", "50%", or "2:4".
+    /// Parse "0.5", "50%", or "2:4". Degenerate targets fail *here* with a
+    /// clear message instead of surfacing later as panics deep inside the
+    /// rounding hot loop: `m == 0` (empty groups), `n == 0` (an all-zero
+    /// matrix is not a pruning target), `n > m` (keeps more than the group
+    /// holds), fractions outside [0, 1), and non-finite fractions.
     pub fn parse(s: &str) -> Result<Sparsity> {
         if let Some((n, m)) = s.split_once(':') {
             let n: usize = n.trim().parse()?;
             let m: usize = m.trim().parse()?;
-            if n == 0 || m == 0 || n > m {
-                bail!("invalid n:m sparsity '{s}'");
+            if m == 0 {
+                bail!("invalid n:m sparsity '{s}': group size m must be >= 1");
+            }
+            if n == 0 {
+                bail!("invalid n:m sparsity '{s}': keeping 0 of {m} zeroes every weight");
+            }
+            if n > m {
+                bail!("invalid n:m sparsity '{s}': cannot keep {n} of a {m}-entry group");
             }
             return Ok(Sparsity::Semi(n, m));
         }
@@ -27,6 +37,9 @@ impl Sparsity {
         let mut x: f64 = v.parse()?;
         if s.contains('%') {
             x /= 100.0;
+        }
+        if !x.is_finite() {
+            bail!("sparsity fraction must be finite: '{s}'");
         }
         if !(0.0..1.0).contains(&x) {
             bail!("sparsity fraction must be in [0,1): '{s}'");
@@ -57,6 +70,41 @@ impl Sparsity {
                 }
             }
             Sparsity::Semi(n, m) => format!("{n}:{m}"),
+        }
+    }
+}
+
+/// Storage format for compressed (pruned) weight operators.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SparseFormat {
+    /// Generic compressed-sparse-row: any pattern, u32 column indices.
+    Csr,
+    /// Packed n:m semi-structured: per (row, m-group) exactly n values +
+    /// u8 in-group indices. Requires the weight to satisfy the n:m
+    /// pattern (constant-time group addressing, ~¼ the index memory of
+    /// CSR at 2:4).
+    Nm,
+    /// Per-operator choice: `Nm` when the weight satisfies the run's
+    /// `Sparsity::Semi` pattern (and the row length divides into full
+    /// m-groups), `Csr` otherwise.
+    Auto,
+}
+
+impl SparseFormat {
+    pub fn parse(s: &str) -> Result<SparseFormat> {
+        match s {
+            "csr" => Ok(SparseFormat::Csr),
+            "nm" => Ok(SparseFormat::Nm),
+            "auto" => Ok(SparseFormat::Auto),
+            other => bail!("unknown sparse format '{other}' (csr|nm|auto)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SparseFormat::Csr => "csr",
+            SparseFormat::Nm => "nm",
+            SparseFormat::Auto => "auto",
         }
     }
 }
@@ -218,5 +266,44 @@ mod tests {
         assert_eq!(Sparsity::parse("2 : 4").unwrap(), Sparsity::Semi(2, 4));
         assert!(Sparsity::parse("0:4").is_err());
         assert!(Sparsity::parse(":4").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_degenerate_targets_with_clear_errors() {
+        // every degenerate target fails at parse time, not as a panic
+        // deep inside the rounding loop, and says why
+        let err = Sparsity::parse("4:2").unwrap_err().to_string();
+        assert!(err.contains("cannot keep 4"), "{err}");
+        let err = Sparsity::parse("2:0").unwrap_err().to_string();
+        assert!(err.contains("m must be >= 1"), "{err}");
+        let err = Sparsity::parse("0:0").unwrap_err().to_string();
+        assert!(err.contains("m must be >= 1"), "{err}");
+        let err = Sparsity::parse("1.5").unwrap_err().to_string();
+        assert!(err.contains("[0,1)"), "{err}");
+        let err = Sparsity::parse("150%").unwrap_err().to_string();
+        assert!(err.contains("[0,1)"), "{err}");
+        let err = Sparsity::parse("-0.1").unwrap_err().to_string();
+        assert!(err.contains("[0,1)"), "{err}");
+        let err = Sparsity::parse("NaN").unwrap_err().to_string();
+        assert!(err.contains("finite"), "{err}");
+        let err = Sparsity::parse("inf").unwrap_err().to_string();
+        assert!(err.contains("finite"), "{err}");
+        // 100% would zero everything — rejected like any fraction >= 1
+        assert!(Sparsity::parse("100%").is_err());
+        // boundary values that must stay valid
+        assert_eq!(Sparsity::parse("0").unwrap(), Sparsity::Unstructured(0.0));
+        assert_eq!(Sparsity::parse("0.99").unwrap(), Sparsity::Unstructured(0.99));
+        assert_eq!(Sparsity::parse("1:1").unwrap(), Sparsity::Semi(1, 1));
+    }
+
+    #[test]
+    fn sparse_format_parse_and_label() {
+        for (s, f) in
+            [("csr", SparseFormat::Csr), ("nm", SparseFormat::Nm), ("auto", SparseFormat::Auto)]
+        {
+            assert_eq!(SparseFormat::parse(s).unwrap(), f);
+            assert_eq!(f.label(), s);
+        }
+        assert!(SparseFormat::parse("dense").is_err());
     }
 }

@@ -4,7 +4,16 @@
 //! * Unstructured s%: zero the s% entries of smallest |·| in the matrix
 //!   (paper: "the s% elements with the smallest absolute values in W*_K").
 //! * n:m semi-structured: in every group of m consecutive entries of a
-//!   row, keep the n of largest |·| (paper §2 / eq. 8).
+//!   row, keep the n of largest |·| (paper §2 / eq. 8). A row length that
+//!   is not a multiple of m leaves a *tail group* of `cols % m` entries;
+//!   it is treated as a smaller group — keep the `min(n, len)` of largest
+//!   |·| — rather than aborting mid-prune. `satisfies_sparsity` accepts
+//!   the same tail-group rule.
+//!
+//! All magnitude comparisons use `f32::total_cmp` on |·|, so the selection
+//! is deterministic (no order-dependence from incomparable NaNs) and NaN
+//! weights — a signal of an upstream solver problem — sort as the largest
+//! magnitudes and are never silently chosen over finite entries.
 
 use crate::config::{ModelSpec, Sparsity};
 use crate::model::params::ModelParams;
@@ -50,13 +59,13 @@ fn round_unstructured(w: &mut Tensor, s: f64) {
         return;
     }
     // Quickselect the k-th smallest |value| via an index permutation.
+    // total_cmp keeps the selection deterministic even with NaN inputs
+    // (NaN sorts above every finite magnitude, so it is never zeroed in
+    // place of a finite entry).
     let data = w.data_mut();
     let mut idx: Vec<u32> = (0..len as u32).collect();
     let (smallest, _, _) = idx.select_nth_unstable_by(k - 1, |&a, &b| {
-        data[a as usize]
-            .abs()
-            .partial_cmp(&data[b as usize].abs())
-            .unwrap_or(std::cmp::Ordering::Equal)
+        data[a as usize].abs().total_cmp(&data[b as usize].abs())
     });
     for &i in smallest.iter() {
         data[i as usize] = 0.0;
@@ -65,32 +74,35 @@ fn round_unstructured(w: &mut Tensor, s: f64) {
 }
 
 fn round_semi(w: &mut Tensor, n: usize, m: usize) {
-    assert!(n <= m && m > 0);
-    let cols = w.cols();
-    assert_eq!(cols % m, 0, "row length {cols} not divisible by group size {m}");
+    assert!(n <= m && m > 0, "degenerate {n}:{m} pattern (Sparsity::parse rejects these)");
     let rows = w.rows();
+    let cols = w.cols();
     let data = w.data_mut();
-    let drop = m - n;
-    let mut order: Vec<usize> = vec![0; m];
+    let mut order: Vec<usize> = Vec::with_capacity(m);
     for r in 0..rows {
         let row = &mut data[r * cols..(r + 1) * cols];
-        for g in (0..cols).step_by(m) {
-            let grp = &mut row[g..g + m];
-            for (i, o) in order.iter_mut().enumerate() {
-                *o = i;
+        // chunks_mut yields the ragged tail (cols % m entries) as a final
+        // smaller group: keep the min(n, len) of largest |·| there too.
+        for grp in row.chunks_mut(m) {
+            let keep = n.min(grp.len());
+            if keep == grp.len() {
+                continue;
             }
-            order.sort_unstable_by(|&a, &b| {
-                grp[a].abs().partial_cmp(&grp[b].abs()).unwrap_or(std::cmp::Ordering::Equal)
-            });
-            for &i in &order[..drop] {
+            order.clear();
+            order.extend(0..grp.len());
+            order.sort_unstable_by(|&a, &b| grp[a].abs().total_cmp(&grp[b].abs()));
+            for &i in &order[..grp.len() - keep] {
                 grp[i] = 0.0;
             }
         }
     }
 }
 
-/// Check a matrix satisfies the sparsity pattern (used by tests and the
-/// scheduler's post-conditions).
+/// Check a matrix satisfies the sparsity pattern (used by tests, the
+/// scheduler's post-conditions, and `sparse::NmMatrix::from_dense`). The
+/// n:m check applies the same tail-group rule as [`round_in_place`]: a
+/// final group of `cols % m` entries may hold at most `min(n, len)`
+/// nonzeros (trivially at most `len`, so the bound below covers it).
 pub fn satisfies_sparsity(w: &Tensor, sp: Sparsity) -> bool {
     match sp {
         Sparsity::Unstructured(s) => {
@@ -98,10 +110,10 @@ pub fn satisfies_sparsity(w: &Tensor, sp: Sparsity) -> bool {
             w.data().iter().filter(|&&x| x == 0.0).count() >= need
         }
         Sparsity::Semi(n, m) => {
-            let cols = w.cols();
-            if cols % m != 0 {
+            if m == 0 {
                 return false;
             }
+            let cols = w.cols();
             w.data()
                 .chunks(cols)
                 .all(|row| row.chunks(m).all(|g| g.iter().filter(|&&x| x != 0.0).count() <= n))
@@ -165,6 +177,59 @@ mod tests {
         assert!((r14.sparsity() - 0.75).abs() < 1e-9);
         let r44 = round_to_sparsity(&w, Sparsity::Semi(4, 4));
         assert_eq!(&r44, &w, "4:4 must be identity");
+    }
+
+    #[test]
+    fn semi_ragged_tail_is_a_smaller_group() {
+        // cols = 10, m = 4: two full groups + a tail of 2. This used to
+        // abort with an assert mid-prune; now the tail keeps min(n, 2).
+        let w = randw(7, 3, 10);
+        let r = round_to_sparsity(&w, Sparsity::Semi(2, 4));
+        assert!(satisfies_sparsity(&r, Sparsity::Semi(2, 4)));
+        for row in 0..3 {
+            // full groups keep exactly 2 (random data: no exact zeros)
+            for g in [0usize, 4] {
+                let kept = (0..4).filter(|&j| r.at2(row, g + j) != 0.0).count();
+                assert_eq!(kept, 2, "row {row} group {g}");
+            }
+            // the tail group of 2 keeps min(n, 2) = 2 → untouched
+            for j in 8..10 {
+                assert_eq!(r.at2(row, j), w.at2(row, j), "row {row} tail col {j}");
+            }
+        }
+        // a 1:4 pattern prunes the tail down to its largest entry
+        let r14 = round_to_sparsity(&w, Sparsity::Semi(1, 4));
+        assert!(satisfies_sparsity(&r14, Sparsity::Semi(1, 4)));
+        for row in 0..3 {
+            let kept = (8..10).filter(|&j| r14.at2(row, j) != 0.0).count();
+            assert_eq!(kept, 1, "row {row} tail");
+        }
+    }
+
+    #[test]
+    fn nan_inputs_round_deterministically() {
+        // Regression: partial_cmp(..).unwrap_or(Equal) made the selection
+        // order-dependent with NaN present. total_cmp sorts NaN above all
+        // finite magnitudes, so the k smallest *finite* entries are zeroed
+        // and the NaN (an upstream-solver red flag) survives visibly.
+        let w = Tensor::from_vec(vec![1, 8], vec![0.1, f32::NAN, -0.2, 3.0, 0.05, -4.0, 0.3, 1.0]);
+        let r = round_to_sparsity(&w, Sparsity::Unstructured(0.5));
+        assert_eq!(r.data().iter().filter(|&&x| x == 0.0).count(), 4);
+        for j in [0usize, 2, 4, 6] {
+            assert_eq!(r.data()[j], 0.0, "entry {j} is among the 4 smallest |·|");
+        }
+        assert!(r.data()[1].is_nan(), "NaN must survive, not displace a finite entry");
+        assert_eq!(r.data()[3], 3.0);
+        assert_eq!(r.data()[5], -4.0);
+        assert_eq!(r.data()[7], 1.0);
+
+        // same contract for the n:m path, group by group
+        let w = Tensor::from_vec(vec![1, 8], vec![0.1, f32::NAN, -0.2, 3.0, 0.05, -4.0, 0.3, 1.0]);
+        let r = round_to_sparsity(&w, Sparsity::Semi(2, 4));
+        assert!(r.data()[1].is_nan());
+        assert_eq!(&r.data()[..1], &[0.0]);
+        assert_eq!(&r.data()[2..4], &[0.0, 3.0]);
+        assert_eq!(&r.data()[4..], &[0.0, -4.0, 0.0, 1.0]);
     }
 
     #[test]

@@ -15,25 +15,26 @@ use std::collections::BTreeMap;
 
 use anyhow::Result;
 
-use crate::config::{FamilyKind, ModelSpec};
+use crate::config::{FamilyKind, ModelSpec, SparseFormat, Sparsity};
 use crate::model::forward;
 use crate::model::ops::pruned_ops;
 use crate::model::params::ModelParams;
-use crate::sparse::CsrMatrix;
+use crate::sparse::SparseOp;
 use crate::tensor::{kernels, par, Tensor};
 
 use super::kv::KvBlock;
 
 /// Weights prepared for serving: per-layer parameter maps resolved once
-/// (no per-token name formatting), plus optional CSR compression of the
-/// pruned operators for the sparse decode path.
+/// (no per-token name formatting), plus optional compression of the
+/// pruned operators — CSR or packed n:m per `config::SparseFormat` — for
+/// the sparse decode path.
 pub struct ServeModel<'p> {
     pub spec: ModelSpec,
     params: &'p ModelParams,
     /// Per-layer bare-name → tensor map in capture order.
     layers: Vec<BTreeMap<String, &'p Tensor>>,
-    /// Per-layer bare-name → CSR operator (sparse serving only).
-    csr: Option<Vec<BTreeMap<String, CsrMatrix>>>,
+    /// Per-layer bare-name → compressed operator (sparse serving only).
+    sparse: Option<Vec<BTreeMap<String, SparseOp>>>,
 }
 
 fn resolve_layers<'p>(
@@ -63,27 +64,40 @@ impl<'p> ServeModel<'p> {
             spec: spec.clone(),
             params,
             layers: resolve_layers(spec, params),
-            csr: None,
+            sparse: None,
         }
     }
 
     /// Compress every pruned operator to CSR and serve those through the
     /// sparse decode kernels (norms/embeddings/attention stay dense).
     pub fn sparse(spec: &ModelSpec, params: &'p ModelParams) -> Result<ServeModel<'p>> {
-        let mut csr = Vec::with_capacity(spec.layers);
+        ServeModel::sparse_as(spec, params, SparseFormat::Csr, None)
+    }
+
+    /// Compress every pruned operator with an explicit format
+    /// (`Csr` | `Nm` | per-operator `Auto`) and serve those through the
+    /// matching decode kernels. `sp` is the sparsity pattern hint the
+    /// `Nm` (required) and `Auto` formats check weights against.
+    pub fn sparse_as(
+        spec: &ModelSpec,
+        params: &'p ModelParams,
+        format: SparseFormat,
+        sp: Option<Sparsity>,
+    ) -> Result<ServeModel<'p>> {
+        let mut sparse = Vec::with_capacity(spec.layers);
         for li in 0..spec.layers {
             let mut ops = BTreeMap::new();
             for op in pruned_ops(spec) {
                 let w = params.req(&format!("l{li}.{}", op.name))?;
-                ops.insert(op.name.to_string(), CsrMatrix::from_dense(w)?);
+                ops.insert(op.name.to_string(), SparseOp::compress(w, format, sp)?);
             }
-            csr.push(ops);
+            sparse.push(ops);
         }
         Ok(ServeModel {
             spec: spec.clone(),
             params,
             layers: resolve_layers(spec, params),
-            csr: Some(csr),
+            sparse: Some(sparse),
         })
     }
 
@@ -92,18 +106,54 @@ impl<'p> ServeModel<'p> {
     }
 
     pub fn is_sparse(&self) -> bool {
-        self.csr.is_some()
+        self.sparse.is_some()
     }
 
-    /// nnz fraction across the CSR operators (`None` for dense serving).
+    /// nnz fraction across the compressed operators (`None` for dense
+    /// serving).
     pub fn density(&self) -> Option<f64> {
-        let csr = self.csr.as_ref()?;
-        let (nnz, total) = csr
+        let sparse = self.sparse.as_ref()?;
+        let (nnz, total) = sparse
             .iter()
             .flat_map(|l| l.values())
-            .map(|c| (c.nnz(), c.rows * c.cols))
+            .map(|c| (c.nnz(), c.rows() * c.cols()))
             .fold((0usize, 0usize), |(a, b), (x, y)| (a + x, b + y));
         Some(nnz as f64 / total.max(1) as f64)
+    }
+
+    /// Compressed bytes across the compressed operators (`None` for dense
+    /// serving) — what the serve-bench storage column reports.
+    pub fn storage_bytes(&self) -> Option<usize> {
+        let sparse = self.sparse.as_ref()?;
+        Some(sparse.iter().flat_map(|l| l.values()).map(|c| c.storage_bytes()).sum())
+    }
+
+    /// Compressed vs dense bytes over the compressed operators.
+    pub fn storage_ratio(&self) -> Option<f64> {
+        let sparse = self.sparse.as_ref()?;
+        let (sp_b, dense_b) = sparse
+            .iter()
+            .flat_map(|l| l.values())
+            .map(|c| (c.storage_bytes(), 4 * c.rows() * c.cols()))
+            .fold((0usize, 0usize), |(a, b), (x, y)| (a + x, b + y));
+        Some(sp_b as f64 / dense_b.max(1) as f64)
+    }
+
+    /// "dense", "csr", "nm", or "csr+nm" (mixed `Auto` dispatch).
+    pub fn format_label(&self) -> &'static str {
+        let Some(sparse) = self.sparse.as_ref() else { return "dense" };
+        let (mut csr, mut nm) = (false, false);
+        for op in sparse.iter().flat_map(|l| l.values()) {
+            match op {
+                SparseOp::Csr(_) => csr = true,
+                SparseOp::Nm(_) => nm = true,
+            }
+        }
+        match (csr, nm) {
+            (true, true) => "csr+nm",
+            (false, true) => "nm",
+            _ => "csr",
+        }
     }
 
     fn lp(&self, layer: usize, name: &str) -> &Tensor {
@@ -112,14 +162,15 @@ impl<'p> ServeModel<'p> {
             .unwrap_or_else(|| panic!("layer {layer} param '{name}'"))
     }
 
-    /// X @ Wᵀ through CSR when this operator is compressed, the skinny
-    /// dense kernel otherwise (parallel over weight rows — the batch
+    /// X @ Wᵀ through the compressed operator when present, the skinny
+    /// dense kernel otherwise (all parallel over weight rows — the batch
     /// dimension is 1–8 at decode time). Same contract as the `linop` in
-    /// `model::forward`: the dense kernel is bitwise equal to `matmul_nt`,
-    /// CSR value-equal (zeros skipped; the sum is unchanged).
+    /// `model::forward`: the dense kernel is bitwise equal to `matmul_nt`;
+    /// CSR and packed n:m are value-equal (skipped zeros and padded ±0.0
+    /// terms cannot change a sum's value).
     fn linop(&self, layer: usize, name: &str, x: &Tensor) -> Tensor {
-        if let Some(csr) = &self.csr {
-            if let Some(c) = csr[layer].get(name) {
+        if let Some(sparse) = &self.sparse {
+            if let Some(c) = sparse[layer].get(name) {
                 return c.matmul_t_par(x);
             }
         }
@@ -439,5 +490,26 @@ mod tests {
         let density = model.density().unwrap();
         assert!((density - 0.5).abs() < 0.02, "density {density}");
         assert!(ServeModel::dense(&spec, &params).density().is_none());
+    }
+
+    #[test]
+    fn nm_serve_model_is_smaller_than_csr() {
+        let presets = Presets::load(&repo_root().unwrap()).unwrap();
+        let spec = presets.model("topt-s1").unwrap().clone();
+        let sp = crate::config::Sparsity::Semi(2, 4);
+        let params =
+            crate::pruner::round_model_to_sparsity(&spec, &init_params(&spec, 23), sp).unwrap();
+        let csr = ServeModel::sparse(&spec, &params).unwrap();
+        let nm = ServeModel::sparse_as(&spec, &params, SparseFormat::Nm, Some(sp)).unwrap();
+        assert_eq!(csr.format_label(), "csr");
+        assert_eq!(nm.format_label(), "nm");
+        assert_eq!(ServeModel::dense(&spec, &params).format_label(), "dense");
+        let (cb, nb) = (csr.storage_bytes().unwrap(), nm.storage_bytes().unwrap());
+        assert!(nb < cb, "nm {nb} bytes vs csr {cb} bytes");
+        assert!(nm.storage_ratio().unwrap() < csr.storage_ratio().unwrap());
+        // auto on 2:4-rounded weights packs everything
+        let auto = ServeModel::sparse_as(&spec, &params, SparseFormat::Auto, Some(sp)).unwrap();
+        assert_eq!(auto.format_label(), "nm");
+        assert_eq!(auto.storage_bytes(), nm.storage_bytes());
     }
 }

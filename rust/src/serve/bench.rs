@@ -1,15 +1,16 @@
-//! The serve-bench core: tokens/s and latency percentiles for the three
-//! decode paths — full-recompute `eval::generate`, KV-cached dense decode,
-//! and KV-cached CSR decode on pruned weights — plus a greedy-parity check
+//! The serve-bench core: tokens/s and latency percentiles for the decode
+//! paths — full-recompute `eval::generate`, KV-cached dense decode, and
+//! KV-cached compressed decode on pruned weights (CSR always; packed n:m
+//! side by side when the config asks for it) — plus a greedy-parity check
 //! that every served output equals its single-request `eval::generate`
 //! reference. Shared by the `serve-bench` CLI command and
 //! `benches/serve_decode.rs`.
 
 use std::collections::BTreeMap;
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
-use crate::config::{ModelSpec, Sparsity};
+use crate::config::{ModelSpec, SparseFormat, Sparsity};
 use crate::eval::generate::{generate, GenOptions};
 use crate::metrics::stats::percentile;
 use crate::metrics::TableBuilder;
@@ -29,8 +30,14 @@ pub struct ServeBenchConfig {
     pub batch: usize,
     /// Synthetic requests for the batched paths.
     pub requests: usize,
-    /// Pruning level for the CSR paths.
+    /// Pruning level for the compressed paths.
     pub sparsity: Sparsity,
+    /// Compressed format axis: `Csr` measures CSR only; `Nm`/`Auto` also
+    /// measure the packed n:m paths over the same pruned weights so the
+    /// report shows csr-vs-nm tokens/s and storage side by side (`Nm`
+    /// requires `sparsity` to be `Sparsity::Semi`; `Auto` degrades to
+    /// CSR-only otherwise).
+    pub format: SparseFormat,
 }
 
 impl Default for ServeBenchConfig {
@@ -40,6 +47,7 @@ impl Default for ServeBenchConfig {
             batch: 4,
             requests: 8,
             sparsity: Sparsity::Unstructured(0.5),
+            format: SparseFormat::Csr,
         }
     }
 }
@@ -62,11 +70,19 @@ pub struct PathStats {
 pub struct ServeBenchReport {
     pub model: String,
     pub sparsity_label: String,
+    /// The requested format axis ("csr" | "nm" | "auto").
+    pub format_label: String,
     pub paths: Vec<PathStats>,
     /// KV-cached dense (batch 1) vs full-recompute tokens/s.
     pub kv_speedup: f64,
     /// CSR vs dense KV-cached decode tokens/s at the same batch width.
     pub sparse_speedup: f64,
+    /// Packed n:m vs CSR decode tokens/s at batch 1 (nm paths only).
+    pub nm_speedup: Option<f64>,
+    /// CSR bytes / dense bytes over the compressed operators.
+    pub csr_storage_ratio: f64,
+    /// Packed n:m bytes / dense bytes (nm paths only).
+    pub nm_storage_ratio: Option<f64>,
     /// Every served greedy output equalled its `eval::generate` reference.
     pub parity_ok: bool,
 }
@@ -75,7 +91,10 @@ impl ServeBenchReport {
     /// Paper-style ASCII table.
     pub fn print(&self) {
         let mut t = TableBuilder::new(
-            &format!("serve-bench ({}, CSR @ {})", self.model, self.sparsity_label),
+            &format!(
+                "serve-bench ({}, {} @ {})",
+                self.model, self.format_label, self.sparsity_label
+            ),
             &["path", "reqs", "tokens", "tok/s", "p50 ms", "p99 ms"],
         );
         for p in &self.paths {
@@ -95,15 +114,31 @@ impl ServeBenchReport {
             self.sparse_speedup,
             if self.parity_ok { "ok" } else { "MISMATCH" }
         );
+        match (self.nm_speedup, self.nm_storage_ratio) {
+            (Some(spd), Some(ratio)) => println!(
+                "packed n:m vs CSR decode: {spd:.2}x   storage/dense: csr {:.3}, nm {ratio:.3}",
+                self.csr_storage_ratio
+            ),
+            _ => println!("storage/dense: csr {:.3}", self.csr_storage_ratio),
+        }
     }
 
-    /// JSON object for BENCH_serve.json (the CI perf-trajectory record).
+    /// JSON object for BENCH_serve.json / BENCH_nm.json (the CI
+    /// perf-trajectory record).
     pub fn to_json(&self) -> Json {
         let mut m = BTreeMap::new();
         m.insert("model".to_string(), Json::Str(self.model.clone()));
         m.insert("sparsity".to_string(), Json::Str(self.sparsity_label.clone()));
+        m.insert("format".to_string(), Json::Str(self.format_label.clone()));
         m.insert("kv_speedup".to_string(), Json::Num(round3(self.kv_speedup)));
         m.insert("sparse_speedup".to_string(), Json::Num(round3(self.sparse_speedup)));
+        m.insert("csr_storage_ratio".to_string(), Json::Num(round3(self.csr_storage_ratio)));
+        if let Some(s) = self.nm_speedup {
+            m.insert("nm_speedup".to_string(), Json::Num(round3(s)));
+        }
+        if let Some(r) = self.nm_storage_ratio {
+            m.insert("nm_storage_ratio".to_string(), Json::Num(round3(r)));
+        }
         m.insert("parity_ok".to_string(), Json::Bool(self.parity_ok));
         let mut paths = BTreeMap::new();
         for p in &self.paths {
@@ -125,12 +160,13 @@ fn round3(x: f64) -> f64 {
 }
 
 /// Deterministic synthetic prompts (distinct so batched outputs are
-/// checked against distinct references).
-fn synthetic_prompts(n: usize) -> Vec<String> {
+/// checked against distinct references). Shared with
+/// `bench_support::grid::run_serve_format_grid`.
+pub(crate) fn synthetic_prompts(n: usize) -> Vec<String> {
     (0..n).map(|i| format!("req {i}: the ")).collect()
 }
 
-fn requests_for(prompts: &[String], tokens: usize) -> Vec<ServeRequest> {
+pub(crate) fn requests_for(prompts: &[String], tokens: usize) -> Vec<ServeRequest> {
     prompts
         .iter()
         .enumerate()
@@ -143,6 +179,33 @@ fn requests_for(prompts: &[String], tokens: usize) -> Vec<ServeRequest> {
             stop: None,
         })
         .collect()
+}
+
+/// The parity oracle: id → greedy `eval::generate` text over `params`,
+/// one entry per request, plus per-request wall latency in ms (the
+/// full-recompute timing column). Shared by [`run_serve_bench`] and
+/// `bench_support::grid::run_serve_format_grid` so the oracle options
+/// can never drift between the parity gates.
+pub(crate) fn greedy_references(
+    spec: &ModelSpec,
+    params: &ModelParams,
+    requests: &[ServeRequest],
+    prompts: &[String],
+) -> (BTreeMap<String, String>, Vec<f64>) {
+    let mut texts = BTreeMap::new();
+    let mut lat_ms = Vec::new();
+    for (r, p) in requests.iter().zip(prompts) {
+        let t0 = std::time::Instant::now();
+        let text = generate(
+            spec,
+            params,
+            p,
+            &GenOptions { max_tokens: r.max_tokens, temperature: 0.0, seed: r.seed },
+        );
+        lat_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        texts.insert(r.id.clone(), text);
+    }
+    (texts, lat_ms)
 }
 
 /// Serve `requests` through a fresh engine; returns (stats, id → text).
@@ -197,8 +260,56 @@ fn run_engine(
     ))
 }
 
+/// One compressed format measured over one set of pruned weights: batch-1
+/// and batch-B engine passes, storage footprint, greedy parity against the
+/// caller's full-recompute references. The shared core of
+/// [`run_serve_bench`]'s compressed paths and the
+/// `bench_support::grid::run_serve_format_grid` format axis.
+pub struct FormatStats {
+    /// What actually got compressed ("csr" | "nm" | "csr+nm" for Auto).
+    pub label: &'static str,
+    pub b1: PathStats,
+    pub bb: PathStats,
+    pub storage_bytes: usize,
+    /// Compressed bytes / dense bytes over the pruned operators.
+    pub storage_ratio: f64,
+    pub parity_ok: bool,
+}
+
+/// Serve `requests` through a fresh engine per batch width over `pruned`
+/// weights compressed as `format`, and compare greedy outputs to
+/// `reference` (id → text from `eval::generate` over the same weights).
+pub fn measure_sparse_format(
+    spec: &ModelSpec,
+    pruned: &ModelParams,
+    reference: &BTreeMap<String, String>,
+    requests: &[ServeRequest],
+    batch: usize,
+    format: SparseFormat,
+    sp: Option<Sparsity>,
+) -> Result<FormatStats> {
+    let model = ServeModel::sparse_as(spec, pruned, format, sp)?;
+    let label = model.format_label();
+    let (b1, texts1) = run_engine(&model, 1, &format!("kv {label} b=1"), requests)?;
+    let (bb, textsb) = run_engine(&model, batch, &format!("kv {label} b={batch}"), requests)?;
+    let mut parity_ok = true;
+    for texts in [&texts1, &textsb] {
+        for (id, text) in texts {
+            parity_ok &= reference.get(id) == Some(text);
+        }
+    }
+    Ok(FormatStats {
+        label,
+        b1,
+        bb,
+        storage_bytes: model.storage_bytes().unwrap_or(0),
+        storage_ratio: model.storage_ratio().unwrap_or(1.0),
+        parity_ok,
+    })
+}
+
 /// Measure every path and assemble the report. `dense` should be the
-/// weights to serve; the CSR paths run on a copy pruned to
+/// weights to serve; the compressed paths run on a copy pruned to
 /// `cfg.sparsity` via magnitude rounding (weight quality is irrelevant
 /// for throughput, identical outputs are still parity-checked).
 pub fn run_serve_bench(
@@ -207,25 +318,19 @@ pub fn run_serve_bench(
     cfg: &ServeBenchConfig,
 ) -> Result<ServeBenchReport> {
     ensure!(cfg.tokens >= 1 && cfg.batch >= 1 && cfg.requests >= 1, "bench sizes must be >= 1");
+    if cfg.format == SparseFormat::Nm && !matches!(cfg.sparsity, Sparsity::Semi(..)) {
+        bail!(
+            "the nm format axis needs an n:m sparsity (e.g. 2:4), got {}",
+            cfg.sparsity.label()
+        );
+    }
     let prompts = synthetic_prompts(cfg.requests);
     let requests = requests_for(&prompts, cfg.tokens);
     let mut parity_ok = true;
 
     // references + full-recompute timing: eval::generate per request
     let start = std::time::Instant::now();
-    let mut reference = BTreeMap::new();
-    let mut ref_lat = Vec::new();
-    for (r, p) in requests.iter().zip(&prompts) {
-        let t0 = std::time::Instant::now();
-        let text = generate(
-            spec,
-            dense,
-            p,
-            &GenOptions { max_tokens: r.max_tokens, temperature: 0.0, seed: r.seed },
-        );
-        ref_lat.push(t0.elapsed().as_secs_f64() * 1e3);
-        reference.insert(r.id.clone(), text);
-    }
+    let (reference, ref_lat) = greedy_references(spec, dense, &requests, &prompts);
     let recompute_wall = start.elapsed().as_secs_f64();
     let recompute_tokens = cfg.tokens * cfg.requests;
     let recompute = PathStats {
@@ -249,39 +354,59 @@ pub fn run_serve_bench(
         }
     }
 
-    // CSR on pruned weights, batch 1 and batch B; parity vs the
-    // full-recompute generate over the same pruned weights
+    // compressed formats on pruned weights, batch 1 and batch B; parity
+    // vs the full-recompute generate over the same pruned weights
     let pruned = round_model_to_sparsity(spec, dense, cfg.sparsity)?;
-    let mut pruned_ref = BTreeMap::new();
-    for (r, p) in requests.iter().zip(&prompts) {
-        let text = generate(
+    let (pruned_ref, _) = greedy_references(spec, &pruned, &requests, &prompts);
+    let pruned_dense_model = ServeModel::dense(spec, &pruned);
+    let (kv_pruned1, _) = run_engine(&pruned_dense_model, 1, "kv pruned-dense b=1", &requests)?;
+    let csr = measure_sparse_format(
+        spec,
+        &pruned,
+        &pruned_ref,
+        &requests,
+        cfg.batch,
+        SparseFormat::Csr,
+        None,
+    )?;
+    parity_ok &= csr.parity_ok;
+    // the nm axis: same pruned weights through the packed format (Auto
+    // silently stays CSR-only when the sparsity has no n:m pattern)
+    let nm = if cfg.format != SparseFormat::Csr && matches!(cfg.sparsity, Sparsity::Semi(..)) {
+        let s = measure_sparse_format(
             spec,
             &pruned,
-            p,
-            &GenOptions { max_tokens: r.max_tokens, temperature: 0.0, seed: r.seed },
-        );
-        pruned_ref.insert(r.id.clone(), text);
-    }
-    let pruned_dense_model = ServeModel::dense(spec, &pruned);
-    let sparse_model = ServeModel::sparse(spec, &pruned)?;
-    let (kv_pruned1, _) = run_engine(&pruned_dense_model, 1, "kv pruned-dense b=1", &requests)?;
-    let (csr1, csr_texts1) = run_engine(&sparse_model, 1, "kv csr b=1", &requests)?;
-    let (csrb, csr_textsb) =
-        run_engine(&sparse_model, cfg.batch, &format!("kv csr b={}", cfg.batch), &requests)?;
-    for texts in [&csr_texts1, &csr_textsb] {
-        for (id, text) in texts {
-            parity_ok &= pruned_ref.get(id) == Some(text);
-        }
-    }
+            &pruned_ref,
+            &requests,
+            cfg.batch,
+            cfg.format,
+            Some(cfg.sparsity),
+        )?;
+        parity_ok &= s.parity_ok;
+        Some(s)
+    } else {
+        None
+    };
 
     let kv_speedup = kv1.tokens_per_s / recompute.tokens_per_s.max(1e-12);
-    let sparse_speedup = csr1.tokens_per_s / kv_pruned1.tokens_per_s.max(1e-12);
+    let sparse_speedup = csr.b1.tokens_per_s / kv_pruned1.tokens_per_s.max(1e-12);
+    let nm_speedup = nm.as_ref().map(|s| s.b1.tokens_per_s / csr.b1.tokens_per_s.max(1e-12));
+    let nm_storage_ratio = nm.as_ref().map(|s| s.storage_ratio);
+    let mut paths = vec![recompute, kv1, kvb, kv_pruned1, csr.b1.clone(), csr.bb.clone()];
+    if let Some(s) = &nm {
+        paths.push(s.b1.clone());
+        paths.push(s.bb.clone());
+    }
     Ok(ServeBenchReport {
         model: spec.name(),
         sparsity_label: cfg.sparsity.label(),
-        paths: vec![recompute, kv1, kvb, kv_pruned1, csr1, csrb],
+        format_label: cfg.format.label().to_string(),
+        paths,
         kv_speedup,
         sparse_speedup,
+        nm_speedup,
+        csr_storage_ratio: csr.storage_ratio,
+        nm_storage_ratio,
         parity_ok,
     })
 }
@@ -302,6 +427,7 @@ mod tests {
             batch: 2,
             requests: 2,
             sparsity: Sparsity::Unstructured(0.5),
+            format: SparseFormat::Csr,
         };
         let report = run_serve_bench(&spec, &params, &cfg).unwrap();
         assert!(report.parity_ok, "served outputs diverged from eval::generate");
@@ -310,9 +436,49 @@ mod tests {
             assert_eq!(p.total_tokens, 12, "{}", p.label);
             assert!(p.tokens_per_s > 0.0);
         }
+        assert!(report.nm_speedup.is_none());
         let j = report.to_json().to_string_compact();
         let v = Json::parse(&j).unwrap();
         assert_eq!(v.get("parity_ok").unwrap().as_bool(), Some(true));
         assert!(v.get("paths").unwrap().get("kv dense b=1").is_some());
+        assert!(v.get("nm_speedup").is_none());
+    }
+
+    #[test]
+    fn nm_axis_reports_both_formats() {
+        let presets = Presets::load(&repo_root().unwrap()).unwrap();
+        let spec = presets.model("topt-s1").unwrap().clone();
+        let params = init_params(&spec, 31);
+        let cfg = ServeBenchConfig {
+            tokens: 6,
+            batch: 2,
+            requests: 2,
+            sparsity: Sparsity::Semi(2, 4),
+            format: SparseFormat::Nm,
+        };
+        let report = run_serve_bench(&spec, &params, &cfg).unwrap();
+        assert!(report.parity_ok, "served outputs diverged from eval::generate");
+        assert_eq!(report.paths.len(), 8);
+        let labels: Vec<&str> = report.paths.iter().map(|p| p.label.as_str()).collect();
+        assert!(labels.contains(&"kv csr b=1"), "{labels:?}");
+        assert!(labels.contains(&"kv nm b=1"), "{labels:?}");
+        // the packed format must be strictly smaller than CSR at 2:4
+        let nm_ratio = report.nm_storage_ratio.unwrap();
+        let csr_ratio = report.csr_storage_ratio;
+        assert!(nm_ratio < csr_ratio, "nm {nm_ratio} vs csr {csr_ratio}");
+        assert!(report.nm_speedup.unwrap() > 0.0);
+        let j = report.to_json().to_string_compact();
+        let v = Json::parse(&j).unwrap();
+        assert_eq!(v.get("format").unwrap().as_str(), Some("nm"));
+        assert!(v.get("nm_speedup").unwrap().as_f64().is_some());
+        assert!(v.get("paths").unwrap().get("kv nm b=2").is_some());
+
+        // nm format without an n:m sparsity is a config error
+        let bad = ServeBenchConfig {
+            sparsity: Sparsity::Unstructured(0.5),
+            format: SparseFormat::Nm,
+            ..ServeBenchConfig::default()
+        };
+        assert!(run_serve_bench(&spec, &params, &bad).is_err());
     }
 }

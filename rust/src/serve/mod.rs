@@ -10,8 +10,10 @@
 //! * [`batch`] — the batched incremental decode step: every active slot
 //!   advances one token per model forward, O(1) layer passes per token
 //!   instead of the O(seq) full recompute in `eval::generate`. Pruned
-//!   operators run through the parallel CSR kernels
-//!   (`tensor::kernels::csr_matmul_t`) when serving sparse.
+//!   operators run through the parallel compressed kernels when serving
+//!   sparse — CSR (`tensor::kernels::csr_matmul_t`) or packed n:m
+//!   (`tensor::kernels::nm_matmul_t`), chosen per operator by
+//!   `config::SparseFormat`.
 //! * [`engine`] — continuous batching: admission control, a bounded
 //!   request queue, join-on-arrival/retire-on-EOS scheduling, mid-stream
 //!   abort, and per-request seeded sampling identical to
@@ -34,7 +36,9 @@ pub mod kv;
 pub mod request;
 
 pub use batch::ServeModel;
-pub use bench::{run_serve_bench, ServeBenchConfig, ServeBenchReport};
+pub use bench::{
+    measure_sparse_format, run_serve_bench, FormatStats, ServeBenchConfig, ServeBenchReport,
+};
 pub use engine::{Engine, EngineConfig, EngineStats};
 pub use kv::{KvBlock, KvPool};
 pub use request::{FinishReason, ServeRequest, ServeResponse};

@@ -1,62 +1,180 @@
-//! Sparse model forward: every pruned linear operator runs through CSR
-//! kernels; norms, attention and embeddings reuse the dense substrate.
-//! Numerically identical to `model::forward` (zeros contribute nothing) —
-//! asserted in tests — but the compute scales with nnz.
+//! Sparse model forward: every pruned linear operator runs through a
+//! compressed backend — generic CSR or the packed n:m format — while
+//! norms, attention and embeddings reuse the dense substrate. Numerically
+//! identical to `model::forward` (zeros contribute nothing) — asserted in
+//! tests — but the compute scales with nnz.
+//!
+//! Format dispatch (`config::SparseFormat`):
+//! * `Csr`  — every operator compressed to [`CsrMatrix`] (any pattern).
+//! * `Nm`   — every operator packed to [`NmMatrix`]; requires the run's
+//!   sparsity to be `Sparsity::Semi` and every weight to satisfy it.
+//! * `Auto` — per operator: packed n:m when the weight satisfies the
+//!   run's `Semi(n, m)` pattern with full groups (`cols % m == 0`,
+//!   `m <= 256`), CSR otherwise.
 
 use std::collections::BTreeMap;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use crate::config::ModelSpec;
+use crate::config::{ModelSpec, SparseFormat, Sparsity};
 use crate::model::forward::layer_forward;
 use crate::model::ops::pruned_ops;
 use crate::model::params::ModelParams;
 use crate::tensor::Tensor;
 
 use super::csr::CsrMatrix;
+use super::nm::NmMatrix;
 
-/// A model with its pruned operators pre-compressed to CSR.
+/// One compressed pruned operator: the per-weight dispatch point shared
+/// by the measure-only forward here and the serving decode path.
+#[derive(Clone, Debug)]
+pub enum SparseOp {
+    Csr(CsrMatrix),
+    Nm(NmMatrix),
+}
+
+impl SparseOp {
+    /// Compress one weight according to `format` (see module docs).
+    pub fn compress(w: &Tensor, format: SparseFormat, sp: Option<Sparsity>) -> Result<SparseOp> {
+        match format {
+            SparseFormat::Csr => Ok(SparseOp::Csr(CsrMatrix::from_dense(w)?)),
+            SparseFormat::Nm => match sp {
+                Some(Sparsity::Semi(n, m)) => Ok(SparseOp::Nm(NmMatrix::from_dense(w, n, m)?)),
+                Some(other) => {
+                    bail!("nm format needs an n:m sparsity, got {}", other.label())
+                }
+                None => bail!("nm format needs the run's n:m sparsity pattern"),
+            },
+            SparseFormat::Auto => {
+                // one source of truth for nm eligibility: from_dense's own
+                // validation (pattern satisfied, full groups, m ≤ 256);
+                // any rejection falls back to CSR
+                if let Some(Sparsity::Semi(n, m)) = sp {
+                    if let Ok(nm) = NmMatrix::from_dense(w, n, m) {
+                        return Ok(SparseOp::Nm(nm));
+                    }
+                }
+                Ok(SparseOp::Csr(CsrMatrix::from_dense(w)?))
+            }
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        match self {
+            SparseOp::Csr(c) => c.rows,
+            SparseOp::Nm(p) => p.rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            SparseOp::Csr(c) => c.cols,
+            SparseOp::Nm(p) => p.cols,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        match self {
+            SparseOp::Csr(c) => c.nnz(),
+            SparseOp::Nm(p) => p.nnz(),
+        }
+    }
+
+    pub fn storage_bytes(&self) -> usize {
+        match self {
+            SparseOp::Csr(c) => c.storage_bytes(),
+            SparseOp::Nm(p) => p.storage_bytes(),
+        }
+    }
+
+    /// Short format tag for reports.
+    pub fn format_label(&self) -> &'static str {
+        match self {
+            SparseOp::Csr(_) => "csr",
+            SparseOp::Nm(_) => "nm",
+        }
+    }
+
+    /// out = X @ Wᵀ for a wide X (full-sequence forward).
+    pub fn matmul_t_wide(&self, x: &Tensor) -> Tensor {
+        match self {
+            SparseOp::Csr(c) => c.matmul_t(x),
+            SparseOp::Nm(p) => p.matmul_wide(x),
+        }
+    }
+
+    /// out = X @ Wᵀ for a skinny decode batch (parallel over weight rows).
+    pub fn matmul_t_par(&self, x: &Tensor) -> Tensor {
+        match self {
+            SparseOp::Csr(c) => c.matmul_t_par(x),
+            SparseOp::Nm(p) => p.matmul_t_par(x),
+        }
+    }
+}
+
+/// A model with its pruned operators pre-compressed.
 pub struct SparseModel<'p> {
     pub spec: ModelSpec,
     pub params: &'p ModelParams,
-    csr: BTreeMap<String, CsrMatrix>,
+    ops: BTreeMap<String, SparseOp>,
 }
 
 impl<'p> SparseModel<'p> {
-    /// Compress all pruned operators of `params`.
+    /// Compress all pruned operators of `params` to CSR (the
+    /// any-pattern default; see [`SparseModel::compress_as`]).
     pub fn compress(spec: &ModelSpec, params: &'p ModelParams) -> Result<SparseModel<'p>> {
-        let mut csr = BTreeMap::new();
+        SparseModel::compress_as(spec, params, SparseFormat::Csr, None)
+    }
+
+    /// Compress all pruned operators with an explicit format. `sp` is the
+    /// run's sparsity target, consulted by `Nm` (required) and `Auto`
+    /// (per-operator pattern check).
+    pub fn compress_as(
+        spec: &ModelSpec,
+        params: &'p ModelParams,
+        format: SparseFormat,
+        sp: Option<Sparsity>,
+    ) -> Result<SparseModel<'p>> {
+        let mut ops = BTreeMap::new();
         for layer in 0..spec.layers {
             for op in pruned_ops(spec) {
                 let name = format!("l{layer}.{}", op.name);
-                csr.insert(name.clone(), CsrMatrix::from_dense(params.req(&name)?)?);
+                ops.insert(name.clone(), SparseOp::compress(params.req(&name)?, format, sp)?);
             }
         }
-        Ok(SparseModel { spec: spec.clone(), params, csr })
+        Ok(SparseModel { spec: spec.clone(), params, ops })
     }
 
     /// Overall nnz fraction across compressed operators.
     pub fn density(&self) -> f64 {
         let (nnz, total): (usize, usize) = self
-            .csr
+            .ops
             .values()
-            .map(|c| (c.nnz(), c.rows * c.cols))
+            .map(|c| (c.nnz(), c.rows() * c.cols()))
             .fold((0, 0), |(a, b), (x, y)| (a + x, b + y));
         nnz as f64 / total as f64
     }
 
-    /// CSR storage bytes vs dense bytes for the compressed operators.
+    /// Compressed storage bytes vs dense bytes for the pruned operators.
     pub fn storage_ratio(&self) -> f64 {
-        let (csr_b, dense_b): (usize, usize) = self
-            .csr
+        let (sp_b, dense_b): (usize, usize) = self
+            .ops
             .values()
-            .map(|c| (c.storage_bytes(), 4 * c.rows * c.cols))
+            .map(|c| (c.storage_bytes(), 4 * c.rows() * c.cols()))
             .fold((0, 0), |(a, b), (x, y)| (a + x, b + y));
-        csr_b as f64 / dense_b as f64
+        sp_b as f64 / dense_b as f64
+    }
+
+    /// (csr, nm) operator counts — which way `Auto` dispatched.
+    pub fn format_counts(&self) -> (usize, usize) {
+        self.ops.values().fold((0, 0), |(c, n), op| match op {
+            SparseOp::Csr(_) => (c + 1, n),
+            SparseOp::Nm(_) => (c, n + 1),
+        })
     }
 }
 
-/// Forward with CSR operators; mirrors model::forward::logits.
+/// Forward with compressed operators; mirrors model::forward::logits.
 pub fn sparse_logits(model: &SparseModel<'_>, tokens: &[i32]) -> Tensor {
     let spec = &model.spec;
     let params = model.params;
@@ -76,10 +194,10 @@ pub fn sparse_logits(model: &SparseModel<'_>, tokens: &[i32]) -> Tensor {
         }
     }
     for li in 0..spec.layers {
-        let csr = &model.csr;
+        let ops = &model.ops;
         x = layer_forward(spec, params, li, &x, |name, dense_w, input| {
-            match csr.get(&format!("l{li}.{name}")) {
-                Some(c) => c.matmul_t(input),
+            match ops.get(&format!("l{li}.{name}")) {
+                Some(c) => c.matmul_t_wide(input),
                 None => crate::tensor::ops::matmul_nt(input, dense_w),
             }
         });
@@ -106,7 +224,7 @@ mod tests {
     use super::*;
     use crate::config::{repo_root, Presets, Sparsity};
     use crate::model::init::init_params;
-    use crate::pruner::round_to_sparsity;
+    use crate::pruner::{round_model_to_sparsity, round_to_sparsity};
 
     fn pruned_params(model: &str, rate: f64) -> (ModelSpec, ModelParams) {
         let presets = Presets::load(&repo_root().unwrap()).unwrap();
@@ -143,5 +261,61 @@ mod tests {
         let (spec, params) = pruned_params("topt-s1", 0.8);
         let sm = SparseModel::compress(&spec, &params).unwrap();
         assert!(sm.storage_ratio() < 0.55, "ratio {}", sm.storage_ratio());
+    }
+
+    #[test]
+    fn nm_forward_matches_dense_and_csr() {
+        let sp = Sparsity::Semi(2, 4);
+        for model in ["topt-s1", "tllama-s1"] {
+            let presets = Presets::load(&repo_root().unwrap()).unwrap();
+            let spec = presets.model(model).unwrap().clone();
+            let params =
+                round_model_to_sparsity(&spec, &init_params(&spec, 13), sp).unwrap();
+            let nm = SparseModel::compress_as(&spec, &params, SparseFormat::Nm, Some(sp)).unwrap();
+            let csr = SparseModel::compress(&spec, &params).unwrap();
+            let (c, n) = nm.format_counts();
+            assert_eq!(c, 0, "{model}: nm format must pack every operator");
+            assert!(n > 0);
+            assert!(
+                nm.storage_ratio() < csr.storage_ratio(),
+                "{model}: nm {} vs csr {}",
+                nm.storage_ratio(),
+                csr.storage_ratio()
+            );
+            let tokens: Vec<i32> = (0..16).map(|i| (i * 7 + 3) % 96).collect();
+            let dense = crate::model::forward::logits(&spec, &params, &tokens);
+            let got_nm = sparse_logits(&nm, &tokens);
+            let got_csr = sparse_logits(&csr, &tokens);
+            let tol = 1e-3 * dense.frob_norm().max(1.0);
+            assert!(crate::tensor::ops::frob_dist(&dense, &got_nm) < tol, "{model} nm");
+            assert!(crate::tensor::ops::frob_dist(&got_csr, &got_nm) < tol, "{model} csr vs nm");
+        }
+    }
+
+    #[test]
+    fn auto_picks_nm_for_semi_and_csr_otherwise() {
+        let presets = Presets::load(&repo_root().unwrap()).unwrap();
+        let spec = presets.model("topt-s1").unwrap().clone();
+        let semi = Sparsity::Semi(2, 4);
+        let semi_params = round_model_to_sparsity(&spec, &init_params(&spec, 13), semi).unwrap();
+        let auto =
+            SparseModel::compress_as(&spec, &semi_params, SparseFormat::Auto, Some(semi)).unwrap();
+        let (c, n) = auto.format_counts();
+        assert_eq!(c, 0, "auto must pack 2:4-rounded weights");
+        assert!(n > 0);
+        // unstructured weights don't satisfy 2:4 → auto falls back to CSR
+        let unst = round_model_to_sparsity(
+            &spec,
+            &init_params(&spec, 13),
+            Sparsity::Unstructured(0.5),
+        )
+        .unwrap();
+        let auto =
+            SparseModel::compress_as(&spec, &unst, SparseFormat::Auto, Some(semi)).unwrap();
+        let (c, n) = auto.format_counts();
+        assert_eq!(n, 0, "auto must not pack weights that violate the pattern");
+        assert!(c > 0);
+        // nm format on violating weights is a hard error
+        assert!(SparseModel::compress_as(&spec, &unst, SparseFormat::Nm, Some(semi)).is_err());
     }
 }

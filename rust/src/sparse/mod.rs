@@ -2,12 +2,26 @@
 //!
 //! The paper's motivation (§1–2) is that pruned weights reduce memory and
 //! compute — 2:4 sparsity yields up to 2× speedup on Ampere tensor cores.
-//! This module provides the CPU analog: CSR weight storage, sparse×dense
-//! kernels, and a sparse model forward, so the repo can *measure* the
-//! inference win its own pruner produces (bench `sparse_speedup`).
+//! This module provides the CPU analog in two formats:
+//!
+//! * [`csr`] — generic compressed-sparse-row: any pattern, u32 column
+//!   indices, per-row `indptr` indirection.
+//! * [`nm`] — packed n:m semi-structured: exactly n value slots + u8
+//!   in-group indices per (row, m-group). Constant-time group
+//!   addressing, branch-free decode, ~⅝ of CSR's bytes at 2:4 — the
+//!   format that actually exploits the regularity the paper's 2:4 mode
+//!   produces.
+//!
+//! [`forward::SparseOp`] is the per-operator dispatch point
+//! (`config::SparseFormat` selects `Csr`, `Nm`, or per-weight `Auto`),
+//! and [`forward::SparseModel`] runs the whole model through it so the
+//! repo can *measure* the inference win its own pruner produces
+//! (benches `sparse_speedup`, `serve_decode`).
 
 pub mod csr;
 pub mod forward;
+pub mod nm;
 
 pub use csr::CsrMatrix;
-pub use forward::{sparse_logits, sparse_nll, SparseModel};
+pub use forward::{sparse_logits, sparse_nll, SparseModel, SparseOp};
+pub use nm::NmMatrix;

@@ -314,6 +314,171 @@ pub fn csr_matmul_t(
 }
 
 // ---------------------------------------------------------------------
+// Packed n:m decode kernels (semi-structured serving hot path)
+// ---------------------------------------------------------------------
+//
+// Storage contract (see `sparse::NmMatrix`): the weight is [rows, cols]
+// with cols = G·m groups per row; `values` holds exactly n slots per
+// (row, group) in ascending in-group index order — rows·G·n entries,
+// flat layout [row][group][slot] — and `indices[k] ∈ 0..m` is the column
+// offset of values[k] inside its group, so the column is `g·m +
+// indices[k]`. Groups with fewer than n nonzeros are padded with value
+// 0.0 at unused in-group positions; the padded multiply adds an exact
+// ±0.0 and cannot change any partial sum's value. Decode is branch-free:
+// group g of row r always lives at slot (r·G + g)·n — constant-time
+// addressing, no indptr indirection, and u8 index loads (¼ the index
+// traffic of CSR at 2:4).
+//
+// Accumulation per output element walks groups in ascending order, slots
+// in ascending order — fixed per element, so every kernel below is
+// bitwise independent of the thread count (the same `par` contract as
+// the CSR kernels) and value-equal to the dense `matmul_nt` route.
+
+/// y = W x for a packed n:m matrix W — the semi-structured decode matvec.
+/// Row-block parallel over W's rows like [`csr_matvec`].
+#[allow(clippy::too_many_arguments)]
+pub fn nm_matvec(
+    values: &[f32],
+    indices: &[u8],
+    rows: usize,
+    cols: usize,
+    n: usize,
+    m: usize,
+    x: &[f32],
+) -> Vec<f32> {
+    let groups = cols / m;
+    debug_assert_eq!(values.len(), rows * groups * n, "packed n:m geometry");
+    debug_assert_eq!(values.len(), indices.len(), "values/indices length");
+    debug_assert_eq!(x.len(), cols, "nm_matvec inner dims");
+    let mut out = vec![0f32; rows];
+    let min_rows = min_rows_for(2 * groups * n);
+    par::for_each_row_block(&mut out, rows, 1, min_rows, |r0, _r1, block| {
+        for (i, o) in block.iter_mut().enumerate() {
+            let row_base = (r0 + i) * groups * n;
+            let mut acc = 0f32;
+            for g in 0..groups {
+                let base = row_base + g * n;
+                let xg = &x[g * m..(g + 1) * m];
+                for s in 0..n {
+                    acc += values[base + s] * xg[indices[base + s] as usize];
+                }
+            }
+            *o = acc;
+        }
+    });
+    out
+}
+
+/// out = X @ Wᵀ for a packed n:m W and a *skinny* dense X [s, cols] →
+/// [s, rows] — the batched decode kernel. Mirrors [`csr_matmul_t`]: the
+/// batch dimension is 1–8 at decode time, so the parallel split runs
+/// over W's rows into a [rows, s] scratch re-laid-out once (free for
+/// s == 1). Per-element accumulation order matches [`nm_matvec`].
+#[allow(clippy::too_many_arguments)]
+pub fn nm_matmul_t(
+    values: &[f32],
+    indices: &[u8],
+    rows: usize,
+    cols: usize,
+    n: usize,
+    m: usize,
+    x: &Tensor,
+) -> Tensor {
+    let (s, xc) = (x.rows(), x.cols());
+    assert_eq!(xc, cols, "nm_matmul_t inner dims: {xc} vs {cols}");
+    let groups = cols / m;
+    debug_assert_eq!(values.len(), rows * groups * n, "packed n:m geometry");
+    let xd = x.data();
+    let mut scratch = vec![0f32; rows * s];
+    par::for_each_row_block(
+        &mut scratch,
+        rows,
+        s,
+        min_rows_for(2 * s * groups * n),
+        |r0, r1, block| {
+            for r in r0..r1 {
+                let row_base = r * groups * n;
+                let orow = &mut block[(r - r0) * s..(r - r0 + 1) * s];
+                for (t, o) in orow.iter_mut().enumerate() {
+                    let xrow = &xd[t * cols..(t + 1) * cols];
+                    let mut acc = 0f32;
+                    for g in 0..groups {
+                        let base = row_base + g * n;
+                        let xg = &xrow[g * m..(g + 1) * m];
+                        for sl in 0..n {
+                            acc += values[base + sl] * xg[indices[base + sl] as usize];
+                        }
+                    }
+                    *o = acc;
+                }
+            }
+        },
+    );
+    if s == 1 {
+        // [rows, 1] and [1, rows] share the same flat layout
+        return Tensor::from_vec(vec![1, rows], scratch);
+    }
+    let mut out = Tensor::zeros(vec![s, rows]);
+    let od = out.data_mut();
+    for r in 0..rows {
+        for t in 0..s {
+            od[t * rows + r] = scratch[r * s + t];
+        }
+    }
+    out
+}
+
+/// out = X @ Wᵀ for a packed n:m W and a *wide* dense X [s, cols] →
+/// [s, rows] — the full-sequence forward kernel (`sparse::sparse_logits`
+/// with s = sequence length). Here the output rows are plentiful, so the
+/// split runs over X's rows directly (no scratch transpose). Each
+/// element accumulates in the identical ascending group/slot order as
+/// [`nm_matmul_t`], so the two kernels are bitwise equal element for
+/// element and both independent of the thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn nm_matmul(
+    values: &[f32],
+    indices: &[u8],
+    rows: usize,
+    cols: usize,
+    n: usize,
+    m: usize,
+    x: &Tensor,
+) -> Tensor {
+    let (s, xc) = (x.rows(), x.cols());
+    assert_eq!(xc, cols, "nm_matmul inner dims: {xc} vs {cols}");
+    let groups = cols / m;
+    debug_assert_eq!(values.len(), rows * groups * n, "packed n:m geometry");
+    let xd = x.data();
+    let mut out = Tensor::zeros(vec![s, rows]);
+    par::for_each_row_block(
+        out.data_mut(),
+        s,
+        rows,
+        min_rows_for(2 * rows * groups * n),
+        |t0, t1, block| {
+            for t in t0..t1 {
+                let xrow = &xd[t * cols..(t + 1) * cols];
+                let orow = &mut block[(t - t0) * rows..(t - t0 + 1) * rows];
+                for (r, o) in orow.iter_mut().enumerate() {
+                    let row_base = r * groups * n;
+                    let mut acc = 0f32;
+                    for g in 0..groups {
+                        let base = row_base + g * n;
+                        let xg = &xrow[g * m..(g + 1) * m];
+                        for sl in 0..n {
+                            acc += values[base + sl] * xg[indices[base + sl] as usize];
+                        }
+                    }
+                    *o = acc;
+                }
+            }
+        },
+    );
+    out
+}
+
+// ---------------------------------------------------------------------
 // Fused Gram accumulation
 // ---------------------------------------------------------------------
 
@@ -706,6 +871,83 @@ mod tests {
             par::set_threads(0);
             for (a, b) in t.data().iter().zip(baseline.data()) {
                 assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}");
+            }
+        }
+    }
+
+    /// Toy packed 2:4 encoding of a dense matrix already satisfying the
+    /// pattern (test-local; the real builder lives in `sparse::nm` and is
+    /// parity-tested against these kernels there).
+    fn dense_to_nm(w: &Tensor, n: usize, m: usize) -> (Vec<f32>, Vec<u8>) {
+        let (mut values, mut indices) = (Vec::new(), Vec::new());
+        for i in 0..w.rows() {
+            for grp in w.row(i).chunks(m) {
+                let mut kept: Vec<usize> = (0..m).filter(|&j| grp[j] != 0.0).collect();
+                let mut pad = (0..m).filter(|&j| grp[j] == 0.0);
+                while kept.len() < n {
+                    kept.push(pad.next().expect("group has >= m - n zeros"));
+                }
+                kept.sort_unstable();
+                for j in kept {
+                    values.push(grp[j]);
+                    indices.push(j as u8);
+                }
+            }
+        }
+        (values, indices)
+    }
+
+    #[test]
+    fn nm_kernels_match_dense_and_are_thread_invariant() {
+        let mut rng = Pcg64::seeded(47);
+        let (rows, cols, s, n, m) = (24, 32, 4, 2, 4);
+        let w = crate::pruner::rounding::round_to_sparsity(
+            &randt(&mut rng, vec![rows, cols]),
+            crate::config::Sparsity::Semi(n, m),
+        );
+        let (values, indices) = dense_to_nm(&w, n, m);
+        assert_eq!(values.len(), rows * (cols / m) * n);
+        let x = randt(&mut rng, vec![s, cols]);
+        let want = matmul_nt(&x, &w);
+
+        let got = nm_matmul_t(&values, &indices, rows, cols, n, m, &x);
+        assert_eq!(got.shape(), &[s, rows]);
+        for (a, b) in got.data().iter().zip(want.data()) {
+            assert_eq!(a, b, "nm_matmul_t must be value-equal to dense");
+        }
+
+        // wide kernel: bitwise equal to the skinny one element for element
+        let wide = nm_matmul(&values, &indices, rows, cols, n, m, &x);
+        for (a, b) in wide.data().iter().zip(got.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+
+        // single-row fast path + matvec agree
+        let x1 = Tensor::from_vec(vec![1, cols], x.row(0).to_vec());
+        let got1 = nm_matmul_t(&values, &indices, rows, cols, n, m, &x1);
+        assert_eq!(got1.shape(), &[1, rows]);
+        let y = nm_matvec(&values, &indices, rows, cols, n, m, x.row(0));
+        for (a, b) in y.iter().zip(got1.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+
+        // bitwise identical across thread counts
+        let baseline = {
+            par::set_threads(1);
+            let t = nm_matmul_t(&values, &indices, rows, cols, n, m, &x);
+            par::set_threads(0);
+            t
+        };
+        for threads in [2, 5] {
+            par::set_threads(threads);
+            let t = nm_matmul_t(&values, &indices, rows, cols, n, m, &x);
+            let wide_t = nm_matmul(&values, &indices, rows, cols, n, m, &x);
+            par::set_threads(0);
+            for (a, b) in t.data().iter().zip(baseline.data()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}");
+            }
+            for (a, b) in wide_t.data().iter().zip(baseline.data()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "wide threads={threads}");
             }
         }
     }

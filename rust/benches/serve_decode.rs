@@ -53,7 +53,8 @@ fn main() -> anyhow::Result<()> {
 
     // the 2:4 format axis: csr vs packed n:m over identical pruned
     // weights (Auto is omitted — on fully 2:4-rounded weights it packs
-    // every operator and would duplicate the nm row)
+    // every operator and would duplicate the nm row), plus the artifact
+    // row: compile → save → timed load → serve from disk
     let rows = run_serve_format_grid(
         &spec,
         &params,
@@ -63,6 +64,7 @@ fn main() -> anyhow::Result<()> {
         4,
         requests,
         &out_dir.join("serve_formats.csv"),
+        Some(&out_dir.join("serve_decode.fsa")),
     )?;
     for row in &rows {
         anyhow::ensure!(
@@ -72,5 +74,7 @@ fn main() -> anyhow::Result<()> {
             row.resolved
         );
     }
+    let artifact = rows.iter().find(|r| r.format == "artifact");
+    anyhow::ensure!(artifact.is_some(), "format grid must include the artifact row");
     Ok(())
 }

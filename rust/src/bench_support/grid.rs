@@ -96,7 +96,8 @@ pub fn run_grid(lab: &mut Lab, grid: &GridSpec) -> Result<Vec<(String, String, f
 /// One row of [`run_serve_format_grid`] output.
 #[derive(Clone, Debug)]
 pub struct ServeFormatRow {
-    /// Requested format axis value ("csr" | "nm" | "auto").
+    /// Requested format axis value ("csr" | "nm" | "auto"), or
+    /// "artifact" for the load-from-disk row.
     pub format: String,
     /// What actually got compressed ("csr" | "nm" | "csr+nm").
     pub resolved: String,
@@ -104,14 +105,24 @@ pub struct ServeFormatRow {
     pub tokens_per_s_bb: f64,
     pub storage_bytes: usize,
     pub storage_ratio: f64,
+    /// Artifact row only: wall ms of `ser::artifact::load`.
+    pub load_ms: Option<f64>,
+    /// Artifact row only: resident weight bytes after load (compressed
+    /// ops + residual dense params).
+    pub resident_bytes: Option<usize>,
     pub parity_ok: bool,
 }
 
 /// The serve-format grid: prune `dense` to `sparsity` once, then measure
 /// the same pruned weights through each format's decode kernels — rows =
 /// formats, columns = tokens/s at batch 1 / batch `batch`, storage, and
-/// greedy parity vs `eval::generate`. The csr-vs-nm side-by-side behind
-/// `benches/serve_decode.rs`; callers gate on each row's `parity_ok`.
+/// greedy parity vs `eval::generate`. When `artifact` names a path, an
+/// extra row compiles the pruned weights once, writes the sparse
+/// artifact there, and measures the full disk round-trip: load time,
+/// resident weight bytes, and serving parity from the *loaded* operators
+/// — the startup-cost column of the memory-conservation claim. The
+/// csr-vs-nm side-by-side behind `benches/serve_decode.rs`; callers gate
+/// on each row's `parity_ok`.
 #[allow(clippy::too_many_arguments)]
 pub fn run_serve_format_grid(
     spec: &crate::config::ModelSpec,
@@ -122,6 +133,7 @@ pub fn run_serve_format_grid(
     batch: usize,
     requests: usize,
     csv_path: &std::path::Path,
+    artifact: Option<&std::path::Path>,
 ) -> Result<Vec<ServeFormatRow>> {
     use crate::serve::bench::{
         greedy_references, measure_sparse_format, requests_for, synthetic_prompts,
@@ -134,7 +146,15 @@ pub fn run_serve_format_grid(
 
     let mut table = TableBuilder::new(
         &format!("serve formats ({} @ {})", spec.name(), sparsity.label()),
-        &["format", "tok/s b=1", &format!("tok/s b={batch}"), "bytes", "vs dense", "parity"],
+        &[
+            "format",
+            "tok/s b=1",
+            &format!("tok/s b={batch}"),
+            "bytes",
+            "vs dense",
+            "load ms",
+            "parity",
+        ],
     );
     let mut csv = CsvWriter::create(
         csv_path,
@@ -145,6 +165,8 @@ pub fn run_serve_format_grid(
             "tokens_per_s_bb",
             "storage_bytes",
             "storage_ratio",
+            "load_ms",
+            "resident_bytes",
             "parity",
         ],
     )?;
@@ -156,21 +178,33 @@ pub fn run_serve_format_grid(
         };
         let stats =
             measure_sparse_format(spec, &pruned, &reference, &reqs, batch, fmt, sp_hint)?;
-        let row = ServeFormatRow {
+        rows.push(ServeFormatRow {
             format: fmt.label().to_string(),
             resolved: stats.label.to_string(),
             tokens_per_s_b1: stats.b1.tokens_per_s,
             tokens_per_s_bb: stats.bb.tokens_per_s,
             storage_bytes: stats.storage_bytes,
             storage_ratio: stats.storage_ratio,
+            load_ms: None,
+            resident_bytes: None,
             parity_ok: stats.parity_ok,
-        };
+        });
+    }
+    if let Some(path) = artifact {
+        rows.push(artifact_row(spec, &pruned, &reference, &reqs, batch, sparsity, path)?);
+    }
+    for row in &rows {
         table.row(vec![
-            row.resolved.clone(),
+            if row.format == "artifact" {
+                format!("artifact({})", row.resolved)
+            } else {
+                row.resolved.clone()
+            },
             format!("{:.1}", row.tokens_per_s_b1),
             format!("{:.1}", row.tokens_per_s_bb),
             row.storage_bytes.to_string(),
             format!("{:.3}", row.storage_ratio),
+            row.load_ms.map(|ms| format!("{ms:.1}")).unwrap_or_else(|| "-".into()),
             if row.parity_ok { "ok".into() } else { "MISMATCH".into() },
         ]);
         csv.write_row(&[
@@ -180,13 +214,68 @@ pub fn run_serve_format_grid(
             format!("{:.2}", row.tokens_per_s_bb),
             row.storage_bytes.to_string(),
             format!("{:.4}", row.storage_ratio),
+            row.load_ms.map(|ms| format!("{ms:.3}")).unwrap_or_default(),
+            row.resident_bytes.map(|b| b.to_string()).unwrap_or_default(),
             row.parity_ok.to_string(),
         ])?;
-        rows.push(row);
     }
     table.print();
     println!("csv: {}", csv_path.display());
     Ok(rows)
+}
+
+/// The artifact row: compile (Auto) → save → timed load → serve from the
+/// loaded operators, parity-gated against the same `eval::generate`
+/// references as the in-memory rows.
+fn artifact_row(
+    spec: &crate::config::ModelSpec,
+    pruned: &crate::model::params::ModelParams,
+    reference: &std::collections::BTreeMap<String, String>,
+    reqs: &[crate::serve::ServeRequest],
+    batch: usize,
+    sparsity: Sparsity,
+    path: &std::path::Path,
+) -> Result<ServeFormatRow> {
+    use crate::ser::artifact::{self, ArtifactMeta};
+    use crate::serve::bench::run_engine;
+    use crate::serve::ServeModel;
+
+    let compiled =
+        crate::sparse::CompiledLayers::compress(spec, pruned, SparseFormat::Auto, Some(sparsity))?;
+    artifact::save(
+        path,
+        &compiled,
+        &ArtifactMeta {
+            model: spec.name(),
+            corpus: "bench".into(),
+            method: "magnitude".into(),
+            sparsity: sparsity.label(),
+            format: "auto".into(),
+            seed: 0,
+            prune: None,
+        },
+    )?;
+    drop(compiled);
+    let t0 = std::time::Instant::now();
+    let (loaded, _meta) = artifact::load(path)?;
+    let load_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let model = ServeModel::from_compiled_ref(&loaded);
+    // same engine loop (and admission + parity policy) as the
+    // in-memory rows
+    let (b1, texts1) = run_engine(&model, 1, "artifact b=1", reqs)?;
+    let (bb, textsb) = run_engine(&model, batch, &format!("artifact b={batch}"), reqs)?;
+    let parity_ok = crate::serve::bench::parity_against(reference, &[&texts1, &textsb]);
+    Ok(ServeFormatRow {
+        format: "artifact".into(),
+        resolved: loaded.format_label().to_string(),
+        tokens_per_s_b1: b1.tokens_per_s,
+        tokens_per_s_bb: bb.tokens_per_s,
+        storage_bytes: loaded.storage_bytes(),
+        storage_ratio: loaded.storage_ratio(),
+        load_ms: Some(load_ms),
+        resident_bytes: Some(loaded.resident_bytes()),
+        parity_ok,
+    })
 }
 
 fn pretty_name(m: &Method) -> &'static str {

@@ -143,8 +143,8 @@ pub fn prune(args: &Args) -> Result<()> {
             std::path::Path::new(out),
             &pruned,
             &CheckpointMeta {
-                model,
-                corpus,
+                model: model.clone(),
+                corpus: corpus.clone(),
                 steps: 0,
                 final_loss: ppl_pruned.ln(),
                 seed: opts.seed,
@@ -152,11 +152,68 @@ pub fn prune(args: &Args) -> Result<()> {
         )?;
         println!("saved: {out}");
     }
+    // --emit-sparse [path]: compile the pruner's output once and write
+    // the compressed artifact straight from memory — no dense
+    // checkpoint round-trip, no recompress-at-serve-time.
+    let emit = args.get("emit-sparse").map(std::path::PathBuf::from).or_else(|| {
+        args.has("emit-sparse").then(|| {
+            crate::config::paths::sparse_artifacts_dir(&lab.root).join(format!(
+                "{model}_{corpus}_{}_{}.fsa",
+                opts.sparsity.label().replace(':', "-"),
+                opts.seed
+            ))
+        })
+    });
+    if let Some(path) = emit {
+        let fmt = SparseFormat::parse(args.get_or("format", "auto"))?;
+        let spec = lab.presets.model(&model)?.clone();
+        let compiled =
+            crate::sparse::CompiledLayers::compress(&spec, &pruned, fmt, Some(opts.sparsity))?;
+        let meta = crate::ser::artifact::ArtifactMeta {
+            model,
+            corpus,
+            method: method.name().to_string(),
+            sparsity: opts.sparsity.label(),
+            format: fmt.label().to_string(),
+            seed: opts.seed,
+            prune: Some(report.provenance_json()),
+        };
+        crate::ser::artifact::save(&path, &compiled, &meta)?;
+        println!(
+            "sparse artifact: {} ({} ops as {}, {} B resident, {:.3}x dense)",
+            path.display(),
+            compiled.op_count(),
+            compiled.format_label(),
+            compiled.resident_bytes(),
+            compiled.resident_bytes() as f64
+                / (4 * crate::model::spec::param_count(&spec)) as f64
+        );
+    }
     Ok(())
 }
 
 pub fn eval(args: &Args) -> Result<()> {
     let mut lab = Lab::new()?;
+    // --artifact: score the compressed operators directly — the dense
+    // pruned weights are never materialized.
+    if let Some(path) = args.get("artifact") {
+        if args.has("ckpt") || args.get("ckpt").is_some() {
+            anyhow::bail!("--artifact and --ckpt are different weight sources; pass one");
+        }
+        let (compiled, meta) = crate::ser::artifact::load(std::path::Path::new(path))?;
+        crate::ser::artifact::check_model(&meta, args.get("model"))?;
+        let corpus = args.get("corpus").unwrap_or(&meta.corpus).to_string();
+        let windows = lab.eval_windows();
+        let c = crate::data::Corpus::generate(lab.presets.corpus(&corpus)?);
+        let ppl = crate::eval::perplexity::perplexity_compiled(&compiled, &c, windows)?;
+        println!(
+            "{} on {corpus} via artifact ({} @ {}): perplexity {ppl:.3}",
+            meta.model,
+            compiled.format_label(),
+            meta.sparsity
+        );
+        return Ok(());
+    }
     let model = args.req("model")?.to_string();
     let corpus = args.req("corpus")?.to_string();
     let params = load_or_train(&mut lab, args, &model, &corpus)?;
@@ -206,52 +263,97 @@ pub fn generate(args: &Args) -> Result<()> {
 /// self-driving synthetic load with `--synthetic N`.
 pub fn serve(args: &Args) -> Result<()> {
     let mut lab = Lab::new()?;
-    let model = args.req("model")?.to_string();
-    let corpus = args.req("corpus")?.to_string();
-    let params = load_or_train(&mut lab, args, &model, &corpus)?;
-    let spec = lab.presets.model(&model)?.clone();
-    // --format csr|nm|auto serves compressed weights through that
-    // backend; --weights dense|csr is kept as the older spelling
-    // (csr ≡ --format csr). nm/auto check weights against --sparsity
-    // (default 2:4, the paper's hardware pattern). Unknown values and
-    // contradictory combinations are rejected, never silently resolved.
+    // Weight sources, mutually exclusive:
+    //   --artifact path.fsa     compiled sparse artifact (the production
+    //                           path: compressed operators are the only
+    //                           copy of the pruned weights in memory)
+    //   [--ckpt] + --format     dense checkpoint, optionally compressed
+    //                           at startup (csr|nm|auto); --weights
+    //                           dense|csr is the older spelling
+    //                           (csr ≡ --format csr)
+    // nm/auto check weights against --sparsity (default 2:4, the paper's
+    // hardware pattern). Unknown values and contradictory combinations
+    // are rejected, never silently resolved.
+    let artifact = args.get("artifact");
+    if artifact.is_some() {
+        for flag in ["ckpt", "format", "weights", "sparsity"] {
+            if args.get(flag).is_some() {
+                anyhow::bail!(
+                    "--artifact carries its own weights, format and sparsity; drop --{flag}"
+                );
+            }
+        }
+    }
     let weights = args.get("weights");
     if let Some(w) = weights {
         if w != "dense" && w != "csr" {
             anyhow::bail!("unknown --weights '{w}' (dense|csr, or --format)");
         }
     }
-    let format = match (args.get("format"), weights) {
-        (Some(f), Some("dense")) => {
-            anyhow::bail!("--weights dense conflicts with --format {f}; drop one of the two")
+    // dense params are only loaded on the checkpoint path; the artifact
+    // path never materializes them, and the compress-at-startup path
+    // drops them before serving begins
+    let (model, mut params): (String, Option<crate::model::ModelParams>) = match artifact {
+        Some(_) => (String::new(), None),
+        None => {
+            let model = args.req("model")?.to_string();
+            let corpus = args.req("corpus")?.to_string();
+            let params = load_or_train(&mut lab, args, &model, &corpus)?;
+            (model, Some(params))
         }
-        (Some(f), Some("csr")) if f != "csr" => {
-            anyhow::bail!("--weights csr conflicts with --format {f}; drop one of the two")
-        }
-        (Some(f), _) => Some(SparseFormat::parse(f)?),
-        (None, Some("csr")) => Some(SparseFormat::Csr),
-        (None, _) => None,
     };
-    let serve_model = match format {
-        None => crate::serve::ServeModel::dense(&spec, &params),
-        Some(f) => {
-            let sp_hint = match (args.get("sparsity"), f) {
-                (Some(s), _) => Some(Sparsity::parse(s)?),
-                (None, SparseFormat::Csr) => None,
-                (None, _) => Some(Sparsity::Semi(2, 4)),
-            };
-            let m = crate::serve::ServeModel::sparse_as(&spec, &params, f, sp_hint)?;
-            match m.density() {
-                Some(d) if d > 0.999 => crate::log_warn!(
-                    "serving {} over dense weights (density {d:.3}); pass a pruned --ckpt",
-                    m.format_label()
-                ),
-                Some(d) => eprintln!("serving {} weights, density {d:.3}", m.format_label()),
-                None => {}
+    let serve_model = if let Some(path) = artifact {
+        let (compiled, meta) = crate::ser::artifact::load(std::path::Path::new(path))?;
+        crate::ser::artifact::check_model(&meta, args.get("model"))?;
+        eprintln!(
+            "loaded artifact {path}: {} @ {} ({} ops, {} B resident)",
+            compiled.format_label(),
+            meta.sparsity,
+            compiled.op_count(),
+            compiled.resident_bytes()
+        );
+        crate::serve::ServeModel::from_compiled(compiled)
+    } else {
+        let spec = lab.presets.model(&model)?.clone();
+        let format = match (args.get("format"), weights) {
+            (Some(f), Some("dense")) => {
+                anyhow::bail!("--weights dense conflicts with --format {f}; drop one of the two")
             }
-            m
+            (Some(f), Some("csr")) if f != "csr" => {
+                anyhow::bail!("--weights csr conflicts with --format {f}; drop one of the two")
+            }
+            (Some(f), _) => Some(SparseFormat::parse(f)?),
+            (None, Some("csr")) => Some(SparseFormat::Csr),
+            (None, _) => None,
+        };
+        match format {
+            None => crate::serve::ServeModel::dense(
+                &spec,
+                params.as_ref().expect("checkpoint path loads params"),
+            )?,
+            Some(f) => {
+                let sp_hint = match (args.get("sparsity"), f) {
+                    (Some(s), _) => Some(Sparsity::parse(s)?),
+                    (None, SparseFormat::Csr) => None,
+                    (None, _) => Some(Sparsity::Semi(2, 4)),
+                };
+                // take ownership so the dense weights are freed before
+                // serving: the compiled model is self-contained
+                let dense_params = params.take().expect("checkpoint path loads params");
+                let m = crate::serve::ServeModel::sparse_as(&spec, &dense_params, f, sp_hint)?;
+                match m.density() {
+                    Some(d) if d > 0.999 => crate::log_warn!(
+                        "serving {} over dense weights (density {d:.3}); pass a pruned --ckpt",
+                        m.format_label()
+                    ),
+                    Some(d) => eprintln!("serving {} weights, density {d:.3}", m.format_label()),
+                    None => {}
+                }
+                m
+            }
         }
     };
+    let model_name = serve_model.spec.name();
     let cfg = crate::serve::EngineConfig {
         max_batch: args.usize_or("batch", 4)?,
         queue_cap: args.usize_or("queue", 64)?,
@@ -259,10 +361,11 @@ pub fn serve(args: &Args) -> Result<()> {
     };
     let mut engine = crate::serve::Engine::new(&serve_model, &cfg)?;
     eprintln!(
-        "serving {model} — {} slots, queue {}, KV pool {:.1} KiB",
+        "serving {model_name} — {} slots, queue {}, KV pool {:.1} KiB, resident weights {:.1} KiB",
         cfg.max_batch,
         cfg.queue_cap,
-        engine.kv_bytes() as f64 / 1024.0
+        engine.kv_bytes() as f64 / 1024.0,
+        serve_model.resident_weight_bytes() as f64 / 1024.0
     );
 
     // Stream responses as requests retire. Intake interleaves with engine
@@ -341,11 +444,6 @@ pub fn serve_bench(args: &Args) -> Result<()> {
     let mut lab = Lab::new()?;
     let smoke = args.has("smoke");
     let fast = smoke || crate::bench_support::fast_mode();
-    let default_model = if fast { "topt-s1" } else { "topt-s3" };
-    let model = args.get_or("model", default_model).to_string();
-    let corpus = args.get_or("corpus", "c4-syn").to_string();
-    let params = load_or_train(&mut lab, args, &model, &corpus)?;
-    let spec = lab.presets.model(&model)?.clone();
     let format = SparseFormat::parse(args.get_or("format", "csr"))?;
     // the nm axis needs an n:m pattern; 2:4 is the paper's hardware mode
     let default_sparsity = if format == SparseFormat::Csr { "0.5" } else { "2:4" };
@@ -356,8 +454,35 @@ pub fn serve_bench(args: &Args) -> Result<()> {
         sparsity: Sparsity::parse(args.get_or("sparsity", default_sparsity))?,
         format,
     };
+    // --artifact: measure the disk → serve path of a compiled artifact
+    // (load ms, on-disk and resident bytes vs the dense checkpoint)
+    // instead of the in-memory compression axes.
+    if let Some(path) = args.get("artifact") {
+        let report =
+            crate::serve::run_artifact_bench(std::path::Path::new(path), &cfg, args.get("model"))?;
+        report.print();
+        write_json_report(args, report.to_json())?;
+        if !report.parity_ok {
+            anyhow::bail!("artifact-bench parity failed: served output != compiled forward");
+        }
+        return Ok(());
+    }
+    let default_model = if fast { "topt-s1" } else { "topt-s3" };
+    let model = args.get_or("model", default_model).to_string();
+    let corpus = args.get_or("corpus", "c4-syn").to_string();
+    let params = load_or_train(&mut lab, args, &model, &corpus)?;
+    let spec = lab.presets.model(&model)?.clone();
     let report = crate::serve::run_serve_bench(&spec, &params, &cfg)?;
     report.print();
+    write_json_report(args, report.to_json())?;
+    if !report.parity_ok {
+        anyhow::bail!("serve-bench parity check failed: served output != eval::generate");
+    }
+    Ok(())
+}
+
+/// `--json path`: write a bench report next to the table output.
+fn write_json_report(args: &Args, json: crate::ser::Json) -> Result<()> {
     if let Some(path) = args.get("json") {
         let path = std::path::Path::new(path);
         if let Some(parent) = path.parent() {
@@ -365,11 +490,8 @@ pub fn serve_bench(args: &Args) -> Result<()> {
                 std::fs::create_dir_all(parent)?;
             }
         }
-        std::fs::write(path, report.to_json().to_string_compact() + "\n")?;
+        std::fs::write(path, json.to_string_compact() + "\n")?;
         println!("wrote {}", path.display());
-    }
-    if !report.parity_ok {
-        anyhow::bail!("serve-bench parity check failed: served output != eval::generate");
     }
     Ok(())
 }

@@ -53,20 +53,30 @@ COMMANDS:
             [--sparsity 0.5|50%|2:4] [--mode sequential|parallel]
             [--workers N] [--threads N] [--engine xla|native]
             [--no-correction] [--calib N --seed S] [--out path.fpt]
+            [--emit-sparse [path.fsa] --format csr|nm|auto]
+            (--emit-sparse compiles the pruned weights once and writes
+             the compressed artifact + .meta.json sidecar — no dense
+             round-trip; default path under artifacts/sparse/)
   eval      --model M --corpus C    held-out perplexity
             [--ckpt path.fpt]
+            [--artifact path.fsa]   score a sparse artifact directly
+                                    (dense operators never materialized)
   zeroshot  --model M --corpus C    the 7 synthetic probe tasks
             [--ckpt path.fpt --items N]
   generate  --model M --corpus C    sample text from a (pruned) model
             [--ckpt path.fpt --prompt STR --tokens N --temp T]
   serve     --model M --corpus C    continuous-batching JSONL server
             [--ckpt path.fpt --format csr|nm|auto --sparsity S]
+            [--artifact path.fsa]   serve a sparse artifact: compressed
+                                    weights are the only copy in memory
             [--weights dense|csr --batch N --queue N]
             [--transcript out.jsonl --synthetic N --tokens N --temp T]
             (reads one JSON request per stdin line unless --synthetic)
   serve-bench                       tokens/s + p50/p99: full recompute vs
             [--model M --smoke]     KV-cached vs compressed decode (csr,
             [--format csr|nm|auto]  plus packed n:m side by side), parity
+            [--artifact path.fsa]   artifact path: load ms + on-disk and
+                                    resident bytes vs the dense ckpt
             [--tokens N --batch N --requests N --sparsity S --json path]
   pipeline  --model M --corpus C    end-to-end: train → prune (all
             [--sparsity S]          methods) → perplexity table

@@ -48,6 +48,12 @@ pub fn out_dir(root: &Path) -> PathBuf {
     root.join("artifacts")
 }
 
+/// `<root>/artifacts/sparse`, where `prune --emit-sparse` writes compiled
+/// sparse artifacts (`.fsa` + `.meta.json`) when no path is given.
+pub fn sparse_artifacts_dir(root: &Path) -> PathBuf {
+    root.join("artifacts/sparse")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -24,14 +24,28 @@ impl Default for GenOptions {
 
 /// Generate a continuation of `prompt`.
 pub fn generate(spec: &ModelSpec, params: &ModelParams, prompt: &str, opts: &GenOptions) -> String {
+    generate_with(spec.seq, prompt, opts, |ctx| logits(spec, params, ctx))
+}
+
+/// The shared generation loop: sliding window of `seq` context tokens,
+/// `Pcg64::new(seed, 61)` sampling stream, one `next_token` draw per
+/// generated token. `logits_fn` maps the current context window to a
+/// [len, vocab] logits tensor — [`generate`] plugs in the dense forward,
+/// `sparse::compiled_generate` the compressed one, so the two paths
+/// cannot drift apart (they are each other's parity oracle in the
+/// serving tests).
+pub fn generate_with<F>(seq: usize, prompt: &str, opts: &GenOptions, mut logits_fn: F) -> String
+where
+    F: FnMut(&[i32]) -> crate::tensor::Tensor,
+{
     let mut tokens = tokenizer::encode(prompt);
     assert!(!tokens.is_empty(), "empty prompt");
     let mut rng = Pcg64::new(opts.seed, 61);
     let start = tokens.len();
     for _ in 0..opts.max_tokens {
         // sliding window: keep the last seq tokens as context
-        let ctx_start = tokens.len().saturating_sub(spec.seq);
-        let lg = logits(spec, params, &tokens[ctx_start..]);
+        let ctx_start = tokens.len().saturating_sub(seq);
+        let lg = logits_fn(&tokens[ctx_start..]);
         let row = lg.row(lg.rows() - 1);
         let next = next_token(row, opts.temperature, &mut rng);
         tokens.push(next as i32);

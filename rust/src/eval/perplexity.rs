@@ -51,6 +51,31 @@ pub fn perplexity_native(
     Ok((total / (windows.len() * spec.seq) as f64).exp())
 }
 
+/// Perplexity through a compiled sparse model
+/// (`sparse::compile::CompiledLayers`, e.g. loaded from a sparse
+/// artifact): identical window selection to [`perplexity_native`], scored
+/// by the compressed forward — the dense pruned operators are never
+/// materialized.
+pub fn perplexity_compiled(
+    compiled: &crate::sparse::CompiledLayers,
+    corpus: &Corpus,
+    max_windows: usize,
+) -> Result<f64> {
+    let spec = &compiled.spec;
+    let windows = eval_windows(corpus, spec.seq + 1, max_windows);
+    if windows.is_empty() {
+        bail!("held-out split of '{}' has no full windows", corpus.name);
+    }
+    let mut nlls = vec![0f64; windows.len()];
+    par::for_each_row_block(&mut nlls, windows.len(), 1, 1, |r0, _r1, out| {
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = crate::sparse::compiled_nll(compiled, &windows[r0 + i]);
+        }
+    });
+    let total: f64 = nlls.iter().sum();
+    Ok((total / (windows.len() * spec.seq) as f64).exp())
+}
+
 /// Sum of masked NLL and token count over arbitrary windows (also used by
 /// the zero-shot harness with custom masks).
 pub fn score_windows(
@@ -131,6 +156,32 @@ mod tests {
         let ppl = perplexity_native(spec, &params, &corpus, 16).unwrap();
         let uniform = spec.vocab as f64;
         assert!(ppl > 0.3 * uniform && ppl < 3.0 * uniform, "ppl {ppl} vs uniform {uniform}");
+    }
+
+    #[test]
+    fn compiled_perplexity_matches_native_on_pruned_weights() {
+        let presets = Presets::load(&repo_root().unwrap()).unwrap();
+        let spec = presets.model("topt-s1").unwrap();
+        let pruned = crate::pruner::round_model_to_sparsity(
+            spec,
+            &init_params(spec, 13),
+            crate::config::Sparsity::Unstructured(0.5),
+        )
+        .unwrap();
+        let corpus = Corpus::generate(presets.corpus("ptb-syn").unwrap());
+        let native = perplexity_native(spec, &pruned, &corpus, 8).unwrap();
+        let compiled = crate::sparse::CompiledLayers::compress(
+            spec,
+            &pruned,
+            crate::config::SparseFormat::Csr,
+            None,
+        )
+        .unwrap();
+        let sparse = perplexity_compiled(&compiled, &corpus, 8).unwrap();
+        assert!(
+            (native - sparse).abs() < 1e-6 * native,
+            "native {native} vs compiled {sparse}"
+        );
     }
 
     #[test]

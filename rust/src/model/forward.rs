@@ -67,13 +67,20 @@ where
             (sp.name.as_str(), t)
         })
         .collect();
-    layer_forward_mapped(spec, &map, x, linop)
+    layer_forward_mapped(spec, &map, x, |name, w, input| {
+        linop(name, w.unwrap_or_else(|| panic!("layer param '{name}'")), input)
+    })
 }
 
 /// Layer-generic variant of [`layer_forward`]: parameters are supplied as
 /// a bare-name → tensor map (the capture-artifact order, no `l{i}.`
 /// prefix). This is what the native capture path in the pruning unit runs
 /// on — it holds a layer's tensors without a full `ModelParams`.
+///
+/// The pruned linear operators may be *absent* from the map: `linop`
+/// receives the dense weight as an `Option` and the compiled sparse path
+/// (`sparse::compile`) substitutes its compressed operator instead of a
+/// dense tensor it never materializes. Norms and biases must be present.
 pub fn layer_forward_mapped<F>(
     spec: &ModelSpec,
     params: &BTreeMap<&str, &Tensor>,
@@ -81,18 +88,19 @@ pub fn layer_forward_mapped<F>(
     mut linop: F,
 ) -> Tensor
 where
-    F: FnMut(&str, &Tensor, &Tensor) -> Tensor,
+    F: FnMut(&str, Option<&Tensor>, &Tensor) -> Tensor,
 {
     let p = |n: &str| *params.get(n).unwrap_or_else(|| panic!("layer param '{n}'"));
+    let w = |n: &str| params.get(n).copied();
     let (s, d) = (x.rows(), spec.d);
     let h = match spec.family {
         FamilyKind::Topt => layernorm(x, p("ln1_g"), p("ln1_b")),
         FamilyKind::Tllama => rmsnorm(x, p("rms1_g")),
     };
-    let mut q = linop("wq", p("wq"), &h);
-    let mut k = linop("wk", p("wk"), &h);
+    let mut q = linop("wq", w("wq"), &h);
+    let mut k = linop("wk", w("wk"), &h);
     let v = {
-        let mut v = linop("wv", p("wv"), &h);
+        let mut v = linop("wv", w("wv"), &h);
         if spec.bias {
             add_bias(&mut v, p("bv"));
         }
@@ -107,7 +115,7 @@ where
         rope_inplace(&mut k, spec.heads);
     }
     let ctx = causal_attention(&q, &k, &v, spec.heads);
-    let mut attn_out = linop("wo", p("wo"), &ctx);
+    let mut attn_out = linop("wo", w("wo"), &ctx);
     if spec.bias {
         add_bias(&mut attn_out, p("bo"));
     }
@@ -122,27 +130,27 @@ where
     };
     let mlp_out = match spec.family {
         FamilyKind::Topt => {
-            let mut f1 = linop("w1", p("w1"), &h2);
+            let mut f1 = linop("w1", w("w1"), &h2);
             if spec.bias {
                 add_bias(&mut f1, p("b1"));
             }
             for v in f1.data_mut() {
                 *v = gelu(*v);
             }
-            let mut f2 = linop("w2", p("w2"), &f1);
+            let mut f2 = linop("w2", w("w2"), &f1);
             if spec.bias {
                 add_bias(&mut f2, p("b2"));
             }
             f2
         }
         FamilyKind::Tllama => {
-            let gate = linop("wg", p("wg"), &h2);
-            let up = linop("wu", p("wu"), &h2);
+            let gate = linop("wg", w("wg"), &h2);
+            let up = linop("wu", w("wu"), &h2);
             let mut hidden = Tensor::zeros(vec![s, spec.ffn]);
             for ((h, &g), &u) in hidden.data_mut().iter_mut().zip(gate.data()).zip(up.data()) {
                 *h = silu(g) * u;
             }
-            linop("wd", p("wd"), &hidden)
+            linop("wd", w("wd"), &hidden)
         }
     };
     for (a, b) in x1.data_mut().iter_mut().zip(mlp_out.data()) {
@@ -154,13 +162,21 @@ where
 
 /// Final pre-head norm (public so the sparse path can reuse it).
 pub fn logits_final_norm(spec: &ModelSpec, params: &ModelParams, x: &Tensor) -> Tensor {
+    final_norm_with(spec, |n| params.req(n).expect("final-norm param"), x)
+}
+
+/// Final pre-head norm with a pluggable parameter lookup — the single
+/// home of the family → final-norm-parameter dispatch, shared by the
+/// dense path ([`logits_final_norm`]), the compiled sparse forward
+/// (`sparse::compiled_logits`) and the serving stack
+/// (`serve::batch::ServeModel`), so the three cannot drift apart.
+pub fn final_norm_with<'t, F>(spec: &ModelSpec, p: F, x: &Tensor) -> Tensor
+where
+    F: Fn(&str) -> &'t Tensor,
+{
     match spec.family {
-        FamilyKind::Topt => layernorm(
-            x,
-            params.req("lnf_g").expect("lnf_g"),
-            params.req("lnf_b").expect("lnf_b"),
-        ),
-        FamilyKind::Tllama => rmsnorm(x, params.req("rmsf_g").expect("rmsf_g")),
+        FamilyKind::Topt => layernorm(x, p("lnf_g"), p("lnf_b")),
+        FamilyKind::Tllama => rmsnorm(x, p("rmsf_g")),
     }
 }
 

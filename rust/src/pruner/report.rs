@@ -69,6 +69,28 @@ impl PruneReport {
             self.elapsed.as_secs_f64()
         )
     }
+
+    /// Provenance blob for the sparse-artifact sidecar
+    /// (`ser::artifact::ArtifactMeta::prune`): what produced these
+    /// weights and how well the optimization converged.
+    pub fn provenance_json(&self) -> crate::ser::Json {
+        use crate::ser::Json;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("method".to_string(), Json::Str(self.method.clone()));
+        m.insert("sparsity".to_string(), Json::Str(self.sparsity_label.clone()));
+        // mean() of an empty report is NaN, which is not valid JSON
+        for (key, v) in [
+            ("mean_rel_error", self.mean_rel_error()),
+            ("mean_sparsity", self.mean_sparsity()),
+        ] {
+            if v.is_finite() {
+                m.insert(key.to_string(), Json::Num(v));
+            }
+        }
+        m.insert("fista_iters".to_string(), Json::Num(self.total_fista_iters() as f64));
+        m.insert("elapsed_s".to_string(), Json::Num(self.elapsed.as_secs_f64()));
+        Json::Obj(m)
+    }
 }
 
 #[cfg(test)]

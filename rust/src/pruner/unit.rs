@@ -430,7 +430,7 @@ fn capture_row(spec: &ModelSpec, map: &BTreeMap<&str, &Tensor>, x: &Tensor) -> R
         if let Some(k) = key {
             caps[k.output_index()] = Some(input.clone());
         }
-        ops::matmul_nt(input, w)
+        ops::matmul_nt(input, w.expect("capture map holds every dense layer param"))
     });
     RowCapture { caps, y }
 }

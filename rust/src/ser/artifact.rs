@@ -1,0 +1,291 @@
+//! Sparse model artifacts: a compiled pruned model
+//! (`sparse::compile::CompiledLayers`) persisted as a `.fsa` container
+//! (see [`super::sparsefile`] for the binary layout and integrity
+//! checks) plus a `.meta.json` sidecar recording the model spec name,
+//! sparsity target, storage format and prune provenance.
+//!
+//! This is the durable form of the paper's "substantial memory
+//! conservation": the pruner writes the artifact once, straight from its
+//! output (`prune --emit-sparse`), and every consumer
+//! (`serve --artifact`, `serve-bench --artifact`, `eval --artifact`)
+//! loads compressed operators directly — O(nnz) I/O, no dense
+//! checkpoint round-trip, no recompress-at-startup, and never more than
+//! one copy of any pruned weight in memory.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{repo_root, Presets, SparseFormat, Sparsity};
+use crate::sparse::{CompiledLayers, SparseOp};
+use crate::tensor::Tensor;
+
+use super::json::Json;
+use super::sparsefile::{self, SparseRecord, SparseRecordRef};
+
+/// Provenance + identity stored in the `.meta.json` sidecar.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub model: String,
+    pub corpus: String,
+    /// Pruning method that produced the weights ("fista", "wanda", ...).
+    pub method: String,
+    /// Sparsity target label ("50%", "2:4"), `Sparsity::parse`-able.
+    pub sparsity: String,
+    /// Requested storage format axis ("csr" | "nm" | "auto").
+    pub format: String,
+    pub seed: u64,
+    /// Optional structured prune diagnostics
+    /// (`pruner::PruneReport::provenance_json`).
+    pub prune: Option<Json>,
+}
+
+impl ArtifactMeta {
+    fn to_json(&self, compiled: &CompiledLayers) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("artifact_version".into(), Json::Num(sparsefile::VERSION as f64));
+        m.insert("model".into(), Json::Str(self.model.clone()));
+        m.insert("corpus".into(), Json::Str(self.corpus.clone()));
+        m.insert("method".into(), Json::Str(self.method.clone()));
+        m.insert("sparsity".into(), Json::Str(self.sparsity.clone()));
+        m.insert("format".into(), Json::Str(self.format.clone()));
+        // u64 must not round-trip through f64 (see ser::json::Json::as_u64)
+        m.insert("seed".into(), Json::Str(self.seed.to_string()));
+        if let Some(p) = &self.prune {
+            m.insert("prune".into(), p.clone());
+        }
+        let (csr, nm) = compiled.format_counts();
+        let mut stats = BTreeMap::new();
+        stats.insert("ops".into(), Json::Num(compiled.op_count() as f64));
+        stats.insert("csr_ops".into(), Json::Num(csr as f64));
+        stats.insert("nm_ops".into(), Json::Num(nm as f64));
+        stats.insert("nnz".into(), Json::Num(compiled.nnz() as f64));
+        stats.insert("density".into(), Json::Num(compiled.density()));
+        stats.insert("storage_bytes".into(), Json::Num(compiled.storage_bytes() as f64));
+        stats.insert("resident_bytes".into(), Json::Num(compiled.resident_bytes() as f64));
+        m.insert("stats".into(), Json::Obj(stats));
+        Json::Obj(m)
+    }
+
+    fn from_json(v: &Json) -> Result<ArtifactMeta> {
+        let version = v
+            .req("artifact_version")?
+            .as_usize()
+            .context("artifact_version")? as u32;
+        if version != sparsefile::VERSION {
+            bail!(
+                "artifact sidecar version {version}, this build reads version {}",
+                sparsefile::VERSION
+            );
+        }
+        Ok(ArtifactMeta {
+            model: v.req("model")?.as_str().context("model")?.to_string(),
+            corpus: v.req("corpus")?.as_str().context("corpus")?.to_string(),
+            method: v.req("method")?.as_str().context("method")?.to_string(),
+            sparsity: v.req("sparsity")?.as_str().context("sparsity")?.to_string(),
+            format: v.req("format")?.as_str().context("format")?.to_string(),
+            seed: v.req("seed")?.as_u64().context("seed (u64)")?,
+            prune: v.get("prune").cloned(),
+        })
+    }
+}
+
+/// Sidecar location next to the `.fsa` payload.
+pub fn meta_path(path: &Path) -> PathBuf {
+    path.with_extension("meta.json")
+}
+
+/// Guard against driving an artifact under the wrong `--model` flag —
+/// shared by every CLI artifact entry point (eval, serve, serve-bench).
+/// `expected = None` (flag not given) accepts any artifact.
+pub fn check_model(meta: &ArtifactMeta, expected: Option<&str>) -> Result<()> {
+    if let Some(m) = expected {
+        if m != meta.model {
+            bail!("artifact is for model '{}', --model says '{m}'", meta.model);
+        }
+    }
+    Ok(())
+}
+
+/// True if both the payload and the sidecar exist.
+pub fn exists(path: &Path) -> bool {
+    path.exists() && meta_path(path).exists()
+}
+
+/// Save a compiled model: `<path>` (binary records) + `<path>.meta.json`.
+/// Compressed operators are serialized as compressed — the dense form of
+/// a pruned weight is never materialized on either side.
+pub fn save(path: &Path, compiled: &CompiledLayers, meta: &ArtifactMeta) -> Result<()> {
+    let mut entries: Vec<(String, SparseRecordRef<'_>)> = Vec::new();
+    for (name, op) in compiled.iter_ops() {
+        let rec = match op {
+            SparseOp::Csr(c) => SparseRecordRef::Csr(c),
+            SparseOp::Nm(p) => SparseRecordRef::Nm(p),
+        };
+        entries.push((name, rec));
+    }
+    for (name, t) in compiled.iter_residual() {
+        entries.push((name, SparseRecordRef::Dense(t)));
+    }
+    sparsefile::write_records(path, &entries)?;
+    std::fs::write(meta_path(path), meta.to_json(compiled).to_string_compact())
+        .with_context(|| format!("write {}", meta_path(path).display()))?;
+    Ok(())
+}
+
+/// Load a sparse artifact back into a validated [`CompiledLayers`]. All
+/// failure modes — missing sidecar, unknown model, version skew,
+/// truncation, checksum mismatch, missing/extra/mis-shaped records — are
+/// checked errors.
+pub fn load(path: &Path) -> Result<(CompiledLayers, ArtifactMeta)> {
+    let sidecar = meta_path(path);
+    let meta = ArtifactMeta::from_json(&Json::parse_file(&sidecar)?)
+        .with_context(|| format!("artifact sidecar {}", sidecar.display()))?;
+    let presets = Presets::load(&repo_root()?)?;
+    let spec = presets
+        .model(&meta.model)
+        .with_context(|| format!("artifact names unknown model '{}'", meta.model))?
+        .clone();
+    let format = SparseFormat::parse(&meta.format)
+        .with_context(|| format!("artifact sidecar {}", sidecar.display()))?;
+    let sparsity = Sparsity::parse(&meta.sparsity).ok();
+
+    let mut ops: Vec<BTreeMap<String, SparseOp>> =
+        (0..spec.layers).map(|_| BTreeMap::new()).collect();
+    let mut layer_residual: Vec<BTreeMap<String, Tensor>> =
+        (0..spec.layers).map(|_| BTreeMap::new()).collect();
+    let mut globals: BTreeMap<String, Tensor> = BTreeMap::new();
+    for (name, rec) in sparsefile::read_records(path)? {
+        let split = crate::sparse::compile::split_layer_name(&name);
+        match rec {
+            SparseRecord::Csr(c) => place_op(&mut ops, &name, split, SparseOp::Csr(c))?,
+            SparseRecord::Nm(p) => place_op(&mut ops, &name, split, SparseOp::Nm(p))?,
+            SparseRecord::Dense(t) => match split {
+                Some((li, bare)) => {
+                    let bare = bare.to_string();
+                    let layer = layer_residual.get_mut(li).with_context(|| {
+                        format!("record '{name}' names layer {li} beyond the model")
+                    })?;
+                    layer.insert(bare, t);
+                }
+                None => {
+                    globals.insert(name.clone(), t);
+                }
+            },
+        }
+    }
+    let compiled = CompiledLayers::from_parts(spec, format, sparsity, ops, layer_residual, globals)
+        .with_context(|| format!("validating {}", path.display()))?;
+    Ok((compiled, meta))
+}
+
+fn place_op(
+    ops: &mut [BTreeMap<String, SparseOp>],
+    name: &str,
+    split: Option<(usize, &str)>,
+    op: SparseOp,
+) -> Result<()> {
+    let Some((li, bare)) = split else {
+        bail!("compressed record '{name}' is not a layer operator");
+    };
+    let layer = ops
+        .get_mut(li)
+        .with_context(|| format!("record '{name}' names layer {li} beyond the model"))?;
+    layer.insert(bare.to_string(), op);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::init_params;
+    use crate::pruner::round_model_to_sparsity;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("fp_artifact_{name}_{}.fsa", std::process::id()))
+    }
+
+    fn compiled_fixture(format: SparseFormat, sp: Sparsity) -> CompiledLayers {
+        let presets = Presets::load(&repo_root().unwrap()).unwrap();
+        let spec = presets.model("topt-s1").unwrap().clone();
+        let params = round_model_to_sparsity(&spec, &init_params(&spec, 11), sp).unwrap();
+        CompiledLayers::compress(&spec, &params, format, Some(sp)).unwrap()
+    }
+
+    fn meta_fixture(format: &str, sparsity: &str) -> ArtifactMeta {
+        ArtifactMeta {
+            model: "topt-s1".into(),
+            corpus: "c4-syn".into(),
+            method: "magnitude".into(),
+            sparsity: sparsity.into(),
+            format: format.into(),
+            seed: u64::MAX,
+            prune: None,
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip_preserves_everything() {
+        for (format, sp, label) in [
+            (SparseFormat::Csr, Sparsity::Unstructured(0.5), "50%"),
+            (SparseFormat::Auto, Sparsity::Semi(2, 4), "2:4"),
+        ] {
+            let c = compiled_fixture(format, sp);
+            let path = tmp(&format!("rt_{}", format.label()));
+            save(&path, &c, &meta_fixture(format.label(), label)).unwrap();
+            assert!(exists(&path));
+            let (back, meta) = load(&path).unwrap();
+            assert_eq!(meta.model, "topt-s1");
+            assert_eq!(meta.seed, u64::MAX, "u64 seed must round-trip exactly");
+            assert_eq!(meta.sparsity, label);
+            assert_eq!(back.op_count(), c.op_count());
+            assert_eq!(back.nnz(), c.nnz());
+            assert_eq!(back.storage_bytes(), c.storage_bytes());
+            assert_eq!(back.resident_bytes(), c.resident_bytes());
+            assert_eq!(back.format_counts(), c.format_counts());
+            // compiled forwards agree bitwise
+            let tokens: Vec<i32> = (0..12).map(|i| (i * 5 + 1) % 96).collect();
+            let a = crate::sparse::compiled_logits(&c, &tokens);
+            let b = crate::sparse::compiled_logits(&back, &tokens);
+            for (x, y) in a.data().iter().zip(b.data()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            std::fs::remove_file(&path).ok();
+            std::fs::remove_file(meta_path(&path)).ok();
+        }
+    }
+
+    #[test]
+    fn missing_sidecar_and_wrong_model_fail() {
+        let c = compiled_fixture(SparseFormat::Csr, Sparsity::Unstructured(0.5));
+        let path = tmp("nosidecar");
+        save(&path, &c, &meta_fixture("csr", "50%")).unwrap();
+        std::fs::remove_file(meta_path(&path)).unwrap();
+        assert!(!exists(&path));
+        assert!(load(&path).is_err());
+        // wrong model in the sidecar: records no longer match the spec
+        let mut meta = meta_fixture("csr", "50%");
+        meta.model = "tllama-s1".into();
+        save(&path, &c, &meta).unwrap();
+        let err = format!("{:#}", load(&path).unwrap_err());
+        assert!(err.contains("missing") || err.contains("unexpected"), "{err}");
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(meta_path(&path)).ok();
+    }
+
+    #[test]
+    fn sidecar_version_skew_is_rejected() {
+        let c = compiled_fixture(SparseFormat::Csr, Sparsity::Unstructured(0.5));
+        let path = tmp("sidecar_skew");
+        save(&path, &c, &meta_fixture("csr", "50%")).unwrap();
+        let sidecar = meta_path(&path);
+        let text = std::fs::read_to_string(&sidecar).unwrap();
+        std::fs::write(&sidecar, text.replace("\"artifact_version\":1", "\"artifact_version\":9"))
+            .unwrap();
+        let err = format!("{:#}", load(&path).unwrap_err());
+        assert!(err.contains("version 9"), "{err}");
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&sidecar).ok();
+    }
+}

@@ -26,7 +26,9 @@ impl CheckpointMeta {
         m.insert("corpus".into(), Json::Str(self.corpus.clone()));
         m.insert("steps".into(), Json::Num(self.steps as f64));
         m.insert("final_loss".into(), Json::Num(self.final_loss));
-        m.insert("seed".into(), Json::Num(self.seed as f64));
+        // u64 as a string: a JSON number rides through f64, which silently
+        // corrupts seeds above 2^53 (see Json::as_u64)
+        m.insert("seed".into(), Json::Str(self.seed.to_string()));
         Json::Obj(m)
     }
 
@@ -36,7 +38,7 @@ impl CheckpointMeta {
             corpus: v.req("corpus")?.as_str().context("corpus")?.to_string(),
             steps: v.req("steps")?.as_usize().context("steps")?,
             final_loss: v.req("final_loss")?.as_f64().context("final_loss")?,
-            seed: v.req("seed")?.as_f64().context("seed")? as u64,
+            seed: v.req("seed")?.as_u64().context("seed (u64; numbers above 2^53 are rejected)")?,
         })
     }
 }
@@ -130,6 +132,40 @@ mod tests {
         assert!(!exists(&path));
         assert!(load(&path).is_err());
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn seed_above_2_53_roundtrips_exactly() {
+        // regression: seeds used to ride through f64 and come back wrong
+        let presets = Presets::load(&repo_root().unwrap()).unwrap();
+        let spec = presets.model("topt-s1").unwrap();
+        let params = init_params(spec, 2);
+        for seed in [u64::MAX, (1u64 << 53) + 1, 0] {
+            let meta = CheckpointMeta {
+                model: "topt-s1".into(),
+                corpus: "ptb-syn".into(),
+                steps: 1,
+                final_loss: 0.0,
+                seed,
+            };
+            let path = tmp(&format!("bigseed_{seed}"));
+            save(&path, &params, &meta).unwrap();
+            let (_, back) = load(&path).unwrap();
+            assert_eq!(back.seed, seed, "seed must not round-trip through f64");
+            std::fs::remove_file(&path).ok();
+            std::fs::remove_file(meta_path(&path)).ok();
+        }
+        // a legacy sidecar with a too-large numeric seed is rejected, not
+        // silently corrupted
+        let bad = Json::parse(
+            r#"{"model":"m","corpus":"c","steps":1,"final_loss":0,"seed":18446744073709551615}"#,
+        )
+        .unwrap();
+        assert!(CheckpointMeta::from_json(&bad).is_err());
+        // ...while a small legacy numeric seed still loads
+        let ok = Json::parse(r#"{"model":"m","corpus":"c","steps":1,"final_loss":0,"seed":7}"#)
+            .unwrap();
+        assert_eq!(CheckpointMeta::from_json(&ok).unwrap().seed, 7);
     }
 
     #[test]

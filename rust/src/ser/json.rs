@@ -76,6 +76,23 @@ impl Json {
         self.as_f64().map(|x| x as usize)
     }
 
+    /// Exact u64 accessor. JSON numbers ride through `f64`, which silently
+    /// corrupts integers above 2^53 — so u64 fields (seeds) are written as
+    /// *strings* and read back here. Accepts a numeric value only when it
+    /// is a non-negative integer *strictly below* 2^53 (every such integer
+    /// is exactly representable; 2^53 itself is ambiguous with 2^53 + 1,
+    /// which rounds onto it); anything else (including a legacy too-large
+    /// `Num`) is `None`, which callers surface as a checked error rather
+    /// than a corrupted value.
+    pub fn as_u64(&self) -> Option<u64> {
+        const EXACT: f64 = 9_007_199_254_740_992.0; // 2^53
+        match self {
+            Json::Str(s) => s.parse().ok(),
+            Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x < EXACT => Some(*x as u64),
+            _ => None,
+        }
+    }
+
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),

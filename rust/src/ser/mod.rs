@@ -1,8 +1,13 @@
 //! Serialization substrates: a JSON parser/writer (serde is not available
-//! in the offline image) and a binary tensor/checkpoint format.
+//! in the offline image), a binary tensor/checkpoint format, and the
+//! sparse-artifact container that persists compiled pruned models
+//! (compressed operators + residual dense params) without a dense
+//! round-trip.
 
+pub mod artifact;
 pub mod checkpoint;
 pub mod json;
+pub mod sparsefile;
 pub mod tensorfile;
 
 pub use json::Json;

@@ -1,0 +1,533 @@
+//! `.fsa` — the binary sparse-artifact container: compressed operators
+//! serialized *as compressed* (no dense round-trip) next to the residual
+//! dense tensors, each record integrity-checked.
+//!
+//! Layout (little-endian):
+//! ```text
+//!   magic    "FSA1" (4 bytes)
+//!   version  u32 (currently 1; mismatches are a checked error)
+//!   count    u32
+//!   repeat count times:
+//!     name_len u32, name utf-8 bytes
+//!     kind     u8  (0 = dense tensor, 1 = CSR, 2 = packed n:m)
+//!     len      u64 payload bytes
+//!     payload  (kind-specific, see below)
+//!     crc      u32 (CRC-32/IEEE of the payload)
+//!   ```
+//! Payloads:
+//! * dense — `ndim u32, dims u64 × ndim, data f32 × prod(dims)`
+//! * CSR   — `rows u64, cols u64, nnz u64, indptr u32 × (rows+1),
+//!   indices u32 × nnz, values f32 × nnz`
+//! * n:m   — `rows u64, cols u64, n u32, m u32, slots u64,
+//!   values f32 × slots, indices u8 × slots`
+//!
+//! Every failure mode is a checked `Err`, never a panic: wrong magic,
+//! version skew, truncation (any short read, or a payload shorter/longer
+//! than its declared length), per-record checksum mismatch, and
+//! internally inconsistent payloads (non-monotonic `indptr`, out-of-range
+//! column indices, slot-count mismatches). The high-level artifact API
+//! lives in [`super::artifact`].
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::sparse::{CsrMatrix, NmMatrix};
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 4] = b"FSA1";
+/// Container format version this build reads and writes.
+pub const VERSION: u32 = 1;
+
+const KIND_DENSE: u8 = 0;
+const KIND_CSR: u8 = 1;
+const KIND_NM: u8 = 2;
+
+/// Sanity bound on any single payload (tensors in this repo are far
+/// smaller; a bigger declared length means corruption).
+const MAX_PAYLOAD: u64 = 1 << 33;
+
+/// One deserialized record.
+#[derive(Clone, Debug)]
+pub enum SparseRecord {
+    Dense(Tensor),
+    Csr(CsrMatrix),
+    Nm(NmMatrix),
+}
+
+/// Borrowed record for writing (no clones of the payloads).
+#[derive(Clone, Copy)]
+pub enum SparseRecordRef<'a> {
+    Dense(&'a Tensor),
+    Csr(&'a CsrMatrix),
+    Nm(&'a NmMatrix),
+}
+
+/// CRC-32/IEEE (reflected, poly 0xEDB88320) — the integrity check behind
+/// every record.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, v: &[f32]) {
+    // bulk-copy the f32 payload (little-endian hosts lay it out as-is)
+    for &x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_u32s(out: &mut Vec<u8>, v: &[u32]) {
+    for &x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn encode_payload(rec: &SparseRecordRef<'_>) -> Vec<u8> {
+    match rec {
+        SparseRecordRef::Dense(t) => {
+            let mut out = Vec::with_capacity(4 + 8 * t.shape().len() + 4 * t.len());
+            put_u32(&mut out, t.shape().len() as u32);
+            for &d in t.shape() {
+                put_u64(&mut out, d as u64);
+            }
+            put_f32s(&mut out, t.data());
+            out
+        }
+        SparseRecordRef::Csr(c) => {
+            let mut out =
+                Vec::with_capacity(24 + 4 * c.indptr.len() + 4 * c.indices.len() + 4 * c.values.len());
+            put_u64(&mut out, c.rows as u64);
+            put_u64(&mut out, c.cols as u64);
+            put_u64(&mut out, c.nnz() as u64);
+            put_u32s(&mut out, &c.indptr);
+            put_u32s(&mut out, &c.indices);
+            put_f32s(&mut out, &c.values);
+            out
+        }
+        SparseRecordRef::Nm(p) => {
+            let mut out = Vec::with_capacity(32 + 5 * p.values.len());
+            put_u64(&mut out, p.rows as u64);
+            put_u64(&mut out, p.cols as u64);
+            put_u32(&mut out, p.n as u32);
+            put_u32(&mut out, p.m as u32);
+            put_u64(&mut out, p.values.len() as u64);
+            put_f32s(&mut out, &p.values);
+            out.extend_from_slice(&p.indices);
+            out
+        }
+    }
+}
+
+fn kind_of(rec: &SparseRecordRef<'_>) -> u8 {
+    match rec {
+        SparseRecordRef::Dense(_) => KIND_DENSE,
+        SparseRecordRef::Csr(_) => KIND_CSR,
+        SparseRecordRef::Nm(_) => KIND_NM,
+    }
+}
+
+/// Write records in the order given.
+pub fn write_records(path: &Path, entries: &[(String, SparseRecordRef<'_>)]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let file =
+        std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(entries.len() as u32).to_le_bytes())?;
+    for (name, rec) in entries {
+        let nb = name.as_bytes();
+        w.write_all(&(nb.len() as u32).to_le_bytes())?;
+        w.write_all(nb)?;
+        w.write_all(&[kind_of(rec)])?;
+        let payload = encode_payload(rec);
+        w.write_all(&(payload.len() as u64).to_le_bytes())?;
+        w.write_all(&payload)?;
+        w.write_all(&crc32(&payload).to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Little-endian cursor over one record's payload; every read is
+/// bounds-checked so a short payload is a checked error.
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+    name: &'a str,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("record '{}': payload truncated (corrupt artifact)", self.name);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let raw = self.take(4 * n)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn u32s(&mut self, n: usize) -> Result<Vec<u32>> {
+        let raw = self.take(4 * n)?;
+        Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.i != self.b.len() {
+            bail!(
+                "record '{}': {} trailing payload bytes (corrupt artifact)",
+                self.name,
+                self.b.len() - self.i
+            );
+        }
+        Ok(())
+    }
+}
+
+fn count_checked(v: u64, what: &str, name: &str) -> Result<usize> {
+    if v > MAX_PAYLOAD {
+        bail!("record '{name}': implausible {what} {v} (corrupt artifact)");
+    }
+    Ok(v as usize)
+}
+
+fn decode_payload(name: &str, kind: u8, payload: &[u8]) -> Result<SparseRecord> {
+    let mut c = Cursor { b: payload, i: 0, name };
+    match kind {
+        KIND_DENSE => {
+            let ndim = c.u32()? as usize;
+            if ndim > 8 {
+                bail!("record '{name}': ndim {ndim} (corrupt artifact)");
+            }
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(count_checked(c.u64()?, "dimension", name)?);
+            }
+            // checked product: corrupt dims must not overflow-panic
+            let len = dims
+                .iter()
+                .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+                .filter(|&l| l as u64 <= MAX_PAYLOAD)
+                .with_context(|| {
+                    format!("record '{name}': implausible tensor shape (corrupt artifact)")
+                })?;
+            let data = c.f32s(len)?;
+            c.done()?;
+            Ok(SparseRecord::Dense(Tensor::from_vec(dims, data)))
+        }
+        KIND_CSR => {
+            let rows = count_checked(c.u64()?, "row count", name)?;
+            let cols = count_checked(c.u64()?, "column count", name)?;
+            let nnz = count_checked(c.u64()?, "nnz", name)?;
+            if nnz > rows.saturating_mul(cols) {
+                bail!("record '{name}': nnz {nnz} > rows*cols (corrupt artifact)");
+            }
+            let indptr = c.u32s(rows + 1)?;
+            let indices = c.u32s(nnz)?;
+            let values = c.f32s(nnz)?;
+            c.done()?;
+            if indptr.first() != Some(&0) || indptr.last().copied() != Some(nnz as u32) {
+                bail!("record '{name}': indptr endpoints do not match nnz (corrupt artifact)");
+            }
+            if indptr.windows(2).any(|w| w[0] > w[1]) {
+                bail!("record '{name}': indptr not monotonic (corrupt artifact)");
+            }
+            if indices.iter().any(|&j| j as usize >= cols) {
+                bail!("record '{name}': column index out of range (corrupt artifact)");
+            }
+            Ok(SparseRecord::Csr(CsrMatrix { rows, cols, indptr, indices, values }))
+        }
+        KIND_NM => {
+            let rows = count_checked(c.u64()?, "row count", name)?;
+            let cols = count_checked(c.u64()?, "column count", name)?;
+            let n = c.u32()? as usize;
+            let m = c.u32()? as usize;
+            if m == 0 || n == 0 || n > m || m > 256 {
+                bail!("record '{name}': degenerate {n}:{m} pattern (corrupt artifact)");
+            }
+            if cols % m != 0 {
+                bail!("record '{name}': cols {cols} not divisible by m {m} (corrupt artifact)");
+            }
+            let slots = count_checked(c.u64()?, "slot count", name)?;
+            // checked product: corrupt rows/cols must not overflow-panic
+            let want = rows
+                .checked_mul(cols / m)
+                .and_then(|g| g.checked_mul(n))
+                .with_context(|| {
+                    format!("record '{name}': implausible n:m shape (corrupt artifact)")
+                })?;
+            if slots != want {
+                bail!("record '{name}': slot count {slots} does not match shape (corrupt artifact)");
+            }
+            let values = c.f32s(slots)?;
+            let indices = c.take(slots)?.to_vec();
+            c.done()?;
+            if indices.iter().any(|&j| j as usize >= m) {
+                bail!("record '{name}': in-group index out of range (corrupt artifact)");
+            }
+            Ok(SparseRecord::Nm(NmMatrix { rows, cols, n, m, values, indices }))
+        }
+        other => bail!("record '{name}': unknown record kind {other} (corrupt artifact)"),
+    }
+}
+
+fn read_exact_ctx(r: &mut impl Read, buf: &mut [u8], path: &Path, what: &str) -> Result<()> {
+    r.read_exact(buf)
+        .with_context(|| format!("{}: truncated reading {what}", path.display()))
+}
+
+/// Read all records, preserving file order.
+pub fn read_records(path: &Path) -> Result<Vec<(String, SparseRecord)>> {
+    let file = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut r = BufReader::new(file);
+    let mut magic = [0u8; 4];
+    read_exact_ctx(&mut r, &mut magic, path, "magic")?;
+    if &magic != MAGIC {
+        bail!("{}: not a sparse artifact (bad magic)", path.display());
+    }
+    let mut v = [0u8; 4];
+    read_exact_ctx(&mut r, &mut v, path, "version")?;
+    let version = u32::from_le_bytes(v);
+    if version != VERSION {
+        bail!(
+            "{}: artifact version {version}, this build reads version {VERSION}; \
+             re-export the artifact with a matching build",
+            path.display()
+        );
+    }
+    let mut cnt = [0u8; 4];
+    read_exact_ctx(&mut r, &mut cnt, path, "record count")?;
+    let count = u32::from_le_bytes(cnt) as usize;
+    let mut out = Vec::with_capacity(count.min(4096));
+    for _ in 0..count {
+        let mut nl = [0u8; 4];
+        read_exact_ctx(&mut r, &mut nl, path, "record name length")?;
+        let name_len = u32::from_le_bytes(nl) as usize;
+        if name_len > 1 << 16 {
+            bail!("{}: record name too long (corrupt artifact)", path.display());
+        }
+        let mut name = vec![0u8; name_len];
+        read_exact_ctx(&mut r, &mut name, path, "record name")?;
+        let name = String::from_utf8(name)
+            .with_context(|| format!("{}: record name not utf-8", path.display()))?;
+        let mut kind = [0u8; 1];
+        read_exact_ctx(&mut r, &mut kind, path, "record kind")?;
+        let mut len = [0u8; 8];
+        read_exact_ctx(&mut r, &mut len, path, "payload length")?;
+        let payload_len = u64::from_le_bytes(len);
+        if payload_len > MAX_PAYLOAD {
+            bail!("{}: record '{name}' declares {payload_len} payload bytes (corrupt artifact)", path.display());
+        }
+        let mut payload = vec![0u8; payload_len as usize];
+        read_exact_ctx(&mut r, &mut payload, path, "record payload")?;
+        let mut crc = [0u8; 4];
+        read_exact_ctx(&mut r, &mut crc, path, "record checksum")?;
+        let want = u32::from_le_bytes(crc);
+        let got = crc32(&payload);
+        if got != want {
+            bail!(
+                "{}: checksum mismatch in record '{name}' (stored {want:#010x}, computed \
+                 {got:#010x}) — corrupt artifact",
+                path.display()
+            );
+        }
+        let rec = decode_payload(&name, kind[0], &payload)
+            .with_context(|| path.display().to_string())?;
+        out.push((name, rec));
+    }
+    // a corrupted (shrunk) record count would otherwise pass silently
+    let mut probe = [0u8; 1];
+    if r.read(&mut probe)? != 0 {
+        bail!("{}: trailing data after {count} records (corrupt artifact)", path.display());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Sparsity;
+    use crate::pruner::round_to_sparsity;
+    use crate::util::Pcg64;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("fsa_test_{name}_{}.fsa", std::process::id()))
+    }
+
+    fn fixture() -> (Tensor, CsrMatrix, NmMatrix) {
+        let mut rng = Pcg64::seeded(3);
+        let dense = Tensor::from_vec(vec![4, 8], rng.normal_vec(32, 1.0));
+        let wc = round_to_sparsity(&dense, Sparsity::Unstructured(0.5));
+        let csr = CsrMatrix::from_dense(&wc).unwrap();
+        let wn = round_to_sparsity(&dense, Sparsity::Semi(2, 4));
+        let nm = NmMatrix::from_dense(&wn, 2, 4).unwrap();
+        (dense, csr, nm)
+    }
+
+    fn write_fixture(path: &std::path::Path) -> (Tensor, CsrMatrix, NmMatrix) {
+        let (dense, csr, nm) = fixture();
+        write_records(
+            path,
+            &[
+                ("a.dense".into(), SparseRecordRef::Dense(&dense)),
+                ("b.csr".into(), SparseRecordRef::Csr(&csr)),
+                ("c.nm".into(), SparseRecordRef::Nm(&nm)),
+            ],
+        )
+        .unwrap();
+        (dense, csr, nm)
+    }
+
+    #[test]
+    fn roundtrip_all_kinds() {
+        let path = tmp("roundtrip");
+        let (dense, csr, nm) = write_fixture(&path);
+        let back = read_records(&path).unwrap();
+        assert_eq!(back.len(), 3);
+        match &back[0].1 {
+            SparseRecord::Dense(t) => assert_eq!(t, &dense),
+            other => panic!("expected dense, got {other:?}"),
+        }
+        match &back[1].1 {
+            SparseRecord::Csr(c) => {
+                assert_eq!(c.indptr, csr.indptr);
+                assert_eq!(c.indices, csr.indices);
+                assert_eq!(c.values, csr.values);
+                assert_eq!(c.to_dense(), csr.to_dense());
+            }
+            other => panic!("expected csr, got {other:?}"),
+        }
+        match &back[2].1 {
+            SparseRecord::Nm(p) => {
+                assert_eq!(p.values, nm.values);
+                assert_eq!(p.indices, nm.indices);
+                assert_eq!(p.to_dense(), nm.to_dense());
+            }
+            other => panic!("expected nm, got {other:?}"),
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_version() {
+        let path = tmp("magic");
+        write_fixture(&path);
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[0] = b'X';
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_records(&path).unwrap_err().to_string();
+        assert!(err.contains("bad magic"), "{err}");
+        // version skew: patch the version field
+        bytes[0] = b'F';
+        bytes[4..8].copy_from_slice(&99u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{:#}", read_records(&path).unwrap_err());
+        assert!(err.contains("version 99"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_truncation_and_bitflips() {
+        let path = tmp("corrupt");
+        write_fixture(&path);
+        let bytes = std::fs::read(&path).unwrap();
+        // truncate at several depths: header, mid-record, final checksum
+        for keep in [3usize, 10, bytes.len() / 2, bytes.len() - 2] {
+            std::fs::write(&path, &bytes[..keep]).unwrap();
+            let err = format!("{:#}", read_records(&path).unwrap_err());
+            assert!(err.contains("truncated") || err.contains("corrupt"), "keep {keep}: {err}");
+        }
+        // flip one byte inside the first record's payload: the first
+        // record starts after the 12-byte header with name "a.dense"
+        // (4 + 7 bytes), kind (1) and length (8) — payload starts at 32.
+        let mut flipped = bytes.clone();
+        flipped[36] ^= 0x40;
+        std::fs::write(&path, &flipped).unwrap();
+        let err = read_records(&path).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_inconsistent_payloads() {
+        // a CSR record whose indices point past cols
+        let csr = CsrMatrix {
+            rows: 1,
+            cols: 2,
+            indptr: vec![0, 1],
+            indices: vec![5],
+            values: vec![1.0],
+        };
+        let path = tmp("inconsistent");
+        write_records(&path, &[("bad".into(), SparseRecordRef::Csr(&csr))]).unwrap();
+        let err = format!("{:#}", read_records(&path).unwrap_err());
+        assert!(err.contains("out of range"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_overflowing_shapes_without_panicking() {
+        // dims that pass the per-value bound but overflow usize when
+        // multiplied must be a checked error, not a multiply panic
+        let mut payload = Vec::new();
+        put_u32(&mut payload, 2);
+        put_u64(&mut payload, 1u64 << 33);
+        put_u64(&mut payload, 1u64 << 33);
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&3u32.to_le_bytes());
+        bytes.extend_from_slice(b"big");
+        bytes.push(KIND_DENSE);
+        bytes.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(&payload);
+        bytes.extend_from_slice(&crc32(&payload).to_le_bytes());
+        let path = tmp("overflow");
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{:#}", read_records(&path).unwrap_err());
+        assert!(err.contains("implausible"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn crc32_matches_known_vector() {
+        // IEEE check value for "123456789"
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+}

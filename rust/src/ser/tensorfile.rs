@@ -92,6 +92,15 @@ pub fn read_tensor_map(path: &Path) -> Result<BTreeMap<String, Tensor>> {
     Ok(read_tensors(path)?.into_iter().collect())
 }
 
+/// Exact on-disk byte count [`write_tensors`] would produce for tensors
+/// of the given names and shapes, without materializing them — the
+/// dense-checkpoint baseline the artifact benches compare against.
+pub fn encoded_len<'a>(entries: impl Iterator<Item = (&'a str, &'a [usize])>) -> usize {
+    8 + entries
+        .map(|(name, shape)| 4 + name.len() + 4 + 8 * shape.len() + 4 * shape.iter().product::<usize>())
+        .sum::<usize>()
+}
+
 fn read_u32(r: &mut impl Read) -> Result<u32> {
     let mut b = [0u8; 4];
     r.read_exact(&mut b)?;
@@ -109,6 +118,10 @@ mod tests {
         let a = Tensor::from_vec(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
         let b = Tensor::from_vec(vec![4], vec![-1., 0., 1., 2.]);
         write_tensors(&path, &[("a".into(), &a), ("b".into(), &b)]).unwrap();
+        let want_len = encoded_len(
+            [("a", &[2usize, 3][..]), ("b", &[4usize][..])].into_iter(),
+        );
+        assert_eq!(std::fs::metadata(&path).unwrap().len() as usize, want_len);
         let back = read_tensors(&path).unwrap();
         assert_eq!(back.len(), 2);
         assert_eq!(back[0].0, "a");

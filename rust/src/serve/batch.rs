@@ -10,47 +10,86 @@
 //! whether it decodes alone, inside any batch composition, or through the
 //! full-recompute `eval::generate` path — the determinism contract the
 //! serving tests pin down.
+//!
+//! Weights come from one of two sources, resolved once at construction:
+//! * **Dense** — a borrowed `ModelParams` with per-layer bare-name maps
+//!   (no per-token name formatting).
+//! * **Compiled** — a `sparse::compile::CompiledLayers`, owned (artifact
+//!   load: the process holds exactly one copy of each pruned weight, the
+//!   compressed one) or borrowed (bench sweeps sharing one compression).
+//!
+//! Construction validates the full parameter set against the spec and
+//! returns checked errors for malformed checkpoints; the decode hot path
+//! then reads through infallible lookups instead of panicking mid-stream.
 
 use std::collections::BTreeMap;
 
-use anyhow::Result;
+use anyhow::{bail, Context, Result};
 
 use crate::config::{FamilyKind, ModelSpec, SparseFormat, Sparsity};
 use crate::model::forward;
-use crate::model::ops::pruned_ops;
 use crate::model::params::ModelParams;
-use crate::sparse::SparseOp;
+use crate::model::spec::{layer_param_specs, model_param_specs, param_count};
+use crate::sparse::CompiledLayers;
 use crate::tensor::{kernels, par, Tensor};
 
 use super::kv::KvBlock;
 
-/// Weights prepared for serving: per-layer parameter maps resolved once
-/// (no per-token name formatting), plus optional compression of the
-/// pruned operators — CSR or packed n:m per `config::SparseFormat` — for
-/// the sparse decode path.
+/// Weights prepared for serving; see the module docs.
 pub struct ServeModel<'p> {
     pub spec: ModelSpec,
-    params: &'p ModelParams,
-    /// Per-layer bare-name → tensor map in capture order.
-    layers: Vec<BTreeMap<String, &'p Tensor>>,
-    /// Per-layer bare-name → compressed operator (sparse serving only).
-    sparse: Option<Vec<BTreeMap<String, SparseOp>>>,
+    weights: Weights<'p>,
 }
 
+enum Weights<'p> {
+    Dense {
+        params: &'p ModelParams,
+        /// Per-layer bare-name → tensor map in capture order.
+        layers: Vec<BTreeMap<String, &'p Tensor>>,
+    },
+    Compiled(CompiledRef<'p>),
+}
+
+/// Own-or-borrow handle on a compiled model.
+enum CompiledRef<'p> {
+    Owned(Box<CompiledLayers>),
+    Borrowed(&'p CompiledLayers),
+}
+
+impl CompiledRef<'_> {
+    fn get(&self) -> &CompiledLayers {
+        match self {
+            CompiledRef::Owned(c) => c,
+            CompiledRef::Borrowed(c) => c,
+        }
+    }
+}
+
+/// Resolve every layer parameter once, with checked errors (a malformed
+/// checkpoint fails here, at construction, not mid-decode).
 fn resolve_layers<'p>(
     spec: &ModelSpec,
     params: &'p ModelParams,
-) -> Vec<BTreeMap<String, &'p Tensor>> {
-    let specs = crate::model::spec::layer_param_specs(spec, None);
+) -> Result<Vec<BTreeMap<String, &'p Tensor>>> {
+    let specs = layer_param_specs(spec, None);
     (0..spec.layers)
         .map(|li| {
             specs
                 .iter()
                 .map(|sp| {
+                    let name = format!("l{li}.{}", sp.name);
                     let t = params
-                        .req(&format!("l{li}.{}", sp.name))
-                        .expect("layer param must exist");
-                    (sp.name.clone(), t)
+                        .req(&name)
+                        .with_context(|| format!("serving {}: missing layer param", spec.name()))?;
+                    if t.shape() != sp.shape.as_slice() {
+                        bail!(
+                            "serving {}: param '{name}' has shape {:?}, expected {:?}",
+                            spec.name(),
+                            t.shape(),
+                            sp.shape
+                        );
+                    }
+                    Ok((sp.name.clone(), t))
                 })
                 .collect()
         })
@@ -58,14 +97,28 @@ fn resolve_layers<'p>(
 }
 
 impl<'p> ServeModel<'p> {
-    /// Serve the dense weights as-is.
-    pub fn dense(spec: &ModelSpec, params: &'p ModelParams) -> ServeModel<'p> {
-        ServeModel {
-            spec: spec.clone(),
-            params,
-            layers: resolve_layers(spec, params),
-            sparse: None,
+    /// Serve the dense weights as-is. Fails (instead of panicking later)
+    /// when `params` does not hold every parameter of `spec` at the
+    /// spec's shape — model-level params (embed, pos, final norm) are
+    /// derived from `model_param_specs`, the same source of truth
+    /// `CompiledLayers::validate` uses.
+    pub fn dense(spec: &ModelSpec, params: &'p ModelParams) -> Result<ServeModel<'p>> {
+        let layers = resolve_layers(spec, params)?;
+        for gs in model_param_specs(spec).iter().filter(|s| !s.name.contains('.')) {
+            let t = params
+                .req(&gs.name)
+                .with_context(|| format!("serving {}: missing model param", spec.name()))?;
+            if t.shape() != gs.shape.as_slice() {
+                bail!(
+                    "serving {}: param '{}' has shape {:?}, expected {:?}",
+                    spec.name(),
+                    gs.name,
+                    t.shape(),
+                    gs.shape
+                );
+            }
         }
+        Ok(ServeModel { spec: spec.clone(), weights: Weights::Dense { params, layers } })
     }
 
     /// Compress every pruned operator to CSR and serve those through the
@@ -75,106 +128,125 @@ impl<'p> ServeModel<'p> {
     }
 
     /// Compress every pruned operator with an explicit format
-    /// (`Csr` | `Nm` | per-operator `Auto`) and serve those through the
-    /// matching decode kernels. `sp` is the sparsity pattern hint the
-    /// `Nm` (required) and `Auto` formats check weights against.
+    /// (`Csr` | `Nm` | per-operator `Auto`) via the shared
+    /// `sparse::compile` pass and serve through the matching decode
+    /// kernels. `sp` is the sparsity pattern hint the `Nm` (required) and
+    /// `Auto` formats check weights against.
     pub fn sparse_as(
         spec: &ModelSpec,
-        params: &'p ModelParams,
+        params: &ModelParams,
         format: SparseFormat,
         sp: Option<Sparsity>,
     ) -> Result<ServeModel<'p>> {
-        let mut sparse = Vec::with_capacity(spec.layers);
-        for li in 0..spec.layers {
-            let mut ops = BTreeMap::new();
-            for op in pruned_ops(spec) {
-                let w = params.req(&format!("l{li}.{}", op.name))?;
-                ops.insert(op.name.to_string(), SparseOp::compress(w, format, sp)?);
-            }
-            sparse.push(ops);
-        }
-        Ok(ServeModel {
-            spec: spec.clone(),
-            params,
-            layers: resolve_layers(spec, params),
-            sparse: Some(sparse),
-        })
+        let compiled = CompiledLayers::compress(spec, params, format, sp)?;
+        Ok(ServeModel::from_compiled(compiled))
     }
 
-    pub fn params(&self) -> &'p ModelParams {
-        self.params
+    /// Serve an owned compiled model — the artifact path: the compressed
+    /// operators and residual dense params here are the *only* copy of
+    /// the weights the process holds.
+    pub fn from_compiled(compiled: CompiledLayers) -> ServeModel<'static> {
+        ServeModel {
+            spec: compiled.spec.clone(),
+            weights: Weights::Compiled(CompiledRef::Owned(Box::new(compiled))),
+        }
+    }
+
+    /// Serve a borrowed compiled model (bench sweeps share one
+    /// compression or one artifact load across engines).
+    pub fn from_compiled_ref(compiled: &'p CompiledLayers) -> ServeModel<'p> {
+        ServeModel {
+            spec: compiled.spec.clone(),
+            weights: Weights::Compiled(CompiledRef::Borrowed(compiled)),
+        }
+    }
+
+    /// The compiled weights, when serving compressed.
+    pub fn compiled(&self) -> Option<&CompiledLayers> {
+        match &self.weights {
+            Weights::Dense { .. } => None,
+            Weights::Compiled(c) => Some(c.get()),
+        }
     }
 
     pub fn is_sparse(&self) -> bool {
-        self.sparse.is_some()
+        self.compiled().is_some()
     }
 
     /// nnz fraction across the compressed operators (`None` for dense
     /// serving).
     pub fn density(&self) -> Option<f64> {
-        let sparse = self.sparse.as_ref()?;
-        let (nnz, total) = sparse
-            .iter()
-            .flat_map(|l| l.values())
-            .map(|c| (c.nnz(), c.rows() * c.cols()))
-            .fold((0usize, 0usize), |(a, b), (x, y)| (a + x, b + y));
-        Some(nnz as f64 / total.max(1) as f64)
+        self.compiled().map(|c| c.density())
     }
 
     /// Compressed bytes across the compressed operators (`None` for dense
     /// serving) — what the serve-bench storage column reports.
     pub fn storage_bytes(&self) -> Option<usize> {
-        let sparse = self.sparse.as_ref()?;
-        Some(sparse.iter().flat_map(|l| l.values()).map(|c| c.storage_bytes()).sum())
+        self.compiled().map(|c| c.storage_bytes())
     }
 
     /// Compressed vs dense bytes over the compressed operators.
     pub fn storage_ratio(&self) -> Option<f64> {
-        let sparse = self.sparse.as_ref()?;
-        let (sp_b, dense_b) = sparse
-            .iter()
-            .flat_map(|l| l.values())
-            .map(|c| (c.storage_bytes(), 4 * c.rows() * c.cols()))
-            .fold((0usize, 0usize), |(a, b), (x, y)| (a + x, b + y));
-        Some(sp_b as f64 / dense_b.max(1) as f64)
+        self.compiled().map(|c| c.storage_ratio())
+    }
+
+    /// Weight bytes this model actually holds resident: the full dense
+    /// parameter set, or — compiled — the compressed operators plus the
+    /// residual dense params (the artifact memory-conservation number).
+    pub fn resident_weight_bytes(&self) -> usize {
+        match &self.weights {
+            Weights::Dense { .. } => 4 * param_count(&self.spec),
+            Weights::Compiled(c) => c.get().resident_bytes(),
+        }
     }
 
     /// "dense", "csr", "nm", or "csr+nm" (mixed `Auto` dispatch).
     pub fn format_label(&self) -> &'static str {
-        let Some(sparse) = self.sparse.as_ref() else { return "dense" };
-        let (mut csr, mut nm) = (false, false);
-        for op in sparse.iter().flat_map(|l| l.values()) {
-            match op {
-                SparseOp::Csr(_) => csr = true,
-                SparseOp::Nm(_) => nm = true,
-            }
+        match self.compiled() {
+            None => "dense",
+            Some(c) => c.format_label(),
         }
-        match (csr, nm) {
-            (true, true) => "csr+nm",
-            (false, true) => "nm",
-            _ => "csr",
+    }
+
+    /// Model-level residual tensor; existence is validated at
+    /// construction, so a miss here is an internal invariant violation.
+    fn global(&self, name: &str) -> &Tensor {
+        match &self.weights {
+            Weights::Dense { params, .. } => params.get(name),
+            Weights::Compiled(c) => c.get().global(name),
         }
+        .unwrap_or_else(|| panic!("model param '{name}' (validated at construction)"))
     }
 
     fn lp(&self, layer: usize, name: &str) -> &Tensor {
-        self.layers[layer]
-            .get(name)
-            .unwrap_or_else(|| panic!("layer {layer} param '{name}'"))
+        match &self.weights {
+            Weights::Dense { layers, .. } => layers[layer].get(name).copied(),
+            Weights::Compiled(c) => c.get().residual_tensor(layer, name),
+        }
+        .unwrap_or_else(|| panic!("layer {layer} param '{name}' (validated at construction)"))
     }
 
-    /// X @ Wᵀ through the compressed operator when present, the skinny
-    /// dense kernel otherwise (all parallel over weight rows — the batch
-    /// dimension is 1–8 at decode time). Same contract as the `linop` in
-    /// `model::forward`: the dense kernel is bitwise equal to `matmul_nt`;
-    /// CSR and packed n:m are value-equal (skipped zeros and padded ±0.0
-    /// terms cannot change a sum's value).
+    /// X @ Wᵀ through the compressed operator when serving compiled, the
+    /// skinny dense kernel otherwise (all parallel over weight rows — the
+    /// batch dimension is 1–8 at decode time). Same contract as the
+    /// `linop` in `model::forward`: the dense kernel is bitwise equal to
+    /// `matmul_nt`; CSR and packed n:m are value-equal (skipped zeros and
+    /// padded ±0.0 terms cannot change a sum's value).
     fn linop(&self, layer: usize, name: &str, x: &Tensor) -> Tensor {
-        if let Some(sparse) = &self.sparse {
-            if let Some(c) = sparse[layer].get(name) {
-                return c.matmul_t_par(x);
-            }
+        match &self.weights {
+            Weights::Dense { .. } => kernels::matmul_nt_skinny(x, self.lp(layer, name)),
+            Weights::Compiled(c) => c
+                .get()
+                .op(layer, name)
+                .unwrap_or_else(|| panic!("operator l{layer}.{name} (validated at construction)"))
+                .matmul_t_par(x),
         }
-        kernels::matmul_nt_skinny(x, self.lp(layer, name))
+    }
+
+    /// Final pre-head norm over a [b, d] stack (shared family dispatch:
+    /// `model::forward::final_norm_with`).
+    fn final_norm(&self, x: &Tensor) -> Tensor {
+        forward::final_norm_with(&self.spec, |n| self.global(n), x)
     }
 }
 
@@ -188,10 +260,9 @@ pub fn decode_step(
     positions: &[usize],
 ) -> Tensor {
     let x = decode_hidden(model, blocks, tokens, positions);
-    let x = forward::logits_final_norm(&model.spec, model.params, &x);
-    let embed = model.params.req("embed").expect("embed");
+    let x = model.final_norm(&x);
     // tied unembedding through the skinny kernel (bitwise = matmul_nt)
-    kernels::matmul_nt_skinny(&x, embed)
+    kernels::matmul_nt_skinny(&x, model.global("embed"))
 }
 
 /// Prefill a whole prompt into a *fresh* KV block in one position-batched
@@ -211,14 +282,14 @@ pub fn prefill_prompt(model: &ServeModel<'_>, block: &mut KvBlock, tokens: &[i32
     }
     let spec = &model.spec;
     let d = spec.d;
-    let embed = model.params.req("embed").expect("embed");
+    let embed = model.global("embed");
     let mut x = Tensor::zeros(vec![p, d]);
     for (t, &tok) in tokens.iter().enumerate() {
         x.row_mut(t)
             .copy_from_slice(&embed.data()[tok as usize * d..(tok as usize + 1) * d]);
     }
     if spec.family == FamilyKind::Topt {
-        let pos_t = model.params.req("pos").expect("pos");
+        let pos_t = model.global("pos");
         for t in 0..p {
             for (xi, &pv) in x.row_mut(t).iter_mut().zip(pos_t.row(t)) {
                 *xi += pv;
@@ -311,9 +382,9 @@ fn decode_hidden(
     for (blk, &p) in blocks.iter().zip(positions) {
         debug_assert_eq!(blk.len(), p, "KV cache length must equal the token's position");
     }
-    let embed = model.params.req("embed").expect("embed");
+    let embed = model.global("embed");
     let pos_t = match spec.family {
-        FamilyKind::Topt => Some(model.params.req("pos").expect("pos")),
+        FamilyKind::Topt => Some(model.global("pos")),
         FamilyKind::Tllama => None,
     };
     let mut x = Tensor::zeros(vec![b, d]);
@@ -449,7 +520,7 @@ mod tests {
         for m in ["topt-s1", "tllama-s1"] {
             let spec = presets.model(m).unwrap().clone();
             let params = init_params(&spec, 17);
-            let model = ServeModel::dense(&spec, &params);
+            let model = ServeModel::dense(&spec, &params).unwrap();
             // two sequences of different lengths decoding in one batch
             let seqs: [Vec<i32>; 2] = [
                 (0..9).map(|i| (i * 5 + 1) % 96).collect(),
@@ -475,6 +546,21 @@ mod tests {
     }
 
     #[test]
+    fn dense_construction_checks_the_parameter_set() {
+        let presets = Presets::load(&repo_root().unwrap()).unwrap();
+        let s1 = presets.model("topt-s1").unwrap().clone();
+        let s2 = presets.model("topt-s2").unwrap().clone();
+        let params = init_params(&s1, 3);
+        // params for a different spec: shapes/coverage mismatch is a
+        // checked construction error, not a mid-decode panic
+        let err = ServeModel::dense(&s2, &params);
+        assert!(err.is_err(), "mismatched spec must fail at construction");
+        // a family mismatch is also checked
+        let tl = presets.model("tllama-s1").unwrap().clone();
+        assert!(ServeModel::dense(&tl, &params).is_err());
+    }
+
+    #[test]
     fn sparse_model_reports_density() {
         let presets = Presets::load(&repo_root().unwrap()).unwrap();
         let spec = presets.model("topt-s1").unwrap().clone();
@@ -489,7 +575,31 @@ mod tests {
         assert!(model.is_sparse());
         let density = model.density().unwrap();
         assert!((density - 0.5).abs() < 0.02, "density {density}");
-        assert!(ServeModel::dense(&spec, &params).density().is_none());
+        assert!(ServeModel::dense(&spec, &params).unwrap().density().is_none());
+    }
+
+    #[test]
+    fn resident_bytes_shrink_when_compiled() {
+        let presets = Presets::load(&repo_root().unwrap()).unwrap();
+        let spec = presets.model("topt-s1").unwrap().clone();
+        let sp = crate::config::Sparsity::Semi(2, 4);
+        let params =
+            crate::pruner::round_model_to_sparsity(&spec, &init_params(&spec, 29), sp).unwrap();
+        let dense = ServeModel::dense(&spec, &params).unwrap();
+        let nm = ServeModel::sparse_as(&spec, &params, SparseFormat::Nm, Some(sp)).unwrap();
+        assert_eq!(dense.resident_weight_bytes(), 4 * param_count(&spec));
+        let c = nm.compiled().unwrap();
+        assert_eq!(nm.resident_weight_bytes(), c.storage_bytes() + c.residual_bytes());
+        assert!(
+            nm.resident_weight_bytes() < dense.resident_weight_bytes(),
+            "compiled {} vs dense {}",
+            nm.resident_weight_bytes(),
+            dense.resident_weight_bytes()
+        );
+        // borrowed and owned views report identically
+        let borrowed = ServeModel::from_compiled_ref(c);
+        assert_eq!(borrowed.resident_weight_bytes(), nm.resident_weight_bytes());
+        assert_eq!(borrowed.format_label(), "nm");
     }
 
     #[test]
@@ -503,7 +613,7 @@ mod tests {
         let nm = ServeModel::sparse_as(&spec, &params, SparseFormat::Nm, Some(sp)).unwrap();
         assert_eq!(csr.format_label(), "csr");
         assert_eq!(nm.format_label(), "nm");
-        assert_eq!(ServeModel::dense(&spec, &params).format_label(), "dense");
+        assert_eq!(ServeModel::dense(&spec, &params).unwrap().format_label(), "dense");
         let (cb, nb) = (csr.storage_bytes().unwrap(), nm.storage_bytes().unwrap());
         assert!(nb < cb, "nm {nb} bytes vs csr {cb} bytes");
         assert!(nm.storage_ratio().unwrap() < csr.storage_ratio().unwrap());

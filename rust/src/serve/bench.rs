@@ -208,12 +208,28 @@ pub(crate) fn greedy_references(
     (texts, lat_ms)
 }
 
+/// The shared greedy-parity fold: every reference id must be present
+/// and equal in every served texts map — sizes are compared too, so an
+/// empty or partial run can never pass as `parity_ok = true`. Used by
+/// every bench path (dense, per-format, artifact, format grid).
+pub(crate) fn parity_against(
+    reference: &BTreeMap<String, String>,
+    served: &[&BTreeMap<String, String>],
+) -> bool {
+    served.iter().all(|texts| {
+        reference.len() == texts.len()
+            && reference.iter().all(|(id, want)| texts.get(id) == Some(want))
+    })
+}
+
 /// Serve `requests` through a fresh engine; returns (stats, id → text).
 /// Admission is just-in-time (a request is submitted only when a slot is
 /// free), so `latency_ms` measures service time — comparable to the solo
 /// `eval::generate` reference — rather than artificial queue wait behind
-/// requests submitted upfront.
-fn run_engine(
+/// requests submitted upfront. Shared with the
+/// `bench_support::grid::run_serve_format_grid` artifact row so every
+/// row of that table is measured under the same admission policy.
+pub(crate) fn run_engine(
     model: &ServeModel<'_>,
     batch: usize,
     label: &str,
@@ -292,12 +308,7 @@ pub fn measure_sparse_format(
     let label = model.format_label();
     let (b1, texts1) = run_engine(&model, 1, &format!("kv {label} b=1"), requests)?;
     let (bb, textsb) = run_engine(&model, batch, &format!("kv {label} b={batch}"), requests)?;
-    let mut parity_ok = true;
-    for texts in [&texts1, &textsb] {
-        for (id, text) in texts {
-            parity_ok &= reference.get(id) == Some(text);
-        }
-    }
+    let parity_ok = parity_against(reference, &[&texts1, &textsb]);
     Ok(FormatStats {
         label,
         b1,
@@ -344,21 +355,17 @@ pub fn run_serve_bench(
     };
 
     // KV-cached dense, batch 1 and batch B (one weight resolution)
-    let dense_model = ServeModel::dense(spec, dense);
+    let dense_model = ServeModel::dense(spec, dense)?;
     let (kv1, texts1) = run_engine(&dense_model, 1, "kv dense b=1", &requests)?;
     let (kvb, textsb) =
         run_engine(&dense_model, cfg.batch, &format!("kv dense b={}", cfg.batch), &requests)?;
-    for texts in [&texts1, &textsb] {
-        for (id, text) in texts {
-            parity_ok &= reference.get(id) == Some(text);
-        }
-    }
+    parity_ok &= parity_against(&reference, &[&texts1, &textsb]);
 
     // compressed formats on pruned weights, batch 1 and batch B; parity
     // vs the full-recompute generate over the same pruned weights
     let pruned = round_model_to_sparsity(spec, dense, cfg.sparsity)?;
     let (pruned_ref, _) = greedy_references(spec, &pruned, &requests, &prompts);
-    let pruned_dense_model = ServeModel::dense(spec, &pruned);
+    let pruned_dense_model = ServeModel::dense(spec, &pruned)?;
     let (kv_pruned1, _) = run_engine(&pruned_dense_model, 1, "kv pruned-dense b=1", &requests)?;
     let csr = measure_sparse_format(
         spec,
@@ -407,6 +414,169 @@ pub fn run_serve_bench(
         nm_speedup,
         csr_storage_ratio: csr.storage_ratio,
         nm_storage_ratio,
+        parity_ok,
+    })
+}
+
+/// The artifact serving path, measured: load a sparse artifact (timed),
+/// serve it at batch 1 and batch `cfg.batch`, and report the
+/// memory-conservation numbers — on-disk bytes and resident weight bytes
+/// against what the equivalent dense checkpoint would cost. Greedy parity
+/// is checked against the compiled full-recompute forward
+/// (`sparse::compiled_generate`) over the *same loaded weights*, so the
+/// gate holds without ever materializing a dense pruned operator.
+#[derive(Clone, Debug)]
+pub struct ArtifactBenchReport {
+    pub model: String,
+    pub sparsity_label: String,
+    /// Resolved storage format of the loaded operators.
+    pub format_label: String,
+    /// Wall time of `ser::artifact::load` (parse + checksum + validate).
+    pub load_ms: f64,
+    /// On-disk bytes of the `.fsa` payload.
+    pub file_bytes: u64,
+    /// On-disk bytes the dense `.fpt` checkpoint of this model costs
+    /// (exact `ser::tensorfile` encoding, computed from the spec).
+    pub dense_ckpt_bytes: u64,
+    /// Weight bytes resident after load: compressed ops + residual dense.
+    pub resident_bytes: usize,
+    /// Resident bytes the dense weights would occupy (4 × param count).
+    pub dense_resident_bytes: usize,
+    pub paths: Vec<PathStats>,
+    pub parity_ok: bool,
+}
+
+impl ArtifactBenchReport {
+    /// resident / dense-resident — the serving memory-conservation ratio.
+    pub fn resident_ratio(&self) -> f64 {
+        self.resident_bytes as f64 / self.dense_resident_bytes.max(1) as f64
+    }
+
+    /// on-disk / dense-checkpoint — the storage-conservation ratio.
+    pub fn disk_ratio(&self) -> f64 {
+        self.file_bytes as f64 / self.dense_ckpt_bytes.max(1) as f64
+    }
+
+    pub fn print(&self) {
+        let mut t = TableBuilder::new(
+            &format!(
+                "artifact-bench ({}, {} @ {})",
+                self.model, self.format_label, self.sparsity_label
+            ),
+            &["path", "reqs", "tokens", "tok/s", "p50 ms", "p99 ms"],
+        );
+        for p in &self.paths {
+            t.row(vec![
+                p.label.clone(),
+                p.requests.to_string(),
+                p.total_tokens.to_string(),
+                format!("{:.1}", p.tokens_per_s),
+                format!("{:.1}", p.p50_ms),
+                format!("{:.1}", p.p99_ms),
+            ]);
+        }
+        t.print();
+        println!(
+            "artifact load: {:.1} ms   on disk: {} B ({:.3}x dense ckpt {} B)   resident: {} B \
+             ({:.3}x dense {} B)   greedy parity: {}",
+            self.load_ms,
+            self.file_bytes,
+            self.disk_ratio(),
+            self.dense_ckpt_bytes,
+            self.resident_bytes,
+            self.resident_ratio(),
+            self.dense_resident_bytes,
+            if self.parity_ok { "ok" } else { "MISMATCH" }
+        );
+    }
+
+    /// JSON object for BENCH_artifact.json (the CI record of load time
+    /// and on-disk size vs the dense checkpoint).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("model".to_string(), Json::Str(self.model.clone()));
+        m.insert("sparsity".to_string(), Json::Str(self.sparsity_label.clone()));
+        m.insert("format".to_string(), Json::Str(self.format_label.clone()));
+        m.insert("load_ms".to_string(), Json::Num(round3(self.load_ms)));
+        m.insert("file_bytes".to_string(), Json::Num(self.file_bytes as f64));
+        m.insert("dense_ckpt_bytes".to_string(), Json::Num(self.dense_ckpt_bytes as f64));
+        m.insert("disk_ratio".to_string(), Json::Num(round3(self.disk_ratio())));
+        m.insert("resident_bytes".to_string(), Json::Num(self.resident_bytes as f64));
+        m.insert(
+            "dense_resident_bytes".to_string(),
+            Json::Num(self.dense_resident_bytes as f64),
+        );
+        m.insert("resident_ratio".to_string(), Json::Num(round3(self.resident_ratio())));
+        m.insert("parity_ok".to_string(), Json::Bool(self.parity_ok));
+        let mut paths = BTreeMap::new();
+        for p in &self.paths {
+            let mut pm = BTreeMap::new();
+            pm.insert("requests".to_string(), Json::Num(p.requests as f64));
+            pm.insert("total_tokens".to_string(), Json::Num(p.total_tokens as f64));
+            pm.insert("tokens_per_s".to_string(), Json::Num(round3(p.tokens_per_s)));
+            pm.insert("p50_ms".to_string(), Json::Num(round3(p.p50_ms)));
+            pm.insert("p99_ms".to_string(), Json::Num(round3(p.p99_ms)));
+            paths.insert(p.label.clone(), Json::Obj(pm));
+        }
+        m.insert("paths".to_string(), Json::Obj(paths));
+        Json::Obj(m)
+    }
+}
+
+/// Load `path` and measure the artifact serving path; see
+/// [`ArtifactBenchReport`]. Only `tokens`, `batch` and `requests` of
+/// `cfg` are used — sparsity and format come from the artifact itself.
+/// `expected_model` is the caller's `--model` flag, if any, checked
+/// against the artifact's sidecar.
+pub fn run_artifact_bench(
+    path: &std::path::Path,
+    cfg: &ServeBenchConfig,
+    expected_model: Option<&str>,
+) -> Result<ArtifactBenchReport> {
+    ensure!(cfg.tokens >= 1 && cfg.batch >= 1 && cfg.requests >= 1, "bench sizes must be >= 1");
+    let t0 = std::time::Instant::now();
+    let (compiled, meta) = crate::ser::artifact::load(path)?;
+    crate::ser::artifact::check_model(&meta, expected_model)?;
+    let load_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let spec = compiled.spec.clone();
+
+    let prompts = synthetic_prompts(cfg.requests);
+    let requests = requests_for(&prompts, cfg.tokens);
+    // the oracle runs over the loaded weights themselves: compiled
+    // full-recompute greedy generate, no dense operators anywhere
+    let mut reference: BTreeMap<String, String> = BTreeMap::new();
+    for (r, p) in requests.iter().zip(&prompts) {
+        reference.insert(
+            r.id.clone(),
+            crate::sparse::compiled_generate(
+                &compiled,
+                p,
+                &GenOptions { max_tokens: r.max_tokens, temperature: 0.0, seed: r.seed },
+            ),
+        );
+    }
+    let model = ServeModel::from_compiled_ref(&compiled);
+    let label = model.format_label();
+    let (b1, texts1) = run_engine(&model, 1, &format!("artifact {label} b=1"), &requests)?;
+    let (bb, textsb) =
+        run_engine(&model, cfg.batch, &format!("artifact {label} b={}", cfg.batch), &requests)?;
+    let parity_ok = parity_against(&reference, &[&texts1, &textsb]);
+    let file_bytes = std::fs::metadata(path)?.len();
+    let dense_ckpt_bytes = crate::ser::tensorfile::encoded_len(
+        crate::model::spec::model_param_specs(&spec)
+            .iter()
+            .map(|s| (s.name.as_str(), s.shape.as_slice())),
+    ) as u64;
+    Ok(ArtifactBenchReport {
+        model: spec.name(),
+        sparsity_label: meta.sparsity.clone(),
+        format_label: label.to_string(),
+        load_ms,
+        file_bytes,
+        dense_ckpt_bytes,
+        resident_bytes: compiled.resident_bytes(),
+        dense_resident_bytes: 4 * crate::model::spec::param_count(&spec),
+        paths: vec![b1, bb],
         parity_ok,
     })
 }
@@ -480,5 +650,58 @@ mod tests {
             ..ServeBenchConfig::default()
         };
         assert!(run_serve_bench(&spec, &params, &bad).is_err());
+    }
+
+    #[test]
+    fn artifact_bench_measures_load_and_memory() {
+        let presets = Presets::load(&repo_root().unwrap()).unwrap();
+        let spec = presets.model("topt-s1").unwrap().clone();
+        let sp = Sparsity::Semi(2, 4);
+        let pruned =
+            crate::pruner::round_model_to_sparsity(&spec, &init_params(&spec, 37), sp).unwrap();
+        let compiled =
+            crate::sparse::CompiledLayers::compress(&spec, &pruned, SparseFormat::Auto, Some(sp))
+                .unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("fp_bench_artifact_{}.fsa", std::process::id()));
+        crate::ser::artifact::save(
+            &path,
+            &compiled,
+            &crate::ser::artifact::ArtifactMeta {
+                model: "topt-s1".into(),
+                corpus: "c4-syn".into(),
+                method: "magnitude".into(),
+                sparsity: sp.label(),
+                format: "auto".into(),
+                seed: 37,
+                prune: None,
+            },
+        )
+        .unwrap();
+        let cfg = ServeBenchConfig {
+            tokens: 6,
+            batch: 2,
+            requests: 2,
+            sparsity: sp,
+            format: SparseFormat::Auto,
+        };
+        // a wrong --model flag is rejected before any measurement
+        assert!(run_artifact_bench(&path, &cfg, Some("topt-s2")).is_err());
+        let report = run_artifact_bench(&path, &cfg, None).unwrap();
+        assert!(report.parity_ok, "artifact serving diverged from the compiled oracle");
+        assert_eq!(report.format_label, "nm");
+        assert_eq!(report.paths.len(), 2);
+        assert!(report.load_ms >= 0.0);
+        assert_eq!(report.resident_bytes, compiled.resident_bytes());
+        // a 2:4 artifact must beat the dense checkpoint on disk and the
+        // dense weights in memory
+        assert!(report.disk_ratio() < 1.0, "disk ratio {}", report.disk_ratio());
+        assert!(report.resident_ratio() < 1.0, "resident ratio {}", report.resident_ratio());
+        let j = report.to_json().to_string_compact();
+        let v = Json::parse(&j).unwrap();
+        assert!(v.get("load_ms").unwrap().as_f64().is_some());
+        assert!(v.get("paths").unwrap().get("artifact nm b=1").is_some());
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(crate::ser::artifact::meta_path(&path)).ok();
     }
 }

@@ -392,7 +392,7 @@ mod tests {
     #[test]
     fn greedy_single_request_matches_generate() {
         let (spec, params) = setup();
-        let model = ServeModel::dense(&spec, &params);
+        let model = ServeModel::dense(&spec, &params).unwrap();
         let mut eng = Engine::new(&model, &EngineConfig::default()).unwrap();
         eng.submit(req("r1", "abc", 12, 0.0, 1)).unwrap();
         let out = eng.run().unwrap();
@@ -413,7 +413,7 @@ mod tests {
     #[test]
     fn sampled_request_matches_generate_stream() {
         let (spec, params) = setup();
-        let model = ServeModel::dense(&spec, &params);
+        let model = ServeModel::dense(&spec, &params).unwrap();
         let mut eng = Engine::new(&model, &EngineConfig::default()).unwrap();
         eng.submit(req("r1", "xy", 16, 1.2, 9)).unwrap();
         let out = eng.run().unwrap();
@@ -429,7 +429,7 @@ mod tests {
     #[test]
     fn queue_overflow_and_context_overflow_are_rejected() {
         let (spec, params) = setup();
-        let model = ServeModel::dense(&spec, &params);
+        let model = ServeModel::dense(&spec, &params).unwrap();
         let cfg = EngineConfig { max_batch: 1, queue_cap: 2, transcript: None };
         let mut eng = Engine::new(&model, &cfg).unwrap();
         assert!(eng.submit(req("e", "", 4, 0.0, 0)).is_err(), "empty prompt");
@@ -454,7 +454,7 @@ mod tests {
     #[test]
     fn continuous_batching_joins_waiting_requests() {
         let (spec, params) = setup();
-        let model = ServeModel::dense(&spec, &params);
+        let model = ServeModel::dense(&spec, &params).unwrap();
         let cfg = EngineConfig { max_batch: 2, queue_cap: 16, transcript: None };
         let mut eng = Engine::new(&model, &cfg).unwrap();
         for i in 0..5 {
@@ -488,7 +488,7 @@ mod tests {
     #[test]
     fn stop_token_retires_early() {
         let (spec, params) = setup();
-        let model = ServeModel::dense(&spec, &params);
+        let model = ServeModel::dense(&spec, &params).unwrap();
         let mut eng = Engine::new(&model, &EngineConfig::default()).unwrap();
         // find what greedy emits first, then use it as the stop char
         let first = generate(

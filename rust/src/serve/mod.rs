@@ -22,7 +22,14 @@
 //!   behind the `serve` CLI command, and the transcript tee.
 //! * [`bench`] — the `serve-bench` core: tokens/s, p50/p99 latency and
 //!   dense-vs-sparse speedups, with greedy outputs parity-checked against
-//!   `eval::generate`.
+//!   `eval::generate`; plus the artifact path (load time, on-disk and
+//!   resident bytes vs the dense checkpoint).
+//!
+//! Compressed weights arrive either by compressing a dense checkpoint at
+//! startup or — the production path — by loading a sparse artifact
+//! (`ser::artifact`): `ServeModel` owns the `sparse::compile` result, so
+//! an artifact-served process holds exactly one copy of each pruned
+//! weight, the compressed one.
 //!
 //! Determinism contract (pinned by `rust/tests/serve_parity.rs`): a
 //! request's output depends only on the weights and its own
@@ -37,7 +44,8 @@ pub mod request;
 
 pub use batch::ServeModel;
 pub use bench::{
-    measure_sparse_format, run_serve_bench, FormatStats, ServeBenchConfig, ServeBenchReport,
+    measure_sparse_format, run_artifact_bench, run_serve_bench, ArtifactBenchReport, FormatStats,
+    ServeBenchConfig, ServeBenchReport,
 };
 pub use engine::{Engine, EngineConfig, EngineStats};
 pub use kv::{KvBlock, KvPool};

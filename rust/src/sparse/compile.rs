@@ -1,0 +1,457 @@
+//! The single compression entry point: one pass over a model's parameters
+//! that compresses every pruned linear operator and carries the rest along
+//! as *residual* dense tensors.
+//!
+//! [`CompiledLayers`] is the durable, self-contained form of a pruned
+//! model: per-layer bare-name → [`SparseOp`] maps for the pruned operators
+//! (CSR or packed n:m per `config::SparseFormat`) plus the residual dense
+//! parameters — norms, biases, embeddings, position table, final norm. It
+//! is everything a forward pass needs; no dense copy of a pruned weight
+//! exists anywhere in it. Both measurement (`sparse::forward`) and serving
+//! (`serve::batch::ServeModel`) build from it, and `ser::artifact`
+//! serializes it to disk verbatim — so the compression work happens
+//! exactly once, at prune time, instead of per consumer per process.
+//!
+//! Every constructor validates the compiled set against the model spec
+//! (operator coverage, shapes, residual completeness, no extras) and
+//! returns checked errors, so downstream lookups are infallible by
+//! invariant rather than by luck.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{bail, Result};
+
+use crate::config::{ModelSpec, SparseFormat, Sparsity};
+use crate::model::ops::pruned_ops;
+use crate::model::params::ModelParams;
+use crate::model::spec::{layer_param_specs, model_param_specs};
+use crate::tensor::Tensor;
+
+use super::forward::SparseOp;
+
+/// Per-operator compression outcome — the format stats the compression
+/// pass records for reports and sidecars.
+#[derive(Clone, Debug)]
+pub struct OpStat {
+    pub layer: usize,
+    /// Bare operator name within the layer ("wq", "w1", ...).
+    pub name: String,
+    /// Resolved storage format ("csr" | "nm").
+    pub format: &'static str,
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: usize,
+    /// Compressed bytes for this operator.
+    pub bytes: usize,
+}
+
+/// A pruned model compiled to its compressed form: per-layer sparse
+/// operators plus the residual dense parameters. See the module docs.
+#[derive(Clone)]
+pub struct CompiledLayers {
+    pub spec: ModelSpec,
+    /// The requested format axis (`Auto` may resolve per operator).
+    pub format: SparseFormat,
+    /// The sparsity pattern hint consulted at compile time.
+    pub sparsity: Option<Sparsity>,
+    /// Per-layer bare-name → compressed operator.
+    ops: Vec<BTreeMap<String, SparseOp>>,
+    /// Per-layer bare-name → residual dense tensor (norms, biases).
+    layer_residual: Vec<BTreeMap<String, Tensor>>,
+    /// Model-level residual tensors: embed, pos (topt), final norm.
+    globals: BTreeMap<String, Tensor>,
+}
+
+/// Split a canonical parameter name into (layer, bare name), or `None`
+/// for model-level names ("embed", "pos", "lnf_g", ...). Shared with the
+/// artifact loader, which partitions records by the same rule.
+pub(crate) fn split_layer_name(name: &str) -> Option<(usize, &str)> {
+    let (prefix, bare) = name.split_once('.')?;
+    let li: usize = prefix.strip_prefix('l')?.parse().ok()?;
+    Some((li, bare))
+}
+
+impl CompiledLayers {
+    /// THE compression pass: compress every pruned operator of `params`
+    /// according to `format` (see `sparse::forward::SparseOp::compress`)
+    /// and clone the residual dense parameters. `sp` is the run's
+    /// sparsity target, consulted by `Nm` (required) and `Auto`
+    /// (per-operator pattern check).
+    pub fn compress(
+        spec: &ModelSpec,
+        params: &ModelParams,
+        format: SparseFormat,
+        sp: Option<Sparsity>,
+    ) -> Result<CompiledLayers> {
+        let pruned: BTreeSet<&str> = pruned_ops(spec).iter().map(|o| o.name).collect();
+        let mut ops: Vec<BTreeMap<String, SparseOp>> =
+            (0..spec.layers).map(|_| BTreeMap::new()).collect();
+        let mut layer_residual: Vec<BTreeMap<String, Tensor>> =
+            (0..spec.layers).map(|_| BTreeMap::new()).collect();
+        let mut globals = BTreeMap::new();
+        for (name, t) in params.iter() {
+            match split_layer_name(name) {
+                Some((li, bare)) => {
+                    if li >= spec.layers {
+                        bail!("parameter '{name}' names layer {li} of a {}-layer model", spec.layers);
+                    }
+                    if pruned.contains(bare) {
+                        ops[li].insert(bare.to_string(), SparseOp::compress(t, format, sp)?);
+                    } else {
+                        layer_residual[li].insert(bare.to_string(), t.clone());
+                    }
+                }
+                None => {
+                    globals.insert(name.to_string(), t.clone());
+                }
+            }
+        }
+        CompiledLayers::from_parts(spec.clone(), format, sp, ops, layer_residual, globals)
+    }
+
+    /// Assemble from already-built parts (the artifact load path) and
+    /// validate the set against the spec: every pruned operator present
+    /// with the spec's shape, every residual parameter present with the
+    /// spec's shape, nothing extra.
+    pub fn from_parts(
+        spec: ModelSpec,
+        format: SparseFormat,
+        sparsity: Option<Sparsity>,
+        ops: Vec<BTreeMap<String, SparseOp>>,
+        layer_residual: Vec<BTreeMap<String, Tensor>>,
+        globals: BTreeMap<String, Tensor>,
+    ) -> Result<CompiledLayers> {
+        let c = CompiledLayers { spec, format, sparsity, ops, layer_residual, globals };
+        c.validate()?;
+        Ok(c)
+    }
+
+    fn validate(&self) -> Result<()> {
+        let spec = &self.spec;
+        if self.ops.len() != spec.layers || self.layer_residual.len() != spec.layers {
+            bail!(
+                "compiled model has {} op layers / {} residual layers, spec {} has {}",
+                self.ops.len(),
+                self.layer_residual.len(),
+                spec.name(),
+                spec.layers
+            );
+        }
+        let pruned = pruned_ops(spec);
+        let pruned_names: BTreeSet<&str> = pruned.iter().map(|o| o.name).collect();
+        let residual_specs: Vec<_> = layer_param_specs(spec, None)
+            .into_iter()
+            .filter(|s| !pruned_names.contains(s.name.as_str()))
+            .collect();
+        let residual_names: BTreeSet<&str> =
+            residual_specs.iter().map(|s| s.name.as_str()).collect();
+        for li in 0..spec.layers {
+            for op in &pruned {
+                let Some(got) = self.ops[li].get(op.name) else {
+                    bail!("compiled model is missing operator 'l{li}.{}'", op.name);
+                };
+                if got.rows() != op.m || got.cols() != op.n {
+                    bail!(
+                        "operator 'l{li}.{}' is [{}, {}], spec {} expects [{}, {}]",
+                        op.name,
+                        got.rows(),
+                        got.cols(),
+                        spec.name(),
+                        op.m,
+                        op.n
+                    );
+                }
+            }
+            if self.ops[li].len() != pruned.len() {
+                let extra = self.ops[li]
+                    .keys()
+                    .find(|k| !pruned_names.contains(k.as_str()))
+                    .map(|s| s.as_str())
+                    .unwrap_or("?");
+                bail!("compiled layer {li} has unexpected operator '{extra}'");
+            }
+            for ps in &residual_specs {
+                let Some(t) = self.layer_residual[li].get(&ps.name) else {
+                    bail!("compiled model is missing residual 'l{li}.{}'", ps.name);
+                };
+                if t.shape() != ps.shape.as_slice() {
+                    bail!(
+                        "residual 'l{li}.{}' has shape {:?}, expected {:?}",
+                        ps.name,
+                        t.shape(),
+                        ps.shape
+                    );
+                }
+            }
+            if self.layer_residual[li].len() != residual_specs.len() {
+                let extra = self.layer_residual[li]
+                    .keys()
+                    .find(|k| !residual_names.contains(k.as_str()))
+                    .map(|s| s.as_str())
+                    .unwrap_or("?");
+                bail!("compiled layer {li} has unexpected residual '{extra}'");
+            }
+        }
+        let global_specs: Vec<_> = model_param_specs(spec)
+            .into_iter()
+            .filter(|s| !s.name.contains('.'))
+            .collect();
+        for gs in &global_specs {
+            let Some(t) = self.globals.get(&gs.name) else {
+                bail!("compiled model is missing residual '{}'", gs.name);
+            };
+            if t.shape() != gs.shape.as_slice() {
+                bail!(
+                    "residual '{}' has shape {:?}, expected {:?}",
+                    gs.name,
+                    t.shape(),
+                    gs.shape
+                );
+            }
+        }
+        if self.globals.len() != global_specs.len() {
+            let expected: BTreeSet<&str> = global_specs.iter().map(|s| s.name.as_str()).collect();
+            let extra = self
+                .globals
+                .keys()
+                .find(|k| !expected.contains(k.as_str()))
+                .map(|s| s.as_str())
+                .unwrap_or("?");
+            bail!("compiled model has unexpected residual '{extra}'");
+        }
+        Ok(())
+    }
+
+    // ---- lookups (infallible by the construction-time validation) ----
+
+    /// Compressed operator `name` of `layer`, if `name` is a pruned op.
+    pub fn op(&self, layer: usize, name: &str) -> Option<&SparseOp> {
+        self.ops.get(layer)?.get(name)
+    }
+
+    /// All compressed operators of one layer (bare-name keyed).
+    pub fn layer_ops(&self, layer: usize) -> &BTreeMap<String, SparseOp> {
+        &self.ops[layer]
+    }
+
+    /// Residual dense tensor `name` of `layer` (norms, biases).
+    pub fn residual_tensor(&self, layer: usize, name: &str) -> Option<&Tensor> {
+        self.layer_residual.get(layer)?.get(name)
+    }
+
+    /// One layer's residual dense tensors (bare-name keyed).
+    pub fn layer_residual(&self, layer: usize) -> &BTreeMap<String, Tensor> {
+        &self.layer_residual[layer]
+    }
+
+    /// Model-level residual tensor ("embed", "pos", "lnf_g", ...).
+    pub fn global(&self, name: &str) -> Option<&Tensor> {
+        self.globals.get(name)
+    }
+
+    /// Every compressed operator with its canonical `l{i}.{name}` name,
+    /// in (layer, name) order — the artifact serialization order.
+    pub fn iter_ops(&self) -> impl Iterator<Item = (String, &SparseOp)> {
+        self.ops
+            .iter()
+            .enumerate()
+            .flat_map(|(li, m)| m.iter().map(move |(n, op)| (format!("l{li}.{n}"), op)))
+    }
+
+    /// Every residual dense tensor with its canonical name: globals
+    /// first, then per-layer residuals in (layer, name) order.
+    pub fn iter_residual(&self) -> impl Iterator<Item = (String, &Tensor)> {
+        self.globals.iter().map(|(n, t)| (n.clone(), t)).chain(
+            self.layer_residual
+                .iter()
+                .enumerate()
+                .flat_map(|(li, m)| m.iter().map(move |(n, t)| (format!("l{li}.{n}"), t))),
+        )
+    }
+
+    // ---- stats ----
+
+    /// Compressed operator count.
+    pub fn op_count(&self) -> usize {
+        self.ops.iter().map(|m| m.len()).sum()
+    }
+
+    /// Nonzeros across the compressed operators.
+    pub fn nnz(&self) -> usize {
+        self.ops.iter().flat_map(|m| m.values()).map(|o| o.nnz()).sum()
+    }
+
+    /// Dense element count across the compressed operators.
+    pub fn dense_elems(&self) -> usize {
+        self.ops.iter().flat_map(|m| m.values()).map(|o| o.rows() * o.cols()).sum()
+    }
+
+    /// nnz fraction across the compressed operators.
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / self.dense_elems().max(1) as f64
+    }
+
+    /// Compressed bytes across the compressed operators.
+    pub fn storage_bytes(&self) -> usize {
+        self.ops.iter().flat_map(|m| m.values()).map(|o| o.storage_bytes()).sum()
+    }
+
+    /// Bytes of the residual dense tensors (f32 payloads).
+    pub fn residual_bytes(&self) -> usize {
+        self.iter_residual().map(|(_, t)| 4 * t.len()).sum()
+    }
+
+    /// Total resident weight bytes: compressed operators + residual dense
+    /// parameters — what a process actually holds to run this model.
+    pub fn resident_bytes(&self) -> usize {
+        self.storage_bytes() + self.residual_bytes()
+    }
+
+    /// Compressed bytes / dense bytes over the compressed operators.
+    pub fn storage_ratio(&self) -> f64 {
+        self.storage_bytes() as f64 / (4 * self.dense_elems()).max(1) as f64
+    }
+
+    /// (csr, nm) operator counts — which way `Auto` dispatched.
+    pub fn format_counts(&self) -> (usize, usize) {
+        self.ops.iter().flat_map(|m| m.values()).fold((0, 0), |(c, n), op| match op {
+            SparseOp::Csr(_) => (c + 1, n),
+            SparseOp::Nm(_) => (c, n + 1),
+        })
+    }
+
+    /// Resolved format label: "csr", "nm", or "csr+nm" (mixed dispatch).
+    pub fn format_label(&self) -> &'static str {
+        match self.format_counts() {
+            (c, n) if c > 0 && n > 0 => "csr+nm",
+            (0, n) if n > 0 => "nm",
+            _ => "csr",
+        }
+    }
+
+    /// Per-operator format stats in (layer, name) order.
+    pub fn op_stats(&self) -> Vec<OpStat> {
+        self.ops
+            .iter()
+            .enumerate()
+            .flat_map(|(li, m)| {
+                m.iter().map(move |(name, op)| OpStat {
+                    layer: li,
+                    name: name.clone(),
+                    format: op.format_label(),
+                    rows: op.rows(),
+                    cols: op.cols(),
+                    nnz: op.nnz(),
+                    bytes: op.storage_bytes(),
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{repo_root, Presets};
+    use crate::model::init::init_params;
+    use crate::pruner::round_model_to_sparsity;
+
+    fn compiled(model: &str, sp: Sparsity, format: SparseFormat) -> CompiledLayers {
+        let presets = Presets::load(&repo_root().unwrap()).unwrap();
+        let spec = presets.model(model).unwrap().clone();
+        let params = round_model_to_sparsity(&spec, &init_params(&spec, 7), sp).unwrap();
+        CompiledLayers::compress(&spec, &params, format, Some(sp)).unwrap()
+    }
+
+    #[test]
+    fn one_pass_partitions_ops_and_residual() {
+        for model in ["topt-s1", "tllama-s1"] {
+            let c = compiled(model, Sparsity::Unstructured(0.5), SparseFormat::Csr);
+            let spec = &c.spec;
+            let per_layer = pruned_ops(spec).len();
+            assert_eq!(c.op_count(), per_layer * spec.layers, "{model}");
+            // residual + compressed together cover the full parameter set
+            let residual: usize = c.iter_residual().count();
+            assert_eq!(
+                residual + c.op_count(),
+                model_param_specs(spec).len(),
+                "{model}: residual set must be the complement of the pruned set"
+            );
+            assert!(c.global("embed").is_some());
+            assert!(c.op(0, "wq").is_some());
+            assert!(c.op(0, "ln1_g").is_none(), "norms are residual, not ops");
+            assert!(c.residual_tensor(0, "wq").is_none(), "pruned ops are not residual");
+            assert!((c.density() - 0.5).abs() < 0.02, "{model} density {}", c.density());
+            assert!(c.resident_bytes() > c.storage_bytes());
+        }
+    }
+
+    #[test]
+    fn auto_packs_semi_and_stats_agree() {
+        let c = compiled("topt-s1", Sparsity::Semi(2, 4), SparseFormat::Auto);
+        let (csr, nm) = c.format_counts();
+        assert_eq!(csr, 0, "auto must pack fully 2:4-rounded weights");
+        assert!(nm > 0);
+        assert_eq!(c.format_label(), "nm");
+        let stats = c.op_stats();
+        assert_eq!(stats.len(), c.op_count());
+        assert_eq!(stats.iter().map(|s| s.bytes).sum::<usize>(), c.storage_bytes());
+        assert!(stats.iter().all(|s| s.format == "nm"));
+        // 2:4 packing is 5 bytes per kept slot on half-dense weights
+        assert!((c.storage_ratio() - 0.625).abs() < 1e-9, "ratio {}", c.storage_ratio());
+    }
+
+    #[test]
+    fn validation_rejects_incomplete_or_extra_sets() {
+        let c = compiled("topt-s1", Sparsity::Unstructured(0.6), SparseFormat::Csr);
+        // missing operator
+        let mut ops = c.ops.clone();
+        ops[0].remove("wq");
+        let err = CompiledLayers::from_parts(
+            c.spec.clone(),
+            c.format,
+            c.sparsity,
+            ops,
+            c.layer_residual.clone(),
+            c.globals.clone(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("missing operator"), "{err}");
+        // extra residual
+        let mut globals = c.globals.clone();
+        globals.insert("bogus".into(), Tensor::zeros(vec![1]));
+        let err = CompiledLayers::from_parts(
+            c.spec.clone(),
+            c.format,
+            c.sparsity,
+            c.ops.clone(),
+            c.layer_residual.clone(),
+            globals,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("unexpected residual 'bogus'"), "{err}");
+        // missing global residual
+        let mut globals = c.globals.clone();
+        globals.remove("embed");
+        assert!(CompiledLayers::from_parts(
+            c.spec.clone(),
+            c.format,
+            c.sparsity,
+            c.ops.clone(),
+            c.layer_residual.clone(),
+            globals,
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn split_layer_name_parses_canonical_names() {
+        assert_eq!(split_layer_name("l0.wq"), Some((0, "wq")));
+        assert_eq!(split_layer_name("l12.rms1_g"), Some((12, "rms1_g")));
+        assert_eq!(split_layer_name("embed"), None);
+        assert_eq!(split_layer_name("lnf_g"), None);
+        assert_eq!(split_layer_name("x0.wq"), None);
+    }
+}

@@ -1,8 +1,10 @@
 //! Sparse model forward: every pruned linear operator runs through a
 //! compressed backend — generic CSR or the packed n:m format — while
-//! norms, attention and embeddings reuse the dense substrate. Numerically
-//! identical to `model::forward` (zeros contribute nothing) — asserted in
-//! tests — but the compute scales with nnz.
+//! norms, attention and embeddings use the *residual* dense tensors
+//! carried by [`CompiledLayers`]. Numerically identical to
+//! `model::forward` (zeros contribute nothing) — asserted in tests — but
+//! the compute scales with nnz and no dense copy of a pruned weight is
+//! ever materialized.
 //!
 //! Format dispatch (`config::SparseFormat`):
 //! * `Csr`  — every operator compressed to [`CsrMatrix`] (any pattern).
@@ -11,17 +13,21 @@
 //! * `Auto` — per operator: packed n:m when the weight satisfies the
 //!   run's `Semi(n, m)` pattern with full groups (`cols % m == 0`,
 //!   `m <= 256`), CSR otherwise.
+//!
+//! The compression itself lives in [`super::compile`] — one pass shared
+//! with the serving stack and the on-disk artifact.
 
 use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
-use crate::config::{ModelSpec, SparseFormat, Sparsity};
-use crate::model::forward::layer_forward;
-use crate::model::ops::pruned_ops;
+use crate::config::{FamilyKind, ModelSpec, SparseFormat, Sparsity};
+use crate::eval::generate::{generate_with, GenOptions};
+use crate::model::forward;
 use crate::model::params::ModelParams;
 use crate::tensor::Tensor;
 
+use super::compile::CompiledLayers;
 use super::csr::CsrMatrix;
 use super::nm::NmMatrix;
 
@@ -112,81 +118,69 @@ impl SparseOp {
     }
 }
 
-/// A model with its pruned operators pre-compressed.
-pub struct SparseModel<'p> {
-    pub spec: ModelSpec,
-    pub params: &'p ModelParams,
-    ops: BTreeMap<String, SparseOp>,
+/// A model with its pruned operators pre-compressed — a thin wrapper over
+/// [`CompiledLayers`] kept for the measurement API (`sparse_logits`,
+/// `sparse_nll`, storage stats).
+pub struct SparseModel {
+    pub compiled: CompiledLayers,
 }
 
-impl<'p> SparseModel<'p> {
+impl SparseModel {
     /// Compress all pruned operators of `params` to CSR (the
     /// any-pattern default; see [`SparseModel::compress_as`]).
-    pub fn compress(spec: &ModelSpec, params: &'p ModelParams) -> Result<SparseModel<'p>> {
+    pub fn compress(spec: &ModelSpec, params: &ModelParams) -> Result<SparseModel> {
         SparseModel::compress_as(spec, params, SparseFormat::Csr, None)
     }
 
-    /// Compress all pruned operators with an explicit format. `sp` is the
-    /// run's sparsity target, consulted by `Nm` (required) and `Auto`
-    /// (per-operator pattern check).
+    /// Compress all pruned operators with an explicit format via the
+    /// shared `sparse::compile` pass. `sp` is the run's sparsity target,
+    /// consulted by `Nm` (required) and `Auto` (per-operator check).
     pub fn compress_as(
         spec: &ModelSpec,
-        params: &'p ModelParams,
+        params: &ModelParams,
         format: SparseFormat,
         sp: Option<Sparsity>,
-    ) -> Result<SparseModel<'p>> {
-        let mut ops = BTreeMap::new();
-        for layer in 0..spec.layers {
-            for op in pruned_ops(spec) {
-                let name = format!("l{layer}.{}", op.name);
-                ops.insert(name.clone(), SparseOp::compress(params.req(&name)?, format, sp)?);
-            }
-        }
-        Ok(SparseModel { spec: spec.clone(), params, ops })
+    ) -> Result<SparseModel> {
+        Ok(SparseModel { compiled: CompiledLayers::compress(spec, params, format, sp)? })
+    }
+
+    /// Wrap an already-compiled model (e.g. loaded from a sparse
+    /// artifact).
+    pub fn from_compiled(compiled: CompiledLayers) -> SparseModel {
+        SparseModel { compiled }
     }
 
     /// Overall nnz fraction across compressed operators.
     pub fn density(&self) -> f64 {
-        let (nnz, total): (usize, usize) = self
-            .ops
-            .values()
-            .map(|c| (c.nnz(), c.rows() * c.cols()))
-            .fold((0, 0), |(a, b), (x, y)| (a + x, b + y));
-        nnz as f64 / total as f64
+        self.compiled.density()
     }
 
     /// Compressed storage bytes vs dense bytes for the pruned operators.
     pub fn storage_ratio(&self) -> f64 {
-        let (sp_b, dense_b): (usize, usize) = self
-            .ops
-            .values()
-            .map(|c| (c.storage_bytes(), 4 * c.rows() * c.cols()))
-            .fold((0, 0), |(a, b), (x, y)| (a + x, b + y));
-        sp_b as f64 / dense_b as f64
+        self.compiled.storage_ratio()
     }
 
     /// (csr, nm) operator counts — which way `Auto` dispatched.
     pub fn format_counts(&self) -> (usize, usize) {
-        self.ops.values().fold((0, 0), |(c, n), op| match op {
-            SparseOp::Csr(_) => (c + 1, n),
-            SparseOp::Nm(_) => (c, n + 1),
-        })
+        self.compiled.format_counts()
     }
 }
 
-/// Forward with compressed operators; mirrors model::forward::logits.
-pub fn sparse_logits(model: &SparseModel<'_>, tokens: &[i32]) -> Tensor {
-    let spec = &model.spec;
-    let params = model.params;
+/// Forward with compressed operators; mirrors model::forward::logits but
+/// reads every parameter from the compiled model — embeddings, position
+/// table and norms from the residual set, pruned operators from their
+/// compressed form. The dense pruned weights are never materialized.
+pub fn compiled_logits(c: &CompiledLayers, tokens: &[i32]) -> Tensor {
+    let spec = &c.spec;
     let d = spec.d;
     let s = tokens.len();
-    let embed = params.req("embed").expect("embed");
+    let embed = c.global("embed").expect("validated at compile");
     let mut x = Tensor::zeros(vec![s, d]);
     for (t, &tok) in tokens.iter().enumerate() {
         x.row_mut(t).copy_from_slice(&embed.data()[tok as usize * d..(tok as usize + 1) * d]);
     }
-    if spec.family == crate::config::FamilyKind::Topt {
-        let pos = params.req("pos").expect("pos");
+    if spec.family == FamilyKind::Topt {
+        let pos = c.global("pos").expect("validated at compile");
         for t in 0..s {
             for (xi, &pv) in x.row_mut(t).iter_mut().zip(pos.row(t)) {
                 *xi += pv;
@@ -194,21 +188,26 @@ pub fn sparse_logits(model: &SparseModel<'_>, tokens: &[i32]) -> Tensor {
         }
     }
     for li in 0..spec.layers {
-        let ops = &model.ops;
-        x = layer_forward(spec, params, li, &x, |name, dense_w, input| {
-            match ops.get(&format!("l{li}.{name}")) {
-                Some(c) => c.matmul_t_wide(input),
-                None => crate::tensor::ops::matmul_nt(input, dense_w),
+        let map: BTreeMap<&str, &Tensor> =
+            c.layer_residual(li).iter().map(|(n, t)| (n.as_str(), t)).collect();
+        x = forward::layer_forward_mapped(spec, &map, &x, |name, dense_w, input| {
+            match c.op(li, name) {
+                Some(op) => op.matmul_t_wide(input),
+                None => crate::tensor::ops::matmul_nt(
+                    input,
+                    dense_w.unwrap_or_else(|| panic!("l{li}.{name}: no operator, no residual")),
+                ),
             }
         });
     }
-    let x = crate::model::forward::logits_final_norm(spec, params, &x);
+    let x =
+        forward::final_norm_with(spec, |n| c.global(n).expect("validated at compile"), &x);
     crate::tensor::ops::matmul_nt(&x, embed)
 }
 
-/// NLL of tokens[1..] under the sparse forward.
-pub fn sparse_nll(model: &SparseModel<'_>, tokens: &[i32]) -> f64 {
-    let lg = sparse_logits(model, &tokens[..tokens.len() - 1]);
+/// NLL of tokens[1..] under the compiled forward.
+pub fn compiled_nll(c: &CompiledLayers, tokens: &[i32]) -> f64 {
+    let lg = compiled_logits(c, &tokens[..tokens.len() - 1]);
     let mut total = 0f64;
     for t in 0..lg.rows() {
         let row = lg.row(t);
@@ -219,11 +218,31 @@ pub fn sparse_nll(model: &SparseModel<'_>, tokens: &[i32]) -> f64 {
     total
 }
 
+/// Generate a continuation through the compiled forward — the mirror of
+/// `eval::generate::generate` over compressed weights (one shared
+/// generation loop, `eval::generate::generate_with`, so the sampling
+/// stream and window policy cannot drift), used as the full-recompute
+/// parity oracle for artifact-loaded serving.
+pub fn compiled_generate(c: &CompiledLayers, prompt: &str, opts: &GenOptions) -> String {
+    generate_with(c.spec.seq, prompt, opts, |ctx| compiled_logits(c, ctx))
+}
+
+/// Forward with compressed operators; mirrors model::forward::logits.
+pub fn sparse_logits(model: &SparseModel, tokens: &[i32]) -> Tensor {
+    compiled_logits(&model.compiled, tokens)
+}
+
+/// NLL of tokens[1..] under the sparse forward.
+pub fn sparse_nll(model: &SparseModel, tokens: &[i32]) -> f64 {
+    compiled_nll(&model.compiled, tokens)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::{repo_root, Presets, Sparsity};
     use crate::model::init::init_params;
+    use crate::model::ops::pruned_ops;
     use crate::pruner::{round_model_to_sparsity, round_to_sparsity};
 
     fn pruned_params(model: &str, rate: f64) -> (ModelSpec, ModelParams) {
@@ -261,6 +280,18 @@ mod tests {
         let (spec, params) = pruned_params("topt-s1", 0.8);
         let sm = SparseModel::compress(&spec, &params).unwrap();
         assert!(sm.storage_ratio() < 0.55, "ratio {}", sm.storage_ratio());
+    }
+
+    #[test]
+    fn compiled_generate_matches_dense_generate() {
+        let (spec, params) = pruned_params("topt-s1", 0.5);
+        let sm = SparseModel::compress(&spec, &params).unwrap();
+        for (temp, seed) in [(0.0, 0u64), (1.1, 5)] {
+            let opts = GenOptions { max_tokens: 10, temperature: temp, seed };
+            let want = crate::eval::generate::generate(&spec, &params, "the ", &opts);
+            let got = compiled_generate(&sm.compiled, "the ", &opts);
+            assert_eq!(got, want, "temp {temp} seed {seed}");
+        }
     }
 
     #[test]

@@ -14,14 +14,25 @@
 //!
 //! [`forward::SparseOp`] is the per-operator dispatch point
 //! (`config::SparseFormat` selects `Csr`, `Nm`, or per-weight `Auto`),
-//! and [`forward::SparseModel`] runs the whole model through it so the
-//! repo can *measure* the inference win its own pruner produces
-//! (benches `sparse_speedup`, `serve_decode`).
+//! and [`compile::CompiledLayers`] is the single compression entry point:
+//! one pass over a pruned model that compresses every pruned operator and
+//! carries the residual dense parameters (norms, embeddings, lm head)
+//! along with it. The measurement forward ([`forward::SparseModel`]), the
+//! serving stack (`serve::batch::ServeModel`) and the on-disk sparse
+//! artifact (`ser::artifact`) all build from the same compiled form, so
+//! the repo both *measures* the inference win its own pruner produces
+//! (benches `sparse_speedup`, `serve_decode`) and *ships* it without a
+//! dense round-trip.
 
+pub mod compile;
 pub mod csr;
 pub mod forward;
 pub mod nm;
 
+pub use compile::{CompiledLayers, OpStat};
 pub use csr::CsrMatrix;
-pub use forward::{sparse_logits, sparse_nll, SparseModel, SparseOp};
+pub use forward::{
+    compiled_generate, compiled_logits, compiled_nll, sparse_logits, sparse_nll, SparseModel,
+    SparseOp,
+};
 pub use nm::NmMatrix;

@@ -86,7 +86,7 @@ fn mid_stream_abort_frees_kv_and_preserves_other_streams() {
     let max_tokens = 16usize;
 
     let cfg = EngineConfig { max_batch: 3, queue_cap: 8, transcript: None };
-    let serve_model = ServeModel::dense(&spec, &params);
+    let serve_model = ServeModel::dense(&spec, &params).unwrap();
     let mut eng = Engine::new(&serve_model, &cfg).unwrap();
     for (i, p) in prompts.iter().enumerate() {
         eng.submit(ServeRequest {

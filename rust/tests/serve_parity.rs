@@ -61,7 +61,7 @@ fn dense_decode_matches_generate_across_batches_and_threads() {
     for model in ["topt-s1", "tllama-s1"] {
         let (spec, params) = load(model, 31);
         let want = reference_texts(&spec, &params);
-        let serve_model = ServeModel::dense(&spec, &params);
+        let serve_model = ServeModel::dense(&spec, &params).unwrap();
         for batch in [1usize, 4] {
             for threads in [1usize, 2, 4] {
                 par::set_threads(threads);
@@ -105,7 +105,7 @@ fn batch_composition_does_not_change_sampled_streams() {
     // eval::generate regardless of who shares the batch.
     let (spec, params) = load("topt-s1", 41);
     let cfg = EngineConfig { max_batch: 3, queue_cap: 8, transcript: None };
-    let serve_model = ServeModel::dense(&spec, &params);
+    let serve_model = ServeModel::dense(&spec, &params).unwrap();
     let mut eng = Engine::new(&serve_model, &cfg).unwrap();
     for (i, p) in PROMPTS.iter().enumerate() {
         eng.submit(ServeRequest {

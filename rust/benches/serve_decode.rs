@@ -8,7 +8,7 @@
 //!     cargo bench --bench serve_decode
 //!     FP_BENCH_FAST=1 cargo bench --bench serve_decode   # CI smoke
 
-use fistapruner::bench_support::{fast_mode, run_serve_format_grid, Lab};
+use fistapruner::bench_support::{fast_mode, run_paged_kv_grid, run_serve_format_grid, Lab};
 use fistapruner::config::{SparseFormat, Sparsity};
 use fistapruner::metrics::csv::CsvWriter;
 use fistapruner::serve::{run_serve_bench, ServeBenchConfig};
@@ -26,6 +26,7 @@ fn main() -> anyhow::Result<()> {
         requests,
         sparsity: Sparsity::Unstructured(0.5),
         format: SparseFormat::Csr,
+        ..ServeBenchConfig::default()
     };
     let report = run_serve_bench(&spec, &params, &cfg)?;
     report.print();
@@ -76,5 +77,29 @@ fn main() -> anyhow::Result<()> {
     }
     let artifact = rows.iter().find(|r| r.format == "artifact");
     anyhow::ensure!(artifact.is_some(), "format grid must include the artifact row");
+
+    // the paged-KV axis: page sizes 4/16 vs the monolithic-equivalent
+    // (one full-context page), identical streams required throughout
+    let paged_rows = run_paged_kv_grid(
+        &spec,
+        &params,
+        &[4, 16, spec.seq],
+        16,
+        tokens,
+        4,
+        requests,
+        &out_dir.join("serve_paged.csv"),
+    )?;
+    for row in &paged_rows {
+        anyhow::ensure!(row.parity_ok, "paged grid greedy parity failed at page {}", row.kv_page);
+    }
+    let (small, mono) = (&paged_rows[0], &paged_rows[paged_rows.len() - 1]);
+    anyhow::ensure!(
+        small.kv_resident_bytes < mono.kv_capacity_bytes / 2,
+        "short requests through small pages must stay well under the monolithic \
+         preallocation (resident {} vs capacity {})",
+        small.kv_resident_bytes,
+        mono.kv_capacity_bytes
+    );
     Ok(())
 }

@@ -278,6 +278,103 @@ fn artifact_row(
     })
 }
 
+/// One row of [`run_paged_kv_grid`] output.
+#[derive(Clone, Debug)]
+pub struct PagedKvRow {
+    /// Positions per KV page (`spec.seq` ⇒ the monolithic layout).
+    pub kv_page: usize,
+    pub tokens_per_s: f64,
+    /// Peak KV bytes actually allocated during the run.
+    pub kv_resident_bytes: usize,
+    /// Worst-case bytes of the page budget (what monolithic preallocates).
+    pub kv_capacity_bytes: usize,
+    pub parity_ok: bool,
+}
+
+/// The paged-KV grid: the same dense weights and request set served
+/// through each page size side by side — rows = page sizes (pass
+/// `spec.seq` for the monolithic-equivalent row), columns = tokens/s,
+/// peak resident KV bytes, worst-case capacity bytes, and greedy parity
+/// vs `eval::generate`. The page-size axis behind
+/// `benches/serve_decode.rs`; callers gate on each row's `parity_ok`
+/// (streams must be bitwise independent of the page layout).
+#[allow(clippy::too_many_arguments)]
+pub fn run_paged_kv_grid(
+    spec: &crate::config::ModelSpec,
+    dense: &crate::model::params::ModelParams,
+    pages: &[usize],
+    prefill_chunk: usize,
+    tokens: usize,
+    batch: usize,
+    requests: usize,
+    csv_path: &std::path::Path,
+) -> Result<Vec<PagedKvRow>> {
+    use crate::serve::bench::{
+        greedy_references, requests_for, run_engine_cfg, synthetic_prompts,
+    };
+    use crate::serve::{EngineConfig, KvPage, KvPool, ServeModel};
+
+    let prompts = synthetic_prompts(requests);
+    let reqs = requests_for(&prompts, tokens);
+    let (reference, _) = greedy_references(spec, dense, &reqs, &prompts);
+    let model = ServeModel::dense(spec, dense)?;
+
+    let mut table = TableBuilder::new(
+        &format!("paged KV ({}, batch {batch})", spec.name()),
+        &["page", "tok/s", "resident B", "capacity B", "parity"],
+    );
+    let mut csv = CsvWriter::create(
+        csv_path,
+        &["kv_page", "tokens_per_s", "kv_resident_bytes", "kv_capacity_bytes", "parity"],
+    )?;
+    let mut rows = Vec::new();
+    for &page in pages {
+        let cfg = EngineConfig {
+            max_batch: batch,
+            queue_cap: requests.max(1),
+            kv_page: page,
+            kv_pages: None,
+            prefill_chunk,
+            transcript: None,
+        };
+        let (stats, texts) =
+            run_engine_cfg(&model, &cfg, &format!("paged p={page} b={batch}"), &reqs)?;
+        let parity_ok = crate::serve::bench::parity_against(&reference, &[&texts]);
+        let capacity =
+            KvPool::full_context_budget(spec, page, batch) * KvPage::bytes_for(page, spec.d);
+        rows.push(PagedKvRow {
+            kv_page: page,
+            tokens_per_s: stats.tokens_per_s,
+            kv_resident_bytes: stats.kv_resident_bytes,
+            kv_capacity_bytes: capacity,
+            parity_ok,
+        });
+    }
+    for row in &rows {
+        table.row(vec![
+            if row.kv_page >= spec.seq {
+                format!("{} (monolithic)", row.kv_page)
+            } else {
+                row.kv_page.to_string()
+            },
+            format!("{:.1}", row.tokens_per_s),
+            row.kv_resident_bytes.to_string(),
+            row.kv_capacity_bytes.to_string(),
+            if row.parity_ok { "ok".into() } else { "MISMATCH".into() },
+        ]);
+        csv.write_row(&[
+            row.kv_page.to_string(),
+            format!("{:.2}", row.tokens_per_s),
+            row.kv_resident_bytes.to_string(),
+            row.kv_capacity_bytes.to_string(),
+            row.parity_ok.to_string(),
+        ])?;
+    }
+    table.print();
+    println!("csv: {}", csv_path.display());
+    Ok(rows)
+}
+
 fn pretty_name(m: &Method) -> &'static str {
     match m {
         Method::Dense => "Dense",

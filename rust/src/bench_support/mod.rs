@@ -33,7 +33,9 @@ use crate::pruner::PruneReport;
 use crate::runtime::{Manifest, Session};
 use crate::train::ensure_checkpoint;
 
-pub use grid::{run_grid, run_serve_format_grid, GridSpec, ServeFormatRow};
+pub use grid::{
+    run_grid, run_paged_kv_grid, run_serve_format_grid, GridSpec, PagedKvRow, ServeFormatRow,
+};
 
 fn env_usize(name: &str, default: usize) -> usize {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)

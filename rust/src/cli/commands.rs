@@ -357,14 +357,22 @@ pub fn serve(args: &Args) -> Result<()> {
     let cfg = crate::serve::EngineConfig {
         max_batch: args.usize_or("batch", 4)?,
         queue_cap: args.usize_or("queue", 64)?,
+        kv_page: args.usize_or("kv-page", 16)?,
+        kv_pages: args.get("kv-pages").map(|v| v.parse()).transpose()?,
+        prefill_chunk: args.usize_or("prefill-chunk", 16)?,
         transcript: args.get("transcript").map(std::path::PathBuf::from),
     };
     let mut engine = crate::serve::Engine::new(&serve_model, &cfg)?;
+    let (_, _, budget_pages) = engine.kv_pages();
     eprintln!(
-        "serving {model_name} — {} slots, queue {}, KV pool {:.1} KiB, resident weights {:.1} KiB",
+        "serving {model_name} — {} slots, queue {}, KV {} pages × {} positions \
+         (cap {:.1} KiB, paged on demand), prefill chunk {}, resident weights {:.1} KiB",
         cfg.max_batch,
         cfg.queue_cap,
-        engine.kv_bytes() as f64 / 1024.0,
+        budget_pages,
+        engine.kv_page_positions(),
+        engine.kv_capacity_bytes() as f64 / 1024.0,
+        cfg.prefill_chunk,
         serve_model.resident_weight_bytes() as f64 / 1024.0
     );
 
@@ -430,8 +438,15 @@ pub fn serve(args: &Args) -> Result<()> {
     emit(&mut engine);
     let s = engine.stats;
     eprintln!(
-        "served {} requests: {} decode steps, {} tokens ({} prefill)",
-        s.retired, s.steps, s.decoded_tokens, s.prefill_tokens
+        "served {} requests: {} decode steps, {} tokens ({} prefill in {} chunks), \
+         KV resident {:.1} KiB of {:.1} KiB cap",
+        s.retired,
+        s.steps,
+        s.decoded_tokens,
+        s.prefill_tokens,
+        s.prefill_chunks,
+        engine.kv_resident_bytes() as f64 / 1024.0,
+        engine.kv_capacity_bytes() as f64 / 1024.0
     );
     Ok(())
 }
@@ -439,7 +454,9 @@ pub fn serve(args: &Args) -> Result<()> {
 /// `serve-bench`: tokens/s + latency for recompute vs KV-cached vs
 /// compressed decode (CSR, plus packed n:m side by side under
 /// `--format nm|auto`), with greedy parity checked against
-/// `eval::generate`.
+/// `eval::generate`. `--paged` measures the paged-KV axis instead:
+/// resident KV bytes vs the monolithic preallocation and the
+/// prefill-stall p99 with vs without chunking (BENCH_paged.json).
 pub fn serve_bench(args: &Args) -> Result<()> {
     let mut lab = Lab::new()?;
     let smoke = args.has("smoke");
@@ -453,7 +470,27 @@ pub fn serve_bench(args: &Args) -> Result<()> {
         requests: args.usize_or("requests", if smoke { 4 } else { 8 })?,
         sparsity: Sparsity::parse(args.get_or("sparsity", default_sparsity))?,
         format,
+        kv_page: args.usize_or("kv-page", 16)?,
+        prefill_chunk: args.usize_or("prefill-chunk", 16)?,
     };
+    // --paged: the KV memory / prefill-stall axis over dense weights
+    if args.has("paged") {
+        if args.get("artifact").is_some() {
+            anyhow::bail!("--paged measures the dense KV axis; drop --artifact");
+        }
+        let default_model = if fast { "topt-s1" } else { "topt-s3" };
+        let model = args.get_or("model", default_model).to_string();
+        let corpus = args.get_or("corpus", "c4-syn").to_string();
+        let params = load_or_train(&mut lab, args, &model, &corpus)?;
+        let spec = lab.presets.model(&model)?.clone();
+        let report = crate::serve::run_paged_bench(&spec, &params, &cfg)?;
+        report.print();
+        write_json_report(args, report.to_json())?;
+        if !report.parity_ok {
+            anyhow::bail!("paged-bench parity failed: served output != eval::generate");
+        }
+        return Ok(());
+    }
     // --artifact: measure the disk → serve path of a compiled artifact
     // (load ms, on-disk and resident bytes vs the dense checkpoint)
     // instead of the in-memory compression axes.

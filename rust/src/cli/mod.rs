@@ -70,6 +70,12 @@ COMMANDS:
             [--artifact path.fsa]   serve a sparse artifact: compressed
                                     weights are the only copy in memory
             [--weights dense|csr --batch N --queue N]
+            [--kv-page N]           positions per KV page (default 16)
+            [--kv-pages N]          KV page budget (default: full context
+                                    for every slot; shrink to backpressure)
+            [--prefill-chunk N]     prefill tokens per step (default 16):
+                                    long prompts warm up chunk by chunk,
+                                    interleaved with the decode batch
             [--transcript out.jsonl --synthetic N --tokens N --temp T]
             (reads one JSON request per stdin line unless --synthetic)
   serve-bench                       tokens/s + p50/p99: full recompute vs
@@ -77,6 +83,10 @@ COMMANDS:
             [--format csr|nm|auto]  plus packed n:m side by side), parity
             [--artifact path.fsa]   artifact path: load ms + on-disk and
                                     resident bytes vs the dense ckpt
+            [--paged]               paged-KV axis: resident KV bytes vs
+                                    monolithic + prefill-stall p99 with
+                                    vs without chunking
+            [--kv-page N --prefill-chunk N]
             [--tokens N --batch N --requests N --sparsity S --json path]
   pipeline  --model M --corpus C    end-to-end: train → prune (all
             [--sparsity S]          methods) → perplexity table

@@ -18,13 +18,16 @@ pub fn mean_std(xs: &[f64]) -> (f64, f64) {
 }
 
 /// Linearly-interpolated percentile of unsorted samples, `p` in [0, 100]
-/// (p50/p99 serving-latency reporting). NaN for an empty slice.
+/// (p50/p99 serving-latency reporting). NaN samples are filtered out —
+/// a poisoned latency can neither panic the sort (`f64::total_cmp`, the
+/// same fix as the rounding comparators) nor leak into the result — and
+/// the result is NaN only when no finite-ordered sample remains.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
+    let mut s: Vec<f64> = xs.iter().copied().filter(|v| !v.is_nan()).collect();
+    if s.is_empty() {
         return f64::NAN;
     }
-    let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).expect("percentile over NaN-free samples"));
+    s.sort_by(f64::total_cmp);
     let rank = (p.clamp(0.0, 100.0) / 100.0) * (s.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -72,5 +75,17 @@ mod tests {
         assert!((percentile(&xs, 25.0) - 1.75).abs() < 1e-12);
         assert_eq!(percentile(&[7.0], 99.0), 7.0);
         assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn percentile_survives_nan_samples() {
+        // regression: partial_cmp().expect(..) used to panic here
+        let xs = [4.0, f64::NAN, 1.0, 3.0, f64::NAN, 2.0];
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12, "NaNs are filtered, not sorted");
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!(percentile(&[f64::NAN, f64::NAN], 50.0).is_nan(), "all-NaN has no percentile");
+        // ±0.0 and infinities stay totally ordered under total_cmp
+        assert_eq!(percentile(&[f64::INFINITY, -0.0, 0.0], 0.0), -0.0);
     }
 }

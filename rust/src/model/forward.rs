@@ -367,6 +367,35 @@ impl KvLayer {
     }
 }
 
+/// Read access to one layer's cached K/V rows. Attention only needs
+/// per-position row lookups, so the storage layout behind the cache is
+/// pluggable: [`KvLayer`] keeps one contiguous full-context buffer (the
+/// eval-path cache), while the serving stack's paged cache
+/// (`serve::kv::PagedKvLayer`) resolves `t` through a block table of
+/// fixed-size position pages. Row values are identical either way, so
+/// [`attend_one`] / [`attend_prefix`] are bitwise independent of the
+/// layout.
+pub trait KvRead {
+    /// Cached positions so far.
+    fn len(&self) -> usize;
+    /// Cached K row for position `t` (< `len`).
+    fn k_row(&self, t: usize) -> &[f32];
+    /// Cached V row for position `t` (< `len`).
+    fn v_row(&self, t: usize) -> &[f32];
+}
+
+impl KvRead for KvLayer {
+    fn len(&self) -> usize {
+        KvLayer::len(self)
+    }
+    fn k_row(&self, t: usize) -> &[f32] {
+        KvLayer::k_row(self, t)
+    }
+    fn v_row(&self, t: usize) -> &[f32] {
+        KvLayer::v_row(self, t)
+    }
+}
+
 /// Single-query causal attention of `q` (the latest position) against a
 /// KV cache that already contains that position's K/V rows.
 ///
@@ -374,14 +403,15 @@ impl KvLayer {
 /// [`causal_attention`] — same score order, same softmax, same
 /// value-accumulation order — so the result is bitwise identical to the
 /// full-recompute path.
-pub fn attend_one(q: &[f32], kv: &KvLayer, heads: usize) -> Vec<f32> {
+pub fn attend_one<K: KvRead + ?Sized>(q: &[f32], kv: &K, heads: usize) -> Vec<f32> {
     attend_prefix(q, kv, heads, kv.len())
 }
 
 /// [`attend_one`] over only the first `len` cached positions — the
 /// batched-prefill form: prompt row t attends over rows 0..len (len =
-/// t + 1) of a cache that already holds the whole prompt.
-pub fn attend_prefix(q: &[f32], kv: &KvLayer, heads: usize, len: usize) -> Vec<f32> {
+/// t + 1) of a cache that already holds the whole prompt (or, chunked,
+/// at least the first `len` positions of it).
+pub fn attend_prefix<K: KvRead + ?Sized>(q: &[f32], kv: &K, heads: usize, len: usize) -> Vec<f32> {
     let d = q.len();
     let hd = d / heads;
     let scale = 1.0 / (hd as f32).sqrt();

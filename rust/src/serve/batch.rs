@@ -24,7 +24,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::config::{FamilyKind, ModelSpec, SparseFormat, Sparsity};
 use crate::model::forward;
@@ -252,33 +252,50 @@ impl<'p> ServeModel<'p> {
 
 /// One decode step for a batch of slots: token `tokens[i]` is fed to KV
 /// block `blocks[i]` at position `positions[i]`. Returns [b, vocab]
-/// logits, row i for slot i.
+/// logits, row i for slot i. Errors when a block cannot hold its new
+/// position (the engine grows blocks ahead of the step, so this is an
+/// internal-invariant check, not a normal control path).
 pub fn decode_step(
     model: &ServeModel<'_>,
     blocks: &mut [&mut KvBlock],
     tokens: &[i32],
     positions: &[usize],
-) -> Tensor {
-    let x = decode_hidden(model, blocks, tokens, positions);
+) -> Result<Tensor> {
+    let x = decode_hidden(model, blocks, tokens, positions)?;
     let x = model.final_norm(&x);
     // tied unembedding through the skinny kernel (bitwise = matmul_nt)
-    kernels::matmul_nt_skinny(&x, model.global("embed"))
+    Ok(kernels::matmul_nt_skinny(&x, model.global("embed")))
 }
 
-/// Prefill a whole prompt into a *fresh* KV block in one position-batched
-/// pass: all prompt rows go through each layer together ([p, d] stacks
-/// for norms/projections/MLP, row t attending over cached rows 0..=t), so
-/// admission costs one layer-stack walk instead of `p` serial single-row
-/// forwards that would stall co-batched requests. No logits are computed
-/// — the final norm and the [d × vocab] unembedding matmul would be
-/// discarded. Every per-row operation is the identical arithmetic of
-/// [`decode_step`] fed one token at a time, so the resulting cache is
-/// bitwise the same.
-pub fn prefill_prompt(model: &ServeModel<'_>, block: &mut KvBlock, tokens: &[i32]) {
-    assert!(block.is_empty(), "prefill needs a fresh KV block");
+/// Prefill one *chunk* of a prompt — `tokens` at absolute positions
+/// `start..start + tokens.len()` — into a KV block that already caches
+/// exactly the first `start` positions, in one position-batched pass:
+/// all chunk rows go through each layer together ([p, d] stacks for
+/// norms/projections/MLP, row t attending over cached rows
+/// 0..=start + t), so admission costs layer-stack walks instead of
+/// serial single-row forwards. No logits are computed — the final norm
+/// and the [d × vocab] unembedding matmul would be discarded.
+///
+/// Every per-row operation is the identical arithmetic of
+/// [`decode_step`] fed one token at a time, and a row only ever reads
+/// cache rows below it, so the resulting cache is bitwise independent of
+/// how the prompt is chunked (`start = 0` with the whole prompt is the
+/// old single-shot prefill). The block must already hold pages for
+/// `start + tokens.len()` positions (`KvBlock::grow_to`).
+pub fn prefill_extend(
+    model: &ServeModel<'_>,
+    block: &mut KvBlock,
+    tokens: &[i32],
+    start: usize,
+) -> Result<()> {
+    ensure!(
+        block.len() == start,
+        "prefill chunk at position {start} but the block caches {} positions",
+        block.len()
+    );
     let p = tokens.len();
     if p == 0 {
-        return;
+        return Ok(());
     }
     let spec = &model.spec;
     let d = spec.d;
@@ -291,20 +308,28 @@ pub fn prefill_prompt(model: &ServeModel<'_>, block: &mut KvBlock, tokens: &[i32
     if spec.family == FamilyKind::Topt {
         let pos_t = model.global("pos");
         for t in 0..p {
-            for (xi, &pv) in x.row_mut(t).iter_mut().zip(pos_t.row(t)) {
+            for (xi, &pv) in x.row_mut(t).iter_mut().zip(pos_t.row(start + t)) {
                 *xi += pv;
             }
         }
     }
     for li in 0..spec.layers {
-        x = prefill_layer(model, li, block, &x);
+        x = prefill_layer(model, li, block, &x, start)?;
     }
+    Ok(())
 }
 
-/// One decoder layer over the whole prompt stack [p, d]: like
-/// [`layer_step`] but all rows belong to one slot at positions 0..p, and
-/// attention row t reads only the first t + 1 freshly-cached positions.
-fn prefill_layer(model: &ServeModel<'_>, li: usize, block: &mut KvBlock, x: &Tensor) -> Tensor {
+/// One decoder layer over a prompt-chunk stack [p, d]: like
+/// [`layer_step`] but all rows belong to one slot at positions
+/// `start..start + p`, and attention row t reads only the first
+/// `start + t + 1` cached positions.
+fn prefill_layer(
+    model: &ServeModel<'_>,
+    li: usize,
+    block: &mut KvBlock,
+    x: &Tensor,
+    start: usize,
+) -> Result<Tensor> {
     let spec = &model.spec;
     let p = x.rows();
     let d = spec.d;
@@ -327,12 +352,12 @@ fn prefill_layer(model: &ServeModel<'_>, li: usize, block: &mut KvBlock, x: &Ten
     }
     if spec.family == FamilyKind::Tllama {
         for t in 0..p {
-            forward::rope_row(q.row_mut(t), spec.heads, t);
-            forward::rope_row(k.row_mut(t), spec.heads, t);
+            forward::rope_row(q.row_mut(t), spec.heads, start + t);
+            forward::rope_row(k.row_mut(t), spec.heads, start + t);
         }
     }
     for t in 0..p {
-        block.layer_mut(li).push(k.row(t), v.row(t));
+        block.layer_mut(li).push(k.row(t), v.row(t))?;
     }
     let mut ctx = Tensor::zeros(vec![p, d]);
     {
@@ -342,7 +367,8 @@ fn prefill_layer(model: &ServeModel<'_>, li: usize, block: &mut KvBlock, x: &Ten
         par::for_each_row_block(ctx.data_mut(), p, d, 1, |r0, _r1, out| {
             for (i, orow) in out.chunks_mut(d).enumerate() {
                 let t = r0 + i;
-                let row = forward::attend_prefix(&qd[t * d..(t + 1) * d], kv, heads, t + 1);
+                let row =
+                    forward::attend_prefix(&qd[t * d..(t + 1) * d], kv, heads, start + t + 1);
                 orow.copy_from_slice(&row);
             }
         });
@@ -363,7 +389,7 @@ fn prefill_layer(model: &ServeModel<'_>, li: usize, block: &mut KvBlock, x: &Ten
     for (a, bv) in x1.data_mut().iter_mut().zip(mlp_out.data()) {
         *a += bv;
     }
-    x1
+    Ok(x1)
 }
 
 /// The shared layer-stack walk: embed rows → every decoder layer (caches
@@ -373,7 +399,7 @@ fn decode_hidden(
     blocks: &mut [&mut KvBlock],
     tokens: &[i32],
     positions: &[usize],
-) -> Tensor {
+) -> Result<Tensor> {
     let spec = &model.spec;
     let b = tokens.len();
     assert_eq!(blocks.len(), b, "one KV block per batched token");
@@ -398,9 +424,9 @@ fn decode_hidden(
         }
     }
     for li in 0..spec.layers {
-        x = layer_step(model, li, blocks, positions, &x);
+        x = layer_step(model, li, blocks, positions, &x)?;
     }
-    x
+    Ok(x)
 }
 
 /// One decoder layer over the [b, d] slot stack.
@@ -410,7 +436,7 @@ fn layer_step(
     blocks: &mut [&mut KvBlock],
     positions: &[usize],
     x: &Tensor,
-) -> Tensor {
+) -> Result<Tensor> {
     let spec = &model.spec;
     let b = x.rows();
     let d = spec.d;
@@ -438,14 +464,15 @@ fn layer_step(
         }
     }
     for i in 0..b {
-        blocks[i].layer_mut(li).push(k.row(i), v.row(i));
+        blocks[i].layer_mut(li).push(k.row(i), v.row(i))?;
     }
     // Attention per slot against its own cache, fanned out across slots
     // (row-block over the [b, d] context stack; each row only reads its
-    // slot's cache, so the split is free of synchronization).
+    // slot's cache — through its page table — so the split is free of
+    // synchronization).
     let mut ctx = Tensor::zeros(vec![b, d]);
     {
-        let kv_refs: Vec<&crate::model::forward::KvLayer> =
+        let kv_refs: Vec<&super::kv::PagedKvLayer> =
             blocks.iter().map(|blk| blk.layer(li)).collect();
         let qd = q.data();
         let heads = spec.heads;
@@ -474,7 +501,7 @@ fn layer_step(
     for (a, bv) in x1.data_mut().iter_mut().zip(mlp_out.data()) {
         *a += bv;
     }
-    x1
+    Ok(x1)
 }
 
 /// The family-specific MLP over a [rows, d] post-norm stack (shared by
@@ -521,20 +548,26 @@ mod tests {
             let spec = presets.model(m).unwrap().clone();
             let params = init_params(&spec, 17);
             let model = ServeModel::dense(&spec, &params).unwrap();
-            // two sequences of different lengths decoding in one batch
+            // two sequences of different lengths decoding in one batch,
+            // through a small page size so both block tables span pages
             let seqs: [Vec<i32>; 2] = [
                 (0..9).map(|i| (i * 5 + 1) % 96).collect(),
                 (0..5).map(|i| (i * 3 + 2) % 96).collect(),
             ];
-            let mut a = KvBlock::new(&spec);
-            let mut c = KvBlock::new(&spec);
+            let page = 4;
+            let budget = crate::serve::kv::KvPool::full_context_budget(&spec, page, 2);
+            let mut pool = crate::serve::kv::KvPool::new(&spec, page, budget);
+            let mut a = KvBlock::new(&spec, page);
+            let mut c = KvBlock::new(&spec, page);
+            a.grow_to(seqs[0].len(), &mut pool).unwrap();
+            c.grow_to(seqs[1].len(), &mut pool).unwrap();
             // warm both caches on all but the last token (batched prefill)
-            prefill_prompt(&model, &mut a, &seqs[0][..seqs[0].len() - 1]);
-            prefill_prompt(&model, &mut c, &seqs[1][..seqs[1].len() - 1]);
+            prefill_extend(&model, &mut a, &seqs[0][..seqs[0].len() - 1], 0).unwrap();
+            prefill_extend(&model, &mut c, &seqs[1][..seqs[1].len() - 1], 0).unwrap();
             let mut blocks = [&mut a, &mut c];
             let toks = [seqs[0][seqs[0].len() - 1], seqs[1][seqs[1].len() - 1]];
             let pos = [seqs[0].len() - 1, seqs[1].len() - 1];
-            let lg = decode_step(&model, &mut blocks, &toks, &pos);
+            let lg = decode_step(&model, &mut blocks, &toks, &pos).unwrap();
             for (row, seq) in [(0usize, &seqs[0]), (1, &seqs[1])] {
                 let full = crate::model::forward::logits(&spec, &params, seq);
                 let want = full.row(seq.len() - 1);
@@ -542,6 +575,50 @@ mod tests {
                     assert_eq!(got.to_bits(), w.to_bits(), "{m} slot {row} logit {j}");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_cache_is_bitwise_equal_to_single_shot() {
+        let presets = Presets::load(&repo_root().unwrap()).unwrap();
+        for m in ["topt-s1", "tllama-s1"] {
+            let spec = presets.model(m).unwrap().clone();
+            let params = init_params(&spec, 19);
+            let model = ServeModel::dense(&spec, &params).unwrap();
+            let prompt: Vec<i32> = (0..13).map(|i| (i * 7 + 5) % 96).collect();
+            let page = 4;
+            let mut pool = crate::serve::kv::KvPool::new(
+                &spec,
+                page,
+                crate::serve::kv::KvPool::full_context_budget(&spec, page, 2),
+            );
+            // single shot
+            let mut whole = KvBlock::new(&spec, page);
+            whole.grow_to(prompt.len(), &mut pool).unwrap();
+            prefill_extend(&model, &mut whole, &prompt, 0).unwrap();
+            // chunks of 5, 5, 3
+            let mut chunked = KvBlock::new(&spec, page);
+            chunked.grow_to(prompt.len(), &mut pool).unwrap();
+            let mut at = 0;
+            for c in [5usize, 5, 3] {
+                prefill_extend(&model, &mut chunked, &prompt[at..at + c], at).unwrap();
+                at += c;
+            }
+            assert_eq!(whole.len(), chunked.len());
+            for li in 0..spec.layers {
+                for t in 0..prompt.len() {
+                    let (kw, kc) = (whole.layer(li).k_row(t), chunked.layer(li).k_row(t));
+                    let (vw, vc) = (whole.layer(li).v_row(t), chunked.layer(li).v_row(t));
+                    for j in 0..spec.d {
+                        assert_eq!(kw[j].to_bits(), kc[j].to_bits(), "{m} K l{li} t{t} j{j}");
+                        assert_eq!(vw[j].to_bits(), vc[j].to_bits(), "{m} V l{li} t{t} j{j}");
+                    }
+                }
+            }
+            // a chunk at the wrong start position is a checked error
+            let mut bad = KvBlock::new(&spec, page);
+            bad.grow_to(4, &mut pool).unwrap();
+            assert!(prefill_extend(&model, &mut bad, &prompt[..2], 3).is_err());
         }
     }
 

@@ -38,6 +38,14 @@ pub struct ServeBenchConfig {
     /// requires `sparsity` to be `Sparsity::Semi`; `Auto` degrades to
     /// CSR-only otherwise).
     pub format: SparseFormat,
+    /// Positions per KV page (`--kv-page`) — the paged-axis geometry
+    /// ([`run_paged_bench`]); the throughput paths measure at the
+    /// engine's default paging so their numbers stay comparable across
+    /// configs.
+    pub kv_page: usize,
+    /// Prefill-token budget per engine step (`--prefill-chunk`) for the
+    /// paged axis.
+    pub prefill_chunk: usize,
 }
 
 impl Default for ServeBenchConfig {
@@ -48,6 +56,8 @@ impl Default for ServeBenchConfig {
             requests: 8,
             sparsity: Sparsity::Unstructured(0.5),
             format: SparseFormat::Csr,
+            kv_page: 16,
+            prefill_chunk: 16,
         }
     }
 }
@@ -63,6 +73,9 @@ pub struct PathStats {
     /// Per-request submit-to-retire latency percentiles.
     pub p50_ms: f64,
     pub p99_ms: f64,
+    /// Peak KV bytes actually allocated by the paged pool during the
+    /// run (0 for the recompute path, which keeps no cache).
+    pub kv_resident_bytes: usize,
 }
 
 /// Full serve-bench result.
@@ -148,6 +161,7 @@ impl ServeBenchReport {
             pm.insert("tokens_per_s".to_string(), Json::Num(round3(p.tokens_per_s)));
             pm.insert("p50_ms".to_string(), Json::Num(round3(p.p50_ms)));
             pm.insert("p99_ms".to_string(), Json::Num(round3(p.p99_ms)));
+            pm.insert("kv_resident_bytes".to_string(), Json::Num(p.kv_resident_bytes as f64));
             paths.insert(p.label.clone(), Json::Obj(pm));
         }
         m.insert("paths".to_string(), Json::Obj(paths));
@@ -227,20 +241,20 @@ pub(crate) fn parity_against(
 /// free), so `latency_ms` measures service time — comparable to the solo
 /// `eval::generate` reference — rather than artificial queue wait behind
 /// requests submitted upfront. Shared with the
-/// `bench_support::grid::run_serve_format_grid` artifact row so every
-/// row of that table is measured under the same admission policy.
-pub(crate) fn run_engine(
+/// `bench_support::grid` runners so every row of those tables is
+/// measured under the same admission policy.
+pub(crate) fn run_engine_cfg(
     model: &ServeModel<'_>,
-    batch: usize,
+    cfg: &EngineConfig,
     label: &str,
     requests: &[ServeRequest],
 ) -> Result<(PathStats, BTreeMap<String, String>)> {
-    let cfg = EngineConfig { max_batch: batch, queue_cap: requests.len().max(1), transcript: None };
-    let mut eng = Engine::new(model, &cfg)?;
+    let mut eng = Engine::new(model, cfg)?;
     let start = std::time::Instant::now();
     let mut pending = requests.iter();
     let mut next = pending.next();
     let mut responses = Vec::new();
+    let mut kv_peak = 0usize;
     loop {
         // top up: one queued request per free slot (admitted next step)
         while eng.free_slots() > eng.queued() {
@@ -256,6 +270,7 @@ pub(crate) fn run_engine(
             break;
         }
         eng.step()?;
+        kv_peak = kv_peak.max(eng.kv_resident_bytes());
         responses.extend(eng.take_responses());
     }
     let wall_s = start.elapsed().as_secs_f64();
@@ -271,9 +286,26 @@ pub(crate) fn run_engine(
             tokens_per_s: total_tokens as f64 / wall_s.max(1e-12),
             p50_ms: percentile(&latencies, 50.0),
             p99_ms: percentile(&latencies, 99.0),
+            kv_resident_bytes: kv_peak,
         },
         texts,
     ))
+}
+
+/// [`run_engine_cfg`] at batch width `batch` with the default KV page
+/// geometry.
+pub(crate) fn run_engine(
+    model: &ServeModel<'_>,
+    batch: usize,
+    label: &str,
+    requests: &[ServeRequest],
+) -> Result<(PathStats, BTreeMap<String, String>)> {
+    let cfg = EngineConfig {
+        max_batch: batch,
+        queue_cap: requests.len().max(1),
+        ..EngineConfig::default()
+    };
+    run_engine_cfg(model, &cfg, label, requests)
 }
 
 /// One compressed format measured over one set of pruned weights: batch-1
@@ -352,6 +384,7 @@ pub fn run_serve_bench(
         tokens_per_s: recompute_tokens as f64 / recompute_wall.max(1e-12),
         p50_ms: percentile(&ref_lat, 50.0),
         p99_ms: percentile(&ref_lat, 99.0),
+        kv_resident_bytes: 0,
     };
 
     // KV-cached dense, batch 1 and batch B (one weight resolution)
@@ -414,6 +447,216 @@ pub fn run_serve_bench(
         nm_speedup,
         csr_storage_ratio: csr.storage_ratio,
         nm_storage_ratio,
+        parity_ok,
+    })
+}
+
+/// The paged-KV axis, measured on two workloads:
+///
+/// * **memory** — a half-full batch of short requests on a paged engine:
+///   peak resident KV bytes (pages actually touched) vs what the old
+///   monolithic pool preallocated for the same engine (`slots` ×
+///   full-context blocks);
+/// * **prefill stall** — a long prompt joining an active decode batch:
+///   per-step wall-time p99 with chunked prefill (`prefill_chunk`
+///   positions per step, decode interleaved) vs the whole prompt
+///   prefilled in one step (the old admission behaviour).
+///
+/// Greedy parity against `eval::generate` is checked on every stream of
+/// both workloads, chunked and unchunked.
+#[derive(Clone, Debug)]
+pub struct PagedBenchReport {
+    pub model: String,
+    pub kv_page: usize,
+    pub prefill_chunk: usize,
+    /// Peak KV bytes allocated serving the half-full short batch.
+    pub kv_resident_bytes: usize,
+    /// Bytes the monolithic pool preallocated for the same engine.
+    pub monolithic_kv_bytes: usize,
+    /// Decode throughput of the chunked stall workload.
+    pub tokens_per_s: f64,
+    /// p99 engine-step wall ms around the long-prompt admission, chunked…
+    pub chunked_step_p99_ms: f64,
+    /// …vs whole-prompt-in-one-step.
+    pub unchunked_step_p99_ms: f64,
+    pub parity_ok: bool,
+}
+
+impl PagedBenchReport {
+    /// resident / monolithic — the serving-time KV memory-conservation
+    /// ratio (the weight-side counterpart is the artifact bench).
+    pub fn kv_resident_ratio(&self) -> f64 {
+        self.kv_resident_bytes as f64 / self.monolithic_kv_bytes.max(1) as f64
+    }
+
+    /// chunked / unchunked step p99 — how much of the prefill stall the
+    /// chunking removed (lower is better).
+    pub fn stall_ratio(&self) -> f64 {
+        self.chunked_step_p99_ms / self.unchunked_step_p99_ms.max(1e-12)
+    }
+
+    pub fn print(&self) {
+        println!(
+            "paged-bench ({}, page {} × chunk {})",
+            self.model, self.kv_page, self.prefill_chunk
+        );
+        println!(
+            "  KV resident (half-full short batch): {} B vs monolithic {} B ({:.3}x)",
+            self.kv_resident_bytes,
+            self.monolithic_kv_bytes,
+            self.kv_resident_ratio()
+        );
+        println!(
+            "  prefill-stall step p99: chunked {:.2} ms vs unchunked {:.2} ms ({:.3}x)   \
+             tok/s {:.1}   greedy parity: {}",
+            self.chunked_step_p99_ms,
+            self.unchunked_step_p99_ms,
+            self.stall_ratio(),
+            self.tokens_per_s,
+            if self.parity_ok { "ok" } else { "MISMATCH" }
+        );
+    }
+
+    /// JSON object for BENCH_paged.json (the CI record of resident KV
+    /// bytes and the prefill-stall axis next to tokens/s).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("model".to_string(), Json::Str(self.model.clone()));
+        m.insert("kv_page".to_string(), Json::Num(self.kv_page as f64));
+        m.insert("prefill_chunk".to_string(), Json::Num(self.prefill_chunk as f64));
+        m.insert("kv_resident_bytes".to_string(), Json::Num(self.kv_resident_bytes as f64));
+        m.insert(
+            "monolithic_kv_bytes".to_string(),
+            Json::Num(self.monolithic_kv_bytes as f64),
+        );
+        m.insert("kv_resident_ratio".to_string(), Json::Num(round3(self.kv_resident_ratio())));
+        m.insert("tokens_per_s".to_string(), Json::Num(round3(self.tokens_per_s)));
+        m.insert(
+            "prefill_stall_p99_ms".to_string(),
+            Json::Num(round3(self.chunked_step_p99_ms)),
+        );
+        m.insert(
+            "unchunked_stall_p99_ms".to_string(),
+            Json::Num(round3(self.unchunked_step_p99_ms)),
+        );
+        m.insert("stall_ratio".to_string(), Json::Num(round3(self.stall_ratio())));
+        m.insert("parity_ok".to_string(), Json::Bool(self.parity_ok));
+        Json::Obj(m)
+    }
+}
+
+/// The stall workload: `shorts` decode from step 0; after two warm
+/// steps the long request is submitted; every step from then on is
+/// timed. Returns (step p99 ms, decode tokens/s over the whole run,
+/// id → text).
+fn stall_run(
+    model: &ServeModel<'_>,
+    cfg: &EngineConfig,
+    shorts: &[ServeRequest],
+    long: &ServeRequest,
+) -> Result<(f64, f64, BTreeMap<String, String>)> {
+    let mut eng = Engine::new(model, cfg)?;
+    for r in shorts {
+        eng.submit(r.clone())?;
+    }
+    let start = std::time::Instant::now();
+    for _ in 0..2 {
+        eng.step()?;
+    }
+    eng.submit(long.clone())?;
+    let mut step_ms = Vec::new();
+    let mut responses = eng.take_responses();
+    while !eng.is_idle() {
+        let t0 = std::time::Instant::now();
+        eng.step()?;
+        step_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        responses.extend(eng.take_responses());
+    }
+    responses.extend(eng.take_responses());
+    let wall_s = start.elapsed().as_secs_f64();
+    let total_tokens: usize = responses.iter().map(|r| r.completion_tokens).sum();
+    let texts = responses.into_iter().map(|r| (r.id, r.text)).collect();
+    Ok((percentile(&step_ms, 99.0), total_tokens as f64 / wall_s.max(1e-12), texts))
+}
+
+/// Measure the paged axis; see [`PagedBenchReport`]. Runs on the dense
+/// weights — paging is a cache-layout property, independent of the
+/// weight format.
+pub fn run_paged_bench(
+    spec: &ModelSpec,
+    dense: &ModelParams,
+    cfg: &ServeBenchConfig,
+) -> Result<PagedBenchReport> {
+    ensure!(cfg.tokens >= 1 && cfg.batch >= 1 && cfg.requests >= 1, "bench sizes must be >= 1");
+    ensure!(
+        cfg.tokens + 2 < spec.seq,
+        "paged bench needs tokens ({}) well inside the context ({})",
+        cfg.tokens,
+        spec.seq
+    );
+    let model = ServeModel::dense(spec, dense)?;
+    let slots = cfg.batch.max(2);
+    let mut parity_ok = true;
+
+    // memory workload: half-full batch of short requests
+    let half_n = (slots / 2).max(1);
+    let prompts = synthetic_prompts(half_n);
+    let requests = requests_for(&prompts, cfg.tokens);
+    let (reference, _) = greedy_references(spec, dense, &requests, &prompts);
+    let mem_cfg = EngineConfig {
+        max_batch: slots,
+        queue_cap: half_n,
+        kv_page: cfg.kv_page,
+        kv_pages: None,
+        prefill_chunk: cfg.prefill_chunk,
+        transcript: None,
+    };
+    let (half, texts) = run_engine_cfg(&model, &mem_cfg, "paged half-batch", &requests)?;
+    parity_ok &= parity_against(&reference, &[&texts]);
+    let monolithic_kv_bytes = spec.layers * 2 * 4 * spec.seq * spec.d * slots;
+
+    // stall workload: long prompt joins slots-1 decoding shorts
+    let short_n = slots - 1;
+    let mut prompts = synthetic_prompts(short_n);
+    let mut requests = requests_for(&prompts, cfg.tokens);
+    let long_len = (spec.seq - cfg.tokens - 1).max(2);
+    let long_prompt: String =
+        "abcdefghijklmnopqrstuvwxyz ".chars().cycle().take(long_len).collect();
+    let long = ServeRequest {
+        id: "long".to_string(),
+        prompt: long_prompt.clone(),
+        max_tokens: cfg.tokens,
+        temperature: 0.0,
+        seed: 7,
+        stop: None,
+    };
+    prompts.push(long_prompt);
+    requests.push(long.clone());
+    let (stall_ref, _) = greedy_references(spec, dense, &requests, &prompts);
+    let shorts = &requests[..short_n];
+    let chunked_cfg = EngineConfig {
+        max_batch: slots,
+        queue_cap: slots,
+        kv_page: cfg.kv_page,
+        kv_pages: None,
+        prefill_chunk: cfg.prefill_chunk,
+        transcript: None,
+    };
+    let (chunked_p99, tok_s, chunked_texts) = stall_run(&model, &chunked_cfg, shorts, &long)?;
+    // unchunked = the whole prompt in one step's budget (old behaviour)
+    let unchunked_cfg = EngineConfig { prefill_chunk: spec.seq, ..chunked_cfg };
+    let (unchunked_p99, _, unchunked_texts) = stall_run(&model, &unchunked_cfg, shorts, &long)?;
+    parity_ok &= parity_against(&stall_ref, &[&chunked_texts, &unchunked_texts]);
+
+    Ok(PagedBenchReport {
+        model: spec.name(),
+        kv_page: cfg.kv_page,
+        prefill_chunk: cfg.prefill_chunk,
+        kv_resident_bytes: half.kv_resident_bytes,
+        monolithic_kv_bytes,
+        tokens_per_s: tok_s,
+        chunked_step_p99_ms: chunked_p99,
+        unchunked_step_p99_ms: unchunked_p99,
         parity_ok,
     })
 }
@@ -516,6 +759,7 @@ impl ArtifactBenchReport {
             pm.insert("tokens_per_s".to_string(), Json::Num(round3(p.tokens_per_s)));
             pm.insert("p50_ms".to_string(), Json::Num(round3(p.p50_ms)));
             pm.insert("p99_ms".to_string(), Json::Num(round3(p.p99_ms)));
+            pm.insert("kv_resident_bytes".to_string(), Json::Num(p.kv_resident_bytes as f64));
             paths.insert(p.label.clone(), Json::Obj(pm));
         }
         m.insert("paths".to_string(), Json::Obj(paths));
@@ -598,6 +842,7 @@ mod tests {
             requests: 2,
             sparsity: Sparsity::Unstructured(0.5),
             format: SparseFormat::Csr,
+            ..ServeBenchConfig::default()
         };
         let report = run_serve_bench(&spec, &params, &cfg).unwrap();
         assert!(report.parity_ok, "served outputs diverged from eval::generate");
@@ -615,6 +860,39 @@ mod tests {
     }
 
     #[test]
+    fn paged_bench_reports_memory_and_stall_axes() {
+        let presets = Presets::load(&repo_root().unwrap()).unwrap();
+        let spec = presets.model("topt-s1").unwrap().clone();
+        let params = init_params(&spec, 41);
+        let cfg = ServeBenchConfig {
+            tokens: 6,
+            batch: 4,
+            requests: 2,
+            kv_page: 8,
+            prefill_chunk: 8,
+            ..ServeBenchConfig::default()
+        };
+        let report = run_paged_bench(&spec, &params, &cfg).unwrap();
+        assert!(report.parity_ok, "paged serving diverged from eval::generate");
+        assert_eq!(report.kv_page, 8);
+        // the acceptance number: a half-full batch of short requests
+        // must stay measurably under the monolithic preallocation
+        assert!(
+            report.kv_resident_bytes < report.monolithic_kv_bytes / 2,
+            "resident {} vs monolithic {}",
+            report.kv_resident_bytes,
+            report.monolithic_kv_bytes
+        );
+        assert!(report.kv_resident_bytes > 0);
+        assert!(report.chunked_step_p99_ms > 0.0 && report.unchunked_step_p99_ms > 0.0);
+        let j = report.to_json().to_string_compact();
+        let v = Json::parse(&j).unwrap();
+        assert!(v.get("kv_resident_bytes").unwrap().as_f64().is_some());
+        assert!(v.get("prefill_stall_p99_ms").unwrap().as_f64().is_some());
+        assert_eq!(v.get("parity_ok").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
     fn nm_axis_reports_both_formats() {
         let presets = Presets::load(&repo_root().unwrap()).unwrap();
         let spec = presets.model("topt-s1").unwrap().clone();
@@ -625,6 +903,7 @@ mod tests {
             requests: 2,
             sparsity: Sparsity::Semi(2, 4),
             format: SparseFormat::Nm,
+            ..ServeBenchConfig::default()
         };
         let report = run_serve_bench(&spec, &params, &cfg).unwrap();
         assert!(report.parity_ok, "served outputs diverged from eval::generate");
@@ -684,6 +963,7 @@ mod tests {
             requests: 2,
             sparsity: sp,
             format: SparseFormat::Auto,
+            ..ServeBenchConfig::default()
         };
         // a wrong --model flag is rejected before any measurement
         assert!(run_artifact_bench(&path, &cfg, Some("topt-s2")).is_err());

@@ -1,27 +1,44 @@
-//! The continuous-batching serving engine.
+//! The continuous-batching serving engine over the paged KV pool.
 //!
 //! State machine per request:
 //!
 //! ```text
-//!   submit ──(admission control)──▶ queued ──(free slot)──▶ prefill
-//!       ▲                              │                      │
-//!       └── rejected (error response)  └── aborted            ▼
-//!                                                          decoding ──▶ retired
-//!                                                     (length | stop | abort)
+//!   submit ──(admission control)──▶ queued ──(slot + page reservation)──▶ prefilling(chunk k/N)
+//!       ▲                              │                                        │
+//!       └── rejected (error response)  └── aborted                              ▼
+//!                                                                            decoding ──▶ retired
+//!                                                               (length | stop | abort | kv error)
 //! ```
 //!
-//! Scheduling is *continuous*: every [`Engine::step`] advances all active
-//! slots by one token in a single batched forward (`batch::decode_step`),
-//! then retires finished slots and immediately admits queued requests into
-//! the freed slots — new arrivals join the batch mid-flight instead of
-//! waiting for a generation boundary (join-on-arrival / retire-on-EOS).
+//! Scheduling is *continuous* and *chunk-interleaved*: every
+//! [`Engine::step`] first spends a bounded prefill-token budget
+//! (`prefill_chunk`) on slots still warming their prompt caches, then
+//! advances every decoding slot by one token in a single batched forward
+//! (`batch::decode_step`), retires finished slots, and admits queued
+//! requests into the freed capacity — new arrivals join the batch
+//! mid-flight (join-on-arrival / retire-on-EOS), and a 1k-token prompt
+//! costs each step at most `prefill_chunk` positions instead of stalling
+//! every co-batched stream for a whole prefill pass.
+//!
+//! Admission is page-accounted: a request is admitted when a slot is
+//! free AND the paged pool can *reserve* every page its projected
+//! maximum length could need (`serve::kv`). Reservation makes
+//! backpressure eviction-free and deterministic — admission is strictly
+//! FIFO (head-of-line blocking, never best-fit reordering), and an
+//! admitted request can always grow to its projected length. Actual
+//! pages are taken lazily as the cache grows; a growth that the
+//! accounting cannot cover (an internal slip, or an injected budget
+//! shrink) is a *checked* error that retires only the offending request
+//! — every other in-flight stream continues byte-identical.
 //!
 //! Determinism contract: a request's token stream depends only on the
 //! model weights, its own prompt/seed/temperature, and the kernel
 //! determinism guarantees of `tensor::par` — never on batch composition,
-//! admission order, worker thread count, or other requests' lifecycles
-//! (including mid-stream aborts). `rust/tests/serve_parity.rs` and the
-//! abort case in `rust/tests/failure_injection.rs` pin this down against
+//! admission order, page size or page assignment, prefill chunk
+//! boundaries, worker thread count, or other requests' lifecycles
+//! (including mid-stream aborts). `rust/tests/serve_parity.rs`,
+//! `rust/tests/paged_kv_parity.rs` and the abort/exhaustion cases in
+//! `rust/tests/failure_injection.rs` pin this down against
 //! `eval::generate`.
 
 use std::collections::{BTreeSet, VecDeque};
@@ -33,8 +50,8 @@ use crate::data::tokenizer;
 use crate::eval::generate::next_token;
 use crate::util::Pcg64;
 
-use super::batch::{decode_step, prefill_prompt, ServeModel};
-use super::kv::KvPool;
+use super::batch::{decode_step, prefill_extend, ServeModel};
+use super::kv::{KvBlock, KvPool};
 use super::request::{FinishReason, ServeRequest, ServeResponse, TranscriptTee};
 
 /// Engine sizing and output knobs.
@@ -43,29 +60,68 @@ pub struct EngineConfig {
     pub max_batch: usize,
     /// Waiting-line bound; submissions beyond it are rejected.
     pub queue_cap: usize,
+    /// Positions per KV page (`--kv-page`).
+    pub kv_page: usize,
+    /// KV page budget; `None` sizes the pool so every slot can hold the
+    /// full model context (the old monolithic capacity — default
+    /// workloads admit exactly as before, they just stop paying for
+    /// context they never touch).
+    pub kv_pages: Option<usize>,
+    /// Prefill-token budget per engine step (`--prefill-chunk`): long
+    /// prompts warm up `prefill_chunk` positions at a time, interleaved
+    /// with decode steps of the other slots.
+    pub prefill_chunk: usize,
     /// Tee every retired request to this JSONL file.
     pub transcript: Option<std::path::PathBuf>,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        EngineConfig { max_batch: 4, queue_cap: 64, transcript: None }
+        EngineConfig {
+            max_batch: 4,
+            queue_cap: 64,
+            kv_page: 16,
+            kv_pages: None,
+            prefill_chunk: 16,
+            transcript: None,
+        }
     }
 }
 
-/// One in-flight request: its token tail, KV block, and sampling state.
+/// A validated submission waiting for capacity. The prompt is tokenized
+/// exactly once, at submission; admission and prefill reuse these ids,
+/// so the counts admission checked are the counts prefill feeds.
+struct QueuedReq {
+    req: ServeRequest,
+    tokens: Vec<i32>,
+    submitted: Instant,
+}
+
+/// One in-flight request: its token tail, paged KV block, reservation,
+/// and sampling state.
 struct Slot {
     req: ServeRequest,
-    /// Prompt + generated token ids.
+    /// Prompt + generated token ids (encoded once at submission).
     tokens: Vec<i32>,
     prompt_len: usize,
-    /// Tokens already fed to the model (== KV cache length). The pending
-    /// token `tokens[fed]` is fed next; its logits sample `tokens[fed+1]`.
+    /// Tokens already fed to the model (== KV cache length). While
+    /// `fed < prompt_len - 1` the slot is *prefilling*; once the prompt
+    /// (minus its last token) is cached it decodes: the pending token
+    /// `tokens[fed]` is fed next and its logits sample `tokens[fed+1]`.
     fed: usize,
-    block: usize,
+    block: KvBlock,
+    /// Pages reserved at admission for the projected maximum length.
+    reserved_pages: usize,
     rng: Pcg64,
     stop_id: Option<i32>,
     submitted: Instant,
+}
+
+impl Slot {
+    /// Prompt positions still to cache before decoding can start.
+    fn prefill_remaining(&self) -> usize {
+        (self.prompt_len - 1).saturating_sub(self.fed)
+    }
 }
 
 /// Aggregate engine counters (the serving metrics source).
@@ -77,19 +133,22 @@ pub struct EngineStats {
     pub decoded_tokens: u64,
     /// Prompt tokens prefilled across all requests.
     pub prefill_tokens: u64,
+    /// Prefill chunks executed (> requests admitted ⇒ chunking engaged).
+    pub prefill_chunks: u64,
     /// Requests retired (any finish reason, rejections included).
     pub retired: u64,
 }
 
 /// The continuous-batching engine over a borrowed [`ServeModel`] (the
 /// model is shared so several engines — e.g. serve-bench's batch-width
-/// sweeps — reuse one weight resolution / CSR compression).
+/// sweeps — reuse one weight resolution / compression).
 pub struct Engine<'m> {
     model: &'m ServeModel<'m>,
     cfg_queue_cap: usize,
+    prefill_chunk: usize,
     pool: KvPool,
     slots: Vec<Option<Slot>>,
-    queue: VecDeque<(ServeRequest, Instant)>,
+    queue: VecDeque<QueuedReq>,
     aborts: BTreeSet<String>,
     responses: Vec<ServeResponse>,
     tee: Option<TranscriptTee>,
@@ -104,7 +163,23 @@ impl<'m> Engine<'m> {
         if cfg.queue_cap == 0 {
             bail!("queue_cap must be at least 1");
         }
-        let pool = KvPool::new(&model.spec, cfg.max_batch);
+        if cfg.kv_page == 0 {
+            bail!("kv_page must be at least 1 position");
+        }
+        if cfg.prefill_chunk == 0 {
+            bail!("prefill_chunk must be at least 1 token");
+        }
+        let budget = cfg.kv_pages.unwrap_or_else(|| {
+            KvPool::full_context_budget(&model.spec, cfg.kv_page, cfg.max_batch)
+        });
+        let pool = KvPool::new(&model.spec, cfg.kv_page, budget);
+        if budget < pool.pages_for(1) {
+            bail!(
+                "kv page budget {budget} cannot hold even one position ({} layers need {} pages)",
+                model.spec.layers,
+                pool.pages_for(1)
+            );
+        }
         let tee = match &cfg.transcript {
             Some(p) => Some(TranscriptTee::create(p)?),
             None => None,
@@ -112,6 +187,7 @@ impl<'m> Engine<'m> {
         Ok(Engine {
             model,
             cfg_queue_cap: cfg.queue_cap,
+            prefill_chunk: cfg.prefill_chunk,
             pool,
             slots: (0..cfg.max_batch).map(|_| None).collect(),
             queue: VecDeque::new(),
@@ -122,11 +198,20 @@ impl<'m> Engine<'m> {
         })
     }
 
-    /// Admission control: validate and enqueue. Errors name the request
-    /// and the violated bound; nothing is partially admitted.
-    pub fn submit(&mut self, req: ServeRequest) -> Result<()> {
+    /// KV rows a request will cache at its projected maximum length: the
+    /// prompt minus its final token (which is the first decode input)
+    /// plus every decode step.
+    fn projected_kv(prompt_len: usize, max_tokens: usize) -> usize {
+        (prompt_len - 1 + max_tokens).max(1)
+    }
+
+    /// Admission control over an already-encoded prompt. Errors name the
+    /// request and the violated bound; nothing is partially admitted.
+    /// Page *shortage* is deliberately not checked here — a request that
+    /// could ever fit queues until retirements free pages (deterministic
+    /// backpressure), only an impossible request is rejected.
+    fn admission_check(&self, req: &ServeRequest, prompt: &[i32]) -> Result<()> {
         let spec = &self.model.spec;
-        let prompt = tokenizer::encode(&req.prompt);
         if prompt.is_empty() {
             bail!("request '{}': empty prompt", req.id);
         }
@@ -142,25 +227,56 @@ impl<'m> Engine<'m> {
                 spec.seq
             );
         }
+        let pages = self.pool.pages_for(Self::projected_kv(prompt.len(), req.max_tokens));
+        if pages > self.pool.budget_pages() {
+            bail!(
+                "request '{}': needs {pages} KV pages but the pool budget is {}",
+                req.id,
+                self.pool.budget_pages()
+            );
+        }
+        if self.has_id(&req.id) {
+            bail!(
+                "request '{}': duplicate id (a queued or active request already holds it)",
+                req.id
+            );
+        }
         if self.queue.len() >= self.cfg_queue_cap {
             bail!("request '{}': queue full ({} waiting)", req.id, self.queue.len());
         }
-        self.queue.push_back((req, Instant::now()));
+        Ok(())
+    }
+
+    /// True when `id` names a queued or active request (duplicate ids
+    /// would alias `abort` and interleave transcripts under one key).
+    fn has_id(&self, id: &str) -> bool {
+        self.queue.iter().any(|q| q.req.id == id)
+            || self.slots.iter().flatten().any(|s| s.req.id == id)
+    }
+
+    /// Admission control: validate and enqueue. The prompt is tokenized
+    /// here, once; the queue and the slot carry the ids from then on.
+    pub fn submit(&mut self, req: ServeRequest) -> Result<()> {
+        let tokens = tokenizer::encode(&req.prompt);
+        self.admission_check(&req, &tokens)?;
+        self.queue.push_back(QueuedReq { req, tokens, submitted: Instant::now() });
         Ok(())
     }
 
     /// [`Engine::submit`], turning a rejection into an error response so a
     /// JSONL front end keeps serving. Returns whether it was admitted.
     pub fn submit_or_reject(&mut self, req: ServeRequest) -> bool {
-        let id = req.id.clone();
-        let prompt_tokens = tokenizer::encode(&req.prompt).len();
-        match self.submit(req) {
-            Ok(()) => true,
+        let tokens = tokenizer::encode(&req.prompt);
+        match self.admission_check(&req, &tokens) {
+            Ok(()) => {
+                self.queue.push_back(QueuedReq { req, tokens, submitted: Instant::now() });
+                true
+            }
             Err(e) => {
                 self.push_response(ServeResponse {
-                    id,
+                    id: req.id,
                     text: String::new(),
-                    prompt_tokens,
+                    prompt_tokens: tokens.len(),
                     completion_tokens: 0,
                     finish: FinishReason::Rejected,
                     latency_ms: 0.0,
@@ -172,29 +288,55 @@ impl<'m> Engine<'m> {
     }
 
     /// Mark a request for mid-stream abort; it retires (with its partial
-    /// text) at the start of the next step, freeing its slot and KV block.
+    /// text) at the start of the next step, freeing its slot, pages and
+    /// reservation.
     pub fn abort(&mut self, id: &str) {
         self.aborts.insert(id.to_string());
     }
 
-    /// Requests waiting for a slot.
+    /// Requests waiting for a slot or for KV pages.
     pub fn queued(&self) -> usize {
         self.queue.len()
     }
 
-    /// Requests currently decoding.
+    /// Requests currently prefilling or decoding.
     pub fn active(&self) -> usize {
         self.slots.iter().filter(|s| s.is_some()).count()
     }
 
-    /// KV blocks available for admission.
+    /// Decode slots without an assigned request.
     pub fn free_slots(&self) -> usize {
-        self.pool.free_count()
+        self.slots.iter().filter(|s| s.is_none()).count()
     }
 
-    /// KV bytes preallocated by the pool.
-    pub fn kv_bytes(&self) -> usize {
-        self.pool.bytes()
+    /// KV bytes actually allocated (pages touched so far; the paged
+    /// pool's memory-conservation number — compare
+    /// [`Engine::kv_capacity_bytes`]).
+    pub fn kv_resident_bytes(&self) -> usize {
+        self.pool.resident_bytes()
+    }
+
+    /// Worst-case KV bytes if the whole page budget were in use (what
+    /// the old monolithic pool preallocated up front).
+    pub fn kv_capacity_bytes(&self) -> usize {
+        self.pool.capacity_bytes()
+    }
+
+    /// Positions per KV page.
+    pub fn kv_page_positions(&self) -> usize {
+        self.pool.page_positions()
+    }
+
+    /// (in use, reserved, budget) KV pages — the admission accounting.
+    pub fn kv_pages(&self) -> (usize, usize, usize) {
+        (self.pool.in_use_pages(), self.pool.reserved_pages(), self.pool.budget_pages())
+    }
+
+    /// Failure-injection hook: shrink the page budget in flight so the
+    /// next growth hits the checked exhaustion path.
+    #[doc(hidden)]
+    pub fn debug_set_page_budget(&mut self, pages: usize) {
+        self.pool.debug_set_budget(pages);
     }
 
     /// True when no request is queued or in flight.
@@ -207,29 +349,193 @@ impl<'m> Engine<'m> {
         std::mem::take(&mut self.responses)
     }
 
-    /// Advance every active slot by one token (admitting queued requests
-    /// first). Returns the number of tokens decoded this step — 0 means
-    /// the engine is idle.
+    /// One scheduler tick: apply aborts, admit, spend the prefill budget,
+    /// then advance every decoding slot by one token. Returns the number
+    /// of tokens decoded this step — 0 with [`Engine::is_idle`] false
+    /// means the step went to prefill (or everything retired).
     pub fn step(&mut self) -> Result<usize> {
         self.apply_aborts()?;
         self.admit()?;
-        let active: Vec<usize> =
-            (0..self.slots.len()).filter(|&i| self.slots[i].is_some()).collect();
+        self.prefill_phase()?;
+        self.decode_phase()
+    }
+
+    /// Run until idle; drain the responses.
+    pub fn run(&mut self) -> Result<Vec<ServeResponse>> {
+        while !self.is_idle() {
+            self.step()?;
+        }
+        Ok(self.take_responses())
+    }
+
+    /// Retire aborted requests, both queued and mid-stream.
+    fn apply_aborts(&mut self) -> Result<()> {
+        if self.aborts.is_empty() {
+            return Ok(());
+        }
+        // queued: respond without ever admitting
+        let aborts = std::mem::take(&mut self.aborts);
+        let mut remaining = VecDeque::new();
+        for q in std::mem::take(&mut self.queue) {
+            if aborts.contains(&q.req.id) {
+                self.push_response(ServeResponse {
+                    id: q.req.id,
+                    text: String::new(),
+                    prompt_tokens: q.tokens.len(),
+                    completion_tokens: 0,
+                    finish: FinishReason::Aborted,
+                    latency_ms: q.submitted.elapsed().as_secs_f64() * 1e3,
+                    error: None,
+                });
+            } else {
+                remaining.push_back(q);
+            }
+        }
+        self.queue = remaining;
+        // mid-stream: retire with partial text, freeing slot + pages
+        for si in 0..self.slots.len() {
+            let hit = self.slots[si].as_ref().is_some_and(|s| aborts.contains(&s.req.id));
+            if hit {
+                self.retire(si, FinishReason::Aborted, None)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Join-on-arrival admission, strictly FIFO: the head of the queue is
+    /// admitted when a slot is free and its full projected page need can
+    /// be reserved; otherwise admission stops (head-of-line blocking
+    /// keeps the order — and therefore every stream — deterministic).
+    /// No prefill work happens here; the slot starts in the prefilling
+    /// state and the per-step budget takes it from there.
+    fn admit(&mut self) -> Result<()> {
+        loop {
+            let Some(head) = self.queue.front() else { break };
+            let Some(si) = self.slots.iter().position(|s| s.is_none()) else { break };
+            let pages =
+                self.pool.pages_for(Self::projected_kv(head.tokens.len(), head.req.max_tokens));
+            if !self.pool.try_reserve(pages) {
+                break;
+            }
+            let QueuedReq { req, tokens, submitted } =
+                self.queue.pop_front().expect("queue head checked");
+            let prompt_len = tokens.len();
+            let rng = Pcg64::new(req.seed, 61);
+            let stop_id = req
+                .stop
+                .as_ref()
+                .and_then(|s| tokenizer::encode(s).first().copied());
+            self.slots[si] = Some(Slot {
+                req,
+                tokens,
+                prompt_len,
+                fed: 0,
+                block: KvBlock::new(&self.model.spec, self.pool.page_positions()),
+                reserved_pages: pages,
+                rng,
+                stop_id,
+                submitted,
+            });
+        }
+        Ok(())
+    }
+
+    /// Grow slot `si`'s block to `target` cached positions, first
+    /// checking the growth stays inside the slot's admission
+    /// reservation. The single home of the checked-growth path shared by
+    /// prefill and decode; a failure message becomes that slot's
+    /// `FinishReason::Error` retire (`verb` names the failing phase).
+    fn grow_slot(&mut self, si: usize, target: usize, verb: &str) -> Result<(), String> {
+        let slot = self.slots[si].as_mut().expect("growing an empty slot");
+        let needed_pages = self.pool.pages_for(target);
+        if needed_pages > slot.reserved_pages {
+            return Err(format!(
+                "{verb} to {target} positions needs {needed_pages} pages, \
+                 over the {} reserved at admission",
+                slot.reserved_pages
+            ));
+        }
+        slot.block.grow_to(target, &mut self.pool).map_err(|e| format!("{e:#}"))
+    }
+
+    /// Spend up to `prefill_chunk` prompt tokens across prefilling slots
+    /// (slot order — deterministic), growing each block's page table
+    /// ahead of the chunk. A growth the accounting cannot cover retires
+    /// only that slot with a checked error.
+    fn prefill_phase(&mut self) -> anyhow::Result<()> {
+        let mut budget = self.prefill_chunk;
+        let mut failed: Vec<(usize, String)> = Vec::new();
+        for si in 0..self.slots.len() {
+            if budget == 0 {
+                break;
+            }
+            let Some(slot) = self.slots[si].as_ref() else { continue };
+            let need = slot.prefill_remaining();
+            if need == 0 {
+                continue;
+            }
+            let c = need.min(budget);
+            let (fed, target) = (slot.fed, slot.fed + c);
+            if let Err(msg) = self.grow_slot(si, target, "prefill") {
+                failed.push((si, msg));
+                continue;
+            }
+            let slot = self.slots[si].as_mut().expect("slot just grown");
+            prefill_extend(self.model, &mut slot.block, &slot.tokens[fed..target], fed)?;
+            slot.fed = target;
+            budget -= c;
+            self.stats.prefill_tokens += c as u64;
+            self.stats.prefill_chunks += 1;
+        }
+        for (si, msg) in failed {
+            self.retire(si, FinishReason::Error, Some(msg))?;
+        }
+        Ok(())
+    }
+
+    /// Advance every decoding slot by one token in a single batched
+    /// forward. Blocks are grown before the batch is built; a slot whose
+    /// growth fails retires alone, the rest of the batch decodes exactly
+    /// as it would have without it.
+    fn decode_phase(&mut self) -> anyhow::Result<usize> {
+        let mut failed: Vec<(usize, String)> = Vec::new();
+        let mut active: Vec<usize> = Vec::new();
+        for si in 0..self.slots.len() {
+            let Some(slot) = self.slots[si].as_ref() else { continue };
+            if slot.prefill_remaining() > 0 {
+                continue; // still prefilling; this step's budget ran out
+            }
+            let target = slot.fed + 1;
+            match self.grow_slot(si, target, "decode") {
+                Ok(()) => active.push(si),
+                Err(msg) => failed.push((si, msg)),
+            }
+        }
+        for (si, msg) in failed {
+            self.retire(si, FinishReason::Error, Some(msg))?;
+        }
         if active.is_empty() {
             return Ok(0);
         }
         let mut feed = Vec::with_capacity(active.len());
         let mut pos = Vec::with_capacity(active.len());
-        let mut block_ids = Vec::with_capacity(active.len());
         for &si in &active {
             let slot = self.slots[si].as_ref().expect("active slot");
             feed.push(slot.tokens[slot.fed]);
             pos.push(slot.fed);
-            block_ids.push(slot.block);
         }
         let logits = {
-            let mut blocks = self.pool.blocks_mut(&block_ids);
-            decode_step(self.model, &mut blocks, &feed, &pos)
+            // gather the active blocks mutably, in slot order (disjoint
+            // slots ⇒ disjoint borrows)
+            let mut want = active.iter().peekable();
+            let mut blocks: Vec<&mut KvBlock> = Vec::with_capacity(active.len());
+            for (si, s) in self.slots.iter_mut().enumerate() {
+                if want.peek() == Some(&&si) {
+                    blocks.push(&mut s.as_mut().expect("active slot").block);
+                    want.next();
+                }
+            }
+            decode_step(self.model, &mut blocks, &feed, &pos)?
         };
         self.stats.steps += 1;
         for (bi, &si) in active.iter().enumerate() {
@@ -250,96 +556,18 @@ impl<'m> Engine<'m> {
             }
             self.stats.decoded_tokens += 1;
             if let Some(reason) = finish {
-                self.retire(si, reason)?;
+                self.retire(si, reason, None)?;
             }
         }
         Ok(active.len())
     }
 
-    /// Run until idle; drain the responses.
-    pub fn run(&mut self) -> Result<Vec<ServeResponse>> {
-        while !self.is_idle() {
-            self.step()?;
-        }
-        Ok(self.take_responses())
-    }
-
-    /// Retire aborted requests, both queued and mid-stream.
-    fn apply_aborts(&mut self) -> Result<()> {
-        if self.aborts.is_empty() {
-            return Ok(());
-        }
-        // queued: respond without ever admitting
-        let aborts = std::mem::take(&mut self.aborts);
-        let mut remaining = VecDeque::new();
-        for (req, t) in std::mem::take(&mut self.queue) {
-            if aborts.contains(&req.id) {
-                let prompt_tokens = tokenizer::encode(&req.prompt).len();
-                self.push_response(ServeResponse {
-                    id: req.id,
-                    text: String::new(),
-                    prompt_tokens,
-                    completion_tokens: 0,
-                    finish: FinishReason::Aborted,
-                    latency_ms: t.elapsed().as_secs_f64() * 1e3,
-                    error: None,
-                });
-            } else {
-                remaining.push_back((req, t));
-            }
-        }
-        self.queue = remaining;
-        // mid-stream: retire with partial text, freeing slot + KV block
-        for si in 0..self.slots.len() {
-            let hit = self.slots[si].as_ref().is_some_and(|s| aborts.contains(&s.req.id));
-            if hit {
-                self.retire(si, FinishReason::Aborted)?;
-            }
-        }
-        Ok(())
-    }
-
-    /// Join-on-arrival: move queued requests into free slots and prefill
-    /// their prompts (all but the last prompt token; the last is the first
-    /// decode step's input, mirroring `eval::generate`'s first iteration).
-    fn admit(&mut self) -> Result<()> {
-        while !self.queue.is_empty() && self.pool.free_count() > 0 {
-            let si = self
-                .slots
-                .iter()
-                .position(|s| s.is_none())
-                .context("free KV block without a free slot")?;
-            let (req, submitted) = self.queue.pop_front().expect("queue checked non-empty");
-            let block = self.pool.alloc().context("free_count checked > 0")?;
-            let tokens = tokenizer::encode(&req.prompt);
-            let prompt_len = tokens.len();
-            // one position-batched pass over the prompt (minus the last
-            // token, which is the first decode step's input)
-            prefill_prompt(self.model, self.pool.block_mut(block), &tokens[..prompt_len - 1]);
-            self.stats.prefill_tokens += (prompt_len - 1) as u64;
-            let rng = Pcg64::new(req.seed, 61);
-            let stop_id = req
-                .stop
-                .as_ref()
-                .and_then(|s| tokenizer::encode(s).first().copied());
-            self.slots[si] = Some(Slot {
-                req,
-                tokens,
-                prompt_len,
-                fed: prompt_len - 1,
-                block,
-                rng,
-                stop_id,
-                submitted,
-            });
-        }
-        Ok(())
-    }
-
-    /// Retire slot `si`: build the response, tee it, free the KV block.
-    fn retire(&mut self, si: usize, finish: FinishReason) -> Result<()> {
-        let slot = self.slots[si].take().context("retiring an empty slot")?;
-        self.pool.free(slot.block);
+    /// Retire slot `si`: build the response, tee it, return the pages and
+    /// the reservation to the pool.
+    fn retire(&mut self, si: usize, finish: FinishReason, error: Option<String>) -> Result<()> {
+        let mut slot = self.slots[si].take().context("retiring an empty slot")?;
+        slot.block.release(&mut self.pool);
+        self.pool.release_reservation(slot.reserved_pages);
         let resp = ServeResponse {
             id: slot.req.id.clone(),
             text: tokenizer::decode(&slot.tokens[slot.prompt_len..]),
@@ -347,7 +575,7 @@ impl<'m> Engine<'m> {
             completion_tokens: slot.tokens.len() - slot.prompt_len,
             finish,
             latency_ms: slot.submitted.elapsed().as_secs_f64() * 1e3,
-            error: None,
+            error,
         };
         self.push_response(resp);
         Ok(())
@@ -408,6 +636,8 @@ mod tests {
         assert_eq!(out[0].finish, FinishReason::Length);
         assert!(eng.is_idle());
         assert_eq!(eng.free_slots(), 4);
+        let (in_use, reserved, _) = eng.kv_pages();
+        assert_eq!((in_use, reserved), (0, 0), "retire must release pages and reservations");
     }
 
     #[test]
@@ -430,7 +660,7 @@ mod tests {
     fn queue_overflow_and_context_overflow_are_rejected() {
         let (spec, params) = setup();
         let model = ServeModel::dense(&spec, &params).unwrap();
-        let cfg = EngineConfig { max_batch: 1, queue_cap: 2, transcript: None };
+        let cfg = EngineConfig { max_batch: 1, queue_cap: 2, ..EngineConfig::default() };
         let mut eng = Engine::new(&model, &cfg).unwrap();
         assert!(eng.submit(req("e", "", 4, 0.0, 0)).is_err(), "empty prompt");
         assert!(eng.submit(req("z", "ab", 0, 0.0, 0)).is_err(), "zero budget");
@@ -447,15 +677,40 @@ mod tests {
             .collect();
         assert_eq!(rejected.len(), 1);
         assert!(rejected[0].error.as_ref().unwrap().contains("queue full"));
+        assert_eq!(rejected[0].prompt_tokens, 2, "rejection reports the encoded length");
         // the two admitted requests still complete
         assert_eq!(eng.run().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn duplicate_ids_are_rejected_while_queued_or_active() {
+        let (spec, params) = setup();
+        let model = ServeModel::dense(&spec, &params).unwrap();
+        let cfg = EngineConfig { max_batch: 1, queue_cap: 8, ..EngineConfig::default() };
+        let mut eng = Engine::new(&model, &cfg).unwrap();
+        eng.submit(req("dup", "ab", 4, 0.0, 0)).unwrap();
+        // still queued: same id rejected
+        let err = eng.submit(req("dup", "cd", 4, 0.0, 1)).unwrap_err().to_string();
+        assert!(err.contains("duplicate"), "{err}");
+        // active (admitted into the slot): still rejected
+        eng.step().unwrap();
+        assert_eq!(eng.active(), 1);
+        assert!(!eng.submit_or_reject(req("dup", "cd", 4, 0.0, 1)));
+        let resp = eng.take_responses();
+        assert_eq!(resp.len(), 1);
+        assert!(resp[0].error.as_ref().unwrap().contains("duplicate"));
+        // after the holder retires the id is free again
+        eng.run().unwrap();
+        eng.submit(req("dup", "ef", 2, 0.0, 2)).unwrap();
+        assert_eq!(eng.run().unwrap().len(), 1);
+        let _ = spec;
     }
 
     #[test]
     fn continuous_batching_joins_waiting_requests() {
         let (spec, params) = setup();
         let model = ServeModel::dense(&spec, &params).unwrap();
-        let cfg = EngineConfig { max_batch: 2, queue_cap: 16, transcript: None };
+        let cfg = EngineConfig { max_batch: 2, queue_cap: 16, ..EngineConfig::default() };
         let mut eng = Engine::new(&model, &cfg).unwrap();
         for i in 0..5 {
             eng.submit(req(&format!("r{i}"), "the ", 6, 0.0, i)).unwrap();
@@ -504,5 +759,136 @@ mod tests {
         assert_eq!(out[0].finish, FinishReason::Stop);
         assert_eq!(out[0].completion_tokens, 0, "stop token is not emitted");
         assert!(out[0].text.is_empty());
+    }
+
+    #[test]
+    fn page_backpressure_queues_until_pages_free() {
+        let (spec, params) = setup();
+        let model = ServeModel::dense(&spec, &params).unwrap();
+        // budget for exactly one request's projection: 4 slots, but the
+        // page accounting only admits one at a time
+        let max_tokens = 8usize;
+        let prompt = "abcdefgh"; // 8 tokens → projected 15 positions
+        let probe = Engine::new(&model, &EngineConfig::default()).unwrap();
+        let one = probe.pool.pages_for(Engine::projected_kv(8, max_tokens));
+        let cfg = EngineConfig { kv_pages: Some(one), queue_cap: 8, ..EngineConfig::default() };
+        let mut eng = Engine::new(&model, &cfg).unwrap();
+        for i in 0..3 {
+            eng.submit(req(&format!("r{i}"), prompt, max_tokens, 0.0, i)).unwrap();
+        }
+        eng.step().unwrap();
+        assert_eq!(eng.active(), 1, "page budget admits exactly one");
+        assert_eq!(eng.queued(), 2, "the rest queue — never rejected, never evicted");
+        let mut out = eng.run().unwrap();
+        out.sort_by(|a, b| a.id.cmp(&b.id));
+        assert_eq!(out.len(), 3);
+        let want = generate(
+            &spec,
+            &params,
+            prompt,
+            &GenOptions { max_tokens, temperature: 0.0, seed: 0 },
+        );
+        assert_eq!(out[0].text, want, "backpressure must not change the stream");
+        for r in &out {
+            assert_eq!(r.finish, FinishReason::Length, "{}", r.id);
+        }
+        // a request that can never fit is rejected up front, not queued
+        let cfg = EngineConfig { kv_pages: Some(spec.layers), ..EngineConfig::default() };
+        let mut tiny = Engine::new(&model, &cfg).unwrap();
+        let err = tiny.submit(req("big", prompt, 40, 0.0, 0)).unwrap_err().to_string();
+        assert!(err.contains("pages"), "{err}");
+    }
+
+    #[test]
+    fn chunked_prefill_interleaves_with_decode() {
+        let (spec, params) = setup();
+        let model = ServeModel::dense(&spec, &params).unwrap();
+        // short request decoding; long prompt joins and prefills in
+        // 4-token chunks without stalling the short one
+        let cfg = EngineConfig { max_batch: 2, prefill_chunk: 4, ..EngineConfig::default() };
+        let mut eng = Engine::new(&model, &cfg).unwrap();
+        eng.submit(req("short", "ab", 10, 0.0, 1)).unwrap();
+        eng.step().unwrap();
+        let long_prompt = "abcdefghijklmnopqrstuvwxyz"; // 26 tokens, 7 chunks of ≤4
+        eng.submit(req("long", long_prompt, 6, 0.0, 2)).unwrap();
+        let mut saw_interleave = false;
+        while !eng.is_idle() {
+            let decoded = eng.step().unwrap();
+            let long_prefilling = eng
+                .slots
+                .iter()
+                .flatten()
+                .any(|s| s.req.id == "long" && s.prefill_remaining() > 0);
+            if decoded > 0 && long_prefilling {
+                saw_interleave = true;
+            }
+        }
+        assert!(saw_interleave, "short stream must decode while the long prompt prefills");
+        assert!(eng.stats.prefill_chunks > 2, "the long prompt must span several chunks");
+        let mut out = eng.take_responses();
+        out.sort_by(|a, b| a.id.cmp(&b.id));
+        assert_eq!(out.len(), 2);
+        let want_long = generate(
+            &spec,
+            &params,
+            long_prompt,
+            &GenOptions { max_tokens: 6, temperature: 0.0, seed: 2 },
+        );
+        let want_short = generate(
+            &spec,
+            &params,
+            "ab",
+            &GenOptions { max_tokens: 10, temperature: 0.0, seed: 1 },
+        );
+        assert_eq!(out[0].text, want_long, "chunked prefill must not change the stream");
+        assert_eq!(out[1].text, want_short, "co-batched stream must be unaffected");
+    }
+
+    #[test]
+    fn kv_exhaustion_retires_only_the_offending_slot() {
+        let (spec, params) = setup();
+        let model = ServeModel::dense(&spec, &params).unwrap();
+        let cfg = EngineConfig { max_batch: 2, kv_page: 4, ..EngineConfig::default() };
+        let mut eng = Engine::new(&model, &cfg).unwrap();
+        // victim grows for 20 tokens; the survivor's whole projection
+        // (7-token prompt + 5 tokens → 11 positions, 3 pages/layer) is
+        // covered by pages it acquires within the first three steps
+        eng.submit(req("victim", "ab", 20, 0.0, 1)).unwrap();
+        eng.submit(req("survivor", "abcdefg", 5, 0.0, 2)).unwrap();
+        for _ in 0..3 {
+            eng.step().unwrap();
+        }
+        assert_eq!(eng.active(), 2);
+        // injected accounting slip: freeze the budget at what is in use,
+        // so the next page take — the victim crossing into its second
+        // page — hits the checked exhaustion error
+        let (in_use, _, _) = eng.kv_pages();
+        eng.debug_set_page_budget(in_use);
+        let mut out = eng.run().unwrap();
+        out.sort_by(|a, b| a.id.cmp(&b.id));
+        assert_eq!(out.len(), 2);
+        let (survivor, victim) = (&out[0], &out[1]);
+        assert_eq!(victim.id, "victim");
+        assert_eq!(victim.finish, FinishReason::Error, "{:?}", victim.error);
+        assert!(victim.error.as_ref().unwrap().contains("exhausted"), "{:?}", victim.error);
+        assert!(victim.completion_tokens < 20, "the victim retired mid-stream");
+        // the partial stream up to the failure is still the solo stream
+        let solo_victim = generate(
+            &spec,
+            &params,
+            "ab",
+            &GenOptions { max_tokens: 20, temperature: 0.0, seed: 1 },
+        );
+        assert!(solo_victim.starts_with(&victim.text), "partial text is a solo-run prefix");
+        // the survivor is untouched: finishes its budget, byte-identical
+        assert_eq!(survivor.id, "survivor");
+        assert_eq!(survivor.finish, FinishReason::Length);
+        let solo = generate(
+            &spec,
+            &params,
+            "abcdefg",
+            &GenOptions { max_tokens: 5, temperature: 0.0, seed: 2 },
+        );
+        assert_eq!(survivor.text, solo, "survivor must be byte-identical to its solo run");
     }
 }

@@ -1,35 +1,171 @@
-//! Per-request KV state: one fixed-capacity block per decode slot, handed
-//! out by a pool so serving never allocates on the request path.
+//! Paged per-request KV state: K/V storage is handed out in fixed-size
+//! *position pages* instead of full-context slot buffers.
 //!
-//! Layout: a [`KvBlock`] stacks one [`KvLayer`] (see `model::forward`) per
-//! decoder layer, each sized for the model's full context (`spec.seq`
-//! positions × `spec.d` floats for K and again for V). The [`KvPool`]
-//! preallocates `slots` such blocks up front; admission takes a block,
-//! retirement clears and returns it. A cleared block keeps its buffers, so
-//! steady-state serving is allocation-free apart from per-step activation
-//! tensors.
+//! Layout: a [`KvPage`] holds `page` positions × `d` floats of K and again
+//! of V. A [`KvBlock`] (one per in-flight request) stacks one
+//! [`PagedKvLayer`] per decoder layer; each layer resolves position `t`
+//! through its page table (`pages[t / page]`, offset `t % page`), so a
+//! request only ever holds the pages its actual length needs — a
+//! half-full batch of short requests stays far below the old monolithic
+//! `slots × seq` footprint.
+//!
+//! The [`KvPool`] owns the page economy:
+//!
+//! * **budget** — a hard cap on pages in flight (defaults to the full
+//!   monolithic capacity, `ceil(seq/page) × layers × slots`, so default
+//!   serving can never admit less than before);
+//! * **reservations** — admission reserves every page a request could
+//!   need at its projected maximum length (prompt + max_tokens), so an
+//!   admitted request can always grow: backpressure is *eviction-free*
+//!   and deterministic (FIFO queue until pages free, never mid-stream
+//!   preemption);
+//! * **lazy allocation + recycling** — page buffers are allocated on
+//!   first use and recycled on retire, so `resident_bytes` tracks what
+//!   requests actually touched, not the worst case.
+//!
+//! Pages *move*: [`KvPool::take`] hands an owned page to a block,
+//! [`KvBlock::release`] moves them back. Blocks therefore own their
+//! storage outright while in flight — the batched decode step can hold
+//! every active block mutably with no aliasing into a shared arena — and
+//! page identity can never leak between requests.
+//!
+//! Every growth path is checked: [`KvPool::take`] and
+//! [`KvBlock::grow_to`] return errors instead of panicking, so a serving
+//! accounting slip retires one request instead of killing the process
+//! (see `engine`).
+
+use anyhow::{bail, ensure, Result};
 
 use crate::config::ModelSpec;
-use crate::model::forward::KvLayer;
+use crate::model::forward::KvRead;
 
-/// The KV state of one in-flight request: a cache per decoder layer.
+/// One fixed-size page of K/V storage: `page` positions × `d` floats
+/// each for K and V.
+pub struct KvPage {
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl KvPage {
+    fn new(page: usize, d: usize) -> KvPage {
+        KvPage { k: vec![0.0; page * d], v: vec![0.0; page * d] }
+    }
+
+    /// Heap bytes of one page for the given geometry.
+    pub fn bytes_for(page: usize, d: usize) -> usize {
+        2 * 4 * page * d
+    }
+}
+
+/// One decoder layer's cache for one request: a page table over
+/// [`KvPage`]s. Position `t` lives in `pages[t / page]` at row offset
+/// `t % page` — rows never span pages, so attention reads a position as
+/// one contiguous slice exactly like the monolithic cache.
+pub struct PagedKvLayer {
+    pages: Vec<KvPage>,
+    d: usize,
+    /// Positions per page.
+    page: usize,
+    len: usize,
+}
+
+impl PagedKvLayer {
+    fn new(page: usize, d: usize) -> PagedKvLayer {
+        PagedKvLayer { pages: Vec::new(), d, page, len: 0 }
+    }
+
+    /// Cached positions so far.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Positions the currently-held pages can store.
+    pub fn capacity(&self) -> usize {
+        self.pages.len() * self.page
+    }
+
+    /// Append the K/V projection rows of the next position. Checked: a
+    /// position beyond the held pages is an error, not a panic — the
+    /// serve path retires the offending request and keeps the rest of
+    /// the batch alive.
+    pub fn push(&mut self, k_row: &[f32], v_row: &[f32]) -> Result<()> {
+        ensure!(k_row.len() == self.d, "K row width {} != d {}", k_row.len(), self.d);
+        ensure!(v_row.len() == self.d, "V row width {} != d {}", v_row.len(), self.d);
+        if self.len >= self.capacity() {
+            bail!(
+                "paged KV overflow: position {} beyond {} held pages ({} positions)",
+                self.len,
+                self.pages.len(),
+                self.capacity()
+            );
+        }
+        let (pi, off) = (self.len / self.page, (self.len % self.page) * self.d);
+        self.pages[pi].k[off..off + self.d].copy_from_slice(k_row);
+        self.pages[pi].v[off..off + self.d].copy_from_slice(v_row);
+        self.len += 1;
+        Ok(())
+    }
+
+    /// Cached K row for position `t`.
+    pub fn k_row(&self, t: usize) -> &[f32] {
+        debug_assert!(t < self.len);
+        let off = (t % self.page) * self.d;
+        &self.pages[t / self.page].k[off..off + self.d]
+    }
+
+    /// Cached V row for position `t`.
+    pub fn v_row(&self, t: usize) -> &[f32] {
+        debug_assert!(t < self.len);
+        let off = (t % self.page) * self.d;
+        &self.pages[t / self.page].v[off..off + self.d]
+    }
+
+    /// Heap bytes of the held pages.
+    pub fn bytes(&self) -> usize {
+        self.pages.len() * KvPage::bytes_for(self.page, self.d)
+    }
+}
+
+/// Attention reads through the page table; see `model::forward::KvRead`.
+impl KvRead for PagedKvLayer {
+    fn len(&self) -> usize {
+        PagedKvLayer::len(self)
+    }
+    fn k_row(&self, t: usize) -> &[f32] {
+        PagedKvLayer::k_row(self, t)
+    }
+    fn v_row(&self, t: usize) -> &[f32] {
+        PagedKvLayer::v_row(self, t)
+    }
+}
+
+/// The KV state of one in-flight request: one paged cache per decoder
+/// layer. Created empty (no pages); the engine grows it ahead of each
+/// append via [`KvBlock::grow_to`] and returns the pages on retire via
+/// [`KvBlock::release`].
 pub struct KvBlock {
-    layers: Vec<KvLayer>,
+    layers: Vec<PagedKvLayer>,
 }
 
 impl KvBlock {
-    /// Empty block sized for the model's full context.
-    pub fn new(spec: &ModelSpec) -> KvBlock {
-        KvBlock { layers: (0..spec.layers).map(|_| KvLayer::new(spec.seq, spec.d)).collect() }
+    /// Empty block for `spec` with `page` positions per page. Holds no
+    /// pages until grown.
+    pub fn new(spec: &ModelSpec, page: usize) -> KvBlock {
+        assert!(page >= 1, "page size must be at least 1 position");
+        KvBlock { layers: (0..spec.layers).map(|_| PagedKvLayer::new(page, spec.d)).collect() }
     }
 
     /// Cache of decoder layer `li`.
-    pub fn layer(&self, li: usize) -> &KvLayer {
+    pub fn layer(&self, li: usize) -> &PagedKvLayer {
         &self.layers[li]
     }
 
     /// Mutable cache of decoder layer `li`.
-    pub fn layer_mut(&mut self, li: usize) -> &mut KvLayer {
+    pub fn layer_mut(&mut self, li: usize) -> &mut PagedKvLayer {
         &mut self.layers[li]
     }
 
@@ -42,92 +178,182 @@ impl KvBlock {
         self.len() == 0
     }
 
-    /// Forget all cached positions; buffers are retained for reuse.
-    pub fn clear(&mut self) {
-        for l in &mut self.layers {
-            l.clear();
+    /// Pages currently held across all layers.
+    pub fn held_pages(&self) -> usize {
+        self.layers.iter().map(|l| l.pages.len()).sum()
+    }
+
+    /// Ensure every layer can store `positions` positions, taking pages
+    /// from `pool` on demand. Checked: pool exhaustion (an accounting
+    /// slip — reservations should always cover growth) is an error that
+    /// the engine turns into a single-request retire. Partially-attached
+    /// pages stay with the block and return to the pool on release.
+    pub fn grow_to(&mut self, positions: usize, pool: &mut KvPool) -> Result<()> {
+        for (li, layer) in self.layers.iter_mut().enumerate() {
+            while layer.capacity() < positions {
+                let page = pool.take().map_err(|e| {
+                    e.context(format!("growing layer {li} to {positions} positions"))
+                })?;
+                layer.pages.push(page);
+            }
+        }
+        Ok(())
+    }
+
+    /// Move every held page back to the pool and reset the block to
+    /// empty (retire / abort path).
+    pub fn release(&mut self, pool: &mut KvPool) {
+        for layer in &mut self.layers {
+            for page in layer.pages.drain(..) {
+                pool.give(page);
+            }
+            layer.len = 0;
         }
     }
 
-    /// Heap bytes held by this block's K/V buffers.
+    /// Heap bytes held by this block's pages.
     pub fn bytes(&self) -> usize {
         self.layers.iter().map(|l| l.bytes()).sum()
     }
 }
 
-/// Fixed pool of KV blocks, one per concurrent decode slot.
+/// The page economy for one engine: a budget of pages, admission
+/// reservations against it, and a recycle list so steady-state serving
+/// allocates nothing.
 pub struct KvPool {
-    blocks: Vec<KvBlock>,
-    free: Vec<usize>,
+    d: usize,
+    layers: usize,
+    /// Positions per page.
+    page: usize,
+    /// Hard cap on pages in flight.
+    budget: usize,
+    /// Pages reserved by admitted requests (≥ `in_use`, ≤ `budget`).
+    reserved: usize,
+    /// Pages currently held by blocks.
+    in_use: usize,
+    /// Page buffers alive (held by blocks or recycled) — the resident
+    /// footprint.
+    allocated: usize,
+    recycled: Vec<KvPage>,
 }
 
 impl KvPool {
-    /// Preallocate `slots` blocks for `spec`.
-    pub fn new(spec: &ModelSpec, slots: usize) -> KvPool {
+    /// Pool for `spec` with `page` positions per page and a hard budget
+    /// of `budget` pages.
+    pub fn new(spec: &ModelSpec, page: usize, budget: usize) -> KvPool {
+        assert!(page >= 1, "page size must be at least 1 position");
         KvPool {
-            blocks: (0..slots).map(|_| KvBlock::new(spec)).collect(),
-            // reversed so alloc() hands out ids 0, 1, 2, … initially
-            free: (0..slots).rev().collect(),
+            d: spec.d,
+            layers: spec.layers,
+            page,
+            budget,
+            reserved: 0,
+            in_use: 0,
+            allocated: 0,
+            recycled: Vec::new(),
         }
     }
 
-    /// Take a cleared block; `None` when every slot is in flight.
-    pub fn alloc(&mut self) -> Option<usize> {
-        let id = self.free.pop()?;
-        self.blocks[id].clear();
-        Some(id)
+    /// The budget that exactly matches the old monolithic pool: every
+    /// one of `slots` requests can hold the full model context.
+    pub fn full_context_budget(spec: &ModelSpec, page: usize, slots: usize) -> usize {
+        spec.seq.div_ceil(page) * spec.layers * slots
     }
 
-    /// Return a block to the pool (retire-on-EOS / abort path).
-    pub fn free(&mut self, id: usize) {
-        debug_assert!(!self.free.contains(&id), "double free of KV block {id}");
-        self.blocks[id].clear();
-        self.free.push(id);
+    /// Positions per page.
+    pub fn page_positions(&self) -> usize {
+        self.page
     }
 
-    /// Blocks currently available for admission.
-    pub fn free_count(&self) -> usize {
-        self.free.len()
+    /// Pages a request caching up to `positions` positions needs across
+    /// all layers.
+    pub fn pages_for(&self, positions: usize) -> usize {
+        positions.div_ceil(self.page) * self.layers
     }
 
-    /// Total slots.
-    pub fn capacity(&self) -> usize {
-        self.blocks.len()
+    /// Admission: reserve `pages` against the budget. Returns false
+    /// (leaving the pool untouched) when they don't fit — the request
+    /// queues until retirements release reservations.
+    pub fn try_reserve(&mut self, pages: usize) -> bool {
+        if self.reserved + pages > self.budget {
+            return false;
+        }
+        self.reserved += pages;
+        true
     }
 
-    pub fn block(&self, id: usize) -> &KvBlock {
-        &self.blocks[id]
+    /// Release an admission reservation (retire path).
+    pub fn release_reservation(&mut self, pages: usize) {
+        debug_assert!(pages <= self.reserved, "reservation underflow");
+        self.reserved = self.reserved.saturating_sub(pages);
     }
 
-    pub fn block_mut(&mut self, id: usize) -> &mut KvBlock {
-        &mut self.blocks[id]
-    }
-
-    /// Mutable references to several distinct blocks at once (the batched
-    /// decode step needs every active slot's cache simultaneously).
-    /// Returned in the order of `ids`; panics on out-of-range or duplicate
-    /// ids — both are scheduler bugs.
-    pub fn blocks_mut(&mut self, ids: &[usize]) -> Vec<&mut KvBlock> {
-        let mut picked: Vec<Option<&mut KvBlock>> = ids.iter().map(|_| None).collect();
-        for (i, b) in self.blocks.iter_mut().enumerate() {
-            if let Some(p) = ids.iter().position(|&want| want == i) {
-                debug_assert!(
-                    ids.iter().filter(|&&want| want == i).count() == 1,
-                    "duplicate KV block id {i}"
-                );
-                picked[p] = Some(b);
+    /// Take one page, recycling a retired buffer when one exists.
+    /// Checked: exhaustion beyond the budget is an error (growth is
+    /// always covered by a reservation unless accounting slipped).
+    pub fn take(&mut self) -> Result<KvPage> {
+        if self.in_use >= self.budget {
+            bail!(
+                "KV page pool exhausted: {} pages in use of {} budgeted ({} reserved)",
+                self.in_use,
+                self.budget,
+                self.reserved
+            );
+        }
+        self.in_use += 1;
+        Ok(match self.recycled.pop() {
+            Some(p) => p,
+            None => {
+                self.allocated += 1;
+                KvPage::new(self.page, self.d)
             }
-        }
-        picked
-            .into_iter()
-            .enumerate()
-            .map(|(p, b)| b.unwrap_or_else(|| panic!("KV block id {} out of range", ids[p])))
-            .collect()
+        })
     }
 
-    /// Heap bytes across all blocks (capacity planning / `info`).
-    pub fn bytes(&self) -> usize {
-        self.blocks.iter().map(|b| b.bytes()).sum()
+    /// Return a page (retire / abort path); the buffer is recycled.
+    pub fn give(&mut self, page: KvPage) {
+        debug_assert!(self.in_use > 0, "page given back with none outstanding (double give?)");
+        self.in_use = self.in_use.saturating_sub(1);
+        self.recycled.push(page);
+    }
+
+    /// Pages the budget still admits against (budget − reserved;
+    /// saturating, since the failure-injection hook can push the budget
+    /// below outstanding reservations).
+    pub fn available_pages(&self) -> usize {
+        self.budget.saturating_sub(self.reserved)
+    }
+
+    pub fn budget_pages(&self) -> usize {
+        self.budget
+    }
+
+    pub fn reserved_pages(&self) -> usize {
+        self.reserved
+    }
+
+    pub fn in_use_pages(&self) -> usize {
+        self.in_use
+    }
+
+    /// Heap bytes of every page buffer alive (in blocks or recycled) —
+    /// what the pool actually costs, as opposed to the worst-case
+    /// [`KvPool::capacity_bytes`].
+    pub fn resident_bytes(&self) -> usize {
+        self.allocated * KvPage::bytes_for(self.page, self.d)
+    }
+
+    /// Worst-case bytes if the whole budget were allocated.
+    pub fn capacity_bytes(&self) -> usize {
+        self.budget * KvPage::bytes_for(self.page, self.d)
+    }
+
+    /// Test / failure-injection hook: shrink (or grow) the budget in
+    /// flight. Shrinking below the pages in use makes the next growth
+    /// fail with the checked exhaustion error.
+    #[doc(hidden)]
+    pub fn debug_set_budget(&mut self, pages: usize) {
+        self.budget = pages;
     }
 }
 
@@ -142,49 +368,108 @@ mod tests {
     }
 
     #[test]
-    fn alloc_free_cycle() {
+    fn pages_are_taken_lazily_and_recycled() {
         let spec = spec();
-        let mut pool = KvPool::new(&spec, 2);
-        assert_eq!(pool.free_count(), 2);
-        let a = pool.alloc().unwrap();
-        let b = pool.alloc().unwrap();
-        assert_ne!(a, b);
-        assert!(pool.alloc().is_none());
-        pool.free(a);
-        assert_eq!(pool.free_count(), 1);
-        let c = pool.alloc().unwrap();
-        assert_eq!(c, a, "freed block is reused");
+        let mut pool = KvPool::new(&spec, 16, KvPool::full_context_budget(&spec, 16, 2));
+        assert_eq!(pool.budget_pages(), spec.seq.div_ceil(16) * spec.layers * 2);
+        assert_eq!(pool.resident_bytes(), 0, "nothing allocated up front");
+
+        let mut block = KvBlock::new(&spec, 16);
+        assert_eq!(block.held_pages(), 0);
+        block.grow_to(1, &mut pool).unwrap();
+        assert_eq!(block.held_pages(), spec.layers, "one page per layer");
+        assert_eq!(pool.in_use_pages(), spec.layers);
+        assert_eq!(pool.resident_bytes(), spec.layers * KvPage::bytes_for(16, spec.d));
+        // growing within the page takes nothing new
+        block.grow_to(16, &mut pool).unwrap();
+        assert_eq!(block.held_pages(), spec.layers);
+        // crossing the boundary takes one more per layer
+        block.grow_to(17, &mut pool).unwrap();
+        assert_eq!(block.held_pages(), 2 * spec.layers);
+
+        let resident = pool.resident_bytes();
+        block.release(&mut pool);
+        assert_eq!(pool.in_use_pages(), 0);
+        assert_eq!(pool.resident_bytes(), resident, "buffers are recycled, not freed");
+        // a new block reuses the recycled buffers: resident stays flat
+        let mut b2 = KvBlock::new(&spec, 16);
+        b2.grow_to(17, &mut pool).unwrap();
+        assert_eq!(pool.resident_bytes(), resident);
     }
 
     #[test]
-    fn freed_blocks_come_back_cleared() {
+    fn reservation_accounting_gates_admission() {
         let spec = spec();
-        let mut pool = KvPool::new(&spec, 1);
-        let id = pool.alloc().unwrap();
+        let mut pool = KvPool::new(&spec, 16, spec.layers * 4);
+        let per_req = pool.pages_for(40); // 3 pages × layers
+        assert_eq!(per_req, 3 * spec.layers);
+        assert!(pool.try_reserve(per_req));
+        assert_eq!(pool.available_pages(), spec.layers);
+        assert!(!pool.try_reserve(per_req), "second request must queue");
+        assert!(pool.try_reserve(pool.pages_for(5)), "a short request still fits");
+        pool.release_reservation(per_req);
+        assert!(pool.try_reserve(per_req), "retire frees the reservation");
+    }
+
+    #[test]
+    fn exhaustion_is_a_checked_error() {
+        let spec = spec();
+        let mut pool = KvPool::new(&spec, 4, spec.layers);
+        let mut block = KvBlock::new(&spec, 4);
+        block.grow_to(4, &mut pool).unwrap();
+        let err = format!("{:#}", block.grow_to(5, &mut pool).unwrap_err());
+        assert!(err.contains("exhausted"), "{err}");
+        // the failed grow left the first layer's pages attached; release
+        // returns everything
+        block.release(&mut pool);
+        assert_eq!(pool.in_use_pages(), 0);
+    }
+
+    #[test]
+    fn push_beyond_held_pages_is_a_checked_error() {
+        let spec = spec();
+        let mut pool = KvPool::new(&spec, 4, KvPool::full_context_budget(&spec, 4, 1));
+        let mut block = KvBlock::new(&spec, 4);
         let row = vec![1.0f32; spec.d];
-        pool.block_mut(id).layer_mut(0).push(&row, &row);
-        assert_eq!(pool.block(id).layer(0).len(), 1);
-        pool.free(id);
-        let id2 = pool.alloc().unwrap();
-        assert!(pool.block(id2).is_empty());
+        assert!(block.layer_mut(0).push(&row, &row).is_err(), "no pages attached yet");
+        block.grow_to(4, &mut pool).unwrap();
+        for _ in 0..4 {
+            block.layer_mut(0).push(&row, &row).unwrap();
+        }
+        let err = block.layer_mut(0).push(&row, &row).unwrap_err().to_string();
+        assert!(err.contains("overflow"), "{err}");
+        assert_eq!(block.layer(0).len(), 4, "failed push must not corrupt the cache");
     }
 
     #[test]
-    fn blocks_mut_preserves_requested_order() {
+    fn paged_rows_match_what_was_pushed() {
         let spec = spec();
-        let mut pool = KvPool::new(&spec, 3);
-        let row = vec![2.0f32; spec.d];
-        pool.block_mut(2).layer_mut(0).push(&row, &row);
-        let picked = pool.blocks_mut(&[2, 0]);
-        assert_eq!(picked.len(), 2);
-        assert_eq!(picked[0].len(), 1, "first pick is block 2");
-        assert_eq!(picked[1].len(), 0, "second pick is block 0");
+        let mut pool = KvPool::new(&spec, 4, KvPool::full_context_budget(&spec, 4, 1));
+        let mut block = KvBlock::new(&spec, 4);
+        block.grow_to(10, &mut pool).unwrap();
+        for t in 0..10 {
+            let k: Vec<f32> = (0..spec.d).map(|j| (t * spec.d + j) as f32).collect();
+            let v: Vec<f32> = k.iter().map(|x| -x).collect();
+            block.layer_mut(0).push(&k, &v).unwrap();
+        }
+        assert_eq!(block.len(), 10);
+        for t in 0..10 {
+            assert_eq!(block.layer(0).k_row(t)[0], (t * spec.d) as f32, "k row {t}");
+            assert_eq!(block.layer(0).v_row(t)[1], -((t * spec.d + 1) as f32), "v row {t}");
+        }
+        // capacity is page-quantized
+        assert_eq!(block.layer(0).capacity(), 12);
     }
 
     #[test]
-    fn block_bytes_match_geometry() {
+    fn block_bytes_track_held_pages_only() {
         let spec = spec();
-        let block = KvBlock::new(&spec);
-        assert_eq!(block.bytes(), spec.layers * 2 * 4 * spec.seq * spec.d);
+        let mut pool = KvPool::new(&spec, 16, KvPool::full_context_budget(&spec, 16, 1));
+        let mut block = KvBlock::new(&spec, 16);
+        assert_eq!(block.bytes(), 0);
+        block.grow_to(3, &mut pool).unwrap();
+        assert_eq!(block.bytes(), spec.layers * 2 * 4 * 16 * spec.d);
+        let monolithic = spec.layers * 2 * 4 * spec.seq * spec.d;
+        assert!(block.bytes() < monolithic, "short request beats the monolithic block");
     }
 }

@@ -4,9 +4,13 @@
 //! where the pruned artifact becomes the hot path. It turns the
 //! measure-only evaluation stack into a serving engine:
 //!
-//! * [`kv`] — per-request KV state: fixed-capacity blocks (one
-//!   `model::forward::KvLayer` per decoder layer) handed out by a
-//!   preallocated pool, so the request path never allocates cache memory.
+//! * [`kv`] — paged per-request KV state: K/V storage is fixed-size
+//!   position pages handed out on demand by a budgeted pool; each slot
+//!   holds a block table (one `PagedKvLayer` per decoder layer) instead
+//!   of a full-context buffer, admission *reserves* a request's
+//!   projected page need (eviction-free deterministic backpressure) and
+//!   buffers are recycled, so steady-state serving allocates nothing and
+//!   resident KV bytes track actual request lengths.
 //! * [`batch`] — the batched incremental decode step: every active slot
 //!   advances one token per model forward, O(1) layer passes per token
 //!   instead of the O(seq) full recompute in `eval::generate`. Pruned
@@ -14,16 +18,20 @@
 //!   sparse — CSR (`tensor::kernels::csr_matmul_t`) or packed n:m
 //!   (`tensor::kernels::nm_matmul_t`), chosen per operator by
 //!   `config::SparseFormat`.
-//! * [`engine`] — continuous batching: admission control, a bounded
-//!   request queue, join-on-arrival/retire-on-EOS scheduling, mid-stream
-//!   abort, and per-request seeded sampling identical to
-//!   `eval::generate`.
+//! * [`engine`] — continuous batching with chunked prefill: page-
+//!   accounted admission control, a bounded request queue, a bounded
+//!   prefill-token budget per step (long prompts warm up chunk by chunk,
+//!   interleaved with the decode batch, instead of stalling it),
+//!   join-on-arrival/retire-on-EOS scheduling, mid-stream abort, and
+//!   per-request seeded sampling identical to `eval::generate`.
 //! * [`request`] — the typed request/response pair, the JSONL wire codec
 //!   behind the `serve` CLI command, and the transcript tee.
 //! * [`bench`] — the `serve-bench` core: tokens/s, p50/p99 latency and
 //!   dense-vs-sparse speedups, with greedy outputs parity-checked against
 //!   `eval::generate`; plus the artifact path (load time, on-disk and
-//!   resident bytes vs the dense checkpoint).
+//!   resident bytes vs the dense checkpoint) and the paged axis
+//!   (resident KV bytes vs the monolithic preallocation, prefill-stall
+//!   p99 chunked vs unchunked — BENCH_paged.json).
 //!
 //! Compressed weights arrive either by compressing a dense checkpoint at
 //! startup or — the production path — by loading a sparse artifact
@@ -31,10 +39,12 @@
 //! an artifact-served process holds exactly one copy of each pruned
 //! weight, the compressed one.
 //!
-//! Determinism contract (pinned by `rust/tests/serve_parity.rs`): a
-//! request's output depends only on the weights and its own
-//! prompt/seed/temperature — not on batch composition, admission order,
-//! kernel thread count, or other requests (including aborts).
+//! Determinism contract (pinned by `rust/tests/serve_parity.rs` and
+//! `rust/tests/paged_kv_parity.rs`): a request's output depends only on
+//! the weights and its own prompt/seed/temperature — not on batch
+//! composition, admission order, KV page size or page assignment,
+//! prefill chunk boundaries, kernel thread count, or other requests
+//! (including aborts and single-slot KV failures).
 
 pub mod batch;
 pub mod bench;
@@ -44,9 +54,9 @@ pub mod request;
 
 pub use batch::ServeModel;
 pub use bench::{
-    measure_sparse_format, run_artifact_bench, run_serve_bench, ArtifactBenchReport, FormatStats,
-    ServeBenchConfig, ServeBenchReport,
+    measure_sparse_format, run_artifact_bench, run_paged_bench, run_serve_bench,
+    ArtifactBenchReport, FormatStats, PagedBenchReport, ServeBenchConfig, ServeBenchReport,
 };
 pub use engine::{Engine, EngineConfig, EngineStats};
-pub use kv::{KvBlock, KvPool};
+pub use kv::{KvBlock, KvPage, KvPool, PagedKvLayer};
 pub use request::{FinishReason, ServeRequest, ServeResponse};

@@ -115,6 +115,11 @@ pub enum FinishReason {
     Aborted,
     /// Never admitted (admission control / validation failure).
     Rejected,
+    /// Retired mid-stream by a serving-side error (e.g. a KV page
+    /// accounting slip): the partial text is returned and `error` says
+    /// what failed. Only the offending request retires — co-batched
+    /// streams are unaffected.
+    Error,
 }
 
 impl FinishReason {
@@ -124,6 +129,7 @@ impl FinishReason {
             FinishReason::Stop => "stop",
             FinishReason::Aborted => "aborted",
             FinishReason::Rejected => "rejected",
+            FinishReason::Error => "error",
         }
     }
 }

@@ -42,7 +42,7 @@ fn meta_for(model: &str, sp: Sparsity, format: SparseFormat) -> ArtifactMeta {
 }
 
 fn served_texts(model: &ServeModel<'_>, batch: usize) -> Vec<String> {
-    let cfg = EngineConfig { max_batch: batch, queue_cap: PROMPTS.len(), transcript: None };
+    let cfg = EngineConfig { max_batch: batch, queue_cap: PROMPTS.len(), ..EngineConfig::default() };
     let mut eng = Engine::new(model, &cfg).unwrap();
     for (i, p) in PROMPTS.iter().enumerate() {
         eng.submit(ServeRequest {

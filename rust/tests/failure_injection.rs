@@ -85,7 +85,7 @@ fn mid_stream_abort_frees_kv_and_preserves_other_streams() {
     let prompts = ["alpha ", "beta ", "gamma "];
     let max_tokens = 16usize;
 
-    let cfg = EngineConfig { max_batch: 3, queue_cap: 8, transcript: None };
+    let cfg = EngineConfig { max_batch: 3, queue_cap: 8, ..EngineConfig::default() };
     let serve_model = ServeModel::dense(&spec, &params).unwrap();
     let mut eng = Engine::new(&serve_model, &cfg).unwrap();
     for (i, p) in prompts.iter().enumerate() {
@@ -153,6 +153,77 @@ fn mid_stream_abort_frees_kv_and_preserves_other_streams() {
     assert_eq!(out.len(), 1);
     assert_eq!(out[0].finish, FinishReason::Length);
     assert_eq!(eng.free_slots(), 3);
+}
+
+#[test]
+fn kv_page_exhaustion_retires_one_stream_and_leaves_the_rest_bitwise() {
+    // An accounting slip in the paged KV pool (injected here by freezing
+    // the page budget at what is in use) must be a checked error that
+    // retires only the request that needed the page — with its partial
+    // text and an "error" finish — while every other in-flight stream
+    // completes byte-identical to its solo run. No panic, no poisoned
+    // batch.
+    use fistapruner::config::{repo_root, Presets};
+    use fistapruner::eval::generate::{generate, GenOptions};
+    use fistapruner::model::init::init_params;
+    use fistapruner::serve::{Engine, EngineConfig, FinishReason, ServeModel, ServeRequest};
+
+    let presets = Presets::load(&repo_root().unwrap()).unwrap();
+    let spec = presets.model("topt-s1").unwrap().clone();
+    let params = init_params(&spec, 67);
+    let serve_model = ServeModel::dense(&spec, &params).unwrap();
+    let cfg = EngineConfig { max_batch: 2, kv_page: 4, ..EngineConfig::default() };
+    let mut eng = Engine::new(&serve_model, &cfg).unwrap();
+    let mk = |id: &str, p: &str, max_tokens: usize, seed: u64| ServeRequest {
+        id: id.into(),
+        prompt: p.into(),
+        max_tokens,
+        temperature: 0.0,
+        seed,
+        stop: None,
+    };
+    // grower keeps needing pages; the survivor's full projection
+    // (7-token prompt + 5 → 11 positions, 3 pages/layer) is covered by
+    // pages it acquires within three steps
+    eng.submit(mk("grower", "ab", 20, 1)).unwrap();
+    eng.submit(mk("survivor", "abcdefg", 5, 2)).unwrap();
+    for _ in 0..3 {
+        eng.step().unwrap();
+    }
+    assert_eq!(eng.active(), 2);
+    let (in_use, _, _) = eng.kv_pages();
+    eng.debug_set_page_budget(in_use);
+    let mut out = eng.run().unwrap();
+    out.sort_by(|a, b| a.id.cmp(&b.id));
+    let (grower, survivor) = (&out[0], &out[1]);
+    assert_eq!(grower.id, "grower");
+    assert_eq!(grower.finish, FinishReason::Error, "{:?}", grower.error);
+    assert!(grower.error.as_ref().unwrap().contains("exhausted"), "{:?}", grower.error);
+    let solo_grower = generate(
+        &spec,
+        &params,
+        "ab",
+        &GenOptions { max_tokens: 20, temperature: 0.0, seed: 1 },
+    );
+    assert!(
+        solo_grower.starts_with(&grower.text) && grower.text.len() < solo_grower.len(),
+        "partial text must be a strict solo-run prefix"
+    );
+    assert_eq!(survivor.id, "survivor");
+    assert_eq!(survivor.finish, FinishReason::Length);
+    let solo = generate(
+        &spec,
+        &params,
+        "abcdefg",
+        &GenOptions { max_tokens: 5, temperature: 0.0, seed: 2 },
+    );
+    assert_eq!(survivor.text, solo, "surviving stream must be byte-identical to its solo run");
+    // the engine keeps serving: pages and the reservation came back
+    eng.debug_set_page_budget(in_use.max(64));
+    eng.submit(mk("post", "xy ", 4, 9)).unwrap();
+    let out = eng.run().unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].finish, FinishReason::Length);
 }
 
 #[test]

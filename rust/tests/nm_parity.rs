@@ -98,7 +98,7 @@ fn load(model: &str, seed: u64) -> (ModelSpec, ModelParams) {
 /// Serve every prompt greedily through one engine; returns texts in
 /// request order.
 fn served_texts(model: &ServeModel<'_>, batch: usize) -> Vec<String> {
-    let cfg = EngineConfig { max_batch: batch, queue_cap: PROMPTS.len(), transcript: None };
+    let cfg = EngineConfig { max_batch: batch, queue_cap: PROMPTS.len(), ..EngineConfig::default() };
     let mut eng = Engine::new(model, &cfg).unwrap();
     for (i, p) in PROMPTS.iter().enumerate() {
         eng.submit(ServeRequest {

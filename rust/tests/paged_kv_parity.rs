@@ -1,0 +1,198 @@
+//! Paged-vs-monolithic parity suite: the paged KV pool is a storage
+//! layout, not a math change — greedy and sampled streams must be
+//! bitwise identical to the full-recompute `eval::generate` oracle
+//! across page sizes (64 = one full-context page, the
+//! monolithic-equivalent layout), batch widths, and kernel thread
+//! counts; chunked prefill must match unchunked for every chunk budget;
+//! and page-exhaustion backpressure must queue (FIFO, eviction-free)
+//! without perturbing any stream. This is the paged extension of the
+//! serving determinism contract (docs/ARCHITECTURE.md §Serving).
+
+use fistapruner::config::{repo_root, Presets};
+use fistapruner::eval::generate::{generate, GenOptions};
+use fistapruner::model::init::init_params;
+use fistapruner::model::params::ModelParams;
+use fistapruner::serve::{Engine, EngineConfig, FinishReason, ServeModel, ServeRequest};
+use fistapruner::tensor::par;
+
+// mixed lengths so co-batched block tables span different page counts
+const PROMPTS: [&str; 4] = ["the quick brown fox ", "a b ", "zz top once more ", "hi "];
+const GEN_TOKENS: usize = 14;
+
+fn load(model: &str, seed: u64) -> (fistapruner::config::ModelSpec, ModelParams) {
+    let presets = Presets::load(&repo_root().unwrap()).unwrap();
+    let spec = presets.model(model).unwrap().clone();
+    let params = init_params(&spec, seed);
+    (spec, params)
+}
+
+fn requests(temperature: f64) -> Vec<ServeRequest> {
+    PROMPTS
+        .iter()
+        .enumerate()
+        .map(|(i, p)| ServeRequest {
+            id: format!("r{i}"),
+            prompt: (*p).to_string(),
+            max_tokens: GEN_TOKENS,
+            temperature,
+            seed: 50 + i as u64,
+            stop: None,
+        })
+        .collect()
+}
+
+fn served(model: &ServeModel<'_>, cfg: &EngineConfig, temperature: f64) -> Vec<String> {
+    let mut eng = Engine::new(model, cfg).unwrap();
+    for r in requests(temperature) {
+        eng.submit(r).unwrap();
+    }
+    let mut responses = eng.run().unwrap();
+    responses.sort_by(|a, b| a.id.cmp(&b.id));
+    responses.into_iter().map(|r| r.text).collect()
+}
+
+fn references(
+    spec: &fistapruner::config::ModelSpec,
+    params: &ModelParams,
+    temperature: f64,
+) -> Vec<String> {
+    PROMPTS
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            generate(
+                spec,
+                params,
+                p,
+                &GenOptions { max_tokens: GEN_TOKENS, temperature, seed: 50 + i as u64 },
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn streams_bitwise_equal_across_page_sizes_batches_and_threads() {
+    for model in ["topt-s1", "tllama-s1"] {
+        let (spec, params) = load(model, 53);
+        let serve_model = ServeModel::dense(&spec, &params).unwrap();
+        for temperature in [0.0, 1.1] {
+            let want = references(&spec, &params, temperature);
+            // page 64 holds the whole context in one page — the
+            // monolithic-equivalent layout the smaller pages must match
+            for page in [4usize, 16, 64] {
+                for batch in [1usize, 4] {
+                    for threads in [1usize, 4] {
+                        par::set_threads(threads);
+                        let cfg = EngineConfig {
+                            max_batch: batch,
+                            queue_cap: PROMPTS.len(),
+                            kv_page: page,
+                            ..EngineConfig::default()
+                        };
+                        let got = served(&serve_model, &cfg, temperature);
+                        par::set_threads(0);
+                        assert_eq!(
+                            got, want,
+                            "{model} t={temperature} page={page} batch={batch} threads={threads}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn chunked_prefill_streams_equal_unchunked_for_every_chunk_budget() {
+    for model in ["topt-s1", "tllama-s1"] {
+        let (spec, params) = load(model, 59);
+        let serve_model = ServeModel::dense(&spec, &params).unwrap();
+        // a long prompt (several chunks at every budget) joining shorts
+        let long_prompt = "abcdefghijklmnopqrstuvwxyz abcdefghijkl"; // 39 tokens
+        let mk = |id: &str, p: &str, seed: u64| ServeRequest {
+            id: id.into(),
+            prompt: p.into(),
+            max_tokens: 10,
+            temperature: 0.0,
+            seed,
+            stop: None,
+        };
+        let want_long = generate(
+            &spec,
+            &params,
+            long_prompt,
+            &GenOptions { max_tokens: 10, temperature: 0.0, seed: 3 },
+        );
+        let want_short = generate(
+            &spec,
+            &params,
+            "ok ",
+            &GenOptions { max_tokens: 10, temperature: 0.0, seed: 4 },
+        );
+        // spec.seq (= 64) covers the whole prompt in one step: unchunked
+        for chunk in [1usize, 3, 7, spec.seq] {
+            let cfg = EngineConfig {
+                max_batch: 2,
+                kv_page: 4,
+                prefill_chunk: chunk,
+                ..EngineConfig::default()
+            };
+            let mut eng = Engine::new(&serve_model, &cfg).unwrap();
+            eng.submit(mk("a-long", long_prompt, 3)).unwrap();
+            eng.submit(mk("b-short", "ok ", 4)).unwrap();
+            let mut out = eng.run().unwrap();
+            out.sort_by(|a, b| a.id.cmp(&b.id));
+            assert_eq!(out[0].text, want_long, "{model} chunk={chunk} long stream");
+            assert_eq!(out[1].text, want_short, "{model} chunk={chunk} co-batched stream");
+            assert_eq!(out[0].finish, FinishReason::Length);
+        }
+    }
+}
+
+#[test]
+fn page_exhaustion_backpressure_admits_deterministically() {
+    let (spec, params) = load("topt-s1", 61);
+    let serve_model = ServeModel::dense(&spec, &params).unwrap();
+    // budget exactly one request's projection: prompt 6 + 8 tokens →
+    // 13 positions → ceil(13/4) = 4 pages × layers
+    let pages_one = 13usize.div_ceil(4) * spec.layers;
+    let cfg = EngineConfig {
+        max_batch: 4,
+        queue_cap: 8,
+        kv_page: 4,
+        kv_pages: Some(pages_one),
+        ..EngineConfig::default()
+    };
+    let mut eng = Engine::new(&serve_model, &cfg).unwrap();
+    for i in 0..4 {
+        eng.submit(ServeRequest {
+            id: format!("r{i}"),
+            prompt: "abcdef".into(),
+            max_tokens: 8,
+            temperature: 0.0,
+            seed: i,
+            stop: None,
+        })
+        .unwrap();
+    }
+    // pages gate admission to one request at a time, FIFO, no eviction,
+    // and no stream is perturbed by waiting
+    let mut retire_order = Vec::new();
+    while !eng.is_idle() {
+        eng.step().unwrap();
+        assert!(eng.active() <= 1, "page budget must serialize admission");
+        for r in eng.take_responses() {
+            assert_eq!(r.finish, FinishReason::Length, "{}: queued, never rejected", r.id);
+            let seed: u64 = r.id[1..].parse().unwrap();
+            let want = generate(
+                &spec,
+                &params,
+                "abcdef",
+                &GenOptions { max_tokens: 8, temperature: 0.0, seed },
+            );
+            assert_eq!(r.text, want, "{}: backpressure must not change the stream", r.id);
+            retire_order.push(r.id);
+        }
+    }
+    assert_eq!(retire_order, ["r0", "r1", "r2", "r3"], "admission must stay FIFO");
+}

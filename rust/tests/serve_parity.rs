@@ -24,7 +24,8 @@ fn load(model: &str, seed: u64) -> (fistapruner::config::ModelSpec, ModelParams)
 /// Serve every prompt greedily through one engine; returns texts in
 /// request order.
 fn served_texts(model: &ServeModel<'_>, batch: usize) -> Vec<String> {
-    let cfg = EngineConfig { max_batch: batch, queue_cap: PROMPTS.len(), transcript: None };
+    let cfg =
+        EngineConfig { max_batch: batch, queue_cap: PROMPTS.len(), ..EngineConfig::default() };
     let mut eng = Engine::new(model, &cfg).unwrap();
     for (i, p) in PROMPTS.iter().enumerate() {
         eng.submit(ServeRequest {
@@ -104,7 +105,7 @@ fn batch_composition_does_not_change_sampled_streams() {
     // temperature > 0: per-request seeded sampling must be identical to
     // eval::generate regardless of who shares the batch.
     let (spec, params) = load("topt-s1", 41);
-    let cfg = EngineConfig { max_batch: 3, queue_cap: 8, transcript: None };
+    let cfg = EngineConfig { max_batch: 3, queue_cap: 8, ..EngineConfig::default() };
     let serve_model = ServeModel::dense(&spec, &params).unwrap();
     let mut eng = Engine::new(&serve_model, &cfg).unwrap();
     for (i, p) in PROMPTS.iter().enumerate() {

@@ -2,13 +2,17 @@
 //! incremental decode vs compressed decode on pruned weights, with
 //! continuous batching and a greedy-parity check — then the serve-format
 //! grid: the same 2:4-pruned weights through CSR and packed n:m side by
-//! side. CSVs + BENCH_serve.json land in artifacts/bench_out/ (CI emits
-//! BENCH_nm.json via `serve-bench --format nm --smoke`).
+//! side, the paged-KV axis, and the network axis (loopback clients with
+//! churn through the TCP front-end). CSVs + BENCH_serve.json land in
+//! artifacts/bench_out/ (CI emits BENCH_nm.json and BENCH_net.json via
+//! `serve-bench --format nm --smoke` / `serve-bench --net --smoke`).
 //!
 //!     cargo bench --bench serve_decode
 //!     FP_BENCH_FAST=1 cargo bench --bench serve_decode   # CI smoke
 
-use fistapruner::bench_support::{fast_mode, run_paged_kv_grid, run_serve_format_grid, Lab};
+use fistapruner::bench_support::{
+    fast_mode, run_net_client_grid, run_paged_kv_grid, run_serve_format_grid, Lab,
+};
 use fistapruner::config::{SparseFormat, Sparsity};
 use fistapruner::metrics::csv::CsvWriter;
 use fistapruner::serve::{run_serve_bench, ServeBenchConfig};
@@ -101,5 +105,25 @@ fn main() -> anyhow::Result<()> {
         small.kv_resident_bytes,
         mono.kv_capacity_bytes
     );
+
+    // the network axis: loopback clients with connection churn through the
+    // real TCP front-end; every delivered stream must match eval::generate
+    let client_counts: &[usize] = if fast_mode() { &[2, 4] } else { &[2, 4, 8] };
+    let net_rows = run_net_client_grid(
+        &spec,
+        &params,
+        client_counts,
+        tokens,
+        4,
+        2,
+        &out_dir.join("serve_net.csv"),
+    )?;
+    for row in &net_rows {
+        anyhow::ensure!(
+            row.parity_ok,
+            "net grid parity failed at {} clients: served streams != eval::generate",
+            row.clients
+        );
+    }
     Ok(())
 }

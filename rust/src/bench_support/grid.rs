@@ -375,6 +375,75 @@ pub fn run_paged_kv_grid(
     Ok(rows)
 }
 
+pub struct NetClientRow {
+    /// Concurrent loopback client sessions.
+    pub clients: usize,
+    pub req_per_s: f64,
+    pub stream_p99_ms: f64,
+    pub aborted_by_disconnect: u64,
+    pub parity_ok: bool,
+}
+
+/// The network-concurrency grid: the same dense weights served through
+/// the real `serve --listen` front-end at increasing client counts (with
+/// connection churn and one mid-stream disconnect per run), rows =
+/// client counts, columns = sustained req/s, client-observed stream p99,
+/// and greedy parity vs `eval::generate`. The `--net` axis behind
+/// `benches/serve_decode.rs`; callers gate on each row's `parity_ok`
+/// (socket-layer concurrency must not perturb a single token).
+pub fn run_net_client_grid(
+    spec: &crate::config::ModelSpec,
+    dense: &crate::model::params::ModelParams,
+    client_counts: &[usize],
+    tokens: usize,
+    batch: usize,
+    requests_per_client: usize,
+    csv_path: &std::path::Path,
+) -> Result<Vec<NetClientRow>> {
+    use crate::serve::bench::{run_net_bench, NetBenchConfig, ServeBenchConfig};
+
+    let mut table = TableBuilder::new(
+        &format!("net front-end ({}, batch {batch}, churn on)", spec.name()),
+        &["clients", "req/s", "stream p99 ms", "aborted", "parity"],
+    );
+    let mut csv = CsvWriter::create(
+        csv_path,
+        &["clients", "req_per_s", "stream_p99_ms", "aborted_by_disconnect", "parity"],
+    )?;
+    let mut rows = Vec::new();
+    for &clients in client_counts {
+        let cfg = ServeBenchConfig { tokens, batch, requests: 1, ..ServeBenchConfig::default() };
+        let net = NetBenchConfig { clients, requests_per_client, churn: true };
+        let report = run_net_bench(spec, dense, &cfg, &net)?;
+        rows.push(NetClientRow {
+            clients,
+            req_per_s: report.req_per_s,
+            stream_p99_ms: report.p99_ms,
+            aborted_by_disconnect: report.aborted_by_disconnect,
+            parity_ok: report.parity_ok,
+        });
+    }
+    for row in &rows {
+        table.row(vec![
+            row.clients.to_string(),
+            format!("{:.1}", row.req_per_s),
+            format!("{:.1}", row.stream_p99_ms),
+            row.aborted_by_disconnect.to_string(),
+            if row.parity_ok { "ok".into() } else { "MISMATCH".into() },
+        ]);
+        csv.write_row(&[
+            row.clients.to_string(),
+            format!("{:.2}", row.req_per_s),
+            format!("{:.2}", row.stream_p99_ms),
+            row.aborted_by_disconnect.to_string(),
+            row.parity_ok.to_string(),
+        ])?;
+    }
+    table.print();
+    println!("csv: {}", csv_path.display());
+    Ok(rows)
+}
+
 fn pretty_name(m: &Method) -> &'static str {
     match m {
         Method::Dense => "Dense",

@@ -34,7 +34,8 @@ use crate::runtime::{Manifest, Session};
 use crate::train::ensure_checkpoint;
 
 pub use grid::{
-    run_grid, run_paged_kv_grid, run_serve_format_grid, GridSpec, PagedKvRow, ServeFormatRow,
+    run_grid, run_net_client_grid, run_paged_kv_grid, run_serve_format_grid, GridSpec,
+    NetClientRow, PagedKvRow, ServeFormatRow,
 };
 
 fn env_usize(name: &str, default: usize) -> usize {

@@ -362,6 +362,39 @@ pub fn serve(args: &Args) -> Result<()> {
         prefill_chunk: args.usize_or("prefill-chunk", 16)?,
         transcript: args.get("transcript").map(std::path::PathBuf::from),
     };
+    // --listen: the TCP front-end. Same engine, same JSONL protocol —
+    // but many concurrent connections, bounded framing, timeouts, and an
+    // optional raw event-log tee for offline replay (serve::net).
+    if let Some(addr) = args.get("listen") {
+        if args.get("synthetic").is_some() {
+            anyhow::bail!("--listen serves sockets; drop --synthetic");
+        }
+        let max_conns = args.usize_or("max-conns", 64)?;
+        let conn_timeout_ms = args.u64_or("conn-timeout", 30_000)?;
+        let ncfg = crate::serve::NetConfig {
+            max_conns,
+            conn_timeout: std::time::Duration::from_millis(conn_timeout_ms),
+            max_line: args.usize_or("max-line", crate::serve::net::DEFAULT_MAX_LINE)?,
+            write_buf: args.usize_or("write-buf", 64)?,
+            event_log: args.get("event-log").map(std::path::PathBuf::from),
+            ..Default::default()
+        };
+        let server = crate::serve::NetServer::bind(addr, ncfg)?;
+        eprintln!(
+            "serving {model_name} on {} — {} slots, queue {}, max {} conns, \
+             conn timeout {} ms",
+            server.local_addr()?,
+            cfg.max_batch,
+            cfg.queue_cap,
+            max_conns,
+            conn_timeout_ms
+        );
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let report = server.run(&serve_model, &cfg, stop)?;
+        eprintln!("net serve done: {}", report.summary());
+        return Ok(());
+    }
+
     let mut engine = crate::serve::Engine::new(&serve_model, &cfg)?;
     let (_, _, budget_pages) = engine.kv_pages();
     eprintln!(
@@ -413,21 +446,38 @@ pub fn serve(args: &Args) -> Result<()> {
             take(&mut engine, req)?;
         }
     } else {
-        use std::io::BufRead;
-        for line in std::io::stdin().lock().lines() {
-            let line = line?;
-            if line.trim().is_empty() {
-                continue;
-            }
-            match crate::serve::ServeRequest::from_json_line(&line) {
-                Ok(mut req) => {
-                    if req.id.is_empty() {
-                        req.id = format!("req-{next_id}");
-                        next_id += 1;
+        // Bounded framing on stdin too: a hostile 100 MB line costs at
+        // most max_line bytes of buffer and one typed error, exactly as
+        // on the socket path.
+        use crate::serve::net::{BoundedLineReader, LineOutcome, DEFAULT_MAX_LINE};
+        let max_line = args.usize_or("max-line", DEFAULT_MAX_LINE)?;
+        let stdin = std::io::stdin();
+        let mut lock = stdin.lock();
+        let mut frame = BoundedLineReader::new(max_line);
+        loop {
+            match frame.read_line(&mut lock)? {
+                LineOutcome::Eof => break,
+                LineOutcome::Line(line) => {
+                    if line.trim().is_empty() {
+                        continue;
                     }
-                    take(&mut engine, req)?;
+                    match crate::serve::ServeRequest::from_json_line_checked(&line, max_line) {
+                        Ok(mut req) => {
+                            if req.id.is_empty() {
+                                req.id = format!("req-{next_id}");
+                                next_id += 1;
+                            }
+                            take(&mut engine, req)?;
+                        }
+                        Err(e) => eprintln!("bad request line: {e:#}"),
+                    }
                 }
-                Err(e) => eprintln!("bad request line: {e:#}"),
+                LineOutcome::Oversized { limit, read } => {
+                    eprintln!("bad request line: exceeds the {limit} byte cap ({read} bytes); discarded")
+                }
+                LineOutcome::NotUtf8 => eprintln!("bad request line: not valid UTF-8"),
+                // no per-line deadline is configured on stdin
+                LineOutcome::TimedOut { .. } => {}
             }
         }
     }
@@ -473,6 +523,32 @@ pub fn serve_bench(args: &Args) -> Result<()> {
         kv_page: args.usize_or("kv-page", 16)?,
         prefill_chunk: args.usize_or("prefill-chunk", 16)?,
     };
+    // --net: the socket-concurrency axis — sustained req/s and stream
+    // p99 with N loopback clients, connection churn and one mid-stream
+    // disconnect, through the real `serve --listen` front-end
+    // (BENCH_net.json). Parity-gated like every other axis.
+    if args.has("net") {
+        if args.get("artifact").is_some() || args.has("paged") {
+            anyhow::bail!("--net measures the dense network axis; drop --artifact/--paged");
+        }
+        let default_model = if fast { "topt-s1" } else { "topt-s3" };
+        let model = args.get_or("model", default_model).to_string();
+        let corpus = args.get_or("corpus", "c4-syn").to_string();
+        let params = load_or_train(&mut lab, args, &model, &corpus)?;
+        let spec = lab.presets.model(&model)?.clone();
+        let net = crate::serve::NetBenchConfig {
+            clients: args.usize_or("clients", 8)?,
+            requests_per_client: args.usize_or("reqs-per-client", if smoke { 2 } else { 4 })?,
+            churn: !args.has("no-churn"),
+        };
+        let report = crate::serve::run_net_bench(&spec, &params, &cfg, &net)?;
+        report.print();
+        write_json_report(args, report.to_json())?;
+        if !report.parity_ok {
+            anyhow::bail!("net-bench parity failed: served streams != eval::generate");
+        }
+        return Ok(());
+    }
     // --paged: the KV memory / prefill-stall axis over dense weights
     if args.has("paged") {
         if args.get("artifact").is_some() {

@@ -77,7 +77,21 @@ COMMANDS:
                                     long prompts warm up chunk by chunk,
                                     interleaved with the decode batch
             [--transcript out.jsonl --synthetic N --tokens N --temp T]
-            (reads one JSON request per stdin line unless --synthetic)
+            [--listen ADDR]         TCP front-end (e.g. 127.0.0.1:7433):
+                                    many concurrent JSONL connections on
+                                    one engine; responses routed per conn
+            [--max-conns N]         concurrent connection cap (default 64)
+            [--conn-timeout MS]     idle + per-line (slowloris) timeout,
+                                    ms (default 30000)
+            [--max-line N]          per-line byte cap, stdin and socket
+                                    (default 1 MiB)
+            [--write-buf N]         response lines buffered per conn
+                                    before a non-reading client is
+                                    dropped (default 64)
+            [--event-log out.jsonl] raw tee of every in/out line with
+                                    conn id + seq, for offline replay
+            (reads one JSON request per stdin line unless
+             --synthetic/--listen)
   serve-bench                       tokens/s + p50/p99: full recompute vs
             [--model M --smoke]     KV-cached vs compressed decode (csr,
             [--format csr|nm|auto]  plus packed n:m side by side), parity
@@ -86,6 +100,11 @@ COMMANDS:
             [--paged]               paged-KV axis: resident KV bytes vs
                                     monolithic + prefill-stall p99 with
                                     vs without chunking
+            [--net]                 network axis: sustained req/s + stream
+                                    p99 with N loopback clients, churn and
+                                    a mid-stream disconnect, through the
+                                    real --listen front-end (parity-gated)
+            [--clients N --reqs-per-client N --no-churn]
             [--kv-page N --prefill-chunk N]
             [--tokens N --batch N --requests N --sparsity S --json path]
   pipeline  --model M --corpus C    end-to-end: train → prune (all

@@ -1,0 +1,75 @@
+//! Named monotonic counters for serving-path accounting (connections
+//! accepted/rejected/timed out, requests aborted by disconnect, ...).
+//! Deliberately tiny: a sorted map of static names so reports and tests
+//! read stable, alphabetical output.
+
+use std::collections::BTreeMap;
+
+use crate::ser::json::Json;
+
+#[derive(Clone, Debug, Default)]
+pub struct Counters {
+    map: BTreeMap<&'static str, u64>,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Counters::default()
+    }
+
+    pub fn incr(&mut self, name: &'static str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&mut self, name: &'static str, n: u64) {
+        *self.map.entry(name).or_insert(0) += n;
+    }
+
+    /// Current value; unseen names read as zero.
+    pub fn get(&self, name: &str) -> u64 {
+        self.map.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&'static str, u64)> + '_ {
+        self.map.iter().map(|(&k, &v)| (k, v))
+    }
+
+    /// `a=1 b=2 ...` — for log lines and report footers.
+    pub fn summary(&self) -> String {
+        let parts: Vec<String> = self.map.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        parts.join(" ")
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        for (k, v) in &self.map {
+            obj.insert((*k).to_string(), Json::Num(*v as f64));
+        }
+        Json::Obj(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_and_reads_back() {
+        let mut c = Counters::new();
+        c.incr("accepted");
+        c.incr("accepted");
+        c.add("aborted_by_disconnect", 3);
+        assert_eq!(c.get("accepted"), 2);
+        assert_eq!(c.get("aborted_by_disconnect"), 3);
+        assert_eq!(c.get("never"), 0);
+        assert_eq!(c.summary(), "aborted_by_disconnect=3 accepted=2");
+    }
+
+    #[test]
+    fn json_shape_is_stable() {
+        let mut c = Counters::new();
+        c.incr("b");
+        c.incr("a");
+        assert_eq!(c.to_json().to_string_compact(), "{\"a\":1,\"b\":1}");
+    }
+}

@@ -1,9 +1,11 @@
 //! Reporting: ASCII tables (the paper-style bench output), CSV writers,
 //! and summary statistics.
 
+pub mod counters;
 pub mod csv;
 pub mod stats;
 pub mod table;
 
+pub use counters::Counters;
 pub use stats::{mean, mean_std, percentile};
 pub use table::TableBuilder;

@@ -825,6 +825,331 @@ pub fn run_artifact_bench(
     })
 }
 
+// ---------------------------------------------------------------------------
+// Network axis (`serve-bench --net`): sustained req/s and client-observed
+// stream latency under N concurrent loopback connections with churn, over
+// the real `serve --listen` front-end — plus the same greedy-parity gate
+// as every other bench path.
+
+/// Sizing for the network axis.
+pub struct NetBenchConfig {
+    /// Concurrent client sessions.
+    pub clients: usize,
+    /// Requests per client, split across its connections.
+    pub requests_per_client: usize,
+    /// Connection churn: every client reconnects halfway through its
+    /// request budget, and client 0 additionally opens a doomed
+    /// connection that vanishes mid-stream (exercising
+    /// abort-on-disconnect under load).
+    pub churn: bool,
+}
+
+impl Default for NetBenchConfig {
+    fn default() -> Self {
+        NetBenchConfig { clients: 8, requests_per_client: 4, churn: true }
+    }
+}
+
+/// One client's view of its completed requests.
+struct NetClientResult {
+    prompt: String,
+    seed: u64,
+    max_tokens: usize,
+    finish: String,
+    text: String,
+}
+
+#[derive(Default)]
+struct NetClientOut {
+    latencies_ms: Vec<f64>,
+    results: Vec<NetClientResult>,
+}
+
+/// The BENCH_net.json record.
+pub struct NetBenchReport {
+    pub model: String,
+    pub clients: usize,
+    pub requests_per_client: usize,
+    pub batch: usize,
+    pub churn: bool,
+    pub completed: usize,
+    pub wall_s: f64,
+    /// Completed requests per wall second across all clients.
+    pub req_per_s: f64,
+    /// Client-observed submit-to-response latency percentiles (queue wait
+    /// included — this is the stream p99 a real client sees).
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub accepted_conns: u64,
+    pub closed_conns: u64,
+    pub aborted_by_disconnect: u64,
+    pub timed_out_conns: u64,
+    pub parity_ok: bool,
+}
+
+impl NetBenchReport {
+    pub fn print(&self) {
+        println!(
+            "net-bench ({}, {} clients × {} reqs, batch {}, churn {})",
+            self.model,
+            self.clients,
+            self.requests_per_client,
+            self.batch,
+            if self.churn { "on" } else { "off" }
+        );
+        println!(
+            "  sustained {:.1} req/s   stream p50 {:.1} ms   p99 {:.1} ms   wall {:.2} s",
+            self.req_per_s, self.p50_ms, self.p99_ms, self.wall_s
+        );
+        println!(
+            "  conns: accepted={} closed={} aborted_by_disconnect={} timed_out={}",
+            self.accepted_conns, self.closed_conns, self.aborted_by_disconnect, self.timed_out_conns
+        );
+        println!(
+            "  greedy parity vs eval::generate: {}",
+            if self.parity_ok { "ok" } else { "MISMATCH" }
+        );
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("model".to_string(), Json::Str(self.model.clone()));
+        m.insert("clients".to_string(), Json::Num(self.clients as f64));
+        m.insert(
+            "requests_per_client".to_string(),
+            Json::Num(self.requests_per_client as f64),
+        );
+        m.insert("batch".to_string(), Json::Num(self.batch as f64));
+        m.insert("churn".to_string(), Json::Bool(self.churn));
+        m.insert("completed".to_string(), Json::Num(self.completed as f64));
+        m.insert("wall_s".to_string(), Json::Num(round3(self.wall_s)));
+        m.insert("req_per_s".to_string(), Json::Num(round3(self.req_per_s)));
+        m.insert("stream_p50_ms".to_string(), Json::Num(round3(self.p50_ms)));
+        m.insert("stream_p99_ms".to_string(), Json::Num(round3(self.p99_ms)));
+        m.insert("accepted_conns".to_string(), Json::Num(self.accepted_conns as f64));
+        m.insert("closed_conns".to_string(), Json::Num(self.closed_conns as f64));
+        m.insert(
+            "aborted_by_disconnect".to_string(),
+            Json::Num(self.aborted_by_disconnect as f64),
+        );
+        m.insert("timed_out_conns".to_string(), Json::Num(self.timed_out_conns as f64));
+        m.insert("parity_ok".to_string(), Json::Bool(self.parity_ok));
+        Json::Obj(m)
+    }
+}
+
+/// One client session: optionally a doomed mid-stream-disconnect
+/// connection (client 0 under churn), then its request budget pipelined
+/// over one or two sequential connections. Latency is measured from the
+/// request's send to its response line — the stream latency a real
+/// client observes, queue wait included.
+fn net_client_session(
+    addr: std::net::SocketAddr,
+    ci: usize,
+    reqs_per_client: usize,
+    tokens: usize,
+    churn: bool,
+) -> Result<NetClientOut> {
+    use std::io::{BufRead, Write};
+    use std::net::TcpStream;
+    use std::time::{Duration, Instant};
+
+    use anyhow::Context as _;
+
+    let mut out = NetClientOut::default();
+    if churn && ci == 0 {
+        // the doomed connection: a long request, then vanish unread
+        let mut s = TcpStream::connect(addr)?;
+        let req = ServeRequest {
+            id: "doomed".into(),
+            prompt: "doomed: the ".into(),
+            max_tokens: tokens.max(24),
+            temperature: 0.0,
+            seed: 999,
+            stop: None,
+        };
+        writeln!(s, "{}", req.to_json_line())?;
+        s.flush()?;
+        std::thread::sleep(Duration::from_millis(20));
+        drop(s);
+    }
+    let conns = if churn { 2usize } else { 1 };
+    let per = reqs_per_client.div_ceil(conns);
+    let mut k = 0usize;
+    while k < reqs_per_client {
+        let take = per.min(reqs_per_client - k);
+        let mut stream = TcpStream::connect(addr)?;
+        stream.set_read_timeout(Some(Duration::from_secs(60)))?;
+        let mut sent: BTreeMap<String, Instant> = BTreeMap::new();
+        let mut meta: BTreeMap<String, (String, u64)> = BTreeMap::new();
+        for j in 0..take {
+            let id = format!("c{ci}-k{}", k + j);
+            let prompt = format!("req {ci}-{}: the ", k + j);
+            let seed = (ci * 100 + k + j) as u64;
+            let req = ServeRequest {
+                id: id.clone(),
+                prompt: prompt.clone(),
+                max_tokens: tokens,
+                temperature: 0.0,
+                seed,
+                stop: None,
+            };
+            writeln!(stream, "{}", req.to_json_line())?;
+            sent.insert(id.clone(), Instant::now());
+            meta.insert(id, (prompt, seed));
+        }
+        stream.flush()?;
+        let mut reader = std::io::BufReader::new(stream);
+        for _ in 0..take {
+            let mut line = String::new();
+            let n = reader.read_line(&mut line)?;
+            ensure!(n > 0, "client {ci}: server closed the stream early");
+            let v = Json::parse(line.trim())
+                .map_err(|e| anyhow::anyhow!("client {ci}: bad response line: {e}"))?;
+            let id = v.get("id").and_then(|x| x.as_str()).unwrap_or("").to_string();
+            let t0 = sent
+                .get(&id)
+                .copied()
+                .with_context(|| format!("client {ci}: response for unknown id '{id}'"))?;
+            out.latencies_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            let (prompt, seed) =
+                meta.get(&id).cloned().with_context(|| format!("client {ci}: no meta for '{id}'"))?;
+            out.results.push(NetClientResult {
+                prompt,
+                seed,
+                max_tokens: tokens,
+                finish: v.get("finish").and_then(|x| x.as_str()).unwrap_or("").to_string(),
+                text: v.get("text").and_then(|x| x.as_str()).unwrap_or("").to_string(),
+            });
+        }
+        k += take;
+    }
+    Ok(out)
+}
+
+/// Serve a loopback client fleet through the real `serve --listen` front
+/// end and report sustained req/s + stream latency percentiles. Every
+/// completed stream is parity-checked against solo `eval::generate`; the
+/// doomed connection's request is expected to abort and is excluded (it
+/// has no delivered response to check).
+pub fn run_net_bench(
+    spec: &ModelSpec,
+    dense: &ModelParams,
+    cfg: &ServeBenchConfig,
+    net: &NetBenchConfig,
+) -> Result<NetBenchReport> {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    use anyhow::Context as _;
+
+    use crate::serve::net::{NetConfig, NetServer};
+
+    ensure!(net.clients >= 1 && net.requests_per_client >= 1, "net bench sizes must be >= 1");
+    ensure!(
+        cfg.tokens + 24 < spec.seq,
+        "net bench needs tokens ({}) well inside the context ({})",
+        cfg.tokens,
+        spec.seq
+    );
+    let model = ServeModel::dense(spec, dense)?;
+    let ecfg = EngineConfig {
+        max_batch: cfg.batch,
+        queue_cap: (net.clients * net.requests_per_client + 8).max(16),
+        kv_page: cfg.kv_page,
+        kv_pages: None,
+        prefill_chunk: cfg.prefill_chunk,
+        transcript: None,
+    };
+    let ncfg = NetConfig {
+        max_conns: net.clients * 2 + 4,
+        conn_timeout: Duration::from_secs(10),
+        ..NetConfig::default()
+    };
+    let server = NetServer::bind("127.0.0.1:0", ncfg)?;
+    let addr = server.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let start = Instant::now();
+    let mut wall_s = 0.0;
+    let mut client_outs: Vec<NetClientOut> = Vec::new();
+    let mut net_report = None;
+    let (model_ref, ecfg_ref, server_ref) = (&model, &ecfg, &server);
+    std::thread::scope(|s| -> Result<()> {
+        let stop_server = stop.clone();
+        let sh = s.spawn(move || server_ref.run(model_ref, ecfg_ref, stop_server));
+        let handles: Vec<_> = (0..net.clients)
+            .map(|ci| {
+                let (rpc, toks, churn) = (net.requests_per_client, cfg.tokens, net.churn);
+                s.spawn(move || net_client_session(addr, ci, rpc, toks, churn))
+            })
+            .collect();
+        let mut client_err = None;
+        for h in handles {
+            match h.join() {
+                Ok(Ok(o)) => client_outs.push(o),
+                Ok(Err(e)) => client_err = Some(e),
+                Err(_) => client_err = Some(anyhow::anyhow!("net bench client panicked")),
+            }
+        }
+        wall_s = start.elapsed().as_secs_f64();
+        stop.store(true, Ordering::Relaxed);
+        match sh.join() {
+            Ok(r) => net_report = Some(r?),
+            Err(_) => bail!("net server thread panicked"),
+        }
+        match client_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    })?;
+    let report = net_report.context("net server produced no report")?;
+
+    let mut parity_ok = true;
+    let mut completed = 0usize;
+    let mut latencies: Vec<f64> = Vec::new();
+    for c in &client_outs {
+        latencies.extend_from_slice(&c.latencies_ms);
+        for r in &c.results {
+            if r.finish != "length" {
+                parity_ok = false;
+                continue;
+            }
+            completed += 1;
+            let want = generate(
+                spec,
+                dense,
+                &r.prompt,
+                &GenOptions { max_tokens: r.max_tokens, temperature: 0.0, seed: r.seed },
+            );
+            if want != r.text {
+                parity_ok = false;
+            }
+        }
+    }
+    if completed != net.clients * net.requests_per_client {
+        parity_ok = false;
+    }
+
+    Ok(NetBenchReport {
+        model: spec.name(),
+        clients: net.clients,
+        requests_per_client: net.requests_per_client,
+        batch: cfg.batch,
+        churn: net.churn,
+        completed,
+        wall_s,
+        req_per_s: completed as f64 / wall_s.max(1e-9),
+        p50_ms: percentile(&latencies, 50.0),
+        p99_ms: percentile(&latencies, 99.0),
+        accepted_conns: report.counters.get("accepted"),
+        closed_conns: report.counters.get("closed"),
+        aborted_by_disconnect: report.counters.get("aborted_by_disconnect"),
+        timed_out_conns: report.counters.get("timed_out"),
+        parity_ok,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -26,6 +26,10 @@
 //!   per-request seeded sampling identical to `eval::generate`.
 //! * [`request`] — the typed request/response pair, the JSONL wire codec
 //!   behind the `serve` CLI command, and the transcript tee.
+//! * [`net`] — the TCP front-end (`serve --listen`): bounded-line framing,
+//!   one reader/writer thread pair per connection, a single dispatch loop
+//!   owning the engine, idle/slowloris timeouts, an event-log tee, and
+//!   offline replay of captured sessions.
 //! * [`bench`] — the `serve-bench` core: tokens/s, p50/p99 latency and
 //!   dense-vs-sparse speedups, with greedy outputs parity-checked against
 //!   `eval::generate`; plus the artifact path (load time, on-disk and
@@ -50,13 +54,16 @@ pub mod batch;
 pub mod bench;
 pub mod engine;
 pub mod kv;
+pub mod net;
 pub mod request;
 
 pub use batch::ServeModel;
 pub use bench::{
-    measure_sparse_format, run_artifact_bench, run_paged_bench, run_serve_bench,
-    ArtifactBenchReport, FormatStats, PagedBenchReport, ServeBenchConfig, ServeBenchReport,
+    measure_sparse_format, run_artifact_bench, run_net_bench, run_paged_bench, run_serve_bench,
+    ArtifactBenchReport, FormatStats, NetBenchConfig, NetBenchReport, PagedBenchReport,
+    ServeBenchConfig, ServeBenchReport,
 };
 pub use engine::{Engine, EngineConfig, EngineStats};
+pub use net::{NetConfig, NetReport, NetServer};
 pub use kv::{KvBlock, KvPage, KvPool, PagedKvLayer};
 pub use request::{FinishReason, ServeRequest, ServeResponse};

@@ -1,0 +1,135 @@
+//! Per-connection reader/writer threads and the tagged event stream they
+//! feed into the dispatch loop.
+//!
+//! One reader thread per connection assembles bounded JSONL lines (see
+//! `framing`) on a socket with a short read timeout, so it can interleave
+//! byte intake with slowloris / idle checks. Everything it observes is
+//! tagged with the connection id and pushed into one bounded `sync_channel`
+//! shared by all readers — that channel IS the generalized intake: the
+//! dispatch loop is the only consumer, and when it falls behind the channel
+//! fills, readers block, and TCP backpressure does the rest.
+//!
+//! One writer thread per connection drains a bounded queue of response
+//! lines. The dispatch loop only ever `try_send`s into it, so a client that
+//! stops reading can fill its own queue and get disconnected — it can never
+//! stall the engine step loop or any other stream.
+
+use std::io::{BufReader, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::time::{Duration, Instant};
+
+use super::framing::{BoundedLineReader, LineOutcome};
+
+/// Server-assigned connection id, unique for the lifetime of one listener.
+pub type ConnId = u64;
+
+/// Everything the dispatch loop can learn from the socket side, tagged
+/// with the owning connection.
+pub enum ConnEvent {
+    /// A fresh connection from the accept thread.
+    NewConn { conn: ConnId, stream: TcpStream, peer: String },
+    /// One complete inbound line.
+    Line { conn: ConnId, line: String },
+    /// A line crossed the byte cap and was drained without buffering.
+    Oversized { conn: ConnId, limit: usize, read: usize },
+    /// A terminated line that was not valid UTF-8.
+    BadUtf8 { conn: ConnId },
+    /// A partial line outlived the per-line deadline (slowloris). Fatal
+    /// for the connection; the reader thread has already exited.
+    SlowLine { conn: ConnId, partial: usize },
+    /// No bytes at all for a full timeout window and no line in progress.
+    /// The dispatch loop decides whether the connection is idle enough to
+    /// close (it may have responses still streaming out).
+    IdleTick { conn: ConnId },
+    /// EOF or a hard read error; the reader thread has exited.
+    Closed { conn: ConnId, reason: &'static str },
+}
+
+/// Reader-thread body. Exits on EOF, read error, slowloris trip, or when
+/// the intake channel is gone (server shut down).
+pub(crate) fn reader_loop(
+    conn: ConnId,
+    stream: TcpStream,
+    max_line: usize,
+    timeout: Duration,
+    tx: SyncSender<ConnEvent>,
+) {
+    // Short read timeout = the polling granularity for deadline checks;
+    // the real per-line/idle deadlines live above it.
+    let granularity = (timeout / 4).max(Duration::from_millis(5)).min(Duration::from_millis(250));
+    let _ = stream.set_read_timeout(Some(granularity));
+    let mut reader = BufReader::new(stream);
+    let mut frame = BoundedLineReader::with_deadline(max_line, Some(timeout));
+    let mut last_activity = Instant::now();
+    loop {
+        match frame.read_line(&mut reader) {
+            Ok(LineOutcome::Line(line)) => {
+                last_activity = Instant::now();
+                if tx.send(ConnEvent::Line { conn, line }).is_err() {
+                    return;
+                }
+            }
+            Ok(LineOutcome::Oversized { limit, read }) => {
+                last_activity = Instant::now();
+                if tx.send(ConnEvent::Oversized { conn, limit, read }).is_err() {
+                    return;
+                }
+            }
+            Ok(LineOutcome::NotUtf8) => {
+                last_activity = Instant::now();
+                if tx.send(ConnEvent::BadUtf8 { conn }).is_err() {
+                    return;
+                }
+            }
+            Ok(LineOutcome::TimedOut { partial }) => {
+                let _ = tx.send(ConnEvent::SlowLine { conn, partial });
+                return;
+            }
+            Ok(LineOutcome::Eof) => {
+                let _ = tx.send(ConnEvent::Closed { conn, reason: "eof" });
+                return;
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if frame.deadline_exceeded() {
+                    let _ = tx.send(ConnEvent::SlowLine { conn, partial: frame.partial_len() });
+                    return;
+                }
+                if !frame.in_progress() && last_activity.elapsed() >= timeout {
+                    // one tick per quiet window; dispatch decides
+                    last_activity = Instant::now();
+                    if tx.send(ConnEvent::IdleTick { conn }).is_err() {
+                        return;
+                    }
+                }
+            }
+            Err(_) => {
+                let _ = tx.send(ConnEvent::Closed { conn, reason: "read error" });
+                return;
+            }
+        }
+    }
+}
+
+/// Writer-thread body: drain queued response lines, flushing once per
+/// drained burst. Exits when the queue sender is dropped (connection
+/// closed) or the socket errors.
+pub(crate) fn writer_loop(stream: TcpStream, rx: Receiver<String>) {
+    let mut w = std::io::BufWriter::new(stream);
+    while let Ok(line) = rx.recv() {
+        if writeln!(w, "{line}").is_err() {
+            return;
+        }
+        while let Ok(more) = rx.try_recv() {
+            if writeln!(w, "{more}").is_err() {
+                return;
+            }
+        }
+        if w.flush().is_err() {
+            return;
+        }
+    }
+}

@@ -1,0 +1,586 @@
+//! TCP JSONL listener: multiplexes many client connections onto one
+//! continuous-batching [`Engine`].
+//!
+//! Thread layout (no async runtime — auditable, deterministic idioms):
+//!
+//! ```text
+//!   accept thread ──┐
+//!   reader thread 1 ─┼─▶ bounded intake channel ─▶ dispatch loop (owns Engine)
+//!   reader thread 2 ─┘                                 │
+//!        ...                                           ├─▶ writer thread 1 (bounded)
+//!                                                      └─▶ writer thread 2 (bounded)
+//! ```
+//!
+//! The dispatch loop is the only thread that touches the engine, the
+//! connection table, and the event log, so requests are admitted in intake
+//! order and every tee line gets one monotonic sequence number. Responses
+//! are routed to the owning connection by `try_send` into that
+//! connection's bounded writer queue — a slow reader overflows its own
+//! queue and is disconnected without ever blocking a step. Engine ids are
+//! namespaced `c{conn}:{client_id}` so two connections using the same
+//! request id cannot collide.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::Write;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::metrics::Counters;
+use crate::ser::json::Json;
+use crate::serve::engine::{Engine, EngineConfig, EngineStats};
+use crate::serve::request::{FinishReason, ServeRequest, ServeResponse};
+use crate::serve::ServeModel;
+
+use super::conn::{self, ConnEvent, ConnId};
+use super::framing::DEFAULT_MAX_LINE;
+
+/// How many tagged events the intake channel buffers before readers block
+/// (and TCP backpressure reaches the clients).
+const INTAKE_CAP: usize = 1024;
+/// Events drained per dispatch iteration before the engine gets a step.
+const INTAKE_BURST: usize = 64;
+
+/// Network front-end knobs (`serve --listen ...`).
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Concurrent connection cap; extra connections get one rejection
+    /// line and are closed.
+    pub max_conns: usize,
+    /// Idle timeout and per-line (slowloris) deadline.
+    pub conn_timeout: Duration,
+    /// Per-line byte cap (see `BoundedLineReader`).
+    pub max_line: usize,
+    /// Response lines buffered per connection before a non-reading client
+    /// is disconnected.
+    pub write_buf: usize,
+    /// Raw-JSONL tee of every inbound/outbound line plus lifecycle
+    /// events, with connection id and monotonic sequence (`--event-log`).
+    pub event_log: Option<PathBuf>,
+    /// Failure-injection / load-shaping hook: sleep this long after every
+    /// engine step. Lets tests pin down "mid-stream" deterministically;
+    /// `None` in production.
+    #[doc(hidden)]
+    pub step_delay: Option<Duration>,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            max_conns: 64,
+            conn_timeout: Duration::from_secs(30),
+            max_line: DEFAULT_MAX_LINE,
+            write_buf: 64,
+            event_log: None,
+            step_delay: None,
+        }
+    }
+}
+
+/// What one listener run did — engine stats plus socket-layer counters
+/// and the final KV page accounting (tests assert pages drain to zero).
+#[derive(Clone, Debug)]
+pub struct NetReport {
+    pub engine: EngineStats,
+    pub counters: Counters,
+    pub kv_in_use_pages: usize,
+    pub kv_reserved_pages: usize,
+}
+
+impl NetReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "steps={} decoded={} retired={} | {}",
+            self.engine.steps,
+            self.engine.decoded_tokens,
+            self.engine.retired,
+            self.counters.summary()
+        )
+    }
+}
+
+/// The raw-JSONL tee. One JSON object per line; `seq` is monotonic across
+/// the whole session, so offline replay can reconstruct global intake
+/// order exactly.
+struct EventLog {
+    out: std::io::BufWriter<std::fs::File>,
+    seq: u64,
+}
+
+impl EventLog {
+    fn create(path: &std::path::Path) -> Result<EventLog> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("creating event log {}", path.display()))?;
+        Ok(EventLog { out: std::io::BufWriter::new(file), seq: 0 })
+    }
+
+    fn write(&mut self, mut obj: BTreeMap<String, Json>) {
+        obj.insert("seq".to_string(), Json::Num(self.seq as f64));
+        self.seq += 1;
+        let _ = writeln!(self.out, "{}", Json::Obj(obj).to_string_compact());
+        let _ = self.out.flush();
+    }
+
+    fn line(&mut self, conn: ConnId, dir: &str, line: &str) {
+        let mut obj = BTreeMap::new();
+        obj.insert("conn".to_string(), Json::Num(conn as f64));
+        obj.insert("dir".to_string(), Json::Str(dir.to_string()));
+        obj.insert("line".to_string(), Json::Str(line.to_string()));
+        self.write(obj);
+    }
+
+    fn event(&mut self, event: &str, conn: Option<ConnId>, info: &str) {
+        let mut obj = BTreeMap::new();
+        obj.insert("event".to_string(), Json::Str(event.to_string()));
+        if let Some(c) = conn {
+            obj.insert("conn".to_string(), Json::Num(c as f64));
+        }
+        if !info.is_empty() {
+            obj.insert("info".to_string(), Json::Str(info.to_string()));
+        }
+        self.write(obj);
+    }
+}
+
+/// Per-connection dispatch-side state. The writer thread owns its half of
+/// the socket via a clone; dropping `writer_tx` is how the connection's
+/// outbound side winds down.
+struct ConnState {
+    stream: TcpStream,
+    writer_tx: SyncSender<String>,
+    /// Engine ids submitted on this connection and not yet retired.
+    in_flight: BTreeSet<String>,
+}
+
+/// A parsed request the engine queue had no room for. Held (not dropped,
+/// not rejected) while the intake pauses — exactly the backpressure the
+/// blocking stdin path gets for free, which keeps live and replay
+/// admission behavior identical.
+struct PendingSubmit {
+    conn: ConnId,
+    req: ServeRequest,
+    client_id: String,
+}
+
+/// A bound TCP front-end. `bind` then `run`; `run` owns the calling
+/// thread until `stop` is raised and the engine drains.
+pub struct NetServer {
+    listener: TcpListener,
+    cfg: NetConfig,
+}
+
+impl NetServer {
+    pub fn bind(addr: &str, cfg: NetConfig) -> Result<NetServer> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding listener on {addr}"))?;
+        Ok(NetServer { listener, cfg })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Serve until `stop` is set AND all work is drained. Returns the
+    /// run's report. The engine lives on the calling thread; only socket
+    /// I/O happens on helper threads.
+    pub fn run(
+        &self,
+        model: &ServeModel<'_>,
+        ecfg: &EngineConfig,
+        stop: Arc<AtomicBool>,
+    ) -> Result<NetReport> {
+        let engine = Engine::new(model, ecfg)?;
+        let log = match &self.cfg.event_log {
+            Some(path) => Some(EventLog::create(path)?),
+            None => None,
+        };
+        let (intake_tx, intake_rx) = mpsc::sync_channel::<ConnEvent>(INTAKE_CAP);
+
+        // Accept thread: nonblocking accepts, polled so it can observe
+        // `stop` (a blocking accept would pin the thread forever).
+        let accept_listener = self.listener.try_clone()?;
+        accept_listener.set_nonblocking(true)?;
+        let accept_tx = intake_tx.clone();
+        let accept_stop = stop.clone();
+        let accept_handle = thread::spawn(move || {
+            let mut next_conn: ConnId = 1;
+            while !accept_stop.load(Ordering::Relaxed) {
+                match accept_listener.accept() {
+                    Ok((stream, peer)) => {
+                        let conn = next_conn;
+                        next_conn += 1;
+                        let ev = ConnEvent::NewConn { conn, stream, peer: peer.to_string() };
+                        if accept_tx.send(ev).is_err() {
+                            return;
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(_) => thread::sleep(Duration::from_millis(5)),
+                }
+            }
+        });
+
+        let mut d = Dispatch {
+            engine,
+            cfg: &self.cfg,
+            queue_cap: ecfg.queue_cap.max(1),
+            intake: intake_tx,
+            conns: BTreeMap::new(),
+            owners: BTreeMap::new(),
+            pending: None,
+            next_auto: 0,
+            counters: Counters::new(),
+            log,
+        };
+        let result = d.run_loop(&intake_rx, &stop);
+        // Unblock and join the accept thread regardless of how the loop
+        // ended: raise `stop` (it polls every few ms) and drop the intake
+        // receiver so a send blocked on a full channel errors out instead
+        // of pinning the thread.
+        stop.store(true, Ordering::Relaxed);
+        drop(intake_rx);
+        accept_handle.join().ok();
+        result?;
+
+        let (in_use, reserved, _) = d.engine.kv_pages();
+        Ok(NetReport {
+            engine: d.engine.stats,
+            counters: d.counters,
+            kv_in_use_pages: in_use,
+            kv_reserved_pages: reserved,
+        })
+    }
+}
+
+struct Dispatch<'c, 'm> {
+    engine: Engine<'m>,
+    cfg: &'c NetConfig,
+    queue_cap: usize,
+    /// Kept alive so reader threads can always clone a sender from the
+    /// dispatch side when connections are registered.
+    intake: SyncSender<ConnEvent>,
+    conns: BTreeMap<ConnId, ConnState>,
+    /// engine id → (connection, client-visible id); the routing table.
+    owners: BTreeMap<String, (ConnId, String)>,
+    pending: Option<PendingSubmit>,
+    next_auto: u64,
+    counters: Counters,
+    log: Option<EventLog>,
+}
+
+impl Dispatch<'_, '_> {
+    fn run_loop(&mut self, rx: &Receiver<ConnEvent>, stop: &AtomicBool) -> Result<()> {
+        loop {
+            // Re-try the held submission first: intake stays paused until
+            // the engine queue has room again (per-connection FIFO and
+            // global arrival order are both preserved).
+            if let Some(p) = self.pending.take() {
+                if !self.conns.contains_key(&p.conn) {
+                    // owner vanished while we waited; drop silently —
+                    // there is no one left to answer.
+                } else if self.engine.queued() < self.queue_cap {
+                    self.submit_now(p.conn, p.req, p.client_id);
+                } else {
+                    self.pending = Some(p);
+                }
+            }
+
+            let mut budget = INTAKE_BURST;
+            while self.pending.is_none() && budget > 0 {
+                let ev = if self.engine.is_idle() && budget == INTAKE_BURST {
+                    // Nothing to step: block briefly instead of spinning.
+                    match rx.recv_timeout(Duration::from_millis(20)) {
+                        Ok(ev) => ev,
+                        Err(_) => break,
+                    }
+                } else {
+                    match rx.try_recv() {
+                        Ok(ev) => ev,
+                        Err(_) => break,
+                    }
+                };
+                budget -= 1;
+                self.on_event(ev);
+            }
+
+            if !self.engine.is_idle() {
+                self.engine.step()?;
+                if let Some(delay) = self.cfg.step_delay {
+                    thread::sleep(delay);
+                }
+            }
+            self.route_responses();
+
+            if stop.load(Ordering::Relaxed) && self.engine.is_idle() && self.pending.is_none() {
+                let leftover: Vec<ConnId> = self.conns.keys().copied().collect();
+                for conn in leftover {
+                    self.close_conn(conn, "server shutdown");
+                }
+                return Ok(());
+            }
+        }
+    }
+
+    fn on_event(&mut self, ev: ConnEvent) {
+        match ev {
+            ConnEvent::NewConn { conn, stream, peer } => self.on_new_conn(conn, stream, &peer),
+            ConnEvent::Line { conn, line } => self.on_line(conn, line),
+            ConnEvent::Oversized { conn, limit, read } => {
+                if !self.conns.contains_key(&conn) {
+                    return;
+                }
+                self.counters.incr("oversized_lines");
+                self.tee_event("oversized", Some(conn), &format!("read {read} bytes"));
+                self.error_line(
+                    conn,
+                    format!("request line exceeds the {limit} byte cap ({read} bytes); discarded"),
+                );
+            }
+            ConnEvent::BadUtf8 { conn } => {
+                if !self.conns.contains_key(&conn) {
+                    return;
+                }
+                self.counters.incr("bad_lines");
+                self.error_line(conn, "request line is not valid UTF-8".to_string());
+            }
+            ConnEvent::SlowLine { conn, partial } => {
+                if !self.conns.contains_key(&conn) {
+                    return;
+                }
+                self.counters.incr("timed_out");
+                self.error_line(
+                    conn,
+                    format!(
+                        "request line stalled after {partial} bytes (per-line timeout {:?})",
+                        self.cfg.conn_timeout
+                    ),
+                );
+                self.close_conn(conn, "slowloris timeout");
+            }
+            ConnEvent::IdleTick { conn } => {
+                let idle = match self.conns.get(&conn) {
+                    Some(st) => st.in_flight.is_empty(),
+                    None => return,
+                };
+                let pending_here =
+                    self.pending.as_ref().map(|p| p.conn == conn).unwrap_or(false);
+                if idle && !pending_here {
+                    self.counters.incr("timed_out");
+                    self.error_line(
+                        conn,
+                        format!("connection idle for {:?}; closing", self.cfg.conn_timeout),
+                    );
+                    self.close_conn(conn, "idle timeout");
+                }
+            }
+            ConnEvent::Closed { conn, reason } => self.close_conn(conn, reason),
+        }
+    }
+
+    fn on_new_conn(&mut self, conn: ConnId, stream: TcpStream, peer: &str) {
+        if self.conns.len() >= self.cfg.max_conns {
+            self.counters.incr("rejected_conns");
+            self.tee_event("reject", Some(conn), peer);
+            let resp = rejection_response(
+                String::new(),
+                format!("server at capacity ({} connections)", self.cfg.max_conns),
+            );
+            let mut s = &stream;
+            let _ = writeln!(s, "{}", resp.to_json_line());
+            let _ = stream.shutdown(Shutdown::Both);
+            return;
+        }
+        let (read_half, write_half) = match (stream.try_clone(), stream.try_clone()) {
+            (Ok(r), Ok(w)) => (r, w),
+            _ => {
+                self.counters.incr("rejected_conns");
+                let _ = stream.shutdown(Shutdown::Both);
+                return;
+            }
+        };
+        self.counters.incr("accepted");
+        self.tee_event("accept", Some(conn), peer);
+        let (writer_tx, writer_rx) = mpsc::sync_channel::<String>(self.cfg.write_buf.max(1));
+        thread::spawn(move || conn::writer_loop(write_half, writer_rx));
+        let reader_tx = self.intake.clone();
+        let max_line = self.cfg.max_line;
+        let timeout = self.cfg.conn_timeout;
+        thread::spawn(move || conn::reader_loop(conn, read_half, max_line, timeout, reader_tx));
+        self.conns.insert(conn, ConnState { stream, writer_tx, in_flight: BTreeSet::new() });
+    }
+
+    fn on_line(&mut self, conn: ConnId, line: String) {
+        if !self.conns.contains_key(&conn) {
+            return; // stragglers from a connection closed this iteration
+        }
+        if line.trim().is_empty() {
+            return;
+        }
+        self.tee_in(conn, &line);
+        self.counters.incr("requests_in");
+        match ServeRequest::from_json_line_checked(&line, self.cfg.max_line) {
+            Ok(req) => {
+                let client_id = if req.id.is_empty() {
+                    let id = format!("req-{}", self.next_auto);
+                    self.next_auto += 1;
+                    id
+                } else {
+                    req.id.clone()
+                };
+                if self.engine.queued() >= self.queue_cap {
+                    self.pending = Some(PendingSubmit { conn, req, client_id });
+                } else {
+                    self.submit_now(conn, req, client_id);
+                }
+            }
+            Err(e) => {
+                self.counters.incr("bad_lines");
+                self.error_line(conn, format!("bad request line: {e:#}"));
+            }
+        }
+    }
+
+    fn submit_now(&mut self, conn: ConnId, mut req: ServeRequest, client_id: String) {
+        let engine_id = format!("c{conn}:{client_id}");
+        req.id = engine_id.clone();
+        self.owners.insert(engine_id.clone(), (conn, client_id));
+        if self.engine.submit_or_reject(req) {
+            if let Some(st) = self.conns.get_mut(&conn) {
+                st.in_flight.insert(engine_id);
+            }
+        }
+        // On rejection the engine has already queued a Rejected response;
+        // route_responses delivers it through the owners entry.
+    }
+
+    fn route_responses(&mut self) {
+        for resp in self.engine.take_responses() {
+            let engine_id = resp.id.clone();
+            let Some((conn, client_id)) = self.owners.remove(&engine_id) else {
+                self.counters.incr("responses_dropped");
+                continue;
+            };
+            if let Some(st) = self.conns.get_mut(&conn) {
+                st.in_flight.remove(&engine_id);
+            }
+            let client_resp = unmangle_response(resp, &engine_id, &client_id);
+            self.respond_line(conn, client_resp.to_json_line());
+        }
+    }
+
+    /// Deliver one outbound line: `try_send` into the connection's writer
+    /// queue, tee on success. A full queue means the client stopped
+    /// reading — it is disconnected rather than allowed to stall anyone.
+    fn respond_line(&mut self, conn: ConnId, line: String) {
+        enum Sent {
+            Ok,
+            Overflow,
+            Gone,
+        }
+        let sent = match self.conns.get(&conn) {
+            Some(st) => match st.writer_tx.try_send(line.clone()) {
+                Ok(()) => Sent::Ok,
+                Err(TrySendError::Full(_)) => Sent::Overflow,
+                Err(TrySendError::Disconnected(_)) => Sent::Gone,
+            },
+            None => Sent::Gone,
+        };
+        match sent {
+            Sent::Ok => {
+                self.counters.incr("responses_out");
+                self.tee_out(conn, &line);
+            }
+            Sent::Overflow => {
+                self.counters.incr("write_overflow");
+                self.close_conn(conn, "write buffer overflow (client not reading)");
+            }
+            Sent::Gone => {
+                self.counters.incr("responses_dropped");
+            }
+        }
+    }
+
+    /// Connection-level typed error (empty id): parse failures, timeouts,
+    /// oversized lines. The connection usually survives; fatal cases call
+    /// `close_conn` right after.
+    fn error_line(&mut self, conn: ConnId, msg: String) {
+        let resp = rejection_response(String::new(), msg);
+        self.respond_line(conn, resp.to_json_line());
+    }
+
+    fn close_conn(&mut self, conn: ConnId, reason: &str) {
+        let Some(st) = self.conns.remove(&conn) else { return };
+        // Read side down now (unblocks the reader thread); the writer
+        // drains its queue and closes the socket when its sender drops.
+        let _ = st.stream.shutdown(Shutdown::Read);
+        drop(st.writer_tx);
+        let aborted = st.in_flight.len();
+        for engine_id in &st.in_flight {
+            self.engine.abort(engine_id);
+        }
+        if aborted > 0 {
+            self.counters.add("aborted_by_disconnect", aborted as u64);
+        }
+        self.counters.incr("closed");
+        self.tee_event("close", Some(conn), reason);
+    }
+
+    fn tee_in(&mut self, conn: ConnId, line: &str) {
+        if let Some(log) = &mut self.log {
+            log.line(conn, "in", line);
+        }
+    }
+
+    fn tee_out(&mut self, conn: ConnId, line: &str) {
+        if let Some(log) = &mut self.log {
+            log.line(conn, "out", line);
+        }
+    }
+
+    fn tee_event(&mut self, event: &str, conn: Option<ConnId>, info: &str) {
+        if let Some(log) = &mut self.log {
+            log.event(event, conn, info);
+        }
+    }
+}
+
+fn rejection_response(id: String, error: String) -> ServeResponse {
+    ServeResponse {
+        id,
+        text: String::new(),
+        prompt_tokens: 0,
+        completion_tokens: 0,
+        finish: FinishReason::Rejected,
+        latency_ms: 0.0,
+        error: Some(error),
+    }
+}
+
+/// Restore the client-visible id on a retired response (and scrub the
+/// namespaced engine id out of any engine-generated error text).
+pub(crate) fn unmangle_response(
+    mut resp: ServeResponse,
+    engine_id: &str,
+    client_id: &str,
+) -> ServeResponse {
+    resp.id = client_id.to_string();
+    if let Some(err) = &mut resp.error {
+        if err.contains(engine_id) {
+            *err = err.replace(engine_id, client_id);
+        }
+    }
+    resp
+}

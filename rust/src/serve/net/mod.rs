@@ -1,0 +1,24 @@
+//! Network front-end for the serving engine: a `std::net` TCP listener
+//! speaking the same JSONL protocol as `serve`'s stdin loop, multiplexing
+//! many concurrent connections onto one continuous-batching engine.
+//!
+//! Module map:
+//! - [`framing`] — bounded, resumable line assembly for untrusted sockets;
+//! - [`conn`] — per-connection reader/writer threads and tagged events;
+//! - [`listener`] — the dispatch loop that owns the engine, routes
+//!   responses, enforces timeouts, and tees the event log;
+//! - [`replay`] — offline reproduction of a captured session (the
+//!   live/replay split contract).
+//!
+//! The invariant the whole module defends (docs/ARCHITECTURE.md §Serving):
+//! concurrency, disconnects, slow readers, and hostile bytes at the socket
+//! layer must not perturb a single token of any surviving stream.
+
+pub mod conn;
+pub mod framing;
+pub mod listener;
+pub mod replay;
+
+pub use conn::{ConnEvent, ConnId};
+pub use framing::{BoundedLineReader, LineOutcome, DEFAULT_MAX_LINE};
+pub use listener::{NetConfig, NetReport, NetServer};

@@ -1,0 +1,207 @@
+//! Offline replay of a `--event-log` capture: the live/replay split
+//! contract.
+//!
+//! The tee records every complete inbound line and every delivered
+//! outbound line with its connection id and a global monotonic `seq`.
+//! Feeding the inbound lines — in seq order, through the same
+//! id-assignment and namespacing the live dispatch uses — into a fresh
+//! engine must reproduce every delivered response byte-for-byte (modulo
+//! `latency_ms`, the one wall-clock field, which canonicalization strips).
+//! That holds because the engine's determinism contract makes outputs
+//! independent of batch composition and admission timing; replay is the
+//! test that the *front end* preserved that property.
+//!
+//! Requests that never got a delivered response (client disconnected
+//! mid-stream, writer overflow) have no `out` record; replay still runs
+//! their inbound lines but the contract only compares keys present in the
+//! live tee.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::ser::json::Json;
+use crate::serve::engine::{Engine, EngineConfig};
+use crate::serve::request::ServeRequest;
+use crate::serve::ServeModel;
+
+use super::listener::unmangle_response;
+
+/// One parsed event-log record. Line records carry `dir` + `line`;
+/// lifecycle records carry `event` (+ optional `info`).
+#[derive(Clone, Debug)]
+pub struct LogEntry {
+    pub seq: u64,
+    pub conn: Option<u64>,
+    pub dir: Option<String>,
+    pub event: Option<String>,
+    pub line: Option<String>,
+    pub info: Option<String>,
+}
+
+/// Load and seq-sort an event log.
+pub fn read_event_log(path: &Path) -> Result<Vec<LogEntry>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading event log {}", path.display()))?;
+    let mut entries = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        if raw.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(raw).map_err(|e| anyhow::anyhow!("event log line {}: {e}", i + 1))?;
+        let seq = v
+            .get("seq")
+            .and_then(|s| s.as_u64())
+            .with_context(|| format!("event log line {} missing seq", i + 1))?;
+        let as_string = |key: &str| v.get(key).and_then(|x| x.as_str()).map(str::to_string);
+        entries.push(LogEntry {
+            seq,
+            conn: v.get("conn").and_then(|c| c.as_u64()),
+            dir: as_string("dir"),
+            event: as_string("event"),
+            line: as_string("line"),
+            info: as_string("info"),
+        });
+    }
+    entries.sort_by_key(|e| e.seq);
+    Ok(entries)
+}
+
+/// Strip the one nondeterministic field (`latency_ms`) and re-serialize;
+/// live and replay lines are compared in this form.
+pub fn canonicalize_response_line(line: &str) -> Result<String> {
+    let v = Json::parse(line).map_err(|e| anyhow::anyhow!("response line: {e}"))?;
+    let Json::Obj(mut obj) = v else { bail!("response line must be a JSON object") };
+    obj.remove("latency_ms");
+    Ok(Json::Obj(obj).to_string_compact())
+}
+
+/// The inbound lines of a capture, in global arrival (seq) order, tagged
+/// with their connection.
+pub fn inbound_lines(entries: &[LogEntry]) -> Vec<(u64, String)> {
+    entries
+        .iter()
+        .filter(|e| e.dir.as_deref() == Some("in"))
+        .filter_map(|e| Some((e.conn?, e.line.clone()?)))
+        .collect()
+}
+
+/// Delivered per-request responses keyed `c{conn}:{id}`, canonicalized.
+/// Connection-level error lines (empty id) are not per-request traffic
+/// and are excluded.
+pub fn outbound_transcripts(entries: &[LogEntry]) -> Result<BTreeMap<String, String>> {
+    let mut out = BTreeMap::new();
+    for e in entries {
+        if e.dir.as_deref() != Some("out") {
+            continue;
+        }
+        let (Some(conn), Some(line)) = (e.conn, e.line.as_deref()) else { continue };
+        let v = Json::parse(line).map_err(|e| anyhow::anyhow!("outbound line: {e}"))?;
+        let id = v.get("id").and_then(|x| x.as_str()).unwrap_or("");
+        if id.is_empty() {
+            continue;
+        }
+        out.insert(format!("c{conn}:{id}"), canonicalize_response_line(line)?);
+    }
+    Ok(out)
+}
+
+fn drain_into(
+    engine: &mut Engine<'_>,
+    owners: &mut BTreeMap<String, (u64, String)>,
+    out: &mut BTreeMap<String, String>,
+) -> Result<()> {
+    for resp in engine.take_responses() {
+        let engine_id = resp.id.clone();
+        if let Some((conn, client_id)) = owners.remove(&engine_id) {
+            let r = unmangle_response(resp, &engine_id, &client_id);
+            out.insert(format!("c{conn}:{client_id}"), canonicalize_response_line(&r.to_json_line())?);
+        }
+    }
+    Ok(())
+}
+
+/// Replay captured inbound lines through a fresh engine, mirroring the
+/// live dispatch's id assignment (`req-{n}` for absent ids, engine ids
+/// namespaced `c{conn}:{client_id}`). Returns canonicalized response
+/// lines keyed like [`outbound_transcripts`].
+pub fn replay_inbound(
+    model: &ServeModel<'_>,
+    ecfg: &EngineConfig,
+    inbound: &[(u64, String)],
+) -> Result<BTreeMap<String, String>> {
+    let mut engine = Engine::new(model, ecfg)?;
+    let queue_cap = ecfg.queue_cap.max(1);
+    let mut owners: BTreeMap<String, (u64, String)> = BTreeMap::new();
+    let mut out = BTreeMap::new();
+    let mut next_auto = 0u64;
+    for (conn, line) in inbound {
+        if line.trim().is_empty() {
+            continue;
+        }
+        // Unparseable lines got a connection-level error live (empty id,
+        // outside the per-request contract); nothing to replay.
+        let Ok(mut req) = ServeRequest::from_json_line(line) else { continue };
+        let client_id = if req.id.is_empty() {
+            let id = format!("req-{next_auto}");
+            next_auto += 1;
+            id
+        } else {
+            req.id.clone()
+        };
+        // Same backpressure as live: hold admission until the queue has
+        // room, stepping the engine meanwhile.
+        while engine.queued() >= queue_cap {
+            engine.step()?;
+            drain_into(&mut engine, &mut owners, &mut out)?;
+        }
+        let engine_id = format!("c{conn}:{client_id}");
+        req.id = engine_id.clone();
+        owners.insert(engine_id, (*conn, client_id));
+        engine.submit_or_reject(req);
+    }
+    while !engine.is_idle() {
+        engine.step()?;
+        drain_into(&mut engine, &mut owners, &mut out)?;
+    }
+    drain_into(&mut engine, &mut owners, &mut out)?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonicalize_strips_latency_only() {
+        let line = r#"{"completion_tokens":2,"finish":"length","id":"r1","latency_ms":12.345,"prompt_tokens":3,"text":"ab"}"#;
+        let canon = canonicalize_response_line(line).unwrap();
+        assert!(!canon.contains("latency_ms"), "{canon}");
+        assert!(canon.contains("\"id\":\"r1\""), "{canon}");
+        // idempotent
+        assert_eq!(canonicalize_response_line(&canon).unwrap(), canon);
+    }
+
+    #[test]
+    fn log_parsing_orders_by_seq_and_splits_directions() {
+        let dir = std::env::temp_dir().join(format!("fp_replay_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ev.jsonl");
+        std::fs::write(
+            &path,
+            concat!(
+                "{\"conn\":1,\"dir\":\"out\",\"line\":\"{\\\"id\\\":\\\"a\\\"}\",\"seq\":2}\n",
+                "{\"conn\":1,\"dir\":\"in\",\"line\":\"{\\\"prompt\\\":\\\"x\\\"}\",\"seq\":0}\n",
+                "{\"event\":\"accept\",\"conn\":1,\"seq\":1}\n",
+            ),
+        )
+        .unwrap();
+        let entries = read_event_log(&path).unwrap();
+        assert_eq!(entries.len(), 3);
+        assert!(entries.windows(2).all(|w| w[0].seq < w[1].seq));
+        let inb = inbound_lines(&entries);
+        assert_eq!(inb, vec![(1, "{\"prompt\":\"x\"}".to_string())]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -89,6 +89,22 @@ impl ServeRequest {
         Ok(req)
     }
 
+    /// Parse one JSONL line, rejecting lines over `max_len` bytes before
+    /// touching the JSON parser. The socket path bounds lines during
+    /// framing already (`serve::net::BoundedLineReader`); this is the
+    /// codec-level backstop for any path that hands the codec a
+    /// pre-assembled string.
+    pub fn from_json_line_checked(line: &str, max_len: usize) -> Result<ServeRequest> {
+        if line.len() > max_len {
+            bail!(
+                "request line is {} bytes, over the {} byte cap",
+                line.len(),
+                max_len
+            );
+        }
+        Self::from_json_line(line)
+    }
+
     /// Serialize back to one JSON line (synthetic-load generation, tests).
     pub fn to_json_line(&self) -> String {
         let mut m = std::collections::BTreeMap::new();
@@ -219,6 +235,25 @@ mod tests {
         assert!(ServeRequest::from_json_line(r#"{"max_tokens":4}"#).is_err(), "prompt required");
         assert!(ServeRequest::from_json_line(r#"{"prompt":"x","bogus":1}"#).is_err());
         assert!(ServeRequest::from_json_line(r#"{"prompt":"x","stop":"ab"}"#).is_err());
+    }
+
+    #[test]
+    fn hundred_megabyte_line_is_rejected_by_the_checked_codec() {
+        // Regression: the codec must refuse a 100 MB line with a typed
+        // error before the JSON parser ever sees it. (The streaming-side
+        // regression — never even *buffering* such a line — lives in
+        // serve::net::framing.)
+        let mut line = String::with_capacity(100_000_016);
+        line.push_str("{\"prompt\":\"");
+        line.push_str(&"a".repeat(100_000_000));
+        line.push_str("\"}");
+        let err = ServeRequest::from_json_line_checked(&line, crate::serve::net::DEFAULT_MAX_LINE)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("byte cap"), "{err}");
+        // under the cap, checked == unchecked
+        let ok = ServeRequest::from_json_line_checked(r#"{"prompt":"x"}"#, 1 << 20).unwrap();
+        assert_eq!(ok.prompt, "x");
     }
 
     #[test]

@@ -226,6 +226,312 @@ fn kv_page_exhaustion_retires_one_stream_and_leaves_the_rest_bitwise() {
     assert_eq!(out[0].finish, FinishReason::Length);
 }
 
+// ---------------------------------------------------------------------------
+// Socket-layer fault injection: the TCP front-end (`serve --listen`) must
+// convert client misbehavior — vanishing mid-stream, dripping bytes,
+// sending garbage — into typed errors and clean aborts, never a panic and
+// never corruption of a co-batched stream.
+
+mod net_faults {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::{SocketAddr, TcpStream};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    use fistapruner::config::{repo_root, ModelSpec, Presets};
+    use fistapruner::eval::generate::{generate, GenOptions};
+    use fistapruner::model::init::init_params;
+    use fistapruner::model::params::ModelParams;
+    use fistapruner::ser::json::Json;
+    use fistapruner::serve::{
+        EngineConfig, NetConfig, NetReport, NetServer, ServeModel, ServeRequest,
+    };
+
+    fn load(seed: u64) -> (ModelSpec, ModelParams) {
+        let presets = Presets::load(&repo_root().unwrap()).unwrap();
+        let spec = presets.model("topt-s1").unwrap().clone();
+        let params = init_params(&spec, seed);
+        (spec, params)
+    }
+
+    fn with_server<T, F>(
+        spec: &ModelSpec,
+        params: &ModelParams,
+        ecfg: &EngineConfig,
+        ncfg: NetConfig,
+        body: F,
+    ) -> (NetReport, T)
+    where
+        F: FnOnce(SocketAddr) -> T,
+    {
+        let model = ServeModel::dense(spec, params).unwrap();
+        let server = NetServer::bind("127.0.0.1:0", ncfg).unwrap();
+        let addr = server.local_addr().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut report = None;
+        let mut out = None;
+        std::thread::scope(|s| {
+            let stop_server = stop.clone();
+            let (server_ref, model_ref) = (&server, &model);
+            let sh = s.spawn(move || server_ref.run(model_ref, ecfg, stop_server));
+            out = Some(body(addr));
+            stop.store(true, Ordering::Relaxed);
+            report =
+                Some(sh.join().expect("server thread panicked").expect("server run failed"));
+        });
+        (report.unwrap(), out.unwrap())
+    }
+
+    fn request_line(id: &str, prompt: &str, max_tokens: usize, seed: u64) -> String {
+        ServeRequest {
+            id: id.into(),
+            prompt: prompt.into(),
+            max_tokens,
+            temperature: 0.0,
+            seed,
+            stop: None,
+        }
+        .to_json_line()
+    }
+
+    /// Send requests, read one response line each (60 s read timeout).
+    fn well_behaved_client(addr: SocketAddr, lines: &[String]) -> Vec<Json> {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        for l in lines {
+            writeln!(stream, "{l}").unwrap();
+        }
+        stream.flush().unwrap();
+        let mut reader = BufReader::new(stream);
+        (0..lines.len())
+            .map(|_| {
+                let mut line = String::new();
+                let n = reader.read_line(&mut line).unwrap();
+                assert!(n > 0, "server closed the stream early");
+                Json::parse(line.trim()).unwrap()
+            })
+            .collect()
+    }
+
+    fn assert_solo_parity(
+        spec: &ModelSpec,
+        params: &ModelParams,
+        resp: &Json,
+        prompt: &str,
+        max_tokens: usize,
+        seed: u64,
+    ) {
+        assert_eq!(resp.get("finish").and_then(|x| x.as_str()), Some("length"), "{resp:?}");
+        let want = generate(
+            spec,
+            params,
+            prompt,
+            &GenOptions { max_tokens, temperature: 0.0, seed },
+        );
+        assert_eq!(
+            resp.get("text").and_then(|x| x.as_str()),
+            Some(want.as_str()),
+            "surviving stream must be byte-identical to its solo run"
+        );
+    }
+
+    #[test]
+    fn mid_stream_disconnect_retires_slot_and_frees_pages() {
+        // A client that vanishes mid-decode must have its request aborted
+        // (slot retired, KV pages freed) while every co-batched stream
+        // finishes byte-identical to its solo run. step_delay stretches
+        // each engine step so "mid-stream" is deterministic, not a race.
+        let (spec, params) = load(53);
+        let ecfg = EngineConfig { max_batch: 4, queue_cap: 16, ..EngineConfig::default() };
+        let ncfg = NetConfig {
+            step_delay: Some(Duration::from_millis(2)),
+            ..NetConfig::default()
+        };
+        let tokens = 16usize;
+        let (report, survivors) = with_server(&spec, &params, &ecfg, ncfg, |addr| {
+            std::thread::scope(|s| {
+                // the victim: submit a long request, linger mid-decode,
+                // vanish without reading
+                s.spawn(move || {
+                    let mut stream = TcpStream::connect(addr).unwrap();
+                    writeln!(stream, "{}", request_line("victim", "victim: the ", 48, 999))
+                        .unwrap();
+                    stream.flush().unwrap();
+                    std::thread::sleep(Duration::from_millis(30));
+                    drop(stream);
+                });
+                let handles: Vec<_> = (0..3)
+                    .map(|ci| {
+                        s.spawn(move || {
+                            let line = request_line(
+                                &format!("ok{ci}"),
+                                &format!("ok {ci}: the "),
+                                16,
+                                ci as u64,
+                            );
+                            well_behaved_client(addr, &[line])
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().unwrap().remove(0))
+                    .collect::<Vec<Json>>()
+            })
+        });
+        for (ci, resp) in survivors.iter().enumerate() {
+            assert_solo_parity(&spec, &params, resp, &format!("ok {ci}: the "), tokens, ci as u64);
+        }
+        assert_eq!(
+            report.counters.get("aborted_by_disconnect"),
+            1,
+            "the victim's request must be aborted by its disconnect: {}",
+            report.counters.summary()
+        );
+        assert_eq!(report.counters.get("accepted"), 4);
+        assert_eq!(report.kv_in_use_pages, 0, "aborted KV pages must return to the pool");
+        assert_eq!(report.kv_reserved_pages, 0, "aborted KV reservation must be released");
+    }
+
+    #[test]
+    fn slowloris_is_timed_out_without_stalling_other_streams() {
+        // A connection dripping bytes of one request line forever must be
+        // timed out by the per-line deadline; co-batched well-behaved
+        // streams finish byte-identical, never blocked by it.
+        let (spec, params) = load(59);
+        let ecfg = EngineConfig { max_batch: 4, queue_cap: 16, ..EngineConfig::default() };
+        let ncfg = NetConfig {
+            conn_timeout: Duration::from_millis(150),
+            step_delay: Some(Duration::from_millis(2)),
+            ..NetConfig::default()
+        };
+        let tokens = 32usize;
+        let (report, (normals, slow_lines)) =
+            with_server(&spec, &params, &ecfg, ncfg, |addr| {
+                std::thread::scope(|s| {
+                    let slow = s.spawn(move || {
+                        let mut stream = TcpStream::connect(addr).unwrap();
+                        stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+                        // drip an incomplete JSON line, a byte at a time,
+                        // far slower than the 150 ms per-line deadline
+                        for b in b"{\"prompt\": \"never finished" {
+                            if stream.write_all(&[*b]).is_err() {
+                                break; // server already hung up on us
+                            }
+                            let _ = stream.flush();
+                            std::thread::sleep(Duration::from_millis(60));
+                        }
+                        // collect whatever the server said before EOF
+                        let mut lines = Vec::new();
+                        let mut reader = BufReader::new(stream);
+                        loop {
+                            let mut line = String::new();
+                            match reader.read_line(&mut line) {
+                                Ok(0) | Err(_) => break,
+                                Ok(_) => lines.push(line.trim().to_string()),
+                            }
+                        }
+                        lines
+                    });
+                    let handles: Vec<_> = (0..3)
+                        .map(|ci| {
+                            s.spawn(move || {
+                                let line = request_line(
+                                    &format!("ok{ci}"),
+                                    &format!("steady {ci}: the "),
+                                    32,
+                                    10 + ci as u64,
+                                );
+                                well_behaved_client(addr, &[line])
+                            })
+                        })
+                        .collect();
+                    let normals: Vec<Json> =
+                        handles.into_iter().map(|h| h.join().unwrap().remove(0)).collect();
+                    (normals, slow.join().unwrap())
+                })
+            });
+        for (ci, resp) in normals.iter().enumerate() {
+            assert_solo_parity(
+                &spec,
+                &params,
+                resp,
+                &format!("steady {ci}: the "),
+                tokens,
+                10 + ci as u64,
+            );
+        }
+        assert!(
+            report.counters.get("timed_out") >= 1,
+            "the slowloris connection must be timed out: {}",
+            report.counters.summary()
+        );
+        // if the typed error line got out before the close, it names the stall
+        if let Some(first) = slow_lines.first() {
+            let v = Json::parse(first).unwrap();
+            assert_eq!(v.get("finish").and_then(|x| x.as_str()), Some("rejected"), "{first}");
+            let err = v.get("error").and_then(|x| x.as_str()).unwrap_or("");
+            assert!(
+                err.contains("stalled") || err.contains("idle"),
+                "timeout error must say what happened: {first}"
+            );
+        }
+    }
+
+    #[test]
+    fn garbage_lines_get_typed_errors_and_the_connection_survives() {
+        // Oversized, non-JSON, truncated-JSON, and non-UTF-8 lines each
+        // get a typed "rejected" error line — in order, no panic, no
+        // disconnect — and a valid request on the same connection still
+        // serves byte-identical to its solo run.
+        let (spec, params) = load(61);
+        let ecfg = EngineConfig { max_batch: 2, queue_cap: 8, ..EngineConfig::default() };
+        let ncfg = NetConfig { max_line: 4096, ..NetConfig::default() };
+        let tokens = 8usize;
+        let (report, resps) = with_server(&spec, &params, &ecfg, ncfg, |addr| {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+            let oversized = "a".repeat(10_000);
+            stream.write_all(oversized.as_bytes()).unwrap();
+            stream.write_all(b"\n").unwrap();
+            stream.write_all(b"this is not json\n").unwrap();
+            stream.write_all(b"{\"prompt\":\"truncated\n").unwrap();
+            stream.write_all(&[0xff, 0xfe, b'\n']).unwrap();
+            writeln!(stream, "{}", request_line("good", "good: the ", 8, 5)).unwrap();
+            stream.flush().unwrap();
+            let mut reader = BufReader::new(stream);
+            (0..5)
+                .map(|_| {
+                    let mut line = String::new();
+                    let n = reader.read_line(&mut line).unwrap();
+                    assert!(n > 0, "server closed the stream early");
+                    Json::parse(line.trim()).unwrap()
+                })
+                .collect::<Vec<Json>>()
+        });
+        let errs: Vec<&str> = resps[..4]
+            .iter()
+            .map(|v| {
+                assert_eq!(
+                    v.get("finish").and_then(|x| x.as_str()),
+                    Some("rejected"),
+                    "{v:?}"
+                );
+                v.get("error").and_then(|x| x.as_str()).expect("typed error text")
+            })
+            .collect();
+        assert!(errs[0].contains("byte cap"), "oversized: {}", errs[0]);
+        assert!(errs[1].contains("bad request line"), "non-json: {}", errs[1]);
+        assert!(errs[2].contains("bad request line"), "truncated: {}", errs[2]);
+        assert!(errs[3].contains("UTF-8"), "binary: {}", errs[3]);
+        assert_solo_parity(&spec, &params, &resps[4], "good: the ", tokens, 5);
+        assert_eq!(report.counters.get("oversized_lines"), 1);
+        assert_eq!(report.counters.get("bad_lines"), 3);
+        assert_eq!(report.counters.get("responses_out"), 5);
+    }
+}
+
 #[test]
 fn xla_engine_without_session_is_a_clear_error() {
     // prune_model with Engine::Xla and no session must error, not panic.

@@ -1,0 +1,223 @@
+//! Network front-end parity suite: many concurrent loopback JSONL
+//! clients through `serve --listen` must each receive streams
+//! byte-identical to solo `eval::generate`, regardless of batch size,
+//! kernel thread count, or how connections interleave — and an
+//! `--event-log` capture replayed offline must reproduce every delivered
+//! response exactly (docs/ARCHITECTURE.md §Network front-end).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use fistapruner::config::{repo_root, ModelSpec, Presets};
+use fistapruner::eval::generate::{generate, GenOptions};
+use fistapruner::model::init::init_params;
+use fistapruner::model::params::ModelParams;
+use fistapruner::ser::json::Json;
+use fistapruner::serve::net::replay::{inbound_lines, outbound_transcripts, read_event_log, replay_inbound};
+use fistapruner::serve::{EngineConfig, NetConfig, NetReport, NetServer, ServeModel, ServeRequest};
+use fistapruner::tensor::par;
+
+fn load(model: &str, seed: u64) -> (ModelSpec, ModelParams) {
+    let presets = Presets::load(&repo_root().unwrap()).unwrap();
+    let spec = presets.model(model).unwrap().clone();
+    let params = init_params(&spec, seed);
+    (spec, params)
+}
+
+/// Run a listener on an ephemeral loopback port for the duration of
+/// `body(addr)`, then stop it and return its report plus body's output.
+fn with_server<T, F>(
+    spec: &ModelSpec,
+    params: &ModelParams,
+    ecfg: &EngineConfig,
+    ncfg: NetConfig,
+    body: F,
+) -> (NetReport, T)
+where
+    F: FnOnce(SocketAddr) -> T,
+{
+    let model = ServeModel::dense(spec, params).unwrap();
+    let server = NetServer::bind("127.0.0.1:0", ncfg).unwrap();
+    let addr = server.local_addr().unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut report = None;
+    let mut out = None;
+    std::thread::scope(|s| {
+        let stop_server = stop.clone();
+        let (server_ref, model_ref) = (&server, &model);
+        let sh = s.spawn(move || server_ref.run(model_ref, ecfg, stop_server));
+        out = Some(body(addr));
+        stop.store(true, Ordering::Relaxed);
+        report = Some(sh.join().expect("server thread panicked").expect("server run failed"));
+    });
+    (report.unwrap(), out.unwrap())
+}
+
+fn mk(id: &str, prompt: &str, max_tokens: usize, seed: u64) -> ServeRequest {
+    ServeRequest {
+        id: id.into(),
+        prompt: prompt.into(),
+        max_tokens,
+        temperature: 0.0,
+        seed,
+        stop: None,
+    }
+}
+
+/// One client connection: pipeline all requests, then read one response
+/// line per request (responses may arrive in any order across ids).
+fn run_client(addr: SocketAddr, reqs: &[ServeRequest]) -> Vec<Json> {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    for r in reqs {
+        writeln!(stream, "{}", r.to_json_line()).unwrap();
+    }
+    stream.flush().unwrap();
+    let mut reader = BufReader::new(stream);
+    (0..reqs.len())
+        .map(|_| {
+            let mut line = String::new();
+            let n = reader.read_line(&mut line).unwrap();
+            assert!(n > 0, "server closed the stream early");
+            Json::parse(line.trim()).unwrap()
+        })
+        .collect()
+}
+
+#[test]
+fn concurrent_clients_match_solo_generate_across_batches_and_threads() {
+    const CLIENTS: usize = 8;
+    const REQS: usize = 2;
+    const TOKENS: usize = 12;
+    let (spec, params) = load("topt-s1", 71);
+    for (batch, threads) in [(2usize, 1usize), (4, 4)] {
+        par::set_threads(threads);
+        let ecfg = EngineConfig {
+            max_batch: batch,
+            queue_cap: CLIENTS * REQS + 4,
+            ..EngineConfig::default()
+        };
+        let (report, sessions) =
+            with_server(&spec, &params, &ecfg, NetConfig::default(), |addr| {
+                std::thread::scope(|s| {
+                    let handles: Vec<_> = (0..CLIENTS)
+                        .map(|ci| {
+                            s.spawn(move || {
+                                let reqs: Vec<ServeRequest> = (0..REQS)
+                                    .map(|j| {
+                                        mk(
+                                            &format!("c{ci}-r{j}"),
+                                            &format!("net {ci}-{j}: the "),
+                                            TOKENS,
+                                            (ci * 10 + j) as u64,
+                                        )
+                                    })
+                                    .collect();
+                                let resps = run_client(addr, &reqs);
+                                (reqs, resps)
+                            })
+                        })
+                        .collect();
+                    handles.into_iter().map(|h| h.join().unwrap()).collect::<Vec<_>>()
+                })
+            });
+        par::set_threads(0);
+        for (reqs, resps) in &sessions {
+            for req in reqs {
+                let resp = resps
+                    .iter()
+                    .find(|v| v.get("id").and_then(|x| x.as_str()) == Some(&req.id))
+                    .unwrap_or_else(|| panic!("no response for {}", req.id));
+                assert_eq!(
+                    resp.get("finish").and_then(|x| x.as_str()),
+                    Some("length"),
+                    "batch={batch} threads={threads} {}: {resp:?}",
+                    req.id
+                );
+                let want = generate(
+                    &spec,
+                    &params,
+                    &req.prompt,
+                    &GenOptions { max_tokens: TOKENS, temperature: 0.0, seed: req.seed },
+                );
+                assert_eq!(
+                    resp.get("text").and_then(|x| x.as_str()),
+                    Some(want.as_str()),
+                    "batch={batch} threads={threads} {}: served text must be byte-identical \
+                     to solo eval::generate",
+                    req.id
+                );
+            }
+        }
+        assert_eq!(report.counters.get("accepted"), CLIENTS as u64);
+        assert_eq!(report.counters.get("aborted_by_disconnect"), 0);
+        assert_eq!(report.counters.get("responses_out"), (CLIENTS * REQS) as u64);
+        assert_eq!(report.kv_in_use_pages, 0, "all KV pages must drain");
+        assert_eq!(report.kv_reserved_pages, 0);
+    }
+}
+
+#[test]
+fn event_log_replay_reproduces_every_delivered_response() {
+    const CLIENTS: usize = 4;
+    const REQS: usize = 2;
+    const TOKENS: usize = 10;
+    let (spec, params) = load("topt-s1", 73);
+    let dir = std::env::temp_dir().join(format!("fp_netlog_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let log_path = dir.join("events.jsonl");
+
+    // a small queue so live admission exercises the held-submit
+    // (backpressure) path that replay must mirror
+    let ecfg = EngineConfig { max_batch: 2, queue_cap: 2, ..EngineConfig::default() };
+    let ncfg = NetConfig { event_log: Some(log_path.clone()), ..NetConfig::default() };
+    let (_report, ()) = with_server(&spec, &params, &ecfg, ncfg, |addr| {
+        std::thread::scope(|s| {
+            for ci in 0..CLIENTS {
+                s.spawn(move || {
+                    let reqs: Vec<ServeRequest> = (0..REQS)
+                        .map(|j| {
+                            // client 3 omits ids: the server must assign
+                            // req-{n} and replay must re-derive the same
+                            let id =
+                                if ci == 3 { String::new() } else { format!("c{ci}-r{j}") };
+                            mk(&id, &format!("log {ci}-{j}: a "), TOKENS, (ci * 7 + j) as u64)
+                        })
+                        .collect();
+                    run_client(addr, &reqs)
+                });
+            }
+        })
+    });
+
+    let entries = read_event_log(&log_path).unwrap();
+    let live = outbound_transcripts(&entries).unwrap();
+    assert_eq!(
+        live.len(),
+        CLIENTS * REQS,
+        "every request must have a delivered outbound record"
+    );
+    assert!(
+        live.keys().any(|k| k.ends_with(":req-0")),
+        "auto-assigned ids must appear in the tee: {:?}",
+        live.keys().collect::<Vec<_>>()
+    );
+
+    let inbound = inbound_lines(&entries);
+    assert_eq!(inbound.len(), CLIENTS * REQS);
+    let model = ServeModel::dense(&spec, &params).unwrap();
+    let replayed = replay_inbound(&model, &ecfg, &inbound).unwrap();
+    for (key, live_line) in &live {
+        let replay_line = replayed
+            .get(key)
+            .unwrap_or_else(|| panic!("replay produced no response for {key}"));
+        assert_eq!(
+            replay_line, live_line,
+            "replayed transcript for {key} must match the live tee exactly"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

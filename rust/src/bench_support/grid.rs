@@ -136,7 +136,7 @@ pub fn run_serve_format_grid(
     artifact: Option<&std::path::Path>,
 ) -> Result<Vec<ServeFormatRow>> {
     use crate::serve::bench::{
-        greedy_references, measure_sparse_format, requests_for, synthetic_prompts,
+        greedy_references, measure_sparse_format, requests_for, synthetic_prompts, BenchObs,
     };
 
     let pruned = crate::pruner::round_model_to_sparsity(spec, dense, sparsity)?;
@@ -176,8 +176,16 @@ pub fn run_serve_format_grid(
             SparseFormat::Csr => None,
             _ => Some(sparsity),
         };
-        let stats =
-            measure_sparse_format(spec, &pruned, &reference, &reqs, batch, fmt, sp_hint)?;
+        let stats = measure_sparse_format(
+            spec,
+            &pruned,
+            &reference,
+            &reqs,
+            batch,
+            fmt,
+            sp_hint,
+            &BenchObs::default(),
+        )?;
         rows.push(ServeFormatRow {
             format: fmt.label().to_string(),
             resolved: stats.label.to_string(),
@@ -237,7 +245,7 @@ fn artifact_row(
     path: &std::path::Path,
 ) -> Result<ServeFormatRow> {
     use crate::ser::artifact::{self, ArtifactMeta};
-    use crate::serve::bench::run_engine;
+    use crate::serve::bench::{run_engine, BenchObs};
     use crate::serve::ServeModel;
 
     let compiled =
@@ -262,8 +270,9 @@ fn artifact_row(
     let model = ServeModel::from_compiled_ref(&loaded);
     // same engine loop (and admission + parity policy) as the
     // in-memory rows
-    let (b1, texts1) = run_engine(&model, 1, "artifact b=1", reqs)?;
-    let (bb, textsb) = run_engine(&model, batch, &format!("artifact b={batch}"), reqs)?;
+    let obs = BenchObs::default();
+    let (b1, texts1) = run_engine(&model, 1, "artifact b=1", reqs, &obs)?;
+    let (bb, textsb) = run_engine(&model, batch, &format!("artifact b={batch}"), reqs, &obs)?;
     let parity_ok = crate::serve::bench::parity_against(reference, &[&texts1, &textsb]);
     Ok(ServeFormatRow {
         format: "artifact".into(),
@@ -335,7 +344,7 @@ pub fn run_paged_kv_grid(
             kv_page: page,
             kv_pages: None,
             prefill_chunk,
-            transcript: None,
+            ..EngineConfig::default()
         };
         let (stats, texts) =
             run_engine_cfg(&model, &cfg, &format!("paged p={page} b={batch}"), &reqs)?;

@@ -138,6 +138,38 @@ pub fn prune(args: &Args) -> Result<()> {
     let ppl_dense = lab.ppl(&model, &dense, &corpus)?;
     let ppl_pruned = lab.ppl(&model, &pruned, &corpus)?;
     println!("perplexity: dense {ppl_dense:.2} → pruned {ppl_pruned:.2}");
+    // --trace-out: one `fista_round` point per tuning round, replayed
+    // from the report's convergence history (the pruner itself stays
+    // recorder-free — worker threads carry plain data, not channels).
+    if let Some(path) = args.get("trace-out") {
+        use crate::ser::Json;
+        let (rec, writer) = crate::obs::Recorder::to_file(
+            std::path::Path::new(path),
+            crate::obs::SharedClock::default(),
+        )?;
+        for layer in &report.layers {
+            for op in &layer.ops {
+                let id = format!("L{}:{}", op.layer, op.op);
+                for rs in &op.rounds_detail {
+                    rec.point(
+                        "fista_round",
+                        &id,
+                        vec![
+                            ("round", Json::Num(rs.round as f64)),
+                            ("lambda", Json::Num(rs.lambda)),
+                            ("objective", Json::Num(rs.objective)),
+                            ("residual", Json::Num(rs.residual)),
+                            ("support", Json::Num(rs.support as f64)),
+                            ("iters", Json::Num(rs.fista_iters as f64)),
+                        ],
+                    );
+                }
+            }
+        }
+        drop(rec);
+        let stats = writer.finish()?;
+        println!("trace: {path} ({} events written, {} dropped)", stats.written, stats.dropped);
+    }
     if let Some(out) = args.get("out") {
         checkpoint::save(
             std::path::Path::new(out),
@@ -354,6 +386,19 @@ pub fn serve(args: &Args) -> Result<()> {
         }
     };
     let model_name = serve_model.spec.name();
+    // --trace-out: structured JSONL trace of the whole run (request
+    // lifecycles, engine gauges, connection spans), on the same clock as
+    // every latency field. Tracing observes, never gates: served bytes
+    // are bitwise identical with it on (rust/tests/trace_parity.rs).
+    let clock = crate::obs::SharedClock::default();
+    let mut tracing = None;
+    let mut recorder = None;
+    if let Some(path) = args.get("trace-out") {
+        let (rec, writer) =
+            crate::obs::Recorder::to_file(std::path::Path::new(path), clock.clone())?;
+        recorder = Some(rec);
+        tracing = Some((writer, path.to_string()));
+    }
     let cfg = crate::serve::EngineConfig {
         max_batch: args.usize_or("batch", 4)?,
         queue_cap: args.usize_or("queue", 64)?,
@@ -361,6 +406,8 @@ pub fn serve(args: &Args) -> Result<()> {
         kv_pages: args.get("kv-pages").map(|v| v.parse()).transpose()?,
         prefill_chunk: args.usize_or("prefill-chunk", 16)?,
         transcript: args.get("transcript").map(std::path::PathBuf::from),
+        clock: Some(clock),
+        recorder,
     };
     // --listen: the TCP front-end. Same engine, same JSONL protocol —
     // but many concurrent connections, bounded framing, timeouts, and an
@@ -392,6 +439,8 @@ pub fn serve(args: &Args) -> Result<()> {
         let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
         let report = server.run(&serve_model, &cfg, stop)?;
         eprintln!("net serve done: {}", report.summary());
+        eprintln!("stats: {}", report.snapshot.summary());
+        finish_trace(tracing)?;
         return Ok(());
     }
 
@@ -498,6 +547,17 @@ pub fn serve(args: &Args) -> Result<()> {
         engine.kv_resident_bytes() as f64 / 1024.0,
         engine.kv_capacity_bytes() as f64 / 1024.0
     );
+    eprintln!("stats: {}", engine.snapshot().summary());
+    finish_trace(tracing)?;
+    Ok(())
+}
+
+/// Close a `--trace-out` writer and report the final event accounting.
+fn finish_trace(tracing: Option<(crate::obs::TraceWriter, String)>) -> Result<()> {
+    if let Some((writer, path)) = tracing {
+        let stats = writer.finish()?;
+        println!("trace: {path} ({} events written, {} dropped)", stats.written, stats.dropped);
+    }
     Ok(())
 }
 
@@ -514,6 +574,17 @@ pub fn serve_bench(args: &Args) -> Result<()> {
     let format = SparseFormat::parse(args.get_or("format", "csr"))?;
     // the nm axis needs an n:m pattern; 2:4 is the paper's hardware mode
     let default_sparsity = if format == SparseFormat::Csr { "0.5" } else { "2:4" };
+    // --trace-out: every engine the bench spins up shares one recorder
+    // and one clock, so the capture holds all measured paths end to end.
+    let mut tracing = None;
+    let mut obs = crate::serve::BenchObs::default();
+    if let Some(path) = args.get("trace-out") {
+        let clock = crate::obs::SharedClock::default();
+        let (rec, writer) =
+            crate::obs::Recorder::to_file(std::path::Path::new(path), clock.clone())?;
+        obs = crate::serve::BenchObs { clock: Some(clock), recorder: Some(rec) };
+        tracing = Some((writer, path.to_string()));
+    }
     let cfg = crate::serve::ServeBenchConfig {
         tokens: args.usize_or("tokens", if smoke { 16 } else { 32 })?,
         batch: args.usize_or("batch", 4)?,
@@ -522,7 +593,24 @@ pub fn serve_bench(args: &Args) -> Result<()> {
         format,
         kv_page: args.usize_or("kv-page", 16)?,
         prefill_chunk: args.usize_or("prefill-chunk", 16)?,
+        obs,
     };
+    let res = serve_bench_axes(&mut lab, args, &cfg, fast, smoke);
+    // the writer closes even when a parity gate bails, so a failing run
+    // still leaves a complete capture to debug from
+    finish_trace(tracing)?;
+    res
+}
+
+/// The axis dispatch behind [`serve_bench`] (split out so `--trace-out`
+/// can close its writer on every early-return path).
+fn serve_bench_axes(
+    lab: &mut Lab,
+    args: &Args,
+    cfg: &crate::serve::ServeBenchConfig,
+    fast: bool,
+    smoke: bool,
+) -> Result<()> {
     // --net: the socket-concurrency axis — sustained req/s and stream
     // p99 with N loopback clients, connection churn and one mid-stream
     // disconnect, through the real `serve --listen` front-end
@@ -534,14 +622,14 @@ pub fn serve_bench(args: &Args) -> Result<()> {
         let default_model = if fast { "topt-s1" } else { "topt-s3" };
         let model = args.get_or("model", default_model).to_string();
         let corpus = args.get_or("corpus", "c4-syn").to_string();
-        let params = load_or_train(&mut lab, args, &model, &corpus)?;
+        let params = load_or_train(lab, args, &model, &corpus)?;
         let spec = lab.presets.model(&model)?.clone();
         let net = crate::serve::NetBenchConfig {
             clients: args.usize_or("clients", 8)?,
             requests_per_client: args.usize_or("reqs-per-client", if smoke { 2 } else { 4 })?,
             churn: !args.has("no-churn"),
         };
-        let report = crate::serve::run_net_bench(&spec, &params, &cfg, &net)?;
+        let report = crate::serve::run_net_bench(&spec, &params, cfg, &net)?;
         report.print();
         write_json_report(args, report.to_json())?;
         if !report.parity_ok {
@@ -557,9 +645,9 @@ pub fn serve_bench(args: &Args) -> Result<()> {
         let default_model = if fast { "topt-s1" } else { "topt-s3" };
         let model = args.get_or("model", default_model).to_string();
         let corpus = args.get_or("corpus", "c4-syn").to_string();
-        let params = load_or_train(&mut lab, args, &model, &corpus)?;
+        let params = load_or_train(lab, args, &model, &corpus)?;
         let spec = lab.presets.model(&model)?.clone();
-        let report = crate::serve::run_paged_bench(&spec, &params, &cfg)?;
+        let report = crate::serve::run_paged_bench(&spec, &params, cfg)?;
         report.print();
         write_json_report(args, report.to_json())?;
         if !report.parity_ok {
@@ -572,7 +660,7 @@ pub fn serve_bench(args: &Args) -> Result<()> {
     // instead of the in-memory compression axes.
     if let Some(path) = args.get("artifact") {
         let report =
-            crate::serve::run_artifact_bench(std::path::Path::new(path), &cfg, args.get("model"))?;
+            crate::serve::run_artifact_bench(std::path::Path::new(path), cfg, args.get("model"))?;
         report.print();
         write_json_report(args, report.to_json())?;
         if !report.parity_ok {
@@ -583,9 +671,9 @@ pub fn serve_bench(args: &Args) -> Result<()> {
     let default_model = if fast { "topt-s1" } else { "topt-s3" };
     let model = args.get_or("model", default_model).to_string();
     let corpus = args.get_or("corpus", "c4-syn").to_string();
-    let params = load_or_train(&mut lab, args, &model, &corpus)?;
+    let params = load_or_train(lab, args, &model, &corpus)?;
     let spec = lab.presets.model(&model)?.clone();
-    let report = crate::serve::run_serve_bench(&spec, &params, &cfg)?;
+    let report = crate::serve::run_serve_bench(&spec, &params, cfg)?;
     report.print();
     write_json_report(args, report.to_json())?;
     if !report.parity_ok {
@@ -643,5 +731,109 @@ pub fn pipeline(args: &Args) -> Result<()> {
     }
     println!("[3/3] results");
     t.print();
+    Ok(())
+}
+
+/// `trace --in capture.jsonl`: offline analysis of a `--trace-out`
+/// capture — per-request waterfalls, per-phase time totals, and the
+/// per-operator FISTA convergence table — plus the dropped-event gate
+/// CI runs (`--fail-on-drops`).
+pub fn trace(args: &Args) -> Result<()> {
+    use crate::obs::trace as tr;
+    let path = std::path::PathBuf::from(args.req("in")?);
+    let events = tr::load_trace(&path)?;
+    println!("{}: {} events", path.display(), events.len());
+
+    let requests = tr::request_waterfalls(&events);
+    if !requests.is_empty() {
+        let mut t = TableBuilder::new(
+            "requests",
+            &["id", "queued ms", "service ms", "total ms", "chunks", "tokens", "finish"],
+        );
+        for r in &requests {
+            t.row(vec![
+                r.id.clone(),
+                format!("{:.3}", r.queued_ms),
+                format!("{:.3}", r.service_ms),
+                format!("{:.3}", r.total_ms),
+                r.prefill_chunks.to_string(),
+                r.completion_tokens.to_string(),
+                r.finish.clone(),
+            ]);
+        }
+        t.print();
+    }
+
+    let phases = tr::phase_breakdown(&events);
+    if !phases.is_empty() {
+        let mut t = TableBuilder::new("phases", &["name", "count", "total ms"]);
+        for p in &phases {
+            t.row(vec![p.name.clone(), p.count.to_string(), format!("{:.3}", p.total_ms)]);
+        }
+        t.print();
+    }
+
+    let conv = tr::convergence_rows(&events);
+    if !conv.is_empty() {
+        let mut t = TableBuilder::new(
+            "FISTA convergence (final round per operator)",
+            &["op", "rounds", "iters", "lambda", "objective", "residual", "support"],
+        );
+        for c in &conv {
+            t.row(vec![
+                c.id.clone(),
+                c.rounds.to_string(),
+                c.iters.to_string(),
+                format!("{:.2e}", c.lambda),
+                format!("{:.4}", c.objective),
+                format!("{:.4}", c.residual),
+                c.support.to_string(),
+            ]);
+        }
+        t.print();
+    }
+
+    // --csv path: the waterfall rows, machine-readable.
+    if let Some(csv_path) = args.get("csv") {
+        let mut csv = crate::metrics::csv::CsvWriter::create(
+            std::path::Path::new(csv_path),
+            &[
+                "id",
+                "queued_ms",
+                "service_ms",
+                "total_ms",
+                "prefill_chunks",
+                "completion_tokens",
+                "finish",
+            ],
+        )?;
+        for r in &requests {
+            csv.write_row(&[
+                r.id.clone(),
+                format!("{:.4}", r.queued_ms),
+                format!("{:.4}", r.service_ms),
+                format!("{:.4}", r.total_ms),
+                r.prefill_chunks.to_string(),
+                r.completion_tokens.to_string(),
+                r.finish.clone(),
+            ])?;
+        }
+        println!("csv: {csv_path}");
+    }
+
+    let counts = tr::trace_end_counts(&events);
+    match counts {
+        Some((written, dropped)) => println!("dropped_events: {dropped} ({written} written)"),
+        None => println!("dropped_events: unknown (no trace_end line; capture closed uncleanly)"),
+    }
+    if args.has("fail-on-drops") {
+        match counts {
+            None => anyhow::bail!("no trace_end summary line in {}", path.display()),
+            Some((_, dropped)) if dropped > 0 => {
+                anyhow::bail!("{dropped} trace events were dropped (bounded channel overflow)")
+            }
+            _ => {}
+        }
+    }
     Ok(())
 }

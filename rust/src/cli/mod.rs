@@ -8,6 +8,7 @@
 //!   zeroshot  --model --corpus [--ckpt --items]
 //!   serve     --model --corpus [--batch --queue --format csr|nm|auto ...]
 //!   serve-bench [--model --smoke --format csr|nm|auto --json path ...]
+//!   trace     --in capture.jsonl [--csv path --fail-on-drops]
 //!   pipeline  --model --corpus [--sparsity ...]   (train→prune×methods→eval)
 
 pub mod args;
@@ -30,6 +31,7 @@ pub fn main() -> Result<()> {
         "generate" => commands::generate(&args),
         "serve" => commands::serve(&args),
         "serve-bench" => commands::serve_bench(&args),
+        "trace" => commands::trace(&args),
         "pipeline" => commands::pipeline(&args),
         "help" | "--help" | "-h" => {
             print!("{}", USAGE);
@@ -53,6 +55,8 @@ COMMANDS:
             [--sparsity 0.5|50%|2:4] [--mode sequential|parallel]
             [--workers N] [--threads N] [--engine xla|native]
             [--no-correction] [--calib N --seed S] [--out path.fpt]
+            [--trace-out t.jsonl]   one fista_round event per tuning
+                                    round (inspect with `trace`)
             [--emit-sparse [path.fsa] --format csr|nm|auto]
             (--emit-sparse compiles the pruned weights once and writes
              the compressed artifact + .meta.json sidecar — no dense
@@ -90,8 +94,14 @@ COMMANDS:
                                     dropped (default 64)
             [--event-log out.jsonl] raw tee of every in/out line with
                                     conn id + seq, for offline replay
+            [--trace-out t.jsonl]   structured trace: request lifecycle
+                                    spans, per-step engine gauges, conn
+                                    spans (inspect with `trace`); served
+                                    bytes stay bitwise identical
             (reads one JSON request per stdin line unless
-             --synthetic/--listen)
+             --synthetic/--listen; a `{\"type\":\"stats\"}` line on a
+             --listen conn returns a live counters/gauges/histograms
+             snapshot without perturbing in-flight streams)
   serve-bench                       tokens/s + p50/p99: full recompute vs
             [--model M --smoke]     KV-cached vs compressed decode (csr,
             [--format csr|nm|auto]  plus packed n:m side by side), parity
@@ -107,6 +117,11 @@ COMMANDS:
             [--clients N --reqs-per-client N --no-churn]
             [--kv-page N --prefill-chunk N]
             [--tokens N --batch N --requests N --sparsity S --json path]
+            [--trace-out t.jsonl]   trace every measured engine run
+  trace     --in capture.jsonl      analyze a --trace-out capture:
+            [--csv path]            request waterfalls, phase totals,
+            [--fail-on-drops]       FISTA convergence; exits non-zero on
+                                    dropped events with --fail-on-drops
   pipeline  --model M --corpus C    end-to-end: train → prune (all
             [--sparsity S]          methods) → perplexity table
 

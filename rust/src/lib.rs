@@ -68,6 +68,7 @@ pub mod baselines;
 pub mod train;
 pub mod eval;
 pub mod metrics;
+pub mod obs;
 pub mod testing;
 pub mod bench_support;
 pub mod cli;

@@ -30,6 +30,14 @@ impl Counters {
         self.map.get(name).copied().unwrap_or(0)
     }
 
+    /// Fold `other` into `self` (shared names add). Used to combine the
+    /// engine's and the net front-end's accounting into one snapshot.
+    pub fn merge(&mut self, other: &Counters) {
+        for (k, v) in other.iter() {
+            self.add(k, v);
+        }
+    }
+
     pub fn iter(&self) -> impl Iterator<Item = (&'static str, u64)> + '_ {
         self.map.iter().map(|(&k, &v)| (k, v))
     }
@@ -71,5 +79,43 @@ mod tests {
         c.incr("b");
         c.incr("a");
         assert_eq!(c.to_json().to_string_compact(), "{\"a\":1,\"b\":1}");
+    }
+
+    #[test]
+    fn json_is_insertion_order_independent() {
+        let mut fwd = Counters::new();
+        fwd.incr("x");
+        fwd.add("y", 2);
+        let mut rev = Counters::new();
+        rev.add("y", 2);
+        rev.incr("x");
+        assert_eq!(fwd.to_json().to_string_compact(), rev.to_json().to_string_compact());
+        assert_eq!(fwd.summary(), rev.summary());
+    }
+
+    #[test]
+    fn empty_counters_have_empty_shapes() {
+        let c = Counters::new();
+        assert_eq!(c.summary(), "");
+        assert_eq!(c.to_json().to_string_compact(), "{}");
+        assert_eq!(c.iter().count(), 0);
+    }
+
+    #[test]
+    fn merge_adds_shared_names_and_imports_new_ones() {
+        let mut a = Counters::new();
+        a.add("requests_in", 3);
+        a.incr("stats_requests");
+        let mut b = Counters::new();
+        b.add("requests_in", 2);
+        b.incr("closed");
+        a.merge(&b);
+        assert_eq!(a.get("requests_in"), 5);
+        assert_eq!(a.get("stats_requests"), 1);
+        assert_eq!(a.get("closed"), 1);
+        // merging an empty map is a no-op
+        let before = a.to_json().to_string_compact();
+        a.merge(&Counters::new());
+        assert_eq!(a.to_json().to_string_compact(), before);
     }
 }

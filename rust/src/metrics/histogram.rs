@@ -1,0 +1,294 @@
+//! Log-bucketed histogram for latency/size distributions.
+//!
+//! Buckets are quarter-octaves: sample `x > 0` lands in bucket
+//! `floor(log2(x) * 4)`, so bucket boundaries are powers of 2^¼
+//! (≈ 19% relative resolution) and the index range covers every finite
+//! positive f64 in an `i32`. Non-positive samples are counted in a
+//! dedicated `zeros` bucket (log buckets cannot hold them), NaNs are
+//! ignored. Counts saturate instead of wrapping. Merging is exact
+//! bucket-wise addition, so per-shard histograms fold into a global one
+//! without re-observing samples.
+//!
+//! JSON shape is insertion-order independent (sorted keys throughout) —
+//! pinned by the round-trip tests below.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::ser::json::Json;
+
+/// Sub-buckets per octave (power of 2).
+const SUBS: f64 = 4.0;
+
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// Quarter-octave bucket index → count, positive samples only.
+    buckets: BTreeMap<i32, u64>,
+    /// Samples `<= 0` or non-finite (a log scale has no bucket for
+    /// them; min/max still see them).
+    zeros: u64,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: BTreeMap::new(),
+            zeros: 0,
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+fn bucket_index(x: f64) -> i32 {
+    // x > 0 and finite here; the product stays well inside i32
+    (x.log2() * SUBS).floor() as i32
+}
+
+fn bucket_lo(i: i32) -> f64 {
+    (i as f64 / SUBS).exp2()
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram::default()
+    }
+
+    pub fn record(&mut self, x: f64) {
+        if x.is_nan() {
+            return;
+        }
+        self.count = self.count.saturating_add(1);
+        if x.is_finite() {
+            self.sum += x;
+        }
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        if x > 0.0 && x.is_finite() {
+            let c = self.buckets.entry(bucket_index(x)).or_insert(0);
+            *c = c.saturating_add(1);
+        } else {
+            self.zeros = self.zeros.saturating_add(1);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        self.sum / self.count as f64
+    }
+
+    /// Fold `other` into `self` (exact on counts, saturating at u64).
+    pub fn merge(&mut self, other: &Histogram) {
+        self.count = self.count.saturating_add(other.count);
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.zeros = self.zeros.saturating_add(other.zeros);
+        for (&i, &n) in &other.buckets {
+            let c = self.buckets.entry(i).or_insert(0);
+            *c = c.saturating_add(n);
+        }
+    }
+
+    /// Estimated quantile, `q` in [0, 100]: the geometric midpoint of
+    /// the bucket holding the target rank, clamped to the observed
+    /// [min, max]. Exact to one bucket (≤ ~19% relative error); NaN on
+    /// an empty histogram.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        if q <= 0.0 {
+            return self.min;
+        }
+        if q >= 100.0 {
+            return self.max;
+        }
+        let target = (q / 100.0) * self.count as f64;
+        let mut cum = self.zeros as f64;
+        if cum >= target && self.zeros > 0 {
+            // everything at or below zero collapses into one bucket
+            return self.min.min(0.0);
+        }
+        for (&i, &n) in &self.buckets {
+            cum += n as f64;
+            if cum >= target {
+                let mid = (bucket_lo(i) * bucket_lo(i + 1)).sqrt();
+                return mid.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Stable JSON: scalar fields plus `"buckets": {"<index>": count}`.
+    /// `min`/`max` are omitted when empty (NaN is not JSON).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("count".to_string(), Json::Num(self.count as f64));
+        m.insert("zeros".to_string(), Json::Num(self.zeros as f64));
+        m.insert("sum".to_string(), Json::Num(self.sum));
+        if self.count > 0 {
+            m.insert("min".to_string(), Json::Num(self.min));
+            m.insert("max".to_string(), Json::Num(self.max));
+        }
+        let mut b = BTreeMap::new();
+        for (&i, &n) in &self.buckets {
+            b.insert(i.to_string(), Json::Num(n as f64));
+        }
+        m.insert("buckets".to_string(), Json::Obj(b));
+        Json::Obj(m)
+    }
+
+    /// Inverse of [`to_json`](Histogram::to_json).
+    pub fn from_json(v: &Json) -> Result<Histogram> {
+        let mut h = Histogram::new();
+        h.count = v.get("count").and_then(|x| x.as_u64()).context("histogram: count")?;
+        h.zeros = v.get("zeros").and_then(|x| x.as_u64()).unwrap_or(0);
+        h.sum = v.get("sum").and_then(|x| x.as_f64()).unwrap_or(0.0);
+        if h.count > 0 {
+            h.min = v.get("min").and_then(|x| x.as_f64()).context("histogram: min")?;
+            h.max = v.get("max").and_then(|x| x.as_f64()).context("histogram: max")?;
+        }
+        if let Some(Json::Obj(b)) = v.get("buckets") {
+            for (k, n) in b {
+                let i: i32 = k.parse().with_context(|| format!("histogram bucket key {k}"))?;
+                h.buckets.insert(i, n.as_u64().context("histogram bucket count")?);
+            }
+        }
+        Ok(h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_round_trips_and_has_nan_quantiles() {
+        let h = Histogram::new();
+        assert!(h.is_empty());
+        assert!(h.quantile(50.0).is_nan());
+        assert!(h.mean().is_nan());
+        let j = h.to_json().to_string_compact();
+        assert_eq!(j, "{\"buckets\":{},\"count\":0,\"sum\":0,\"zeros\":0}");
+        let back = Histogram::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back.count(), 0);
+        assert!(back.quantile(99.0).is_nan());
+    }
+
+    #[test]
+    fn single_bucket_quantiles_are_exactish() {
+        let mut h = Histogram::new();
+        for _ in 0..100 {
+            h.record(10.0);
+        }
+        assert_eq!(h.count(), 100);
+        // one bucket: every quantile clamps to the only observed value
+        assert_eq!(h.quantile(1.0), 10.0);
+        assert_eq!(h.quantile(50.0), 10.0);
+        assert_eq!(h.quantile(99.0), 10.0);
+        assert_eq!(h.mean(), 10.0);
+    }
+
+    #[test]
+    fn quantiles_track_a_spread_within_bucket_resolution() {
+        let mut h = Histogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64);
+        }
+        let p50 = h.quantile(50.0);
+        let p99 = h.quantile(99.0);
+        // quarter-octave buckets: ≤ ~19% relative error
+        assert!((p50 / 500.0 - 1.0).abs() < 0.2, "p50 {p50}");
+        assert!((p99 / 990.0 - 1.0).abs() < 0.2, "p99 {p99}");
+        assert_eq!(h.quantile(0.0), 1.0);
+        assert_eq!(h.quantile(100.0), 1000.0);
+    }
+
+    #[test]
+    fn zeros_negatives_and_nans_are_handled() {
+        let mut h = Histogram::new();
+        h.record(0.0);
+        h.record(-2.0);
+        h.record(f64::NAN);
+        h.record(4.0);
+        assert_eq!(h.count(), 3, "NaN is ignored");
+        assert_eq!(h.quantile(1.0), -2.0, "the sub-zero bucket reports min");
+        assert_eq!(h.quantile(100.0), 4.0);
+    }
+
+    #[test]
+    fn saturating_counts_never_wrap() {
+        let mut h = Histogram::new();
+        h.count = u64::MAX - 1;
+        h.zeros = u64::MAX - 1;
+        h.record(0.0);
+        h.record(0.0);
+        h.record(0.0);
+        assert_eq!(h.count(), u64::MAX);
+        assert_eq!(h.zeros, u64::MAX);
+        let mut other = Histogram::new();
+        other.record(1.0);
+        other.record(1.0);
+        h.merge(&other);
+        assert_eq!(h.count(), u64::MAX, "merge saturates too");
+    }
+
+    #[test]
+    fn merge_equals_observing_everything_in_one_histogram() {
+        let (mut a, mut b, mut all) = (Histogram::new(), Histogram::new(), Histogram::new());
+        for i in 1..=50 {
+            a.record(i as f64);
+            all.record(i as f64);
+        }
+        for i in 51..=100 {
+            b.record(i as f64 * 0.5);
+            all.record(i as f64 * 0.5);
+        }
+        a.merge(&b);
+        assert_eq!(a.to_json().to_string_compact(), all.to_json().to_string_compact());
+        assert_eq!(a.quantile(50.0), all.quantile(50.0));
+    }
+
+    #[test]
+    fn json_is_stable_across_insertion_order_and_round_trips() {
+        // exactly-representable values: `sum` must match bit-for-bit
+        // regardless of accumulation order
+        let xs = [3.0, 700.0, 0.25, 42.0, 42.0, 0.0];
+        let mut fwd = Histogram::new();
+        let mut rev = Histogram::new();
+        for x in xs {
+            fwd.record(x);
+        }
+        for x in xs.iter().rev() {
+            rev.record(*x);
+        }
+        let j = fwd.to_json().to_string_compact();
+        assert_eq!(j, rev.to_json().to_string_compact(), "insertion order must not leak");
+        let back = Histogram::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back.to_json().to_string_compact(), j, "round trip is lossless");
+        assert_eq!(back.count(), fwd.count());
+        assert_eq!(back.quantile(50.0), fwd.quantile(50.0));
+    }
+}

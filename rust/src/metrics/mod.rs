@@ -1,11 +1,16 @@
 //! Reporting: ASCII tables (the paper-style bench output), CSV writers,
-//! and summary statistics.
+//! summary statistics, and the aggregation types behind the live stats
+//! surface (`obs`): counters, log-bucketed histograms, snapshots.
 
 pub mod counters;
 pub mod csv;
+pub mod histogram;
+pub mod snapshot;
 pub mod stats;
 pub mod table;
 
 pub use counters::Counters;
-pub use stats::{mean, mean_std, percentile};
+pub use histogram::Histogram;
+pub use snapshot::Snapshot;
+pub use stats::{mean, mean_std, percentile, percentile_sorted, percentiles};
 pub use table::TableBuilder;

@@ -1,0 +1,155 @@
+//! A point-in-time stats surface: counters + gauges + histograms.
+//!
+//! This is what the serve engine exports live (the `{"type":"stats"}`
+//! control request on the TCP front-end) and what the CLI commands dump
+//! at exit. Everything inside serializes with sorted keys, so snapshots
+//! diff cleanly and tests can pin exact shapes.
+
+use std::collections::BTreeMap;
+
+use crate::ser::json::Json;
+
+use super::counters::Counters;
+use super::histogram::Histogram;
+
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    pub counters: Counters,
+    gauges: BTreeMap<&'static str, f64>,
+    hists: BTreeMap<&'static str, Histogram>,
+}
+
+impl Snapshot {
+    pub fn new() -> Self {
+        Snapshot::default()
+    }
+
+    /// Set an instantaneous level (queue depth, KV pages in use, ...).
+    pub fn gauge(&mut self, name: &'static str, value: f64) {
+        self.gauges.insert(name, value);
+    }
+
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Attach a distribution (merged into any histogram already under
+    /// `name`, so shards fold in cleanly).
+    pub fn hist(&mut self, name: &'static str, h: Histogram) {
+        match self.hists.get_mut(name) {
+            Some(existing) => existing.merge(&h),
+            None => {
+                self.hists.insert(name, h);
+            }
+        }
+    }
+
+    pub fn hist_ref(&self, name: &str) -> Option<&Histogram> {
+        self.hists.get(name)
+    }
+
+    /// `{"counters": {...}, "gauges": {...}, "histograms": {name:
+    /// {...buckets..., "p50": x, "p99": y}}}` — quantiles precomputed so
+    /// consumers need no bucket math.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("counters".to_string(), self.counters.to_json());
+        let mut g = BTreeMap::new();
+        for (&k, &v) in &self.gauges {
+            g.insert(k.to_string(), Json::Num(v));
+        }
+        m.insert("gauges".to_string(), Json::Obj(g));
+        let mut hs = BTreeMap::new();
+        for (&k, h) in &self.hists {
+            let mut obj = match h.to_json() {
+                Json::Obj(o) => o,
+                _ => unreachable!("Histogram::to_json returns an object"),
+            };
+            if !h.is_empty() {
+                for (label, q) in [("p50", 50.0), ("p90", 90.0), ("p99", 99.0)] {
+                    obj.insert(label.to_string(), Json::Num(round3(h.quantile(q))));
+                }
+            }
+            hs.insert(k.to_string(), Json::Obj(obj));
+        }
+        m.insert("histograms".to_string(), Json::Obj(hs));
+        Json::Obj(m)
+    }
+
+    /// One-line report footer.
+    pub fn summary(&self) -> String {
+        let mut parts = Vec::new();
+        let counters = self.counters.summary();
+        if !counters.is_empty() {
+            parts.push(counters);
+        }
+        for (k, v) in &self.gauges {
+            parts.push(format!("{k}={v}"));
+        }
+        for (k, h) in &self.hists {
+            if h.is_empty() {
+                parts.push(format!("{k}[n=0]"));
+            } else {
+                parts.push(format!(
+                    "{k}[n={} p50={:.3} p99={:.3}]",
+                    h.count(),
+                    h.quantile(50.0),
+                    h.quantile(99.0)
+                ));
+            }
+        }
+        parts.join(" ")
+    }
+}
+
+fn round3(x: f64) -> f64 {
+    (x * 1e3).round() / 1e3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_has_the_three_sections_with_quantiles() {
+        let mut s = Snapshot::new();
+        s.counters.incr("steps");
+        s.gauge("queued", 2.0);
+        let mut h = Histogram::new();
+        for _ in 0..10 {
+            h.record(4.0);
+        }
+        s.hist("decode_batch", h);
+        let j = s.to_json();
+        assert_eq!(j.get("counters").unwrap().get("steps").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("gauges").unwrap().get("queued").unwrap().as_f64(), Some(2.0));
+        let hist = j.get("histograms").unwrap().get("decode_batch").unwrap();
+        assert_eq!(hist.get("count").unwrap().as_f64(), Some(10.0));
+        assert_eq!(hist.get("p50").unwrap().as_f64(), Some(4.0));
+        assert_eq!(hist.get("p99").unwrap().as_f64(), Some(4.0));
+    }
+
+    #[test]
+    fn hist_merges_shards_under_one_name() {
+        let mut s = Snapshot::new();
+        let mut a = Histogram::new();
+        a.record(1.0);
+        let mut b = Histogram::new();
+        b.record(2.0);
+        s.hist("step_ms", a);
+        s.hist("step_ms", b);
+        assert_eq!(s.hist_ref("step_ms").unwrap().count(), 2);
+    }
+
+    #[test]
+    fn summary_reads_like_a_log_line() {
+        let mut s = Snapshot::new();
+        s.counters.incr("retired");
+        s.gauge("active", 3.0);
+        s.hist("step_ms", Histogram::new());
+        let line = s.summary();
+        assert!(line.contains("retired=1"), "{line}");
+        assert!(line.contains("active=3"), "{line}");
+        assert!(line.contains("step_ms[n=0]"), "{line}");
+    }
+}

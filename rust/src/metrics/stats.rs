@@ -23,11 +23,24 @@ pub fn mean_std(xs: &[f64]) -> (f64, f64) {
 /// same fix as the rounding comparators) nor leak into the result — and
 /// the result is NaN only when no finite-ordered sample remains.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    percentiles(xs, &[p])[0]
+}
+
+/// Several percentiles over one sort. `percentile` re-sorts per call,
+/// which the bench report paths paid twice (p50 + p99) per latency
+/// vector; this filters NaNs and sorts once, then interpolates every
+/// requested quantile against the shared sorted buffer.
+pub fn percentiles(xs: &[f64], ps: &[f64]) -> Vec<f64> {
     let mut s: Vec<f64> = xs.iter().copied().filter(|v| !v.is_nan()).collect();
+    s.sort_by(f64::total_cmp);
+    ps.iter().map(|&p| percentile_sorted(&s, p)).collect()
+}
+
+/// Percentile over already-sorted (`f64::total_cmp`), NaN-free samples.
+pub fn percentile_sorted(s: &[f64], p: f64) -> f64 {
     if s.is_empty() {
         return f64::NAN;
     }
-    s.sort_by(f64::total_cmp);
     let rank = (p.clamp(0.0, 100.0) / 100.0) * (s.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -87,5 +100,17 @@ mod tests {
         assert!(percentile(&[f64::NAN, f64::NAN], 50.0).is_nan(), "all-NaN has no percentile");
         // ±0.0 and infinities stay totally ordered under total_cmp
         assert_eq!(percentile(&[f64::INFINITY, -0.0, 0.0], 0.0), -0.0);
+    }
+
+    #[test]
+    fn percentiles_match_percentile_with_one_sort() {
+        let xs = [9.0, f64::NAN, 1.0, 5.0, 3.0, 7.0];
+        let qs = percentiles(&xs, &[0.0, 25.0, 50.0, 99.0, 100.0]);
+        for (i, p) in [0.0, 25.0, 50.0, 99.0, 100.0].iter().enumerate() {
+            assert_eq!(qs[i], percentile(&xs, *p), "p{p}");
+        }
+        assert!(percentiles(&[], &[50.0])[0].is_nan());
+        assert!(percentiles(&[f64::NAN], &[50.0])[0].is_nan());
+        assert!(percentiles(&xs, &[]).is_empty());
     }
 }

@@ -1,0 +1,135 @@
+//! Injectable time source for every serving/tracing timestamp.
+//!
+//! All latency accounting and trace timestamps route through [`Clock`]
+//! instead of calling `std::time::Instant` at the use site. Production
+//! code runs on [`MonotonicClock`]; tests inject a [`FakeClock`] to pin
+//! the timeline, which makes `latency_ms` — historically the one
+//! wall-clock field the event-log replay had to canonicalize away —
+//! bit-reproducible (see `serve::net::replay`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Monotonic milliseconds since the clock's own epoch. Implementations
+/// must be non-decreasing and cheap: `now_ms` sits on the serve hot
+/// path (one read per request submit/retire and per engine step).
+pub trait Clock: Send + Sync {
+    fn now_ms(&self) -> f64;
+}
+
+/// The production clock: `Instant`-backed, epoch = construction time.
+pub struct MonotonicClock {
+    epoch: Instant,
+}
+
+impl MonotonicClock {
+    pub fn new() -> Self {
+        MonotonicClock { epoch: Instant::now() }
+    }
+}
+
+impl Default for MonotonicClock {
+    fn default() -> Self {
+        MonotonicClock::new()
+    }
+}
+
+impl Clock for MonotonicClock {
+    fn now_ms(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Test clock: time stands still until a test advances it, in integer
+/// microseconds so repeated reads are exact.
+#[derive(Default)]
+pub struct FakeClock {
+    micros: AtomicU64,
+}
+
+impl FakeClock {
+    pub fn new() -> Self {
+        FakeClock::default()
+    }
+
+    pub fn advance_ms(&self, ms: f64) {
+        self.micros.fetch_add((ms * 1e3).round() as u64, Ordering::SeqCst);
+    }
+
+    pub fn set_ms(&self, ms: f64) {
+        self.micros.store((ms * 1e3).round() as u64, Ordering::SeqCst);
+    }
+}
+
+impl Clock for FakeClock {
+    fn now_ms(&self) -> f64 {
+        self.micros.load(Ordering::SeqCst) as f64 / 1e3
+    }
+}
+
+/// Cloneable clock handle — what configs carry. `Default` is the real
+/// monotonic clock, so `..Config::default()` call sites keep today's
+/// behavior.
+#[derive(Clone)]
+pub struct SharedClock(Arc<dyn Clock>);
+
+impl SharedClock {
+    pub fn new(clock: Arc<dyn Clock>) -> Self {
+        SharedClock(clock)
+    }
+
+    pub fn monotonic() -> Self {
+        SharedClock(Arc::new(MonotonicClock::new()))
+    }
+
+    /// A fake clock plus the handle tests use to advance it.
+    pub fn fake() -> (Self, Arc<FakeClock>) {
+        let f = Arc::new(FakeClock::new());
+        (SharedClock(f.clone()), f)
+    }
+
+    pub fn now_ms(&self) -> f64 {
+        self.0.now_ms()
+    }
+}
+
+impl Default for SharedClock {
+    fn default() -> Self {
+        SharedClock::monotonic()
+    }
+}
+
+impl std::fmt::Debug for SharedClock {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("SharedClock")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotonic_clock_never_goes_back() {
+        let c = MonotonicClock::new();
+        let a = c.now_ms();
+        let b = c.now_ms();
+        assert!(b >= a);
+        assert!(a >= 0.0);
+    }
+
+    #[test]
+    fn fake_clock_moves_only_when_told() {
+        let (clock, fake) = SharedClock::fake();
+        assert_eq!(clock.now_ms(), 0.0);
+        assert_eq!(clock.now_ms(), 0.0, "reads do not advance time");
+        fake.advance_ms(2.5);
+        assert_eq!(clock.now_ms(), 2.5);
+        fake.set_ms(1.0);
+        assert_eq!(clock.now_ms(), 1.0);
+        let other = clock.clone();
+        fake.advance_ms(1.0);
+        assert_eq!(other.now_ms(), 2.0, "clones share the timeline");
+    }
+}

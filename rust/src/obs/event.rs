@@ -1,0 +1,119 @@
+//! The typed trace-event schema.
+//!
+//! One event per JSONL line. Reserved keys: `ph` (phase), `name`, `id`,
+//! `t_ms`; everything else on the line is a free-form attribute. Span
+//! `Begin`/`End` pairs share a `(name, id)` key; `Point` marks an
+//! instant; `Gauge` samples a level (queue depth, KV pages). Attribute
+//! keys must avoid the reserved names — [`Event::to_json`] asserts this
+//! in debug builds.
+
+use std::collections::BTreeMap;
+
+use crate::ser::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Begin,
+    End,
+    Point,
+    Gauge,
+}
+
+impl Phase {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Phase::Begin => "B",
+            Phase::End => "E",
+            Phase::Point => "P",
+            Phase::Gauge => "G",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Phase> {
+        match s {
+            "B" => Some(Phase::Begin),
+            "E" => Some(Phase::End),
+            "P" => Some(Phase::Point),
+            "G" => Some(Phase::Gauge),
+            _ => None,
+        }
+    }
+}
+
+/// One structured trace event, stamped by the emitting [`super::Recorder`].
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub phase: Phase,
+    /// Span/event name from the fixed taxonomy (docs/ARCHITECTURE.md
+    /// §Observability): "request", "conn", "queued", "prefill_chunk",
+    /// "engine_step", "fista_round", ...
+    pub name: &'static str,
+    /// Correlation id: request id, `c{conn}`, `L{layer}:{op}`; empty for
+    /// process-wide events.
+    pub id: String,
+    /// Clock timestamp, milliseconds since the recorder's clock epoch.
+    pub t_ms: f64,
+    pub attrs: Vec<(&'static str, Json)>,
+}
+
+const RESERVED: [&str; 4] = ["ph", "name", "id", "t_ms"];
+
+impl Event {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("ph".to_string(), Json::Str(self.phase.label().to_string()));
+        m.insert("name".to_string(), Json::Str(self.name.to_string()));
+        if !self.id.is_empty() {
+            m.insert("id".to_string(), Json::Str(self.id.clone()));
+        }
+        // 1µs granularity keeps lines short and exceeds clock precision
+        m.insert("t_ms".to_string(), Json::Num((self.t_ms * 1e3).round() / 1e3));
+        for (k, v) in &self.attrs {
+            debug_assert!(!RESERVED.contains(k), "attr key '{k}' shadows a reserved field");
+            m.insert((*k).to_string(), v.clone());
+        }
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serializes_with_stable_keys() {
+        let ev = Event {
+            phase: Phase::Begin,
+            name: "request",
+            id: "r1".to_string(),
+            t_ms: 1.23456,
+            attrs: vec![("slot", Json::Num(2.0)), ("pages", Json::Num(3.0))],
+        };
+        assert_eq!(
+            ev.to_json().to_string_compact(),
+            "{\"id\":\"r1\",\"name\":\"request\",\"pages\":3,\"ph\":\"B\",\"slot\":2,\"t_ms\":1.235}"
+        );
+    }
+
+    #[test]
+    fn empty_id_is_omitted() {
+        let ev = Event {
+            phase: Phase::Gauge,
+            name: "engine_step",
+            id: String::new(),
+            t_ms: 0.0,
+            attrs: vec![],
+        };
+        let j = ev.to_json();
+        assert!(j.get("id").is_none());
+        assert_eq!(j.get("ph").and_then(|v| v.as_str()), Some("G"));
+    }
+
+    #[test]
+    fn phase_labels_round_trip() {
+        for ph in [Phase::Begin, Phase::End, Phase::Point, Phase::Gauge] {
+            assert_eq!(Phase::parse(ph.label()), Some(ph));
+        }
+        assert_eq!(Phase::parse("X"), None);
+    }
+}

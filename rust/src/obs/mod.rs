@@ -1,0 +1,31 @@
+//! Observability: deterministic, zero-overhead-when-off tracing for the
+//! prune and serve stacks.
+//!
+//! Three pieces (docs/ARCHITECTURE.md §Observability):
+//!
+//! * [`clock`] — the injectable [`Clock`] trait behind every timestamp
+//!   and every `latency_ms`: [`MonotonicClock`] in production, a
+//!   [`FakeClock`] in tests so timelines (and therefore served bytes,
+//!   including latency fields) are bit-reproducible.
+//! * [`event`] + [`recorder`] — typed span/point/gauge events pushed
+//!   through a bounded never-blocking channel onto a JSONL writer
+//!   thread (`--trace-out`). Overflow drops and counts
+//!   (`dropped_events`); it never stalls a hot path. With no recorder
+//!   installed the instrumentation sites cost nothing.
+//! * [`trace`] — the offline side: load a capture, fold it into
+//!   per-request waterfalls, per-phase breakdowns, and per-operator
+//!   FISTA convergence tables (the `trace` CLI subcommand).
+//!
+//! The serve determinism contract survives tracing by construction:
+//! instrumentation only *observes* engine state — it never gates
+//! admission, scheduling, or sampling — which
+//! `rust/tests/trace_parity.rs` pins bit-for-bit.
+
+pub mod clock;
+pub mod event;
+pub mod recorder;
+pub mod trace;
+
+pub use clock::{Clock, FakeClock, MonotonicClock, SharedClock};
+pub use event::{Event, Phase};
+pub use recorder::{Recorder, TraceStats, TraceWriter};

@@ -1,0 +1,245 @@
+//! The trace recorder: a bounded, never-blocking event channel feeding
+//! a JSONL writer thread.
+//!
+//! Hot paths call [`Recorder::point`]/[`begin`](Recorder::begin)/... —
+//! each is one clock read plus one `try_send`. The channel is bounded;
+//! when the writer falls behind, events are *dropped and counted*
+//! (`dropped_events`), never queued unboundedly and never awaited, so
+//! tracing can never stall the serve loop or perturb scheduling. When no
+//! recorder is installed (`Option<Recorder>` = `None` everywhere), the
+//! instrumentation sites skip even the clock read and the id clone —
+//! the overhead-when-off guarantee documented in ARCHITECTURE.md.
+
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::ser::json::Json;
+
+use super::clock::SharedClock;
+use super::event::{Event, Phase};
+
+/// Default event-channel capacity. Sized so a bursty engine step never
+/// hits it unless the disk genuinely cannot keep up.
+const CHANNEL_CAP: usize = 65_536;
+
+/// Cloneable emit handle. Cheap to clone (two `Arc`s + a channel
+/// sender); every instrumented subsystem holds its own clone.
+#[derive(Clone)]
+pub struct Recorder {
+    tx: SyncSender<Event>,
+    dropped: Arc<AtomicU64>,
+    clock: SharedClock,
+}
+
+impl std::fmt::Debug for Recorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Recorder(dropped={})", self.dropped.load(Ordering::Relaxed))
+    }
+}
+
+/// Final accounting from [`TraceWriter::finish`].
+#[derive(Clone, Copy, Debug)]
+pub struct TraceStats {
+    /// Events written to the file (excluding the trailing summary line).
+    pub written: u64,
+    /// Events dropped because the bounded channel was full.
+    pub dropped: u64,
+}
+
+/// Owns the writer thread. Call [`finish`](TraceWriter::finish) after
+/// the traced workload completes: it drains everything already emitted,
+/// appends a `trace_end` summary line, and returns the final counts.
+pub struct TraceWriter {
+    handle: JoinHandle<u64>,
+    stop: Arc<AtomicBool>,
+    dropped: Arc<AtomicU64>,
+    path: PathBuf,
+}
+
+impl Recorder {
+    /// JSONL recorder writing to `path` (parent dirs created). Returns
+    /// the emit handle and the writer to `finish` afterwards.
+    pub fn to_file(path: &Path, clock: SharedClock) -> Result<(Recorder, TraceWriter)> {
+        Recorder::to_file_with_cap(path, clock, CHANNEL_CAP)
+    }
+
+    /// [`to_file`](Recorder::to_file) with an explicit channel bound
+    /// (tests shrink it to exercise the drop path).
+    pub fn to_file_with_cap(
+        path: &Path,
+        clock: SharedClock,
+        cap: usize,
+    ) -> Result<(Recorder, TraceWriter)> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {}", parent.display()))?;
+            }
+        }
+        let file = File::create(path).with_context(|| format!("creating {}", path.display()))?;
+        let (tx, rx) = sync_channel(cap.max(1));
+        let stop = Arc::new(AtomicBool::new(false));
+        let dropped = Arc::new(AtomicU64::new(0));
+        let handle = {
+            let stop = stop.clone();
+            std::thread::spawn(move || writer_loop(file, rx, stop))
+        };
+        let rec = Recorder { tx, dropped: dropped.clone(), clock };
+        let writer = TraceWriter { handle, stop, dropped, path: path.to_path_buf() };
+        Ok((rec, writer))
+    }
+
+    /// The recorder's timestamp source (shared with the instrumented
+    /// engine so spans and latency accounting agree).
+    pub fn now_ms(&self) -> f64 {
+        self.clock.now_ms()
+    }
+
+    pub fn dropped_events(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    pub fn begin(&self, name: &'static str, id: &str, attrs: Vec<(&'static str, Json)>) {
+        self.emit(Phase::Begin, name, id, attrs);
+    }
+
+    pub fn end(&self, name: &'static str, id: &str, attrs: Vec<(&'static str, Json)>) {
+        self.emit(Phase::End, name, id, attrs);
+    }
+
+    pub fn point(&self, name: &'static str, id: &str, attrs: Vec<(&'static str, Json)>) {
+        self.emit(Phase::Point, name, id, attrs);
+    }
+
+    pub fn gauge(&self, name: &'static str, id: &str, attrs: Vec<(&'static str, Json)>) {
+        self.emit(Phase::Gauge, name, id, attrs);
+    }
+
+    fn emit(&self, phase: Phase, name: &'static str, id: &str, attrs: Vec<(&'static str, Json)>) {
+        let ev = Event { phase, name, id: id.to_string(), t_ms: self.clock.now_ms(), attrs };
+        match self.tx.try_send(ev) {
+            Ok(()) => {}
+            // full or writer gone: count and move on, never block
+            Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+fn writer_loop(file: File, rx: Receiver<Event>, stop: Arc<AtomicBool>) -> u64 {
+    let mut out = BufWriter::new(file);
+    let mut written = 0u64;
+    let mut write = |out: &mut BufWriter<File>, ev: Event| {
+        if writeln!(out, "{}", ev.to_json().to_string_compact()).is_ok() {
+            written += 1;
+        }
+    };
+    loop {
+        match rx.recv_timeout(Duration::from_millis(25)) {
+            Ok(ev) => write(&mut out, ev),
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    // drain whatever raced in before the stop flag was observed
+    while let Ok(ev) = rx.try_recv() {
+        write(&mut out, ev);
+    }
+    let _ = out.flush();
+    written
+}
+
+impl TraceWriter {
+    /// Drain and join the writer, then append the `trace_end` summary
+    /// line (`written` / `dropped`) the `trace` CLI and CI gate read.
+    /// Events emitted after this call are dropped (and counted on the
+    /// recorder, but no longer reflected in the file).
+    pub fn finish(self) -> Result<TraceStats> {
+        self.stop.store(true, Ordering::Relaxed);
+        let written = match self.handle.join() {
+            Ok(n) => n,
+            Err(_) => anyhow::bail!("trace writer thread panicked"),
+        };
+        let dropped = self.dropped.load(Ordering::Relaxed);
+        let mut tail = std::collections::BTreeMap::new();
+        tail.insert("ph".to_string(), Json::Str("P".to_string()));
+        tail.insert("name".to_string(), Json::Str("trace_end".to_string()));
+        tail.insert("written".to_string(), Json::Num(written as f64));
+        tail.insert("dropped".to_string(), Json::Num(dropped as f64));
+        let mut f = OpenOptions::new()
+            .append(true)
+            .open(&self.path)
+            .with_context(|| format!("reopening {}", self.path.display()))?;
+        writeln!(f, "{}", Json::Obj(tail).to_string_compact())?;
+        Ok(TraceStats { written, dropped })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("fp_obs_{}_{name}.jsonl", std::process::id()))
+    }
+
+    #[test]
+    fn events_land_in_order_with_summary_line() {
+        let path = tmp("order");
+        let (clock, fake) = SharedClock::fake();
+        let (rec, writer) = Recorder::to_file(&path, clock).unwrap();
+        rec.begin("request", "r0", vec![("slot", Json::Num(0.0))]);
+        fake.advance_ms(3.0);
+        rec.point("prefill_chunk", "r0", vec![("tokens", Json::Num(4.0))]);
+        fake.advance_ms(1.0);
+        rec.end("request", "r0", vec![]);
+        let stats = writer.finish().unwrap();
+        assert_eq!(stats.written, 3);
+        assert_eq!(stats.dropped, 0);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4, "3 events + trace_end: {text}");
+        let first = Json::parse(lines[0]).unwrap();
+        assert_eq!(first.get("ph").and_then(|v| v.as_str()), Some("B"));
+        assert_eq!(first.get("t_ms").and_then(|v| v.as_f64()), Some(0.0));
+        let second = Json::parse(lines[1]).unwrap();
+        assert_eq!(second.get("t_ms").and_then(|v| v.as_f64()), Some(3.0));
+        let tail = Json::parse(lines[3]).unwrap();
+        assert_eq!(tail.get("name").and_then(|v| v.as_str()), Some("trace_end"));
+        assert_eq!(tail.get("written").and_then(|v| v.as_f64()), Some(3.0));
+        assert_eq!(tail.get("dropped").and_then(|v| v.as_f64()), Some(0.0));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn overflow_drops_and_counts_instead_of_blocking() {
+        let path = tmp("overflow");
+        let (clock, _fake) = SharedClock::fake();
+        // cap 1 and a writer that cannot drain faster than we emit: some
+        // events must drop, none may block, and the books must balance
+        let (rec, writer) = Recorder::to_file_with_cap(&path, clock, 1).unwrap();
+        const N: u64 = 500;
+        for i in 0..N {
+            rec.point("spin", "x", vec![("i", Json::Num(i as f64))]);
+        }
+        let dropped_live = rec.dropped_events();
+        drop(rec);
+        let stats = writer.finish().unwrap();
+        assert_eq!(stats.written + stats.dropped, N, "every event is written or counted");
+        assert!(stats.dropped >= dropped_live);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,317 @@
+//! Offline trace analysis: load a `--trace-out` JSONL capture and fold
+//! it into the tables the `trace` CLI prints — per-request waterfalls,
+//! per-phase time breakdowns, and per-(layer, op) FISTA convergence.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::ser::json::Json;
+
+use super::event::Phase;
+
+/// One parsed trace line (the read-side mirror of [`super::Event`],
+/// with owned names and free-form attributes).
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub phase: Phase,
+    pub name: String,
+    pub id: String,
+    pub t_ms: f64,
+    pub attrs: BTreeMap<String, Json>,
+}
+
+impl TraceEvent {
+    pub fn num(&self, key: &str) -> Option<f64> {
+        self.attrs.get(key).and_then(|v| v.as_f64())
+    }
+
+    pub fn str_attr(&self, key: &str) -> Option<&str> {
+        self.attrs.get(key).and_then(|v| v.as_str())
+    }
+}
+
+/// Parse a JSONL trace capture. Unparseable lines fail loudly — a trace
+/// is machine-written, so corruption means a real bug.
+pub fn load_trace(path: &Path) -> Result<Vec<TraceEvent>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {}", path.display()))?;
+    let mut events = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(line).with_context(|| format!("trace line {}", i + 1))?;
+        let phase = v
+            .get("ph")
+            .and_then(|p| p.as_str())
+            .and_then(Phase::parse)
+            .with_context(|| format!("trace line {}: bad or missing ph", i + 1))?;
+        let name = v
+            .get("name")
+            .and_then(|n| n.as_str())
+            .with_context(|| format!("trace line {}: missing name", i + 1))?
+            .to_string();
+        let id = v.get("id").and_then(|s| s.as_str()).unwrap_or("").to_string();
+        let t_ms = v.get("t_ms").and_then(|t| t.as_f64()).unwrap_or(0.0);
+        let mut attrs = BTreeMap::new();
+        if let Json::Obj(m) = &v {
+            for (k, val) in m {
+                if !matches!(k.as_str(), "ph" | "name" | "id" | "t_ms") {
+                    attrs.insert(k.clone(), val.clone());
+                }
+            }
+        }
+        events.push(TraceEvent { phase, name, id, t_ms, attrs });
+    }
+    Ok(events)
+}
+
+/// One serve request reconstructed from its lifecycle events.
+#[derive(Clone, Debug)]
+pub struct RequestRow {
+    pub id: String,
+    /// submit (`queued` point) → admit (`request` Begin).
+    pub queued_ms: f64,
+    /// admit → retire (`request` End).
+    pub service_ms: f64,
+    pub total_ms: f64,
+    pub prefill_chunks: usize,
+    pub completion_tokens: usize,
+    pub finish: String,
+}
+
+/// Fold lifecycle events into per-request waterfall rows (sorted by id).
+/// Requests missing their admit or retire event (still in flight when
+/// the trace closed) are skipped.
+pub fn request_waterfalls(events: &[TraceEvent]) -> Vec<RequestRow> {
+    #[derive(Default)]
+    struct Acc {
+        queued: Option<f64>,
+        begin: Option<f64>,
+        end: Option<f64>,
+        chunks: usize,
+        tokens: usize,
+        finish: String,
+    }
+    let mut acc: BTreeMap<String, Acc> = BTreeMap::new();
+    for ev in events {
+        if ev.id.is_empty() {
+            continue;
+        }
+        let a = acc.entry(ev.id.clone()).or_default();
+        match (ev.name.as_str(), ev.phase) {
+            ("queued", Phase::Point) => a.queued = Some(ev.t_ms),
+            ("request", Phase::Begin) => a.begin = Some(ev.t_ms),
+            ("prefill_chunk", Phase::Point) => a.chunks += 1,
+            ("request", Phase::End) => {
+                a.end = Some(ev.t_ms);
+                a.tokens = ev.num("completion_tokens").unwrap_or(0.0) as usize;
+                a.finish = ev.str_attr("finish").unwrap_or("?").to_string();
+            }
+            _ => {}
+        }
+    }
+    acc.into_iter()
+        .filter_map(|(id, a)| {
+            let (begin, end) = (a.begin?, a.end?);
+            let queued = a.queued.unwrap_or(begin);
+            Some(RequestRow {
+                id,
+                queued_ms: begin - queued,
+                service_ms: end - begin,
+                total_ms: end - queued,
+                prefill_chunks: a.chunks,
+                completion_tokens: a.tokens,
+                finish: a.finish,
+            })
+        })
+        .collect()
+}
+
+/// Aggregate per span/event name: how many, and (for Begin/End pairs)
+/// how much total time.
+#[derive(Clone, Debug)]
+pub struct PhaseRow {
+    pub name: String,
+    pub count: usize,
+    pub total_ms: f64,
+}
+
+/// Per-phase breakdown: Begin/End pairs matched per `(name, id)` (LIFO
+/// for nesting); points and gauges count with zero duration.
+pub fn phase_breakdown(events: &[TraceEvent]) -> Vec<PhaseRow> {
+    let mut open: BTreeMap<(String, String), Vec<f64>> = BTreeMap::new();
+    let mut rows: BTreeMap<String, (usize, f64)> = BTreeMap::new();
+    for ev in events {
+        match ev.phase {
+            Phase::Begin => {
+                open.entry((ev.name.clone(), ev.id.clone())).or_default().push(ev.t_ms);
+            }
+            Phase::End => {
+                let started =
+                    open.get_mut(&(ev.name.clone(), ev.id.clone())).and_then(|v| v.pop());
+                let r = rows.entry(ev.name.clone()).or_default();
+                r.0 += 1;
+                if let Some(t0) = started {
+                    r.1 += (ev.t_ms - t0).max(0.0);
+                }
+            }
+            Phase::Point | Phase::Gauge => {
+                rows.entry(ev.name.clone()).or_default().0 += 1;
+            }
+        }
+    }
+    rows.into_iter().map(|(name, (count, total_ms))| PhaseRow { name, count, total_ms }).collect()
+}
+
+/// Final convergence state of one pruned operator, folded from its
+/// `fista_round` points.
+#[derive(Clone, Debug)]
+pub struct ConvRow {
+    /// `L{layer}:{op}`.
+    pub id: String,
+    pub rounds: usize,
+    /// Total FISTA iterations across rounds.
+    pub iters: usize,
+    /// Final round's λ / objective / primal residual / support size.
+    pub lambda: f64,
+    pub objective: f64,
+    pub residual: f64,
+    pub support: usize,
+}
+
+/// Per-operator convergence table from `fista_round` events, sorted by
+/// operator id.
+pub fn convergence_rows(events: &[TraceEvent]) -> Vec<ConvRow> {
+    let mut rows: BTreeMap<String, ConvRow> = BTreeMap::new();
+    for ev in events {
+        if ev.name != "fista_round" || ev.phase != Phase::Point {
+            continue;
+        }
+        let r = rows.entry(ev.id.clone()).or_insert_with(|| ConvRow {
+            id: ev.id.clone(),
+            rounds: 0,
+            iters: 0,
+            lambda: 0.0,
+            objective: 0.0,
+            residual: 0.0,
+            support: 0,
+        });
+        r.rounds += 1;
+        r.iters += ev.num("iters").unwrap_or(0.0) as usize;
+        r.lambda = ev.num("lambda").unwrap_or(r.lambda);
+        r.objective = ev.num("objective").unwrap_or(r.objective);
+        r.residual = ev.num("residual").unwrap_or(r.residual);
+        r.support = ev.num("support").unwrap_or(r.support as f64) as usize;
+    }
+    rows.into_values().collect()
+}
+
+/// (written, dropped) from the `trace_end` summary line, if present.
+pub fn trace_end_counts(events: &[TraceEvent]) -> Option<(u64, u64)> {
+    events.iter().rev().find(|e| e.name == "trace_end").map(|e| {
+        (e.num("written").unwrap_or(0.0) as u64, e.num("dropped").unwrap_or(0.0) as u64)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(ph: Phase, name: &str, id: &str, t: f64, attrs: &[(&str, f64)]) -> TraceEvent {
+        TraceEvent {
+            phase: ph,
+            name: name.to_string(),
+            id: id.to_string(),
+            t_ms: t,
+            attrs: attrs.iter().map(|(k, v)| (k.to_string(), Json::Num(*v))).collect(),
+        }
+    }
+
+    #[test]
+    fn waterfall_reconstructs_queue_and_service_time() {
+        let mut events = vec![
+            ev(Phase::Point, "queued", "a", 1.0, &[]),
+            ev(Phase::Begin, "request", "a", 3.0, &[]),
+            ev(Phase::Point, "prefill_chunk", "a", 3.5, &[]),
+            ev(Phase::Point, "prefill_chunk", "a", 4.0, &[]),
+            ev(Phase::End, "request", "a", 9.0, &[("completion_tokens", 6.0)]),
+            // still in flight: no End — must be skipped, not crash
+            ev(Phase::Begin, "request", "b", 5.0, &[]),
+        ];
+        events[4].attrs.insert("finish".to_string(), Json::Str("length".to_string()));
+        let rows = request_waterfalls(&events);
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        assert_eq!(r.id, "a");
+        assert_eq!(r.queued_ms, 2.0);
+        assert_eq!(r.service_ms, 6.0);
+        assert_eq!(r.total_ms, 8.0);
+        assert_eq!(r.prefill_chunks, 2);
+        assert_eq!(r.completion_tokens, 6);
+        assert_eq!(r.finish, "length");
+    }
+
+    #[test]
+    fn phase_breakdown_pairs_spans_and_counts_points() {
+        let events = vec![
+            ev(Phase::Begin, "conn", "c1", 0.0, &[]),
+            ev(Phase::Begin, "conn", "c2", 1.0, &[]),
+            ev(Phase::Gauge, "engine_step", "", 1.5, &[]),
+            ev(Phase::End, "conn", "c1", 4.0, &[]),
+            ev(Phase::End, "conn", "c2", 5.0, &[]),
+        ];
+        let rows = phase_breakdown(&events);
+        let conn = rows.iter().find(|r| r.name == "conn").unwrap();
+        assert_eq!(conn.count, 2);
+        assert_eq!(conn.total_ms, 8.0);
+        let step = rows.iter().find(|r| r.name == "engine_step").unwrap();
+        assert_eq!(step.count, 1);
+        assert_eq!(step.total_ms, 0.0);
+    }
+
+    #[test]
+    fn convergence_keeps_last_round_and_sums_iters() {
+        let events = vec![
+            ev(
+                Phase::Point,
+                "fista_round",
+                "L0:wq",
+                0.0,
+                &[
+                    ("round", 1.0),
+                    ("lambda", 1e-5),
+                    ("objective", 2.0),
+                    ("iters", 20.0),
+                    ("support", 64.0),
+                    ("residual", 0.5),
+                ],
+            ),
+            ev(
+                Phase::Point,
+                "fista_round",
+                "L0:wq",
+                1.0,
+                &[
+                    ("round", 2.0),
+                    ("lambda", 3e-3),
+                    ("objective", 1.5),
+                    ("iters", 12.0),
+                    ("support", 60.0),
+                    ("residual", 0.2),
+                ],
+            ),
+        ];
+        let rows = convergence_rows(&events);
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        assert_eq!(r.rounds, 2);
+        assert_eq!(r.iters, 32);
+        assert_eq!(r.lambda, 3e-3);
+        assert_eq!(r.objective, 1.5);
+        assert_eq!(r.residual, 0.2);
+        assert_eq!(r.support, 60);
+    }
+}

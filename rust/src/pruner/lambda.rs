@@ -21,6 +21,7 @@ use crate::tensor::Tensor;
 
 use super::engine::SolverEngine;
 use super::objective::ErrorModel;
+use super::report::RoundStat;
 use super::rounding::round_to_sparsity;
 
 /// Tuner configuration (paper symbols in comments).
@@ -66,6 +67,9 @@ pub struct TuneResult {
     pub rounds: usize,
     /// Total FISTA iterations across rounds (perf accounting).
     pub fista_iters: usize,
+    /// Per-round convergence telemetry, in execution order (one entry
+    /// per round; flows up into `OpReport::rounds_detail`).
+    pub history: Vec<RoundStat>,
 }
 
 const LAMBDA_FLOOR: f64 = 1e-8;
@@ -91,6 +95,7 @@ pub fn tune_lambda(
     let mut rounds = 0usize;
     let mut fista_iters = 0usize;
     let mut final_lambda = lam;
+    let mut history = Vec::new();
 
     while rounds < cfg.max_rounds {
         rounds += 1;
@@ -102,6 +107,14 @@ pub fn tune_lambda(
         let e_total = em.error(engine, &w_k1)?;
         let e_fista = em.error(engine, &w_k)?;
         let e_round = (e_total - e_fista).max(0.0);
+        history.push(RoundStat {
+            round: rounds,
+            lambda: lam,
+            objective: e_total,
+            residual: crate::tensor::ops::frob_dist(&w_k, &w_k1),
+            support: w_k1.data().iter().filter(|&&x| x != 0.0).count(),
+            fista_iters: iters,
+        });
 
         let mut e_stop = f64::INFINITY;
         if e_total < e_best {
@@ -128,7 +141,14 @@ pub fn tune_lambda(
         }
     }
 
-    Ok(TuneResult { w: w_best, e_total: e_best, lambda: final_lambda, rounds, fista_iters })
+    Ok(TuneResult {
+        w: w_best,
+        e_total: e_best,
+        lambda: final_lambda,
+        rounds,
+        fista_iters,
+        history,
+    })
 }
 
 #[cfg(test)]

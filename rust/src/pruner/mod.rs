@@ -25,6 +25,6 @@ pub mod unit;
 
 pub use engine::{NativeEngine, SolverEngine, XlaEngine};
 pub use lambda::{tune_lambda, TuneCfg, TuneResult};
-pub use report::{LayerReport, OpReport, PruneReport};
+pub use report::{LayerReport, OpReport, PruneReport, RoundStat};
 pub use rounding::{round_model_to_sparsity, round_to_sparsity, satisfies_sparsity};
 pub use scheduler::{prune_model, Method};

@@ -3,6 +3,26 @@
 
 use std::time::Duration;
 
+/// One outer tuning round of Algorithm 1, for convergence diagnostics
+/// (the `trace` CLI's per-layer convergence table; `prune --trace-out`
+/// emits one `fista_round` event per entry).
+#[derive(Clone, Debug)]
+pub struct RoundStat {
+    /// 1-based round index within the operator's tuning loop.
+    pub round: usize,
+    /// λ this round's FISTA solve used.
+    pub lambda: f64,
+    /// E_total = ‖round(W*_K) X* − WX‖_F after this round.
+    pub objective: f64,
+    /// ‖W*_K − round(W*_K)‖_F — distance of the FISTA iterate to the
+    /// sparse feasible set (small ⇒ the solve landed near-feasible).
+    pub residual: f64,
+    /// Nonzeros in the rounded iterate.
+    pub support: usize,
+    /// FISTA iterations spent this round.
+    pub fista_iters: usize,
+}
+
 /// Per-operator outcome.
 #[derive(Clone, Debug)]
 pub struct OpReport {
@@ -17,6 +37,9 @@ pub struct OpReport {
     pub fista_iters: usize,
     pub sparsity: f64,
     pub elapsed: Duration,
+    /// Per-round convergence history (empty when telemetry is off or the
+    /// solver path does not tune λ).
+    pub rounds_detail: Vec<RoundStat>,
 }
 
 /// Per-layer rollup.
@@ -109,6 +132,7 @@ mod tests {
             fista_iters: 40,
             sparsity: sp,
             elapsed: Duration::from_millis(5),
+            rounds_detail: Vec::new(),
         };
         let rep = PruneReport {
             model: "topt-s1".into(),

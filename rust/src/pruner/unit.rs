@@ -36,7 +36,7 @@ use crate::tensor::{ops, par, Tensor};
 use super::engine::{NativeEngine, SolverEngine, XlaEngine};
 use super::lambda::{tune_lambda, TuneCfg};
 use super::objective::ErrorModel;
-use super::report::{LayerReport, OpReport};
+use super::report::{LayerReport, OpReport, RoundStat};
 use super::scheduler::Method;
 
 /// Result of pruning one layer.
@@ -68,6 +68,9 @@ struct SolveOut {
     /// ‖WX‖ from the error model's constant term (relative-error scale).
     scale: f64,
     elapsed: std::time::Duration,
+    /// Per-round convergence telemetry (FISTA path only; empty for
+    /// baselines and dense).
+    history: Vec<RoundStat>,
 }
 
 /// Prune one decoder layer.
@@ -167,10 +170,10 @@ pub fn prune_unit(
         }
         let em = ErrorModel::build(engine, w, xd, xs)
             .with_context(|| format!("layer {layer} op {}", op.name))?;
-        let (w_star, lambda, rounds, fista_iters) = match method {
+        let (w_star, lambda, rounds, fista_iters, history) = match method {
             Method::Dense => unreachable!("dense handled above"),
             Method::Baseline(kind) => {
-                (baselines::prune_matrix(*kind, w, &em.a, opts.sparsity)?, 0.0, 0, 0)
+                (baselines::prune_matrix(*kind, w, &em.a, opts.sparsity)?, 0.0, 0, 0, Vec::new())
             }
             Method::Fista => {
                 let w0 = match warm_kind {
@@ -178,12 +181,21 @@ pub fn prune_unit(
                     None => w.clone(),
                 };
                 let res = tune_lambda(engine, &em, &w0, opts.sparsity, &tune_cfg)?;
-                (res.w, res.lambda, res.rounds, res.fista_iters)
+                (res.w, res.lambda, res.rounds, res.fista_iters, res.history)
             }
         };
         let error = em.error(engine, &w_star)?;
         let scale = em.c.max(0.0).sqrt();
-        Ok(SolveOut { w_star, lambda, rounds, fista_iters, error, scale, elapsed: t_op.elapsed() })
+        Ok(SolveOut {
+            w_star,
+            lambda,
+            rounds,
+            fista_iters,
+            error,
+            scale,
+            elapsed: t_op.elapsed(),
+            history,
+        })
     };
 
     let mut pruned: Vec<(String, Tensor)> = Vec::new();
@@ -264,6 +276,7 @@ pub fn prune_unit(
                 fista_iters: out.fista_iters,
                 sparsity: out.w_star.sparsity(),
                 elapsed: out.elapsed,
+                rounds_detail: out.history,
             });
             cur[op_index(op.name)] = out.w_star.clone();
             pruned.push((op.name.to_string(), out.w_star));

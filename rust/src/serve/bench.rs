@@ -12,9 +12,10 @@ use anyhow::{bail, ensure, Result};
 
 use crate::config::{ModelSpec, SparseFormat, Sparsity};
 use crate::eval::generate::{generate, GenOptions};
-use crate::metrics::stats::percentile;
+use crate::metrics::stats::{percentile, percentiles};
 use crate::metrics::TableBuilder;
 use crate::model::params::ModelParams;
+use crate::obs::{Recorder, SharedClock};
 use crate::pruner::round_model_to_sparsity;
 use crate::ser::json::Json;
 
@@ -46,6 +47,9 @@ pub struct ServeBenchConfig {
     /// Prefill-token budget per engine step (`--prefill-chunk`) for the
     /// paged axis.
     pub prefill_chunk: usize,
+    /// Observability hooks threaded into every engine the bench builds
+    /// (`--trace-out`); defaults off.
+    pub obs: BenchObs,
 }
 
 impl Default for ServeBenchConfig {
@@ -58,7 +62,23 @@ impl Default for ServeBenchConfig {
             format: SparseFormat::Csr,
             kv_page: 16,
             prefill_chunk: 16,
+            obs: BenchObs::default(),
         }
+    }
+}
+
+/// Optional clock + recorder shared by every engine a bench run
+/// constructs, so one trace file covers all measured paths.
+#[derive(Clone, Default)]
+pub struct BenchObs {
+    pub clock: Option<SharedClock>,
+    pub recorder: Option<Recorder>,
+}
+
+impl BenchObs {
+    fn apply(&self, cfg: &mut EngineConfig) {
+        cfg.clock = self.clock.clone();
+        cfg.recorder = self.recorder.clone();
     }
 }
 
@@ -277,6 +297,7 @@ pub(crate) fn run_engine_cfg(
     let latencies: Vec<f64> = responses.iter().map(|r| r.latency_ms).collect();
     let total_tokens: usize = responses.iter().map(|r| r.completion_tokens).sum();
     let texts = responses.into_iter().map(|r| (r.id, r.text)).collect();
+    let qs = percentiles(&latencies, &[50.0, 99.0]);
     Ok((
         PathStats {
             label: label.to_string(),
@@ -284,8 +305,8 @@ pub(crate) fn run_engine_cfg(
             total_tokens,
             wall_s,
             tokens_per_s: total_tokens as f64 / wall_s.max(1e-12),
-            p50_ms: percentile(&latencies, 50.0),
-            p99_ms: percentile(&latencies, 99.0),
+            p50_ms: qs[0],
+            p99_ms: qs[1],
             kv_resident_bytes: kv_peak,
         },
         texts,
@@ -299,12 +320,14 @@ pub(crate) fn run_engine(
     batch: usize,
     label: &str,
     requests: &[ServeRequest],
+    obs: &BenchObs,
 ) -> Result<(PathStats, BTreeMap<String, String>)> {
-    let cfg = EngineConfig {
+    let mut cfg = EngineConfig {
         max_batch: batch,
         queue_cap: requests.len().max(1),
         ..EngineConfig::default()
     };
+    obs.apply(&mut cfg);
     run_engine_cfg(model, &cfg, label, requests)
 }
 
@@ -327,6 +350,7 @@ pub struct FormatStats {
 /// Serve `requests` through a fresh engine per batch width over `pruned`
 /// weights compressed as `format`, and compare greedy outputs to
 /// `reference` (id → text from `eval::generate` over the same weights).
+#[allow(clippy::too_many_arguments)]
 pub fn measure_sparse_format(
     spec: &ModelSpec,
     pruned: &ModelParams,
@@ -335,11 +359,12 @@ pub fn measure_sparse_format(
     batch: usize,
     format: SparseFormat,
     sp: Option<Sparsity>,
+    obs: &BenchObs,
 ) -> Result<FormatStats> {
     let model = ServeModel::sparse_as(spec, pruned, format, sp)?;
     let label = model.format_label();
-    let (b1, texts1) = run_engine(&model, 1, &format!("kv {label} b=1"), requests)?;
-    let (bb, textsb) = run_engine(&model, batch, &format!("kv {label} b={batch}"), requests)?;
+    let (b1, texts1) = run_engine(&model, 1, &format!("kv {label} b=1"), requests, obs)?;
+    let (bb, textsb) = run_engine(&model, batch, &format!("kv {label} b={batch}"), requests, obs)?;
     let parity_ok = parity_against(reference, &[&texts1, &textsb]);
     Ok(FormatStats {
         label,
@@ -376,22 +401,28 @@ pub fn run_serve_bench(
     let (reference, ref_lat) = greedy_references(spec, dense, &requests, &prompts);
     let recompute_wall = start.elapsed().as_secs_f64();
     let recompute_tokens = cfg.tokens * cfg.requests;
+    let ref_qs = percentiles(&ref_lat, &[50.0, 99.0]);
     let recompute = PathStats {
         label: "recompute (eval::generate)".to_string(),
         requests: cfg.requests,
         total_tokens: recompute_tokens,
         wall_s: recompute_wall,
         tokens_per_s: recompute_tokens as f64 / recompute_wall.max(1e-12),
-        p50_ms: percentile(&ref_lat, 50.0),
-        p99_ms: percentile(&ref_lat, 99.0),
+        p50_ms: ref_qs[0],
+        p99_ms: ref_qs[1],
         kv_resident_bytes: 0,
     };
 
     // KV-cached dense, batch 1 and batch B (one weight resolution)
     let dense_model = ServeModel::dense(spec, dense)?;
-    let (kv1, texts1) = run_engine(&dense_model, 1, "kv dense b=1", &requests)?;
-    let (kvb, textsb) =
-        run_engine(&dense_model, cfg.batch, &format!("kv dense b={}", cfg.batch), &requests)?;
+    let (kv1, texts1) = run_engine(&dense_model, 1, "kv dense b=1", &requests, &cfg.obs)?;
+    let (kvb, textsb) = run_engine(
+        &dense_model,
+        cfg.batch,
+        &format!("kv dense b={}", cfg.batch),
+        &requests,
+        &cfg.obs,
+    )?;
     parity_ok &= parity_against(&reference, &[&texts1, &textsb]);
 
     // compressed formats on pruned weights, batch 1 and batch B; parity
@@ -399,7 +430,8 @@ pub fn run_serve_bench(
     let pruned = round_model_to_sparsity(spec, dense, cfg.sparsity)?;
     let (pruned_ref, _) = greedy_references(spec, &pruned, &requests, &prompts);
     let pruned_dense_model = ServeModel::dense(spec, &pruned)?;
-    let (kv_pruned1, _) = run_engine(&pruned_dense_model, 1, "kv pruned-dense b=1", &requests)?;
+    let (kv_pruned1, _) =
+        run_engine(&pruned_dense_model, 1, "kv pruned-dense b=1", &requests, &cfg.obs)?;
     let csr = measure_sparse_format(
         spec,
         &pruned,
@@ -408,6 +440,7 @@ pub fn run_serve_bench(
         cfg.batch,
         SparseFormat::Csr,
         None,
+        &cfg.obs,
     )?;
     parity_ok &= csr.parity_ok;
     // the nm axis: same pruned weights through the packed format (Auto
@@ -421,6 +454,7 @@ pub fn run_serve_bench(
             cfg.batch,
             cfg.format,
             Some(cfg.sparsity),
+            &cfg.obs,
         )?;
         parity_ok &= s.parity_ok;
         Some(s)
@@ -603,14 +637,15 @@ pub fn run_paged_bench(
     let prompts = synthetic_prompts(half_n);
     let requests = requests_for(&prompts, cfg.tokens);
     let (reference, _) = greedy_references(spec, dense, &requests, &prompts);
-    let mem_cfg = EngineConfig {
+    let mut mem_cfg = EngineConfig {
         max_batch: slots,
         queue_cap: half_n,
         kv_page: cfg.kv_page,
         kv_pages: None,
         prefill_chunk: cfg.prefill_chunk,
-        transcript: None,
+        ..EngineConfig::default()
     };
+    cfg.obs.apply(&mut mem_cfg);
     let (half, texts) = run_engine_cfg(&model, &mem_cfg, "paged half-batch", &requests)?;
     parity_ok &= parity_against(&reference, &[&texts]);
     let monolithic_kv_bytes = spec.layers * 2 * 4 * spec.seq * spec.d * slots;
@@ -634,14 +669,15 @@ pub fn run_paged_bench(
     requests.push(long.clone());
     let (stall_ref, _) = greedy_references(spec, dense, &requests, &prompts);
     let shorts = &requests[..short_n];
-    let chunked_cfg = EngineConfig {
+    let mut chunked_cfg = EngineConfig {
         max_batch: slots,
         queue_cap: slots,
         kv_page: cfg.kv_page,
         kv_pages: None,
         prefill_chunk: cfg.prefill_chunk,
-        transcript: None,
+        ..EngineConfig::default()
     };
+    cfg.obs.apply(&mut chunked_cfg);
     let (chunked_p99, tok_s, chunked_texts) = stall_run(&model, &chunked_cfg, shorts, &long)?;
     // unchunked = the whole prompt in one step's budget (old behaviour)
     let unchunked_cfg = EngineConfig { prefill_chunk: spec.seq, ..chunked_cfg };
@@ -801,9 +837,15 @@ pub fn run_artifact_bench(
     }
     let model = ServeModel::from_compiled_ref(&compiled);
     let label = model.format_label();
-    let (b1, texts1) = run_engine(&model, 1, &format!("artifact {label} b=1"), &requests)?;
-    let (bb, textsb) =
-        run_engine(&model, cfg.batch, &format!("artifact {label} b={}", cfg.batch), &requests)?;
+    let (b1, texts1) =
+        run_engine(&model, 1, &format!("artifact {label} b=1"), &requests, &cfg.obs)?;
+    let (bb, textsb) = run_engine(
+        &model,
+        cfg.batch,
+        &format!("artifact {label} b={}", cfg.batch),
+        &requests,
+        &cfg.obs,
+    )?;
     let parity_ok = parity_against(&reference, &[&texts1, &textsb]);
     let file_bytes = std::fs::metadata(path)?.len();
     let dense_ckpt_bytes = crate::ser::tensorfile::encoded_len(
@@ -1054,14 +1096,15 @@ pub fn run_net_bench(
         spec.seq
     );
     let model = ServeModel::dense(spec, dense)?;
-    let ecfg = EngineConfig {
+    let mut ecfg = EngineConfig {
         max_batch: cfg.batch,
         queue_cap: (net.clients * net.requests_per_client + 8).max(16),
         kv_page: cfg.kv_page,
         kv_pages: None,
         prefill_chunk: cfg.prefill_chunk,
-        transcript: None,
+        ..EngineConfig::default()
     };
+    cfg.obs.apply(&mut ecfg);
     let ncfg = NetConfig {
         max_conns: net.clients * 2 + 4,
         conn_timeout: Duration::from_secs(10),
@@ -1130,6 +1173,7 @@ pub fn run_net_bench(
     if completed != net.clients * net.requests_per_client {
         parity_ok = false;
     }
+    let net_qs = percentiles(&latencies, &[50.0, 99.0]);
 
     Ok(NetBenchReport {
         model: spec.name(),
@@ -1140,8 +1184,8 @@ pub fn run_net_bench(
         completed,
         wall_s,
         req_per_s: completed as f64 / wall_s.max(1e-9),
-        p50_ms: percentile(&latencies, 50.0),
-        p99_ms: percentile(&latencies, 99.0),
+        p50_ms: net_qs[0],
+        p99_ms: net_qs[1],
         accepted_conns: report.counters.get("accepted"),
         closed_conns: report.counters.get("closed"),
         aborted_by_disconnect: report.counters.get("aborted_by_disconnect"),

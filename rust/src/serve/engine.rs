@@ -39,15 +39,19 @@
 //! (including mid-stream aborts). `rust/tests/serve_parity.rs`,
 //! `rust/tests/paged_kv_parity.rs` and the abort/exhaustion cases in
 //! `rust/tests/failure_injection.rs` pin this down against
-//! `eval::generate`.
+//! `eval::generate`. Tracing (`obs`) only observes this machine, never
+//! gates it: `rust/tests/trace_parity.rs` pins that a traced run's
+//! served bytes equal the untraced run's, bitwise.
 
 use std::collections::{BTreeSet, VecDeque};
-use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 use crate::data::tokenizer;
 use crate::eval::generate::next_token;
+use crate::metrics::{Histogram, Snapshot};
+use crate::obs::{Recorder, SharedClock};
+use crate::ser::json::Json;
 use crate::util::Pcg64;
 
 use super::batch::{decode_step, prefill_extend, ServeModel};
@@ -73,6 +77,14 @@ pub struct EngineConfig {
     pub prefill_chunk: usize,
     /// Tee every retired request to this JSONL file.
     pub transcript: Option<std::path::PathBuf>,
+    /// Timestamp source for queueing/latency accounting and trace
+    /// events; `None` uses a process-monotonic clock. Injectable so
+    /// tests and `replay` can pin every timestamp (`obs::FakeClock`).
+    pub clock: Option<SharedClock>,
+    /// Structured trace sink; `None` (the default) makes every
+    /// instrumentation site a skipped branch — tracing only observes,
+    /// it never gates scheduling.
+    pub recorder: Option<Recorder>,
 }
 
 impl Default for EngineConfig {
@@ -84,6 +96,8 @@ impl Default for EngineConfig {
             kv_pages: None,
             prefill_chunk: 16,
             transcript: None,
+            clock: None,
+            recorder: None,
         }
     }
 }
@@ -94,7 +108,8 @@ impl Default for EngineConfig {
 struct QueuedReq {
     req: ServeRequest,
     tokens: Vec<i32>,
-    submitted: Instant,
+    /// Submission timestamp in engine-clock milliseconds.
+    submitted: f64,
 }
 
 /// One in-flight request: its token tail, paged KV block, reservation,
@@ -114,7 +129,8 @@ struct Slot {
     reserved_pages: usize,
     rng: Pcg64,
     stop_id: Option<i32>,
-    submitted: Instant,
+    /// Submission timestamp in engine-clock milliseconds.
+    submitted: f64,
 }
 
 impl Slot {
@@ -153,6 +169,13 @@ pub struct Engine<'m> {
     responses: Vec<ServeResponse>,
     tee: Option<TranscriptTee>,
     pub stats: EngineStats,
+    clock: SharedClock,
+    rec: Option<Recorder>,
+    /// Wall time per scheduler step (always on; one clock read per
+    /// step, no allocation).
+    step_ms: Histogram,
+    /// Decode-batch width per step with decoded tokens.
+    decode_batch: Histogram,
 }
 
 impl<'m> Engine<'m> {
@@ -195,6 +218,10 @@ impl<'m> Engine<'m> {
             responses: Vec::new(),
             tee,
             stats: EngineStats::default(),
+            clock: cfg.clock.clone().unwrap_or_default(),
+            rec: cfg.recorder.clone(),
+            step_ms: Histogram::new(),
+            decode_batch: Histogram::new(),
         })
     }
 
@@ -259,7 +286,10 @@ impl<'m> Engine<'m> {
     pub fn submit(&mut self, req: ServeRequest) -> Result<()> {
         let tokens = tokenizer::encode(&req.prompt);
         self.admission_check(&req, &tokens)?;
-        self.queue.push_back(QueuedReq { req, tokens, submitted: Instant::now() });
+        if let Some(r) = &self.rec {
+            r.point("queued", &req.id, vec![("prompt_tokens", Json::Num(tokens.len() as f64))]);
+        }
+        self.queue.push_back(QueuedReq { req, tokens, submitted: self.clock.now_ms() });
         Ok(())
     }
 
@@ -269,10 +299,20 @@ impl<'m> Engine<'m> {
         let tokens = tokenizer::encode(&req.prompt);
         match self.admission_check(&req, &tokens) {
             Ok(()) => {
-                self.queue.push_back(QueuedReq { req, tokens, submitted: Instant::now() });
+                if let Some(r) = &self.rec {
+                    r.point(
+                        "queued",
+                        &req.id,
+                        vec![("prompt_tokens", Json::Num(tokens.len() as f64))],
+                    );
+                }
+                self.queue.push_back(QueuedReq { req, tokens, submitted: self.clock.now_ms() });
                 true
             }
             Err(e) => {
+                if let Some(r) = &self.rec {
+                    r.point("rejected", &req.id, vec![]);
+                }
                 self.push_response(ServeResponse {
                     id: req.id,
                     text: String::new(),
@@ -339,6 +379,36 @@ impl<'m> Engine<'m> {
         self.pool.debug_set_budget(pages);
     }
 
+    /// Trace events dropped by the recorder's bounded channel (0 when
+    /// none is installed).
+    pub fn dropped_events(&self) -> u64 {
+        self.rec.as_ref().map_or(0, |r| r.dropped_events())
+    }
+
+    /// The live stats surface: engine counters, occupancy/KV gauges,
+    /// and the always-on step/decode-batch histograms, as one mergeable
+    /// [`Snapshot`] (the `{"type":"stats"}` control response body and
+    /// the exit dump in serve/bench reports).
+    pub fn snapshot(&self) -> Snapshot {
+        let mut s = Snapshot::new();
+        s.counters.add("steps", self.stats.steps);
+        s.counters.add("decoded_tokens", self.stats.decoded_tokens);
+        s.counters.add("prefill_tokens", self.stats.prefill_tokens);
+        s.counters.add("prefill_chunks", self.stats.prefill_chunks);
+        s.counters.add("retired", self.stats.retired);
+        s.gauge("queued", self.queued() as f64);
+        s.gauge("active", self.active() as f64);
+        s.gauge("free_slots", self.free_slots() as f64);
+        let (in_use, reserved, budget) = self.kv_pages();
+        s.gauge("kv_in_use_pages", in_use as f64);
+        s.gauge("kv_reserved_pages", reserved as f64);
+        s.gauge("kv_budget_pages", budget as f64);
+        s.gauge("kv_resident_bytes", self.kv_resident_bytes() as f64);
+        s.hist("step_ms", self.step_ms.clone());
+        s.hist("decode_batch", self.decode_batch.clone());
+        s
+    }
+
     /// True when no request is queued or in flight.
     pub fn is_idle(&self) -> bool {
         self.queue.is_empty() && self.active() == 0
@@ -354,10 +424,36 @@ impl<'m> Engine<'m> {
     /// of tokens decoded this step — 0 with [`Engine::is_idle`] false
     /// means the step went to prefill (or everything retired).
     pub fn step(&mut self) -> Result<usize> {
+        let busy = !self.is_idle();
+        let t0 = self.clock.now_ms();
         self.apply_aborts()?;
         self.admit()?;
         self.prefill_phase()?;
-        self.decode_phase()
+        let decoded = self.decode_phase()?;
+        if busy {
+            let dt = self.clock.now_ms() - t0;
+            self.step_ms.record(dt);
+            if decoded > 0 {
+                self.decode_batch.record(decoded as f64);
+            }
+            if let Some(r) = &self.rec {
+                let (in_use, reserved, budget) = self.kv_pages();
+                r.gauge(
+                    "engine_step",
+                    "",
+                    vec![
+                        ("queued", Json::Num(self.queue.len() as f64)),
+                        ("active", Json::Num(self.active() as f64)),
+                        ("decoded", Json::Num(decoded as f64)),
+                        ("kv_in_use_pages", Json::Num(in_use as f64)),
+                        ("kv_reserved_pages", Json::Num(reserved as f64)),
+                        ("kv_budget_pages", Json::Num(budget as f64)),
+                        ("step_ms", Json::Num(dt)),
+                    ],
+                );
+            }
+        }
+        Ok(decoded)
     }
 
     /// Run until idle; drain the responses.
@@ -376,15 +472,19 @@ impl<'m> Engine<'m> {
         // queued: respond without ever admitting
         let aborts = std::mem::take(&mut self.aborts);
         let mut remaining = VecDeque::new();
+        let now = self.clock.now_ms();
         for q in std::mem::take(&mut self.queue) {
             if aborts.contains(&q.req.id) {
+                if let Some(r) = &self.rec {
+                    r.point("aborted", &q.req.id, vec![("queued", Json::Bool(true))]);
+                }
                 self.push_response(ServeResponse {
                     id: q.req.id,
                     text: String::new(),
                     prompt_tokens: q.tokens.len(),
                     completion_tokens: 0,
                     finish: FinishReason::Aborted,
-                    latency_ms: q.submitted.elapsed().as_secs_f64() * 1e3,
+                    latency_ms: now - q.submitted,
                     error: None,
                 });
             } else {
@@ -436,6 +536,18 @@ impl<'m> Engine<'m> {
                 stop_id,
                 submitted,
             });
+            if let Some(r) = &self.rec {
+                let slot = self.slots[si].as_ref().expect("slot just admitted");
+                r.begin(
+                    "request",
+                    &slot.req.id,
+                    vec![
+                        ("slot", Json::Num(si as f64)),
+                        ("reserved_pages", Json::Num(pages as f64)),
+                        ("prompt_tokens", Json::Num(slot.prompt_len as f64)),
+                    ],
+                );
+            }
         }
         Ok(())
     }
@@ -486,6 +598,14 @@ impl<'m> Engine<'m> {
             budget -= c;
             self.stats.prefill_tokens += c as u64;
             self.stats.prefill_chunks += 1;
+            if let Some(r) = &self.rec {
+                let slot = self.slots[si].as_ref().expect("slot just fed");
+                r.point(
+                    "prefill_chunk",
+                    &slot.req.id,
+                    vec![("tokens", Json::Num(c as f64)), ("fed", Json::Num(target as f64))],
+                );
+            }
         }
         for (si, msg) in failed {
             self.retire(si, FinishReason::Error, Some(msg))?;
@@ -568,13 +688,26 @@ impl<'m> Engine<'m> {
         let mut slot = self.slots[si].take().context("retiring an empty slot")?;
         slot.block.release(&mut self.pool);
         self.pool.release_reservation(slot.reserved_pages);
+        let completion_tokens = slot.tokens.len() - slot.prompt_len;
+        let latency_ms = self.clock.now_ms() - slot.submitted;
+        if let Some(r) = &self.rec {
+            r.end(
+                "request",
+                &slot.req.id,
+                vec![
+                    ("finish", Json::Str(finish.label().to_string())),
+                    ("completion_tokens", Json::Num(completion_tokens as f64)),
+                    ("latency_ms", Json::Num(latency_ms)),
+                ],
+            );
+        }
         let resp = ServeResponse {
             id: slot.req.id.clone(),
             text: tokenizer::decode(&slot.tokens[slot.prompt_len..]),
             prompt_tokens: slot.prompt_len,
-            completion_tokens: slot.tokens.len() - slot.prompt_len,
+            completion_tokens,
             finish,
-            latency_ms: slot.submitted.elapsed().as_secs_f64() * 1e3,
+            latency_ms,
             error,
         };
         self.push_response(resp);

@@ -60,7 +60,7 @@ pub mod request;
 pub use batch::ServeModel;
 pub use bench::{
     measure_sparse_format, run_artifact_bench, run_net_bench, run_paged_bench, run_serve_bench,
-    ArtifactBenchReport, FormatStats, NetBenchConfig, NetBenchReport, PagedBenchReport,
+    ArtifactBenchReport, BenchObs, FormatStats, NetBenchConfig, NetBenchReport, PagedBenchReport,
     ServeBenchConfig, ServeBenchReport,
 };
 pub use engine::{Engine, EngineConfig, EngineStats};

@@ -32,7 +32,8 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::metrics::Counters;
+use crate::metrics::{Counters, Snapshot};
+use crate::obs::{Recorder, SharedClock};
 use crate::ser::json::Json;
 use crate::serve::engine::{Engine, EngineConfig, EngineStats};
 use crate::serve::request::{FinishReason, ServeRequest, ServeResponse};
@@ -91,6 +92,10 @@ pub struct NetReport {
     pub counters: Counters,
     pub kv_in_use_pages: usize,
     pub kv_reserved_pages: usize,
+    /// The exit-time stats surface: engine counters/gauges/histograms
+    /// merged with the socket counters — the same shape the live
+    /// `{"type":"stats"}` control request returns.
+    pub snapshot: Snapshot,
 }
 
 impl NetReport {
@@ -111,10 +116,14 @@ impl NetReport {
 struct EventLog {
     out: std::io::BufWriter<std::fs::File>,
     seq: u64,
+    /// Timestamp source — the engine's clock, so `t_ms` here, trace
+    /// events, and response `latency_ms` share one domain (a fake clock
+    /// pins all three at once).
+    clock: SharedClock,
 }
 
 impl EventLog {
-    fn create(path: &std::path::Path) -> Result<EventLog> {
+    fn create(path: &std::path::Path, clock: SharedClock) -> Result<EventLog> {
         if let Some(parent) = path.parent() {
             if !parent.as_os_str().is_empty() {
                 std::fs::create_dir_all(parent)?;
@@ -122,11 +131,12 @@ impl EventLog {
         }
         let file = std::fs::File::create(path)
             .with_context(|| format!("creating event log {}", path.display()))?;
-        Ok(EventLog { out: std::io::BufWriter::new(file), seq: 0 })
+        Ok(EventLog { out: std::io::BufWriter::new(file), seq: 0, clock })
     }
 
     fn write(&mut self, mut obj: BTreeMap<String, Json>) {
         obj.insert("seq".to_string(), Json::Num(self.seq as f64));
+        obj.insert("t_ms".to_string(), Json::Num((self.clock.now_ms() * 1e3).round() / 1e3));
         self.seq += 1;
         let _ = writeln!(self.out, "{}", Json::Obj(obj).to_string_compact());
         let _ = self.out.flush();
@@ -201,8 +211,11 @@ impl NetServer {
         stop: Arc<AtomicBool>,
     ) -> Result<NetReport> {
         let engine = Engine::new(model, ecfg)?;
+        // One timestamp domain for the whole front end: the event log
+        // and the conn spans read the engine's clock.
+        let clock = ecfg.clock.clone().unwrap_or_default();
         let log = match &self.cfg.event_log {
-            Some(path) => Some(EventLog::create(path)?),
+            Some(path) => Some(EventLog::create(path, clock)?),
             None => None,
         };
         let (intake_tx, intake_rx) = mpsc::sync_channel::<ConnEvent>(INTAKE_CAP);
@@ -244,6 +257,7 @@ impl NetServer {
             next_auto: 0,
             counters: Counters::new(),
             log,
+            rec: ecfg.recorder.clone(),
         };
         let result = d.run_loop(&intake_rx, &stop);
         // Unblock and join the accept thread regardless of how the loop
@@ -256,11 +270,14 @@ impl NetServer {
         result?;
 
         let (in_use, reserved, _) = d.engine.kv_pages();
+        let mut snapshot = d.engine.snapshot();
+        snapshot.counters.merge(&d.counters);
         Ok(NetReport {
             engine: d.engine.stats,
             counters: d.counters,
             kv_in_use_pages: in_use,
             kv_reserved_pages: reserved,
+            snapshot,
         })
     }
 }
@@ -279,6 +296,7 @@ struct Dispatch<'c, 'm> {
     next_auto: u64,
     counters: Counters,
     log: Option<EventLog>,
+    rec: Option<Recorder>,
 }
 
 impl Dispatch<'_, '_> {
@@ -420,6 +438,9 @@ impl Dispatch<'_, '_> {
         let timeout = self.cfg.conn_timeout;
         thread::spawn(move || conn::reader_loop(conn, read_half, max_line, timeout, reader_tx));
         self.conns.insert(conn, ConnState { stream, writer_tx, in_flight: BTreeSet::new() });
+        if let Some(r) = &self.rec {
+            r.begin("conn", &format!("c{conn}"), vec![("peer", Json::Str(peer.to_string()))]);
+        }
     }
 
     fn on_line(&mut self, conn: ConnId, line: String) {
@@ -430,6 +451,20 @@ impl Dispatch<'_, '_> {
             return;
         }
         self.tee_in(conn, &line);
+        // Control requests (`{"type": ...}`) are answered here, before
+        // request parsing — the request whitelist rejects a `type` key,
+        // and replay skips these lines for the same reason.
+        if let Some(kind) = control_type(&line) {
+            self.counters.incr("control_requests");
+            if kind == "stats" {
+                self.counters.incr("stats_requests");
+                let reply = self.stats_line();
+                self.respond_line(conn, reply);
+            } else {
+                self.error_line(conn, format!("unknown control request type '{kind}'"));
+            }
+            return;
+        }
         self.counters.incr("requests_in");
         match ServeRequest::from_json_line_checked(&line, self.cfg.max_line) {
             Ok(req) => {
@@ -536,6 +571,16 @@ impl Dispatch<'_, '_> {
         }
         self.counters.incr("closed");
         self.tee_event("close", Some(conn), reason);
+        if let Some(r) = &self.rec {
+            r.end(
+                "conn",
+                &format!("c{conn}"),
+                vec![
+                    ("reason", Json::Str(reason.to_string())),
+                    ("aborted", Json::Num(aborted as f64)),
+                ],
+            );
+        }
     }
 
     fn tee_in(&mut self, conn: ConnId, line: &str) {
@@ -555,6 +600,33 @@ impl Dispatch<'_, '_> {
             log.event(event, conn, info);
         }
     }
+
+    /// The `{"type":"stats"}` reply: the engine snapshot merged with the
+    /// front end's socket counters and connection gauge. Read-only — the
+    /// engine is neither stepped nor mutated, so co-batched streams are
+    /// not perturbed.
+    fn stats_line(&self) -> String {
+        let mut snap = self.engine.snapshot();
+        snap.counters.merge(&self.counters);
+        snap.gauge("open_conns", self.conns.len() as f64);
+        snap.gauge("dropped_events", self.engine.dropped_events() as f64);
+        let mut obj = BTreeMap::new();
+        obj.insert("type".to_string(), Json::Str("stats".to_string()));
+        obj.insert("stats".to_string(), snap.to_json());
+        Json::Obj(obj).to_string_compact()
+    }
+}
+
+/// A control line is a JSON object carrying a `"type"` key — requests
+/// never have one (the request parser's key whitelist rejects it). The
+/// substring pre-filter keeps the common request path from parsing the
+/// line twice.
+fn control_type(line: &str) -> Option<String> {
+    if !line.contains("\"type\"") {
+        return None;
+    }
+    let v = Json::parse(line).ok()?;
+    Some(v.get("type")?.as_str()?.to_string())
 }
 
 fn rejection_response(id: String, error: String) -> ServeResponse {

@@ -11,6 +11,11 @@
 //! independent of batch composition and admission timing; replay is the
 //! test that the *front end* preserved that property.
 //!
+//! With an injected clock (`EngineConfig::clock`, `obs::FakeClock`) even
+//! `latency_ms` is deterministic, so the `_raw` variants compare lines
+//! verbatim with no special-casing — the regression test in
+//! `rust/tests/net_serve.rs` pins this.
+//!
 //! Requests that never got a delivered response (client disconnected
 //! mid-stream, writer overflow) have no `out` record; replay still runs
 //! their inbound lines but the contract only compares keys present in the
@@ -91,6 +96,20 @@ pub fn inbound_lines(entries: &[LogEntry]) -> Vec<(u64, String)> {
 /// Connection-level error lines (empty id) are not per-request traffic
 /// and are excluded.
 pub fn outbound_transcripts(entries: &[LogEntry]) -> Result<BTreeMap<String, String>> {
+    outbound_transcripts_inner(entries, true)
+}
+
+/// [`outbound_transcripts`] with the lines verbatim, `latency_ms`
+/// included — exact comparison for captures taken under an injected
+/// clock.
+pub fn outbound_transcripts_raw(entries: &[LogEntry]) -> Result<BTreeMap<String, String>> {
+    outbound_transcripts_inner(entries, false)
+}
+
+fn outbound_transcripts_inner(
+    entries: &[LogEntry],
+    canonicalize: bool,
+) -> Result<BTreeMap<String, String>> {
     let mut out = BTreeMap::new();
     for e in entries {
         if e.dir.as_deref() != Some("out") {
@@ -102,7 +121,9 @@ pub fn outbound_transcripts(entries: &[LogEntry]) -> Result<BTreeMap<String, Str
         if id.is_empty() {
             continue;
         }
-        out.insert(format!("c{conn}:{id}"), canonicalize_response_line(line)?);
+        let rendered =
+            if canonicalize { canonicalize_response_line(line)? } else { line.to_string() };
+        out.insert(format!("c{conn}:{id}"), rendered);
     }
     Ok(out)
 }
@@ -111,12 +132,15 @@ fn drain_into(
     engine: &mut Engine<'_>,
     owners: &mut BTreeMap<String, (u64, String)>,
     out: &mut BTreeMap<String, String>,
+    canonicalize: bool,
 ) -> Result<()> {
     for resp in engine.take_responses() {
         let engine_id = resp.id.clone();
         if let Some((conn, client_id)) = owners.remove(&engine_id) {
             let r = unmangle_response(resp, &engine_id, &client_id);
-            out.insert(format!("c{conn}:{client_id}"), canonicalize_response_line(&r.to_json_line())?);
+            let line = r.to_json_line();
+            let rendered = if canonicalize { canonicalize_response_line(&line)? } else { line };
+            out.insert(format!("c{conn}:{client_id}"), rendered);
         }
     }
     Ok(())
@@ -130,6 +154,26 @@ pub fn replay_inbound(
     model: &ServeModel<'_>,
     ecfg: &EngineConfig,
     inbound: &[(u64, String)],
+) -> Result<BTreeMap<String, String>> {
+    replay_inbound_inner(model, ecfg, inbound, true)
+}
+
+/// [`replay_inbound`] with verbatim response lines. Pair with
+/// [`outbound_transcripts_raw`] and a shared injected clock to assert
+/// live and replay agree on every byte, `latency_ms` included.
+pub fn replay_inbound_raw(
+    model: &ServeModel<'_>,
+    ecfg: &EngineConfig,
+    inbound: &[(u64, String)],
+) -> Result<BTreeMap<String, String>> {
+    replay_inbound_inner(model, ecfg, inbound, false)
+}
+
+fn replay_inbound_inner(
+    model: &ServeModel<'_>,
+    ecfg: &EngineConfig,
+    inbound: &[(u64, String)],
+    canonicalize: bool,
 ) -> Result<BTreeMap<String, String>> {
     let mut engine = Engine::new(model, ecfg)?;
     let queue_cap = ecfg.queue_cap.max(1);
@@ -154,7 +198,7 @@ pub fn replay_inbound(
         // room, stepping the engine meanwhile.
         while engine.queued() >= queue_cap {
             engine.step()?;
-            drain_into(&mut engine, &mut owners, &mut out)?;
+            drain_into(&mut engine, &mut owners, &mut out, canonicalize)?;
         }
         let engine_id = format!("c{conn}:{client_id}");
         req.id = engine_id.clone();
@@ -163,9 +207,9 @@ pub fn replay_inbound(
     }
     while !engine.is_idle() {
         engine.step()?;
-        drain_into(&mut engine, &mut owners, &mut out)?;
+        drain_into(&mut engine, &mut owners, &mut out, canonicalize)?;
     }
-    drain_into(&mut engine, &mut owners, &mut out)?;
+    drain_into(&mut engine, &mut owners, &mut out, canonicalize)?;
     Ok(out)
 }
 

@@ -15,8 +15,12 @@ use fistapruner::config::{repo_root, ModelSpec, Presets};
 use fistapruner::eval::generate::{generate, GenOptions};
 use fistapruner::model::init::init_params;
 use fistapruner::model::params::ModelParams;
+use fistapruner::obs::SharedClock;
 use fistapruner::ser::json::Json;
-use fistapruner::serve::net::replay::{inbound_lines, outbound_transcripts, read_event_log, replay_inbound};
+use fistapruner::serve::net::replay::{
+    inbound_lines, outbound_transcripts, outbound_transcripts_raw, read_event_log,
+    replay_inbound, replay_inbound_raw,
+};
 use fistapruner::serve::{EngineConfig, NetConfig, NetReport, NetServer, ServeModel, ServeRequest};
 use fistapruner::tensor::par;
 
@@ -217,6 +221,141 @@ fn event_log_replay_reproduces_every_delivered_response() {
         assert_eq!(
             replay_line, live_line,
             "replayed transcript for {key} must match the live tee exactly"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Send one `{"type":"stats"}` control line and parse the reply.
+fn query_stats(addr: SocketAddr) -> Json {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    writeln!(stream, "{{\"type\":\"stats\"}}").unwrap();
+    stream.flush().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    let n = reader.read_line(&mut line).unwrap();
+    assert!(n > 0, "server closed the stats connection without replying");
+    Json::parse(line.trim()).unwrap()
+}
+
+#[test]
+fn stats_control_request_is_live_and_does_not_perturb_streams() {
+    const REQS: usize = 2;
+    const TOKENS: usize = 12;
+    let (spec, params) = load("topt-s1", 79);
+    let ecfg = EngineConfig { max_batch: 2, queue_cap: 8, ..EngineConfig::default() };
+    let (report, (reqs, resps, after)) =
+        with_server(&spec, &params, &ecfg, NetConfig::default(), |addr| {
+            std::thread::scope(|s| {
+                let gen = s.spawn(move || {
+                    let reqs: Vec<ServeRequest> = (0..REQS)
+                        .map(|j| {
+                            mk(&format!("r{j}"), &format!("stats {j}: the "), TOKENS, j as u64)
+                        })
+                        .collect();
+                    let resps = run_client(addr, &reqs);
+                    (reqs, resps)
+                });
+                // poke the stats surface while the streams are (likely)
+                // in flight: any instant must yield a well-formed reply
+                let mid = query_stats(addr);
+                assert_eq!(mid.get("type").and_then(|v| v.as_str()), Some("stats"));
+                let (reqs, resps) = gen.join().unwrap();
+                // and again after both requests retired, when the
+                // counters have settled to exact values
+                (reqs, resps, query_stats(addr))
+            })
+        });
+
+    // the co-batched streams are untouched: still byte-identical to solo
+    // eval::generate (responses may arrive in any order across ids)
+    for req in &reqs {
+        let resp = resps
+            .iter()
+            .find(|v| v.get("id").and_then(|x| x.as_str()) == Some(&req.id))
+            .unwrap_or_else(|| panic!("no response for {}", req.id));
+        let want = generate(
+            &spec,
+            &params,
+            &req.prompt,
+            &GenOptions { max_tokens: TOKENS, temperature: 0.0, seed: req.seed },
+        );
+        assert_eq!(
+            resp.get("text").and_then(|x| x.as_str()),
+            Some(want.as_str()),
+            "{}: a stats probe must not perturb served bytes",
+            req.id
+        );
+    }
+
+    // the settled snapshot: engine counters, KV gauges, and the decode
+    // histogram all present with exact values
+    let snap = after.get("stats").expect("stats reply carries a snapshot");
+    let counters = snap.get("counters").expect("counters section");
+    assert_eq!(counters.get("retired").and_then(|v| v.as_f64()), Some(REQS as f64));
+    assert_eq!(
+        counters.get("decoded_tokens").and_then(|v| v.as_f64()),
+        Some((REQS * TOKENS) as f64)
+    );
+    let gauges = snap.get("gauges").expect("gauges section");
+    assert_eq!(gauges.get("kv_in_use_pages").and_then(|v| v.as_f64()), Some(0.0));
+    assert_eq!(gauges.get("dropped_events").and_then(|v| v.as_f64()), Some(0.0));
+    assert!(gauges.get("kv_budget_pages").and_then(|v| v.as_f64()).unwrap_or(0.0) > 0.0);
+    let hist = snap.get("histograms").and_then(|h| h.get("decode_batch"));
+    let hist = hist.expect("decode_batch histogram");
+    assert!(
+        hist.get("count").and_then(|v| v.as_f64()).unwrap_or(0.0) >= 1.0,
+        "decode steps must have been recorded: {hist:?}"
+    );
+    // control lines are accounted separately from requests
+    assert_eq!(report.counters.get("stats_requests"), 2);
+    assert_eq!(report.counters.get("requests_in"), REQS as u64);
+    assert_eq!(report.counters.get("responses_out"), REQS as u64);
+}
+
+#[test]
+fn injected_clock_makes_replay_exact_including_latency() {
+    const REQS: usize = 3;
+    const TOKENS: usize = 8;
+    let (spec, params) = load("topt-s1", 83);
+    let dir = std::env::temp_dir().join(format!("fp_netclock_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let log_path = dir.join("events.jsonl");
+
+    // a pinned fake clock shared by the live server and the replay: with
+    // no wall time anywhere, even latency_ms must reproduce exactly, so
+    // the raw (non-canonicalized) comparison passes on every byte
+    let (clock, fake) = SharedClock::fake();
+    fake.set_ms(42.0);
+    let ecfg = EngineConfig {
+        max_batch: 2,
+        queue_cap: 4,
+        clock: Some(clock),
+        ..EngineConfig::default()
+    };
+    let ncfg = NetConfig { event_log: Some(log_path.clone()), ..NetConfig::default() };
+    let (_report, ()) = with_server(&spec, &params, &ecfg, ncfg, |addr| {
+        let reqs: Vec<ServeRequest> = (0..REQS)
+            .map(|j| mk(&format!("r{j}"), &format!("clock {j}: a "), TOKENS, j as u64))
+            .collect();
+        let _ = run_client(addr, &reqs);
+    });
+
+    let entries = read_event_log(&log_path).unwrap();
+    let live = outbound_transcripts_raw(&entries).unwrap();
+    assert_eq!(live.len(), REQS);
+    for line in live.values() {
+        assert!(line.contains("latency_ms"), "raw transcripts keep latency_ms: {line}");
+    }
+    let inbound = inbound_lines(&entries);
+    let model = ServeModel::dense(&spec, &params).unwrap();
+    let replayed = replay_inbound_raw(&model, &ecfg, &inbound).unwrap();
+    for (key, live_line) in &live {
+        assert_eq!(
+            replayed.get(key),
+            Some(live_line),
+            "{key}: with an injected clock replay must match verbatim, latency included"
         );
     }
     std::fs::remove_dir_all(&dir).ok();

@@ -1,0 +1,112 @@
+//! The tracing determinism contract: with a recorder installed and a
+//! shared injected clock, a traced engine run must serve byte-identical
+//! response lines — `latency_ms` included — to the same run untraced,
+//! across batch widths and kernel thread counts. Tracing observes the
+//! machine, it never gates it (docs/ARCHITECTURE.md §Observability).
+
+use fistapruner::config::{repo_root, ModelSpec, Presets};
+use fistapruner::model::init::init_params;
+use fistapruner::model::params::ModelParams;
+use fistapruner::obs::{Phase, Recorder, SharedClock};
+use fistapruner::serve::{Engine, EngineConfig, ServeModel, ServeRequest};
+use fistapruner::tensor::par;
+
+const N_REQS: usize = 5;
+const TOKENS: usize = 10;
+
+fn load(model: &str, seed: u64) -> (ModelSpec, ModelParams) {
+    let presets = Presets::load(&repo_root().unwrap()).unwrap();
+    let spec = presets.model(model).unwrap().clone();
+    let params = init_params(&spec, seed);
+    (spec, params)
+}
+
+fn mk_reqs() -> Vec<ServeRequest> {
+    (0..N_REQS)
+        .map(|i| ServeRequest {
+            id: format!("r{i}"),
+            prompt: format!("trace {i}: the "),
+            max_tokens: TOKENS,
+            temperature: 0.0,
+            seed: i as u64,
+            stop: None,
+        })
+        .collect()
+}
+
+/// Submit everything, run to idle, return response JSON lines by id.
+fn run(model: &ServeModel<'_>, cfg: &EngineConfig) -> Vec<String> {
+    let mut eng = Engine::new(model, cfg).unwrap();
+    for r in mk_reqs() {
+        eng.submit(r).unwrap();
+    }
+    let mut out = eng.run().unwrap();
+    out.sort_by(|a, b| a.id.cmp(&b.id));
+    out.iter().map(|r| r.to_json_line()).collect()
+}
+
+#[test]
+fn traced_run_serves_bitwise_identical_bytes() {
+    let (spec, params) = load("topt-s1", 91);
+    let model = ServeModel::dense(&spec, &params).unwrap();
+    let dir = std::env::temp_dir().join(format!("fp_trace_parity_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    for (batch, threads) in [(1usize, 1usize), (1, 4), (4, 1), (4, 4)] {
+        par::set_threads(threads);
+        // One fake clock shared by both runs: every timestamp — and
+        // therefore every latency_ms a client sees — is pinned, so the
+        // comparison below really is full-line bitwise equality.
+        let (clock, fake) = SharedClock::fake();
+        fake.set_ms(100.0);
+        let plain = run(
+            &model,
+            &EngineConfig {
+                max_batch: batch,
+                queue_cap: N_REQS,
+                clock: Some(clock.clone()),
+                ..EngineConfig::default()
+            },
+        );
+        let path = dir.join(format!("b{batch}_t{threads}.jsonl"));
+        let (rec, writer) = Recorder::to_file(&path, clock.clone()).unwrap();
+        let traced = run(
+            &model,
+            &EngineConfig {
+                max_batch: batch,
+                queue_cap: N_REQS,
+                clock: Some(clock),
+                recorder: Some(rec),
+                ..EngineConfig::default()
+            },
+        );
+        let stats = writer.finish().unwrap();
+        par::set_threads(0);
+
+        assert_eq!(
+            plain, traced,
+            "batch={batch} threads={threads}: tracing must not change a served byte"
+        );
+        assert_eq!(stats.dropped, 0, "batch={batch} threads={threads}: no events may drop");
+        assert!(stats.written > 0, "the traced run must actually emit events");
+
+        // Capture sanity: one request span per request, properly paired,
+        // and the waterfall fold reconstructs every request.
+        let events = fistapruner::obs::trace::load_trace(&path).unwrap();
+        let spans = |ph: Phase| {
+            events.iter().filter(|e| e.phase == ph && e.name == "request").count()
+        };
+        assert_eq!(spans(Phase::Begin), N_REQS, "batch={batch} threads={threads}");
+        assert_eq!(spans(Phase::End), N_REQS, "batch={batch} threads={threads}");
+        let rows = fistapruner::obs::trace::request_waterfalls(&events);
+        assert_eq!(rows.len(), N_REQS);
+        for row in &rows {
+            assert_eq!(row.completion_tokens, TOKENS, "{}", row.id);
+            assert_eq!(row.finish, "length", "{}", row.id);
+        }
+        let (written, dropped) =
+            fistapruner::obs::trace::trace_end_counts(&events).expect("trace_end line");
+        assert_eq!(written, stats.written);
+        assert_eq!(dropped, 0);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

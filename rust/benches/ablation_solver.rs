@@ -1,61 +1,134 @@
-//! Solver ablation (paper §2's argument for FISTA over ADMM and over
-//! plain ISTA): objective value and output error reached per compute
-//! budget, on real operator Gram matrices.
+//! Solver-vs-solver ablation grid (paper §2's argument for FISTA over
+//! ADMM, extended with Frank-Wolfe): every `LayerSolver` drives the same
+//! Algorithm-1 pipeline end-to-end — prune → report → perplexity — so the
+//! comparison covers solution quality (ppl, relative error), convergence
+//! cost (inner iterations), and wall clock on identical inputs.
+//!
+//! Emits artifacts/bench_out/ablation_solver.csv plus BENCH_solver.json at
+//! the repo root (CI uploads it), and exits non-zero if any solver's
+//! output violates the exact target sparsity — the structural guarantee
+//! every solver must inherit from Algorithm 1's rounding step.
 //!
 //!     cargo bench --bench ablation_solver
+//!     FP_BENCH_FAST=1 cargo bench --bench ablation_solver   # CI smoke
 
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use fistapruner::bench_support::{fast_mode, Lab};
+use fistapruner::config::{SolverKind, Sparsity};
 use fistapruner::metrics::{csv::CsvWriter, TableBuilder};
-use fistapruner::pruner::admm::admm_solve;
-use fistapruner::pruner::fista::fista_solve;
-use fistapruner::tensor::{ops, Tensor};
-use fistapruner::util::{timer::timed, Pcg64};
+use fistapruner::pruner::{satisfies_sparsity, Method};
+use fistapruner::ser::Json;
 
 fn main() -> anyhow::Result<()> {
-    let root = fistapruner::config::repo_root()?;
-    let mut rng = Pcg64::seeded(5);
-    let (m, n, p) = (512usize, 128usize, 2048usize);
-    let w_dense = Tensor::from_vec(vec![m, n], rng.normal_vec(m * n, 1.0));
-    let x = Tensor::from_vec(vec![n, p], rng.normal_vec(n * p, 0.5));
-    let a = ops::matmul_nt(&x, &x);
-    let b = ops::matmul(&w_dense, &a);
-    let l_max = fistapruner::linalg::power_iteration(&a, 64, 1.02);
-    let lam = l_max * 1e-3;
-    let w0 = Tensor::zeros(vec![m, n]);
-    let obj = |w: &Tensor| {
-        0.5 * ops::quad_obj(&a, &b, w)
-            + lam * w.data().iter().map(|&v| v.abs() as f64).sum::<f64>()
+    let mut lab = Lab::new()?;
+    let model = "topt-s1";
+    let corpus = "wikitext-syn";
+    let sparsities: Vec<Sparsity> = if fast_mode() {
+        vec![Sparsity::Unstructured(0.5), Sparsity::Semi(2, 4)]
+    } else {
+        vec![Sparsity::Unstructured(0.5), Sparsity::Unstructured(0.7), Sparsity::Semi(2, 4)]
     };
+    let solvers = [SolverKind::Fista, SolverKind::Admm, SolverKind::FrankWolfe];
 
+    let spec = lab.presets.model(model)?.clone();
+    let dense = lab.trained_or_init(model, corpus)?;
+    let calib = lab.calib(corpus, lab.calib_samples(), lab.presets.calib_seed)?;
+    let ppl_dense = lab.ppl(model, &dense, corpus)?;
+
+    let csv_path = lab.bench_out().join("ablation_solver.csv");
     let mut csv = CsvWriter::create(
-        &root.join("artifacts/bench_out/ablation_solver.csv"),
-        &["solver", "iters", "objective", "seconds"],
+        &csv_path,
+        &["solver", "sparsity", "ppl", "mean_rel_error", "solver_iters", "seconds"],
     )?;
-    let mut t = TableBuilder::new(
-        &format!("solver ablation ({m}x{n}, p={p}): objective after K iterations"),
-        &["solver", "K", "objective (lower=better)", "seconds"],
-    );
-    for k in [5usize, 10, 20, 40] {
-        // FISTA (Nesterov-accelerated, the paper's choice)
-        let (wf, tf) = timed(|| fista_solve(&a, &b, &w0, lam, l_max, k, 0.0).0);
-        // ISTA = FISTA without acceleration: emulate by coef=0 → run
-        // fista_solve with t frozen — here implemented as 1-iteration
-        // restarts, which collapses the momentum term every step.
-        let (wi, ti) = timed(|| {
-            let mut w = w0.clone();
-            for _ in 0..k {
-                w = fista_solve(&a, &b, &w, lam, l_max, 1, 0.0).0;
+    let mut rows_json: Vec<Json> = Vec::new();
+    let mut violations: Vec<String> = Vec::new();
+
+    for &sp in &sparsities {
+        let mut t = TableBuilder::new(
+            &format!("solver grid ({model}/{corpus}, {}; dense ppl {ppl_dense:.2})", sp.label()),
+            &["solver", "ppl", "mean rel err", "iters", "seconds"],
+        );
+        for kind in solvers {
+            let mut opts = lab.default_prune_options();
+            opts.sparsity = sp;
+            opts.solver = kind;
+            if fast_mode() {
+                opts.max_rounds = Some(4);
             }
-            w
-        });
-        // ADMM (ρ = 0.1·L, the standard heuristic)
-        let (wa, ta) = timed(|| admm_solve(&a, &b, &w0, lam, l_max * 0.1, k, 0.0).unwrap().0);
-        for (name, w, secs) in [("FISTA", &wf, tf), ("ISTA", &wi, ti), ("ADMM", &wa, ta)] {
-            let o = obj(w);
-            csv.write_row(&[name, &k.to_string(), &format!("{o:.1}"), &format!("{secs:.3}")])?;
-            t.row(vec![name.into(), k.to_string(), format!("{o:.1}"), format!("{secs:.3}")]);
+            let t0 = Instant::now();
+            let (pruned, report) =
+                lab.prune(model, &dense, &calib, Method::Solver(kind), &opts)?;
+            let secs = t0.elapsed().as_secs_f64();
+
+            // Structural gate: every pruned operator must satisfy the
+            // exact target pattern, whatever the solver.
+            for layer in 0..spec.layers {
+                for op in fistapruner::model::ops::pruned_ops(&spec) {
+                    let w = pruned.req(&format!("l{layer}.{}", op.name))?;
+                    if !satisfies_sparsity(w, sp) {
+                        violations.push(format!(
+                            "{} {} l{layer}.{}",
+                            kind.name(),
+                            sp.label(),
+                            op.name
+                        ));
+                    }
+                }
+            }
+
+            let ppl = lab.ppl(model, &pruned, corpus)?;
+            let rel = report.mean_rel_error();
+            let iters = report.total_solver_iters();
+            csv.write_row(&[
+                kind.name().to_string(),
+                sp.label(),
+                format!("{ppl:.4}"),
+                format!("{rel:.6}"),
+                iters.to_string(),
+                format!("{secs:.3}"),
+            ])?;
+            t.row(vec![
+                kind.name().to_string(),
+                TableBuilder::f(ppl),
+                format!("{rel:.4}"),
+                iters.to_string(),
+                format!("{secs:.3}"),
+            ]);
+            let mut row = BTreeMap::new();
+            row.insert("solver".to_string(), Json::Str(kind.name().to_string()));
+            row.insert("sparsity".to_string(), Json::Str(sp.label()));
+            row.insert("ppl".to_string(), Json::Num(ppl));
+            row.insert("mean_rel_error".to_string(), Json::Num(rel));
+            row.insert("mean_sparsity".to_string(), Json::Num(report.mean_sparsity()));
+            row.insert("solver_iters".to_string(), Json::Num(iters as f64));
+            row.insert("seconds".to_string(), Json::Num(secs));
+            rows_json.push(Json::Obj(row));
         }
+        t.print();
     }
-    t.print();
-    println!("expected shape: FISTA ≤ ISTA at every K (acceleration); ADMM competitive on objective but pays a factorization + per-iter solves");
+
+    let mut top = BTreeMap::new();
+    top.insert("model".to_string(), Json::Str(model.to_string()));
+    top.insert("corpus".to_string(), Json::Str(corpus.to_string()));
+    top.insert("ppl_dense".to_string(), Json::Num(ppl_dense));
+    top.insert("fast_mode".to_string(), Json::Bool(fast_mode()));
+    top.insert("rows".to_string(), Json::Arr(rows_json));
+    top.insert(
+        "sparsity_violations".to_string(),
+        Json::Arr(violations.iter().map(|v| Json::Str(v.clone())).collect()),
+    );
+    let json_path = fistapruner::config::repo_root()?.join("BENCH_solver.json");
+    std::fs::write(&json_path, Json::Obj(top).to_string_compact() + "\n")?;
+    println!("csv: {}", csv_path.display());
+    println!("wrote {}", json_path.display());
+    println!("expected shape: fista lowest rel err per budget; admm competitive after its factorization; fw sparsest iterates pre-rounding");
+
+    anyhow::ensure!(
+        violations.is_empty(),
+        "exact-sparsity violations: {}",
+        violations.join(", ")
+    );
     Ok(())
 }

@@ -27,7 +27,7 @@ fn main() -> anyhow::Result<()> {
             error_correction: correction,
             ..Default::default()
         };
-        let (pruned, _) = lab.prune(model, &dense, &calib, Method::Fista, &opts)?;
+        let (pruned, _) = lab.prune(model, &dense, &calib, Method::fista(), &opts)?;
         layer_errors(lab.require_session()?, &lab.presets, &spec, &dense, &pruned, &probe)
     };
     let with_c = run(&mut lab, true)?;

@@ -19,7 +19,7 @@ fn main() -> anyhow::Result<()> {
         &[0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8]
     };
     let methods =
-        [("Wanda", Method::Baseline(Wanda)), ("SparseGPT", Method::Baseline(SparseGpt)), ("FISTAPruner", Method::Fista)];
+        [("Wanda", Method::Baseline(Wanda)), ("SparseGPT", Method::Baseline(SparseGpt)), ("FISTAPruner", Method::fista())];
 
     let csv_path = lab.bench_out().join("fig3.csv");
     let mut csv = CsvWriter::create(&csv_path, &["model", "sparsity", "method", "ppl"])?;

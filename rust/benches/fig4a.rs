@@ -33,7 +33,7 @@ fn main() -> anyhow::Result<()> {
         for sp in sparsities {
             let mut run = |correction: bool| -> anyhow::Result<f64> {
                 let opts = PruneOptions { sparsity: sp, error_correction: correction, ..Default::default() };
-                let (pruned, _) = lab.prune(model, &dense, &calib, Method::Fista, &opts)?;
+                let (pruned, _) = lab.prune(model, &dense, &calib, Method::fista(), &opts)?;
                 lab.ppl(model, &pruned, corpus)
             };
             let on = run(true)?;

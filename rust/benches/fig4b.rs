@@ -18,7 +18,7 @@ fn main() -> anyhow::Result<()> {
     let sample_counts: &[usize] =
         if fast_mode() { &[4, 16, 64] } else { &[1, 2, 4, 8, 16, 32, 64, 128] };
     let methods =
-        [("Wanda", Method::Baseline(Wanda)), ("SparseGPT", Method::Baseline(SparseGpt)), ("FISTAPruner", Method::Fista)];
+        [("Wanda", Method::Baseline(Wanda)), ("SparseGPT", Method::Baseline(SparseGpt)), ("FISTAPruner", Method::fista())];
 
     let csv_path = lab.bench_out().join("fig4b.csv");
     let mut csv = CsvWriter::create(&csv_path, &["corpus", "nsamples", "method", "ppl"])?;

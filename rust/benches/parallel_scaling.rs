@@ -36,7 +36,7 @@ fn main() -> anyhow::Result<()> {
     // Sequential reference.
     let t0 = Instant::now();
     let opts = PruneOptions { mode: PruneMode::Sequential, engine, ..Default::default() };
-    lab.prune(model, &dense, &calib, Method::Fista, &opts)?;
+    lab.prune(model, &dense, &calib, Method::fista(), &opts)?;
     let seq_s = t0.elapsed().as_secs_f64();
     csv.write_row(&["sequential", "1", &format!("{seq_s:.2}"), "1.00"])?;
     t.row(vec!["sequential".into(), "1".into(), format!("{seq_s:.1}"), "1.00".into()]);
@@ -45,7 +45,7 @@ fn main() -> anyhow::Result<()> {
     for &workers in worker_counts {
         let opts = PruneOptions { mode: PruneMode::Parallel, engine, workers, ..Default::default() };
         let t0 = Instant::now();
-        lab.prune(model, &dense, &calib, Method::Fista, &opts)?;
+        lab.prune(model, &dense, &calib, Method::fista(), &opts)?;
         let secs = t0.elapsed().as_secs_f64();
         let base = *base_par.get_or_insert(secs);
         let speedup = base / secs;

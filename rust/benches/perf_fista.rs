@@ -127,6 +127,7 @@ fn main() -> anyhow::Result<()> {
     };
     let res = fistapruner::pruner::tune_lambda(
         &native,
+        &fistapruner::pruner::FistaSolver,
         &em,
         &warm,
         fistapruner::config::Sparsity::Unstructured(0.5),
@@ -136,7 +137,7 @@ fn main() -> anyhow::Result<()> {
     println!(
         "tuner breakdown ({m}x{n}, p=2048, {} rounds, {} fista iters): {}",
         res.rounds,
-        res.fista_iters,
+        res.iters,
         sw.report()
     );
     Ok(())

@@ -22,11 +22,11 @@ fn main() -> anyhow::Result<()> {
         ("Magnitude", Method::Baseline(Magnitude)),
         ("Wanda", Method::Baseline(Wanda)),
         ("SparseGPT", Method::Baseline(SparseGpt)),
-        ("FISTAPruner", Method::Fista),
+        ("FISTAPruner", Method::fista()),
     ];
 
     let csv_path = lab.bench_out().join("prune_time.csv");
-    let mut csv = CsvWriter::create(&csv_path, &["model", "method", "seconds", "fista_iters"])?;
+    let mut csv = CsvWriter::create(&csv_path, &["model", "method", "seconds", "solver_iters"])?;
     let mut t = TableBuilder::new(
         "§5 analog: pruning wall-clock (s)",
         &["model", "Magnitude", "Wanda", "SparseGPT", "FISTAPruner"],
@@ -42,7 +42,7 @@ fn main() -> anyhow::Result<()> {
             let (_, report) = lab.prune(model, &dense, &calib, method, &opts)?;
             let secs = t0.elapsed().as_secs_f64();
             let secs_cell = format!("{secs:.2}");
-            let iters_cell = report.total_fista_iters().to_string();
+            let iters_cell = report.total_solver_iters().to_string();
             csv.write_row(&[model, label, secs_cell.as_str(), iters_cell.as_str()])?;
             row.push(format!("{secs:.1}"));
         }

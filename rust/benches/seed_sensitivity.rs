@@ -21,7 +21,7 @@ fn main() -> anyhow::Result<()> {
     for &seed in seeds {
         let calib = lab.calib(corpus, lab.calib_samples(), seed)?;
         let opts = PruneOptions { seed, ..Default::default() };
-        let (pruned, _) = lab.prune(model, &dense, &calib, Method::Fista, &opts)?;
+        let (pruned, _) = lab.prune(model, &dense, &calib, Method::fista(), &opts)?;
         let ppl = lab.ppl(model, &pruned, corpus)?;
         println!("seed {seed}: ppl {ppl:.4}");
         csv.write_row(&[&seed.to_string(), &format!("{ppl:.4}")])?;

@@ -47,7 +47,7 @@ fn main() -> anyhow::Result<()> {
         for (label, method) in [
             ("SparseGPT", Method::Baseline(SparseGpt)),
             ("Wanda", Method::Baseline(Wanda)),
-            ("FISTAPruner", Method::Fista),
+            ("FISTAPruner", Method::fista()),
         ] {
             let opts = PruneOptions { sparsity: sp, ..Default::default() };
             let (pruned, _) = lab.prune(model, &dense, &calib, method, &opts)?;

@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
     // Sequential reference (error propagation between layers).
     let t0 = Instant::now();
     let opts = PruneOptions { mode: PruneMode::Sequential, engine, ..Default::default() };
-    let (pruned, _) = lab.prune(&model, &dense, &calib, Method::Fista, &opts)?;
+    let (pruned, _) = lab.prune(&model, &dense, &calib, Method::fista(), &opts)?;
     let seq_s = t0.elapsed().as_secs_f64();
     let ppl = lab.ppl(&model, &pruned, corpus)?;
     t.row(vec!["sequential".into(), "1".into(), format!("{seq_s:.1}"), TableBuilder::f(ppl)]);
@@ -37,7 +37,7 @@ fn main() -> anyhow::Result<()> {
     for workers in [1usize, 2, 4] {
         let opts = PruneOptions { mode: PruneMode::Parallel, engine, workers, ..Default::default() };
         let t0 = Instant::now();
-        let (pruned, _) = lab.prune(&model, &dense, &calib, Method::Fista, &opts)?;
+        let (pruned, _) = lab.prune(&model, &dense, &calib, Method::fista(), &opts)?;
         let wall = t0.elapsed().as_secs_f64();
         let ppl = lab.ppl(&model, &pruned, corpus)?;
         t.row(vec!["parallel".into(), workers.to_string(), format!("{wall:.1}"), TableBuilder::f(ppl)]);

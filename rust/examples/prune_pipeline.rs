@@ -45,7 +45,7 @@ fn main() -> anyhow::Result<()> {
         Method::Baseline(Magnitude),
         Method::Baseline(Wanda),
         Method::Baseline(SparseGpt),
-        Method::Fista,
+        Method::fista(),
     ];
     let sparsities = [Sparsity::Unstructured(0.5), Sparsity::Semi(2, 4)];
 

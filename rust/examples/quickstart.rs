@@ -28,7 +28,7 @@ fn main() -> anyhow::Result<()> {
 
     println!("[3/4] prune with FISTAPruner (Algorithm 1, 50% unstructured)");
     let opts = lab.default_prune_options();
-    let (pruned, report) = lab.prune(model, &dense, &calib, Method::Fista, &opts)?;
+    let (pruned, report) = lab.prune(model, &dense, &calib, Method::fista(), &opts)?;
     println!("      {}", report.summary());
 
     println!("[4/4] evaluate");

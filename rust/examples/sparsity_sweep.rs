@@ -20,7 +20,7 @@ fn main() -> anyhow::Result<()> {
     println!("dense ppl: {ppl_dense:.2}");
 
     use fistapruner::baselines::BaselineKind::*;
-    let methods = [Method::Baseline(Wanda), Method::Baseline(SparseGpt), Method::Fista];
+    let methods = [Method::Baseline(Wanda), Method::Baseline(SparseGpt), Method::fista()];
     let rates = [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8];
 
     let mut t = TableBuilder::new(

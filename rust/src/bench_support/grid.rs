@@ -34,10 +34,10 @@ pub fn paper_rows() -> Vec<(Method, Option<Sparsity>)> {
         (Method::Dense, None),
         (Method::Baseline(SparseGpt), Some(Sparsity::Unstructured(0.5))),
         (Method::Baseline(Wanda), Some(Sparsity::Unstructured(0.5))),
-        (Method::Fista, Some(Sparsity::Unstructured(0.5))),
+        (Method::fista(), Some(Sparsity::Unstructured(0.5))),
         (Method::Baseline(SparseGpt), Some(Sparsity::Semi(2, 4))),
         (Method::Baseline(Wanda), Some(Sparsity::Semi(2, 4))),
-        (Method::Fista, Some(Sparsity::Semi(2, 4))),
+        (Method::fista(), Some(Sparsity::Semi(2, 4))),
     ]
 }
 
@@ -456,7 +456,9 @@ pub fn run_net_client_grid(
 fn pretty_name(m: &Method) -> &'static str {
     match m {
         Method::Dense => "Dense",
-        Method::Fista => "FISTAPruner",
+        Method::Solver(crate::config::SolverKind::Fista) => "FISTAPruner",
+        Method::Solver(crate::config::SolverKind::Admm) => "ADMM",
+        Method::Solver(crate::config::SolverKind::FrankWolfe) => "Frank-Wolfe",
         Method::Baseline(crate::baselines::BaselineKind::SparseGpt) => "SparseGPT",
         Method::Baseline(crate::baselines::BaselineKind::Wanda) => "Wanda",
         Method::Baseline(crate::baselines::BaselineKind::Magnitude) => "Magnitude",

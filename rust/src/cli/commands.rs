@@ -1,6 +1,6 @@
 //! CLI command implementations, all built on `bench_support::Lab`.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::bench_support::Lab;
 use crate::config::{
@@ -68,6 +68,7 @@ fn prune_options(lab: &Lab, args: &Args) -> Result<PruneOptions> {
         threads: args.usize_or("threads", 0)?,
         max_rounds: args.get("max-rounds").map(|v| v.parse()).transpose()?,
         seed: args.u64_or("seed", 0)?,
+        solver: crate::config::SolverKind::Fista,
     })
 }
 
@@ -128,8 +129,32 @@ pub fn prune(args: &Args) -> Result<()> {
     let mut lab = Lab::new()?;
     let model = args.req("model")?.to_string();
     let corpus = args.req("corpus")?.to_string();
-    let method = Method::parse(args.get_or("method", "fista"))?;
-    let opts = prune_options(&lab, args)?;
+    let mut method = Method::parse(args.get_or("method", "fista"))?;
+    // --solver selects the Algorithm-1 layer solver; it composes with (and
+    // overrides) the solver implied by --method, but cannot turn a
+    // baseline/dense run into a solver run.
+    if let Some(s) = args.get("solver") {
+        let kind = crate::config::SolverKind::parse(s)?;
+        match method {
+            Method::Solver(k) => {
+                if args.get("method").is_some() && k != kind {
+                    bail!(
+                        "--method {} conflicts with --solver {}; drop one",
+                        method.name(),
+                        kind.name()
+                    );
+                }
+                method = Method::Solver(kind);
+            }
+            Method::Dense | Method::Baseline(_) => {
+                bail!("--solver only applies to solver methods, not --method {}", method.name())
+            }
+        }
+    }
+    let mut opts = prune_options(&lab, args)?;
+    if let Method::Solver(k) = method {
+        opts.solver = k;
+    }
     let calib_n = args.usize_or("calib", lab.calib_samples())?;
     let dense = load_or_train(&mut lab, args, &model, &corpus)?;
     let calib = lab.calib(&corpus, calib_n, opts.seed)?;
@@ -138,7 +163,7 @@ pub fn prune(args: &Args) -> Result<()> {
     let ppl_dense = lab.ppl(&model, &dense, &corpus)?;
     let ppl_pruned = lab.ppl(&model, &pruned, &corpus)?;
     println!("perplexity: dense {ppl_dense:.2} → pruned {ppl_pruned:.2}");
-    // --trace-out: one `fista_round` point per tuning round, replayed
+    // --trace-out: one `solver_round` point per tuning round, replayed
     // from the report's convergence history (the pruner itself stays
     // recorder-free — worker threads carry plain data, not channels).
     if let Some(path) = args.get("trace-out") {
@@ -152,15 +177,19 @@ pub fn prune(args: &Args) -> Result<()> {
                 let id = format!("L{}:{}", op.layer, op.op);
                 for rs in &op.rounds_detail {
                     rec.point(
-                        "fista_round",
+                        "solver_round",
                         &id,
                         vec![
+                            ("solver", Json::Str(op.solver.clone())),
                             ("round", Json::Num(rs.round as f64)),
                             ("lambda", Json::Num(rs.lambda)),
                             ("objective", Json::Num(rs.objective)),
                             ("residual", Json::Num(rs.residual)),
                             ("support", Json::Num(rs.support as f64)),
-                            ("iters", Json::Num(rs.fista_iters as f64)),
+                            ("iters", Json::Num(rs.iters as f64)),
+                            ("primal", Json::Num(rs.primal)),
+                            ("dual", Json::Num(rs.dual)),
+                            ("gap", Json::Num(rs.gap)),
                         ],
                     );
                 }
@@ -712,7 +741,7 @@ pub fn pipeline(args: &Args) -> Result<()> {
     println!("[2/3] prune with all methods at {}", sparsity.label());
     use crate::baselines::BaselineKind::*;
     let methods =
-        [Method::Baseline(Magnitude), Method::Baseline(Wanda), Method::Baseline(SparseGpt), Method::Fista];
+        [Method::Baseline(Magnitude), Method::Baseline(Wanda), Method::Baseline(SparseGpt), Method::fista()];
     let mut t = TableBuilder::new(
         &format!("{model} on {corpus} @ {}", sparsity.label()),
         &["Method", "PPL", "rel err", "prune s"],
@@ -736,8 +765,8 @@ pub fn pipeline(args: &Args) -> Result<()> {
 
 /// `trace --in capture.jsonl`: offline analysis of a `--trace-out`
 /// capture — per-request waterfalls, per-phase time totals, and the
-/// per-operator FISTA convergence table — plus the dropped-event gate
-/// CI runs (`--fail-on-drops`).
+/// per-operator solver convergence tables (one per solver label) — plus
+/// the dropped-event gate CI runs (`--fail-on-drops`).
 pub fn trace(args: &Args) -> Result<()> {
     use crate::obs::trace as tr;
     let path = std::path::PathBuf::from(args.req("in")?);
@@ -775,22 +804,30 @@ pub fn trace(args: &Args) -> Result<()> {
 
     let conv = tr::convergence_rows(&events);
     if !conv.is_empty() {
-        let mut t = TableBuilder::new(
-            "FISTA convergence (final round per operator)",
-            &["op", "rounds", "iters", "lambda", "objective", "residual", "support"],
-        );
-        for c in &conv {
-            t.row(vec![
-                c.id.clone(),
-                c.rounds.to_string(),
-                c.iters.to_string(),
-                format!("{:.2e}", c.lambda),
-                format!("{:.4}", c.objective),
-                format!("{:.4}", c.residual),
-                c.support.to_string(),
-            ]);
+        // One convergence table per solver label, so a mixed capture
+        // (e.g. an ablation run) stays readable.
+        let totals = tr::solver_totals(&conv);
+        for (solver, _, _) in &totals {
+            let mut t = TableBuilder::new(
+                &format!("{solver} convergence (final round per operator)"),
+                &["op", "rounds", "iters", "lambda", "objective", "residual", "support"],
+            );
+            for c in conv.iter().filter(|c| &c.solver == solver) {
+                t.row(vec![
+                    c.id.clone(),
+                    c.rounds.to_string(),
+                    c.iters.to_string(),
+                    format!("{:.2e}", c.lambda),
+                    format!("{:.4}", c.objective),
+                    format!("{:.4}", c.residual),
+                    c.support.to_string(),
+                ]);
+            }
+            t.print();
         }
-        t.print();
+        for (solver, ops, iters) in &totals {
+            println!("solver {solver}: {ops} operators, {iters} total iterations");
+        }
     }
 
     // --csv path: the waterfall rows, machine-readable.

@@ -51,11 +51,14 @@ COMMANDS:
   train     --model M --corpus C    train a substrate model
             [--steps N --seed S]
   prune     --model M --corpus C    prune a trained model
-            [--method fista|sparsegpt|wanda|magnitude]
+            [--method dense|fista|admm|fw|sparsegpt|wanda|magnitude]
+            [--solver fista|admm|fw] Algorithm-1 layer solver (algorithm
+                                    axis; orthogonal to --engine, the
+                                    execution axis)
             [--sparsity 0.5|50%|2:4] [--mode sequential|parallel]
             [--workers N] [--threads N] [--engine xla|native]
             [--no-correction] [--calib N --seed S] [--out path.fpt]
-            [--trace-out t.jsonl]   one fista_round event per tuning
+            [--trace-out t.jsonl]   one solver_round event per tuning
                                     round (inspect with `trace`)
             [--emit-sparse [path.fsa] --format csr|nm|auto]
             (--emit-sparse compiles the pruned weights once and writes
@@ -120,7 +123,8 @@ COMMANDS:
             [--trace-out t.jsonl]   trace every measured engine run
   trace     --in capture.jsonl      analyze a --trace-out capture:
             [--csv path]            request waterfalls, phase totals,
-            [--fail-on-drops]       FISTA convergence; exits non-zero on
+            [--fail-on-drops]       per-solver convergence tables and
+                                    iteration counts; exits non-zero on
                                     dropped events with --fail-on-drops
   pipeline  --model M --corpus C    end-to-end: train → prune (all
             [--sparsity S]          methods) → perplexity table

@@ -7,5 +7,7 @@ pub mod presets;
 pub mod run;
 
 pub use paths::repo_root;
-pub use presets::{CorpusCfg, FamilyKind, FistaCfg, ModelSpec, Presets};
-pub use run::{Engine, PruneMode, PruneOptions, SparseFormat, Sparsity, TrainOptions, WarmStart};
+pub use presets::{AdmmCfg, CorpusCfg, FamilyKind, FistaCfg, FwCfg, ModelSpec, Presets, SolverPresets};
+pub use run::{
+    Engine, PruneMode, PruneOptions, SolverKind, SparseFormat, Sparsity, TrainOptions, WarmStart,
+};

@@ -70,6 +70,47 @@ pub struct FistaCfg {
     pub threads: usize,
 }
 
+/// ADMM convergence constants (`--solver admm`).
+#[derive(Clone, Debug)]
+pub struct AdmmCfg {
+    /// Inner ADMM iterations per tuning round.
+    pub max_iters: usize,
+    /// ρ = rho_factor · L (the standard 0.1·λ_max heuristic).
+    pub rho_factor: f64,
+    /// Stop when the primal residual ‖W − Z‖_F drops below this.
+    pub stop_tol: f64,
+}
+
+impl Default for AdmmCfg {
+    fn default() -> Self {
+        AdmmCfg { max_iters: 100, rho_factor: 0.1, stop_tol: 1e-6 }
+    }
+}
+
+/// Frank-Wolfe convergence constants (`--solver fw`).
+#[derive(Clone, Debug)]
+pub struct FwCfg {
+    /// LMO / away-step iterations per tuning round.
+    pub max_iters: usize,
+    /// Stop when the duality gap ⟨∇f, W − s⟩ falls below
+    /// gap_tol · max(1, |⟨∇f, W⟩|).
+    pub gap_tol: f64,
+}
+
+impl Default for FwCfg {
+    fn default() -> Self {
+        FwCfg { max_iters: 120, gap_tol: 1e-5 }
+    }
+}
+
+/// Per-solver convergence presets (the optional "solvers" section; code
+/// defaults apply field-by-field for backwards-compatible presets files).
+#[derive(Clone, Debug, Default)]
+pub struct SolverPresets {
+    pub admm: AdmmCfg,
+    pub fw: FwCfg,
+}
+
 /// Synthetic-corpus generator parameters (WikiText/PTB/C4 analogs).
 #[derive(Clone, Debug)]
 pub struct CorpusCfg {
@@ -113,6 +154,7 @@ pub struct Presets {
     pub train_batch: usize,
     pub gram_chunk: usize,
     pub fista: FistaCfg,
+    pub solvers: SolverPresets,
     pub models: BTreeMap<String, ModelSpec>,
     pub corpora: BTreeMap<String, CorpusCfg>,
     pub calib_nsamples: usize,
@@ -139,6 +181,40 @@ impl Presets {
             stop_tol: fista_v.req("stop_tol")?.as_f64().context("stop_tol")?,
             // optional for backwards-compatible presets files
             threads: fista_v.get("threads").and_then(|v| v.as_usize()).unwrap_or(0),
+        };
+        // The whole "solvers" section is optional (same backwards-compat
+        // contract as fista.threads): absent keys take the code defaults.
+        let solvers = {
+            let base = SolverPresets::default();
+            let sv = v.get("solvers");
+            let admm_v = sv.and_then(|s| s.get("admm"));
+            let fw_v = sv.and_then(|s| s.get("fw"));
+            SolverPresets {
+                admm: AdmmCfg {
+                    max_iters: admm_v
+                        .and_then(|a| a.get("max_iters"))
+                        .and_then(|x| x.as_usize())
+                        .unwrap_or(base.admm.max_iters),
+                    rho_factor: admm_v
+                        .and_then(|a| a.get("rho_factor"))
+                        .and_then(|x| x.as_f64())
+                        .unwrap_or(base.admm.rho_factor),
+                    stop_tol: admm_v
+                        .and_then(|a| a.get("stop_tol"))
+                        .and_then(|x| x.as_f64())
+                        .unwrap_or(base.admm.stop_tol),
+                },
+                fw: FwCfg {
+                    max_iters: fw_v
+                        .and_then(|f| f.get("max_iters"))
+                        .and_then(|x| x.as_usize())
+                        .unwrap_or(base.fw.max_iters),
+                    gap_tol: fw_v
+                        .and_then(|f| f.get("gap_tol"))
+                        .and_then(|x| x.as_f64())
+                        .unwrap_or(base.fw.gap_tol),
+                },
+            }
         };
         let mut models = BTreeMap::new();
         for (fam_name, fam) in v.req("families")?.as_obj().context("families")? {
@@ -191,6 +267,7 @@ impl Presets {
             train_batch: v.req("train_batch")?.as_usize().context("train_batch")?,
             gram_chunk: v.req("gram_chunk")?.as_usize().context("gram_chunk")?,
             fista,
+            solvers,
             models,
             corpora,
             calib_nsamples: cal.req("nsamples")?.as_usize().context("nsamples")?,
@@ -256,6 +333,24 @@ mod tests {
         assert!(!l.bias);
         assert_eq!(p.corpus("ptb-syn").unwrap().word_vocab, 900);
         assert!(p.model("nope").is_err());
+    }
+
+    #[test]
+    fn solver_presets_load_with_defaults() {
+        let p = Presets::load(&repo_root().unwrap()).unwrap();
+        // values from configs/presets.json
+        assert!(p.solvers.admm.max_iters >= 1);
+        assert!(p.solvers.admm.rho_factor > 0.0);
+        assert!(p.solvers.fw.max_iters >= 1);
+        assert!(p.solvers.fw.gap_tol > 0.0);
+        // a presets file without a "solvers" section takes code defaults
+        let mut v = Json::parse_file(&repo_root().unwrap().join("configs/presets.json")).unwrap();
+        if let Json::Obj(m) = &mut v {
+            m.remove("solvers");
+        }
+        let p2 = Presets::from_json(&v).unwrap();
+        assert_eq!(p2.solvers.admm.max_iters, AdmmCfg::default().max_iters);
+        assert_eq!(p2.solvers.fw.max_iters, FwCfg::default().max_iters);
     }
 
     #[test]

@@ -128,6 +128,38 @@ impl Engine {
     }
 }
 
+/// Which convex-optimization algorithm solves the layer-wise Gram-form
+/// objective (the *algorithm* axis; `Engine` is the orthogonal *execution*
+/// axis). See `pruner::solver::LayerSolver`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolverKind {
+    /// FISTA proximal gradient (the paper's method, eqs. 5a–5d).
+    Fista,
+    /// ADMM splitting (the ALPS-style comparator).
+    Admm,
+    /// Frank-Wolfe over the ℓ₁ ball with away steps.
+    FrankWolfe,
+}
+
+impl SolverKind {
+    pub fn parse(s: &str) -> Result<SolverKind> {
+        match s {
+            "fista" | "fistapruner" => Ok(SolverKind::Fista),
+            "admm" => Ok(SolverKind::Admm),
+            "fw" | "frankwolfe" | "frank-wolfe" => Ok(SolverKind::FrankWolfe),
+            other => bail!("unknown solver '{other}' (fista|admm|fw)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SolverKind::Fista => "fista",
+            SolverKind::Admm => "admm",
+            SolverKind::FrankWolfe => "fw",
+        }
+    }
+}
+
 /// Inter-layer propagation mode (paper §3.4: units are independent, so
 /// layers can be pruned in parallel; sequential propagates pruned
 /// activations between layers like the SparseGPT evaluation pipeline).
@@ -174,6 +206,9 @@ impl WarmStart {
 pub struct PruneOptions {
     pub sparsity: Sparsity,
     pub engine: Engine,
+    /// Layer-wise solver algorithm (recorded for provenance; the scheduler
+    /// takes the authoritative kind from `Method::Solver`).
+    pub solver: SolverKind,
     pub mode: PruneMode,
     pub warm_start: WarmStart,
     /// Intra-layer error correction (paper §3.1); off = Fig. 4a ablation.
@@ -195,6 +230,7 @@ impl Default for PruneOptions {
         PruneOptions {
             sparsity: Sparsity::Unstructured(0.5),
             engine: Engine::Xla,
+            solver: SolverKind::Fista,
             mode: PruneMode::Sequential,
             warm_start: WarmStart::Auto,
             error_correction: true,
@@ -294,6 +330,19 @@ mod tests {
         assert_eq!(Sparsity::parse("0").unwrap(), Sparsity::Unstructured(0.0));
         assert_eq!(Sparsity::parse("0.99").unwrap(), Sparsity::Unstructured(0.99));
         assert_eq!(Sparsity::parse("1:1").unwrap(), Sparsity::Semi(1, 1));
+    }
+
+    #[test]
+    fn solver_kind_parse_and_name() {
+        assert_eq!(SolverKind::parse("fista").unwrap(), SolverKind::Fista);
+        assert_eq!(SolverKind::parse("admm").unwrap(), SolverKind::Admm);
+        assert_eq!(SolverKind::parse("fw").unwrap(), SolverKind::FrankWolfe);
+        assert_eq!(SolverKind::parse("frank-wolfe").unwrap(), SolverKind::FrankWolfe);
+        for k in [SolverKind::Fista, SolverKind::Admm, SolverKind::FrankWolfe] {
+            assert_eq!(SolverKind::parse(k.name()).unwrap(), k);
+        }
+        let err = SolverKind::parse("ista").unwrap_err().to_string();
+        assert!(err.contains("fista|admm|fw"), "{err}");
     }
 
     #[test]

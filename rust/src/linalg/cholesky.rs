@@ -64,6 +64,31 @@ pub fn solve_upper(l: &Tensor, y: &[f32]) -> Vec<f32> {
     x
 }
 
+/// Solve (L Lᵀ) x = rhs into `out` with zero allocations: forward
+/// substitution writes y into `out`, then backward substitution finishes
+/// in place. `out` may alias neither `l` nor `rhs`. Hot-loop variant of
+/// `solve_lower` + `solve_upper` for callers (the ADMM W-step) that solve
+/// many right-hand sides against one factorization.
+pub fn cholesky_solve_into(l: &Tensor, rhs: &[f32], out: &mut [f32]) {
+    let n = l.rows();
+    debug_assert_eq!(rhs.len(), n);
+    debug_assert_eq!(out.len(), n);
+    for i in 0..n {
+        let mut sum = rhs[i] as f64;
+        for k in 0..i {
+            sum -= (l.at2(i, k) as f64) * (out[k] as f64);
+        }
+        out[i] = (sum / l.at2(i, i) as f64) as f32;
+    }
+    for i in (0..n).rev() {
+        let mut sum = out[i] as f64;
+        for k in (i + 1)..n {
+            sum -= (l.at2(k, i) as f64) * (out[k] as f64);
+        }
+        out[i] = (sum / l.at2(i, i) as f64) as f32;
+    }
+}
+
 /// A⁻¹ for symmetric positive-definite A, via Cholesky solves per column.
 pub fn cholesky_inverse(a: &Tensor) -> Result<Tensor> {
     let n = a.rows();
@@ -134,6 +159,19 @@ mod tests {
         for i in 0..8 {
             assert!((ax[i] - b[i]).abs() < 1e-3);
         }
+    }
+
+    #[test]
+    fn in_place_solve_matches_two_pass_solve() {
+        let mut rng = Pcg64::seeded(4);
+        let a = random_spd(&mut rng, 12, 0.5);
+        let l = cholesky(&a).unwrap();
+        let b: Vec<f32> = rng.normal_vec(12, 1.0);
+        let y = solve_lower(&l, &b);
+        let x = solve_upper(&l, &y);
+        let mut out = vec![0.0f32; 12];
+        cholesky_solve_into(&l, &b, &mut out);
+        assert_eq!(out, x, "in-place solve must be bitwise identical");
     }
 
     #[test]

@@ -5,5 +5,5 @@
 pub mod cholesky;
 pub mod power;
 
-pub use cholesky::{cholesky, cholesky_inverse, solve_lower, solve_upper};
+pub use cholesky::{cholesky, cholesky_inverse, cholesky_solve_into, solve_lower, solve_upper};
 pub use power::power_iteration;

@@ -1,6 +1,6 @@
 //! Offline trace analysis: load a `--trace-out` JSONL capture and fold
 //! it into the tables the `trace` CLI prints — per-request waterfalls,
-//! per-phase time breakdowns, and per-(layer, op) FISTA convergence.
+//! per-phase time breakdowns, and per-(layer, op) solver convergence.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -167,13 +167,17 @@ pub fn phase_breakdown(events: &[TraceEvent]) -> Vec<PhaseRow> {
 }
 
 /// Final convergence state of one pruned operator, folded from its
-/// `fista_round` points.
+/// `solver_round` points.
 #[derive(Clone, Debug)]
 pub struct ConvRow {
     /// `L{layer}:{op}`.
     pub id: String,
+    /// Layer-solver label ("fista"/"admm"/"fw"; traces written before the
+    /// solver axis existed carry `fista_round` events without a solver
+    /// attribute and default to "fista").
+    pub solver: String,
     pub rounds: usize,
-    /// Total FISTA iterations across rounds.
+    /// Total inner solver iterations across rounds.
     pub iters: usize,
     /// Final round's λ / objective / primal residual / support size.
     pub lambda: f64,
@@ -182,16 +186,19 @@ pub struct ConvRow {
     pub support: usize,
 }
 
-/// Per-operator convergence table from `fista_round` events, sorted by
-/// operator id.
+/// Per-operator convergence table from `solver_round` events (the legacy
+/// `fista_round` name is accepted for old captures), sorted by operator id.
 pub fn convergence_rows(events: &[TraceEvent]) -> Vec<ConvRow> {
     let mut rows: BTreeMap<String, ConvRow> = BTreeMap::new();
     for ev in events {
-        if ev.name != "fista_round" || ev.phase != Phase::Point {
+        if !matches!(ev.name.as_str(), "solver_round" | "fista_round")
+            || ev.phase != Phase::Point
+        {
             continue;
         }
         let r = rows.entry(ev.id.clone()).or_insert_with(|| ConvRow {
             id: ev.id.clone(),
+            solver: String::new(),
             rounds: 0,
             iters: 0,
             lambda: 0.0,
@@ -199,6 +206,7 @@ pub fn convergence_rows(events: &[TraceEvent]) -> Vec<ConvRow> {
             residual: 0.0,
             support: 0,
         });
+        r.solver = ev.str_attr("solver").unwrap_or("fista").to_string();
         r.rounds += 1;
         r.iters += ev.num("iters").unwrap_or(0.0) as usize;
         r.lambda = ev.num("lambda").unwrap_or(r.lambda);
@@ -207,6 +215,18 @@ pub fn convergence_rows(events: &[TraceEvent]) -> Vec<ConvRow> {
         r.support = ev.num("support").unwrap_or(r.support as f64) as usize;
     }
     rows.into_values().collect()
+}
+
+/// Per-solver rollup over convergence rows: (solver label, operator
+/// count, total inner iterations), sorted by label.
+pub fn solver_totals(rows: &[ConvRow]) -> Vec<(String, usize, usize)> {
+    let mut acc: BTreeMap<String, (usize, usize)> = BTreeMap::new();
+    for r in rows {
+        let e = acc.entry(r.solver.clone()).or_default();
+        e.0 += 1;
+        e.1 += r.iters;
+    }
+    acc.into_iter().map(|(solver, (ops, iters))| (solver, ops, iters)).collect()
 }
 
 /// (written, dropped) from the `trace_end` summary line, if present.
@@ -274,10 +294,10 @@ mod tests {
 
     #[test]
     fn convergence_keeps_last_round_and_sums_iters() {
-        let events = vec![
+        let mut events = vec![
             ev(
                 Phase::Point,
-                "fista_round",
+                "solver_round",
                 "L0:wq",
                 0.0,
                 &[
@@ -291,7 +311,7 @@ mod tests {
             ),
             ev(
                 Phase::Point,
-                "fista_round",
+                "solver_round",
                 "L0:wq",
                 1.0,
                 &[
@@ -304,14 +324,50 @@ mod tests {
                 ],
             ),
         ];
+        for e in &mut events {
+            e.attrs.insert("solver".to_string(), Json::Str("admm".to_string()));
+        }
         let rows = convergence_rows(&events);
         assert_eq!(rows.len(), 1);
         let r = &rows[0];
+        assert_eq!(r.solver, "admm");
         assert_eq!(r.rounds, 2);
         assert_eq!(r.iters, 32);
         assert_eq!(r.lambda, 3e-3);
         assert_eq!(r.objective, 1.5);
         assert_eq!(r.residual, 0.2);
         assert_eq!(r.support, 60);
+    }
+
+    #[test]
+    fn legacy_fista_round_events_still_fold_and_default_solver() {
+        let events = vec![ev(
+            Phase::Point,
+            "fista_round",
+            "L0:wq",
+            0.0,
+            &[("round", 1.0), ("iters", 7.0)],
+        )];
+        let rows = convergence_rows(&events);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].solver, "fista");
+        assert_eq!(rows[0].iters, 7);
+    }
+
+    #[test]
+    fn solver_totals_groups_by_label() {
+        let mk = |id: &str, solver: &str, iters: f64| {
+            let mut e = ev(Phase::Point, "solver_round", id, 0.0, &[("iters", iters)]);
+            e.attrs.insert("solver".to_string(), Json::Str(solver.to_string()));
+            e
+        };
+        let events = vec![
+            mk("L0:wq", "fista", 10.0),
+            mk("L0:wk", "fista", 5.0),
+            mk("L1:wq", "admm", 30.0),
+        ];
+        let rows = convergence_rows(&events);
+        let totals = solver_totals(&rows);
+        assert_eq!(totals, vec![("admm".to_string(), 1, 30), ("fista".to_string(), 2, 15)]);
     }
 }

@@ -1,8 +1,9 @@
-//! ADMM solver extension — the alternating-direction comparator the paper
-//! discusses (§2: Boža 2024 uses ADMM for weight updates; the paper argues
-//! FISTA's convex formulation is more stable). Solving the same Gram-form
-//! objective with ADMM lets the `ablation_solver` bench measure that claim
-//! on our substrate.
+//! ADMM solver for the Gram-form objective — the alternating-direction
+//! comparator the paper discusses (§2: Boža 2024 uses ADMM for weight
+//! updates; the paper argues FISTA's convex formulation is more stable).
+//! Promoted from bench-only status: `pruner::solver::AdmmSolver` runs it
+//! inside Algorithm 1, so malformed inputs must surface as errors (not
+//! panics inside the scheduler's worker threads).
 //!
 //! Splitting:  min_W ½tr(W A Wᵀ) − ⟨W,B⟩ + λΣ‖Z‖₁  s.t. W = Z
 //!
@@ -10,15 +11,34 @@
 //!   Z-step: SoftShrink_{λ/ρ}(W + U)
 //!   U-step: U += W − Z
 //!
-//! The W-step factors (A + ρI) once per solve (Cholesky), so K iterations
-//! cost one factorization + K triangular-solve passes.
+//! The W-step factors (A + ρI) once per solve (Cholesky); K iterations
+//! then cost K triangular-solve passes. Rows are independent given the
+//! factor, so the pass fans out row-block over `tensor::par` — each row is
+//! computed purely from its global index, which keeps results bitwise
+//! identical for any thread count (the same contract every native kernel
+//! follows). The per-iteration RHS buffer and the in-place triangular
+//! solves (`linalg::cholesky_solve_into`) are allocation-free inside the
+//! loop.
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
-use crate::linalg::{cholesky, solve_lower, solve_upper};
-use crate::tensor::{ops, Tensor};
+use crate::linalg::{cholesky, cholesky_solve_into};
+use crate::tensor::{ops, par, Tensor};
 
 use super::fista::soft_shrink;
+
+/// Full ADMM outcome: the sparse iterate plus the final residual pair
+/// (`pruner::solver` reports them as the per-round gap/dual telemetry).
+pub struct AdmmOut {
+    /// Z_K — the sparse iterate.
+    pub w: Tensor,
+    /// Iterations actually run.
+    pub iters: usize,
+    /// Final primal residual ‖W − Z‖_F (feasibility of the split).
+    pub primal_res: f64,
+    /// Final dual residual ρ‖Z_K − Z_{K−1}‖_F (stationarity).
+    pub dual_res: f64,
+}
 
 /// ADMM on the Gram form. Returns (Z_K — the sparse iterate, iterations).
 pub fn admm_solve(
@@ -30,8 +50,36 @@ pub fn admm_solve(
     iters: usize,
     tol: f64,
 ) -> Result<(Tensor, usize)> {
+    let out = admm_solve_full(a, b, w0, lam, rho, iters, tol)?;
+    Ok((out.w, out.iters))
+}
+
+/// ADMM with residual reporting; see [`admm_solve`] for the plain variant.
+pub fn admm_solve_full(
+    a: &Tensor,
+    b: &Tensor,
+    w0: &Tensor,
+    lam: f64,
+    rho: f64,
+    iters: usize,
+    tol: f64,
+) -> Result<AdmmOut> {
     let (m, n) = (w0.rows(), w0.cols());
-    assert_eq!(a.rows(), n);
+    if a.rows() != a.cols() {
+        bail!("ADMM: Gram matrix A must be square, got {:?}", a.shape());
+    }
+    if a.rows() != n {
+        bail!("ADMM: A is {:?} but W has {n} columns", a.shape());
+    }
+    if b.shape() != w0.shape() {
+        bail!("ADMM: B {:?} != W0 {:?}", b.shape(), w0.shape());
+    }
+    if !rho.is_finite() || rho <= 0.0 {
+        bail!("ADMM: rho must be a positive finite number, got {rho}");
+    }
+    if !lam.is_finite() || lam < 0.0 {
+        bail!("ADMM: lambda must be finite and >= 0, got {lam}");
+    }
     // Factor (A + ρI) = L Lᵀ once.
     let mut a_rho = a.clone();
     for j in 0..n {
@@ -43,22 +91,31 @@ pub fn admm_solve(
     let mut z = w0.clone();
     let mut u = Tensor::zeros(vec![m, n]);
     let mut w = w0.clone();
+    // Hoisted per-iteration scratch: the full RHS matrix B + ρ(Z − U).
+    let mut rhs = Tensor::zeros(vec![m, n]);
     let mut k = 0;
+    let mut primal_res = f64::INFINITY;
+    let mut dual_res = f64::INFINITY;
     while k < iters {
         // W-step: solve W (A + ρI) = B + ρ(Z − U), i.e. per row r:
-        // (A + ρI) wᵣ = bᵣ + ρ(zᵣ − uᵣ)  (A symmetric)
-        for r in 0..m {
-            let rhs: Vec<f32> = (0..n)
-                .map(|j| b.at2(r, j) + rho as f32 * (z.at2(r, j) - u.at2(r, j)))
-                .collect();
-            let y = solve_lower(&l, &rhs);
-            let x = solve_upper(&l, &y);
-            w.row_mut(r).copy_from_slice(&x);
+        // (A + ρI) wᵣ = bᵣ + ρ(zᵣ − uᵣ)  (A symmetric).
+        for (((ri, &bi), &zi), &ui) in
+            rhs.data_mut().iter_mut().zip(b.data()).zip(z.data()).zip(u.data())
+        {
+            *ri = bi + rho as f32 * (zi - ui);
         }
+        let rhs_data = rhs.data();
+        par::for_each_row_block(w.data_mut(), m, n, 1, |r0, _r1, block| {
+            for (i, wrow) in block.chunks_mut(n).enumerate() {
+                let r = r0 + i;
+                cholesky_solve_into(&l, &rhs_data[r * n..(r + 1) * n], wrow);
+            }
+        });
         // Z-step (prox) and U-step (dual ascent).
         let wu = ops::add_scaled(&w, &u, 1.0);
         let z_next = soft_shrink(&wu, (lam / rho) as f32);
-        let primal_res = ops::frob_dist(&w, &z_next);
+        primal_res = ops::frob_dist(&w, &z_next);
+        dual_res = rho * ops::frob_dist(&z_next, &z);
         for ((ui, &wi), &zi) in u.data_mut().iter_mut().zip(w.data()).zip(z_next.data()) {
             *ui += wi - zi;
         }
@@ -68,7 +125,7 @@ pub fn admm_solve(
             break;
         }
     }
-    Ok((z, k))
+    Ok(AdmmOut { w: z, iters: k, primal_res, dual_res })
 }
 
 #[cfg(test)]
@@ -121,5 +178,44 @@ mod tests {
         let w0 = Tensor::zeros(vec![8, 16]);
         let (_, k) = admm_solve(&a, &b, &w0, 0.0, l_max * 0.1, 10_000, 1e-5).unwrap();
         assert!(k < 10_000, "ran {k}");
+    }
+
+    #[test]
+    fn rejects_malformed_inputs_without_panicking() {
+        let (_w, a, b, l_max) = setup(4, 8, 16, 64);
+        let w_bad = Tensor::zeros(vec![8, 12]); // cols != a.rows()
+        assert!(admm_solve(&a, &b, &w_bad, 0.1, l_max * 0.1, 10, 1e-6).is_err());
+        let b_bad = Tensor::zeros(vec![4, 16]); // shape != w0
+        let w0 = Tensor::zeros(vec![8, 16]);
+        assert!(admm_solve(&a, &b_bad, &w0, 0.1, l_max * 0.1, 10, 1e-6).is_err());
+        let a_rect = Tensor::zeros(vec![16, 12]); // non-square Gram
+        assert!(admm_solve(&a_rect, &b, &w0, 0.1, l_max * 0.1, 10, 1e-6).is_err());
+        assert!(admm_solve(&a, &b, &w0, 0.1, 0.0, 10, 1e-6).is_err()); // rho
+        assert!(admm_solve(&a, &b, &w0, -1.0, l_max * 0.1, 10, 1e-6).is_err()); // lam
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let (_w, a, b, l_max) = setup(5, 16, 24, 96);
+        let w0 = Tensor::zeros(vec![16, 24]);
+        let run = |threads: usize| {
+            par::set_threads(threads);
+            let out = admm_solve(&a, &b, &w0, 0.3, l_max * 0.1, 50, 0.0).unwrap().0;
+            par::set_threads(0);
+            out
+        };
+        let t1 = run(1);
+        let t4 = run(4);
+        assert_eq!(t1.data(), t4.data(), "ADMM W-step must be thread-count invariant");
+    }
+
+    #[test]
+    fn residuals_shrink_with_iterations() {
+        let (_w, a, b, l_max) = setup(6, 8, 16, 64);
+        let w0 = Tensor::zeros(vec![8, 16]);
+        let short = admm_solve_full(&a, &b, &w0, 0.2, l_max * 0.1, 5, 0.0).unwrap();
+        let long = admm_solve_full(&a, &b, &w0, 0.2, l_max * 0.1, 200, 0.0).unwrap();
+        assert!(long.primal_res <= short.primal_res * 1.01 + 1e-9);
+        assert!(long.primal_res.is_finite() && long.dual_res.is_finite());
     }
 }

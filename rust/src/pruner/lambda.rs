@@ -1,15 +1,22 @@
 //! Algorithm 1: the adaptive-λ outer loop (paper §3.3 / §3.4).
 //!
-//! Each round runs FISTA from the current best solution, rounds to the
-//! exact target sparsity (eq. 8), and measures
+//! Each round runs the layer solver from the current best solution, rounds
+//! to the exact target sparsity (eq. 8), and measures
 //!   E_total = ‖W*_{K+1} X* − WX‖,  E_round = E_total − ‖W*_K X* − WX‖.
-//! A high E_round/E_total means FISTA under-sparsified (λ too small); a low
-//! ratio means λ can be reduced to chase output error (paper §3.3). λ is
+//! A high E_round/E_total means the solve under-sparsified (λ too small); a
+//! low ratio means λ can be reduced to chase output error (paper §3.3). λ is
 //! bisected on [0, λ_hi] against the threshold ξ. We bisect in *log space*
 //! (geometric midpoint, floor 1e-8): the paper specifies "the bisection
 //! method on [0, 10⁶]" with λ₀ = 10⁻⁵, which is only consistent if the
 //! bisection is logarithmic — an arithmetic midpoint would jump to 5·10⁵
 //! on the first round and never revisit small λ. Documented deviation.
+//!
+//! The loop is solver-agnostic (the *algorithm* axis, `LayerSolver`): any
+//! solver whose effective sparsity grows monotonically with λ plugs in —
+//! FISTA and ADMM through the ℓ₁ penalty directly, Frank-Wolfe through its
+//! shrinking ℓ₁-ball radius τ(λ). With `FistaSolver` the λ/iterate sequence
+//! is bitwise identical to the pre-refactor loop (pinned by
+//! rust/tests/solver_parity.rs).
 //!
 //! Termination: `patience` (= paper T) consecutive non-improving rounds,
 //! or improvement ratio (E_best − E_total)/E_best < ε (paper §3.4).
@@ -23,6 +30,7 @@ use super::engine::SolverEngine;
 use super::objective::ErrorModel;
 use super::report::RoundStat;
 use super::rounding::round_to_sparsity;
+use super::solver::LayerSolver;
 
 /// Tuner configuration (paper symbols in comments).
 #[derive(Clone, Debug)]
@@ -65,8 +73,8 @@ pub struct TuneResult {
     pub lambda: f64,
     /// Tuning rounds executed.
     pub rounds: usize,
-    /// Total FISTA iterations across rounds (perf accounting).
-    pub fista_iters: usize,
+    /// Total inner solver iterations across rounds (perf accounting).
+    pub iters: usize,
     /// Per-round convergence telemetry, in execution order (one entry
     /// per round; flows up into `OpReport::rounds_detail`).
     pub history: Vec<RoundStat>,
@@ -77,6 +85,7 @@ const LAMBDA_FLOOR: f64 = 1e-8;
 /// Algorithm 1 (paper, verbatim structure): returns the best rounded W*.
 pub fn tune_lambda(
     engine: &dyn SolverEngine,
+    solver: &dyn LayerSolver,
     em: &ErrorModel,
     w0: &Tensor,
     sparsity: Sparsity,
@@ -93,27 +102,32 @@ pub fn tune_lambda(
     let mut hi = cfg.lambda_hi;
     let mut t = 0usize; // consecutive non-improving rounds
     let mut rounds = 0usize;
-    let mut fista_iters = 0usize;
+    let mut total_iters = 0usize;
     let mut final_lambda = lam;
     let mut history = Vec::new();
 
     while rounds < cfg.max_rounds {
         rounds += 1;
-        // W*_K ← FISTA(WX, X*, λ, W*_best, K)
-        let (w_k, iters) = engine.fista(&em.a, &em.b, &w_best, lam, em.l)?;
-        fista_iters += iters;
+        // W*_K ← Solver(WX, X*, λ, W*_best, K)
+        let run = solver.solve(engine, &em.a, &em.b, &w_best, lam, em.l)?;
+        let w_k = run.w;
+        total_iters += run.iters;
         // W*_{K+1} ← round(W*_K)
         let w_k1 = round_to_sparsity(&w_k, sparsity);
         let e_total = em.error(engine, &w_k1)?;
-        let e_fista = em.error(engine, &w_k)?;
-        let e_round = (e_total - e_fista).max(0.0);
+        let e_solver = em.error(engine, &w_k)?;
+        let e_round = (e_total - e_solver).max(0.0);
         history.push(RoundStat {
             round: rounds,
             lambda: lam,
             objective: e_total,
             residual: crate::tensor::ops::frob_dist(&w_k, &w_k1),
             support: w_k1.data().iter().filter(|&&x| x != 0.0).count(),
-            fista_iters: iters,
+            iters: run.iters,
+            e_round,
+            primal: run.primal,
+            dual: run.dual,
+            gap: run.gap,
         });
 
         let mut e_stop = f64::INFINITY;
@@ -146,7 +160,7 @@ pub fn tune_lambda(
         e_total: e_best,
         lambda: final_lambda,
         rounds,
-        fista_iters,
+        iters: total_iters,
         history,
     })
 }
@@ -156,6 +170,7 @@ mod tests {
     use super::*;
     use crate::pruner::engine::NativeEngine;
     use crate::pruner::rounding::satisfies_sparsity;
+    use crate::pruner::solver::FistaSolver;
     use crate::tensor::ops;
     use crate::util::Pcg64;
 
@@ -178,7 +193,7 @@ mod tests {
         let sp = Sparsity::Unstructured(0.5);
         let warm = round_to_sparsity(&w, sp); // magnitude pruning as warm start
         let e_warm = em.error(&engine, &warm).unwrap();
-        let res = tune_lambda(&engine, &em, &warm, sp, &cfg()).unwrap();
+        let res = tune_lambda(&engine, &FistaSolver, &em, &warm, sp, &cfg()).unwrap();
         assert!(satisfies_sparsity(&res.w, sp));
         assert!(res.e_total <= e_warm + 1e-9, "tuner must never regress: {} vs {e_warm}", res.e_total);
         assert!(res.e_total < e_warm * 0.999, "tuner should improve on magnitude warm start");
@@ -190,7 +205,7 @@ mod tests {
         let (engine, em, w) = fixture(2, 8, 32, 96);
         let sp = Sparsity::Semi(2, 4);
         let warm = round_to_sparsity(&w, sp);
-        let res = tune_lambda(&engine, &em, &warm, sp, &cfg()).unwrap();
+        let res = tune_lambda(&engine, &FistaSolver, &em, &warm, sp, &cfg()).unwrap();
         assert!(satisfies_sparsity(&res.w, sp));
         assert!(res.e_total <= em.error(&engine, &warm).unwrap() + 1e-9);
     }
@@ -203,7 +218,8 @@ mod tests {
         c.max_rounds = 2;
         c.patience = 100;
         c.eps = 0.0;
-        let res = tune_lambda(&engine, &em, &round_to_sparsity(&w, sp), sp, &c).unwrap();
+        let res =
+            tune_lambda(&engine, &FistaSolver, &em, &round_to_sparsity(&w, sp), sp, &c).unwrap();
         assert_eq!(res.rounds, 2);
     }
 
@@ -211,10 +227,24 @@ mod tests {
     fn zero_sparsity_returns_near_dense() {
         let (engine, em, w) = fixture(4, 8, 16, 64);
         let sp = Sparsity::Unstructured(0.0);
-        let res = tune_lambda(&engine, &em, &w, sp, &cfg()).unwrap();
+        let res = tune_lambda(&engine, &FistaSolver, &em, &w, sp, &cfg()).unwrap();
         // with no sparsity requirement the best solution tracks the dense W
         let rel = ops::frob_dist(&res.w, &w) / w.frob_norm();
         assert!(rel < 0.2, "rel {rel}");
+    }
+
+    #[test]
+    fn round_history_carries_solver_telemetry() {
+        let (engine, em, w) = fixture(5, 8, 16, 64);
+        let sp = Sparsity::Unstructured(0.5);
+        let warm = round_to_sparsity(&w, sp);
+        let res = tune_lambda(&engine, &FistaSolver, &em, &warm, sp, &cfg()).unwrap();
+        assert_eq!(res.history.len(), res.rounds);
+        assert_eq!(res.iters, res.history.iter().map(|h| h.iters).sum::<usize>());
+        for h in &res.history {
+            assert!(h.primal.is_finite() && h.dual.is_finite());
+            assert!(h.gap >= 0.0 && h.e_round >= 0.0);
+        }
     }
 
     #[test]
@@ -231,7 +261,7 @@ mod tests {
             let sp = Sparsity::Unstructured(g.f32_in(0.2, 0.7) as f64);
             let warm = round_to_sparsity(&w, sp);
             let e_warm = em.error(&engine, &warm).unwrap();
-            let res = tune_lambda(&engine, &em, &warm, sp, &cfg()).unwrap();
+            let res = tune_lambda(&engine, &FistaSolver, &em, &warm, sp, &cfg()).unwrap();
             if !satisfies_sparsity(&res.w, sp) {
                 return Err("sparsity violated".into());
             }

@@ -1,12 +1,21 @@
 //! FISTAPruner core (the paper's contribution):
 //!
+//! Two orthogonal axes (see docs/ARCHITECTURE.md "The two-axis solver
+//! split"): the *algorithm* axis (`solver::LayerSolver` — FISTA, ADMM,
+//! Frank-Wolfe) and the *execution* axis (`engine::SolverEngine` — XLA
+//! artifacts vs native kernels). Algorithm 1 composes one of each.
+//!
 //! * `rounding`  — eq. (8): exact-sparsity rounding (s% unstructured, n:m).
-//! * `engine`    — solver backends: XLA artifacts (production) and a
+//! * `engine`    — execution backends: XLA artifacts (production) and a
 //!   native-rust reference; both expose FISTA / Gram / power / objective.
+//! * `solver`    — the `LayerSolver` trait + FISTA/ADMM/Frank-Wolfe
+//!   implementations (the algorithm axis).
 //! * `fista`     — native FISTA iterations (paper eqs. 5a–5d), the oracle
 //!   the artifact path is tested against.
+//! * `admm`      — ADMM splitting on the same objective (comparator).
 //! * `objective` — Gram-form output error ‖W X* − WX‖_F (DESIGN.md §3.1).
-//! * `lambda`    — Algorithm 1: adaptive λ bisection on E_round/E_total.
+//! * `lambda`    — Algorithm 1: adaptive λ bisection on E_round/E_total,
+//!   solver-agnostic.
 //! * `unit`      — a decoder layer as a pruning unit: sequential operator
 //!   pruning with intra-layer error correction (paper §3.1, Fig. 2).
 //! * `scheduler` — full-model pruning; parallel decoder-layer dispatch
@@ -21,6 +30,7 @@ pub mod objective;
 pub mod report;
 pub mod rounding;
 pub mod scheduler;
+pub mod solver;
 pub mod unit;
 
 pub use engine::{NativeEngine, SolverEngine, XlaEngine};
@@ -28,3 +38,4 @@ pub use lambda::{tune_lambda, TuneCfg, TuneResult};
 pub use report::{LayerReport, OpReport, PruneReport, RoundStat};
 pub use rounding::{round_model_to_sparsity, round_to_sparsity, satisfies_sparsity};
 pub use scheduler::{prune_model, Method};
+pub use solver::{build as build_solver, AdmmSolver, FistaSolver, FrankWolfeSolver, LayerSolver, SolverRun};

@@ -5,22 +5,31 @@ use std::time::Duration;
 
 /// One outer tuning round of Algorithm 1, for convergence diagnostics
 /// (the `trace` CLI's per-layer convergence table; `prune --trace-out`
-/// emits one `fista_round` event per entry).
+/// emits one `solver_round` event per entry).
 #[derive(Clone, Debug)]
 pub struct RoundStat {
     /// 1-based round index within the operator's tuning loop.
     pub round: usize,
-    /// λ this round's FISTA solve used.
+    /// λ this round's solver call used.
     pub lambda: f64,
     /// E_total = ‖round(W*_K) X* − WX‖_F after this round.
     pub objective: f64,
-    /// ‖W*_K − round(W*_K)‖_F — distance of the FISTA iterate to the
+    /// ‖W*_K − round(W*_K)‖_F — distance of the solver iterate to the
     /// sparse feasible set (small ⇒ the solve landed near-feasible).
     pub residual: f64,
     /// Nonzeros in the rounded iterate.
     pub support: usize,
-    /// FISTA iterations spent this round.
-    pub fista_iters: usize,
+    /// Inner solver iterations spent this round.
+    pub iters: usize,
+    /// E_round = E_total − E_solver, the rounding penalty Algorithm 1
+    /// bisects on (paper §3.3).
+    pub e_round: f64,
+    /// Penalized primal objective at the solver iterate (pre-rounding).
+    pub primal: f64,
+    /// Solver-specific dual-side value (see `pruner::solver`).
+    pub dual: f64,
+    /// Solver-specific convergence gap; 0 ⇒ converged.
+    pub gap: f64,
 }
 
 /// Per-operator outcome.
@@ -34,7 +43,11 @@ pub struct OpReport {
     pub rel_error: f64,
     pub lambda: f64,
     pub rounds: usize,
-    pub fista_iters: usize,
+    /// Total inner solver iterations across tuning rounds.
+    pub iters: usize,
+    /// Which `LayerSolver` produced this operator ("" for dense passes
+    /// and one-shot baselines, which have no inner solver).
+    pub solver: String,
     pub sparsity: f64,
     pub elapsed: Duration,
     /// Per-round convergence history (empty when telemetry is off or the
@@ -75,20 +88,21 @@ impl PruneReport {
         crate::metrics::mean(&sp)
     }
 
-    pub fn total_fista_iters(&self) -> usize {
-        self.layers.iter().flat_map(|l| l.ops.iter().map(|o| o.fista_iters)).sum()
+    /// Total inner solver iterations (FISTA/ADMM/FW) across all operators.
+    pub fn total_solver_iters(&self) -> usize {
+        self.layers.iter().flat_map(|l| l.ops.iter().map(|o| o.iters)).sum()
     }
 
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
         format!(
-            "{} {} {}: rel_err {:.4}, sparsity {:.3}, {} fista iters, {:.1}s",
+            "{} {} {}: rel_err {:.4}, sparsity {:.3}, {} solver iters, {:.1}s",
             self.model,
             self.method,
             self.sparsity_label,
             self.mean_rel_error(),
             self.mean_sparsity(),
-            self.total_fista_iters(),
+            self.total_solver_iters(),
             self.elapsed.as_secs_f64()
         )
     }
@@ -110,7 +124,7 @@ impl PruneReport {
                 m.insert(key.to_string(), Json::Num(v));
             }
         }
-        m.insert("fista_iters".to_string(), Json::Num(self.total_fista_iters() as f64));
+        m.insert("solver_iters".to_string(), Json::Num(self.total_solver_iters() as f64));
         m.insert("elapsed_s".to_string(), Json::Num(self.elapsed.as_secs_f64()));
         Json::Obj(m)
     }
@@ -129,7 +143,8 @@ mod tests {
             rel_error: err / 10.0,
             lambda: 1e-5,
             rounds: 2,
-            fista_iters: 40,
+            iters: 40,
+            solver: "fista".into(),
             sparsity: sp,
             elapsed: Duration::from_millis(5),
             rounds_detail: Vec::new(),
@@ -146,7 +161,10 @@ mod tests {
         };
         assert!((rep.mean_rel_error() - 0.2).abs() < 1e-12);
         assert!((rep.mean_sparsity() - 0.5).abs() < 1e-12);
-        assert_eq!(rep.total_fista_iters(), 120);
+        assert_eq!(rep.total_solver_iters(), 120);
         assert!(rep.summary().contains("topt-s1"));
+        assert!(rep.summary().contains("solver iters"));
+        let prov = rep.provenance_json().to_string_compact();
+        assert!(prov.contains("solver_iters"));
     }
 }

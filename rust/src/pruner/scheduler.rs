@@ -19,7 +19,7 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::baselines::BaselineKind;
-use crate::config::{Engine, ModelSpec, Presets, PruneMode, PruneOptions};
+use crate::config::{Engine, ModelSpec, Presets, PruneMode, PruneOptions, SolverKind};
 use crate::model::embed::embed_windows;
 use crate::model::params::ModelParams;
 use crate::runtime::{ExecutorPool, Manifest, Session};
@@ -28,30 +28,49 @@ use crate::tensor::{par, Tensor};
 use super::report::PruneReport;
 use super::unit::{prune_unit, UnitResult};
 
-/// The pruning method a run executes.
+/// The pruning method a run executes. The algorithm axis is explicit:
+/// `Solver(kind)` runs Algorithm 1 with the named `LayerSolver` (FISTA is
+/// the paper's choice; ADMM and Frank-Wolfe are drop-in comparators).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Method {
     /// No pruning (evaluation convenience).
     Dense,
-    /// FISTAPruner (the paper's method, Algorithm 1).
-    Fista,
+    /// Algorithm 1 with the given layer solver (`--solver` on the CLI).
+    Solver(SolverKind),
     /// A baseline one-shot pruner.
     Baseline(BaselineKind),
 }
 
 impl Method {
+    /// The paper's default: Algorithm 1 driven by FISTA.
+    pub fn fista() -> Method {
+        Method::Solver(SolverKind::Fista)
+    }
+
     pub fn parse(s: &str) -> Result<Method> {
+        // Every accepted spelling is listed here explicitly — no
+        // fall-through to the baseline parser, so a typo ("fistta") gets
+        // one error naming every valid method instead of a confusing
+        // baseline-specific message.
         match s {
             "dense" => Ok(Method::Dense),
-            "fista" | "fistapruner" => Ok(Method::Fista),
-            other => Ok(Method::Baseline(BaselineKind::parse(other)?)),
+            "fista" | "fistapruner" => Ok(Method::Solver(SolverKind::Fista)),
+            "admm" => Ok(Method::Solver(SolverKind::Admm)),
+            "fw" | "frankwolfe" | "frank-wolfe" => Ok(Method::Solver(SolverKind::FrankWolfe)),
+            "magnitude" => Ok(Method::Baseline(BaselineKind::Magnitude)),
+            "wanda" => Ok(Method::Baseline(BaselineKind::Wanda)),
+            "sparsegpt" => Ok(Method::Baseline(BaselineKind::SparseGpt)),
+            other => bail!(
+                "unknown method '{other}' (methods: dense, fista, admm, fw, magnitude, \
+                 wanda, sparsegpt; solvers for --solver: fista, admm, fw)"
+            ),
         }
     }
 
     pub fn name(&self) -> &'static str {
         match self {
             Method::Dense => "dense",
-            Method::Fista => "fista",
+            Method::Solver(k) => k.name(),
             Method::Baseline(k) => k.name(),
         }
     }
@@ -311,9 +330,15 @@ mod tests {
 
     #[test]
     fn method_parse() {
-        assert_eq!(Method::parse("fista").unwrap(), Method::Fista);
+        assert_eq!(Method::parse("fista").unwrap(), Method::fista());
+        assert_eq!(Method::parse("admm").unwrap(), Method::Solver(SolverKind::Admm));
+        assert_eq!(Method::parse("fw").unwrap(), Method::Solver(SolverKind::FrankWolfe));
         assert_eq!(Method::parse("dense").unwrap(), Method::Dense);
         assert_eq!(Method::parse("wanda").unwrap(), Method::Baseline(BaselineKind::Wanda));
         assert!(Method::parse("nope").is_err());
+        // typos get the full method list, not a baseline-specific error
+        let err = Method::parse("fistta").unwrap_err().to_string();
+        assert!(err.contains("magnitude") && err.contains("sparsegpt") && err.contains("admm"),
+            "error should list every valid method: {err}");
     }
 }

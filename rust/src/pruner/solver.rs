@@ -1,0 +1,469 @@
+//! The *algorithm* axis of the pruner: a `LayerSolver` turns one
+//! (A, B, warm start, λ) Gram-form problem into a sparse-ish iterate.
+//!
+//! This is orthogonal to the *execution* axis (`SolverEngine`: Native vs
+//! XLA): Algorithm 1 (`lambda::tune_lambda`) drives any `LayerSolver`
+//! through the same λ bisection / rounding / error-correction loop, and a
+//! solver may delegate its hot loop to the engine (FISTA does) or run on
+//! the native kernels directly (ADMM, Frank-Wolfe).
+//!
+//! All three solvers minimize the same objective
+//!     f(W) = ½·tr(W A Wᵀ) − ⟨W, B⟩ + λ‖W‖₁
+//! (Frank-Wolfe in its constrained form: min f₀ over ‖W‖₁ ≤ τ(λ), with
+//! τ shrinking as λ grows so Algorithm 1's bisection applies unchanged).
+//! Per-solve telemetry is normalized into [`SolverRun`]; the convergence
+//! semantics of `dual`/`gap` are per-solver and documented on each
+//! implementation (see also docs/ARCHITECTURE.md).
+//!
+//! Determinism contract: every solver is bitwise thread-count invariant —
+//! they only compose kernels from `tensor::{kernels, ops, par}` that
+//! follow the row-block determinism rules.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::config::{AdmmCfg, FwCfg, Presets, SolverKind};
+use crate::tensor::{kernels, ops, Tensor};
+
+use super::admm::admm_solve_full;
+use super::engine::SolverEngine;
+use super::fista::soft_shrink;
+
+/// One solver invocation's outcome (one tuning round of Algorithm 1).
+pub struct SolverRun {
+    /// The iterate handed to the rounding step (need not be exactly
+    /// feasible for the target sparsity — Algorithm 1 rounds it).
+    pub w: Tensor,
+    /// Inner iterations actually run.
+    pub iters: usize,
+    /// Penalized primal objective ½tr(W A Wᵀ) − ⟨W,B⟩ + λ‖W‖₁ at `w`
+    /// (reported in the same form for every solver, so the `trace` CLI
+    /// and `ablation_solver` bench compare like with like).
+    pub primal: f64,
+    /// Solver-specific dual-side value; see each implementation.
+    pub dual: f64,
+    /// Solver-specific convergence gap (0 ⇒ converged); see each
+    /// implementation.
+    pub gap: f64,
+}
+
+/// A layer-wise solver for the Gram-form objective. Implementations must
+/// be `Send + Sync` (one solver instance is shared across the pruning
+/// unit's operator-overlap threads) and thread-count invariant.
+pub trait LayerSolver: Send + Sync {
+    /// Short label used in reports, traces, and CLI tables.
+    fn name(&self) -> &'static str;
+
+    /// Minimize ½tr(W A Wᵀ) − ⟨W,B⟩ + λ‖W‖₁ from warm start `w0`.
+    /// `l` is L = λ_max(A) (the engine's power-iteration output).
+    fn solve(
+        &self,
+        engine: &dyn SolverEngine,
+        a: &Tensor,
+        b: &Tensor,
+        w0: &Tensor,
+        lam: f64,
+        l: f64,
+    ) -> Result<SolverRun>;
+}
+
+/// Construct the solver for a [`SolverKind`] with its convergence presets.
+pub fn build(kind: SolverKind, presets: &Presets) -> Box<dyn LayerSolver> {
+    match kind {
+        SolverKind::Fista => Box::new(FistaSolver),
+        SolverKind::Admm => Box::new(AdmmSolver { cfg: presets.solvers.admm.clone() }),
+        SolverKind::FrankWolfe => Box::new(FrankWolfeSolver { cfg: presets.solvers.fw.clone() }),
+    }
+}
+
+fn l1_norm(w: &Tensor) -> f64 {
+    w.data().iter().map(|&x| x.abs() as f64).sum()
+}
+
+fn primal_value(engine: &dyn SolverEngine, a: &Tensor, b: &Tensor, w: &Tensor, lam: f64) -> Result<f64> {
+    // engine.obj = tr(W A Wᵀ) − 2⟨W,B⟩, so ½·obj = the quadratic part.
+    Ok(0.5 * engine.obj(a, b, w)? + lam * l1_norm(w))
+}
+
+// ---------------------------------------------------------------------
+// FISTA
+// ---------------------------------------------------------------------
+
+/// The paper's solver: delegates the fused proximal-gradient loop to the
+/// execution engine (`engine.fista`), so `--solver fista` is exactly the
+/// pre-refactor pipeline — the returned `w` is bitwise identical (pinned
+/// by rust/tests/solver_parity.rs). Telemetry semantics: `gap` is the
+/// prox fixed-point residual ‖W − prox_{λ/L}(W − ∇f(W)/L)‖_F (the eq. 7
+/// criterion evaluated at the returned point; 0 at an exact minimizer)
+/// and `dual` = primal − gap, a convergence surrogate rather than a true
+/// dual value. Computing them touches only fresh buffers, never `w`.
+pub struct FistaSolver;
+
+impl LayerSolver for FistaSolver {
+    fn name(&self) -> &'static str {
+        "fista"
+    }
+
+    fn solve(
+        &self,
+        engine: &dyn SolverEngine,
+        a: &Tensor,
+        b: &Tensor,
+        w0: &Tensor,
+        lam: f64,
+        l: f64,
+    ) -> Result<SolverRun> {
+        let (w, iters) = engine.fista(a, b, w0, lam, l)?;
+        let primal = primal_value(engine, a, b, &w, lam)?;
+        let gap = if l > 0.0 {
+            let mut grad = Tensor::zeros(w.shape().to_vec());
+            kernels::matmul_sub_into(&mut grad, &w, a, b);
+            let step = ops::add_scaled(&w, &grad, -(1.0 / l) as f32);
+            let prox = soft_shrink(&step, (lam / l) as f32);
+            ops::frob_dist(&w, &prox)
+        } else {
+            0.0
+        };
+        Ok(SolverRun { w, iters, primal, dual: primal - gap, gap })
+    }
+}
+
+// ---------------------------------------------------------------------
+// ADMM
+// ---------------------------------------------------------------------
+
+/// ADMM splitting (see `pruner::admm`): ρ = `rho_factor`·L. Telemetry
+/// semantics: `gap` is the primal residual ‖W − Z‖_F (feasibility of the
+/// W = Z split) and `dual` the dual residual ρ‖Z_K − Z_{K−1}‖_F
+/// (stationarity); both → 0 at convergence.
+pub struct AdmmSolver {
+    pub cfg: AdmmCfg,
+}
+
+impl LayerSolver for AdmmSolver {
+    fn name(&self) -> &'static str {
+        "admm"
+    }
+
+    fn solve(
+        &self,
+        engine: &dyn SolverEngine,
+        a: &Tensor,
+        b: &Tensor,
+        w0: &Tensor,
+        lam: f64,
+        l: f64,
+    ) -> Result<SolverRun> {
+        let rho = (self.cfg.rho_factor * l).max(1e-12);
+        let out = admm_solve_full(a, b, w0, lam, rho, self.cfg.max_iters, self.cfg.stop_tol)?;
+        let primal = primal_value(engine, a, b, &out.w, lam)?;
+        Ok(SolverRun {
+            w: out.w,
+            iters: out.iters,
+            primal,
+            dual: out.dual_res,
+            gap: out.primal_res,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Frank-Wolfe
+// ---------------------------------------------------------------------
+
+/// Frank-Wolfe with away steps over the ℓ₁ ball (the "Don't Be Greedy,
+/// Just Relax!" formulation of the same layer-wise objective).
+///
+/// The penalty λ‖W‖₁ is traded for the constraint ‖W‖₁ ≤ τ with
+/// τ = ‖W₀‖₁ / (1 + λ): larger λ ⇒ smaller ball ⇒ sparser iterate, so
+/// Algorithm 1's log-space λ bisection sweeps the radius unchanged.
+///
+/// Per iteration: the LMO over the ℓ₁ ball returns the vertex
+/// s = −τ·sign(g_{i*})·e_{i*} at i* = argmax |g| (first index wins —
+/// deterministic); the away atom is the active atom most aligned with the
+/// gradient. Whichever direction has the larger projected decrease is
+/// taken with an exact quadratic line search (the curvature tr(d A dᵀ)
+/// collapses to scalar lookups because every atom is a single coordinate
+/// or the warm-start matrix). Telemetry semantics: `gap` is the FW
+/// duality gap ⟨∇f, W − s⟩ (an upper bound on f(W) − f(W*) over the
+/// ball; stopping criterion) and `dual` = primal − gap (a lower bound on
+/// the constrained optimum, shifted by the reported λ‖W‖₁ term).
+pub struct FrankWolfeSolver {
+    pub cfg: FwCfg,
+}
+
+const FW_INIT_ATOM: u64 = u64::MAX;
+
+impl LayerSolver for FrankWolfeSolver {
+    fn name(&self) -> &'static str {
+        "fw"
+    }
+
+    fn solve(
+        &self,
+        engine: &dyn SolverEngine,
+        a: &Tensor,
+        b: &Tensor,
+        w0: &Tensor,
+        lam: f64,
+        _l: f64,
+    ) -> Result<SolverRun> {
+        let (m, n) = (w0.rows(), w0.cols());
+        if a.rows() != a.cols() || a.rows() != n {
+            bail!("FW: A {:?} incompatible with W0 {:?}", a.shape(), w0.shape());
+        }
+        if b.shape() != w0.shape() {
+            bail!("FW: B {:?} != W0 {:?}", b.shape(), w0.shape());
+        }
+        if !lam.is_finite() || lam < 0.0 {
+            bail!("FW: lambda must be finite and >= 0, got {lam}");
+        }
+        let l1_w0 = l1_norm(w0);
+        let tau = l1_w0 / (1.0 + lam);
+        if !tau.is_finite() || tau <= 0.0 {
+            // Degenerate ball (all-zero warm start or huge λ): the only
+            // feasible point is 0.
+            let w = Tensor::zeros(vec![m, n]);
+            let primal = primal_value(engine, a, b, &w, lam)?;
+            return Ok(SolverRun { w, iters: 0, primal, dual: primal, gap: 0.0 });
+        }
+
+        // Scale the warm start onto the ball boundary — the "init atom".
+        let scale = (tau / l1_w0) as f32;
+        let init_atom = Tensor::from_vec(
+            vec![m, n],
+            w0.data().iter().map(|&x| x * scale).collect(),
+        );
+        let mut w = init_atom.clone();
+        // ⟨a₀, a₀·A⟩ and ⟨a₀, B⟩, fixed for the whole solve.
+        let a0a = ops::matmul(&init_atom, a);
+        let a0_a_a0 = ops::dot(&init_atom, &a0a);
+        let a0_dot_b = ops::dot(&init_atom, b);
+
+        // Active set: atom id → convex weight. Coordinate vertex ±τ·e_i
+        // has id 2i (+) / 2i+1 (−); the init atom is FW_INIT_ATOM.
+        let mut atoms: BTreeMap<u64, f64> = BTreeMap::new();
+        atoms.insert(FW_INIT_ATOM, 1.0);
+
+        let mut grad = Tensor::zeros(vec![m, n]);
+        let mut iters = 0usize;
+        let mut gap = 0.0f64;
+        for _ in 0..self.cfg.max_iters {
+            // ∇f₀(W) = W·A − B.
+            kernels::matmul_sub_into(&mut grad, &w, a, b);
+            let g = grad.data();
+
+            // LMO: s = −τ·sign(g_{i*})·e_{i*}, i* = argmax |g| (first wins).
+            let mut bi = 0usize;
+            let mut bv = -1.0f32;
+            for (i, &gi) in g.iter().enumerate() {
+                let ag = gi.abs();
+                if ag > bv {
+                    bv = ag;
+                    bi = i;
+                }
+            }
+            let s_val: f64 = if g[bi] > 0.0 { -tau } else { tau };
+            let gw = ops::dot(&grad, &w);
+            gap = gw - s_val * g[bi] as f64;
+            if gap <= self.cfg.gap_tol * gw.abs().max(1.0) {
+                break;
+            }
+            iters += 1;
+
+            // Away atom: the active atom most aligned with the gradient.
+            let mut away_id = FW_INIT_ATOM;
+            let mut away_score = f64::NEG_INFINITY;
+            let mut init_dot_g = 0.0f64;
+            for &id in atoms.keys() {
+                let score = if id == FW_INIT_ATOM {
+                    init_dot_g = ops::dot(&grad, &init_atom);
+                    init_dot_g
+                } else {
+                    let idx = (id >> 1) as usize;
+                    let val = if id & 1 == 1 { -tau } else { tau };
+                    val * g[idx] as f64
+                };
+                if score > away_score {
+                    away_score = score;
+                    away_id = id;
+                }
+            }
+            let away_gain = away_score - gw;
+
+            // Shared curvature term ⟨W, W·A⟩ = ⟨W, ∇f₀ + B⟩.
+            let w_dot_wa = gw + ops::dot(&w, b);
+
+            let alpha = atoms[&away_id];
+            // α ≥ 1 only through float drift with a single effective atom;
+            // the away direction is then degenerate, so fall back to FW.
+            let use_away = away_gain > gap && atoms.len() > 1 && alpha < 1.0 - 1e-9;
+            if use_away {
+                // d = W − a; curvature tr(d A dᵀ).
+                let gamma_max = alpha / (1.0 - alpha);
+                let curv = if away_id == FW_INIT_ATOM {
+                    w_dot_wa - 2.0 * (init_dot_g + a0_dot_b) + a0_a_a0
+                } else {
+                    let idx = (away_id >> 1) as usize;
+                    let val = if away_id & 1 == 1 { -tau } else { tau };
+                    let c = idx % n;
+                    let wa_rc = g[idx] as f64 + b.data()[idx] as f64;
+                    w_dot_wa - 2.0 * val * wa_rc + val * val * a.at2(c, c) as f64
+                };
+                let gamma = if curv > 0.0 {
+                    (away_gain / curv).clamp(0.0, gamma_max)
+                } else {
+                    gamma_max
+                };
+                if !gamma.is_finite() || gamma <= 0.0 {
+                    break; // no progress possible in this direction
+                }
+                // W ← (1+γ)W − γ·a.
+                let gf = gamma as f32;
+                for x in w.data_mut() {
+                    *x *= 1.0 + gf;
+                }
+                if away_id == FW_INIT_ATOM {
+                    for (x, &a0) in w.data_mut().iter_mut().zip(init_atom.data()) {
+                        *x -= gf * a0;
+                    }
+                } else {
+                    let idx = (away_id >> 1) as usize;
+                    let val = if away_id & 1 == 1 { -tau } else { tau };
+                    w.data_mut()[idx] -= gf * val as f32;
+                }
+                let drop = gamma >= gamma_max * (1.0 - 1e-12);
+                for (id, wt) in atoms.iter_mut() {
+                    *wt *= 1.0 + gamma;
+                    if *id == away_id {
+                        *wt -= gamma;
+                    }
+                }
+                if drop {
+                    atoms.remove(&away_id);
+                }
+            } else {
+                // d = s − W; curvature collapses onto the vertex entry.
+                let c = bi % n;
+                let wa_bi = g[bi] as f64 + b.data()[bi] as f64;
+                let curv = s_val * s_val * a.at2(c, c) as f64 - 2.0 * s_val * wa_bi + w_dot_wa;
+                let gamma = if curv > 0.0 { (gap / curv).clamp(0.0, 1.0) } else { 1.0 };
+                if gamma <= 0.0 {
+                    break;
+                }
+                // W ← (1−γ)W + γ·s.
+                let gf = gamma as f32;
+                for x in w.data_mut() {
+                    *x *= 1.0 - gf;
+                }
+                w.data_mut()[bi] += gf * s_val as f32;
+                let s_id = (bi as u64) << 1 | u64::from(s_val < 0.0);
+                if gamma >= 1.0 {
+                    atoms.clear();
+                } else {
+                    for wt in atoms.values_mut() {
+                        *wt *= 1.0 - gamma;
+                    }
+                }
+                *atoms.entry(s_id).or_insert(0.0) += gamma;
+            }
+            atoms.retain(|_, wt| *wt > 1e-12);
+        }
+
+        let primal = primal_value(engine, a, b, &w, lam)?;
+        Ok(SolverRun { w, iters, primal, dual: primal - gap, gap })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruner::engine::NativeEngine;
+    use crate::tensor::ops::{matmul, matmul_nt};
+    use crate::util::Pcg64;
+
+    fn setup(seed: u64, m: usize, n: usize, p: usize) -> (Tensor, Tensor, Tensor, f64) {
+        let mut rng = Pcg64::seeded(seed);
+        let w = Tensor::from_vec(vec![m, n], rng.normal_vec(m * n, 1.0));
+        let x = Tensor::from_vec(vec![n, p], rng.normal_vec(n * p, 0.5));
+        let a = matmul_nt(&x, &x);
+        let b = matmul(&w, &a);
+        let l = crate::linalg::power_iteration(&a, 64, 1.02);
+        (w, a, b, l)
+    }
+
+    #[test]
+    fn fista_solver_matches_engine_fista_bitwise() {
+        let (w, a, b, l) = setup(1, 8, 16, 64);
+        let engine = NativeEngine::default();
+        let (direct, k_direct) = engine.fista(&a, &b, &w, 0.05, l).unwrap();
+        let run = FistaSolver.solve(&engine, &a, &b, &w, 0.05, l).unwrap();
+        assert_eq!(run.iters, k_direct);
+        assert_eq!(run.w.data(), direct.data(), "FistaSolver must not perturb the iterate");
+        assert!(run.primal.is_finite() && run.gap >= 0.0);
+    }
+
+    #[test]
+    fn all_solvers_return_finite_telemetry() {
+        let (w, a, b, l) = setup(2, 8, 16, 64);
+        let engine = NativeEngine::default();
+        let presets = crate::config::Presets::load(&crate::config::repo_root().unwrap()).unwrap();
+        for kind in [SolverKind::Fista, SolverKind::Admm, SolverKind::FrankWolfe] {
+            let solver = build(kind, &presets);
+            let run = solver.solve(&engine, &a, &b, &w, 0.1, l).unwrap();
+            assert_eq!(run.w.shape(), w.shape());
+            assert!(run.primal.is_finite(), "{}: primal", solver.name());
+            assert!(run.dual.is_finite(), "{}: dual", solver.name());
+            assert!(run.gap.is_finite() && run.gap >= 0.0, "{}: gap", solver.name());
+        }
+    }
+
+    #[test]
+    fn fw_larger_lambda_gives_smaller_ball() {
+        let (w, a, b, _l) = setup(3, 8, 16, 64);
+        let engine = NativeEngine::default();
+        let solver = FrankWolfeSolver { cfg: FwCfg::default() };
+        let mut prev_l1 = f64::INFINITY;
+        for lam in [1e-4, 1.0, 1e3] {
+            let run = solver.solve(&engine, &a, &b, &w, lam, 0.0).unwrap();
+            let l1 = run.w.data().iter().map(|&x| x.abs() as f64).sum::<f64>();
+            assert!(l1 <= prev_l1 + 1e-6, "λ={lam}: ‖W‖₁ {l1} > previous {prev_l1}");
+            // iterates stay inside the τ(λ) ball (up to f32 accumulation)
+            let tau = w.data().iter().map(|&x| x.abs() as f64).sum::<f64>() / (1.0 + lam);
+            assert!(l1 <= tau * 1.001 + 1e-6, "λ={lam}: ‖W‖₁ {l1} outside ball τ={tau}");
+            prev_l1 = l1;
+        }
+    }
+
+    #[test]
+    fn fw_zero_warm_start_returns_zeros() {
+        let (_w, a, b, _l) = setup(4, 8, 16, 64);
+        let engine = NativeEngine::default();
+        let solver = FrankWolfeSolver { cfg: FwCfg::default() };
+        let w0 = Tensor::zeros(vec![8, 16]);
+        let run = solver.solve(&engine, &a, &b, &w0, 0.1, 0.0).unwrap();
+        assert!(run.w.data().iter().all(|&x| x == 0.0));
+        assert_eq!(run.iters, 0);
+    }
+
+    #[test]
+    fn fw_reduces_objective_from_warm_start() {
+        let (w, a, b, _l) = setup(5, 12, 24, 96);
+        let engine = NativeEngine::default();
+        let solver = FrankWolfeSolver { cfg: FwCfg { max_iters: 200, gap_tol: 1e-7 } };
+        let lam = 0.01;
+        // f₀ at the scaled warm start (the FW start point) vs at the end
+        let l1_w0 = w.data().iter().map(|&x| x.abs() as f64).sum::<f64>();
+        let scale = (l1_w0 / (1.0 + lam) / l1_w0) as f32;
+        let start = Tensor::from_vec(
+            w.shape().to_vec(),
+            w.data().iter().map(|&x| x * scale).collect(),
+        );
+        let f0 = 0.5 * ops::quad_obj(&a, &b, &start);
+        let run = solver.solve(&engine, &a, &b, &w, lam, 0.0).unwrap();
+        let f1 = 0.5 * ops::quad_obj(&a, &b, &run.w);
+        assert!(f1 <= f0 + 1e-6, "FW must not increase f₀: {f1} vs {f0}");
+        assert!(run.iters > 0);
+    }
+}

@@ -38,6 +38,7 @@ use super::lambda::{tune_lambda, TuneCfg};
 use super::objective::ErrorModel;
 use super::report::{LayerReport, OpReport, RoundStat};
 use super::scheduler::Method;
+use super::solver::{self, LayerSolver};
 
 /// Result of pruning one layer.
 pub struct UnitResult {
@@ -63,12 +64,12 @@ struct SolveOut {
     w_star: Tensor,
     lambda: f64,
     rounds: usize,
-    fista_iters: usize,
+    iters: usize,
     error: f64,
     /// ‖WX‖ from the error model's constant term (relative-error scale).
     scale: f64,
     elapsed: std::time::Duration,
-    /// Per-round convergence telemetry (FISTA path only; empty for
+    /// Per-round convergence telemetry (solver path only; empty for
     /// baselines and dense).
     history: Vec<RoundStat>,
 }
@@ -160,6 +161,13 @@ pub fn prune_unit(
         (WarmStart::Wanda, _) | (WarmStart::Auto, FamilyKind::Tllama) => Some(BaselineKind::Wanda),
         (WarmStart::Dense, _) => None,
     };
+    // Algorithm axis: build the layer solver once; it is shared (Sync)
+    // across the operator-overlap threads below.
+    let layer_solver: Option<Box<dyn LayerSolver>> = match method {
+        Method::Solver(k) => Some(solver::build(*k, presets)),
+        _ => None,
+    };
+    let solver_name: &str = layer_solver.as_ref().map(|s| s.name()).unwrap_or("");
 
     // Solve one operator against its (X, X*) pair — pure w.r.t. the layer
     // state, so same-capture-point operators can run concurrently.
@@ -170,18 +178,19 @@ pub fn prune_unit(
         }
         let em = ErrorModel::build(engine, w, xd, xs)
             .with_context(|| format!("layer {layer} op {}", op.name))?;
-        let (w_star, lambda, rounds, fista_iters, history) = match method {
+        let (w_star, lambda, rounds, iters, history) = match method {
             Method::Dense => unreachable!("dense handled above"),
             Method::Baseline(kind) => {
                 (baselines::prune_matrix(*kind, w, &em.a, opts.sparsity)?, 0.0, 0, 0, Vec::new())
             }
-            Method::Fista => {
+            Method::Solver(_) => {
                 let w0 = match warm_kind {
                     Some(kind) => baselines::prune_matrix(kind, w, &em.a, opts.sparsity)?,
                     None => w.clone(),
                 };
-                let res = tune_lambda(engine, &em, &w0, opts.sparsity, &tune_cfg)?;
-                (res.w, res.lambda, res.rounds, res.fista_iters, res.history)
+                let ls = layer_solver.as_deref().expect("solver built for Method::Solver");
+                let res = tune_lambda(engine, ls, &em, &w0, opts.sparsity, &tune_cfg)?;
+                (res.w, res.lambda, res.rounds, res.iters, res.history)
             }
         };
         let error = em.error(engine, &w_star)?;
@@ -190,7 +199,7 @@ pub fn prune_unit(
             w_star,
             lambda,
             rounds,
-            fista_iters,
+            iters,
             error,
             scale,
             elapsed: t_op.elapsed(),
@@ -273,7 +282,8 @@ pub fn prune_unit(
                 rel_error: if scale > 0.0 { out.error / scale } else { 0.0 },
                 lambda: out.lambda,
                 rounds: out.rounds,
-                fista_iters: out.fista_iters,
+                iters: out.iters,
+                solver: solver_name.to_string(),
                 sparsity: out.w_star.sparsity(),
                 elapsed: out.elapsed,
                 rounds_detail: out.history,

@@ -29,7 +29,7 @@ fn error_correction_helps_downstream_ops() {
             error_correction: correction,
             ..Default::default()
         };
-        let (pruned, report) = lab.prune(model, &dense, &calib, Method::Fista, &opts).unwrap();
+        let (pruned, report) = lab.prune(model, &dense, &calib, Method::fista(), &opts).unwrap();
         let ppl = lab.ppl(model, &pruned, corpus).unwrap();
         (ppl, report)
     };
@@ -59,7 +59,7 @@ fn parallel_mode_matches_worker_counts() {
             workers,
             ..Default::default()
         };
-        lab.prune(model, &dense, &calib, Method::Fista, &opts).unwrap().0
+        lab.prune(model, &dense, &calib, Method::fista(), &opts).unwrap().0
     };
     let w1 = run(&mut lab, 1);
     let w3 = run(&mut lab, 3);
@@ -81,7 +81,7 @@ fn sequential_beats_or_matches_parallel_on_perplexity() {
     let sp = Sparsity::Unstructured(0.7);
     let mut run = |mode: PruneMode| {
         let opts = PruneOptions { sparsity: sp, mode, workers: 2, ..Default::default() };
-        let (pruned, _) = lab.prune(model, &dense, &calib, Method::Fista, &opts).unwrap();
+        let (pruned, _) = lab.prune(model, &dense, &calib, Method::fista(), &opts).unwrap();
         lab.ppl(model, &pruned, corpus).unwrap()
     };
     let seq = run(PruneMode::Sequential);
@@ -101,7 +101,7 @@ fn native_engine_end_to_end() {
         max_rounds: Some(3),
         ..Default::default()
     };
-    let (pruned, report) = lab.prune(model, &dense, &calib, Method::Fista, &opts).unwrap();
+    let (pruned, report) = lab.prune(model, &dense, &calib, Method::fista(), &opts).unwrap();
     assert!(report.mean_sparsity() >= 0.5 - 1e-6);
     let ppl = lab.ppl(model, &pruned, corpus).unwrap();
     assert!(ppl.is_finite());

@@ -7,7 +7,7 @@ use fistapruner::config::Sparsity;
 use fistapruner::pruner::engine::{NativeEngine, SolverEngine, XlaEngine};
 use fistapruner::pruner::objective::ErrorModel;
 use fistapruner::pruner::rounding::{round_to_sparsity, satisfies_sparsity};
-use fistapruner::pruner::{tune_lambda, TuneCfg};
+use fistapruner::pruner::{tune_lambda, FistaSolver, TuneCfg};
 use fistapruner::tensor::Tensor;
 use fistapruner::util::Pcg64;
 
@@ -29,7 +29,7 @@ fn tuner_parity_xla_vs_native() {
 
     let run = |engine: &dyn SolverEngine| {
         let em = ErrorModel::build(engine, &w, &x, &x).unwrap();
-        let res = tune_lambda(engine, &em, &warm, sp, &cfg()).unwrap();
+        let res = tune_lambda(engine, &FistaSolver, &em, &warm, sp, &cfg()).unwrap();
         (res, em)
     };
     let (res_x, em_x) = run(&xla);
@@ -59,7 +59,7 @@ fn tuner_improves_over_warm_start_through_xla() {
     let em = ErrorModel::build(&xla, &w, &x, &x).unwrap();
     let warm = round_to_sparsity(&w, sp);
     let e_warm = em.error(&xla, &warm).unwrap();
-    let res = tune_lambda(&xla, &em, &warm, sp, &cfg()).unwrap();
+    let res = tune_lambda(&xla, &FistaSolver, &em, &warm, sp, &cfg()).unwrap();
     assert!(satisfies_sparsity(&res.w, sp));
     assert!(res.e_total < e_warm, "xla tuner must beat magnitude warm start");
 }

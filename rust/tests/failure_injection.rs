@@ -547,7 +547,7 @@ fn xla_engine_without_session_is_a_clear_error() {
         &spec,
         &params,
         &calib,
-        fistapruner::pruner::Method::Fista,
+        fistapruner::pruner::Method::fista(),
         &opts,
     )
     .unwrap_err()

@@ -32,7 +32,7 @@ fn full_pipeline_all_methods() {
         Method::Baseline(BaselineKind::Magnitude),
         Method::Baseline(BaselineKind::Wanda),
         Method::Baseline(BaselineKind::SparseGpt),
-        Method::Fista,
+        Method::fista(),
     ];
     for sp in [Sparsity::Unstructured(0.5), Sparsity::Semi(2, 4)] {
         let mut errs = Vec::new();
@@ -74,8 +74,8 @@ fn deterministic_given_seed() {
     let dense = lab.trained(model, corpus).unwrap();
     let calib = lab.calib(corpus, 8, 3).unwrap();
     let opts = PruneOptions::default();
-    let (a, _) = lab.prune(model, &dense, &calib, Method::Fista, &opts).unwrap();
-    let (b, _) = lab.prune(model, &dense, &calib, Method::Fista, &opts).unwrap();
+    let (a, _) = lab.prune(model, &dense, &calib, Method::fista(), &opts).unwrap();
+    let (b, _) = lab.prune(model, &dense, &calib, Method::fista(), &opts).unwrap();
     for ((n1, t1), (_n2, t2)) in a.iter().zip(b.iter()) {
         assert_eq!(t1, t2, "nondeterministic at {n1}");
     }

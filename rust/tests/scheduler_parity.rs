@@ -58,7 +58,7 @@ fn parallel_mode_is_worker_count_invariant_native() {
     let run_w = |workers: usize| {
         let opts =
             PruneOptions { mode: PruneMode::Parallel, workers, ..native_opts() };
-        run(&presets, &spec, &params, &calib, Method::Fista, &opts)
+        run(&presets, &spec, &params, &calib, Method::fista(), &opts)
     };
     let (w1, r1) = run_w(1);
     let (w3, r3) = run_w(3);
@@ -71,7 +71,7 @@ fn parallel_mode_is_worker_count_invariant_native() {
             assert_eq!(o1.error.to_bits(), o3.error.to_bits(), "op {} error", o1.op);
             assert_eq!(o1.lambda.to_bits(), o3.lambda.to_bits(), "op {} lambda", o1.op);
             assert_eq!(o1.rounds, o3.rounds);
-            assert_eq!(o1.fista_iters, o3.fista_iters);
+            assert_eq!(o1.iters, o3.iters);
         }
     }
 }
@@ -83,7 +83,7 @@ fn sequential_op_overlap_is_exact_native() {
     let (presets, spec, params, calib) = setup("tllama-s1");
     let run_w = |workers: usize| {
         let opts = PruneOptions { mode: PruneMode::Sequential, workers, ..native_opts() };
-        run(&presets, &spec, &params, &calib, Method::Fista, &opts).0
+        run(&presets, &spec, &params, &calib, Method::fista(), &opts).0
     };
     let solo = run_w(1);
     let overlapped = run_w(3);
@@ -95,7 +95,7 @@ fn kernel_threads_do_not_change_results_native() {
     let (presets, spec, params, calib) = setup("topt-s1");
     let run_t = |threads: usize| {
         let opts = PruneOptions { threads, ..native_opts() };
-        run(&presets, &spec, &params, &calib, Method::Fista, &opts).0
+        run(&presets, &spec, &params, &calib, Method::fista(), &opts).0
     };
     let t1 = run_t(1);
     let t4 = run_t(4);
@@ -110,11 +110,11 @@ fn sequential_and_parallel_agree_on_the_first_layer() {
     let (presets, spec, params, calib) = setup("topt-s1");
     let seq = {
         let opts = PruneOptions { mode: PruneMode::Sequential, ..native_opts() };
-        run(&presets, &spec, &params, &calib, Method::Fista, &opts)
+        run(&presets, &spec, &params, &calib, Method::fista(), &opts)
     };
     let par = {
         let opts = PruneOptions { mode: PruneMode::Parallel, ..native_opts() };
-        run(&presets, &spec, &params, &calib, Method::Fista, &opts)
+        run(&presets, &spec, &params, &calib, Method::fista(), &opts)
     };
     for op in pruned_ops(&spec) {
         let name = format!("l0.{}", op.name);
@@ -136,7 +136,7 @@ fn all_methods_meet_sparsity_natively() {
             Method::Baseline(Magnitude),
             Method::Baseline(Wanda),
             Method::Baseline(SparseGpt),
-            Method::Fista,
+            Method::fista(),
         ] {
             let opts = PruneOptions { sparsity: sp, ..native_opts() };
             let (pruned, report) = run(&presets, &spec, &params, &calib, method, &opts);
@@ -159,7 +159,7 @@ fn fista_beats_baselines_on_operator_error_natively() {
     use fistapruner::baselines::BaselineKind::*;
     let sp = Sparsity::Unstructured(0.5);
     let mut errs = Vec::new();
-    for method in [Method::Baseline(Magnitude), Method::Baseline(Wanda), Method::Baseline(SparseGpt), Method::Fista] {
+    for method in [Method::Baseline(Magnitude), Method::Baseline(Wanda), Method::Baseline(SparseGpt), Method::fista()] {
         let opts = PruneOptions { sparsity: sp, ..native_opts() };
         let (_, report) = run(&presets, &spec, &params, &calib, method, &opts);
         errs.push((method.name(), report.mean_rel_error()));

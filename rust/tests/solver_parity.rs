@@ -1,0 +1,213 @@
+//! LayerSolver contract tests, artifact-free (native engine throughout):
+//!
+//! * `FistaSolver` through `tune_lambda` is BITWISE identical to the
+//!   pre-refactor Algorithm-1 loop (replicated inline here) — the
+//!   refactor pin: `prune --solver fista` reproduces the old pipeline.
+//! * ADMM and Frank-Wolfe reach objectives within tolerance of FISTA on
+//!   a synthetic Gram problem and land on the exact target sparsity
+//!   (unstructured and n:m) after Algorithm 1's rounding.
+//! * Every solver is thread-count invariant, bitwise.
+//! * ADMM and FW run end-to-end through `prune_model` with their solver
+//!   labels in the report.
+
+use fistapruner::config::{repo_root, Engine, Presets, PruneOptions, SolverKind, Sparsity};
+use fistapruner::model::init::init_params;
+use fistapruner::model::ops::pruned_ops;
+use fistapruner::pruner::engine::{NativeEngine, SolverEngine};
+use fistapruner::pruner::objective::ErrorModel;
+use fistapruner::pruner::scheduler::{prune_model, Method};
+use fistapruner::pruner::{
+    build_solver, round_to_sparsity, satisfies_sparsity, tune_lambda, FistaSolver, LayerSolver,
+    TuneCfg,
+};
+use fistapruner::tensor::{par, Tensor};
+use fistapruner::util::Pcg64;
+
+fn fixture(seed: u64, m: usize, n: usize, p: usize) -> (NativeEngine, ErrorModel, Tensor) {
+    let mut rng = Pcg64::seeded(seed);
+    let w = Tensor::from_vec(vec![m, n], rng.normal_vec(m * n, 1.0));
+    let x = Tensor::from_vec(vec![n, p], rng.normal_vec(n * p, 0.6));
+    let engine = NativeEngine::default();
+    let em = ErrorModel::build(&engine, &w, &x, &x).unwrap();
+    (engine, em, w)
+}
+
+fn cfg() -> TuneCfg {
+    TuneCfg { lambda_init: 1e-5, lambda_hi: 1e6, xi: 0.3, patience: 3, eps: 1e-6, max_rounds: 8 }
+}
+
+/// The Algorithm-1 loop exactly as it existed before the LayerSolver
+/// refactor: engine.fista + round + log-space bisection. Any drift in
+/// `tune_lambda(engine, &FistaSolver, ...)` shows up against this oracle.
+fn legacy_tune(
+    engine: &dyn SolverEngine,
+    em: &ErrorModel,
+    w0: &Tensor,
+    sp: Sparsity,
+    cfg: &TuneCfg,
+) -> (Tensor, f64, usize) {
+    let mut w_best = round_to_sparsity(w0, sp);
+    let mut e_best = em.error(engine, &w_best).unwrap();
+    let mut lam = cfg.lambda_init;
+    let (mut lo, mut hi) = (0.0f64, cfg.lambda_hi);
+    let mut t = 0usize;
+    let mut rounds = 0usize;
+    while rounds < cfg.max_rounds {
+        rounds += 1;
+        let (w_k, _iters) = engine.fista(&em.a, &em.b, &w_best, lam, em.l).unwrap();
+        let w_k1 = round_to_sparsity(&w_k, sp);
+        let e_total = em.error(engine, &w_k1).unwrap();
+        let e_fista = em.error(engine, &w_k).unwrap();
+        let e_round = (e_total - e_fista).max(0.0);
+        let mut e_stop = f64::INFINITY;
+        if e_total < e_best {
+            e_stop = (e_best - e_total) / e_best.max(1e-30);
+            w_best = w_k1;
+            e_best = e_total;
+            t = 0;
+        } else {
+            t += 1;
+        }
+        let ratio = if e_total > 0.0 { (e_round / e_total).clamp(0.0, 1.0) } else { 0.0 };
+        if ratio > cfg.xi {
+            lo = lam;
+        } else {
+            hi = lam;
+        }
+        lam = (lo.max(1e-8) * hi.max(1e-8)).sqrt();
+        if t >= cfg.patience || e_stop < cfg.eps {
+            break;
+        }
+    }
+    (w_best, e_best, rounds)
+}
+
+#[test]
+fn fista_solver_is_bitwise_identical_to_pre_refactor_loop() {
+    for threads in [1usize, 4] {
+        par::set_threads(threads);
+        let (engine, em, w) = fixture(11, 16, 32, 128);
+        for sp in [Sparsity::Unstructured(0.5), Sparsity::Semi(2, 4)] {
+            let warm = round_to_sparsity(&w, sp);
+            let (w_old, e_old, rounds_old) = legacy_tune(&engine, &em, &warm, sp, &cfg());
+            let res = tune_lambda(&engine, &FistaSolver, &em, &warm, sp, &cfg()).unwrap();
+            assert_eq!(
+                res.w.data(),
+                w_old.data(),
+                "refactor pin broken ({sp:?}, {threads} threads): iterates differ"
+            );
+            assert_eq!(res.e_total.to_bits(), e_old.to_bits(), "{sp:?}: e_total differs");
+            assert_eq!(res.rounds, rounds_old, "{sp:?}: round count differs");
+        }
+    }
+    par::set_threads(0);
+}
+
+#[test]
+fn admm_and_fw_reach_fista_quality_and_exact_sparsity() {
+    let presets = Presets::load(&repo_root().unwrap()).unwrap();
+    let (engine, em, w) = fixture(12, 16, 32, 128);
+    for sp in [Sparsity::Unstructured(0.5), Sparsity::Semi(2, 4)] {
+        let warm = round_to_sparsity(&w, sp);
+        let e_warm = em.error(&engine, &warm).unwrap();
+        let fista = tune_lambda(&engine, &FistaSolver, &em, &warm, sp, &cfg()).unwrap();
+        for kind in [SolverKind::Admm, SolverKind::FrankWolfe] {
+            let solver = build_solver(kind, &presets);
+            let res = tune_lambda(&engine, solver.as_ref(), &em, &warm, sp, &cfg()).unwrap();
+            // exact sparsity is structural: w_best is always rounded
+            assert!(satisfies_sparsity(&res.w, sp), "{} {sp:?}: sparsity violated", kind.name());
+            // never worse than the warm start (Algorithm 1 keeps the best)
+            assert!(
+                res.e_total <= e_warm + 1e-9,
+                "{} {sp:?}: regressed vs warm start ({} vs {e_warm})",
+                kind.name(),
+                res.e_total
+            );
+            // and within tolerance of FISTA's tuned objective
+            assert!(
+                res.e_total <= 2.0 * fista.e_total + 1e-9,
+                "{} {sp:?}: objective {} vs fista {}",
+                kind.name(),
+                res.e_total,
+                fista.e_total
+            );
+            assert_eq!(res.history.len(), res.rounds);
+            for h in &res.history {
+                assert!(h.primal.is_finite() && h.dual.is_finite() && h.gap.is_finite());
+                assert!(h.gap >= 0.0, "{}: negative gap", kind.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn every_solver_is_thread_count_invariant() {
+    let presets = Presets::load(&repo_root().unwrap()).unwrap();
+    let sp = Sparsity::Unstructured(0.5);
+    for kind in [SolverKind::Fista, SolverKind::Admm, SolverKind::FrankWolfe] {
+        let solver: Box<dyn LayerSolver> = build_solver(kind, &presets);
+        let run = |threads: usize| {
+            par::set_threads(threads);
+            let (engine, em, w) = fixture(13, 16, 24, 96);
+            let warm = round_to_sparsity(&w, sp);
+            tune_lambda(&engine, solver.as_ref(), &em, &warm, sp, &cfg()).unwrap()
+        };
+        let t1 = run(1);
+        let t4 = run(4);
+        par::set_threads(0);
+        assert_eq!(
+            t1.w.data(),
+            t4.w.data(),
+            "{}: thread count changed the result",
+            kind.name()
+        );
+        assert_eq!(t1.e_total.to_bits(), t4.e_total.to_bits(), "{}: e_total", kind.name());
+        assert_eq!(t1.iters, t4.iters, "{}: iteration count", kind.name());
+    }
+}
+
+#[test]
+fn admm_and_fw_run_end_to_end_through_prune_model() {
+    let presets = Presets::load(&repo_root().unwrap()).unwrap();
+    let spec = presets.model("topt-s1").unwrap().clone();
+    let params = init_params(&spec, 3);
+    let calib: Vec<Vec<i32>> = (0..6)
+        .map(|i| (0..spec.seq).map(|t| ((i * 31 + t * 7 + 5) % 96) as i32).collect())
+        .collect();
+    for kind in [SolverKind::Admm, SolverKind::FrankWolfe] {
+        let opts = PruneOptions {
+            engine: Engine::Native,
+            max_rounds: Some(2),
+            solver: kind,
+            ..Default::default()
+        };
+        let (pruned, report) =
+            prune_model(None, &presets, &spec, &params, &calib, Method::Solver(kind), &opts)
+                .unwrap();
+        assert_eq!(report.method, kind.name());
+        for layer in 0..spec.layers {
+            for op in pruned_ops(&spec) {
+                let w = pruned.req(&format!("l{layer}.{}", op.name)).unwrap();
+                assert!(
+                    satisfies_sparsity(w, opts.sparsity),
+                    "{} l{layer}.{}: sparsity violated",
+                    kind.name(),
+                    op.name
+                );
+            }
+        }
+        for layer in &report.layers {
+            for op in &layer.ops {
+                assert_eq!(op.solver, kind.name(), "solver label missing on {}", op.op);
+                assert_eq!(
+                    op.iters,
+                    op.rounds_detail.iter().map(|r| r.iters).sum::<usize>(),
+                    "{}: op iters must equal summed round iters",
+                    op.op
+                );
+            }
+        }
+        assert!(report.mean_rel_error().is_finite());
+        assert!(report.total_solver_iters() > 0, "{}: no solver iterations ran", kind.name());
+    }
+}

@@ -259,6 +259,7 @@ fn artifact_row(
             method: "magnitude".into(),
             sparsity: sparsity.label(),
             format: "auto".into(),
+            quant: "none".into(),
             seed: 0,
             prune: None,
         },

@@ -227,24 +227,34 @@ pub fn prune(args: &Args) -> Result<()> {
     });
     if let Some(path) = emit {
         let fmt = SparseFormat::parse(args.get_or("format", "auto"))?;
+        // --quant int8|f16: quantize the compressed values once at
+        // compile time; the artifact then serves quantized end to end.
+        let quant = crate::config::QuantMode::parse(args.get_or("quant", "none"))?;
         let spec = lab.presets.model(&model)?.clone();
-        let compiled =
-            crate::sparse::CompiledLayers::compress(&spec, &pruned, fmt, Some(opts.sparsity))?;
+        let compiled = crate::sparse::CompiledLayers::compress_quantized(
+            &spec,
+            &pruned,
+            fmt,
+            Some(opts.sparsity),
+            quant,
+        )?;
         let meta = crate::ser::artifact::ArtifactMeta {
             model,
             corpus,
             method: method.name().to_string(),
             sparsity: opts.sparsity.label(),
             format: fmt.label().to_string(),
+            quant: quant.label().to_string(),
             seed: opts.seed,
             prune: Some(report.provenance_json()),
         };
         crate::ser::artifact::save(&path, &compiled, &meta)?;
         println!(
-            "sparse artifact: {} ({} ops as {}, {} B resident, {:.3}x dense)",
+            "sparse artifact: {} ({} ops as {}, values {}, {} B resident, {:.3}x dense)",
             path.display(),
             compiled.op_count(),
             compiled.format_label(),
+            compiled.quant.label(),
             compiled.resident_bytes(),
             compiled.resident_bytes() as f64
                 / (4 * crate::model::spec::param_count(&spec)) as f64
@@ -351,6 +361,11 @@ pub fn serve(args: &Args) -> Result<()> {
             anyhow::bail!("unknown --weights '{w}' (dense|csr, or --format)");
         }
     }
+    // --kernel scalar|simd: select the process-wide kernel variant before
+    // any weights load; a simd request on a scalar-only build is rejected
+    // here with a clear error, never silently downgraded.
+    let kernel = crate::config::KernelVariant::parse(args.get_or("kernel", "scalar"))?;
+    crate::tensor::par::set_kernel_variant(kernel)?;
     // dense params are only loaded on the checkpoint path; the artifact
     // path never materializes them, and the compress-at-startup path
     // drops them before serving begins
@@ -367,10 +382,11 @@ pub fn serve(args: &Args) -> Result<()> {
         let (compiled, meta) = crate::ser::artifact::load(std::path::Path::new(path))?;
         crate::ser::artifact::check_model(&meta, args.get("model"))?;
         eprintln!(
-            "loaded artifact {path}: {} @ {} ({} ops, {} B resident)",
+            "loaded artifact {path}: {} @ {} ({} ops, values {}, {} B resident)",
             compiled.format_label(),
             meta.sparsity,
             compiled.op_count(),
+            compiled.quant.label(),
             compiled.resident_bytes()
         );
         crate::serve::ServeModel::from_compiled(compiled)
@@ -458,12 +474,14 @@ pub fn serve(args: &Args) -> Result<()> {
         let server = crate::serve::NetServer::bind(addr, ncfg)?;
         eprintln!(
             "serving {model_name} on {} — {} slots, queue {}, max {} conns, \
-             conn timeout {} ms",
+             conn timeout {} ms, kernel {}, values {}",
             server.local_addr()?,
             cfg.max_batch,
             cfg.queue_cap,
             max_conns,
-            conn_timeout_ms
+            conn_timeout_ms,
+            crate::tensor::par::kernel_variant().label(),
+            serve_model.quant().label()
         );
         let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
         let report = server.run(&serve_model, &cfg, stop)?;
@@ -477,14 +495,17 @@ pub fn serve(args: &Args) -> Result<()> {
     let (_, _, budget_pages) = engine.kv_pages();
     eprintln!(
         "serving {model_name} — {} slots, queue {}, KV {} pages × {} positions \
-         (cap {:.1} KiB, paged on demand), prefill chunk {}, resident weights {:.1} KiB",
+         (cap {:.1} KiB, paged on demand), prefill chunk {}, resident weights {:.1} KiB, \
+         kernel {}, values {}",
         cfg.max_batch,
         cfg.queue_cap,
         budget_pages,
         engine.kv_page_positions(),
         engine.kv_capacity_bytes() as f64 / 1024.0,
         cfg.prefill_chunk,
-        serve_model.resident_weight_bytes() as f64 / 1024.0
+        serve_model.resident_weight_bytes() as f64 / 1024.0,
+        crate::tensor::par::kernel_variant().label(),
+        serve_model.quant().label()
     );
 
     // Stream responses as requests retire. Intake interleaves with engine
@@ -596,6 +617,10 @@ fn finish_trace(tracing: Option<(crate::obs::TraceWriter, String)>) -> Result<()
 /// `eval::generate`. `--paged` measures the paged-KV axis instead:
 /// resident KV bytes vs the monolithic preallocation and the
 /// prefill-stall p99 with vs without chunking (BENCH_paged.json).
+/// `--kernel scalar,simd` measures the kernel-variant × quantization
+/// grid over compiled operators (`--quant none,f16,int8` —
+/// BENCH_kernel.json): tokens/s, resident weight bytes and effective
+/// GB/s per cell.
 pub fn serve_bench(args: &Args) -> Result<()> {
     let mut lab = Lab::new()?;
     let smoke = args.has("smoke");
@@ -640,6 +665,38 @@ fn serve_bench_axes(
     fast: bool,
     smoke: bool,
 ) -> Result<()> {
+    // --kernel: the kernel-variant × quantization grid over compiled
+    // operators (BENCH_kernel.json). Comma-separated lists grid out,
+    // e.g. --kernel scalar,simd --quant none,int8; each cell is
+    // parity-gated against the compiled recompute under its own kernels.
+    if let Some(kernel_list) = args.get("kernel") {
+        if args.get("artifact").is_some() || args.has("paged") || args.has("net") {
+            anyhow::bail!(
+                "--kernel measures the compiled kernel axis; drop --artifact/--paged/--net"
+            );
+        }
+        let kernels = kernel_list
+            .split(',')
+            .map(crate::config::KernelVariant::parse)
+            .collect::<Result<Vec<_>>>()?;
+        let quants = args
+            .get_or("quant", "none,f16,int8")
+            .split(',')
+            .map(crate::config::QuantMode::parse)
+            .collect::<Result<Vec<_>>>()?;
+        let default_model = if fast { "topt-s1" } else { "topt-s3" };
+        let model = args.get_or("model", default_model).to_string();
+        let corpus = args.get_or("corpus", "c4-syn").to_string();
+        let params = load_or_train(lab, args, &model, &corpus)?;
+        let spec = lab.presets.model(&model)?.clone();
+        let report = crate::serve::run_kernel_bench(&spec, &params, cfg, &kernels, &quants)?;
+        report.print();
+        write_json_report(args, report.to_json())?;
+        if !report.parity_ok {
+            anyhow::bail!("kernel-bench parity failed: served output != compiled forward");
+        }
+        return Ok(());
+    }
     // --net: the socket-concurrency axis — sustained req/s and stream
     // p99 with N loopback clients, connection churn and one mid-stream
     // disconnect, through the real `serve --listen` front-end

@@ -61,6 +61,10 @@ COMMANDS:
             [--trace-out t.jsonl]   one solver_round event per tuning
                                     round (inspect with `trace`)
             [--emit-sparse [path.fsa] --format csr|nm|auto]
+            [--quant none|f16|int8]  quantize the compressed values once
+                                    at compile time (int8 = per-row
+                                    absmax scales); the artifact then
+                                    serves quantized end to end
             (--emit-sparse compiles the pruned weights once and writes
              the compressed artifact + .meta.json sidecar — no dense
              round-trip; default path under artifacts/sparse/)
@@ -77,6 +81,10 @@ COMMANDS:
             [--artifact path.fsa]   serve a sparse artifact: compressed
                                     weights are the only copy in memory
             [--weights dense|csr --batch N --queue N]
+            [--kernel scalar|simd]  kernel variant for every decode
+                                    matmul (simd needs a build with
+                                    --features simd; quantization is
+                                    auto-detected from the artifact)
             [--kv-page N]           positions per KV page (default 16)
             [--kv-pages N]          KV page budget (default: full context
                                     for every slot; shrink to backpressure)
@@ -118,6 +126,11 @@ COMMANDS:
                                     a mid-stream disconnect, through the
                                     real --listen front-end (parity-gated)
             [--clients N --reqs-per-client N --no-churn]
+            [--kernel scalar,simd]  kernel axis: tokens/s, resident bytes
+                                    and effective GB/s per kernel ×
+                                    quant cell (BENCH_kernel.json)
+            [--quant none,f16,int8] quant modes for the kernel axis
+                                    (default: all three)
             [--kv-page N --prefill-chunk N]
             [--tokens N --batch N --requests N --sparsity S --json path]
             [--trace-out t.jsonl]   trace every measured engine run

@@ -9,5 +9,6 @@ pub mod run;
 pub use paths::repo_root;
 pub use presets::{AdmmCfg, CorpusCfg, FamilyKind, FistaCfg, FwCfg, ModelSpec, Presets, SolverPresets};
 pub use run::{
-    Engine, PruneMode, PruneOptions, SolverKind, SparseFormat, Sparsity, TrainOptions, WarmStart,
+    Engine, KernelVariant, PruneMode, PruneOptions, QuantMode, SolverKind, SparseFormat, Sparsity,
+    TrainOptions, WarmStart,
 };

@@ -109,6 +109,69 @@ impl SparseFormat {
     }
 }
 
+/// Which implementation of the decode-critical kernels runs: the scalar
+/// reference (always built, the parity oracle) or the portable-SIMD
+/// variant (`simd` cargo feature). Selected process-globally through
+/// `tensor::par::set_kernel_variant`; every variant is independently
+/// bitwise thread-count-invariant (see `tensor::par`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelVariant {
+    /// Scalar f32 loops — the oracle the SIMD path is tested against.
+    Scalar,
+    /// `core::simd` lane-parallel inner loops (`--features simd`).
+    Simd,
+}
+
+impl KernelVariant {
+    pub fn parse(s: &str) -> Result<KernelVariant> {
+        match s {
+            "scalar" => Ok(KernelVariant::Scalar),
+            "simd" => Ok(KernelVariant::Simd),
+            other => bail!("unknown kernel variant '{other}' (scalar|simd)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            KernelVariant::Scalar => "scalar",
+            KernelVariant::Simd => "simd",
+        }
+    }
+}
+
+/// Quantized storage mode for compiled sparse artifact values. The sparse
+/// pattern (indices) is always exact; quantization applies to the kept
+/// values only and is decoded in registers inside the kernels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantMode {
+    /// f32 values as-is (the default; byte-identical to pre-quant builds).
+    None,
+    /// IEEE half precision: 2 bytes/value, exact for representable values.
+    F16,
+    /// Per-row absmax int8: 1 byte/value + one f32 scale per row; element
+    /// error ≤ row absmax / 127.
+    Int8,
+}
+
+impl QuantMode {
+    pub fn parse(s: &str) -> Result<QuantMode> {
+        match s {
+            "none" => Ok(QuantMode::None),
+            "f16" => Ok(QuantMode::F16),
+            "int8" => Ok(QuantMode::Int8),
+            other => bail!("unknown quant mode '{other}' (none|f16|int8)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            QuantMode::None => "none",
+            QuantMode::F16 => "f16",
+            QuantMode::Int8 => "int8",
+        }
+    }
+}
+
 /// Which engine executes the FISTA/Gram hot loops.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Engine {
@@ -343,6 +406,28 @@ mod tests {
         }
         let err = SolverKind::parse("ista").unwrap_err().to_string();
         assert!(err.contains("fista|admm|fw"), "{err}");
+    }
+
+    #[test]
+    fn kernel_variant_parse_and_label() {
+        for (s, v) in [("scalar", KernelVariant::Scalar), ("simd", KernelVariant::Simd)] {
+            assert_eq!(KernelVariant::parse(s).unwrap(), v);
+            assert_eq!(v.label(), s);
+        }
+        let err = KernelVariant::parse("avx512").unwrap_err().to_string();
+        assert!(err.contains("scalar|simd"), "{err}");
+    }
+
+    #[test]
+    fn quant_mode_parse_and_label() {
+        for (s, q) in
+            [("none", QuantMode::None), ("f16", QuantMode::F16), ("int8", QuantMode::Int8)]
+        {
+            assert_eq!(QuantMode::parse(s).unwrap(), q);
+            assert_eq!(q.label(), s);
+        }
+        let err = QuantMode::parse("int4").unwrap_err().to_string();
+        assert!(err.contains("none|f16|int8"), "{err}");
     }
 
     #[test]

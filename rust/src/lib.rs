@@ -53,6 +53,8 @@
 //! (`serve`): KV-cached incremental decode with continuous batching over
 //! dense or CSR weights, behind the `serve` / `serve-bench` CLI commands.
 
+#![cfg_attr(feature = "simd", feature(portable_simd))]
+
 pub mod util;
 pub mod ser;
 pub mod config;

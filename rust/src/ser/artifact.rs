@@ -17,7 +17,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::{repo_root, Presets, SparseFormat, Sparsity};
+use crate::config::{repo_root, Presets, QuantMode, SparseFormat, Sparsity};
 use crate::sparse::{CompiledLayers, SparseOp};
 use crate::tensor::Tensor;
 
@@ -35,6 +35,9 @@ pub struct ArtifactMeta {
     pub sparsity: String,
     /// Requested storage format axis ("csr" | "nm" | "auto").
     pub format: String,
+    /// Value quantization axis ("none" | "f16" | "int8"). v1 sidecars
+    /// predate the field and default to "none".
+    pub quant: String,
     pub seed: u64,
     /// Optional structured prune diagnostics
     /// (`pruner::PruneReport::provenance_json`).
@@ -50,6 +53,7 @@ impl ArtifactMeta {
         m.insert("method".into(), Json::Str(self.method.clone()));
         m.insert("sparsity".into(), Json::Str(self.sparsity.clone()));
         m.insert("format".into(), Json::Str(self.format.clone()));
+        m.insert("quant".into(), Json::Str(self.quant.clone()));
         // u64 must not round-trip through f64 (see ser::json::Json::as_u64)
         m.insert("seed".into(), Json::Str(self.seed.to_string()));
         if let Some(p) = &self.prune {
@@ -73,9 +77,9 @@ impl ArtifactMeta {
             .req("artifact_version")?
             .as_usize()
             .context("artifact_version")? as u32;
-        if version != sparsefile::VERSION {
+        if !(1..=sparsefile::VERSION).contains(&version) {
             bail!(
-                "artifact sidecar version {version}, this build reads version {}",
+                "artifact sidecar version {version}, this build reads versions 1..={}",
                 sparsefile::VERSION
             );
         }
@@ -85,6 +89,11 @@ impl ArtifactMeta {
             method: v.req("method")?.as_str().context("method")?.to_string(),
             sparsity: v.req("sparsity")?.as_str().context("sparsity")?.to_string(),
             format: v.req("format")?.as_str().context("format")?.to_string(),
+            // v1 sidecars predate the quant axis: f32 values
+            quant: match v.get("quant") {
+                Some(q) => q.as_str().context("quant")?.to_string(),
+                None => "none".to_string(),
+            },
             seed: v.req("seed")?.as_u64().context("seed (u64)")?,
             prune: v.get("prune").cloned(),
         })
@@ -117,11 +126,20 @@ pub fn exists(path: &Path) -> bool {
 /// Compressed operators are serialized as compressed — the dense form of
 /// a pruned weight is never materialized on either side.
 pub fn save(path: &Path, compiled: &CompiledLayers, meta: &ArtifactMeta) -> Result<()> {
+    if meta.quant != compiled.quant.label() {
+        bail!(
+            "sidecar declares quant '{}' but the compiled model is '{}'",
+            meta.quant,
+            compiled.quant.label()
+        );
+    }
     let mut entries: Vec<(String, SparseRecordRef<'_>)> = Vec::new();
     for (name, op) in compiled.iter_ops() {
         let rec = match op {
             SparseOp::Csr(c) => SparseRecordRef::Csr(c),
             SparseOp::Nm(p) => SparseRecordRef::Nm(p),
+            SparseOp::CsrQ(c) => SparseRecordRef::CsrQ(c),
+            SparseOp::NmQ(p) => SparseRecordRef::NmQ(p),
         };
         entries.push((name, rec));
     }
@@ -149,6 +167,8 @@ pub fn load(path: &Path) -> Result<(CompiledLayers, ArtifactMeta)> {
         .clone();
     let format = SparseFormat::parse(&meta.format)
         .with_context(|| format!("artifact sidecar {}", sidecar.display()))?;
+    let quant = QuantMode::parse(&meta.quant)
+        .with_context(|| format!("artifact sidecar {}", sidecar.display()))?;
     let sparsity = Sparsity::parse(&meta.sparsity).ok();
 
     let mut ops: Vec<BTreeMap<String, SparseOp>> =
@@ -161,6 +181,8 @@ pub fn load(path: &Path) -> Result<(CompiledLayers, ArtifactMeta)> {
         match rec {
             SparseRecord::Csr(c) => place_op(&mut ops, &name, split, SparseOp::Csr(c))?,
             SparseRecord::Nm(p) => place_op(&mut ops, &name, split, SparseOp::Nm(p))?,
+            SparseRecord::CsrQ(c) => place_op(&mut ops, &name, split, SparseOp::CsrQ(c))?,
+            SparseRecord::NmQ(p) => place_op(&mut ops, &name, split, SparseOp::NmQ(p))?,
             SparseRecord::Dense(t) => match split {
                 Some((li, bare)) => {
                     let bare = bare.to_string();
@@ -175,8 +197,9 @@ pub fn load(path: &Path) -> Result<(CompiledLayers, ArtifactMeta)> {
             },
         }
     }
-    let compiled = CompiledLayers::from_parts(spec, format, sparsity, ops, layer_residual, globals)
-        .with_context(|| format!("validating {}", path.display()))?;
+    let compiled =
+        CompiledLayers::from_parts(spec, format, sparsity, quant, ops, layer_residual, globals)
+            .with_context(|| format!("validating {}", path.display()))?;
     Ok((compiled, meta))
 }
 
@@ -220,6 +243,7 @@ mod tests {
             method: "magnitude".into(),
             sparsity: sparsity.into(),
             format: format.into(),
+            quant: "none".into(),
             seed: u64::MAX,
             prune: None,
         }
@@ -257,6 +281,71 @@ mod tests {
     }
 
     #[test]
+    fn quantized_artifacts_roundtrip_end_to_end() {
+        let presets = Presets::load(&repo_root().unwrap()).unwrap();
+        let spec = presets.model("topt-s1").unwrap().clone();
+        let sp = Sparsity::Semi(2, 4);
+        let params = round_model_to_sparsity(&spec, &init_params(&spec, 11), sp).unwrap();
+        for quant in [QuantMode::F16, QuantMode::Int8] {
+            let c = CompiledLayers::compress_quantized(
+                &spec,
+                &params,
+                SparseFormat::Auto,
+                Some(sp),
+                quant,
+            )
+            .unwrap();
+            let mut meta = meta_fixture("auto", "2:4");
+            meta.quant = quant.label().into();
+            let path = tmp(&format!("quant_{}", quant.label()));
+            save(&path, &c, &meta).unwrap();
+            let (back, meta) = load(&path).unwrap();
+            assert_eq!(meta.quant, quant.label());
+            assert_eq!(back.quant, quant);
+            assert_eq!(back.nnz(), c.nnz());
+            assert_eq!(back.storage_bytes(), c.storage_bytes());
+            // quantized compiled forwards agree bitwise across the disk trip
+            let tokens: Vec<i32> = (0..12).map(|i| (i * 5 + 1) % 96).collect();
+            let a = crate::sparse::compiled_logits(&c, &tokens);
+            let b = crate::sparse::compiled_logits(&back, &tokens);
+            for (x, y) in a.data().iter().zip(b.data()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            std::fs::remove_file(&path).ok();
+            std::fs::remove_file(meta_path(&path)).ok();
+        }
+        // sidecar/compiled quant mismatch is a checked save error
+        let c = compiled_fixture(SparseFormat::Csr, Sparsity::Unstructured(0.5));
+        let mut meta = meta_fixture("csr", "50%");
+        meta.quant = "int8".into();
+        let err = save(&tmp("mismatch"), &c, &meta).unwrap_err().to_string();
+        assert!(err.contains("quant 'int8'"), "{err}");
+    }
+
+    #[test]
+    fn v1_sidecar_without_quant_field_reads_as_none() {
+        let c = compiled_fixture(SparseFormat::Csr, Sparsity::Unstructured(0.5));
+        let path = tmp("v1_sidecar");
+        save(&path, &c, &meta_fixture("csr", "50%")).unwrap();
+        // rewrite the sidecar the way a v1 build laid it out: version 1,
+        // no quant key (the .fsa payload must be patched to v1 too)
+        let sidecar = meta_path(&path);
+        let text = std::fs::read_to_string(&sidecar).unwrap();
+        let text = text
+            .replace("\"artifact_version\":2", "\"artifact_version\":1")
+            .replace("\"quant\":\"none\",", "");
+        std::fs::write(&sidecar, text).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[4..8].copy_from_slice(&1u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let (back, meta) = load(&path).unwrap();
+        assert_eq!(meta.quant, "none");
+        assert_eq!(back.quant, QuantMode::None);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&sidecar).ok();
+    }
+
+    #[test]
     fn missing_sidecar_and_wrong_model_fail() {
         let c = compiled_fixture(SparseFormat::Csr, Sparsity::Unstructured(0.5));
         let path = tmp("nosidecar");
@@ -281,7 +370,7 @@ mod tests {
         save(&path, &c, &meta_fixture("csr", "50%")).unwrap();
         let sidecar = meta_path(&path);
         let text = std::fs::read_to_string(&sidecar).unwrap();
-        std::fs::write(&sidecar, text.replace("\"artifact_version\":1", "\"artifact_version\":9"))
+        std::fs::write(&sidecar, text.replace("\"artifact_version\":2", "\"artifact_version\":9"))
             .unwrap();
         let err = format!("{:#}", load(&path).unwrap_err());
         assert!(err.contains("version 9"), "{err}");

@@ -5,11 +5,13 @@
 //! Layout (little-endian):
 //! ```text
 //!   magic    "FSA1" (4 bytes)
-//!   version  u32 (currently 1; mismatches are a checked error)
+//!   version  u32 (currently 2; this build reads 1..=2, newer is a
+//!            checked error)
 //!   count    u32
 //!   repeat count times:
 //!     name_len u32, name utf-8 bytes
-//!     kind     u8  (0 = dense tensor, 1 = CSR, 2 = packed n:m)
+//!     kind     u8  (0 = dense tensor, 1 = CSR, 2 = packed n:m,
+//!                   3 = quantized CSR, 4 = quantized n:m)
 //!     len      u64 payload bytes
 //!     payload  (kind-specific, see below)
 //!     crc      u32 (CRC-32/IEEE of the payload)
@@ -20,6 +22,13 @@
 //!   indices u32 × nnz, values f32 × nnz`
 //! * n:m   — `rows u64, cols u64, n u32, m u32, slots u64,
 //!   values f32 × slots, indices u8 × slots`
+//! * quantized CSR (v2) — `rows u64, cols u64, nnz u64,
+//!   indptr u32 × (rows+1), indices u32 × nnz, quant u8 (1 = f16,
+//!   2 = int8),` then the values: f16 → `u16 × nnz`; int8 →
+//!   `i8 × nnz, scales f32 × rows`
+//! * quantized n:m (v2) — `rows u64, cols u64, n u32, m u32, slots u64,
+//!   quant u8,` then the values (f16 → `u16 × slots`; int8 →
+//!   `i8 × slots, scales f32 × rows`), `indices u8 × slots`
 //!
 //! Every failure mode is a checked `Err`, never a panic: wrong magic,
 //! version skew, truncation (any short read, or a payload shorter/longer
@@ -33,16 +42,25 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::sparse::{CsrMatrix, NmMatrix};
+use crate::sparse::{CsrMatrix, CsrQMatrix, NmMatrix, NmQMatrix};
+use crate::tensor::quant::QuantValues;
 use crate::tensor::Tensor;
 
 const MAGIC: &[u8; 4] = b"FSA1";
-/// Container format version this build reads and writes.
-pub const VERSION: u32 = 1;
+/// Container format version this build writes. Reads accept any version
+/// in `1..=VERSION`: v1 artifacts simply contain no quantized records,
+/// so every v1 kind decodes unchanged.
+pub const VERSION: u32 = 2;
 
 const KIND_DENSE: u8 = 0;
 const KIND_CSR: u8 = 1;
 const KIND_NM: u8 = 2;
+const KIND_CSR_Q: u8 = 3;
+const KIND_NM_Q: u8 = 4;
+
+/// Quant discriminator byte inside quantized payloads.
+const QUANT_F16: u8 = 1;
+const QUANT_INT8: u8 = 2;
 
 /// Sanity bound on any single payload (tensors in this repo are far
 /// smaller; a bigger declared length means corruption).
@@ -54,6 +72,8 @@ pub enum SparseRecord {
     Dense(Tensor),
     Csr(CsrMatrix),
     Nm(NmMatrix),
+    CsrQ(CsrQMatrix),
+    NmQ(NmQMatrix),
 }
 
 /// Borrowed record for writing (no clones of the payloads).
@@ -62,6 +82,8 @@ pub enum SparseRecordRef<'a> {
     Dense(&'a Tensor),
     Csr(&'a CsrMatrix),
     Nm(&'a NmMatrix),
+    CsrQ(&'a CsrQMatrix),
+    NmQ(&'a NmQMatrix),
 }
 
 /// CRC-32/IEEE (reflected, poly 0xEDB88320) — the integrity check behind
@@ -99,6 +121,33 @@ fn put_u32s(out: &mut Vec<u8>, v: &[u32]) {
     }
 }
 
+fn put_u16s(out: &mut Vec<u8>, v: &[u16]) {
+    for &x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_i8s(out: &mut Vec<u8>, v: &[i8]) {
+    for &x in v {
+        out.push(x as u8);
+    }
+}
+
+/// Quant byte + value payload, shared by both quantized record kinds.
+fn put_quant_values(out: &mut Vec<u8>, values: &QuantValues) {
+    match values {
+        QuantValues::F16(h) => {
+            out.push(QUANT_F16);
+            put_u16s(out, h);
+        }
+        QuantValues::Int8 { q, scales } => {
+            out.push(QUANT_INT8);
+            put_i8s(out, q);
+            put_f32s(out, scales);
+        }
+    }
+}
+
 fn encode_payload(rec: &SparseRecordRef<'_>) -> Vec<u8> {
     match rec {
         SparseRecordRef::Dense(t) => {
@@ -132,6 +181,29 @@ fn encode_payload(rec: &SparseRecordRef<'_>) -> Vec<u8> {
             out.extend_from_slice(&p.indices);
             out
         }
+        SparseRecordRef::CsrQ(c) => {
+            let mut out = Vec::with_capacity(
+                25 + 4 * c.indptr.len() + 4 * c.indices.len() + c.values.bytes(),
+            );
+            put_u64(&mut out, c.rows as u64);
+            put_u64(&mut out, c.cols as u64);
+            put_u64(&mut out, c.nnz() as u64);
+            put_u32s(&mut out, &c.indptr);
+            put_u32s(&mut out, &c.indices);
+            put_quant_values(&mut out, &c.values);
+            out
+        }
+        SparseRecordRef::NmQ(p) => {
+            let mut out = Vec::with_capacity(33 + 3 * p.indices.len() + p.values.bytes());
+            put_u64(&mut out, p.rows as u64);
+            put_u64(&mut out, p.cols as u64);
+            put_u32(&mut out, p.n as u32);
+            put_u32(&mut out, p.m as u32);
+            put_u64(&mut out, p.values.len() as u64);
+            put_quant_values(&mut out, &p.values);
+            out.extend_from_slice(&p.indices);
+            out
+        }
     }
 }
 
@@ -140,6 +212,8 @@ fn kind_of(rec: &SparseRecordRef<'_>) -> u8 {
         SparseRecordRef::Dense(_) => KIND_DENSE,
         SparseRecordRef::Csr(_) => KIND_CSR,
         SparseRecordRef::Nm(_) => KIND_NM,
+        SparseRecordRef::CsrQ(_) => KIND_CSR_Q,
+        SparseRecordRef::NmQ(_) => KIND_NM_Q,
     }
 }
 
@@ -188,6 +262,10 @@ impl<'a> Cursor<'a> {
         Ok(s)
     }
 
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
     fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
@@ -204,6 +282,15 @@ impl<'a> Cursor<'a> {
     fn u32s(&mut self, n: usize) -> Result<Vec<u32>> {
         let raw = self.take(4 * n)?;
         Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn u16s(&mut self, n: usize) -> Result<Vec<u16>> {
+        let raw = self.take(2 * n)?;
+        Ok(raw.chunks_exact(2).map(|c| u16::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn i8s(&mut self, n: usize) -> Result<Vec<i8>> {
+        Ok(self.take(n)?.iter().map(|&b| b as i8).collect())
     }
 
     fn done(&self) -> Result<()> {
@@ -223,6 +310,23 @@ fn count_checked(v: u64, what: &str, name: &str) -> Result<usize> {
         bail!("record '{name}': implausible {what} {v} (corrupt artifact)");
     }
     Ok(v as usize)
+}
+
+/// Decode a quant byte + value payload (`len` kept values spread over
+/// `rows` rows — int8 carries one f32 scale per row).
+fn read_quant_values(c: &mut Cursor<'_>, len: usize, rows: usize) -> Result<QuantValues> {
+    match c.u8()? {
+        QUANT_F16 => Ok(QuantValues::F16(c.u16s(len)?)),
+        QUANT_INT8 => {
+            let q = c.i8s(len)?;
+            let scales = c.f32s(rows)?;
+            if scales.iter().any(|s| !s.is_finite() || *s < 0.0) {
+                bail!("record '{}': invalid int8 scale (corrupt artifact)", c.name);
+            }
+            Ok(QuantValues::Int8 { q, scales })
+        }
+        other => bail!("record '{}': unknown quant mode {other} (corrupt artifact)", c.name),
+    }
 }
 
 fn decode_payload(name: &str, kind: u8, payload: &[u8]) -> Result<SparseRecord> {
@@ -301,6 +405,57 @@ fn decode_payload(name: &str, kind: u8, payload: &[u8]) -> Result<SparseRecord> 
             }
             Ok(SparseRecord::Nm(NmMatrix { rows, cols, n, m, values, indices }))
         }
+        KIND_CSR_Q => {
+            let rows = count_checked(c.u64()?, "row count", name)?;
+            let cols = count_checked(c.u64()?, "column count", name)?;
+            let nnz = count_checked(c.u64()?, "nnz", name)?;
+            if nnz > rows.saturating_mul(cols) {
+                bail!("record '{name}': nnz {nnz} > rows*cols (corrupt artifact)");
+            }
+            let indptr = c.u32s(rows + 1)?;
+            let indices = c.u32s(nnz)?;
+            let values = read_quant_values(&mut c, nnz, rows)?;
+            c.done()?;
+            if indptr.first() != Some(&0) || indptr.last().copied() != Some(nnz as u32) {
+                bail!("record '{name}': indptr endpoints do not match nnz (corrupt artifact)");
+            }
+            if indptr.windows(2).any(|w| w[0] > w[1]) {
+                bail!("record '{name}': indptr not monotonic (corrupt artifact)");
+            }
+            if indices.iter().any(|&j| j as usize >= cols) {
+                bail!("record '{name}': column index out of range (corrupt artifact)");
+            }
+            Ok(SparseRecord::CsrQ(CsrQMatrix { rows, cols, indptr, indices, values }))
+        }
+        KIND_NM_Q => {
+            let rows = count_checked(c.u64()?, "row count", name)?;
+            let cols = count_checked(c.u64()?, "column count", name)?;
+            let n = c.u32()? as usize;
+            let m = c.u32()? as usize;
+            if m == 0 || n == 0 || n > m || m > 256 {
+                bail!("record '{name}': degenerate {n}:{m} pattern (corrupt artifact)");
+            }
+            if cols % m != 0 {
+                bail!("record '{name}': cols {cols} not divisible by m {m} (corrupt artifact)");
+            }
+            let slots = count_checked(c.u64()?, "slot count", name)?;
+            let want = rows
+                .checked_mul(cols / m)
+                .and_then(|g| g.checked_mul(n))
+                .with_context(|| {
+                    format!("record '{name}': implausible n:m shape (corrupt artifact)")
+                })?;
+            if slots != want {
+                bail!("record '{name}': slot count {slots} does not match shape (corrupt artifact)");
+            }
+            let values = read_quant_values(&mut c, slots, rows)?;
+            let indices = c.take(slots)?.to_vec();
+            c.done()?;
+            if indices.iter().any(|&j| j as usize >= m) {
+                bail!("record '{name}': in-group index out of range (corrupt artifact)");
+            }
+            Ok(SparseRecord::NmQ(NmQMatrix { rows, cols, n, m, values, indices }))
+        }
         other => bail!("record '{name}': unknown record kind {other} (corrupt artifact)"),
     }
 }
@@ -322,9 +477,9 @@ pub fn read_records(path: &Path) -> Result<Vec<(String, SparseRecord)>> {
     let mut v = [0u8; 4];
     read_exact_ctx(&mut r, &mut v, path, "version")?;
     let version = u32::from_le_bytes(v);
-    if version != VERSION {
+    if !(1..=VERSION).contains(&version) {
         bail!(
-            "{}: artifact version {version}, this build reads version {VERSION}; \
+            "{}: artifact version {version}, this build reads versions 1..={VERSION}; \
              re-export the artifact with a matching build",
             path.display()
         );
@@ -439,6 +594,85 @@ mod tests {
             }
             other => panic!("expected nm, got {other:?}"),
         }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn quantized_records_roundtrip_both_modes() {
+        use crate::config::QuantMode;
+        let (_, csr, nm) = fixture();
+        for mode in [QuantMode::F16, QuantMode::Int8] {
+            let cq = CsrQMatrix::from_csr(&csr, mode).unwrap();
+            let nq = NmQMatrix::from_nm(&nm, mode).unwrap();
+            let path = tmp(&format!("quant_{}", mode.label()));
+            write_records(
+                &path,
+                &[
+                    ("a.csrq".into(), SparseRecordRef::CsrQ(&cq)),
+                    ("b.nmq".into(), SparseRecordRef::NmQ(&nq)),
+                ],
+            )
+            .unwrap();
+            let back = read_records(&path).unwrap();
+            match &back[0].1 {
+                SparseRecord::CsrQ(c) => {
+                    assert_eq!(c.quant_mode(), mode);
+                    assert_eq!(c.indptr, cq.indptr);
+                    assert_eq!(c.indices, cq.indices);
+                    assert_eq!(c.to_dense(), cq.to_dense(), "{mode:?}: values must be bitwise");
+                }
+                other => panic!("expected csrq, got {other:?}"),
+            }
+            match &back[1].1 {
+                SparseRecord::NmQ(p) => {
+                    assert_eq!(p.quant_mode(), mode);
+                    assert_eq!(p.indices, nq.indices);
+                    assert_eq!(p.to_dense(), nq.to_dense(), "{mode:?}: values must be bitwise");
+                }
+                other => panic!("expected nmq, got {other:?}"),
+            }
+            std::fs::remove_file(&path).ok();
+        }
+    }
+
+    #[test]
+    fn reads_v1_artifacts() {
+        // a v1 file is byte-identical to a v2 file holding only v1 kinds,
+        // modulo the version field
+        let path = tmp("v1");
+        write_fixture(&path);
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[4..8].copy_from_slice(&1u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        assert_eq!(read_records(&path).unwrap().len(), 3);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_unknown_quant_mode() {
+        // hand-crafted CSR_Q record with quant byte 9: rows=1, cols=2,
+        // nnz=1, indptr [0,1], indices [0]
+        let mut payload = Vec::new();
+        put_u64(&mut payload, 1);
+        put_u64(&mut payload, 2);
+        put_u64(&mut payload, 1);
+        put_u32s(&mut payload, &[0, 1]);
+        put_u32s(&mut payload, &[0]);
+        payload.push(9);
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&3u32.to_le_bytes());
+        bytes.extend_from_slice(b"bad");
+        bytes.push(KIND_CSR_Q);
+        bytes.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(&payload);
+        bytes.extend_from_slice(&crc32(&payload).to_le_bytes());
+        let path = tmp("badquant");
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{:#}", read_records(&path).unwrap_err());
+        assert!(err.contains("unknown quant mode 9"), "{err}");
         std::fs::remove_file(&path).ok();
     }
 

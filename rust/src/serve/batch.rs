@@ -26,7 +26,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::config::{FamilyKind, ModelSpec, SparseFormat, Sparsity};
+use crate::config::{FamilyKind, ModelSpec, QuantMode, SparseFormat, Sparsity};
 use crate::model::forward;
 use crate::model::params::ModelParams;
 use crate::model::spec::{layer_param_specs, model_param_specs, param_count};
@@ -205,6 +205,15 @@ impl<'p> ServeModel<'p> {
         match self.compiled() {
             None => "dense",
             Some(c) => c.format_label(),
+        }
+    }
+
+    /// Value quantization of the compiled operators (`None` for dense
+    /// serving — dense weights are always f32).
+    pub fn quant(&self) -> QuantMode {
+        match self.compiled() {
+            None => QuantMode::None,
+            Some(c) => c.quant,
         }
     }
 

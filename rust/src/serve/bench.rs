@@ -10,7 +10,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, ensure, Result};
 
-use crate::config::{ModelSpec, SparseFormat, Sparsity};
+use crate::config::{KernelVariant, ModelSpec, QuantMode, SparseFormat, Sparsity};
 use crate::eval::generate::{generate, GenOptions};
 use crate::metrics::stats::{percentile, percentiles};
 use crate::metrics::TableBuilder;
@@ -18,6 +18,7 @@ use crate::model::params::ModelParams;
 use crate::obs::{Recorder, SharedClock};
 use crate::pruner::round_model_to_sparsity;
 use crate::ser::json::Json;
+use crate::tensor::par;
 
 use super::batch::ServeModel;
 use super::engine::{Engine, EngineConfig};
@@ -96,6 +97,15 @@ pub struct PathStats {
     /// Peak KV bytes actually allocated by the paged pool during the
     /// run (0 for the recompute path, which keeps no cache).
     pub kv_resident_bytes: usize,
+    /// Weight bytes the run streamed under the simple
+    /// one-read-per-engine-step traffic model: engine steps × resident
+    /// weight bytes (0 for the recompute path, which runs outside the
+    /// engine). Quantized values shrink this in direct proportion to
+    /// their resident footprint.
+    pub weight_bytes_moved: u64,
+    /// `weight_bytes_moved` per wall second, in GB/s — the effective
+    /// weight bandwidth this path sustained.
+    pub eff_gb_per_s: f64,
 }
 
 /// Full serve-bench result.
@@ -128,7 +138,7 @@ impl ServeBenchReport {
                 "serve-bench ({}, {} @ {})",
                 self.model, self.format_label, self.sparsity_label
             ),
-            &["path", "reqs", "tokens", "tok/s", "p50 ms", "p99 ms"],
+            &["path", "reqs", "tokens", "tok/s", "p50 ms", "p99 ms", "GB/s"],
         );
         for p in &self.paths {
             t.row(vec![
@@ -138,6 +148,7 @@ impl ServeBenchReport {
                 format!("{:.1}", p.tokens_per_s),
                 format!("{:.1}", p.p50_ms),
                 format!("{:.1}", p.p99_ms),
+                format!("{:.2}", p.eff_gb_per_s),
             ]);
         }
         t.print();
@@ -182,6 +193,11 @@ impl ServeBenchReport {
             pm.insert("p50_ms".to_string(), Json::Num(round3(p.p50_ms)));
             pm.insert("p99_ms".to_string(), Json::Num(round3(p.p99_ms)));
             pm.insert("kv_resident_bytes".to_string(), Json::Num(p.kv_resident_bytes as f64));
+            pm.insert(
+                "weight_bytes_moved".to_string(),
+                Json::Num(p.weight_bytes_moved as f64),
+            );
+            pm.insert("eff_gb_per_s".to_string(), Json::Num(round3(p.eff_gb_per_s)));
             paths.insert(p.label.clone(), Json::Obj(pm));
         }
         m.insert("paths".to_string(), Json::Obj(paths));
@@ -294,6 +310,7 @@ pub(crate) fn run_engine_cfg(
         responses.extend(eng.take_responses());
     }
     let wall_s = start.elapsed().as_secs_f64();
+    let weight_bytes_moved = eng.stats.steps * model.resident_weight_bytes() as u64;
     let latencies: Vec<f64> = responses.iter().map(|r| r.latency_ms).collect();
     let total_tokens: usize = responses.iter().map(|r| r.completion_tokens).sum();
     let texts = responses.into_iter().map(|r| (r.id, r.text)).collect();
@@ -308,6 +325,8 @@ pub(crate) fn run_engine_cfg(
             p50_ms: qs[0],
             p99_ms: qs[1],
             kv_resident_bytes: kv_peak,
+            weight_bytes_moved,
+            eff_gb_per_s: weight_bytes_moved as f64 / wall_s.max(1e-12) / 1e9,
         },
         texts,
     ))
@@ -411,6 +430,8 @@ pub fn run_serve_bench(
         p50_ms: ref_qs[0],
         p99_ms: ref_qs[1],
         kv_resident_bytes: 0,
+        weight_bytes_moved: 0,
+        eff_gb_per_s: 0.0,
     };
 
     // KV-cached dense, batch 1 and batch B (one weight resolution)
@@ -742,7 +763,7 @@ impl ArtifactBenchReport {
                 "artifact-bench ({}, {} @ {})",
                 self.model, self.format_label, self.sparsity_label
             ),
-            &["path", "reqs", "tokens", "tok/s", "p50 ms", "p99 ms"],
+            &["path", "reqs", "tokens", "tok/s", "p50 ms", "p99 ms", "GB/s"],
         );
         for p in &self.paths {
             t.row(vec![
@@ -752,6 +773,7 @@ impl ArtifactBenchReport {
                 format!("{:.1}", p.tokens_per_s),
                 format!("{:.1}", p.p50_ms),
                 format!("{:.1}", p.p99_ms),
+                format!("{:.2}", p.eff_gb_per_s),
             ]);
         }
         t.print();
@@ -796,6 +818,11 @@ impl ArtifactBenchReport {
             pm.insert("p50_ms".to_string(), Json::Num(round3(p.p50_ms)));
             pm.insert("p99_ms".to_string(), Json::Num(round3(p.p99_ms)));
             pm.insert("kv_resident_bytes".to_string(), Json::Num(p.kv_resident_bytes as f64));
+            pm.insert(
+                "weight_bytes_moved".to_string(),
+                Json::Num(p.weight_bytes_moved as f64),
+            );
+            pm.insert("eff_gb_per_s".to_string(), Json::Num(round3(p.eff_gb_per_s)));
             paths.insert(p.label.clone(), Json::Obj(pm));
         }
         m.insert("paths".to_string(), Json::Obj(paths));
@@ -863,6 +890,169 @@ pub fn run_artifact_bench(
         resident_bytes: compiled.resident_bytes(),
         dense_resident_bytes: 4 * crate::model::spec::param_count(&spec),
         paths: vec![b1, bb],
+        parity_ok,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Kernel axis (`serve-bench --kernel ...`): tokens/s, resident weight bytes,
+// and effective weight bandwidth per (kernel variant × quantization) cell.
+
+/// One (kernel variant × quantization) cell of [`run_kernel_bench`].
+#[derive(Clone, Debug)]
+pub struct KernelBenchRow {
+    pub kernel: &'static str,
+    pub quant: &'static str,
+    /// Resolved storage format of the compiled operators.
+    pub format: String,
+    /// Weight bytes resident: compressed ops + residual dense.
+    pub resident_bytes: usize,
+    pub stats: PathStats,
+    /// This cell's served outputs equalled its compiled full-recompute
+    /// references (generated under the same kernel variant).
+    pub parity_ok: bool,
+}
+
+/// The BENCH_kernel.json record: every requested (kernel × quant) cell
+/// measured over the same pruned weights.
+#[derive(Clone, Debug)]
+pub struct KernelBenchReport {
+    pub model: String,
+    pub sparsity_label: String,
+    /// The requested format axis ("csr" | "nm" | "auto").
+    pub format_label: String,
+    pub rows: Vec<KernelBenchRow>,
+    /// Every row's parity gate held (false for an empty grid).
+    pub parity_ok: bool,
+}
+
+impl KernelBenchReport {
+    pub fn print(&self) {
+        let mut t = TableBuilder::new(
+            &format!(
+                "kernel-bench ({}, {} @ {})",
+                self.model, self.format_label, self.sparsity_label
+            ),
+            &["kernel", "quant", "format", "tok/s", "resident B", "moved B", "GB/s", "parity"],
+        );
+        for r in &self.rows {
+            t.row(vec![
+                r.kernel.to_string(),
+                r.quant.to_string(),
+                r.format.clone(),
+                format!("{:.1}", r.stats.tokens_per_s),
+                r.resident_bytes.to_string(),
+                r.stats.weight_bytes_moved.to_string(),
+                format!("{:.2}", r.stats.eff_gb_per_s),
+                if r.parity_ok { "ok" } else { "MISMATCH" }.to_string(),
+            ]);
+        }
+        t.print();
+        println!(
+            "greedy parity vs compiled recompute (same kernels per cell): {}",
+            if self.parity_ok { "ok" } else { "MISMATCH" }
+        );
+    }
+
+    /// JSON object for BENCH_kernel.json (the CI record of tokens/s and
+    /// bytes moved per kernel/quant cell).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("model".to_string(), Json::Str(self.model.clone()));
+        m.insert("sparsity".to_string(), Json::Str(self.sparsity_label.clone()));
+        m.insert("format".to_string(), Json::Str(self.format_label.clone()));
+        m.insert("parity_ok".to_string(), Json::Bool(self.parity_ok));
+        let mut rows = BTreeMap::new();
+        for r in &self.rows {
+            let mut rm = BTreeMap::new();
+            rm.insert("format".to_string(), Json::Str(r.format.clone()));
+            rm.insert("tokens_per_s".to_string(), Json::Num(round3(r.stats.tokens_per_s)));
+            rm.insert("p50_ms".to_string(), Json::Num(round3(r.stats.p50_ms)));
+            rm.insert("p99_ms".to_string(), Json::Num(round3(r.stats.p99_ms)));
+            rm.insert("resident_bytes".to_string(), Json::Num(r.resident_bytes as f64));
+            rm.insert(
+                "weight_bytes_moved".to_string(),
+                Json::Num(r.stats.weight_bytes_moved as f64),
+            );
+            rm.insert("eff_gb_per_s".to_string(), Json::Num(round3(r.stats.eff_gb_per_s)));
+            rm.insert("parity_ok".to_string(), Json::Bool(r.parity_ok));
+            rows.insert(format!("{}/{}", r.kernel, r.quant), Json::Obj(rm));
+        }
+        m.insert("rows".to_string(), Json::Obj(rows));
+        Json::Obj(m)
+    }
+}
+
+/// Measure every requested (kernel variant × quantization) cell over a
+/// copy of `dense` pruned to `cfg.sparsity`: compile the pruned model
+/// once per quant mode, select the kernel variant process-wide, rebuild
+/// the greedy references through `sparse::compiled_generate` under that
+/// same variant (so the gate checks serving == full recompute with
+/// identical kernels, which holds bitwise for every variant), and serve
+/// at batch `cfg.batch`. The previously selected variant is restored
+/// before returning, on success and on error alike.
+pub fn run_kernel_bench(
+    spec: &ModelSpec,
+    dense: &ModelParams,
+    cfg: &ServeBenchConfig,
+    kernels: &[KernelVariant],
+    quants: &[QuantMode],
+) -> Result<KernelBenchReport> {
+    ensure!(cfg.tokens >= 1 && cfg.batch >= 1 && cfg.requests >= 1, "bench sizes must be >= 1");
+    ensure!(
+        !kernels.is_empty() && !quants.is_empty(),
+        "kernel bench needs at least one kernel and one quant mode"
+    );
+    if cfg.format == SparseFormat::Nm && !matches!(cfg.sparsity, Sparsity::Semi(..)) {
+        bail!(
+            "the nm format axis needs an n:m sparsity (e.g. 2:4), got {}",
+            cfg.sparsity.label()
+        );
+    }
+    let prompts = synthetic_prompts(cfg.requests);
+    let requests = requests_for(&prompts, cfg.tokens);
+    let pruned = round_model_to_sparsity(spec, dense, cfg.sparsity)?;
+    let sp = matches!(cfg.sparsity, Sparsity::Semi(..)).then_some(cfg.sparsity);
+    let prev = par::kernel_variant();
+    let mut rows = Vec::new();
+    let mut run = || -> Result<()> {
+        for &quant in quants {
+            let compiled = crate::sparse::CompiledLayers::compress_quantized(
+                spec, &pruned, cfg.format, sp, quant,
+            )?;
+            let model = ServeModel::from_compiled_ref(&compiled);
+            for &kernel in kernels {
+                par::set_kernel_variant(kernel)?;
+                let mut reference: BTreeMap<String, String> = BTreeMap::new();
+                for (r, p) in requests.iter().zip(&prompts) {
+                    let opts =
+                        GenOptions { max_tokens: r.max_tokens, temperature: 0.0, seed: r.seed };
+                    let text = crate::sparse::compiled_generate(&compiled, p, &opts);
+                    reference.insert(r.id.clone(), text);
+                }
+                let label = format!("{}/{}", kernel.label(), quant.label());
+                let (stats, texts) = run_engine(&model, cfg.batch, &label, &requests, &cfg.obs)?;
+                rows.push(KernelBenchRow {
+                    kernel: kernel.label(),
+                    quant: quant.label(),
+                    format: model.format_label().to_string(),
+                    resident_bytes: compiled.resident_bytes(),
+                    stats,
+                    parity_ok: parity_against(&reference, &[&texts]),
+                });
+            }
+        }
+        Ok(())
+    };
+    let result = run();
+    par::set_kernel_variant(prev).expect("restoring a previously accepted kernel variant");
+    result?;
+    let parity_ok = !rows.is_empty() && rows.iter().all(|r| r.parity_ok);
+    Ok(KernelBenchReport {
+        model: spec.name(),
+        sparsity_label: cfg.sparsity.label(),
+        format_label: cfg.format.label().to_string(),
+        rows,
         parity_ok,
     })
 }
@@ -1321,6 +1511,7 @@ mod tests {
                 method: "magnitude".into(),
                 sparsity: sp.label(),
                 format: "auto".into(),
+                quant: "none".into(),
                 seed: 37,
                 prune: None,
             },
@@ -1352,5 +1543,58 @@ mod tests {
         assert!(v.get("paths").unwrap().get("artifact nm b=1").is_some());
         std::fs::remove_file(&path).ok();
         std::fs::remove_file(crate::ser::artifact::meta_path(&path)).ok();
+    }
+
+    // scalar-only so the global kernel variant is never flipped under
+    // the parallel test harness; the simd legs live in the
+    // `quant_kernel_parity` integration binary, which serializes them
+    #[test]
+    fn kernel_bench_reports_quant_grid() {
+        let presets = Presets::load(&repo_root().unwrap()).unwrap();
+        let spec = presets.model("topt-s1").unwrap().clone();
+        let params = init_params(&spec, 43);
+        let cfg = ServeBenchConfig {
+            tokens: 6,
+            batch: 2,
+            requests: 2,
+            sparsity: Sparsity::Semi(2, 4),
+            format: SparseFormat::Auto,
+            ..ServeBenchConfig::default()
+        };
+        let report = run_kernel_bench(
+            &spec,
+            &params,
+            &cfg,
+            &[KernelVariant::Scalar],
+            &[QuantMode::None, QuantMode::F16, QuantMode::Int8],
+        )
+        .unwrap();
+        assert!(report.parity_ok, "kernel bench diverged from compiled recompute");
+        assert_eq!(report.rows.len(), 3);
+        let by_quant = |q: &str| report.rows.iter().find(|r| r.quant == q).unwrap();
+        // quantized values shrink the resident footprint, int8 the most
+        assert!(by_quant("f16").resident_bytes < by_quant("none").resident_bytes);
+        assert!(by_quant("int8").resident_bytes < by_quant("f16").resident_bytes);
+        for r in &report.rows {
+            assert_eq!(r.kernel, "scalar");
+            assert_eq!(r.format, "nm");
+            assert!(r.stats.tokens_per_s > 0.0, "{}/{}", r.kernel, r.quant);
+            assert!(r.stats.weight_bytes_moved > 0, "{}/{}", r.kernel, r.quant);
+            assert!(r.stats.eff_gb_per_s > 0.0, "{}/{}", r.kernel, r.quant);
+        }
+        // bytes moved scale with the resident footprint at equal steps,
+        // so the int8 cell moves less traffic than the f32 cell
+        assert!(
+            by_quant("int8").stats.weight_bytes_moved < by_quant("none").stats.weight_bytes_moved
+        );
+        let j = report.to_json().to_string_compact();
+        let v = Json::parse(&j).unwrap();
+        assert_eq!(v.get("parity_ok").unwrap().as_bool(), Some(true));
+        let rows = v.get("rows").unwrap();
+        assert!(rows.get("scalar/int8").is_some());
+        assert!(rows.get("scalar/none").unwrap().get("eff_gb_per_s").is_some());
+
+        // an empty grid is a config error, not an empty report
+        assert!(run_kernel_bench(&spec, &params, &cfg, &[], &[QuantMode::None]).is_err());
     }
 }

@@ -47,11 +47,13 @@ use std::collections::{BTreeSet, VecDeque};
 
 use anyhow::{bail, Context, Result};
 
+use crate::config::{KernelVariant, QuantMode};
 use crate::data::tokenizer;
 use crate::eval::generate::next_token;
 use crate::metrics::{Histogram, Snapshot};
 use crate::obs::{Recorder, SharedClock};
 use crate::ser::json::Json;
+use crate::tensor::par;
 use crate::util::Pcg64;
 
 use super::batch::{decode_step, prefill_extend, ServeModel};
@@ -207,6 +209,19 @@ impl<'m> Engine<'m> {
             Some(p) => Some(TranscriptTee::create(p)?),
             None => None,
         };
+        if let Some(r) = &cfg.recorder {
+            // one startup trace point recording which kernel family this
+            // engine's decode steps will run through
+            r.gauge(
+                "kernel_config",
+                "",
+                vec![
+                    ("kernel", Json::Str(par::kernel_variant().label().to_string())),
+                    ("quant", Json::Str(model.quant().label().to_string())),
+                    ("format", Json::Str(model.format_label().to_string())),
+                ],
+            );
+        }
         Ok(Engine {
             model,
             cfg_queue_cap: cfg.queue_cap,
@@ -404,6 +419,19 @@ impl<'m> Engine<'m> {
         s.gauge("kv_reserved_pages", reserved as f64);
         s.gauge("kv_budget_pages", budget as f64);
         s.gauge("kv_resident_bytes", self.kv_resident_bytes() as f64);
+        // which kernel family decode steps run through: variant
+        // (0 = scalar, 1 = simd) and quant (0 = none, 1 = f16, 2 = int8)
+        let kv = match par::kernel_variant() {
+            KernelVariant::Scalar => 0.0,
+            KernelVariant::Simd => 1.0,
+        };
+        s.gauge("kernel_variant", kv);
+        let q = match self.model.quant() {
+            QuantMode::None => 0.0,
+            QuantMode::F16 => 1.0,
+            QuantMode::Int8 => 2.0,
+        };
+        s.gauge("quant", q);
         s.hist("step_ms", self.step_ms.clone());
         s.hist("decode_batch", self.decode_batch.clone());
         s

@@ -33,9 +33,11 @@
 //! * [`bench`] — the `serve-bench` core: tokens/s, p50/p99 latency and
 //!   dense-vs-sparse speedups, with greedy outputs parity-checked against
 //!   `eval::generate`; plus the artifact path (load time, on-disk and
-//!   resident bytes vs the dense checkpoint) and the paged axis
+//!   resident bytes vs the dense checkpoint), the paged axis
 //!   (resident KV bytes vs the monolithic preallocation, prefill-stall
-//!   p99 chunked vs unchunked — BENCH_paged.json).
+//!   p99 chunked vs unchunked — BENCH_paged.json), and the kernel axis
+//!   (tokens/s, resident weight bytes and effective GB/s per kernel
+//!   variant × quantization cell — BENCH_kernel.json).
 //!
 //! Compressed weights arrive either by compressing a dense checkpoint at
 //! startup or — the production path — by loading a sparse artifact
@@ -59,9 +61,9 @@ pub mod request;
 
 pub use batch::ServeModel;
 pub use bench::{
-    measure_sparse_format, run_artifact_bench, run_net_bench, run_paged_bench, run_serve_bench,
-    ArtifactBenchReport, BenchObs, FormatStats, NetBenchConfig, NetBenchReport, PagedBenchReport,
-    ServeBenchConfig, ServeBenchReport,
+    measure_sparse_format, run_artifact_bench, run_kernel_bench, run_net_bench, run_paged_bench,
+    run_serve_bench, ArtifactBenchReport, BenchObs, FormatStats, KernelBenchReport, KernelBenchRow,
+    NetBenchConfig, NetBenchReport, PagedBenchReport, ServeBenchConfig, ServeBenchReport,
 };
 pub use engine::{Engine, EngineConfig, EngineStats};
 pub use net::{NetConfig, NetReport, NetServer};

@@ -21,7 +21,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
-use crate::config::{FamilyKind, ModelSpec, SparseFormat, Sparsity};
+use crate::config::{FamilyKind, ModelSpec, QuantMode, SparseFormat, Sparsity};
 use crate::eval::generate::{generate_with, GenOptions};
 use crate::model::forward;
 use crate::model::params::ModelParams;
@@ -30,13 +30,31 @@ use crate::tensor::Tensor;
 use super::compile::CompiledLayers;
 use super::csr::CsrMatrix;
 use super::nm::NmMatrix;
+use super::quant::{CsrQMatrix, NmQMatrix};
+
+/// Batch-row threshold up to which the skinny decode kernels (parallel
+/// over *weight* rows into a scratch, re-laid-out once) beat the wide
+/// row-parallel ones: decode batches are 1–8 rows, full-sequence
+/// forwards are dozens to hundreds. Pinned by a regression test below.
+const SKINNY_MAX_ROWS: usize = 8;
+
+/// True when an [s, cols] input should take the skinny decode kernels —
+/// the shape-based wide/skinny auto-selection used by
+/// [`SparseOp::matmul_t_auto`]. Batch-1 decode always prefers skinny.
+pub fn prefers_skinny(x_rows: usize) -> bool {
+    x_rows <= SKINNY_MAX_ROWS
+}
 
 /// One compressed pruned operator: the per-weight dispatch point shared
 /// by the measure-only forward here and the serving decode path.
+/// `CsrQ`/`NmQ` carry quantized value payloads (`config::QuantMode`) and
+/// run through the register-dequantizing `*_q` kernels.
 #[derive(Clone, Debug)]
 pub enum SparseOp {
     Csr(CsrMatrix),
     Nm(NmMatrix),
+    CsrQ(CsrQMatrix),
+    NmQ(NmQMatrix),
 }
 
 impl SparseOp {
@@ -65,10 +83,37 @@ impl SparseOp {
         }
     }
 
+    /// Quantize this operator's kept values (`None` is the identity; the
+    /// sparsity pattern is never touched). Re-quantizing an
+    /// already-quantized operator is a caller bug and a checked error.
+    pub fn quantize(self, mode: QuantMode) -> Result<SparseOp> {
+        if mode == QuantMode::None {
+            return Ok(self);
+        }
+        match self {
+            SparseOp::Csr(c) => Ok(SparseOp::CsrQ(CsrQMatrix::from_csr(&c, mode)?)),
+            SparseOp::Nm(p) => Ok(SparseOp::NmQ(NmQMatrix::from_nm(&p, mode)?)),
+            SparseOp::CsrQ(_) | SparseOp::NmQ(_) => {
+                bail!("operator is already quantized ({})", self.quant_mode().label())
+            }
+        }
+    }
+
+    /// Which quantized storage mode this operator's values use.
+    pub fn quant_mode(&self) -> QuantMode {
+        match self {
+            SparseOp::Csr(_) | SparseOp::Nm(_) => QuantMode::None,
+            SparseOp::CsrQ(c) => c.quant_mode(),
+            SparseOp::NmQ(p) => p.quant_mode(),
+        }
+    }
+
     pub fn rows(&self) -> usize {
         match self {
             SparseOp::Csr(c) => c.rows,
             SparseOp::Nm(p) => p.rows,
+            SparseOp::CsrQ(c) => c.rows,
+            SparseOp::NmQ(p) => p.rows,
         }
     }
 
@@ -76,6 +121,8 @@ impl SparseOp {
         match self {
             SparseOp::Csr(c) => c.cols,
             SparseOp::Nm(p) => p.cols,
+            SparseOp::CsrQ(c) => c.cols,
+            SparseOp::NmQ(p) => p.cols,
         }
     }
 
@@ -83,6 +130,8 @@ impl SparseOp {
         match self {
             SparseOp::Csr(c) => c.nnz(),
             SparseOp::Nm(p) => p.nnz(),
+            SparseOp::CsrQ(c) => c.nnz(),
+            SparseOp::NmQ(p) => p.nnz(),
         }
     }
 
@@ -90,14 +139,18 @@ impl SparseOp {
         match self {
             SparseOp::Csr(c) => c.storage_bytes(),
             SparseOp::Nm(p) => p.storage_bytes(),
+            SparseOp::CsrQ(c) => c.storage_bytes(),
+            SparseOp::NmQ(p) => p.storage_bytes(),
         }
     }
 
-    /// Short format tag for reports.
+    /// Short format tag for reports. Quantization is an orthogonal axis
+    /// (see [`SparseOp::quant_mode`]), so quantized operators keep their
+    /// base format label.
     pub fn format_label(&self) -> &'static str {
         match self {
-            SparseOp::Csr(_) => "csr",
-            SparseOp::Nm(_) => "nm",
+            SparseOp::Csr(_) | SparseOp::CsrQ(_) => "csr",
+            SparseOp::Nm(_) | SparseOp::NmQ(_) => "nm",
         }
     }
 
@@ -106,6 +159,8 @@ impl SparseOp {
         match self {
             SparseOp::Csr(c) => c.matmul_t(x),
             SparseOp::Nm(p) => p.matmul_wide(x),
+            SparseOp::CsrQ(c) => c.matmul_t_par(x),
+            SparseOp::NmQ(p) => p.matmul_wide(x),
         }
     }
 
@@ -114,6 +169,21 @@ impl SparseOp {
         match self {
             SparseOp::Csr(c) => c.matmul_t_par(x),
             SparseOp::Nm(p) => p.matmul_t_par(x),
+            SparseOp::CsrQ(c) => c.matmul_t_par(x),
+            SparseOp::NmQ(p) => p.matmul_t_par(x),
+        }
+    }
+
+    /// out = X @ Wᵀ with shape-based wide/skinny selection
+    /// ([`prefers_skinny`]): decode-sized batches take the skinny
+    /// scratch-transpose kernels, full sequences the wide row-parallel
+    /// ones. Safe for any caller because the two routes are value-equal
+    /// (bitwise, for the scalar variant) element for element.
+    pub fn matmul_t_auto(&self, x: &Tensor) -> Tensor {
+        if prefers_skinny(x.rows()) {
+            self.matmul_t_par(x)
+        } else {
+            self.matmul_t_wide(x)
         }
     }
 }
@@ -192,7 +262,7 @@ pub fn compiled_logits(c: &CompiledLayers, tokens: &[i32]) -> Tensor {
             c.layer_residual(li).iter().map(|(n, t)| (n.as_str(), t)).collect();
         x = forward::layer_forward_mapped(spec, &map, &x, |name, dense_w, input| {
             match c.op(li, name) {
-                Some(op) => op.matmul_t_wide(input),
+                Some(op) => op.matmul_t_auto(input),
                 None => crate::tensor::ops::matmul_nt(
                     input,
                     dense_w.unwrap_or_else(|| panic!("l{li}.{name}: no operator, no residual")),
@@ -320,6 +390,74 @@ mod tests {
             let tol = 1e-3 * dense.frob_norm().max(1.0);
             assert!(crate::tensor::ops::frob_dist(&dense, &got_nm) < tol, "{model} nm");
             assert!(crate::tensor::ops::frob_dist(&got_csr, &got_nm) < tol, "{model} csr vs nm");
+        }
+    }
+
+    #[test]
+    fn skinny_auto_select_pins_decode_shapes() {
+        // batch-1 decode (and anything up to the pinned threshold) must
+        // take the skinny path; full sequences must stay wide
+        for s in 1..=8 {
+            assert!(prefers_skinny(s), "s={s}");
+        }
+        for s in [9, 16, 64, 256] {
+            assert!(!prefers_skinny(s), "s={s}");
+        }
+        // and the auto route agrees bitwise with both explicit routes on
+        // either side of the threshold
+        let mut rng = crate::util::Pcg64::seeded(77);
+        let (rows, cols) = (12, 24);
+        let mut w = Tensor::from_vec(vec![rows, cols], rng.normal_vec(rows * cols, 1.0));
+        for v in w.data_mut() {
+            if *v > 0.3 {
+                *v = 0.0;
+            }
+        }
+        let op = SparseOp::compress(&w, SparseFormat::Csr, None).unwrap();
+        for s in [1, 8, 9, 32] {
+            let x = Tensor::from_vec(vec![s, cols], rng.normal_vec(s * cols, 1.0));
+            let auto = op.matmul_t_auto(&x);
+            let want =
+                if prefers_skinny(s) { op.matmul_t_par(&x) } else { op.matmul_t_wide(&x) };
+            for (a, b) in auto.data().iter().zip(want.data()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "s={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_ops_route_and_report() {
+        let mut rng = crate::util::Pcg64::seeded(78);
+        let (rows, cols) = (10, 16);
+        let w = round_to_sparsity(
+            &Tensor::from_vec(vec![rows, cols], rng.normal_vec(rows * cols, 1.0)),
+            Sparsity::Semi(2, 4),
+        );
+        for format in [SparseFormat::Csr, SparseFormat::Nm] {
+            let base = SparseOp::compress(&w, format, Some(Sparsity::Semi(2, 4))).unwrap();
+            let label = base.format_label();
+            let bytes = base.storage_bytes();
+            assert_eq!(base.quant_mode(), crate::config::QuantMode::None);
+            // None-quantize is the identity
+            let same = base.clone().quantize(QuantMode::None).unwrap();
+            assert_eq!(same.quant_mode(), QuantMode::None);
+            for mode in [QuantMode::F16, QuantMode::Int8] {
+                let q = base.clone().quantize(mode).unwrap();
+                assert_eq!(q.quant_mode(), mode);
+                assert_eq!(q.format_label(), label, "quantization keeps the format label");
+                assert_eq!(q.rows(), rows);
+                assert_eq!(q.cols(), cols);
+                assert_eq!(q.nnz(), base.nnz());
+                assert!(q.storage_bytes() < bytes, "{label} {mode:?}");
+                // forward stays close to the f32 operator
+                let x = Tensor::from_vec(vec![3, cols], rng.normal_vec(3 * cols, 1.0));
+                for (a, b) in q.matmul_t_auto(&x).data().iter().zip(base.matmul_t_auto(&x).data())
+                {
+                    assert!((a - b).abs() <= 0.05 * b.abs().max(1.0), "{label} {mode:?}");
+                }
+                // double-quantization is a checked error
+                assert!(q.quantize(QuantMode::F16).is_err());
+            }
         }
     }
 

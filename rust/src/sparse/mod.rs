@@ -28,11 +28,13 @@ pub mod compile;
 pub mod csr;
 pub mod forward;
 pub mod nm;
+pub mod quant;
 
 pub use compile::{CompiledLayers, OpStat};
 pub use csr::CsrMatrix;
 pub use forward::{
-    compiled_generate, compiled_logits, compiled_nll, sparse_logits, sparse_nll, SparseModel,
-    SparseOp,
+    compiled_generate, compiled_logits, compiled_nll, prefers_skinny, sparse_logits, sparse_nll,
+    SparseModel, SparseOp,
 };
 pub use nm::NmMatrix;
+pub use quant::{CsrQMatrix, NmQMatrix};

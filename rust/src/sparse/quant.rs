@@ -1,0 +1,280 @@
+//! Quantized compiled operators: CSR and packed n:m matrices whose kept
+//! values are stored as f16 or per-row absmax int8
+//! ([`crate::tensor::quant::QuantValues`]) instead of f32, while the
+//! sparsity pattern (indptr / indices) stays exact. Built once at artifact
+//! compile time (`CompiledLayers::compress` with a
+//! [`crate::config::QuantMode`]), served through the `*_q` kernels that
+//! dequantize in registers — the value payload bytes drop 2× (f16) or
+//! ~4× (int8) and so does the memory traffic per decoded token.
+//!
+//! Value semantics: quantization happens exactly once, at construction.
+//! Every consumer — the decode kernels, `to_dense`, the `.fsa`
+//! round-trip — sees the *same* dequantized f32 values, so a quantized
+//! operator is value-equal to "dequantize to dense, then run the f32
+//! path" (pinned by the tests below and `tests/quant_kernel_parity.rs`).
+
+use anyhow::Result;
+
+use crate::config::QuantMode;
+use crate::tensor::kernels;
+use crate::tensor::quant::QuantValues;
+use crate::tensor::Tensor;
+
+use super::csr::CsrMatrix;
+use super::nm::NmMatrix;
+
+/// A CSR matrix with a quantized value payload. Same pattern arrays as
+/// [`CsrMatrix`]; only the values change representation.
+#[derive(Clone, Debug)]
+pub struct CsrQMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<u32>,
+    pub indices: Vec<u32>,
+    pub values: QuantValues,
+}
+
+impl CsrQMatrix {
+    /// Quantize an existing CSR matrix's values (per-row spans come from
+    /// its indptr).
+    pub fn from_csr(c: &CsrMatrix, mode: QuantMode) -> Result<CsrQMatrix> {
+        let starts: Vec<usize> = c.indptr.iter().map(|&e| e as usize).collect();
+        Ok(CsrQMatrix {
+            rows: c.rows,
+            cols: c.cols,
+            indptr: c.indptr.clone(),
+            indices: c.indices.clone(),
+            values: QuantValues::quantize(mode, &c.values, &starts)?,
+        })
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn quant_mode(&self) -> QuantMode {
+        self.values.mode()
+    }
+
+    /// Resident bytes: quantized values + u32 indices + u32 indptr.
+    pub fn storage_bytes(&self) -> usize {
+        self.values.bytes() + 4 * self.indices.len() + 4 * self.indptr.len()
+    }
+
+    fn row_starts(&self) -> Vec<usize> {
+        self.indptr.iter().map(|&e| e as usize).collect()
+    }
+
+    /// Dense f32 reconstruction of the (already-quantized) weight.
+    pub fn to_dense(&self) -> Tensor {
+        let mut out = Tensor::zeros(vec![self.rows, self.cols]);
+        for r in 0..self.rows {
+            let (a, b) = (self.indptr[r] as usize, self.indptr[r + 1] as usize);
+            for k in a..b {
+                out.set2(r, self.indices[k] as usize, self.values.get(k, r));
+            }
+        }
+        out
+    }
+
+    /// y = W x through the quantized decode kernel.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        kernels::csr_matvec_q(&self.indptr, &self.indices, &self.values, self.rows, x)
+    }
+
+    /// out = X @ Wᵀ through the quantized decode kernel (any batch size).
+    pub fn matmul_t_par(&self, x: &Tensor) -> Tensor {
+        kernels::csr_matmul_t_q(&self.indptr, &self.indices, &self.values, self.rows, self.cols, x)
+    }
+}
+
+/// A packed n:m matrix with a quantized value payload. Same slot/index
+/// layout as [`NmMatrix`]; group padding zeros quantize to exact ±0.0 in
+/// both modes, so the pattern is untouched.
+#[derive(Clone, Debug)]
+pub struct NmQMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub n: usize,
+    pub m: usize,
+    pub values: QuantValues,
+    pub indices: Vec<u8>,
+}
+
+impl NmQMatrix {
+    /// Quantize an existing packed n:m matrix's values (each row owns
+    /// exactly `(cols / m) * n` consecutive slots).
+    pub fn from_nm(p: &NmMatrix, mode: QuantMode) -> Result<NmQMatrix> {
+        let stored_per_row = (p.cols / p.m) * p.n;
+        let starts: Vec<usize> = (0..=p.rows).map(|r| r * stored_per_row).collect();
+        Ok(NmQMatrix {
+            rows: p.rows,
+            cols: p.cols,
+            n: p.n,
+            m: p.m,
+            values: QuantValues::quantize(mode, &p.values, &starts)?,
+            indices: p.indices.clone(),
+        })
+    }
+
+    /// Stored slots per row (includes zero padding of under-full groups).
+    pub fn stored_per_row(&self) -> usize {
+        (self.cols / self.m) * self.n
+    }
+
+    /// Nonzero count after quantization (padding and quantized-to-zero
+    /// slots excluded), matching `NmMatrix::nnz` semantics.
+    pub fn nnz(&self) -> usize {
+        let starts: Vec<usize> = (0..=self.rows).map(|r| r * self.stored_per_row()).collect();
+        self.values.dequantize(&starts).iter().filter(|&&v| v != 0.0).count()
+    }
+
+    pub fn quant_mode(&self) -> QuantMode {
+        self.values.mode()
+    }
+
+    /// Resident bytes: quantized values + u8 in-group indices.
+    pub fn storage_bytes(&self) -> usize {
+        self.values.bytes() + self.indices.len()
+    }
+
+    /// Dense f32 reconstruction of the (already-quantized) weight.
+    pub fn to_dense(&self) -> Tensor {
+        let groups = self.cols / self.m;
+        let mut out = Tensor::zeros(vec![self.rows, self.cols]);
+        for r in 0..self.rows {
+            let row_base = r * groups * self.n;
+            for g in 0..groups {
+                let base = row_base + g * self.n;
+                for s in 0..self.n {
+                    let col = g * self.m + self.indices[base + s] as usize;
+                    let v = self.values.get(base + s, r);
+                    if v != 0.0 {
+                        out.set2(r, col, v);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// y = W x through the quantized decode kernel.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        kernels::nm_matvec_q(
+            &self.values,
+            &self.indices,
+            self.rows,
+            self.cols,
+            self.n,
+            self.m,
+            x,
+        )
+    }
+
+    /// out = X @ Wᵀ through the skinny quantized decode kernel.
+    pub fn matmul_t_par(&self, x: &Tensor) -> Tensor {
+        kernels::nm_matmul_t_q(
+            &self.values,
+            &self.indices,
+            self.rows,
+            self.cols,
+            self.n,
+            self.m,
+            x,
+        )
+    }
+
+    /// out = X @ Wᵀ through the wide quantized kernel (full sequences).
+    pub fn matmul_wide(&self, x: &Tensor) -> Tensor {
+        kernels::nm_matmul_q(
+            &self.values,
+            &self.indices,
+            self.rows,
+            self.cols,
+            self.n,
+            self.m,
+            x,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Sparsity;
+    use crate::pruner::rounding::round_to_sparsity;
+    use crate::tensor::kernels::matmul_nt;
+    use crate::util::Pcg64;
+
+    fn randt(rng: &mut Pcg64, shape: Vec<usize>) -> Tensor {
+        let len = shape.iter().product();
+        Tensor::from_vec(shape, rng.normal_vec(len, 1.0))
+    }
+
+    #[test]
+    fn quantized_csr_forward_matches_its_dense_reconstruction() {
+        let mut rng = Pcg64::seeded(51);
+        let (rows, cols, s) = (20, 28, 3);
+        let mut w = randt(&mut rng, vec![rows, cols]);
+        for v in w.data_mut() {
+            if *v > 0.2 {
+                *v = 0.0;
+            }
+        }
+        let c = CsrMatrix::from_dense(&w).unwrap();
+        let x = randt(&mut rng, vec![s, cols]);
+        for mode in [QuantMode::F16, QuantMode::Int8] {
+            let q = CsrQMatrix::from_csr(&c, mode).unwrap();
+            assert_eq!(q.quant_mode(), mode);
+            assert_eq!(q.nnz(), c.nnz());
+            // forward through the quantized kernels == dense forward over
+            // the dequantized reconstruction, bitwise
+            let deq = q.to_dense();
+            let want = matmul_nt(&x, &deq);
+            let got = q.matmul_t_par(&x);
+            for (a, b) in got.data().iter().zip(want.data()) {
+                assert!((a - b).abs() <= 1e-5 * b.abs().max(1.0), "{mode:?}: {a} vs {b}");
+            }
+            let y = q.matvec(x.row(0));
+            let y1 = q.matmul_t_par(&Tensor::from_vec(vec![1, cols], x.row(0).to_vec()));
+            for (a, b) in y.iter().zip(y1.data()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            // quantized payloads shrink the value bytes
+            assert!(q.storage_bytes() < c.storage_bytes(), "{mode:?}");
+            // and the dequantized weight is close to the original
+            for (a, b) in deq.data().iter().zip(w.data()) {
+                assert!((a - b).abs() <= 0.05 * b.abs().max(1.0), "{mode:?}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_nm_forward_matches_its_dense_reconstruction() {
+        let mut rng = Pcg64::seeded(52);
+        let (rows, cols, s, n, m) = (16, 32, 4, 2, 4);
+        let w = round_to_sparsity(&randt(&mut rng, vec![rows, cols]), Sparsity::Semi(n, m));
+        let p = NmMatrix::from_dense(&w, n, m).unwrap();
+        let x = randt(&mut rng, vec![s, cols]);
+        for mode in [QuantMode::F16, QuantMode::Int8] {
+            let q = NmQMatrix::from_nm(&p, mode).unwrap();
+            assert_eq!(q.quant_mode(), mode);
+            let deq = q.to_dense();
+            let want = matmul_nt(&x, &deq);
+            for got in [q.matmul_t_par(&x), q.matmul_wide(&x)] {
+                for (a, b) in got.data().iter().zip(want.data()) {
+                    assert!((a - b).abs() <= 1e-5 * b.abs().max(1.0), "{mode:?}: {a} vs {b}");
+                }
+            }
+            let y = q.matvec(x.row(0));
+            let y1 = q.matmul_t_par(&Tensor::from_vec(vec![1, cols], x.row(0).to_vec()));
+            for (a, b) in y.iter().zip(y1.data()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            assert!(q.storage_bytes() < p.storage_bytes(), "{mode:?}");
+        }
+        // int8 value payload is >= 2x smaller than the f32 one
+        let q8 = NmQMatrix::from_nm(&p, QuantMode::Int8).unwrap();
+        assert!(q8.values.bytes() * 2 <= 4 * p.values.len());
+    }
+}

@@ -11,8 +11,27 @@
 //! signatures; the fused solver kernels (`matmul_sub_into`, `fista_step`,
 //! `gram3`, `quad_form`) are called directly by `pruner::fista` and
 //! `pruner::engine`.
+//!
+//! # Kernel variants
+//!
+//! The decode-critical kernels (`matvec`, `matmul_nt_skinny`, the CSR and
+//! packed n:m families) are *dispatchers*: they select between the scalar
+//! reference bodies (`*_scalar`, always built — the parity oracle) and
+//! the portable-SIMD bodies in [`super::simd`] (`--features simd`) based
+//! on the process-global [`par::kernel_variant`]. Each variant is
+//! independently bitwise thread-count-invariant (fixed per-element
+//! accumulation order); scalar and SIMD results are value-close but *not*
+//! bitwise equal, because the SIMD bodies accumulate eight-lane partials
+//! that are reduced once per element (tolerance pinned by
+//! `tests/quant_kernel_parity.rs`).
+//!
+//! The `*_q` entry points run the same bodies over quantized value
+//! payloads ([`super::quant::QuantValues`]), dequantizing in registers
+//! through the [`ValueDecode`] trait — one generic body per kernel serves
+//! f32, f16, and int8 values.
 
 use super::par;
+use super::quant::{F16Values, Int8Values, QuantValues, ValueDecode};
 use super::Tensor;
 
 /// Cache tile edge for the blocked loops (f32: 64×64 tile = 16 KiB).
@@ -25,8 +44,25 @@ const MIN_CHUNK_FLOPS: usize = 1 << 18;
 /// Elementwise-chunk floor for memory-bound kernels.
 const MIN_ELEMS: usize = 1 << 14;
 
-fn min_rows_for(per_row_flops: usize) -> usize {
+pub(crate) fn min_rows_for(per_row_flops: usize) -> usize {
     (MIN_CHUNK_FLOPS / per_row_flops.max(1)).max(1)
+}
+
+/// Re-lay a [rows, s] scratch into the [s, rows] result, with the free
+/// reinterpretation fast path for s == 1 ([rows, 1] and [1, rows] share
+/// the same flat layout). Shared by every skinny decode kernel body.
+pub(crate) fn unscratch(scratch: Vec<f32>, rows: usize, s: usize) -> Tensor {
+    if s == 1 {
+        return Tensor::from_vec(vec![1, rows], scratch);
+    }
+    let mut out = Tensor::zeros(vec![s, rows]);
+    let od = out.data_mut();
+    for r in 0..rows {
+        for t in 0..s {
+            od[t * rows + r] = scratch[r * s + t];
+        }
+    }
+    out
 }
 
 // ---------------------------------------------------------------------
@@ -151,9 +187,20 @@ fn out_row(block: &mut [f32], local_row: usize, n: usize) -> &mut [f32] {
 /// C = A @ Bᵀ for a *skinny* A [s, k] (s = a decode batch, 1–8 rows):
 /// [`matmul_nt`] splits work by output rows and would run s-wide, so this
 /// variant parallelizes over B's rows into a [n, s] scratch instead and
-/// re-lays it out once (free for s == 1). Every element is the same
-/// ascending-k dot product as `matmul_nt`, so results are bitwise equal.
+/// re-lays it out once (free for s == 1). Dispatches on the selected
+/// [`par::kernel_variant`]; in the scalar oracle every element is the
+/// same ascending-k dot product as `matmul_nt`, so results are bitwise
+/// equal to the wide route.
 pub fn matmul_nt_skinny(a: &Tensor, b: &Tensor) -> Tensor {
+    #[cfg(feature = "simd")]
+    if par::kernel_variant() == crate::config::KernelVariant::Simd {
+        return super::simd::matmul_nt_skinny(a, b);
+    }
+    matmul_nt_skinny_scalar(a, b)
+}
+
+/// Scalar reference body of [`matmul_nt_skinny`].
+pub fn matmul_nt_skinny_scalar(a: &Tensor, b: &Tensor) -> Tensor {
     let (s, k) = (a.rows(), a.cols());
     let (n, k2) = (b.rows(), b.cols());
     assert_eq!(k, k2, "matmul_nt_skinny inner dims: {k} vs {k2}");
@@ -173,18 +220,7 @@ pub fn matmul_nt_skinny(a: &Tensor, b: &Tensor) -> Tensor {
             }
         }
     });
-    if s == 1 {
-        // [n, 1] and [1, n] share the same flat layout
-        return Tensor::from_vec(vec![1, n], scratch);
-    }
-    let mut out = Tensor::zeros(vec![s, n]);
-    let od = out.data_mut();
-    for j in 0..n {
-        for t in 0..s {
-            od[t * n + j] = scratch[j * s + t];
-        }
-    }
-    out
+    unscratch(scratch, n, s)
 }
 
 /// B = Aᵀ (2-D transpose), tiled and parallel over output rows.
@@ -209,8 +245,18 @@ pub fn transpose(a: &Tensor) -> Tensor {
     out
 }
 
-/// y = A @ x for A[m,n], x[n] — parallel over output rows.
+/// y = A @ x for A[m,n], x[n] — parallel over output rows. Dispatches on
+/// the selected [`par::kernel_variant`]; [`matvec_scalar`] is the oracle.
 pub fn matvec(a: &Tensor, x: &[f32]) -> Vec<f32> {
+    #[cfg(feature = "simd")]
+    if par::kernel_variant() == crate::config::KernelVariant::Simd {
+        return super::simd::matvec(a, x);
+    }
+    matvec_scalar(a, x)
+}
+
+/// Scalar reference body of [`matvec`].
+pub fn matvec_scalar(a: &Tensor, x: &[f32]) -> Vec<f32> {
     let (m, n) = (a.rows(), a.cols());
     assert_eq!(n, x.len());
     let ad = a.data();
@@ -232,7 +278,8 @@ pub fn matvec(a: &Tensor, x: &[f32]) -> Vec<f32> {
 /// `values`) and dense x — the sparse decode matvec. Row-block parallel
 /// over W's rows like [`matvec`]; per-row accumulation walks the row's
 /// nonzeros in ascending column order, so the result is independent of
-/// the thread count.
+/// the thread count. Dispatches on the selected [`par::kernel_variant`];
+/// [`csr_matvec_scalar`] is the oracle.
 pub fn csr_matvec(
     indptr: &[u32],
     indices: &[u32],
@@ -240,8 +287,65 @@ pub fn csr_matvec(
     rows: usize,
     x: &[f32],
 ) -> Vec<f32> {
+    csr_matvec_dispatch(indptr, indices, &values, rows, x)
+}
+
+/// [`csr_matvec`] over a quantized value payload (f16 or per-row-scaled
+/// int8), dequantized in registers.
+pub fn csr_matvec_q(
+    indptr: &[u32],
+    indices: &[u32],
+    values: &QuantValues,
+    rows: usize,
+    x: &[f32],
+) -> Vec<f32> {
+    match values {
+        QuantValues::F16(h) => csr_matvec_dispatch(indptr, indices, &F16Values(h), rows, x),
+        QuantValues::Int8 { q, scales } => {
+            csr_matvec_dispatch(indptr, indices, &Int8Values { q, scales }, rows, x)
+        }
+    }
+}
+
+fn csr_matvec_dispatch<V: ValueDecode>(
+    indptr: &[u32],
+    indices: &[u32],
+    values: &V,
+    rows: usize,
+    x: &[f32],
+) -> Vec<f32> {
+    #[cfg(feature = "simd")]
+    if par::kernel_variant() == crate::config::KernelVariant::Simd {
+        return super::simd::csr_matvec(indptr, indices, values, rows, x);
+    }
+    csr_matvec_gen(indptr, indices, values, rows, x)
+}
+
+/// Scalar reference body of [`csr_matvec`] (f32 values).
+pub fn csr_matvec_scalar(
+    indptr: &[u32],
+    indices: &[u32],
+    values: &[f32],
+    rows: usize,
+    x: &[f32],
+) -> Vec<f32> {
+    csr_matvec_gen(indptr, indices, &values, rows, x)
+}
+
+/// The shared scalar body, generic over the value payload: f32 slices and
+/// quantized views run the identical per-row left-to-right accumulation,
+/// so the quantized scalar kernel is value-equal to "dequantize to dense,
+/// then run the f32 kernel".
+fn csr_matvec_gen<V: ValueDecode>(
+    indptr: &[u32],
+    indices: &[u32],
+    values: &V,
+    rows: usize,
+    x: &[f32],
+) -> Vec<f32> {
     debug_assert_eq!(indptr.len(), rows + 1, "indptr length");
-    let nnz_per_row = values.len() / rows.max(1);
+    let nnz = indptr.last().map(|&e| e as usize).unwrap_or(0);
+    let nnz_per_row = nnz / rows.max(1);
     let mut out = vec![0f32; rows];
     let min_rows = min_rows_for(2 * nnz_per_row.max(1));
     par::for_each_row_block(&mut out, rows, 1, min_rows, |r0, _r1, block| {
@@ -250,7 +354,7 @@ pub fn csr_matvec(
             let (a, b) = (indptr[r] as usize, indptr[r + 1] as usize);
             let mut acc = 0f32;
             for k in a..b {
-                acc += values[k] * x[indices[k] as usize];
+                acc += values.get(k, r) * x[indices[k] as usize];
             }
             *o = acc;
         }
@@ -264,7 +368,8 @@ pub fn csr_matvec(
 /// requests), so the parallel split runs over W's rows instead: each
 /// worker fills a contiguous stripe of a [rows, s] scratch, which is then
 /// re-laid-out once into the [s, rows] result (skipped when s == 1).
-/// Per-element accumulation order matches `CsrMatrix::matmul_t` exactly.
+/// In the scalar oracle, per-element accumulation order matches
+/// `CsrMatrix::matmul_t` exactly. Dispatches on [`par::kernel_variant`].
 pub fn csr_matmul_t(
     indptr: &[u32],
     indices: &[u32],
@@ -273,11 +378,69 @@ pub fn csr_matmul_t(
     cols: usize,
     x: &Tensor,
 ) -> Tensor {
+    csr_matmul_t_dispatch(indptr, indices, &values, rows, cols, x)
+}
+
+/// [`csr_matmul_t`] over a quantized value payload.
+pub fn csr_matmul_t_q(
+    indptr: &[u32],
+    indices: &[u32],
+    values: &QuantValues,
+    rows: usize,
+    cols: usize,
+    x: &Tensor,
+) -> Tensor {
+    match values {
+        QuantValues::F16(h) => {
+            csr_matmul_t_dispatch(indptr, indices, &F16Values(h), rows, cols, x)
+        }
+        QuantValues::Int8 { q, scales } => {
+            csr_matmul_t_dispatch(indptr, indices, &Int8Values { q, scales }, rows, cols, x)
+        }
+    }
+}
+
+fn csr_matmul_t_dispatch<V: ValueDecode>(
+    indptr: &[u32],
+    indices: &[u32],
+    values: &V,
+    rows: usize,
+    cols: usize,
+    x: &Tensor,
+) -> Tensor {
+    #[cfg(feature = "simd")]
+    if par::kernel_variant() == crate::config::KernelVariant::Simd {
+        return super::simd::csr_matmul_t(indptr, indices, values, rows, cols, x);
+    }
+    csr_matmul_t_gen(indptr, indices, values, rows, cols, x)
+}
+
+/// Scalar reference body of [`csr_matmul_t`] (f32 values).
+pub fn csr_matmul_t_scalar(
+    indptr: &[u32],
+    indices: &[u32],
+    values: &[f32],
+    rows: usize,
+    cols: usize,
+    x: &Tensor,
+) -> Tensor {
+    csr_matmul_t_gen(indptr, indices, &values, rows, cols, x)
+}
+
+fn csr_matmul_t_gen<V: ValueDecode>(
+    indptr: &[u32],
+    indices: &[u32],
+    values: &V,
+    rows: usize,
+    cols: usize,
+    x: &Tensor,
+) -> Tensor {
     let (s, n) = (x.rows(), x.cols());
     assert_eq!(n, cols, "csr_matmul_t inner dims: {n} vs {cols}");
     debug_assert_eq!(indptr.len(), rows + 1, "indptr length");
     let xd = x.data();
-    let nnz_per_row = values.len() / rows.max(1);
+    let nnz = indptr.last().map(|&e| e as usize).unwrap_or(0);
+    let nnz_per_row = nnz / rows.max(1);
     let mut scratch = vec![0f32; rows * s];
     par::for_each_row_block(
         &mut scratch,
@@ -292,25 +455,14 @@ pub fn csr_matmul_t(
                     let xrow = &xd[t * n..(t + 1) * n];
                     let mut acc = 0f32;
                     for k in a..b {
-                        acc += values[k] * xrow[indices[k] as usize];
+                        acc += values.get(k, r) * xrow[indices[k] as usize];
                     }
                     *o = acc;
                 }
             }
         },
     );
-    if s == 1 {
-        // [rows, 1] and [1, rows] share the same flat layout
-        return Tensor::from_vec(vec![1, rows], scratch);
-    }
-    let mut out = Tensor::zeros(vec![s, rows]);
-    let od = out.data_mut();
-    for r in 0..rows {
-        for t in 0..s {
-            od[t * rows + r] = scratch[r * s + t];
-        }
-    }
-    out
+    unscratch(scratch, rows, s)
 }
 
 // ---------------------------------------------------------------------
@@ -335,7 +487,8 @@ pub fn csr_matmul_t(
 // the CSR kernels) and value-equal to the dense `matmul_nt` route.
 
 /// y = W x for a packed n:m matrix W — the semi-structured decode matvec.
-/// Row-block parallel over W's rows like [`csr_matvec`].
+/// Row-block parallel over W's rows like [`csr_matvec`]. Dispatches on
+/// [`par::kernel_variant`]; [`nm_matvec_scalar`] is the oracle.
 #[allow(clippy::too_many_arguments)]
 pub fn nm_matvec(
     values: &[f32],
@@ -346,21 +499,84 @@ pub fn nm_matvec(
     m: usize,
     x: &[f32],
 ) -> Vec<f32> {
+    nm_matvec_dispatch(&values, indices, rows, cols, n, m, x)
+}
+
+/// [`nm_matvec`] over a quantized value payload.
+#[allow(clippy::too_many_arguments)]
+pub fn nm_matvec_q(
+    values: &QuantValues,
+    indices: &[u8],
+    rows: usize,
+    cols: usize,
+    n: usize,
+    m: usize,
+    x: &[f32],
+) -> Vec<f32> {
+    match values {
+        QuantValues::F16(h) => nm_matvec_dispatch(&F16Values(h), indices, rows, cols, n, m, x),
+        QuantValues::Int8 { q, scales } => {
+            nm_matvec_dispatch(&Int8Values { q, scales }, indices, rows, cols, n, m, x)
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn nm_matvec_dispatch<V: ValueDecode>(
+    values: &V,
+    indices: &[u8],
+    rows: usize,
+    cols: usize,
+    n: usize,
+    m: usize,
+    x: &[f32],
+) -> Vec<f32> {
+    #[cfg(feature = "simd")]
+    if par::kernel_variant() == crate::config::KernelVariant::Simd {
+        return super::simd::nm_matvec(values, indices, rows, cols, n, m, x);
+    }
+    nm_matvec_gen(values, indices, rows, cols, n, m, x)
+}
+
+/// Scalar reference body of [`nm_matvec`] (f32 values).
+#[allow(clippy::too_many_arguments)]
+pub fn nm_matvec_scalar(
+    values: &[f32],
+    indices: &[u8],
+    rows: usize,
+    cols: usize,
+    n: usize,
+    m: usize,
+    x: &[f32],
+) -> Vec<f32> {
+    nm_matvec_gen(&values, indices, rows, cols, n, m, x)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn nm_matvec_gen<V: ValueDecode>(
+    values: &V,
+    indices: &[u8],
+    rows: usize,
+    cols: usize,
+    n: usize,
+    m: usize,
+    x: &[f32],
+) -> Vec<f32> {
     let groups = cols / m;
-    debug_assert_eq!(values.len(), rows * groups * n, "packed n:m geometry");
-    debug_assert_eq!(values.len(), indices.len(), "values/indices length");
+    debug_assert_eq!(indices.len(), rows * groups * n, "packed n:m geometry");
     debug_assert_eq!(x.len(), cols, "nm_matvec inner dims");
     let mut out = vec![0f32; rows];
     let min_rows = min_rows_for(2 * groups * n);
     par::for_each_row_block(&mut out, rows, 1, min_rows, |r0, _r1, block| {
         for (i, o) in block.iter_mut().enumerate() {
-            let row_base = (r0 + i) * groups * n;
+            let r = r0 + i;
+            let row_base = r * groups * n;
             let mut acc = 0f32;
             for g in 0..groups {
                 let base = row_base + g * n;
                 let xg = &x[g * m..(g + 1) * m];
                 for s in 0..n {
-                    acc += values[base + s] * xg[indices[base + s] as usize];
+                    acc += values.get(base + s, r) * xg[indices[base + s] as usize];
                 }
             }
             *o = acc;
@@ -373,7 +589,8 @@ pub fn nm_matvec(
 /// [s, rows] — the batched decode kernel. Mirrors [`csr_matmul_t`]: the
 /// batch dimension is 1–8 at decode time, so the parallel split runs
 /// over W's rows into a [rows, s] scratch re-laid-out once (free for
-/// s == 1). Per-element accumulation order matches [`nm_matvec`].
+/// s == 1). In the scalar oracle, per-element accumulation order matches
+/// [`nm_matvec`]. Dispatches on [`par::kernel_variant`].
 #[allow(clippy::too_many_arguments)]
 pub fn nm_matmul_t(
     values: &[f32],
@@ -384,10 +601,73 @@ pub fn nm_matmul_t(
     m: usize,
     x: &Tensor,
 ) -> Tensor {
+    nm_matmul_t_dispatch(&values, indices, rows, cols, n, m, x)
+}
+
+/// [`nm_matmul_t`] over a quantized value payload.
+#[allow(clippy::too_many_arguments)]
+pub fn nm_matmul_t_q(
+    values: &QuantValues,
+    indices: &[u8],
+    rows: usize,
+    cols: usize,
+    n: usize,
+    m: usize,
+    x: &Tensor,
+) -> Tensor {
+    match values {
+        QuantValues::F16(h) => nm_matmul_t_dispatch(&F16Values(h), indices, rows, cols, n, m, x),
+        QuantValues::Int8 { q, scales } => {
+            nm_matmul_t_dispatch(&Int8Values { q, scales }, indices, rows, cols, n, m, x)
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn nm_matmul_t_dispatch<V: ValueDecode>(
+    values: &V,
+    indices: &[u8],
+    rows: usize,
+    cols: usize,
+    n: usize,
+    m: usize,
+    x: &Tensor,
+) -> Tensor {
+    #[cfg(feature = "simd")]
+    if par::kernel_variant() == crate::config::KernelVariant::Simd {
+        return super::simd::nm_matmul_t(values, indices, rows, cols, n, m, x);
+    }
+    nm_matmul_t_gen(values, indices, rows, cols, n, m, x)
+}
+
+/// Scalar reference body of [`nm_matmul_t`] (f32 values).
+#[allow(clippy::too_many_arguments)]
+pub fn nm_matmul_t_scalar(
+    values: &[f32],
+    indices: &[u8],
+    rows: usize,
+    cols: usize,
+    n: usize,
+    m: usize,
+    x: &Tensor,
+) -> Tensor {
+    nm_matmul_t_gen(&values, indices, rows, cols, n, m, x)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn nm_matmul_t_gen<V: ValueDecode>(
+    values: &V,
+    indices: &[u8],
+    rows: usize,
+    cols: usize,
+    n: usize,
+    m: usize,
+    x: &Tensor,
+) -> Tensor {
     let (s, xc) = (x.rows(), x.cols());
     assert_eq!(xc, cols, "nm_matmul_t inner dims: {xc} vs {cols}");
     let groups = cols / m;
-    debug_assert_eq!(values.len(), rows * groups * n, "packed n:m geometry");
+    debug_assert_eq!(indices.len(), rows * groups * n, "packed n:m geometry");
     let xd = x.data();
     let mut scratch = vec![0f32; rows * s];
     par::for_each_row_block(
@@ -406,7 +686,7 @@ pub fn nm_matmul_t(
                         let base = row_base + g * n;
                         let xg = &xrow[g * m..(g + 1) * m];
                         for sl in 0..n {
-                            acc += values[base + sl] * xg[indices[base + sl] as usize];
+                            acc += values.get(base + sl, r) * xg[indices[base + sl] as usize];
                         }
                     }
                     *o = acc;
@@ -414,27 +694,17 @@ pub fn nm_matmul_t(
             }
         },
     );
-    if s == 1 {
-        // [rows, 1] and [1, rows] share the same flat layout
-        return Tensor::from_vec(vec![1, rows], scratch);
-    }
-    let mut out = Tensor::zeros(vec![s, rows]);
-    let od = out.data_mut();
-    for r in 0..rows {
-        for t in 0..s {
-            od[t * rows + r] = scratch[r * s + t];
-        }
-    }
-    out
+    unscratch(scratch, rows, s)
 }
 
 /// out = X @ Wᵀ for a packed n:m W and a *wide* dense X [s, cols] →
 /// [s, rows] — the full-sequence forward kernel (`sparse::sparse_logits`
 /// with s = sequence length). Here the output rows are plentiful, so the
-/// split runs over X's rows directly (no scratch transpose). Each
-/// element accumulates in the identical ascending group/slot order as
-/// [`nm_matmul_t`], so the two kernels are bitwise equal element for
-/// element and both independent of the thread count.
+/// split runs over X's rows directly (no scratch transpose). In the
+/// scalar oracle each element accumulates in the identical ascending
+/// group/slot order as [`nm_matmul_t`], so the two kernels are bitwise
+/// equal element for element and both independent of the thread count.
+/// Dispatches on [`par::kernel_variant`].
 #[allow(clippy::too_many_arguments)]
 pub fn nm_matmul(
     values: &[f32],
@@ -445,10 +715,73 @@ pub fn nm_matmul(
     m: usize,
     x: &Tensor,
 ) -> Tensor {
+    nm_matmul_dispatch(&values, indices, rows, cols, n, m, x)
+}
+
+/// [`nm_matmul`] over a quantized value payload.
+#[allow(clippy::too_many_arguments)]
+pub fn nm_matmul_q(
+    values: &QuantValues,
+    indices: &[u8],
+    rows: usize,
+    cols: usize,
+    n: usize,
+    m: usize,
+    x: &Tensor,
+) -> Tensor {
+    match values {
+        QuantValues::F16(h) => nm_matmul_dispatch(&F16Values(h), indices, rows, cols, n, m, x),
+        QuantValues::Int8 { q, scales } => {
+            nm_matmul_dispatch(&Int8Values { q, scales }, indices, rows, cols, n, m, x)
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn nm_matmul_dispatch<V: ValueDecode>(
+    values: &V,
+    indices: &[u8],
+    rows: usize,
+    cols: usize,
+    n: usize,
+    m: usize,
+    x: &Tensor,
+) -> Tensor {
+    #[cfg(feature = "simd")]
+    if par::kernel_variant() == crate::config::KernelVariant::Simd {
+        return super::simd::nm_matmul(values, indices, rows, cols, n, m, x);
+    }
+    nm_matmul_gen(values, indices, rows, cols, n, m, x)
+}
+
+/// Scalar reference body of [`nm_matmul`] (f32 values).
+#[allow(clippy::too_many_arguments)]
+pub fn nm_matmul_scalar(
+    values: &[f32],
+    indices: &[u8],
+    rows: usize,
+    cols: usize,
+    n: usize,
+    m: usize,
+    x: &Tensor,
+) -> Tensor {
+    nm_matmul_gen(&values, indices, rows, cols, n, m, x)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn nm_matmul_gen<V: ValueDecode>(
+    values: &V,
+    indices: &[u8],
+    rows: usize,
+    cols: usize,
+    n: usize,
+    m: usize,
+    x: &Tensor,
+) -> Tensor {
     let (s, xc) = (x.rows(), x.cols());
     assert_eq!(xc, cols, "nm_matmul inner dims: {xc} vs {cols}");
     let groups = cols / m;
-    debug_assert_eq!(values.len(), rows * groups * n, "packed n:m geometry");
+    debug_assert_eq!(indices.len(), rows * groups * n, "packed n:m geometry");
     let xd = x.data();
     let mut out = Tensor::zeros(vec![s, rows]);
     par::for_each_row_block(
@@ -467,7 +800,7 @@ pub fn nm_matmul(
                         let base = row_base + g * n;
                         let xg = &xrow[g * m..(g + 1) * m];
                         for sl in 0..n {
-                            acc += values[base + sl] * xg[indices[base + sl] as usize];
+                            acc += values.get(base + sl, r) * xg[indices[base + sl] as usize];
                         }
                     }
                     *o = acc;
@@ -948,6 +1281,72 @@ mod tests {
             }
             for (a, b) in wide_t.data().iter().zip(baseline.data()) {
                 assert_eq!(a.to_bits(), b.to_bits(), "wide threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_scalar_kernels_match_dequantized_dense_route() {
+        // The quantized scalar kernels accumulate the exact same f32
+        // values in the exact same order as "dequantize to dense, then run
+        // the f32 kernel", so the two routes are bitwise equal.
+        let mut rng = Pcg64::seeded(48);
+        let (mr, nc, s) = (19, 23, 3);
+        let mut w = randt(&mut rng, vec![mr, nc]);
+        for v in w.data_mut() {
+            if *v > 0.4 {
+                *v = 0.0;
+            }
+        }
+        let (indptr, indices, values) = dense_to_csr(&w);
+        let starts: Vec<usize> = indptr.iter().map(|&e| e as usize).collect();
+        let x = randt(&mut rng, vec![s, nc]);
+        let quants = [
+            QuantValues::f16(&values),
+            QuantValues::int8(&values, &starts).unwrap(),
+        ];
+        for qv in &quants {
+            let deq = qv.dequantize(&starts);
+            let want = csr_matmul_t_scalar(&indptr, &indices, &deq, mr, nc, &x);
+            let got = csr_matmul_t_q(&indptr, &indices, qv, mr, nc, &x);
+            for (a, b) in got.data().iter().zip(want.data()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{:?}", qv.mode());
+            }
+            let ywant = csr_matvec_scalar(&indptr, &indices, &deq, mr, x.row(0));
+            let ygot = csr_matvec_q(&indptr, &indices, qv, mr, x.row(0));
+            for (a, b) in ygot.iter().zip(&ywant) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{:?}", qv.mode());
+            }
+        }
+
+        let (rows, cols, n, m) = (16, 24, 2, 4);
+        let wnm = crate::pruner::rounding::round_to_sparsity(
+            &randt(&mut rng, vec![rows, cols]),
+            crate::config::Sparsity::Semi(n, m),
+        );
+        let (nmv, nmi) = dense_to_nm(&wnm, n, m);
+        let stored = (cols / m) * n;
+        let nm_starts: Vec<usize> = (0..=rows).map(|r| r * stored).collect();
+        let xn = randt(&mut rng, vec![s, cols]);
+        let quants = [
+            QuantValues::f16(&nmv),
+            QuantValues::int8(&nmv, &nm_starts).unwrap(),
+        ];
+        for qv in &quants {
+            let deq = qv.dequantize(&nm_starts);
+            let want = nm_matmul_t_scalar(&deq, &nmi, rows, cols, n, m, &xn);
+            let got = nm_matmul_t_q(qv, &nmi, rows, cols, n, m, &xn);
+            for (a, b) in got.data().iter().zip(want.data()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{:?}", qv.mode());
+            }
+            let wide = nm_matmul_q(qv, &nmi, rows, cols, n, m, &xn);
+            for (a, b) in wide.data().iter().zip(want.data()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "wide {:?}", qv.mode());
+            }
+            let ywant = nm_matvec_scalar(&deq, &nmi, rows, cols, n, m, xn.row(0));
+            let ygot = nm_matvec_q(qv, &nmi, rows, cols, n, m, xn.row(0));
+            for (a, b) in ygot.iter().zip(&ywant) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{:?}", qv.mode());
             }
         }
     }

@@ -21,6 +21,9 @@
 pub mod kernels;
 pub mod ops;
 pub mod par;
+pub mod quant;
+#[cfg(feature = "simd")]
+pub mod simd;
 
 use std::fmt;
 

@@ -28,7 +28,48 @@
 use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+use crate::config::KernelVariant;
+
 static THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Which kernel implementation family the dispatchers in
+/// `tensor::kernels` select (0 = scalar, 1 = simd). Process-global like
+/// the thread count; every variant honors the determinism rules above, so
+/// thread-count invariance holds *per variant* (scalar and SIMD results
+/// are value-close, not bitwise equal — SIMD reduces lane partials in a
+/// different order; see `tensor::kernels`).
+static KERNEL_VARIANT: AtomicUsize = AtomicUsize::new(0);
+
+/// Select the process-global kernel variant. `Simd` is only accepted in
+/// builds with the `simd` cargo feature; without it this returns a checked
+/// error instead of silently running scalar code under a "simd" label.
+pub fn set_kernel_variant(v: KernelVariant) -> anyhow::Result<()> {
+    match v {
+        KernelVariant::Scalar => {
+            KERNEL_VARIANT.store(0, Ordering::Relaxed);
+            Ok(())
+        }
+        #[cfg(feature = "simd")]
+        KernelVariant::Simd => {
+            KERNEL_VARIANT.store(1, Ordering::Relaxed);
+            Ok(())
+        }
+        #[cfg(not(feature = "simd"))]
+        KernelVariant::Simd => anyhow::bail!(
+            "kernel variant 'simd' requires a build with --features simd \
+             (rebuild, or use --kernel scalar)"
+        ),
+    }
+}
+
+/// The currently selected kernel variant.
+pub fn kernel_variant() -> KernelVariant {
+    if KERNEL_VARIANT.load(Ordering::Relaxed) == 1 {
+        KernelVariant::Simd
+    } else {
+        KernelVariant::Scalar
+    }
+}
 
 thread_local! {
     static IN_WORKER: Cell<bool> = Cell::new(false);
@@ -215,6 +256,21 @@ mod tests {
         });
         assert!(!in_worker());
         set_threads(0);
+    }
+
+    #[test]
+    fn kernel_variant_defaults_to_scalar() {
+        let _g = locked();
+        assert_eq!(kernel_variant(), KernelVariant::Scalar);
+        set_kernel_variant(KernelVariant::Scalar).unwrap();
+        // selecting simd in a build without the feature is a checked error,
+        // not a silent scalar run under a "simd" label
+        #[cfg(not(feature = "simd"))]
+        {
+            let err = set_kernel_variant(KernelVariant::Simd).unwrap_err().to_string();
+            assert!(err.contains("--features simd"), "{err}");
+            assert_eq!(kernel_variant(), KernelVariant::Scalar);
+        }
     }
 
     #[test]

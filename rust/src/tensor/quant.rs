@@ -1,0 +1,395 @@
+//! Quantized value storage for compiled sparse operators: IEEE f16 and
+//! per-row absmax int8, decoded back to f32 *in registers* inside the
+//! kernels (`tensor::kernels::*_q`), so the bytes that cross the memory
+//! bus per decoded token shrink 2× (f16) or ~4× (int8) while every
+//! accumulation still happens in f32.
+//!
+//! Only the kept *values* of a sparse operator are quantized; the sparsity
+//! pattern (indices) stays exact, and zeros introduced by n:m group
+//! padding quantize to exact ±0.0 in both modes, so quantization never
+//! perturbs the pattern.
+//!
+//! Error contract (pinned by `tests/quant_kernel_parity.rs`):
+//! * f16 is exact for values that are representable in half precision
+//!   (including every small integer and ±0.0), and round-to-nearest-even
+//!   otherwise — worst-case relative error 2⁻¹¹ for normal values.
+//! * int8 stores `round(v / scale)` clamped to [-127, 127] with
+//!   `scale = row_absmax / 127`, so per-element absolute error is at most
+//!   `row_absmax / 127` (half that in the usual rounding case).
+//!
+//! No external `half` crate: the f16 conversions below are self-contained
+//! bit manipulations handling normals, subnormals, infinities, and NaN.
+
+use anyhow::{bail, Result};
+
+use crate::config::QuantMode;
+
+/// f32 → IEEE 754 binary16 bits, round-to-nearest-even; overflow → ±inf,
+/// NaN payloads collapse to a quiet NaN.
+pub fn f32_to_f16(v: f32) -> u16 {
+    let bits = v.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // inf / NaN; keep a NaN payload bit so NaN stays NaN
+        return sign | 0x7c00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        return sign | 0x7c00; // overflow → ±inf
+    }
+    if e <= 0 {
+        // subnormal half (or underflow to zero)
+        if e < -10 {
+            return sign;
+        }
+        let m = mant | 0x0080_0000; // implicit leading 1
+        let shift = (14 - e) as u32; // 14..=24
+        let half = m >> shift;
+        let rem = m & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let up = rem > halfway || (rem == halfway && half & 1 == 1);
+        let rounded = if up { half + 1 } else { half };
+        return sign | rounded as u16;
+    }
+    // normal half; mantissa rounding may carry into the exponent, which the
+    // plain add handles (and can correctly roll into inf)
+    let half = ((e as u32) << 10) | (mant >> 13);
+    let rem = mant & 0x1fff;
+    let up = rem > 0x1000 || (rem == 0x1000 && half & 1 == 1);
+    let rounded = if up { half + 1 } else { half };
+    sign | rounded as u16
+}
+
+/// IEEE 754 binary16 bits → f32 (exact; every f16 value is representable).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h as u32) & 0x8000) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x03ff) as u32;
+    if exp == 0x1f {
+        return f32::from_bits(sign | 0x7f80_0000 | (mant << 13));
+    }
+    if exp == 0 {
+        if mant == 0 {
+            return f32::from_bits(sign);
+        }
+        // subnormal half: renormalize into an f32 normal
+        let mut m = mant;
+        let mut e = 113u32; // 127 - 14
+        while m & 0x0400 == 0 {
+            m <<= 1;
+            e -= 1;
+        }
+        m &= 0x03ff;
+        return f32::from_bits(sign | (e << 23) | (m << 13));
+    }
+    f32::from_bits(sign | ((exp + 112) << 23) | (mant << 13))
+}
+
+/// Quantized value payload of one sparse operator. Indexing is by flat
+/// value position `k` plus the owning row (int8 needs the row's scale);
+/// callers always know both, since every kernel walks values row by row.
+#[derive(Clone, Debug)]
+pub enum QuantValues {
+    /// 2 bytes/value, no side data.
+    F16(Vec<u16>),
+    /// 1 byte/value + one f32 scale per row (`scale = row_absmax / 127`).
+    Int8 { q: Vec<i8>, scales: Vec<f32> },
+}
+
+impl QuantValues {
+    /// Quantize `values` to f16.
+    pub fn f16(values: &[f32]) -> QuantValues {
+        QuantValues::F16(values.iter().map(|&v| f32_to_f16(v)).collect())
+    }
+
+    /// Quantize `values` to per-row absmax int8. `row_starts` is an
+    /// indptr-style boundary array (`row_starts[r]..row_starts[r+1]` is
+    /// row r's value span); an all-zero row gets scale 0.0.
+    pub fn int8(values: &[f32], row_starts: &[usize]) -> Result<QuantValues> {
+        if row_starts.is_empty() || *row_starts.last().unwrap() != values.len() {
+            bail!(
+                "int8 quantization row boundaries do not cover the {} values",
+                values.len()
+            );
+        }
+        let rows = row_starts.len() - 1;
+        let mut q = Vec::with_capacity(values.len());
+        let mut scales = Vec::with_capacity(rows);
+        for r in 0..rows {
+            let (a, b) = (row_starts[r], row_starts[r + 1]);
+            if b < a || b > values.len() {
+                bail!("int8 quantization row {r} has invalid span {a}..{b}");
+            }
+            let absmax = values[a..b].iter().fold(0f32, |m, &v| m.max(v.abs()));
+            let scale = if absmax > 0.0 { absmax / 127.0 } else { 0.0 };
+            scales.push(scale);
+            for &v in &values[a..b] {
+                let qi = if scale > 0.0 {
+                    (v / scale).round().clamp(-127.0, 127.0)
+                } else {
+                    0.0
+                };
+                q.push(qi as i8);
+            }
+        }
+        Ok(QuantValues::Int8 { q, scales })
+    }
+
+    /// Quantize per `mode`; `QuantMode::None` is not representable here and
+    /// is a caller bug (the unquantized path keeps its `Vec<f32>`).
+    pub fn quantize(mode: QuantMode, values: &[f32], row_starts: &[usize]) -> Result<QuantValues> {
+        match mode {
+            QuantMode::F16 => Ok(QuantValues::f16(values)),
+            QuantMode::Int8 => QuantValues::int8(values, row_starts),
+            QuantMode::None => bail!("QuantMode::None has no quantized payload"),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            QuantValues::F16(h) => h.len(),
+            QuantValues::Int8 { q, .. } => q.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn mode(&self) -> QuantMode {
+        match self {
+            QuantValues::F16(_) => QuantMode::F16,
+            QuantValues::Int8 { .. } => QuantMode::Int8,
+        }
+    }
+
+    /// Resident bytes of the value payload (what replaces `4 * len` f32).
+    pub fn bytes(&self) -> usize {
+        match self {
+            QuantValues::F16(h) => 2 * h.len(),
+            QuantValues::Int8 { q, scales } => q.len() + 4 * scales.len(),
+        }
+    }
+
+    /// Dequantize value `k`, which belongs to row `row`.
+    #[inline]
+    pub fn get(&self, k: usize, row: usize) -> f32 {
+        match self {
+            QuantValues::F16(h) => f16_to_f32(h[k]),
+            QuantValues::Int8 { q, scales } => q[k] as f32 * scales[row],
+        }
+    }
+
+    /// Dequantize the whole payload back to f32 (tests / dense export).
+    pub fn dequantize(&self, row_starts: &[usize]) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.len());
+        match self {
+            QuantValues::F16(h) => out.extend(h.iter().map(|&x| f16_to_f32(x))),
+            QuantValues::Int8 { q, scales } => {
+                for r in 0..scales.len() {
+                    for k in row_starts[r]..row_starts[r + 1] {
+                        out.push(q[k] as f32 * scales[r]);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Uniform "read value k of row r as f32" access for kernels that are
+/// generic over the value payload: plain f32 slices and both quantized
+/// payloads implement it, so one monomorphized kernel body serves all
+/// three. `load8` exists so the SIMD bodies can fill a lane group in one
+/// call (specialized to a straight copy for f32).
+pub trait ValueDecode: Sync {
+    /// Value `k` (flat position), owned by `row`, as f32.
+    fn get(&self, k: usize, row: usize) -> f32;
+
+    /// Values `k..k+8` of `row` as f32 (callers guarantee in-bounds).
+    #[inline]
+    fn load8(&self, k: usize, row: usize) -> [f32; 8] {
+        let mut out = [0f32; 8];
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = self.get(k + i, row);
+        }
+        out
+    }
+}
+
+impl ValueDecode for &[f32] {
+    #[inline]
+    fn get(&self, k: usize, _row: usize) -> f32 {
+        self[k]
+    }
+
+    #[inline]
+    fn load8(&self, k: usize, _row: usize) -> [f32; 8] {
+        let mut out = [0f32; 8];
+        out.copy_from_slice(&self[k..k + 8]);
+        out
+    }
+}
+
+/// Borrowed f16 payload view implementing [`ValueDecode`].
+#[derive(Clone, Copy)]
+pub struct F16Values<'a>(pub &'a [u16]);
+
+impl ValueDecode for F16Values<'_> {
+    #[inline]
+    fn get(&self, k: usize, _row: usize) -> f32 {
+        f16_to_f32(self.0[k])
+    }
+}
+
+/// Borrowed int8 payload view implementing [`ValueDecode`].
+#[derive(Clone, Copy)]
+pub struct Int8Values<'a> {
+    pub q: &'a [i8],
+    pub scales: &'a [f32],
+}
+
+impl ValueDecode for Int8Values<'_> {
+    #[inline]
+    fn get(&self, k: usize, row: usize) -> f32 {
+        self.q[k] as f32 * self.scales[row]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_round_trips_representable_values() {
+        // every value here is exactly representable in binary16
+        for v in [
+            0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 1024.0, -1024.0, 65504.0, -65504.0, 0.25,
+            1.5, 3.140625,
+        ] {
+            let back = f16_to_f32(f32_to_f16(v));
+            assert_eq!(back.to_bits(), v.to_bits(), "{v} -> {back}");
+        }
+    }
+
+    #[test]
+    fn f16_handles_edge_cases() {
+        assert_eq!(f32_to_f16(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16(f32::NEG_INFINITY), 0xfc00);
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        // overflow saturates to inf
+        assert_eq!(f32_to_f16(1e6), 0x7c00);
+        assert_eq!(f32_to_f16(-1e6), 0xfc00);
+        // deep underflow flushes to signed zero
+        assert_eq!(f16_to_f32(f32_to_f16(1e-30)).to_bits(), 0f32.to_bits());
+        assert_eq!(f16_to_f32(f32_to_f16(-1e-30)).to_bits(), (-0f32).to_bits());
+        // subnormal halves round-trip (smallest positive f16 = 2^-24)
+        let tiny = 2f32.powi(-24);
+        assert_eq!(f16_to_f32(f32_to_f16(tiny)), tiny);
+        let sub = 3.0 * 2f32.powi(-24);
+        assert_eq!(f16_to_f32(f32_to_f16(sub)), sub);
+    }
+
+    #[test]
+    fn f16_exhaustive_bits_round_trip() {
+        // every finite f16 bit pattern survives f16 -> f32 -> f16 exactly
+        for h in 0u16..=0xffff {
+            let exp = (h >> 10) & 0x1f;
+            if exp == 0x1f {
+                continue; // inf/NaN handled above
+            }
+            assert_eq!(f32_to_f16(f16_to_f32(h)), h, "bits {h:#06x}");
+        }
+    }
+
+    #[test]
+    fn f16_rounds_to_nearest() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and the next f16; RNE
+        // ties to the even mantissa (1.0)
+        let halfway = 1.0 + 2f32.powi(-11);
+        assert_eq!(f16_to_f32(f32_to_f16(halfway)), 1.0);
+        // just above the halfway point rounds up
+        let above = 1.0 + 2f32.powi(-11) + 2f32.powi(-20);
+        assert_eq!(f16_to_f32(f32_to_f16(above)), 1.0 + 2f32.powi(-10));
+    }
+
+    #[test]
+    fn int8_error_is_bounded_by_absmax_over_127() {
+        let values: Vec<f32> =
+            (0..37).map(|i| ((i * 2654435761u64 as usize) % 2000) as f32 / 100.0 - 10.0).collect();
+        let starts = vec![0, 10, 10, 25, 37]; // includes an empty row
+        let qv = QuantValues::int8(&values, &starts).unwrap();
+        assert_eq!(qv.len(), values.len());
+        let deq = qv.dequantize(&starts);
+        for r in 0..4 {
+            let absmax = values[starts[r]..starts[r + 1]]
+                .iter()
+                .fold(0f32, |m, &v| m.max(v.abs()));
+            let bound = absmax / 127.0 + 1e-6;
+            for k in starts[r]..starts[r + 1] {
+                assert!(
+                    (deq[k] - values[k]).abs() <= bound,
+                    "row {r} value {k}: {} vs {} (bound {bound})",
+                    deq[k],
+                    values[k]
+                );
+                assert_eq!(qv.get(k, r).to_bits(), deq[k].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn int8_keeps_exact_zeros_and_rejects_bad_spans() {
+        let qv = QuantValues::int8(&[0.0, 0.0, 5.0, -5.0], &[0, 2, 4]).unwrap();
+        let deq = qv.dequantize(&[0, 2, 4]);
+        assert_eq!(deq[0].to_bits(), 0f32.to_bits());
+        assert_eq!(deq[1].to_bits(), 0f32.to_bits());
+        assert_eq!(deq[2], 5.0);
+        assert_eq!(deq[3], -5.0);
+        assert!(QuantValues::int8(&[1.0, 2.0], &[0, 1]).is_err());
+        assert!(QuantValues::int8(&[1.0], &[]).is_err());
+    }
+
+    #[test]
+    fn bytes_and_modes_report_payload_sizes() {
+        let values = vec![1.0f32; 16];
+        let f16 = QuantValues::f16(&values);
+        assert_eq!(f16.mode(), QuantMode::F16);
+        assert_eq!(f16.bytes(), 32);
+        let i8v = QuantValues::int8(&values, &[0, 8, 16]).unwrap();
+        assert_eq!(i8v.mode(), QuantMode::Int8);
+        assert_eq!(i8v.bytes(), 16 + 8);
+        assert!(!f16.is_empty());
+        // int8 is at least 2x smaller than the 64-byte f32 payload
+        assert!(i8v.bytes() * 2 <= 4 * values.len());
+    }
+
+    #[test]
+    fn value_decode_load8_matches_get() {
+        let values: Vec<f32> = (0..16).map(|i| i as f32 * 0.25 - 2.0).collect();
+        let f32v: &[f32] = &values;
+        let eight = f32v.load8(4, 0);
+        for (i, &e) in eight.iter().enumerate() {
+            assert_eq!(e, values[4 + i]);
+        }
+        let h: Vec<u16> = values.iter().map(|&v| f32_to_f16(v)).collect();
+        let f16v = F16Values(&h);
+        let eight = f16v.load8(8, 0);
+        for (i, &e) in eight.iter().enumerate() {
+            assert_eq!(e, f16v.get(8 + i, 0));
+        }
+        let starts = vec![0usize, values.len()];
+        let qv = QuantValues::int8(&values, &starts).unwrap();
+        let (q, scales) = match &qv {
+            QuantValues::Int8 { q, scales } => (q.as_slice(), scales.as_slice()),
+            _ => unreachable!(),
+        };
+        let i8v = Int8Values { q, scales };
+        let eight = i8v.load8(0, 0);
+        for (i, &e) in eight.iter().enumerate() {
+            assert_eq!(e, i8v.get(i, 0));
+        }
+    }
+}

@@ -1,0 +1,384 @@
+//! Portable-SIMD (`core::simd`) bodies of the decode-critical kernels
+//! (`--features simd`, nightly). Selected at runtime through
+//! `par::set_kernel_variant(KernelVariant::Simd)`; the dispatchers live
+//! in [`super::kernels`].
+//!
+//! # Determinism contract
+//!
+//! Every body here follows the `tensor::par` rules — work splits by
+//! contiguous output rows and each element is computed whole, in a fixed
+//! order, by exactly one worker — so SIMD results are **bitwise
+//! independent of the thread count**, same as the scalar variant.
+//!
+//! SIMD results are *not* bitwise equal to the scalar oracle: the inner
+//! dot products accumulate eight f32 lanes that are reduced once at the
+//! end of the row (plus a scalar tail for lengths not divisible by 8),
+//! which reorders the floating-point additions. The parity suite
+//! (`tests/quant_kernel_parity.rs`) pins the variants together within a
+//! relative tolerance of ~1e-5 per element on unit-scale inputs.
+//!
+//! Sparse gathers (`x[indices[k]]`) are performed scalar into a lane
+//! buffer — on current CPUs a hardware gather is microcoded to the same
+//! loads, and keeping the portable API surface to `from_array` /
+//! `from_slice` / `splat` / `reduce_sum` avoids the churn-prone corners
+//! of `core::simd`. Quantized payloads dequantize through
+//! [`ValueDecode::load8`] straight into lanes, so quantized weights never
+//! round-trip through a dense f32 buffer.
+
+use core::simd::f32x8;
+use core::simd::num::SimdFloat;
+
+use super::kernels::{min_rows_for, unscratch};
+use super::par;
+use super::quant::ValueDecode;
+use super::Tensor;
+
+/// Lane count of the working vector type.
+pub const LANES: usize = 8;
+
+/// Eight-lane dot product of two equal-length slices: SIMD main loop,
+/// scalar tail, one lane reduction. Fixed order — thread-count invariant.
+#[inline]
+fn dot8(a: &[f32], b: &[f32]) -> f32 {
+    let len = a.len().min(b.len());
+    let mut acc = f32x8::splat(0.0);
+    let mut t = 0usize;
+    while t + LANES <= len {
+        let av = f32x8::from_slice(&a[t..t + LANES]);
+        let bv = f32x8::from_slice(&b[t..t + LANES]);
+        acc += av * bv;
+        t += LANES;
+    }
+    let mut sum = acc.reduce_sum();
+    while t < len {
+        sum += a[t] * b[t];
+        t += 1;
+    }
+    sum
+}
+
+/// SIMD body of [`super::kernels::matvec`].
+pub fn matvec(a: &Tensor, x: &[f32]) -> Vec<f32> {
+    let (m, n) = (a.rows(), a.cols());
+    assert_eq!(n, x.len());
+    let ad = a.data();
+    let mut out = vec![0f32; m];
+    par::for_each_row_block(&mut out, m, 1, min_rows_for(2 * n), |r0, _r1, block| {
+        for (i, o) in block.iter_mut().enumerate() {
+            let row = &ad[(r0 + i) * n..(r0 + i + 1) * n];
+            *o = dot8(row, x);
+        }
+    });
+    out
+}
+
+/// SIMD body of [`super::kernels::matmul_nt_skinny`].
+pub fn matmul_nt_skinny(a: &Tensor, b: &Tensor) -> Tensor {
+    let (s, k) = (a.rows(), a.cols());
+    let (n, k2) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul_nt_skinny inner dims: {k} vs {k2}");
+    let (ad, bd) = (a.data(), b.data());
+    let mut scratch = vec![0f32; n * s];
+    par::for_each_row_block(&mut scratch, n, s, min_rows_for(2 * s * k), |j0, j1, block| {
+        for j in j0..j1 {
+            let brow = &bd[j * k..(j + 1) * k];
+            let orow = &mut block[(j - j0) * s..(j - j0 + 1) * s];
+            for (t, o) in orow.iter_mut().enumerate() {
+                *o = dot8(&ad[t * k..(t + 1) * k], brow);
+            }
+        }
+    });
+    unscratch(scratch, n, s)
+}
+
+/// One CSR row's accumulation: value lanes via [`ValueDecode::load8`],
+/// scalar index gathers into a lane buffer, scalar tail.
+#[inline]
+fn csr_row_acc<V: ValueDecode>(
+    values: &V,
+    indices: &[u32],
+    a: usize,
+    b: usize,
+    r: usize,
+    x: &[f32],
+) -> f32 {
+    let mut acc = f32x8::splat(0.0);
+    let mut k = a;
+    while k + LANES <= b {
+        let vals = f32x8::from_array(values.load8(k, r));
+        let mut xs = [0f32; LANES];
+        for (i, slot) in xs.iter_mut().enumerate() {
+            *slot = x[indices[k + i] as usize];
+        }
+        acc += vals * f32x8::from_array(xs);
+        k += LANES;
+    }
+    let mut sum = acc.reduce_sum();
+    while k < b {
+        sum += values.get(k, r) * x[indices[k] as usize];
+        k += 1;
+    }
+    sum
+}
+
+/// SIMD body of [`super::kernels::csr_matvec`].
+pub fn csr_matvec<V: ValueDecode>(
+    indptr: &[u32],
+    indices: &[u32],
+    values: &V,
+    rows: usize,
+    x: &[f32],
+) -> Vec<f32> {
+    debug_assert_eq!(indptr.len(), rows + 1, "indptr length");
+    let nnz = indptr.last().map(|&e| e as usize).unwrap_or(0);
+    let nnz_per_row = nnz / rows.max(1);
+    let mut out = vec![0f32; rows];
+    let min_rows = min_rows_for(2 * nnz_per_row.max(1));
+    par::for_each_row_block(&mut out, rows, 1, min_rows, |r0, _r1, block| {
+        for (i, o) in block.iter_mut().enumerate() {
+            let r = r0 + i;
+            *o = csr_row_acc(values, indices, indptr[r] as usize, indptr[r + 1] as usize, r, x);
+        }
+    });
+    out
+}
+
+/// SIMD body of [`super::kernels::csr_matmul_t`].
+pub fn csr_matmul_t<V: ValueDecode>(
+    indptr: &[u32],
+    indices: &[u32],
+    values: &V,
+    rows: usize,
+    cols: usize,
+    x: &Tensor,
+) -> Tensor {
+    let (s, n) = (x.rows(), x.cols());
+    assert_eq!(n, cols, "csr_matmul_t inner dims: {n} vs {cols}");
+    debug_assert_eq!(indptr.len(), rows + 1, "indptr length");
+    let xd = x.data();
+    let nnz = indptr.last().map(|&e| e as usize).unwrap_or(0);
+    let nnz_per_row = nnz / rows.max(1);
+    let mut scratch = vec![0f32; rows * s];
+    par::for_each_row_block(
+        &mut scratch,
+        rows,
+        s,
+        min_rows_for(2 * s * nnz_per_row.max(1)),
+        |r0, r1, block| {
+            for r in r0..r1 {
+                let (a, b) = (indptr[r] as usize, indptr[r + 1] as usize);
+                let orow = &mut block[(r - r0) * s..(r - r0 + 1) * s];
+                for (t, o) in orow.iter_mut().enumerate() {
+                    let xrow = &xd[t * n..(t + 1) * n];
+                    *o = csr_row_acc(values, indices, a, b, r, xrow);
+                }
+            }
+        },
+    );
+    unscratch(scratch, rows, s)
+}
+
+/// One packed-n:m row's accumulation against one dense x row. Walks the
+/// row's flat value stream in eight-value chunks; the group of flat slot
+/// `k` is `k / n`, so the x gather index is `(k / n) * m + indices[k]`.
+#[inline]
+fn nm_row_acc<V: ValueDecode>(
+    values: &V,
+    indices: &[u8],
+    row_base: usize,
+    span: usize,
+    r: usize,
+    n: usize,
+    m: usize,
+    xrow: &[f32],
+) -> f32 {
+    let mut acc = f32x8::splat(0.0);
+    let mut k = 0usize;
+    while k + LANES <= span {
+        let vals = f32x8::from_array(values.load8(row_base + k, r));
+        let mut xs = [0f32; LANES];
+        for (i, slot) in xs.iter_mut().enumerate() {
+            let kl = k + i;
+            *slot = xrow[(kl / n) * m + indices[row_base + kl] as usize];
+        }
+        acc += vals * f32x8::from_array(xs);
+        k += LANES;
+    }
+    let mut sum = acc.reduce_sum();
+    while k < span {
+        sum += values.get(row_base + k, r) * xrow[(k / n) * m + indices[row_base + k] as usize];
+        k += 1;
+    }
+    sum
+}
+
+/// SIMD body of [`super::kernels::nm_matvec`].
+#[allow(clippy::too_many_arguments)]
+pub fn nm_matvec<V: ValueDecode>(
+    values: &V,
+    indices: &[u8],
+    rows: usize,
+    cols: usize,
+    n: usize,
+    m: usize,
+    x: &[f32],
+) -> Vec<f32> {
+    let groups = cols / m;
+    let span = groups * n;
+    debug_assert_eq!(indices.len(), rows * span, "packed n:m geometry");
+    debug_assert_eq!(x.len(), cols, "nm_matvec inner dims");
+    let mut out = vec![0f32; rows];
+    let min_rows = min_rows_for(2 * span);
+    par::for_each_row_block(&mut out, rows, 1, min_rows, |r0, _r1, block| {
+        for (i, o) in block.iter_mut().enumerate() {
+            let r = r0 + i;
+            *o = nm_row_acc(values, indices, r * span, span, r, n, m, x);
+        }
+    });
+    out
+}
+
+/// SIMD body of [`super::kernels::nm_matmul_t`].
+#[allow(clippy::too_many_arguments)]
+pub fn nm_matmul_t<V: ValueDecode>(
+    values: &V,
+    indices: &[u8],
+    rows: usize,
+    cols: usize,
+    n: usize,
+    m: usize,
+    x: &Tensor,
+) -> Tensor {
+    let (s, xc) = (x.rows(), x.cols());
+    assert_eq!(xc, cols, "nm_matmul_t inner dims: {xc} vs {cols}");
+    let groups = cols / m;
+    let span = groups * n;
+    debug_assert_eq!(indices.len(), rows * span, "packed n:m geometry");
+    let xd = x.data();
+    let mut scratch = vec![0f32; rows * s];
+    par::for_each_row_block(
+        &mut scratch,
+        rows,
+        s,
+        min_rows_for(2 * s * span),
+        |r0, r1, block| {
+            for r in r0..r1 {
+                let orow = &mut block[(r - r0) * s..(r - r0 + 1) * s];
+                for (t, o) in orow.iter_mut().enumerate() {
+                    let xrow = &xd[t * cols..(t + 1) * cols];
+                    *o = nm_row_acc(values, indices, r * span, span, r, n, m, xrow);
+                }
+            }
+        },
+    );
+    unscratch(scratch, rows, s)
+}
+
+/// SIMD body of [`super::kernels::nm_matmul`].
+#[allow(clippy::too_many_arguments)]
+pub fn nm_matmul<V: ValueDecode>(
+    values: &V,
+    indices: &[u8],
+    rows: usize,
+    cols: usize,
+    n: usize,
+    m: usize,
+    x: &Tensor,
+) -> Tensor {
+    let (s, xc) = (x.rows(), x.cols());
+    assert_eq!(xc, cols, "nm_matmul inner dims: {xc} vs {cols}");
+    let groups = cols / m;
+    let span = groups * n;
+    debug_assert_eq!(indices.len(), rows * span, "packed n:m geometry");
+    let xd = x.data();
+    let mut out = Tensor::zeros(vec![s, rows]);
+    par::for_each_row_block(
+        out.data_mut(),
+        s,
+        rows,
+        min_rows_for(2 * rows * span),
+        |t0, t1, block| {
+            for t in t0..t1 {
+                let xrow = &xd[t * cols..(t + 1) * cols];
+                let orow = &mut block[(t - t0) * rows..(t - t0 + 1) * rows];
+                for (r, o) in orow.iter_mut().enumerate() {
+                    *o = nm_row_acc(values, indices, r * span, span, r, n, m, xrow);
+                }
+            }
+        },
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::kernels;
+    use crate::util::Pcg64;
+
+    fn randt(rng: &mut Pcg64, shape: Vec<usize>) -> Tensor {
+        let len = shape.iter().product();
+        Tensor::from_vec(shape, rng.normal_vec(len, 1.0))
+    }
+
+    fn close(a: f32, b: f32) -> bool {
+        (a - b).abs() <= 1e-4 * a.abs().max(b.abs()).max(1.0)
+    }
+
+    #[test]
+    fn simd_dense_bodies_match_scalar_oracle() {
+        let mut rng = Pcg64::seeded(61);
+        for n in [1usize, 7, 8, 9, 16, 17, 64] {
+            let a = randt(&mut rng, vec![13, n]);
+            let x: Vec<f32> = rng.normal_vec(n, 1.0);
+            let want = kernels::matvec_scalar(&a, &x);
+            let got = matvec(&a, &x);
+            for (g, w) in got.iter().zip(&want) {
+                assert!(close(*g, *w), "n={n}: {g} vs {w}");
+            }
+            for s in [1usize, 3] {
+                let sk = randt(&mut rng, vec![s, n]);
+                let want = kernels::matmul_nt_skinny_scalar(&sk, &a);
+                let got = matmul_nt_skinny(&sk, &a);
+                assert_eq!(got.shape(), want.shape());
+                for (g, w) in got.data().iter().zip(want.data()) {
+                    assert!(close(*g, *w), "n={n} s={s}: {g} vs {w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_sparse_bodies_match_scalar_oracle() {
+        let mut rng = Pcg64::seeded(62);
+        let (rows, cols, s) = (21, 24, 3);
+        let mut w = randt(&mut rng, vec![rows, cols]);
+        for v in w.data_mut() {
+            if *v > 0.3 {
+                *v = 0.0;
+            }
+        }
+        let (mut indptr, mut indices, mut values) = (vec![0u32], Vec::new(), Vec::new());
+        for i in 0..rows {
+            for (j, &v) in w.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    indices.push(j as u32);
+                    values.push(v);
+                }
+            }
+            indptr.push(indices.len() as u32);
+        }
+        let x = randt(&mut rng, vec![s, cols]);
+        let vref: &[f32] = &values;
+        let want = kernels::csr_matmul_t_scalar(&indptr, &indices, &values, rows, cols, &x);
+        let got = csr_matmul_t(&indptr, &indices, &vref, rows, cols, &x);
+        for (g, w) in got.data().iter().zip(want.data()) {
+            assert!(close(*g, *w), "{g} vs {w}");
+        }
+        let ywant = kernels::csr_matvec_scalar(&indptr, &indices, &values, rows, x.row(0));
+        let ygot = csr_matvec(&indptr, &indices, &vref, rows, x.row(0));
+        for (g, w) in ygot.iter().zip(&ywant) {
+            assert!(close(*g, *w), "{g} vs {w}");
+        }
+    }
+}

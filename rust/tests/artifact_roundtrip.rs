@@ -36,6 +36,7 @@ fn meta_for(model: &str, sp: Sparsity, format: SparseFormat) -> ArtifactMeta {
         method: "magnitude".into(),
         sparsity: sp.label(),
         format: format.label().into(),
+        quant: "none".into(),
         seed: 1,
         prune: None,
     }

@@ -1,0 +1,444 @@
+//! Kernel-variant and quantization parity suite
+//! (docs/ARCHITECTURE.md §Kernels).
+//!
+//! Pins the decode-kernel contract across the dispatch axes:
+//!
+//! * every scalar kernel is bitwise thread-count-invariant, including the
+//!   awkward shapes — dims 1..=17, empty CSR rows, ragged n:m tail groups
+//!   (padded to n slots), fully-zero rows;
+//! * the SIMD variant (`--features simd`) is value-close to the scalar
+//!   oracle (relative tolerance — lane partials reduce in a different
+//!   order) and itself bitwise thread-count-invariant;
+//! * quantized payloads round-trip within their documented error bounds
+//!   (f16 exact for representable values, int8 within row_absmax / 127)
+//!   and the quantized kernels stay bitwise equal to the
+//!   dequantize-then-f32 route at every thread count;
+//! * a `simd` kernel request on a scalar-only build is a checked error.
+//!
+//! Every test flips process-global state (thread count, kernel variant),
+//! so the whole binary serializes on one mutex and restores the defaults
+//! through a drop guard — the in-crate unit tests never touch the
+//! variant, keeping them safe to run in parallel.
+
+use std::sync::{Mutex, MutexGuard};
+
+use fistapruner::config::KernelVariant;
+use fistapruner::tensor::kernels as k;
+use fistapruner::tensor::par;
+use fistapruner::tensor::quant::QuantValues;
+use fistapruner::tensor::Tensor;
+use fistapruner::util::Pcg64;
+
+static GLOBAL: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    GLOBAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Restores the default globals (scalar kernels, auto threads) even when
+/// an assertion unwinds, so one failing test cannot poison the rest.
+struct RestoreGlobals;
+
+impl Drop for RestoreGlobals {
+    fn drop(&mut self) {
+        let _ = par::set_kernel_variant(KernelVariant::Scalar);
+        par::set_threads(0);
+    }
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}[{i}]: {x} vs {y}");
+    }
+}
+
+/// CSR encoding of a dense matrix; rows with no nonzeros become genuinely
+/// empty spans (indptr[r] == indptr[r+1]).
+fn dense_to_csr(w: &Tensor) -> (Vec<u32>, Vec<u32>, Vec<f32>) {
+    let (mut indptr, mut indices, mut values) = (vec![0u32], Vec::new(), Vec::new());
+    for i in 0..w.rows() {
+        for (j, &v) in w.row(i).iter().enumerate() {
+            if v != 0.0 {
+                indices.push(j as u32);
+                values.push(v);
+            }
+        }
+        indptr.push(indices.len() as u32);
+    }
+    (indptr, indices, values)
+}
+
+/// Packed n:m encoding of a dense matrix whose groups already hold at
+/// most n nonzeros; groups with fewer are padded with exact zeros.
+fn dense_to_nm(w: &Tensor, n: usize, m: usize) -> (Vec<f32>, Vec<u8>) {
+    let (mut values, mut indices) = (Vec::new(), Vec::new());
+    for i in 0..w.rows() {
+        for grp in w.row(i).chunks(m) {
+            let mut kept: Vec<usize> = (0..m).filter(|&j| grp[j] != 0.0).collect();
+            let mut pad = (0..m).filter(|&j| grp[j] == 0.0);
+            while kept.len() < n {
+                kept.push(pad.next().expect("group has >= m - n zeros"));
+            }
+            kept.sort_unstable();
+            for j in kept {
+                values.push(grp[j]);
+                indices.push(j as u8);
+            }
+        }
+    }
+    (values, indices)
+}
+
+/// A dense matrix obeying the n:m pattern with deliberately awkward
+/// structure: the last group of every row is ragged (one kept value,
+/// padded to n slots) and, for rows > 2, one row is entirely zero.
+fn make_nm_dense(rng: &mut Pcg64, rows: usize, cols: usize, n: usize, m: usize) -> Tensor {
+    let mut w = Tensor::from_vec(vec![rows, cols], rng.normal_vec(rows * cols, 1.0));
+    let groups = cols / m;
+    for r in 0..rows {
+        for g in 0..groups {
+            let keep = if rows > 2 && r == rows / 2 {
+                0
+            } else if g + 1 == groups {
+                1
+            } else {
+                n
+            };
+            let kept: Vec<usize> = (0..keep).map(|s| (g + s) % m).collect();
+            for j in 0..m {
+                if !kept.contains(&j) {
+                    w.set2(r, g * m + j, 0.0);
+                }
+            }
+        }
+    }
+    w
+}
+
+/// A ~50%-sparse dense matrix with (for rows > 2) one fully empty row.
+fn make_csr_dense(rng: &mut Pcg64, rows: usize, cols: usize) -> Tensor {
+    let mut w = Tensor::from_vec(vec![rows, cols], rng.normal_vec(rows * cols, 1.0));
+    for v in w.data_mut() {
+        if *v < -0.1 {
+            *v = 0.0;
+        }
+    }
+    if rows > 2 {
+        let r = rows / 2;
+        for j in 0..cols {
+            w.set2(r, j, 0.0);
+        }
+    }
+    w
+}
+
+#[test]
+fn scalar_csr_kernels_bitwise_thread_invariant_on_awkward_shapes() {
+    let _g = lock();
+    let _restore = RestoreGlobals;
+    par::set_kernel_variant(KernelVariant::Scalar).unwrap();
+    let mut rng = Pcg64::seeded(101);
+    let cols = 13;
+    for rows in 1..=17 {
+        let w = make_csr_dense(&mut rng, rows, cols);
+        let (indptr, indices, values) = dense_to_csr(&w);
+        for s in [1usize, 3] {
+            let x = Tensor::from_vec(vec![s, cols], rng.normal_vec(s * cols, 1.0));
+            let runs: Vec<(Vec<f32>, Tensor)> = [1usize, 4]
+                .iter()
+                .map(|&t| {
+                    par::set_threads(t);
+                    let y = k::csr_matvec(&indptr, &indices, &values, rows, x.row(0));
+                    let o = k::csr_matmul_t(&indptr, &indices, &values, rows, cols, &x);
+                    par::set_threads(0);
+                    (y, o)
+                })
+                .collect();
+            let ctx = format!("csr rows={rows} s={s}");
+            assert_bits_eq(&runs[0].0, &runs[1].0, &format!("{ctx} matvec threads"));
+            assert_bits_eq(runs[0].1.data(), runs[1].1.data(), &format!("{ctx} matmul_t threads"));
+            // the dispatcher at Scalar IS the scalar body, bitwise
+            let oracle = k::csr_matmul_t_scalar(&indptr, &indices, &values, rows, cols, &x);
+            assert_bits_eq(runs[0].1.data(), oracle.data(), &format!("{ctx} dispatcher"));
+        }
+    }
+}
+
+#[test]
+fn scalar_nm_kernels_bitwise_thread_invariant_on_ragged_tails() {
+    let _g = lock();
+    let _restore = RestoreGlobals;
+    par::set_kernel_variant(KernelVariant::Scalar).unwrap();
+    let mut rng = Pcg64::seeded(103);
+    let (n, m) = (2usize, 4usize);
+    for rows in 1..=17 {
+        for cols in [4usize, 8, 16] {
+            let w = make_nm_dense(&mut rng, rows, cols, n, m);
+            let (values, indices) = dense_to_nm(&w, n, m);
+            assert_eq!(values.len(), rows * (cols / m) * n, "padded slot count");
+            let s = 3usize;
+            let x = Tensor::from_vec(vec![s, cols], rng.normal_vec(s * cols, 1.0));
+            let runs: Vec<(Vec<f32>, Tensor, Tensor)> = [1usize, 4]
+                .iter()
+                .map(|&t| {
+                    par::set_threads(t);
+                    let y = k::nm_matvec(&values, &indices, rows, cols, n, m, x.row(0));
+                    let skinny = k::nm_matmul_t(&values, &indices, rows, cols, n, m, &x);
+                    let wide = k::nm_matmul(&values, &indices, rows, cols, n, m, &x);
+                    par::set_threads(0);
+                    (y, skinny, wide)
+                })
+                .collect();
+            let ctx = format!("nm rows={rows} cols={cols}");
+            assert_bits_eq(&runs[0].0, &runs[1].0, &format!("{ctx} matvec threads"));
+            assert_bits_eq(runs[0].1.data(), runs[1].1.data(), &format!("{ctx} skinny threads"));
+            assert_bits_eq(runs[0].2.data(), runs[1].2.data(), &format!("{ctx} wide threads"));
+            // skinny and wide routes are bitwise equal element for element
+            assert_bits_eq(runs[0].1.data(), runs[0].2.data(), &format!("{ctx} skinny==wide"));
+        }
+    }
+}
+
+#[test]
+fn quantized_kernels_bitwise_thread_invariant_and_match_dequantized_route() {
+    let _g = lock();
+    let _restore = RestoreGlobals;
+    par::set_kernel_variant(KernelVariant::Scalar).unwrap();
+    let mut rng = Pcg64::seeded(107);
+    let (rows, cols, s) = (15usize, 12usize, 3usize);
+    let x = Tensor::from_vec(vec![s, cols], rng.normal_vec(s * cols, 1.0));
+
+    let w = make_csr_dense(&mut rng, rows, cols);
+    let (indptr, indices, values) = dense_to_csr(&w);
+    let starts: Vec<usize> = indptr.iter().map(|&e| e as usize).collect();
+    for qv in [QuantValues::f16(&values), QuantValues::int8(&values, &starts).unwrap()] {
+        let deq = qv.dequantize(&starts);
+        let want = k::csr_matmul_t_scalar(&indptr, &indices, &deq, rows, cols, &x);
+        for t in [1usize, 4] {
+            par::set_threads(t);
+            let got = k::csr_matmul_t_q(&indptr, &indices, &qv, rows, cols, &x);
+            par::set_threads(0);
+            assert_bits_eq(
+                got.data(),
+                want.data(),
+                &format!("csr_q {:?} threads={t}", qv.mode()),
+            );
+        }
+    }
+
+    let (n, m) = (2usize, 4usize);
+    let wnm = make_nm_dense(&mut rng, rows, cols, n, m);
+    let (nmv, nmi) = dense_to_nm(&wnm, n, m);
+    let stored = (cols / m) * n;
+    let nm_starts: Vec<usize> = (0..=rows).map(|r| r * stored).collect();
+    for qv in [QuantValues::f16(&nmv), QuantValues::int8(&nmv, &nm_starts).unwrap()] {
+        let deq = qv.dequantize(&nm_starts);
+        let want = k::nm_matmul_t_scalar(&deq, &nmi, rows, cols, n, m, &x);
+        for t in [1usize, 4] {
+            par::set_threads(t);
+            let got = k::nm_matmul_t_q(&qv, &nmi, rows, cols, n, m, &x);
+            let wide = k::nm_matmul_q(&qv, &nmi, rows, cols, n, m, &x);
+            par::set_threads(0);
+            assert_bits_eq(got.data(), want.data(), &format!("nm_q {:?} threads={t}", qv.mode()));
+            assert_bits_eq(wide.data(), want.data(), &format!("nm_q wide {:?} t={t}", qv.mode()));
+        }
+    }
+}
+
+#[test]
+fn quantize_round_trip_stays_inside_the_documented_bounds() {
+    // f16: exact for representable values (multiples of 0.25 well inside
+    // the half-precision range), and within 2^-11 relative otherwise.
+    let representable: Vec<f32> = (0..64).map(|i| (i as f32 - 32.0) * 0.25).collect();
+    let f16 = QuantValues::f16(&representable);
+    let starts = vec![0usize, representable.len()];
+    for (got, want) in f16.dequantize(&starts).iter().zip(&representable) {
+        assert_eq!(got.to_bits(), want.to_bits(), "f16 must be exact for {want}");
+    }
+    let mut rng = Pcg64::seeded(109);
+    let arbitrary = rng.normal_vec(257, 3.0);
+    let f16 = QuantValues::f16(&arbitrary);
+    let starts = vec![0usize, arbitrary.len()];
+    for (got, want) in f16.dequantize(&starts).iter().zip(&arbitrary) {
+        assert!(
+            (got - want).abs() <= want.abs() * 4.9e-4,
+            "f16 relative error: {got} vs {want}"
+        );
+    }
+
+    // int8: per-element absolute error at most row_absmax / 127, with an
+    // empty row and an all-zero row in the span layout.
+    let mut values = rng.normal_vec(40, 2.0);
+    for v in &mut values[25..30] {
+        *v = 0.0; // an all-zero row quantizes to scale 0.0, exactly
+    }
+    let starts = vec![0usize, 12, 12, 25, 30, 40];
+    let qv = QuantValues::int8(&values, &starts).unwrap();
+    let deq = qv.dequantize(&starts);
+    for r in 0..starts.len() - 1 {
+        let span = &values[starts[r]..starts[r + 1]];
+        let absmax = span.iter().fold(0f32, |acc, &v| acc.max(v.abs()));
+        let bound = absmax / 127.0 + 1e-6;
+        for kk in starts[r]..starts[r + 1] {
+            assert!(
+                (deq[kk] - values[kk]).abs() <= bound,
+                "int8 row {r} value {kk}: {} vs {} (bound {bound})",
+                deq[kk],
+                values[kk]
+            );
+        }
+    }
+    assert_bits_eq(&deq[25..30], &[0.0; 5], "all-zero row stays exactly zero");
+}
+
+#[cfg(not(feature = "simd"))]
+#[test]
+fn simd_variant_is_rejected_without_the_feature() {
+    let _g = lock();
+    let err = par::set_kernel_variant(KernelVariant::Simd).unwrap_err().to_string();
+    assert!(err.contains("--features simd"), "{err}");
+    assert_eq!(par::kernel_variant(), KernelVariant::Scalar);
+}
+
+#[cfg(feature = "simd")]
+mod simd_parity {
+    use super::*;
+
+    /// SIMD reduces eight-lane partials once per element, so results are
+    /// value-close to the scalar oracle, not bitwise equal.
+    const TOL: f32 = 1e-4;
+
+    fn assert_close(got: &[f32], want: &[f32], ctx: &str) {
+        assert_eq!(got.len(), want.len(), "{ctx}: length");
+        for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+            assert!((g - w).abs() <= TOL * (1.0 + w.abs()), "{ctx}[{i}]: {g} vs {w}");
+        }
+    }
+
+    /// Run `f` at 1 and 4 threads under the SIMD variant; the two runs
+    /// must be bitwise equal (per-variant thread invariance), and the
+    /// result is returned for the value comparison against the oracle.
+    fn simd_runs<T: AsRef<[f32]>>(ctx: &str, mut f: impl FnMut() -> T) -> T {
+        par::set_threads(1);
+        let a = f();
+        par::set_threads(4);
+        let b = f();
+        par::set_threads(0);
+        assert_bits_eq(a.as_ref(), b.as_ref(), &format!("{ctx} thread invariance"));
+        a
+    }
+
+    struct TensorBits(Tensor);
+
+    impl AsRef<[f32]> for TensorBits {
+        fn as_ref(&self) -> &[f32] {
+            self.0.data()
+        }
+    }
+
+    #[test]
+    fn simd_kernels_match_scalar_oracles_across_dims() {
+        let _g = lock();
+        let _restore = RestoreGlobals;
+        par::set_kernel_variant(KernelVariant::Simd).unwrap();
+        let mut rng = Pcg64::seeded(211);
+
+        // dense matvec + skinny matmul, inner dim swept through the lane
+        // boundary (1..=17 crosses one full f32x8 group plus a tail)
+        for kd in 1..=17usize {
+            let a = Tensor::from_vec(vec![11, kd], rng.normal_vec(11 * kd, 1.0));
+            let x: Vec<f32> = rng.normal_vec(kd, 1.0);
+            let want = k::matvec_scalar(&a, &x);
+            let got = simd_runs(&format!("matvec k={kd}"), || k::matvec(&a, &x));
+            assert_close(&got, &want, &format!("matvec k={kd}"));
+
+            for s in [1usize, 3, 8] {
+                let xs = Tensor::from_vec(vec![s, kd], rng.normal_vec(s * kd, 1.0));
+                let want = k::matmul_nt_skinny_scalar(&xs, &a);
+                let got = simd_runs(&format!("skinny k={kd} s={s}"), || {
+                    TensorBits(k::matmul_nt_skinny(&xs, &a))
+                });
+                assert_close(got.as_ref(), want.data(), &format!("skinny k={kd} s={s}"));
+            }
+        }
+
+        // CSR family over awkward shapes (empty rows included)
+        let cols = 13;
+        for rows in 1..=17usize {
+            let w = make_csr_dense(&mut rng, rows, cols);
+            let (indptr, indices, values) = dense_to_csr(&w);
+            let x = Tensor::from_vec(vec![3, cols], rng.normal_vec(3 * cols, 1.0));
+            let want_y = k::csr_matvec_scalar(&indptr, &indices, &values, rows, x.row(0));
+            let got_y = simd_runs(&format!("csr_matvec rows={rows}"), || {
+                k::csr_matvec(&indptr, &indices, &values, rows, x.row(0))
+            });
+            assert_close(&got_y, &want_y, &format!("csr_matvec rows={rows}"));
+            let want = k::csr_matmul_t_scalar(&indptr, &indices, &values, rows, cols, &x);
+            let got = simd_runs(&format!("csr_matmul_t rows={rows}"), || {
+                TensorBits(k::csr_matmul_t(&indptr, &indices, &values, rows, cols, &x))
+            });
+            assert_close(got.as_ref(), want.data(), &format!("csr_matmul_t rows={rows}"));
+        }
+
+        // packed n:m family over ragged tails and a zero row
+        let (n, m) = (2usize, 4usize);
+        for rows in 1..=17usize {
+            let cols = 16usize;
+            let w = make_nm_dense(&mut rng, rows, cols, n, m);
+            let (values, indices) = dense_to_nm(&w, n, m);
+            let x = Tensor::from_vec(vec![3, cols], rng.normal_vec(3 * cols, 1.0));
+            let want_y = k::nm_matvec_scalar(&values, &indices, rows, cols, n, m, x.row(0));
+            let got_y = simd_runs(&format!("nm_matvec rows={rows}"), || {
+                k::nm_matvec(&values, &indices, rows, cols, n, m, x.row(0))
+            });
+            assert_close(&got_y, &want_y, &format!("nm_matvec rows={rows}"));
+            let want = k::nm_matmul_t_scalar(&values, &indices, rows, cols, n, m, &x);
+            let got = simd_runs(&format!("nm_matmul_t rows={rows}"), || {
+                TensorBits(k::nm_matmul_t(&values, &indices, rows, cols, n, m, &x))
+            });
+            assert_close(got.as_ref(), want.data(), &format!("nm_matmul_t rows={rows}"));
+            let want_w = k::nm_matmul_scalar(&values, &indices, rows, cols, n, m, &x);
+            let got_w = simd_runs(&format!("nm_matmul rows={rows}"), || {
+                TensorBits(k::nm_matmul(&values, &indices, rows, cols, n, m, &x))
+            });
+            assert_close(got_w.as_ref(), want_w.data(), &format!("nm_matmul rows={rows}"));
+        }
+    }
+
+    #[test]
+    fn simd_quantized_kernels_match_the_dequantized_scalar_route() {
+        let _g = lock();
+        let _restore = RestoreGlobals;
+        par::set_kernel_variant(KernelVariant::Simd).unwrap();
+        let mut rng = Pcg64::seeded(223);
+        let (rows, cols, s) = (15usize, 12usize, 3usize);
+        let x = Tensor::from_vec(vec![s, cols], rng.normal_vec(s * cols, 1.0));
+
+        let w = make_csr_dense(&mut rng, rows, cols);
+        let (indptr, indices, values) = dense_to_csr(&w);
+        let starts: Vec<usize> = indptr.iter().map(|&e| e as usize).collect();
+        for qv in [QuantValues::f16(&values), QuantValues::int8(&values, &starts).unwrap()] {
+            let deq = qv.dequantize(&starts);
+            let want = k::csr_matmul_t_scalar(&indptr, &indices, &deq, rows, cols, &x);
+            let got = simd_runs(&format!("csr_q {:?}", qv.mode()), || {
+                TensorBits(k::csr_matmul_t_q(&indptr, &indices, &qv, rows, cols, &x))
+            });
+            assert_close(got.as_ref(), want.data(), &format!("csr_q {:?}", qv.mode()));
+        }
+
+        let (n, m) = (2usize, 4usize);
+        let wnm = make_nm_dense(&mut rng, rows, cols, n, m);
+        let (nmv, nmi) = dense_to_nm(&wnm, n, m);
+        let stored = (cols / m) * n;
+        let nm_starts: Vec<usize> = (0..=rows).map(|r| r * stored).collect();
+        for qv in [QuantValues::f16(&nmv), QuantValues::int8(&nmv, &nm_starts).unwrap()] {
+            let deq = qv.dequantize(&nm_starts);
+            let want = k::nm_matmul_t_scalar(&deq, &nmi, rows, cols, n, m, &x);
+            let got = simd_runs(&format!("nm_q {:?}", qv.mode()), || {
+                TensorBits(k::nm_matmul_t_q(&qv, &nmi, rows, cols, n, m, &x))
+            });
+            assert_close(got.as_ref(), want.data(), &format!("nm_q {:?}", qv.mode()));
+        }
+    }
+}

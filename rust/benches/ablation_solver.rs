@@ -12,6 +12,9 @@
 //!     cargo bench --bench ablation_solver
 //!     FP_BENCH_FAST=1 cargo bench --bench ablation_solver   # CI smoke
 
+// offline bench wall time; serving code must use obs::Clock instead
+#![allow(clippy::disallowed_methods)]
+
 use std::collections::BTreeMap;
 use std::time::Instant;
 

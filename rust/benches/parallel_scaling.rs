@@ -5,6 +5,9 @@
 //!
 //!     cargo bench --bench parallel_scaling
 
+// offline bench wall time; serving code must use obs::Clock instead
+#![allow(clippy::disallowed_methods)]
+
 use std::time::Instant;
 
 use fistapruner::bench_support::{fast_mode, Lab};

@@ -5,6 +5,9 @@
 //!
 //!     cargo bench --bench prune_time
 
+// offline bench wall time; serving code must use obs::Clock instead
+#![allow(clippy::disallowed_methods)]
+
 use std::time::Instant;
 
 use fistapruner::baselines::BaselineKind::*;

@@ -4,6 +4,9 @@
 //!
 //!     cargo run --release --example parallel_scaling [model]
 
+// offline example wall time; serving code must use obs::Clock instead
+#![allow(clippy::disallowed_methods)]
+
 use std::time::Instant;
 
 use fistapruner::bench_support::Lab;

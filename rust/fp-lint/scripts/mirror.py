@@ -1,0 +1,416 @@
+#!/usr/bin/env python3
+"""Reference mirror of the fp-lint scanner (rust/fp-lint/src/lib.rs).
+
+Re-implements the exact lexing and rule semantics of the Rust tool so the
+committed fp-lint.baseline.json can be (re)generated in environments without
+a Rust toolchain, and so reviewers can audit the rule set from a second,
+independent implementation.
+
+Keep the two in lockstep: any change to rust/fp-lint/src/lib.rs MUST be
+mirrored here and vice versa. The `selfcheck` integration test fails if the
+committed baseline diverges from what the Rust scanner computes, which
+transitively checks this file too.
+
+Usage:
+  scripts/mirror.py scan  [--root REPO_ROOT]      # print all diagnostics
+  scripts/mirror.py write [--root REPO_ROOT]      # rewrite fp-lint.baseline.json
+"""
+
+import json
+import os
+import re
+import sys
+
+RULE_IDS = [
+    "clock",
+    "hot-panic",
+    "hot-index",
+    "det-spawn",
+    "det-hash",
+    "f32-reduce",
+]
+
+
+def ident_char(c):
+    return c.isalnum() or c == "_"
+
+
+def blank_code(src):
+    """Blank comments, string/char literals to spaces; collect // comments.
+
+    Returns (code, comments) where `code` has the same line structure as
+    `src` but with every comment and literal character replaced by a space
+    (newlines preserved), and `comments` maps 1-based line number -> text of
+    the `//` comment starting on that line (leading '/', '!' stripped).
+    """
+    out = []
+    comments = {}
+    i, n, line = 0, len(src), 1
+    while i < n:
+        c = src[i]
+        if c == "\n":
+            out.append("\n")
+            line += 1
+            i += 1
+        elif c == "/" and i + 1 < n and src[i + 1] == "/":
+            j = i
+            while j < n and src[j] != "\n":
+                j += 1
+            text = src[i + 2 : j].lstrip("/!").strip()
+            if line not in comments:
+                comments[line] = text
+            out.append(" " * (j - i))
+            i = j
+        elif c == "/" and i + 1 < n and src[i + 1] == "*":
+            depth = 1
+            j = i + 2
+            while j < n and depth > 0:
+                if src[j] == "/" and j + 1 < n and src[j + 1] == "*":
+                    depth += 1
+                    j += 2
+                elif src[j] == "*" and j + 1 < n and src[j + 1] == "/":
+                    depth -= 1
+                    j += 2
+                else:
+                    j += 1
+            for ch in src[i:j]:
+                if ch == "\n":
+                    out.append("\n")
+                    line += 1
+                else:
+                    out.append(" ")
+            i = j
+        elif c in "rb" and _raw_string_at(src, i):
+            j = _raw_string_end(src, i)
+            for ch in src[i:j]:
+                if ch == "\n":
+                    out.append("\n")
+                    line += 1
+                else:
+                    out.append(" ")
+            i = j
+        elif c == '"':
+            j = i + 1
+            while j < n:
+                if src[j] == "\\":
+                    j += 2
+                elif src[j] == '"':
+                    j += 1
+                    break
+                else:
+                    j += 1
+            for ch in src[i:j]:
+                if ch == "\n":
+                    out.append("\n")
+                    line += 1
+                else:
+                    out.append(" ")
+            i = j
+        elif c == "'":
+            # char literal vs lifetime
+            if i + 1 < n and src[i + 1] == "\\":
+                j = i + 2
+                while j < n and src[j] != "'":
+                    j += 1
+                j = min(j + 1, n)
+                out.append(" " * (j - i))
+                i = j
+            elif i + 2 < n and src[i + 2] == "'" and src[i + 1] != "'":
+                out.append("   ")
+                i += 3
+            else:
+                # lifetime marker: keep it, it is not a literal
+                out.append(c)
+                i += 1
+        else:
+            out.append(c)
+            i += 1
+    return "".join(out), comments
+
+
+def _raw_string_at(src, i):
+    # r"...", r#"..."#, br"...", br#"..."# (and b"..." is handled by '"')
+    if i > 0 and ident_char(src[i - 1]):
+        return False
+    j = i
+    if src[j] == "b":
+        j += 1
+    if j >= len(src) or src[j] != "r":
+        return False
+    j += 1
+    while j < len(src) and src[j] == "#":
+        j += 1
+    return j < len(src) and src[j] == '"'
+
+
+def _raw_string_end(src, i):
+    j = i
+    if src[j] == "b":
+        j += 1
+    j += 1  # 'r'
+    hashes = 0
+    while src[j] == "#":
+        hashes += 1
+        j += 1
+    j += 1  # opening quote
+    closer = '"' + "#" * hashes
+    end = src.find(closer, j)
+    if end < 0:
+        return len(src)
+    return end + len(closer)
+
+
+def test_mask(code):
+    """1-based line -> True for lines inside #[cfg(test)] / #[test] items."""
+    lines = code.split("\n")
+    mask = [False] * (len(lines) + 2)
+    pos_line = []
+    ln = 1
+    for ch in code:
+        pos_line.append(ln)
+        if ch == "\n":
+            ln += 1
+    for attr in ("#[cfg(test)]", "#[test]"):
+        start = 0
+        while True:
+            k = code.find(attr, start)
+            if k < 0:
+                break
+            start = k + len(attr)
+            end = _item_end(code, k + len(attr))
+            first = pos_line[k] if k < len(pos_line) else ln
+            last = pos_line[min(end, len(pos_line) - 1)] if pos_line else ln
+            for m in range(first, last + 1):
+                if m < len(mask):
+                    mask[m] = True
+    return mask
+
+
+def _item_end(code, j):
+    """End index of the item following an attribute at position j.
+
+    Scans forward; at bracket depth 0 a ';' terminates a semicolon item, a
+    '{' starts a body which is then brace-matched to its close.
+    """
+    depth = 0
+    n = len(code)
+    while j < n:
+        c = code[j]
+        if c in "([":
+            depth += 1
+        elif c in ")]":
+            depth -= 1
+        elif c == ";" and depth == 0:
+            return j
+        elif c == "{" and depth == 0:
+            braces = 1
+            j += 1
+            while j < n and braces > 0:
+                if code[j] == "{":
+                    braces += 1
+                elif code[j] == "}":
+                    braces -= 1
+                j += 1
+            return j - 1
+        j += 1
+    return n - 1
+
+
+# --- module classification (paths are repo-relative, forward slashes) -----
+
+
+def clock_allowed(p):
+    return p.startswith("rust/src/util/") or p == "rust/src/obs/clock.rs"
+
+
+def hot_panic_module(p):
+    return (
+        p.startswith("rust/src/serve/")
+        or p.startswith("rust/src/sparse/")
+        or p
+        in (
+            "rust/src/tensor/kernels.rs",
+            "rust/src/tensor/simd.rs",
+            "rust/src/ser/sparsefile.rs",
+        )
+    )
+
+
+def hot_index_module(p):
+    return p.startswith("rust/src/serve/net/") or p in (
+        "rust/src/serve/request.rs",
+        "rust/src/ser/sparsefile.rs",
+    )
+
+
+def spawn_allowed(p):
+    return p in (
+        "rust/src/tensor/par.rs",
+        "rust/src/serve/net/listener.rs",
+        "rust/src/obs/recorder.rs",
+    )
+
+
+def kernel_module(p):
+    return p.startswith("rust/src/tensor/") or p.startswith("rust/src/linalg/")
+
+
+PANIC_PATTERNS = [
+    ".unwrap()",
+    ".expect(",
+    "panic!",
+    "unreachable!",
+    "todo!",
+    "unimplemented!",
+]
+# bare .product() is deliberately absent: shape products over usize are
+# idiomatic and never float-accumulating
+REDUCE_PATTERNS = [".sum()", ".sum::<f32>", ".product::<f32>"]
+
+
+def has_index_bracket(code_line):
+    # An index expression's '[' directly follows its receiver (rustfmt never
+    # separates them), so requiring adjacency keeps type positions like
+    # `&'a [u8]` / `&mut [u8]` from matching.
+    stripped = code_line.strip()
+    if stripped.startswith("#"):
+        return False
+    for k, ch in enumerate(code_line):
+        if ch != "[":
+            continue
+        m = k - 1
+        if m >= 0 and (ident_char(code_line[m]) or code_line[m] in ")]"):
+            return True
+    return False
+
+
+def line_rules(path, code_line):
+    hits = []
+    if ("Instant::now" in code_line or "SystemTime::now" in code_line) and not clock_allowed(path):
+        hits.append(("clock", "raw clock read; inject obs::Clock instead"))
+    if hot_panic_module(path) and any(p in code_line for p in PANIC_PATTERNS):
+        hits.append(("hot-panic", "panicking call in a hot-path module; use checked errors"))
+    if hot_index_module(path) and has_index_bracket(code_line):
+        hits.append(("hot-index", "slice index on an untrusted-input path; use .get()"))
+    if not spawn_allowed(path) and ("thread::spawn" in code_line or ".spawn(" in code_line):
+        hits.append(("det-spawn", "thread spawn outside tensor::par and the allowlist"))
+    if "HashMap" in code_line or "HashSet" in code_line:
+        hits.append(("det-hash", "hash collection; iteration order is nondeterministic, prefer BTreeMap/BTreeSet"))
+    if kernel_module(path) and any(p in code_line for p in REDUCE_PATTERNS):
+        hits.append(("f32-reduce", "iterator reduction in a kernel module; fix the fold order explicitly"))
+    return hits
+
+
+WAIVER_RE = re.compile(r"^fp-lint:\s*allow\(([^)]*)\)(.*)$")
+
+
+def parse_waivers(comments):
+    """comment map -> (waived: line -> set(rules), bad: [(line, msg)])."""
+    waived = {}
+    bad = []
+    for line, text in sorted(comments.items()):
+        t = text.strip()
+        if not t.startswith("fp-lint:"):
+            continue
+        m = WAIVER_RE.match(t)
+        if not m:
+            bad.append((line, "malformed waiver; expected fp-lint: allow(<rule>) — <reason>"))
+            continue
+        rules = [r.strip() for r in m.group(1).split(",") if r.strip()]
+        unknown = [r for r in rules if r not in RULE_IDS]
+        if not rules or unknown:
+            bad.append((line, "waiver names unknown rule(s): " + ", ".join(unknown or ["<none>"])))
+            continue
+        reason = m.group(2).strip().lstrip("—–:-").strip()
+        if not reason:
+            bad.append((line, "waiver is missing its mandatory reason"))
+            continue
+        for tgt in (line, line + 1):
+            waived.setdefault(tgt, set()).update(rules)
+    return waived, bad
+
+
+def scan_file(path, src):
+    code, comments = blank_code(src)
+    mask = test_mask(code)
+    waived, bad = parse_waivers(comments)
+    diags = [(ln, "bad-waiver", msg) for ln, msg in bad]
+    for idx, code_line in enumerate(code.split("\n")):
+        ln = idx + 1
+        if ln < len(mask) and mask[ln]:
+            continue
+        for rule, msg in line_rules(path, code_line):
+            if rule in waived.get(ln, ()):
+                continue
+            diags.append((ln, rule, msg))
+    diags.sort(key=lambda d: (d[0], d[1]))
+    return diags
+
+
+def scan_tree(root):
+    src_root = os.path.join(root, "rust", "src")
+    if not os.path.isdir(src_root):
+        raise SystemExit(f"no rust/src under {root}")
+    out = []
+    for dirpath, dirnames, filenames in os.walk(src_root):
+        dirnames.sort()
+        for name in sorted(filenames):
+            if not name.endswith(".rs"):
+                continue
+            full = os.path.join(dirpath, name)
+            rel = os.path.relpath(full, root).replace(os.sep, "/")
+            with open(full, encoding="utf-8") as f:
+                src = f.read()
+            for ln, rule, msg in scan_file(rel, src):
+                out.append((rel, ln, rule, msg))
+    out.sort()
+    return out
+
+
+def counts_of(diags):
+    counts = {}
+    for rel, _ln, rule, _msg in diags:
+        if rule == "bad-waiver":
+            continue
+        counts.setdefault(rule, {})
+        counts[rule][rel] = counts[rule].get(rel, 0) + 1
+    return counts
+
+
+def main():
+    args = sys.argv[1:]
+    cmd = args[0] if args else "scan"
+    root = "."
+    if "--root" in args:
+        root = args[args.index("--root") + 1]
+    diags = scan_tree(root)
+    if cmd == "scan":
+        for rel, ln, rule, msg in diags:
+            print(f"{rel}:{ln}: [{rule}] {msg}")
+        counts = counts_of(diags)
+        total = sum(sum(files.values()) for files in counts.values())
+        print(f"-- {total} violation(s) in {len(set(d[0] for d in diags))} file(s)")
+        for rule in sorted(counts):
+            print(f"   {rule}: {sum(counts[rule].values())}")
+    elif cmd == "write":
+        counts = counts_of(diags)
+        bad = [d for d in diags if d[2] == "bad-waiver"]
+        if bad:
+            for rel, ln, _r, msg in bad:
+                print(f"{rel}:{ln}: [bad-waiver] {msg}", file=sys.stderr)
+            raise SystemExit("refusing to write a baseline over bad waivers")
+        payload = {
+            "version": 1,
+            "counts": {r: dict(sorted(files.items())) for r, files in sorted(counts.items())},
+        }
+        dest = os.path.join(root, "fp-lint.baseline.json")
+        with open(dest, "w", encoding="utf-8") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {dest}")
+    else:
+        raise SystemExit(f"unknown command {cmd!r}")
+
+
+if __name__ == "__main__":
+    main()

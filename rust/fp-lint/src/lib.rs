@@ -1,0 +1,754 @@
+//! fp-lint: contract-enforcing static analysis for the fistapruner tree.
+//!
+//! Walks `rust/src/**` and enforces four serving invariants as typed
+//! `file:line` diagnostics:
+//!
+//! * **clock** — no raw `Instant::now` / `SystemTime::now` outside
+//!   `util/` and `obs/clock.rs`; everything else must take the injectable
+//!   `obs::Clock` so timeouts and latencies replay under `FakeClock`.
+//! * **hot-panic** / **hot-index** — no panicking calls or unchecked
+//!   slice indexing in the serving hot path; malformed input must retire
+//!   one request, never the process.
+//! * **det-spawn** / **det-hash** — threads only through `tensor::par`
+//!   plus a tiny allowlist, and no hash collections anywhere (iteration
+//!   order feeds results, so it must be deterministic).
+//! * **f32-reduce** — float iterator reductions in kernel modules must
+//!   document their fold order.
+//!
+//! The lexer is hand-rolled (zero dependencies, builds on the bare
+//! offline toolchain): it blanks comments and string/char literals to
+//! spaces while preserving line structure, then applies per-line
+//! substring rules outside `#[cfg(test)]` / `#[test]` items. A site is
+//! waived with `// fp-lint: allow(<rule>) — <reason>` on the same or the
+//! preceding line; the reason is mandatory. Pre-existing debt lives in
+//! the committed `fp-lint.baseline.json`, which only ratchets down.
+//!
+//! `scripts/mirror.py` is a line-for-line Python mirror of this file so
+//! the baseline can be regenerated without a Rust toolchain; keep the
+//! two in lockstep (the `selfcheck` integration test catches drift).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+/// Every rule the scanner knows, in diagnostic-id form.
+pub const RULE_IDS: &[&str] =
+    &["clock", "hot-panic", "hot-index", "det-spawn", "det-hash", "f32-reduce"];
+
+/// One scanner finding. `rule` is an entry of [`RULE_IDS`] or the
+/// pseudo-rule `"bad-waiver"`, which is never baselined or waivable.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Repo-relative path, forward slashes.
+    pub file: String,
+    /// 1-based.
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+fn ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Blank comments and string/char literals to spaces, preserving line
+/// structure; collect the text of the first `//` comment on each line
+/// (leading `/` and `!` stripped). Operates on chars so byte-width never
+/// shifts a column.
+pub fn blank_code(src: &str) -> (String, BTreeMap<usize, String>) {
+    let s: Vec<char> = src.chars().collect();
+    let n = s.len();
+    let mut out = String::with_capacity(src.len());
+    let mut comments: BTreeMap<usize, String> = BTreeMap::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < n {
+        let c = s[i];
+        if c == '\n' {
+            out.push('\n');
+            line += 1;
+            i += 1;
+        } else if c == '/' && i + 1 < n && s[i + 1] == '/' {
+            let mut j = i;
+            while j < n && s[j] != '\n' {
+                j += 1;
+            }
+            let text: String = s[i + 2..j].iter().collect();
+            let text = text.trim_start_matches(['/', '!']).trim();
+            comments.entry(line).or_insert_with(|| text.to_string());
+            for _ in i..j {
+                out.push(' ');
+            }
+            i = j;
+        } else if c == '/' && i + 1 < n && s[i + 1] == '*' {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if s[j] == '/' && j + 1 < n && s[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if s[j] == '*' && j + 1 < n && s[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            for &ch in &s[i..j] {
+                if ch == '\n' {
+                    out.push('\n');
+                    line += 1;
+                } else {
+                    out.push(' ');
+                }
+            }
+            i = j;
+        } else if (c == 'r' || c == 'b') && raw_string_at(&s, i) {
+            let j = raw_string_end(&s, i);
+            for &ch in &s[i..j] {
+                if ch == '\n' {
+                    out.push('\n');
+                    line += 1;
+                } else {
+                    out.push(' ');
+                }
+            }
+            i = j;
+        } else if c == '"' {
+            let mut j = i + 1;
+            while j < n {
+                if s[j] == '\\' {
+                    j += 2;
+                } else if s[j] == '"' {
+                    j += 1;
+                    break;
+                } else {
+                    j += 1;
+                }
+            }
+            let j = j.min(n);
+            for &ch in &s[i..j] {
+                if ch == '\n' {
+                    out.push('\n');
+                    line += 1;
+                } else {
+                    out.push(' ');
+                }
+            }
+            i = j;
+        } else if c == '\'' {
+            // char literal vs lifetime
+            if i + 1 < n && s[i + 1] == '\\' {
+                let mut j = i + 2;
+                while j < n && s[j] != '\'' {
+                    j += 1;
+                }
+                let j = (j + 1).min(n);
+                for _ in i..j {
+                    out.push(' ');
+                }
+                i = j;
+            } else if i + 2 < n && s[i + 2] == '\'' && s[i + 1] != '\'' {
+                out.push_str("   ");
+                i += 3;
+            } else {
+                // lifetime marker: keep it, it is not a literal
+                out.push(c);
+                i += 1;
+            }
+        } else {
+            out.push(c);
+            i += 1;
+        }
+    }
+    (out, comments)
+}
+
+fn raw_string_at(s: &[char], i: usize) -> bool {
+    // r"...", r#"..."#, br"...", br#"..."# (b"..." is handled by '"')
+    if i > 0 && ident_char(s[i - 1]) {
+        return false;
+    }
+    let mut j = i;
+    if s[j] == 'b' {
+        j += 1;
+    }
+    if j >= s.len() || s[j] != 'r' {
+        return false;
+    }
+    j += 1;
+    while j < s.len() && s[j] == '#' {
+        j += 1;
+    }
+    j < s.len() && s[j] == '"'
+}
+
+fn raw_string_end(s: &[char], i: usize) -> usize {
+    let mut j = i;
+    if s[j] == 'b' {
+        j += 1;
+    }
+    j += 1; // 'r'
+    let mut hashes = 0usize;
+    while j < s.len() && s[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    j += 1; // opening quote
+    loop {
+        if j >= s.len() {
+            return s.len();
+        }
+        if s[j] == '"' && s[j + 1..].iter().take(hashes).filter(|&&c| c == '#').count() == hashes
+        {
+            return j + 1 + hashes;
+        }
+        j += 1;
+    }
+}
+
+/// 1-based line → true for lines inside `#[cfg(test)]` / `#[test]`
+/// items; test code is exempt from every rule (tests unwrap freely).
+pub fn test_mask(code: &str) -> Vec<bool> {
+    let lines = code.split('\n').count();
+    let mut mask = vec![false; lines + 2];
+    let s: Vec<char> = code.chars().collect();
+    let mut pos_line = Vec::with_capacity(s.len());
+    let mut ln = 1usize;
+    for &ch in &s {
+        pos_line.push(ln);
+        if ch == '\n' {
+            ln += 1;
+        }
+    }
+    for attr in ["#[cfg(test)]", "#[test]"] {
+        let attr_chars: Vec<char> = attr.chars().collect();
+        let mut start = 0usize;
+        while let Some(k) = find_chars(&s, &attr_chars, start) {
+            start = k + attr_chars.len();
+            let end = item_end(&s, k + attr_chars.len());
+            let first = if k < pos_line.len() { pos_line[k] } else { ln };
+            let last = if pos_line.is_empty() {
+                ln
+            } else {
+                pos_line[end.min(pos_line.len() - 1)]
+            };
+            for m in first..=last {
+                if m < mask.len() {
+                    mask[m] = true;
+                }
+            }
+        }
+    }
+    mask
+}
+
+fn find_chars(hay: &[char], needle: &[char], from: usize) -> Option<usize> {
+    if needle.is_empty() || hay.len() < needle.len() {
+        return None;
+    }
+    (from..=hay.len() - needle.len()).find(|&k| &hay[k..k + needle.len()] == needle)
+}
+
+/// End index of the item following an attribute at position `j`: at
+/// bracket depth 0 a `;` terminates a semicolon item, a `{` starts a
+/// body which is brace-matched to its close.
+fn item_end(s: &[char], mut j: usize) -> usize {
+    let mut depth = 0i64;
+    let n = s.len();
+    while j < n {
+        let c = s[j];
+        if c == '(' || c == '[' {
+            depth += 1;
+        } else if c == ')' || c == ']' {
+            depth -= 1;
+        } else if c == ';' && depth == 0 {
+            return j;
+        } else if c == '{' && depth == 0 {
+            let mut braces = 1i64;
+            j += 1;
+            while j < n && braces > 0 {
+                if s[j] == '{' {
+                    braces += 1;
+                } else if s[j] == '}' {
+                    braces -= 1;
+                }
+                j += 1;
+            }
+            return j.saturating_sub(1);
+        }
+        j += 1;
+    }
+    n.saturating_sub(1)
+}
+
+// --- module classification (paths are repo-relative, forward slashes) ----
+
+fn clock_allowed(p: &str) -> bool {
+    p.starts_with("rust/src/util/") || p == "rust/src/obs/clock.rs"
+}
+
+fn hot_panic_module(p: &str) -> bool {
+    p.starts_with("rust/src/serve/")
+        || p.starts_with("rust/src/sparse/")
+        || matches!(
+            p,
+            "rust/src/tensor/kernels.rs" | "rust/src/tensor/simd.rs" | "rust/src/ser/sparsefile.rs"
+        )
+}
+
+fn hot_index_module(p: &str) -> bool {
+    p.starts_with("rust/src/serve/net/")
+        || matches!(p, "rust/src/serve/request.rs" | "rust/src/ser/sparsefile.rs")
+}
+
+fn spawn_allowed(p: &str) -> bool {
+    matches!(
+        p,
+        "rust/src/tensor/par.rs" | "rust/src/serve/net/listener.rs" | "rust/src/obs/recorder.rs"
+    )
+}
+
+fn kernel_module(p: &str) -> bool {
+    p.starts_with("rust/src/tensor/") || p.starts_with("rust/src/linalg/")
+}
+
+const PANIC_PATTERNS: &[&str] =
+    &[".unwrap()", ".expect(", "panic!", "unreachable!", "todo!", "unimplemented!"];
+// bare .product() is deliberately absent: shape products over usize are
+// idiomatic and never float-accumulating
+const REDUCE_PATTERNS: &[&str] = &[".sum()", ".sum::<f32>", ".product::<f32>"];
+
+/// An index expression's `[` directly follows its receiver (rustfmt
+/// never separates them), so requiring adjacency keeps type positions
+/// like `&'a [u8]` / `&mut [u8]` from matching.
+fn has_index_bracket(code_line: &str) -> bool {
+    if code_line.trim_start().starts_with('#') {
+        return false;
+    }
+    let chars: Vec<char> = code_line.chars().collect();
+    for (k, &ch) in chars.iter().enumerate() {
+        if ch != '[' {
+            continue;
+        }
+        if k > 0 && (ident_char(chars[k - 1]) || chars[k - 1] == ')' || chars[k - 1] == ']') {
+            return true;
+        }
+    }
+    false
+}
+
+fn line_rules(path: &str, code_line: &str) -> Vec<(&'static str, &'static str)> {
+    let mut hits = Vec::new();
+    if (code_line.contains("Instant::now") || code_line.contains("SystemTime::now"))
+        && !clock_allowed(path)
+    {
+        hits.push(("clock", "raw clock read; inject obs::Clock instead"));
+    }
+    if hot_panic_module(path) && PANIC_PATTERNS.iter().any(|p| code_line.contains(p)) {
+        hits.push(("hot-panic", "panicking call in a hot-path module; use checked errors"));
+    }
+    if hot_index_module(path) && has_index_bracket(code_line) {
+        hits.push(("hot-index", "slice index on an untrusted-input path; use .get()"));
+    }
+    if !spawn_allowed(path)
+        && (code_line.contains("thread::spawn") || code_line.contains(".spawn("))
+    {
+        hits.push(("det-spawn", "thread spawn outside tensor::par and the allowlist"));
+    }
+    if code_line.contains("HashMap") || code_line.contains("HashSet") {
+        hits.push((
+            "det-hash",
+            "hash collection; iteration order is nondeterministic, prefer BTreeMap/BTreeSet",
+        ));
+    }
+    if kernel_module(path) && REDUCE_PATTERNS.iter().any(|p| code_line.contains(p)) {
+        hits.push(("f32-reduce", "iterator reduction in a kernel module; fix the fold order explicitly"));
+    }
+    hits
+}
+
+/// Parse `// fp-lint: allow(<rules>) — <reason>` waivers out of the
+/// per-line comment map. A waiver covers its own line and the next one.
+/// Malformed waivers, unknown rules and missing reasons come back as
+/// `bad` — hard errors, never baselined.
+fn parse_waivers(
+    comments: &BTreeMap<usize, String>,
+) -> (BTreeMap<usize, BTreeSet<&'static str>>, Vec<(usize, String)>) {
+    let mut waived: BTreeMap<usize, BTreeSet<&'static str>> = BTreeMap::new();
+    let mut bad = Vec::new();
+    for (&line, text) in comments {
+        let t = text.trim();
+        let Some(rest) = t.strip_prefix("fp-lint:") else {
+            continue;
+        };
+        let rest = rest.trim_start();
+        let parsed = rest.strip_prefix("allow(").and_then(|r| r.split_once(')'));
+        let Some((inside, tail)) = parsed else {
+            bad.push((
+                line,
+                "malformed waiver; expected fp-lint: allow(<rule>) — <reason>".to_string(),
+            ));
+            continue;
+        };
+        let rules: Vec<&str> =
+            inside.split(',').map(str::trim).filter(|r| !r.is_empty()).collect();
+        let known: Vec<&'static str> = rules
+            .iter()
+            .filter_map(|r| RULE_IDS.iter().find(|id| *id == r).copied())
+            .collect();
+        if rules.is_empty() || known.len() != rules.len() {
+            let unknown: Vec<&str> =
+                rules.iter().filter(|r| !RULE_IDS.contains(r)).copied().collect();
+            let what = if unknown.is_empty() { "<none>".to_string() } else { unknown.join(", ") };
+            bad.push((line, format!("waiver names unknown rule(s): {what}")));
+            continue;
+        }
+        let reason = tail.trim().trim_start_matches(['—', '–', ':', '-']).trim();
+        if reason.is_empty() {
+            bad.push((line, "waiver is missing its mandatory reason".to_string()));
+            continue;
+        }
+        for tgt in [line, line + 1] {
+            waived.entry(tgt).or_default().extend(known.iter().copied());
+        }
+    }
+    (waived, bad)
+}
+
+/// Scan one file's source. `path` must be repo-relative with forward
+/// slashes — it selects which rules apply.
+pub fn scan_file(path: &str, src: &str) -> Vec<Diagnostic> {
+    let (code, comments) = blank_code(src);
+    let mask = test_mask(&code);
+    let (waived, bad) = parse_waivers(&comments);
+    let mut diags: Vec<Diagnostic> = bad
+        .into_iter()
+        .map(|(line, msg)| Diagnostic { file: path.to_string(), line, rule: "bad-waiver", msg })
+        .collect();
+    for (idx, code_line) in code.split('\n').enumerate() {
+        let ln = idx + 1;
+        if ln < mask.len() && mask[ln] {
+            continue;
+        }
+        for (rule, msg) in line_rules(path, code_line) {
+            if waived.get(&ln).is_some_and(|set| set.contains(rule)) {
+                continue;
+            }
+            diags.push(Diagnostic {
+                file: path.to_string(),
+                line: ln,
+                rule,
+                msg: msg.to_string(),
+            });
+        }
+    }
+    diags.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    diags
+}
+
+/// Scan every `.rs` under `<root>/rust/src`, sorted so output and
+/// baseline are stable across platforms.
+pub fn scan_tree(root: &Path) -> std::io::Result<Vec<Diagnostic>> {
+    let src_root = root.join("rust").join("src");
+    if !src_root.is_dir() {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            format!("no rust/src under {}", root.display()),
+        ));
+    }
+    let mut files = Vec::new();
+    collect_rs(&src_root, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for full in files {
+        let rel = full
+            .strip_prefix(root)
+            .unwrap_or(&full)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let src = std::fs::read_to_string(&full)?;
+        out.extend(scan_file(&rel, &src));
+    }
+    out.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(out)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// rule → file → count, excluding `bad-waiver` (which is always fatal).
+pub fn counts_of(diags: &[Diagnostic]) -> BTreeMap<String, BTreeMap<String, usize>> {
+    let mut counts: BTreeMap<String, BTreeMap<String, usize>> = BTreeMap::new();
+    for d in diags {
+        if d.rule == "bad-waiver" {
+            continue;
+        }
+        *counts.entry(d.rule.to_string()).or_default().entry(d.file.clone()).or_insert(0) += 1;
+    }
+    counts
+}
+
+/// The committed ratchet: per-(rule, file) violation counts the tree is
+/// allowed to carry. A fresh scan may come in under a count (pay down
+/// debt) but never over it.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Baseline {
+    pub counts: BTreeMap<String, BTreeMap<String, usize>>,
+}
+
+impl Baseline {
+    pub fn from_diags(diags: &[Diagnostic]) -> Baseline {
+        Baseline { counts: counts_of(diags) }
+    }
+
+    /// Parse the baseline JSON (the exact subset `to_json` emits; a
+    /// hand-rolled reader keeps the crate dependency-free).
+    pub fn parse(text: &str) -> Result<Baseline, String> {
+        let mut p = JsonParser { s: text.as_bytes(), i: 0 };
+        let v = p.value()?;
+        p.skip_ws();
+        if p.i != p.s.len() {
+            return Err("trailing bytes after baseline JSON".to_string());
+        }
+        let JsonValue::Obj(top) = v else {
+            return Err("baseline root must be an object".to_string());
+        };
+        match top.get("version") {
+            Some(JsonValue::Num(n)) if *n == 1.0 => {}
+            _ => return Err("baseline version must be 1".to_string()),
+        }
+        let mut counts = BTreeMap::new();
+        if let Some(JsonValue::Obj(rules)) = top.get("counts") {
+            for (rule, files) in rules {
+                let JsonValue::Obj(files) = files else {
+                    return Err(format!("counts[{rule}] must be an object"));
+                };
+                let mut per = BTreeMap::new();
+                for (file, n) in files {
+                    let JsonValue::Num(n) = n else {
+                        return Err(format!("counts[{rule}][{file}] must be a number"));
+                    };
+                    per.insert(file.clone(), *n as usize);
+                }
+                counts.insert(rule.clone(), per);
+            }
+        } else {
+            return Err("baseline is missing its counts object".to_string());
+        }
+        Ok(Baseline { counts })
+    }
+
+    /// Serialize byte-identically to `scripts/mirror.py write`
+    /// (`json.dump(..., indent=2, sort_keys=True)` plus a newline).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"counts\": {");
+        let mut first_rule = true;
+        for (rule, files) in &self.counts {
+            if !first_rule {
+                out.push(',');
+            }
+            first_rule = false;
+            out.push_str(&format!("\n    \"{rule}\": {{"));
+            let mut first_file = true;
+            for (file, n) in files {
+                if !first_file {
+                    out.push(',');
+                }
+                first_file = false;
+                out.push_str(&format!("\n      \"{file}\": {n}"));
+            }
+            out.push_str("\n    }");
+        }
+        if self.counts.is_empty() {
+            out.push('}');
+        } else {
+            out.push_str("\n  }");
+        }
+        out.push_str(",\n  \"version\": 1\n}\n");
+        out
+    }
+
+    /// Violations past the ratchet: every (rule, file) whose fresh count
+    /// exceeds its baselined allowance, with the overage.
+    pub fn new_violations(&self, diags: &[Diagnostic]) -> Vec<(String, String, usize, usize)> {
+        let fresh = counts_of(diags);
+        let mut out = Vec::new();
+        for (rule, files) in &fresh {
+            for (file, &n) in files {
+                let allowed =
+                    self.counts.get(rule).and_then(|f| f.get(file)).copied().unwrap_or(0);
+                if n > allowed {
+                    out.push((rule.clone(), file.clone(), n, allowed));
+                }
+            }
+        }
+        out
+    }
+}
+
+enum JsonValue {
+    Num(f64),
+    Obj(BTreeMap<String, JsonValue>),
+}
+
+struct JsonParser<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl JsonParser<'_> {
+    fn skip_ws(&mut self) {
+        while self.i < self.s.len() && self.s[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn value(&mut self) -> Result<JsonValue, String> {
+        self.skip_ws();
+        match self.s.get(self.i) {
+            Some(b'{') => {
+                self.i += 1;
+                let mut map = BTreeMap::new();
+                self.skip_ws();
+                if self.s.get(self.i) == Some(&b'}') {
+                    self.i += 1;
+                    return Ok(JsonValue::Obj(map));
+                }
+                loop {
+                    self.skip_ws();
+                    let key = self.string()?;
+                    self.skip_ws();
+                    if self.s.get(self.i) != Some(&b':') {
+                        return Err(format!("expected ':' at byte {}", self.i));
+                    }
+                    self.i += 1;
+                    let v = self.value()?;
+                    map.insert(key, v);
+                    self.skip_ws();
+                    match self.s.get(self.i) {
+                        Some(b',') => self.i += 1,
+                        Some(b'}') => {
+                            self.i += 1;
+                            return Ok(JsonValue::Obj(map));
+                        }
+                        _ => return Err(format!("expected ',' or '}}' at byte {}", self.i)),
+                    }
+                }
+            }
+            Some(c) if c.is_ascii_digit() || *c == b'-' => {
+                let start = self.i;
+                if self.s[self.i] == b'-' {
+                    self.i += 1;
+                }
+                while self.s.get(self.i).is_some_and(|&c| {
+                    c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-')
+                }) {
+                    self.i += 1;
+                }
+                let text = std::str::from_utf8(&self.s[start..self.i]).map_err(|e| e.to_string())?;
+                text.parse::<f64>().map(JsonValue::Num).map_err(|e| e.to_string())
+            }
+            _ => Err(format!("unsupported JSON value at byte {}", self.i)),
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        if self.s.get(self.i) != Some(&b'"') {
+            return Err(format!("expected string at byte {}", self.i));
+        }
+        self.i += 1;
+        let start = self.i;
+        while self.i < self.s.len() && self.s[self.i] != b'"' {
+            if self.s[self.i] == b'\\' {
+                return Err("escapes are not used in baseline keys".to_string());
+            }
+            self.i += 1;
+        }
+        if self.i >= self.s.len() {
+            return Err("unterminated string".to_string());
+        }
+        let out = std::str::from_utf8(&self.s[start..self.i]).map_err(|e| e.to_string())?;
+        self.i += 1;
+        Ok(out.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blanking_preserves_line_structure_and_strips_literals() {
+        let src = "let a = \"x\ny\"; // trailing\nlet b = 'c';\n/* multi\nline */ let d = 1;\n";
+        let (code, comments) = blank_code(src);
+        assert_eq!(code.split('\n').count(), src.split('\n').count());
+        assert!(!code.contains('x') || !code.contains("\"x"));
+        assert_eq!(comments.get(&2).map(String::as_str), Some("trailing"));
+        assert!(code.lines().nth(4).unwrap().contains("let d = 1;"));
+    }
+
+    #[test]
+    fn waiver_requires_known_rule_and_reason() {
+        let mut comments = BTreeMap::new();
+        comments.insert(1, "fp-lint: allow(clock) — injected in tests".to_string());
+        comments.insert(5, "fp-lint: allow(clock)".to_string());
+        comments.insert(9, "fp-lint: allow(made-up) — nope".to_string());
+        let (waived, bad) = parse_waivers(&comments);
+        assert!(waived.get(&1).unwrap().contains("clock"));
+        assert!(waived.get(&2).unwrap().contains("clock"));
+        assert_eq!(bad.len(), 2);
+    }
+
+    #[test]
+    fn baseline_json_round_trips() {
+        let mut files = BTreeMap::new();
+        files.insert("rust/src/sparse/forward.rs".to_string(), 4usize);
+        let mut counts = BTreeMap::new();
+        counts.insert("hot-panic".to_string(), files);
+        let b = Baseline { counts };
+        let text = b.to_json();
+        assert_eq!(Baseline::parse(&text).unwrap(), b);
+    }
+
+    #[test]
+    fn ratchet_flags_only_overages() {
+        let base = Baseline::parse(
+            "{\n  \"counts\": {\n    \"clock\": {\n      \"rust/src/a.rs\": 1\n    }\n  },\n  \"version\": 1\n}\n",
+        )
+        .unwrap();
+        let at_limit = vec![Diagnostic {
+            file: "rust/src/a.rs".into(),
+            line: 3,
+            rule: "clock",
+            msg: String::new(),
+        }];
+        assert!(base.new_violations(&at_limit).is_empty());
+        let over: Vec<Diagnostic> = (0..2)
+            .map(|k| Diagnostic {
+                file: "rust/src/a.rs".into(),
+                line: 3 + k,
+                rule: "clock",
+                msg: String::new(),
+            })
+            .collect();
+        assert_eq!(base.new_violations(&over), vec![("clock".into(), "rust/src/a.rs".into(), 2, 1)]);
+    }
+}

@@ -1,0 +1,164 @@
+//! fp-lint CLI.
+//!
+//! ```text
+//! cargo run -p fp-lint -- check [--root DIR] [--no-baseline] [--fail-on-new] [--write-baseline]
+//! cargo run -p fp-lint -- rules
+//! ```
+//!
+//! `check` scans `<root>/rust/src`, prints every diagnostic (suffixing
+//! the ones already covered by `fp-lint.baseline.json` with
+//! `(baselined)`), and exits nonzero when any violation exceeds the
+//! baseline or any waiver is malformed. `--write-baseline` rewrites the
+//! ratchet file from the current tree instead; it refuses over bad
+//! waivers so debt can never hide a broken waiver. `--fail-on-new` is
+//! the default behavior spelled out for CI logs.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use fp_lint::{counts_of, scan_tree, Baseline, RULE_IDS};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("check");
+    match cmd {
+        "check" => check(&args[1..]),
+        "rules" => {
+            for (id, what) in RULE_DOCS {
+                println!("{id:12} {what}");
+            }
+            ExitCode::SUCCESS
+        }
+        other => {
+            eprintln!("fp-lint: unknown command {other:?} (try: check, rules)");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+const RULE_DOCS: &[(&str, &str)] = &[
+    ("clock", "no Instant::now/SystemTime::now outside util/ and obs/clock.rs"),
+    ("hot-panic", "no unwrap/expect/panic!/unreachable! in serving hot-path modules"),
+    ("hot-index", "no unchecked slice indexing on untrusted-input paths"),
+    ("det-spawn", "threads only via tensor::par plus the listener/recorder allowlist"),
+    ("det-hash", "no HashMap/HashSet; iteration order must be deterministic"),
+    ("f32-reduce", "float iterator reductions in kernels must document fold order"),
+];
+
+fn check(args: &[String]) -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut use_baseline = true;
+    let mut write_baseline = false;
+    let mut k = 0;
+    while k < args.len() {
+        match args[k].as_str() {
+            "--root" => {
+                k += 1;
+                let Some(dir) = args.get(k) else {
+                    eprintln!("fp-lint: --root needs a directory");
+                    return ExitCode::FAILURE;
+                };
+                root = PathBuf::from(dir);
+            }
+            "--no-baseline" => use_baseline = false,
+            "--write-baseline" => write_baseline = true,
+            // the default behavior, named so CI invocations self-document
+            "--fail-on-new" => {}
+            other => {
+                eprintln!("fp-lint: unknown flag {other:?}");
+                return ExitCode::FAILURE;
+            }
+        }
+        k += 1;
+    }
+    debug_assert!(RULE_IDS.len() == RULE_DOCS.len());
+
+    let diags = match scan_tree(&root) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("fp-lint: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let bad_waivers: Vec<_> = diags.iter().filter(|d| d.rule == "bad-waiver").collect();
+
+    if write_baseline {
+        if !bad_waivers.is_empty() {
+            for d in &bad_waivers {
+                eprintln!("{d}");
+            }
+            eprintln!("fp-lint: refusing to write a baseline over bad waivers");
+            return ExitCode::FAILURE;
+        }
+        let dest = root.join("fp-lint.baseline.json");
+        let text = Baseline::from_diags(&diags).to_json();
+        if let Err(e) = std::fs::write(&dest, text) {
+            eprintln!("fp-lint: writing {}: {e}", dest.display());
+            return ExitCode::FAILURE;
+        }
+        println!("wrote {}", dest.display());
+        return ExitCode::SUCCESS;
+    }
+
+    let baseline_path = root.join("fp-lint.baseline.json");
+    let baseline = if use_baseline && baseline_path.is_file() {
+        match std::fs::read_to_string(&baseline_path).map_err(|e| e.to_string()).and_then(|t| {
+            Baseline::parse(&t)
+        }) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("fp-lint: {}: {e}", baseline_path.display());
+                return ExitCode::FAILURE;
+            }
+        }
+    } else {
+        Baseline::default()
+    };
+
+    // Per-(rule, file) running tally so diagnostics inside the baselined
+    // allowance are labeled; overages print bare and fail the run.
+    let mut seen: std::collections::BTreeMap<(String, String), usize> =
+        std::collections::BTreeMap::new();
+    for d in &diags {
+        if d.rule == "bad-waiver" {
+            eprintln!("{d}");
+            continue;
+        }
+        let key = (d.rule.to_string(), d.file.clone());
+        let count = seen.entry(key).or_insert(0);
+        *count += 1;
+        let allowed =
+            baseline.counts.get(d.rule).and_then(|f| f.get(&d.file)).copied().unwrap_or(0);
+        if *count <= allowed {
+            println!("{d} (baselined)");
+        } else {
+            println!("{d}");
+        }
+    }
+
+    let fresh = counts_of(&diags);
+    let total: usize = fresh.values().map(|f| f.values().sum::<usize>()).sum();
+    let files: std::collections::BTreeSet<_> = diags.iter().map(|d| &d.file).collect();
+    println!("-- {total} violation(s) in {} file(s)", files.len());
+    for (rule, per) in &fresh {
+        println!("   {rule}: {}", per.values().sum::<usize>());
+    }
+
+    let new = baseline.new_violations(&diags);
+    let mut failed = false;
+    if !bad_waivers.is_empty() {
+        eprintln!("fp-lint: {} bad waiver(s) — fix or remove them", bad_waivers.len());
+        failed = true;
+    }
+    if !new.is_empty() {
+        for (rule, file, n, allowed) in &new {
+            eprintln!("fp-lint: NEW [{rule}] {file}: {n} found, baseline allows {allowed}");
+        }
+        failed = true;
+    }
+    if failed {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}

@@ -1,0 +1,81 @@
+//! Fixture-tree tests: one file per rule, plus clean / waived /
+//! bad-waiver / test-masked cases, scanned through the public library
+//! API exactly as the CLI would.
+
+use std::path::{Path, PathBuf};
+
+use fp_lint::{scan_tree, Diagnostic};
+
+fn fixture_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests").join("fixtures").join("tree")
+}
+
+fn scan() -> Vec<Diagnostic> {
+    scan_tree(&fixture_root()).expect("fixture tree scans")
+}
+
+fn of_file<'d>(diags: &'d [Diagnostic], file: &str) -> Vec<&'d Diagnostic> {
+    diags.iter().filter(|d| d.file == file).collect()
+}
+
+#[test]
+fn each_rule_fires_on_its_fixture_at_the_right_line() {
+    let diags = scan();
+    for (file, rule, line) in [
+        ("rust/src/serve/bad_unwrap.rs", "hot-panic", 4),
+        ("rust/src/serve/net/bad_index.rs", "hot-index", 3),
+        ("rust/src/pruner/bad_clock.rs", "clock", 3),
+        ("rust/src/data/bad_spawn.rs", "det-spawn", 3),
+        ("rust/src/tensor/bad_reduce.rs", "f32-reduce", 3),
+    ] {
+        let found = of_file(&diags, file);
+        assert_eq!(found.len(), 1, "{file}: {found:?}");
+        assert_eq!(found[0].rule, rule, "{file}");
+        assert_eq!(found[0].line, line, "{file}");
+    }
+    // HashMap appears in both the signature and the body
+    let hash = of_file(&diags, "rust/src/data/bad_hash.rs");
+    assert_eq!(hash.len(), 2, "{hash:?}");
+    assert!(hash.iter().all(|d| d.rule == "det-hash"));
+    assert_eq!((hash[0].line, hash[1].line), (2, 3));
+}
+
+#[test]
+fn clean_waived_util_and_test_code_produce_no_findings() {
+    let diags = scan();
+    for file in [
+        "rust/src/serve/clean.rs",
+        "rust/src/serve/waived.rs",
+        "rust/src/util/clock_ok.rs",
+        "rust/src/serve/test_only.rs",
+    ] {
+        let found = of_file(&diags, file);
+        assert!(found.is_empty(), "{file}: {found:?}");
+    }
+}
+
+#[test]
+fn waiver_without_reason_is_rejected_and_does_not_suppress() {
+    let diags = scan();
+    let found = of_file(&diags, "rust/src/serve/bad_waiver.rs");
+    assert_eq!(found.len(), 2, "{found:?}");
+    assert_eq!(found[0].rule, "bad-waiver");
+    assert_eq!(found[0].line, 4);
+    assert!(found[0].msg.contains("reason"), "{}", found[0].msg);
+    assert_eq!(found[1].rule, "hot-panic");
+    assert_eq!(found[1].line, 5);
+}
+
+#[test]
+fn cli_check_exits_nonzero_on_the_fixture_tree() {
+    // the fixture tree has violations and no baseline → check must fail
+    let exe = env!("CARGO_BIN_EXE_fp-lint");
+    let out = std::process::Command::new(exe)
+        .args(["check", "--root"])
+        .arg(fixture_root())
+        .output()
+        .expect("fp-lint runs");
+    assert!(!out.status.success(), "expected nonzero exit on fixture violations");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("[hot-panic]"), "{stdout}");
+}

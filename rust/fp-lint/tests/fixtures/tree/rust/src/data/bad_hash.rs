@@ -1,0 +1,4 @@
+// fixture: hash collection with nondeterministic iteration order.
+pub fn table() -> std::collections::HashMap<String, usize> {
+    std::collections::HashMap::new()
+}

@@ -1,0 +1,4 @@
+// fixture: thread spawn outside tensor::par and the allowlist.
+pub fn go() {
+    std::thread::spawn(|| {});
+}

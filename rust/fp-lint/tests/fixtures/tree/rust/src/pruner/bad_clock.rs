@@ -1,0 +1,4 @@
+// fixture: raw clock read outside util/ and obs/clock.rs.
+pub fn stamp() -> std::time::Instant {
+    std::time::Instant::now()
+}

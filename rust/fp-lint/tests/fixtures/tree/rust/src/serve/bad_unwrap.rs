@@ -1,0 +1,5 @@
+// fixture: a panicking call in a serving hot-path module.
+pub fn pick(v: &[u8]) -> u8 {
+    let first = v.first().copied();
+    first.unwrap()
+}

@@ -1,0 +1,6 @@
+// fixture: a waiver with no reason is itself an error, and it does not
+// suppress the violation it sits on.
+pub fn pick(v: &[u8]) -> u8 {
+    // fp-lint: allow(hot-panic)
+    v.first().copied().unwrap()
+}

@@ -1,0 +1,4 @@
+// fixture: unchecked slice index on an untrusted-input path.
+pub fn first(v: &[u8]) -> u8 {
+    v[0]
+}

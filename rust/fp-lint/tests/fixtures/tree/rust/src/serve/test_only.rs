@@ -1,0 +1,13 @@
+// fixture: violations inside test items are exempt from every rule.
+pub fn ok() -> usize {
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_unwrap_freely() {
+        let v = vec![1u8];
+        assert_eq!(v.first().copied().unwrap(), v[0]);
+    }
+}

@@ -1,0 +1,5 @@
+// fixture: a correctly waived violation — no findings.
+pub fn lanes(v: &[u8; 4]) -> u8 {
+    // fp-lint: allow(hot-panic) — fixed-size array, index proven in the type
+    *v.iter().max().unwrap()
+}

@@ -1,0 +1,4 @@
+// fixture: float iterator reduction in a kernel module.
+pub fn total(v: &[f32]) -> f32 {
+    v.iter().sum()
+}

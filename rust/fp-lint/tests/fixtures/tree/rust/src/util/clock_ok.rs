@@ -1,0 +1,4 @@
+// fixture: util/ is the one place raw clock reads are allowed.
+pub fn stamp() -> std::time::Instant {
+    std::time::Instant::now()
+}

@@ -1,0 +1,34 @@
+//! Baseline self-check: a fresh scan of the real tree must match the
+//! committed `fp-lint.baseline.json` exactly — not merely stay under it.
+//! Exact equality keeps the ratchet honest in both directions: a fixed
+//! violation must also shrink the baseline (debt cannot quietly linger),
+//! and a new violation fails here before it fails in CI. It also pins
+//! the Rust scanner to `scripts/mirror.py`, which generated the file.
+
+use std::path::{Path, PathBuf};
+
+use fp_lint::{scan_tree, Baseline};
+
+fn repo_root() -> PathBuf {
+    // rust/fp-lint/ → repo root
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("..")
+}
+
+#[test]
+fn committed_baseline_matches_a_fresh_scan_exactly() {
+    let root = repo_root();
+    let diags = scan_tree(&root).expect("repo tree scans");
+    let bad: Vec<_> = diags.iter().filter(|d| d.rule == "bad-waiver").collect();
+    assert!(bad.is_empty(), "bad waivers in tree: {bad:?}");
+    let fresh = Baseline::from_diags(&diags);
+    let path = root.join("fp-lint.baseline.json");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+    let committed = Baseline::parse(&text).expect("baseline parses");
+    assert_eq!(
+        committed, fresh,
+        "fp-lint.baseline.json is stale; regenerate with \
+         `cargo run -p fp-lint -- check --write-baseline` \
+         (or scripts/mirror.py write) and review the diff"
+    );
+}

@@ -142,7 +142,8 @@ pub fn run_serve_format_grid(
     let pruned = crate::pruner::round_model_to_sparsity(spec, dense, sparsity)?;
     let prompts = synthetic_prompts(requests);
     let reqs = requests_for(&prompts, tokens);
-    let (reference, _) = greedy_references(spec, &pruned, &reqs, &prompts);
+    let clock = crate::obs::SharedClock::default();
+    let (reference, _) = greedy_references(spec, &pruned, &reqs, &prompts, &clock);
 
     let mut table = TableBuilder::new(
         &format!("serve formats ({} @ {})", spec.name(), sparsity.label()),
@@ -265,6 +266,8 @@ fn artifact_row(
         },
     )?;
     drop(compiled);
+    #[allow(clippy::disallowed_methods)]
+    // fp-lint: allow(clock) — offline grid timing column, never served
     let t0 = std::time::Instant::now();
     let (loaded, _meta) = artifact::load(path)?;
     let load_ms = t0.elapsed().as_secs_f64() * 1e3;
@@ -326,7 +329,8 @@ pub fn run_paged_kv_grid(
 
     let prompts = synthetic_prompts(requests);
     let reqs = requests_for(&prompts, tokens);
-    let (reference, _) = greedy_references(spec, dense, &reqs, &prompts);
+    let clock = crate::obs::SharedClock::default();
+    let (reference, _) = greedy_references(spec, dense, &reqs, &prompts, &clock);
     let model = ServeModel::dense(spec, dense)?;
 
     let mut table = TableBuilder::new(

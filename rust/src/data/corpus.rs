@@ -86,7 +86,7 @@ impl WordVocab {
         let consonants = b"bcdfghjklmnpqrstvwz";
         let vowels = b"aeiou";
         let mut words = Vec::with_capacity(n_words);
-        let mut seen = std::collections::HashSet::new();
+        let mut seen = std::collections::BTreeSet::new();
         while words.len() < n_words {
             let syllables = 1 + rng.below(3) as usize;
             let mut w = String::new();

@@ -25,6 +25,7 @@ pub fn power_iteration(a: &Tensor, iters: usize, safety: f64) -> f64 {
         }
     }
     let av = matvec(a, &v);
+    // fp-lint: allow(f32-reduce) — serial f64 accumulation in iteration order
     let rayleigh: f64 = v.iter().zip(&av).map(|(&x, &y)| (x as f64) * (y as f64)).sum();
     rayleigh.max(1e-12) * safety
 }

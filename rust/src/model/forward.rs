@@ -180,6 +180,23 @@ where
     }
 }
 
+/// Fallible twin of [`final_norm_with`] for callers whose lookup reports
+/// checked errors instead of panicking (the serving hot path, where a
+/// missing parameter must retire a request, not the process).
+pub fn try_final_norm_with<'t, F>(
+    spec: &ModelSpec,
+    p: F,
+    x: &Tensor,
+) -> anyhow::Result<Tensor>
+where
+    F: Fn(&str) -> anyhow::Result<&'t Tensor>,
+{
+    Ok(match spec.family {
+        FamilyKind::Topt => layernorm(x, p("lnf_g")?, p("lnf_b")?),
+        FamilyKind::Tllama => rmsnorm(x, p("rmsf_g")?),
+    })
+}
+
 pub(crate) fn layernorm(x: &Tensor, g: &Tensor, b: &Tensor) -> Tensor {
     let (s, d) = (x.rows(), x.cols());
     let mut out = Tensor::zeros(vec![s, d]);

@@ -91,6 +91,8 @@ pub fn prune_model(
     method: Method,
     opts: &PruneOptions,
 ) -> Result<(ModelParams, PruneReport)> {
+    #[allow(clippy::disallowed_methods)]
+    // fp-lint: allow(clock) — offline prune wall-time report, never served
     let t0 = Instant::now();
     // Explicit run option beats the presets default; 0 leaves the current
     // global setting (auto unless FP_THREADS / a previous run set it).
@@ -286,6 +288,7 @@ fn run_units_native(
     let results: Mutex<Vec<(usize, Result<UnitResult>)>> = Mutex::new(Vec::with_capacity(layers));
     std::thread::scope(|s| {
         for _ in 0..n_workers {
+            // fp-lint: allow(det-spawn) — scoped layer workers; results re-sorted by index
             s.spawn(|| {
                 par::enter_worker(|| loop {
                     let layer = next.fetch_add(1, Ordering::Relaxed);

@@ -94,6 +94,8 @@ pub fn prune_unit(
     xs_batches: &[Tensor],
     valid_rows: &[usize],
 ) -> Result<UnitResult> {
+    #[allow(clippy::disallowed_methods)]
+    // fp-lint: allow(clock) — offline prune timing report, never served
     let t_layer = Instant::now();
     let native;
     let xla;
@@ -172,6 +174,8 @@ pub fn prune_unit(
     // Solve one operator against its (X, X*) pair — pure w.r.t. the layer
     // state, so same-capture-point operators can run concurrently.
     let solve_one = |engine: &dyn SolverEngine, op: &PrunedOp, w: &Tensor, xd: &Tensor, xs: &Tensor| -> Result<SolveOut> {
+        #[allow(clippy::disallowed_methods)]
+        // fp-lint: allow(clock) — offline prune timing report, never served
         let t_op = Instant::now();
         if w.shape() != [op.m, op.n] {
             bail!("op {} shape {:?} != ({}, {})", op.name, w.shape(), op.m, op.n);
@@ -252,6 +256,7 @@ pub fn prune_unit(
                         let w = &cur[op_index(op.name)];
                         let cfg = presets.fista.clone();
                         let solve_one = &solve_one;
+                        // fp-lint: allow(det-spawn) — scoped solver fan-out, joined in order
                         s.spawn(move || {
                             par::enter_worker(|| {
                                 let eng = NativeEngine { cfg };

@@ -48,6 +48,7 @@ impl ExecutorPool {
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("pjrt-worker-{wid}"))
+                    // fp-lint: allow(det-spawn) — pool workers pull an indexed queue; results re-ordered
                     .spawn(move || worker_loop(q, m, ready))
                     .expect("spawn worker"),
             );

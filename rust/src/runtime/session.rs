@@ -70,7 +70,7 @@ mod backend {
 #[cfg(feature = "xla-pjrt")]
 mod backend {
     use std::cell::RefCell;
-    use std::collections::HashMap;
+    use std::collections::BTreeMap;
 
     use anyhow::{bail, Context};
 
@@ -82,14 +82,14 @@ mod backend {
     pub struct Session {
         client: xla::PjRtClient,
         manifest: Arc<Manifest>,
-        exes: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+        exes: RefCell<BTreeMap<String, xla::PjRtLoadedExecutable>>,
     }
 
     impl Session {
         pub fn new(manifest: Arc<Manifest>) -> Result<Session> {
             let client =
                 xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e}"))?;
-            Ok(Session { client, manifest, exes: RefCell::new(HashMap::new()) })
+            Ok(Session { client, manifest, exes: RefCell::new(BTreeMap::new()) })
         }
 
         pub fn manifest(&self) -> &Manifest {

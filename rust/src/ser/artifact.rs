@@ -73,10 +73,10 @@ impl ArtifactMeta {
     }
 
     fn from_json(v: &Json) -> Result<ArtifactMeta> {
-        let version = v
-            .req("artifact_version")?
-            .as_usize()
-            .context("artifact_version")? as u32;
+        let version = super::cast::u32_field(
+            v.req("artifact_version")?.as_usize().context("artifact_version")?,
+            "artifact_version",
+        )?;
         if !(1..=sparsefile::VERSION).contains(&version) {
             bail!(
                 "artifact sidecar version {version}, this build reads versions 1..={}",

@@ -1,0 +1,41 @@
+//! Checked width conversions for the binary container encoders.
+//!
+//! Every fixed-width header field in the `.fpt` / sparse-artifact layouts
+//! is narrower than `usize` on 64-bit hosts, so a plain `as` cast would
+//! silently truncate an oversized count and write a self-inconsistent —
+//! but checksummed-as-valid — file. These helpers turn that corruption
+//! into a typed encode-time error naming the field.
+
+use anyhow::{anyhow, Result};
+
+/// `usize` → a u32 on-disk field; errors past `u32::MAX` instead of
+/// wrapping.
+pub(crate) fn u32_field(v: usize, what: &str) -> Result<u32> {
+    u32::try_from(v).map_err(|_| anyhow!("{what} {v} exceeds the format's u32 field"))
+}
+
+/// A declared u64 on-disk length → an in-memory `usize`; errors on
+/// 32-bit hosts reading a file produced on a larger machine.
+pub(crate) fn usize_field(v: u64, what: &str) -> Result<usize> {
+    usize::try_from(v).map_err(|_| anyhow!("{what} {v} does not fit this platform's usize"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u32_field_accepts_the_exact_boundary_and_rejects_one_past_it() {
+        assert_eq!(u32_field(0, "count").unwrap(), 0);
+        assert_eq!(u32_field(u32::MAX as usize, "count").unwrap(), u32::MAX);
+        let err = u32_field(u32::MAX as usize + 1, "record count").unwrap_err();
+        assert!(err.to_string().contains("record count"), "{err}");
+        assert!(err.to_string().contains("4294967296"), "{err}");
+    }
+
+    #[test]
+    #[cfg(target_pointer_width = "64")]
+    fn usize_field_round_trips_on_64_bit() {
+        assert_eq!(usize_field(u64::from(u32::MAX) + 1, "payload").unwrap(), 1 << 32);
+    }
+}

@@ -5,6 +5,7 @@
 //! round-trip.
 
 pub mod artifact;
+pub(crate) mod cast;
 pub mod checkpoint;
 pub mod json;
 pub mod sparsefile;

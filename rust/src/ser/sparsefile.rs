@@ -148,11 +148,12 @@ fn put_quant_values(out: &mut Vec<u8>, values: &QuantValues) {
     }
 }
 
-fn encode_payload(rec: &SparseRecordRef<'_>) -> Vec<u8> {
-    match rec {
+fn encode_payload(rec: &SparseRecordRef<'_>) -> Result<Vec<u8>> {
+    use super::cast::u32_field;
+    Ok(match rec {
         SparseRecordRef::Dense(t) => {
             let mut out = Vec::with_capacity(4 + 8 * t.shape().len() + 4 * t.len());
-            put_u32(&mut out, t.shape().len() as u32);
+            put_u32(&mut out, u32_field(t.shape().len(), "dense ndim")?);
             for &d in t.shape() {
                 put_u64(&mut out, d as u64);
             }
@@ -174,8 +175,8 @@ fn encode_payload(rec: &SparseRecordRef<'_>) -> Vec<u8> {
             let mut out = Vec::with_capacity(32 + 5 * p.values.len());
             put_u64(&mut out, p.rows as u64);
             put_u64(&mut out, p.cols as u64);
-            put_u32(&mut out, p.n as u32);
-            put_u32(&mut out, p.m as u32);
+            put_u32(&mut out, u32_field(p.n, "n:m pattern n")?);
+            put_u32(&mut out, u32_field(p.m, "n:m pattern m")?);
             put_u64(&mut out, p.values.len() as u64);
             put_f32s(&mut out, &p.values);
             out.extend_from_slice(&p.indices);
@@ -197,14 +198,14 @@ fn encode_payload(rec: &SparseRecordRef<'_>) -> Vec<u8> {
             let mut out = Vec::with_capacity(33 + 3 * p.indices.len() + p.values.bytes());
             put_u64(&mut out, p.rows as u64);
             put_u64(&mut out, p.cols as u64);
-            put_u32(&mut out, p.n as u32);
-            put_u32(&mut out, p.m as u32);
+            put_u32(&mut out, u32_field(p.n, "n:m pattern n")?);
+            put_u32(&mut out, u32_field(p.m, "n:m pattern m")?);
             put_u64(&mut out, p.values.len() as u64);
             put_quant_values(&mut out, &p.values);
             out.extend_from_slice(&p.indices);
             out
         }
-    }
+    })
 }
 
 fn kind_of(rec: &SparseRecordRef<'_>) -> u8 {
@@ -229,13 +230,13 @@ pub fn write_records(path: &Path, entries: &[(String, SparseRecordRef<'_>)]) -> 
     let mut w = BufWriter::new(file);
     w.write_all(MAGIC)?;
     w.write_all(&VERSION.to_le_bytes())?;
-    w.write_all(&(entries.len() as u32).to_le_bytes())?;
+    w.write_all(&super::cast::u32_field(entries.len(), "record count")?.to_le_bytes())?;
     for (name, rec) in entries {
         let nb = name.as_bytes();
-        w.write_all(&(nb.len() as u32).to_le_bytes())?;
+        w.write_all(&super::cast::u32_field(nb.len(), "record name length")?.to_le_bytes())?;
         w.write_all(nb)?;
         w.write_all(&[kind_of(rec)])?;
-        let payload = encode_payload(rec);
+        let payload = encode_payload(rec)?;
         w.write_all(&(payload.len() as u64).to_le_bytes())?;
         w.write_all(&payload)?;
         w.write_all(&crc32(&payload).to_le_bytes())?;
@@ -257,35 +258,42 @@ impl<'a> Cursor<'a> {
         if self.i + n > self.b.len() {
             bail!("record '{}': payload truncated (corrupt artifact)", self.name);
         }
+        // fp-lint: allow(hot-index) — range checked on the line above
         let s = &self.b[self.i..self.i + n];
         self.i += n;
         Ok(s)
     }
 
     fn u8(&mut self) -> Result<u8> {
+        // fp-lint: allow(hot-index) — take(1) guarantees one byte
         Ok(self.take(1)?[0])
     }
 
     fn u32(&mut self) -> Result<u32> {
+        // fp-lint: allow(hot-panic) — try_into on a take(4) slice is infallible
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
     fn u64(&mut self) -> Result<u64> {
+        // fp-lint: allow(hot-panic) — try_into on a take(8) slice is infallible
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
     fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
         let raw = self.take(4 * n)?;
+        // fp-lint: allow(hot-panic) — try_into on chunks_exact(4) is infallible
         Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
     }
 
     fn u32s(&mut self, n: usize) -> Result<Vec<u32>> {
         let raw = self.take(4 * n)?;
+        // fp-lint: allow(hot-panic) — try_into on chunks_exact(4) is infallible
         Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
     }
 
     fn u16s(&mut self, n: usize) -> Result<Vec<u16>> {
         let raw = self.take(2 * n)?;
+        // fp-lint: allow(hot-panic) — try_into on chunks_exact(2) is infallible
         Ok(raw.chunks_exact(2).map(|c| u16::from_le_bytes(c.try_into().unwrap())).collect())
     }
 
@@ -367,6 +375,7 @@ fn decode_payload(name: &str, kind: u8, payload: &[u8]) -> Result<SparseRecord> 
             if indptr.first() != Some(&0) || indptr.last().copied() != Some(nnz as u32) {
                 bail!("record '{name}': indptr endpoints do not match nnz (corrupt artifact)");
             }
+            // fp-lint: allow(hot-index) — windows(2) yields exactly two elements
             if indptr.windows(2).any(|w| w[0] > w[1]) {
                 bail!("record '{name}': indptr not monotonic (corrupt artifact)");
             }
@@ -419,6 +428,7 @@ fn decode_payload(name: &str, kind: u8, payload: &[u8]) -> Result<SparseRecord> 
             if indptr.first() != Some(&0) || indptr.last().copied() != Some(nnz as u32) {
                 bail!("record '{name}': indptr endpoints do not match nnz (corrupt artifact)");
             }
+            // fp-lint: allow(hot-index) — windows(2) yields exactly two elements
             if indptr.windows(2).any(|w| w[0] > w[1]) {
                 bail!("record '{name}': indptr not monotonic (corrupt artifact)");
             }
@@ -507,7 +517,7 @@ pub fn read_records(path: &Path) -> Result<Vec<(String, SparseRecord)>> {
         if payload_len > MAX_PAYLOAD {
             bail!("{}: record '{name}' declares {payload_len} payload bytes (corrupt artifact)", path.display());
         }
-        let mut payload = vec![0u8; payload_len as usize];
+        let mut payload = vec![0u8; super::cast::usize_field(payload_len, "payload length")?];
         read_exact_ctx(&mut r, &mut payload, path, "record payload")?;
         let mut crc = [0u8; 4];
         read_exact_ctx(&mut r, &mut crc, path, "record checksum")?;
@@ -520,6 +530,7 @@ pub fn read_records(path: &Path) -> Result<Vec<(String, SparseRecord)>> {
                 path.display()
             );
         }
+        // fp-lint: allow(hot-index) — kind is a [u8; 1] filled by read_exact above
         let rec = decode_payload(&name, kind[0], &payload)
             .with_context(|| path.display().to_string())?;
         out.push((name, rec));

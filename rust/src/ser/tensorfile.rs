@@ -28,12 +28,12 @@ pub fn write_tensors(path: &Path, entries: &[(String, &Tensor)]) -> Result<()> {
     }
     let mut w = BufWriter::new(std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?);
     w.write_all(MAGIC)?;
-    w.write_all(&(entries.len() as u32).to_le_bytes())?;
+    w.write_all(&super::cast::u32_field(entries.len(), "tensor count")?.to_le_bytes())?;
     for (name, t) in entries {
         let nb = name.as_bytes();
-        w.write_all(&(nb.len() as u32).to_le_bytes())?;
+        w.write_all(&super::cast::u32_field(nb.len(), "tensor name length")?.to_le_bytes())?;
         w.write_all(nb)?;
-        w.write_all(&(t.shape().len() as u32).to_le_bytes())?;
+        w.write_all(&super::cast::u32_field(t.shape().len(), "tensor ndim")?.to_le_bytes())?;
         for &d in t.shape() {
             w.write_all(&(d as u64).to_le_bytes())?;
         }

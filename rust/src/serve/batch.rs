@@ -20,7 +20,10 @@
 //!
 //! Construction validates the full parameter set against the spec and
 //! returns checked errors for malformed checkpoints; the decode hot path
-//! then reads through infallible lookups instead of panicking mid-stream.
+//! then reads through checked lookups whose failure surfaces as a
+//! `Result` the engine turns into a per-request retirement
+//! (`FinishReason::Error`) — never a process panic that would kill the
+//! co-batched streams.
 
 use std::collections::BTreeMap;
 
@@ -218,21 +221,25 @@ impl<'p> ServeModel<'p> {
     }
 
     /// Model-level residual tensor; existence is validated at
-    /// construction, so a miss here is an internal invariant violation.
-    fn global(&self, name: &str) -> &Tensor {
+    /// construction, so a miss here is an internal invariant violation —
+    /// reported as a checked error so the engine retires the request
+    /// instead of the process aborting mid-batch.
+    fn global(&self, name: &str) -> Result<&Tensor> {
         match &self.weights {
             Weights::Dense { params, .. } => params.get(name),
             Weights::Compiled(c) => c.get().global(name),
         }
-        .unwrap_or_else(|| panic!("model param '{name}' (validated at construction)"))
+        .ok_or_else(|| anyhow::anyhow!("internal: model param '{name}' missing post-validation"))
     }
 
-    fn lp(&self, layer: usize, name: &str) -> &Tensor {
+    fn lp(&self, layer: usize, name: &str) -> Result<&Tensor> {
         match &self.weights {
-            Weights::Dense { layers, .. } => layers[layer].get(name).copied(),
+            Weights::Dense { layers, .. } => layers.get(layer).and_then(|m| m.get(name)).copied(),
             Weights::Compiled(c) => c.get().residual_tensor(layer, name),
         }
-        .unwrap_or_else(|| panic!("layer {layer} param '{name}' (validated at construction)"))
+        .ok_or_else(|| {
+            anyhow::anyhow!("internal: layer {layer} param '{name}' missing post-validation")
+        })
     }
 
     /// X @ Wᵀ through the compressed operator when serving compiled, the
@@ -241,21 +248,35 @@ impl<'p> ServeModel<'p> {
     /// `linop` in `model::forward`: the dense kernel is bitwise equal to
     /// `matmul_nt`; CSR and packed n:m are value-equal (skipped zeros and
     /// padded ±0.0 terms cannot change a sum's value).
-    fn linop(&self, layer: usize, name: &str, x: &Tensor) -> Tensor {
-        match &self.weights {
-            Weights::Dense { .. } => kernels::matmul_nt_skinny(x, self.lp(layer, name)),
+    fn linop(&self, layer: usize, name: &str, x: &Tensor) -> Result<Tensor> {
+        Ok(match &self.weights {
+            Weights::Dense { .. } => kernels::matmul_nt_skinny(x, self.lp(layer, name)?),
             Weights::Compiled(c) => c
                 .get()
                 .op(layer, name)
-                .unwrap_or_else(|| panic!("operator l{layer}.{name} (validated at construction)"))
+                .ok_or_else(|| {
+                    anyhow::anyhow!("internal: operator l{layer}.{name} missing post-validation")
+                })?
                 .matmul_t_par(x),
-        }
+        })
     }
 
     /// Final pre-head norm over a [b, d] stack (shared family dispatch:
-    /// `model::forward::final_norm_with`).
-    fn final_norm(&self, x: &Tensor) -> Tensor {
-        forward::final_norm_with(&self.spec, |n| self.global(n), x)
+    /// `model::forward::try_final_norm_with`).
+    fn final_norm(&self, x: &Tensor) -> Result<Tensor> {
+        forward::try_final_norm_with(&self.spec, |n| self.global(n), x)
+    }
+
+    /// Embedding row for token `tok`, bounds-checked: an out-of-range id
+    /// (client-supplied or corrupted in flight) is a per-request error,
+    /// never a process panic that would kill co-batched streams.
+    fn embed_row<'e>(&self, embed: &'e Tensor, tok: i32) -> Result<&'e [f32]> {
+        let d = self.spec.d;
+        let vocab = embed.rows();
+        match usize::try_from(tok).ok().filter(|&t| t < vocab) {
+            Some(t) => Ok(&embed.data()[t * d..(t + 1) * d]),
+            None => bail!("token id {tok} outside vocab 0..{vocab}"),
+        }
     }
 }
 
@@ -271,9 +292,9 @@ pub fn decode_step(
     positions: &[usize],
 ) -> Result<Tensor> {
     let x = decode_hidden(model, blocks, tokens, positions)?;
-    let x = model.final_norm(&x);
+    let x = model.final_norm(&x)?;
     // tied unembedding through the skinny kernel (bitwise = matmul_nt)
-    Ok(kernels::matmul_nt_skinny(&x, model.global("embed")))
+    Ok(kernels::matmul_nt_skinny(&x, model.global("embed")?))
 }
 
 /// Prefill one *chunk* of a prompt — `tokens` at absolute positions
@@ -308,14 +329,13 @@ pub fn prefill_extend(
     }
     let spec = &model.spec;
     let d = spec.d;
-    let embed = model.global("embed");
+    let embed = model.global("embed")?;
     let mut x = Tensor::zeros(vec![p, d]);
     for (t, &tok) in tokens.iter().enumerate() {
-        x.row_mut(t)
-            .copy_from_slice(&embed.data()[tok as usize * d..(tok as usize + 1) * d]);
+        x.row_mut(t).copy_from_slice(model.embed_row(embed, tok)?);
     }
     if spec.family == FamilyKind::Topt {
-        let pos_t = model.global("pos");
+        let pos_t = model.global("pos")?;
         for t in 0..p {
             for (xi, &pv) in x.row_mut(t).iter_mut().zip(pos_t.row(start + t)) {
                 *xi += pv;
@@ -343,21 +363,21 @@ fn prefill_layer(
     let p = x.rows();
     let d = spec.d;
     let h = match spec.family {
-        FamilyKind::Topt => forward::layernorm(x, model.lp(li, "ln1_g"), model.lp(li, "ln1_b")),
-        FamilyKind::Tllama => forward::rmsnorm(x, model.lp(li, "rms1_g")),
+        FamilyKind::Topt => forward::layernorm(x, model.lp(li, "ln1_g")?, model.lp(li, "ln1_b")?),
+        FamilyKind::Tllama => forward::rmsnorm(x, model.lp(li, "rms1_g")?),
     };
-    let mut q = model.linop(li, "wq", &h);
-    let mut k = model.linop(li, "wk", &h);
+    let mut q = model.linop(li, "wq", &h)?;
+    let mut k = model.linop(li, "wk", &h)?;
     let v = {
-        let mut v = model.linop(li, "wv", &h);
+        let mut v = model.linop(li, "wv", &h)?;
         if spec.bias {
-            forward::add_bias(&mut v, model.lp(li, "bv"));
+            forward::add_bias(&mut v, model.lp(li, "bv")?);
         }
         v
     };
     if spec.bias {
-        forward::add_bias(&mut q, model.lp(li, "bq"));
-        forward::add_bias(&mut k, model.lp(li, "bk"));
+        forward::add_bias(&mut q, model.lp(li, "bq")?);
+        forward::add_bias(&mut k, model.lp(li, "bk")?);
     }
     if spec.family == FamilyKind::Tllama {
         for t in 0..p {
@@ -382,19 +402,21 @@ fn prefill_layer(
             }
         });
     }
-    let mut attn_out = model.linop(li, "wo", &ctx);
+    let mut attn_out = model.linop(li, "wo", &ctx)?;
     if spec.bias {
-        forward::add_bias(&mut attn_out, model.lp(li, "bo"));
+        forward::add_bias(&mut attn_out, model.lp(li, "bo")?);
     }
     let mut x1 = x.clone();
     for (a, bv) in x1.data_mut().iter_mut().zip(attn_out.data()) {
         *a += bv;
     }
     let h2 = match spec.family {
-        FamilyKind::Topt => forward::layernorm(&x1, model.lp(li, "ln2_g"), model.lp(li, "ln2_b")),
-        FamilyKind::Tllama => forward::rmsnorm(&x1, model.lp(li, "rms2_g")),
+        FamilyKind::Topt => {
+            forward::layernorm(&x1, model.lp(li, "ln2_g")?, model.lp(li, "ln2_b")?)
+        }
+        FamilyKind::Tllama => forward::rmsnorm(&x1, model.lp(li, "rms2_g")?),
     };
-    let mlp_out = mlp(model, li, p, &h2);
+    let mlp_out = mlp(model, li, p, &h2)?;
     for (a, bv) in x1.data_mut().iter_mut().zip(mlp_out.data()) {
         *a += bv;
     }
@@ -411,21 +433,22 @@ fn decode_hidden(
 ) -> Result<Tensor> {
     let spec = &model.spec;
     let b = tokens.len();
-    assert_eq!(blocks.len(), b, "one KV block per batched token");
-    assert_eq!(positions.len(), b, "one position per batched token");
+    ensure!(blocks.len() == b, "one KV block per batched token");
+    ensure!(positions.len() == b, "one position per batched token");
     let d = spec.d;
     for (blk, &p) in blocks.iter().zip(positions) {
         debug_assert_eq!(blk.len(), p, "KV cache length must equal the token's position");
     }
-    let embed = model.global("embed");
+    let embed = model.global("embed")?;
     let pos_t = match spec.family {
-        FamilyKind::Topt => Some(model.global("pos")),
+        FamilyKind::Topt => Some(model.global("pos")?),
         FamilyKind::Tllama => None,
     };
     let mut x = Tensor::zeros(vec![b, d]);
     for (i, &tok) in tokens.iter().enumerate() {
-        x.row_mut(i)
-            .copy_from_slice(&embed.data()[tok as usize * d..(tok as usize + 1) * d]);
+        x.row_mut(i).copy_from_slice(
+            model.embed_row(embed, tok).with_context(|| format!("batch row {i}"))?,
+        );
         if let Some(pos_t) = pos_t {
             for (xi, &pv) in x.row_mut(i).iter_mut().zip(pos_t.row(positions[i])) {
                 *xi += pv;
@@ -450,21 +473,21 @@ fn layer_step(
     let b = x.rows();
     let d = spec.d;
     let h = match spec.family {
-        FamilyKind::Topt => forward::layernorm(x, model.lp(li, "ln1_g"), model.lp(li, "ln1_b")),
-        FamilyKind::Tllama => forward::rmsnorm(x, model.lp(li, "rms1_g")),
+        FamilyKind::Topt => forward::layernorm(x, model.lp(li, "ln1_g")?, model.lp(li, "ln1_b")?),
+        FamilyKind::Tllama => forward::rmsnorm(x, model.lp(li, "rms1_g")?),
     };
-    let mut q = model.linop(li, "wq", &h);
-    let mut k = model.linop(li, "wk", &h);
+    let mut q = model.linop(li, "wq", &h)?;
+    let mut k = model.linop(li, "wk", &h)?;
     let v = {
-        let mut v = model.linop(li, "wv", &h);
+        let mut v = model.linop(li, "wv", &h)?;
         if spec.bias {
-            forward::add_bias(&mut v, model.lp(li, "bv"));
+            forward::add_bias(&mut v, model.lp(li, "bv")?);
         }
         v
     };
     if spec.bias {
-        forward::add_bias(&mut q, model.lp(li, "bq"));
-        forward::add_bias(&mut k, model.lp(li, "bk"));
+        forward::add_bias(&mut q, model.lp(li, "bq")?);
+        forward::add_bias(&mut k, model.lp(li, "bk")?);
     }
     if spec.family == FamilyKind::Tllama {
         for i in 0..b {
@@ -493,9 +516,9 @@ fn layer_step(
             }
         });
     }
-    let mut attn_out = model.linop(li, "wo", &ctx);
+    let mut attn_out = model.linop(li, "wo", &ctx)?;
     if spec.bias {
-        forward::add_bias(&mut attn_out, model.lp(li, "bo"));
+        forward::add_bias(&mut attn_out, model.lp(li, "bo")?);
     }
     let mut x1 = x.clone();
     for (a, bv) in x1.data_mut().iter_mut().zip(attn_out.data()) {
@@ -503,10 +526,12 @@ fn layer_step(
     }
 
     let h2 = match spec.family {
-        FamilyKind::Topt => forward::layernorm(&x1, model.lp(li, "ln2_g"), model.lp(li, "ln2_b")),
-        FamilyKind::Tllama => forward::rmsnorm(&x1, model.lp(li, "rms2_g")),
+        FamilyKind::Topt => {
+            forward::layernorm(&x1, model.lp(li, "ln2_g")?, model.lp(li, "ln2_b")?)
+        }
+        FamilyKind::Tllama => forward::rmsnorm(&x1, model.lp(li, "rms2_g")?),
     };
-    let mlp_out = mlp(model, li, b, &h2);
+    let mlp_out = mlp(model, li, b, &h2)?;
     for (a, bv) in x1.data_mut().iter_mut().zip(mlp_out.data()) {
         *a += bv;
     }
@@ -515,33 +540,33 @@ fn layer_step(
 
 /// The family-specific MLP over a [rows, d] post-norm stack (shared by
 /// the decode and prefill layer walks).
-fn mlp(model: &ServeModel<'_>, li: usize, rows: usize, h2: &Tensor) -> Tensor {
+fn mlp(model: &ServeModel<'_>, li: usize, rows: usize, h2: &Tensor) -> Result<Tensor> {
     let spec = &model.spec;
-    match spec.family {
+    Ok(match spec.family {
         FamilyKind::Topt => {
-            let mut f1 = model.linop(li, "w1", h2);
+            let mut f1 = model.linop(li, "w1", h2)?;
             if spec.bias {
-                forward::add_bias(&mut f1, model.lp(li, "b1"));
+                forward::add_bias(&mut f1, model.lp(li, "b1")?);
             }
             for v in f1.data_mut() {
                 *v = forward::gelu(*v);
             }
-            let mut f2 = model.linop(li, "w2", &f1);
+            let mut f2 = model.linop(li, "w2", &f1)?;
             if spec.bias {
-                forward::add_bias(&mut f2, model.lp(li, "b2"));
+                forward::add_bias(&mut f2, model.lp(li, "b2")?);
             }
             f2
         }
         FamilyKind::Tllama => {
-            let gate = model.linop(li, "wg", h2);
-            let up = model.linop(li, "wu", h2);
+            let gate = model.linop(li, "wg", h2)?;
+            let up = model.linop(li, "wu", h2)?;
             let mut hidden = Tensor::zeros(vec![rows, spec.ffn]);
             for ((hv, &g), &u) in hidden.data_mut().iter_mut().zip(gate.data()).zip(up.data()) {
                 *hv = forward::silu(g) * u;
             }
-            model.linop(li, "wd", &hidden)
+            model.linop(li, "wd", &hidden)?
         }
-    }
+    })
 }
 
 #[cfg(test)]

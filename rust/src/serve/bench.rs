@@ -81,6 +81,13 @@ impl BenchObs {
         cfg.clock = self.clock.clone();
         cfg.recorder = self.recorder.clone();
     }
+
+    /// The bench's own timestamp domain: the injected clock when one is
+    /// configured, the monotonic default otherwise — so engine latencies
+    /// and bench wall numbers always share a domain.
+    fn clock(&self) -> SharedClock {
+        self.clock.clone().unwrap_or_default()
+    }
 }
 
 /// One measured decode path.
@@ -241,18 +248,19 @@ pub(crate) fn greedy_references(
     params: &ModelParams,
     requests: &[ServeRequest],
     prompts: &[String],
+    clock: &SharedClock,
 ) -> (BTreeMap<String, String>, Vec<f64>) {
     let mut texts = BTreeMap::new();
     let mut lat_ms = Vec::new();
     for (r, p) in requests.iter().zip(prompts) {
-        let t0 = std::time::Instant::now();
+        let t0 = clock.now_ms();
         let text = generate(
             spec,
             params,
             p,
             &GenOptions { max_tokens: r.max_tokens, temperature: 0.0, seed: r.seed },
         );
-        lat_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        lat_ms.push(clock.now_ms() - t0);
         texts.insert(r.id.clone(), text);
     }
     (texts, lat_ms)
@@ -286,7 +294,8 @@ pub(crate) fn run_engine_cfg(
     requests: &[ServeRequest],
 ) -> Result<(PathStats, BTreeMap<String, String>)> {
     let mut eng = Engine::new(model, cfg)?;
-    let start = std::time::Instant::now();
+    let clock = cfg.clock.clone().unwrap_or_default();
+    let start = clock.now_ms();
     let mut pending = requests.iter();
     let mut next = pending.next();
     let mut responses = Vec::new();
@@ -309,7 +318,7 @@ pub(crate) fn run_engine_cfg(
         kv_peak = kv_peak.max(eng.kv_resident_bytes());
         responses.extend(eng.take_responses());
     }
-    let wall_s = start.elapsed().as_secs_f64();
+    let wall_s = (clock.now_ms() - start) / 1e3;
     let weight_bytes_moved = eng.stats.steps * model.resident_weight_bytes() as u64;
     let latencies: Vec<f64> = responses.iter().map(|r| r.latency_ms).collect();
     let total_tokens: usize = responses.iter().map(|r| r.completion_tokens).sum();
@@ -416,9 +425,10 @@ pub fn run_serve_bench(
     let mut parity_ok = true;
 
     // references + full-recompute timing: eval::generate per request
-    let start = std::time::Instant::now();
-    let (reference, ref_lat) = greedy_references(spec, dense, &requests, &prompts);
-    let recompute_wall = start.elapsed().as_secs_f64();
+    let clock = cfg.obs.clock();
+    let start = clock.now_ms();
+    let (reference, ref_lat) = greedy_references(spec, dense, &requests, &prompts, &clock);
+    let recompute_wall = (clock.now_ms() - start) / 1e3;
     let recompute_tokens = cfg.tokens * cfg.requests;
     let ref_qs = percentiles(&ref_lat, &[50.0, 99.0]);
     let recompute = PathStats {
@@ -449,7 +459,7 @@ pub fn run_serve_bench(
     // compressed formats on pruned weights, batch 1 and batch B; parity
     // vs the full-recompute generate over the same pruned weights
     let pruned = round_model_to_sparsity(spec, dense, cfg.sparsity)?;
-    let (pruned_ref, _) = greedy_references(spec, &pruned, &requests, &prompts);
+    let (pruned_ref, _) = greedy_references(spec, &pruned, &requests, &prompts, &clock);
     let pruned_dense_model = ServeModel::dense(spec, &pruned)?;
     let (kv_pruned1, _) =
         run_engine(&pruned_dense_model, 1, "kv pruned-dense b=1", &requests, &cfg.obs)?;
@@ -610,11 +620,12 @@ fn stall_run(
     shorts: &[ServeRequest],
     long: &ServeRequest,
 ) -> Result<(f64, f64, BTreeMap<String, String>)> {
+    let clock = cfg.clock.clone().unwrap_or_default();
     let mut eng = Engine::new(model, cfg)?;
     for r in shorts {
         eng.submit(r.clone())?;
     }
-    let start = std::time::Instant::now();
+    let start = clock.now_ms();
     for _ in 0..2 {
         eng.step()?;
     }
@@ -622,13 +633,13 @@ fn stall_run(
     let mut step_ms = Vec::new();
     let mut responses = eng.take_responses();
     while !eng.is_idle() {
-        let t0 = std::time::Instant::now();
+        let t0 = clock.now_ms();
         eng.step()?;
-        step_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        step_ms.push(clock.now_ms() - t0);
         responses.extend(eng.take_responses());
     }
     responses.extend(eng.take_responses());
-    let wall_s = start.elapsed().as_secs_f64();
+    let wall_s = (clock.now_ms() - start) / 1e3;
     let total_tokens: usize = responses.iter().map(|r| r.completion_tokens).sum();
     let texts = responses.into_iter().map(|r| (r.id, r.text)).collect();
     Ok((percentile(&step_ms, 99.0), total_tokens as f64 / wall_s.max(1e-12), texts))
@@ -657,7 +668,8 @@ pub fn run_paged_bench(
     let half_n = (slots / 2).max(1);
     let prompts = synthetic_prompts(half_n);
     let requests = requests_for(&prompts, cfg.tokens);
-    let (reference, _) = greedy_references(spec, dense, &requests, &prompts);
+    let obs_clock = cfg.obs.clock();
+    let (reference, _) = greedy_references(spec, dense, &requests, &prompts, &obs_clock);
     let mut mem_cfg = EngineConfig {
         max_batch: slots,
         queue_cap: half_n,
@@ -688,7 +700,7 @@ pub fn run_paged_bench(
     };
     prompts.push(long_prompt);
     requests.push(long.clone());
-    let (stall_ref, _) = greedy_references(spec, dense, &requests, &prompts);
+    let (stall_ref, _) = greedy_references(spec, dense, &requests, &prompts, &obs_clock);
     let shorts = &requests[..short_n];
     let mut chunked_cfg = EngineConfig {
         max_batch: slots,
@@ -841,10 +853,11 @@ pub fn run_artifact_bench(
     expected_model: Option<&str>,
 ) -> Result<ArtifactBenchReport> {
     ensure!(cfg.tokens >= 1 && cfg.batch >= 1 && cfg.requests >= 1, "bench sizes must be >= 1");
-    let t0 = std::time::Instant::now();
+    let clock = cfg.obs.clock();
+    let t0 = clock.now_ms();
     let (compiled, meta) = crate::ser::artifact::load(path)?;
     crate::ser::artifact::check_model(&meta, expected_model)?;
-    let load_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let load_ms = clock.now_ms() - t0;
     let spec = compiled.spec.clone();
 
     let prompts = synthetic_prompts(cfg.requests);
@@ -1045,7 +1058,9 @@ pub fn run_kernel_bench(
         Ok(())
     };
     let result = run();
-    par::set_kernel_variant(prev).expect("restoring a previously accepted kernel variant");
+    if let Err(e) = par::set_kernel_variant(prev) {
+        bail!("restoring kernel variant {prev:?} after the sweep: {e}");
+    }
     result?;
     let parity_ok = !rows.is_empty() && rows.iter().all(|r| r.parity_ok);
     Ok(KernelBenchReport {
@@ -1181,10 +1196,11 @@ fn net_client_session(
     reqs_per_client: usize,
     tokens: usize,
     churn: bool,
+    clock: SharedClock,
 ) -> Result<NetClientOut> {
     use std::io::{BufRead, Write};
     use std::net::TcpStream;
-    use std::time::{Duration, Instant};
+    use std::time::Duration;
 
     use anyhow::Context as _;
 
@@ -1212,7 +1228,7 @@ fn net_client_session(
         let take = per.min(reqs_per_client - k);
         let mut stream = TcpStream::connect(addr)?;
         stream.set_read_timeout(Some(Duration::from_secs(60)))?;
-        let mut sent: BTreeMap<String, Instant> = BTreeMap::new();
+        let mut sent: BTreeMap<String, f64> = BTreeMap::new();
         let mut meta: BTreeMap<String, (String, u64)> = BTreeMap::new();
         for j in 0..take {
             let id = format!("c{ci}-k{}", k + j);
@@ -1227,7 +1243,7 @@ fn net_client_session(
                 stop: None,
             };
             writeln!(stream, "{}", req.to_json_line())?;
-            sent.insert(id.clone(), Instant::now());
+            sent.insert(id.clone(), clock.now_ms());
             meta.insert(id, (prompt, seed));
         }
         stream.flush()?;
@@ -1243,7 +1259,7 @@ fn net_client_session(
                 .get(&id)
                 .copied()
                 .with_context(|| format!("client {ci}: response for unknown id '{id}'"))?;
-            out.latencies_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            out.latencies_ms.push(clock.now_ms() - t0);
             let (prompt, seed) =
                 meta.get(&id).cloned().with_context(|| format!("client {ci}: no meta for '{id}'"))?;
             out.results.push(NetClientResult {
@@ -1272,7 +1288,7 @@ pub fn run_net_bench(
 ) -> Result<NetBenchReport> {
     use std::sync::atomic::{AtomicBool, Ordering};
     use std::sync::Arc;
-    use std::time::{Duration, Instant};
+    use std::time::Duration;
 
     use anyhow::Context as _;
 
@@ -1303,18 +1319,22 @@ pub fn run_net_bench(
     let server = NetServer::bind("127.0.0.1:0", ncfg)?;
     let addr = server.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
-    let start = Instant::now();
+    let clock = cfg.obs.clock();
+    let start = clock.now_ms();
     let mut wall_s = 0.0;
     let mut client_outs: Vec<NetClientOut> = Vec::new();
     let mut net_report = None;
     let (model_ref, ecfg_ref, server_ref) = (&model, &ecfg, &server);
     std::thread::scope(|s| -> Result<()> {
         let stop_server = stop.clone();
+        // fp-lint: allow(det-spawn) — scoped bench server thread, joined below
         let sh = s.spawn(move || server_ref.run(model_ref, ecfg_ref, stop_server));
         let handles: Vec<_> = (0..net.clients)
             .map(|ci| {
                 let (rpc, toks, churn) = (net.requests_per_client, cfg.tokens, net.churn);
-                s.spawn(move || net_client_session(addr, ci, rpc, toks, churn))
+                let clk = clock.clone();
+                // fp-lint: allow(det-spawn) — scoped bench client fleet, joined below
+                s.spawn(move || net_client_session(addr, ci, rpc, toks, churn, clk))
             })
             .collect();
         let mut client_err = None;
@@ -1325,7 +1345,7 @@ pub fn run_net_bench(
                 Err(_) => client_err = Some(anyhow::anyhow!("net bench client panicked")),
             }
         }
-        wall_s = start.elapsed().as_secs_f64();
+        wall_s = (clock.now_ms() - start) / 1e3;
         stop.store(true, Ordering::Relaxed);
         match sh.join() {
             Ok(r) => net_report = Some(r?),

@@ -394,6 +394,25 @@ impl<'m> Engine<'m> {
         self.pool.debug_set_budget(pages);
     }
 
+    /// Failure-injection hook: overwrite request `id`'s pending feed token
+    /// with an out-of-vocab id, as if the stream were corrupted in flight.
+    /// The next decode step must retire only that request with
+    /// `FinishReason::Error` while co-batched streams stay bitwise intact.
+    /// Returns false when the request is not in a slot with a pending
+    /// token.
+    #[doc(hidden)]
+    pub fn debug_poison_pending_token(&mut self, id: &str) -> bool {
+        for slot in self.slots.iter_mut().flatten() {
+            if slot.req.id == id {
+                if let Some(t) = slot.tokens.get_mut(slot.fed) {
+                    *t = i32::MAX;
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
     /// Trace events dropped by the recorder's bounded channel (0 when
     /// none is installed).
     pub fn dropped_events(&self) -> u64 {
@@ -545,8 +564,9 @@ impl<'m> Engine<'m> {
             if !self.pool.try_reserve(pages) {
                 break;
             }
-            let QueuedReq { req, tokens, submitted } =
-                self.queue.pop_front().expect("queue head checked");
+            let Some(QueuedReq { req, tokens, submitted }) = self.queue.pop_front() else {
+                break;
+            };
             let prompt_len = tokens.len();
             let rng = Pcg64::new(req.seed, 61);
             let stop_id = req
@@ -564,8 +584,7 @@ impl<'m> Engine<'m> {
                 stop_id,
                 submitted,
             });
-            if let Some(r) = &self.rec {
-                let slot = self.slots[si].as_ref().expect("slot just admitted");
+            if let (Some(r), Some(slot)) = (&self.rec, self.slots[si].as_ref()) {
                 r.begin(
                     "request",
                     &slot.req.id,
@@ -586,7 +605,9 @@ impl<'m> Engine<'m> {
     /// prefill and decode; a failure message becomes that slot's
     /// `FinishReason::Error` retire (`verb` names the failing phase).
     fn grow_slot(&mut self, si: usize, target: usize, verb: &str) -> Result<(), String> {
-        let slot = self.slots[si].as_mut().expect("growing an empty slot");
+        let Some(slot) = self.slots[si].as_mut() else {
+            return Err("internal: growing an empty slot".to_string());
+        };
         let needed_pages = self.pool.pages_for(target);
         if needed_pages > slot.reserved_pages {
             return Err(format!(
@@ -620,14 +641,13 @@ impl<'m> Engine<'m> {
                 failed.push((si, msg));
                 continue;
             }
-            let slot = self.slots[si].as_mut().expect("slot just grown");
+            let Some(slot) = self.slots[si].as_mut() else { continue };
             prefill_extend(self.model, &mut slot.block, &slot.tokens[fed..target], fed)?;
             slot.fed = target;
             budget -= c;
             self.stats.prefill_tokens += c as u64;
             self.stats.prefill_chunks += 1;
-            if let Some(r) = &self.rec {
-                let slot = self.slots[si].as_ref().expect("slot just fed");
+            if let (Some(r), Some(slot)) = (&self.rec, self.slots[si].as_ref()) {
                 r.point(
                     "prefill_chunk",
                     &slot.req.id,
@@ -665,13 +685,42 @@ impl<'m> Engine<'m> {
         if active.is_empty() {
             return Ok(0);
         }
+        // Per-slot pending-token validation: an out-of-range id (corrupted
+        // in flight, or injected by the failure tests) retires only its own
+        // request; the rest of the batch decodes exactly as it would have
+        // without it. `decode_step` re-checks the same bound, but by then a
+        // failure is batch-fatal — this is the per-request gate.
+        let vocab = self.model.spec.vocab;
+        let mut batch = Vec::with_capacity(active.len());
         let mut feed = Vec::with_capacity(active.len());
         let mut pos = Vec::with_capacity(active.len());
+        let mut invalid: Vec<(usize, String)> = Vec::new();
         for &si in &active {
-            let slot = self.slots[si].as_ref().expect("active slot");
-            feed.push(slot.tokens[slot.fed]);
-            pos.push(slot.fed);
+            let Some(slot) = self.slots[si].as_ref() else { continue };
+            match slot.tokens.get(slot.fed).copied() {
+                Some(t) if usize::try_from(t).is_ok_and(|t| t < vocab) => {
+                    batch.push(si);
+                    feed.push(t);
+                    pos.push(slot.fed);
+                }
+                Some(t) => invalid.push((si, format!("token id {t} outside vocab 0..{vocab}"))),
+                None => invalid.push((
+                    si,
+                    format!(
+                        "internal: feed index {} past the {}-token buffer",
+                        slot.fed,
+                        slot.tokens.len()
+                    ),
+                )),
+            }
         }
+        for (si, msg) in invalid {
+            self.retire(si, FinishReason::Error, Some(msg))?;
+        }
+        if batch.is_empty() {
+            return Ok(0);
+        }
+        let active = batch;
         let logits = {
             // gather the active blocks mutably, in slot order (disjoint
             // slots ⇒ disjoint borrows)
@@ -679,7 +728,9 @@ impl<'m> Engine<'m> {
             let mut blocks: Vec<&mut KvBlock> = Vec::with_capacity(active.len());
             for (si, s) in self.slots.iter_mut().enumerate() {
                 if want.peek() == Some(&&si) {
-                    blocks.push(&mut s.as_mut().expect("active slot").block);
+                    if let Some(s) = s.as_mut() {
+                        blocks.push(&mut s.block);
+                    }
                     want.next();
                 }
             }
@@ -690,7 +741,7 @@ impl<'m> Engine<'m> {
             let row = logits.row(bi);
             let mut finish = None;
             {
-                let slot = self.slots[si].as_mut().expect("active slot");
+                let Some(slot) = self.slots[si].as_mut() else { continue };
                 let next = next_token(row, slot.req.temperature, &mut slot.rng) as i32;
                 slot.fed += 1;
                 if slot.stop_id == Some(next) {
@@ -1049,6 +1100,53 @@ mod tests {
             &params,
             "abcdefg",
             &GenOptions { max_tokens: 5, temperature: 0.0, seed: 2 },
+        );
+        assert_eq!(survivor.text, solo, "survivor must be byte-identical to its solo run");
+    }
+
+    #[test]
+    fn poisoned_token_retires_only_the_offending_slot() {
+        let (spec, params) = setup();
+        let model = ServeModel::dense(&spec, &params).unwrap();
+        let cfg = EngineConfig { max_batch: 2, ..EngineConfig::default() };
+        let mut eng = Engine::new(&model, &cfg).unwrap();
+        eng.submit(req("survivor", "abcdefg", 8, 0.0, 2)).unwrap();
+        eng.submit(req("victim", "ab", 12, 0.0, 1)).unwrap();
+        // prefill both, then decode a few tokens co-batched
+        for _ in 0..4 {
+            eng.step().unwrap();
+        }
+        assert_eq!(eng.active(), 2, "both streams must be decoding together");
+        // injected corruption: the victim's pending feed token becomes an
+        // out-of-vocab id, as if mangled in flight
+        assert!(eng.debug_poison_pending_token("victim"), "victim must have a pending token");
+        let mut out = eng.run().unwrap();
+        out.sort_by(|a, b| a.id.cmp(&b.id));
+        assert_eq!(out.len(), 2);
+        let (survivor, victim) = (&out[0], &out[1]);
+        assert_eq!(victim.id, "victim");
+        assert_eq!(victim.finish, FinishReason::Error, "{:?}", victim.error);
+        assert!(victim.error.as_ref().unwrap().contains("vocab"), "{:?}", victim.error);
+        assert!(victim.completion_tokens < 12, "the victim retired mid-stream");
+        // everything the victim streamed before the corruption is still the
+        // solo stream (the final char is the clamped render of the poisoned
+        // id itself)
+        let solo_victim = generate(
+            &spec,
+            &params,
+            "ab",
+            &GenOptions { max_tokens: 12, temperature: 0.0, seed: 1 },
+        );
+        let clean = &victim.text[..victim.text.len() - 1];
+        assert!(solo_victim.starts_with(clean), "pre-poison text is a solo-run prefix");
+        // the co-batched survivor is untouched: full budget, byte-identical
+        assert_eq!(survivor.id, "survivor");
+        assert_eq!(survivor.finish, FinishReason::Length);
+        let solo = generate(
+            &spec,
+            &params,
+            "abcdefg",
+            &GenOptions { max_tokens: 8, temperature: 0.0, seed: 2 },
         );
         assert_eq!(survivor.text, solo, "survivor must be byte-identical to its solo run");
     }

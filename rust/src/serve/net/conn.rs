@@ -14,10 +14,12 @@
 //! stops reading can fill its own queue and get disconnected — it can never
 //! stall the engine step loop or any other stream.
 
-use std::io::{BufReader, Write};
+use std::io::{BufReader, Read, Write};
 use std::net::TcpStream;
 use std::sync::mpsc::{Receiver, SyncSender};
-use std::time::{Duration, Instant};
+use std::time::Duration;
+
+use crate::obs::SharedClock;
 
 use super::framing::{BoundedLineReader, LineOutcome};
 
@@ -26,6 +28,7 @@ pub type ConnId = u64;
 
 /// Everything the dispatch loop can learn from the socket side, tagged
 /// with the owning connection.
+#[derive(Debug)]
 pub enum ConnEvent {
     /// A fresh connection from the accept thread.
     NewConn { conn: ConnId, stream: TcpStream, peer: String },
@@ -47,37 +50,55 @@ pub enum ConnEvent {
 }
 
 /// Reader-thread body. Exits on EOF, read error, slowloris trip, or when
-/// the intake channel is gone (server shut down).
+/// the intake channel is gone (server shut down). All deadline arithmetic
+/// runs on the injected `clock` so replay tests can drive net timeouts
+/// with a `FakeClock`; only the socket's polling granularity below it is
+/// kernel time.
 pub(crate) fn reader_loop(
     conn: ConnId,
     stream: TcpStream,
     max_line: usize,
     timeout: Duration,
+    clock: SharedClock,
     tx: SyncSender<ConnEvent>,
 ) {
     // Short read timeout = the polling granularity for deadline checks;
     // the real per-line/idle deadlines live above it.
     let granularity = (timeout / 4).max(Duration::from_millis(5)).min(Duration::from_millis(250));
     let _ = stream.set_read_timeout(Some(granularity));
+    reader_loop_on(conn, stream, max_line, timeout, clock, tx);
+}
+
+/// The transport-generic core of [`reader_loop`], unit-testable against a
+/// synthetic `Read` + `FakeClock` pair (no sockets, no sleeps).
+pub(crate) fn reader_loop_on<R: Read>(
+    conn: ConnId,
+    stream: R,
+    max_line: usize,
+    timeout: Duration,
+    clock: SharedClock,
+    tx: SyncSender<ConnEvent>,
+) {
+    let timeout_ms = timeout.as_secs_f64() * 1000.0;
     let mut reader = BufReader::new(stream);
-    let mut frame = BoundedLineReader::with_deadline(max_line, Some(timeout));
-    let mut last_activity = Instant::now();
+    let mut frame = BoundedLineReader::with_clock(max_line, Some(timeout), clock.clone());
+    let mut last_activity = clock.now_ms();
     loop {
         match frame.read_line(&mut reader) {
             Ok(LineOutcome::Line(line)) => {
-                last_activity = Instant::now();
+                last_activity = clock.now_ms();
                 if tx.send(ConnEvent::Line { conn, line }).is_err() {
                     return;
                 }
             }
             Ok(LineOutcome::Oversized { limit, read }) => {
-                last_activity = Instant::now();
+                last_activity = clock.now_ms();
                 if tx.send(ConnEvent::Oversized { conn, limit, read }).is_err() {
                     return;
                 }
             }
             Ok(LineOutcome::NotUtf8) => {
-                last_activity = Instant::now();
+                last_activity = clock.now_ms();
                 if tx.send(ConnEvent::BadUtf8 { conn }).is_err() {
                     return;
                 }
@@ -98,9 +119,9 @@ pub(crate) fn reader_loop(
                     let _ = tx.send(ConnEvent::SlowLine { conn, partial: frame.partial_len() });
                     return;
                 }
-                if !frame.in_progress() && last_activity.elapsed() >= timeout {
+                if !frame.in_progress() && clock.now_ms() - last_activity >= timeout_ms {
                     // one tick per quiet window; dispatch decides
-                    last_activity = Instant::now();
+                    last_activity = clock.now_ms();
                     if tx.send(ConnEvent::IdleTick { conn }).is_err() {
                         return;
                     }
@@ -111,6 +132,74 @@ pub(crate) fn reader_loop(
                 return;
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::VecDeque;
+    use std::io;
+    use std::sync::mpsc::sync_channel;
+    use std::sync::Arc;
+
+    use crate::obs::FakeClock;
+
+    use super::*;
+
+    enum Step {
+        Bytes(&'static [u8]),
+        /// Advance the fake clock by this many ms, then return WouldBlock —
+        /// the shape of a socket read timeout expiring.
+        Block(f64),
+    }
+
+    struct ScriptedStream {
+        fake: Arc<FakeClock>,
+        script: VecDeque<Step>,
+    }
+
+    impl Read for ScriptedStream {
+        fn read(&mut self, out: &mut [u8]) -> io::Result<usize> {
+            match self.script.pop_front() {
+                Some(Step::Bytes(b)) => {
+                    out[..b.len()].copy_from_slice(b);
+                    Ok(b.len())
+                }
+                Some(Step::Block(ms)) => {
+                    self.fake.advance_ms(ms);
+                    Err(io::Error::new(io::ErrorKind::WouldBlock, "scripted"))
+                }
+                None => Ok(0),
+            }
+        }
+    }
+
+    #[test]
+    fn reader_loop_timeouts_replay_on_a_fake_clock() {
+        let (clock, fake) = SharedClock::fake();
+        let script = VecDeque::from([
+            // a full quiet window with no line in progress → IdleTick
+            Step::Block(300.0),
+            // a short quiet gap → nothing
+            Step::Block(100.0),
+            // a complete line → Line (resets the idle window)
+            Step::Bytes(b"{\"x\":1}\n"),
+            // a partial line, then stalled past the per-line deadline →
+            // SlowLine with the partial byte count, and the reader exits
+            Step::Bytes(b"partial"),
+            Step::Block(300.0),
+        ]);
+        let stream = ScriptedStream { fake: fake.clone(), script };
+        let (tx, rx) = sync_channel(8);
+        reader_loop_on(7, stream, 1024, Duration::from_millis(250), clock, tx);
+        let events: Vec<ConnEvent> = rx.try_iter().collect();
+        assert_eq!(events.len(), 3, "IdleTick, Line, SlowLine");
+        assert!(matches!(events[0], ConnEvent::IdleTick { conn: 7 }));
+        match &events[1] {
+            ConnEvent::Line { conn: 7, line } => assert_eq!(line, "{\"x\":1}"),
+            other => panic!("expected Line, got {other:?}"),
+        }
+        assert!(matches!(events[2], ConnEvent::SlowLine { conn: 7, partial: 7 }));
     }
 }
 

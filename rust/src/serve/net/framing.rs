@@ -11,7 +11,9 @@
 //! slowloris deadline checks on a socket with a short read timeout.
 
 use std::io::{self, BufRead};
-use std::time::{Duration, Instant};
+use std::time::Duration;
+
+use crate::obs::SharedClock;
 
 /// Default per-line byte cap (1 MiB). Generous for JSONL requests whose
 /// prompts are bounded by `seq_len` anyway, tiny next to a hostile line.
@@ -40,10 +42,12 @@ pub enum LineOutcome {
 pub struct BoundedLineReader {
     max_len: usize,
     max_line_time: Option<Duration>,
+    clock: SharedClock,
     buf: Vec<u8>,
     dropped: usize,
     oversized: bool,
-    line_start: Option<Instant>,
+    /// Clock timestamp (ms) of the current line's first byte.
+    line_start: Option<f64>,
 }
 
 impl BoundedLineReader {
@@ -53,10 +57,24 @@ impl BoundedLineReader {
 
     /// `max_line_time` bounds how long a single line may take from its
     /// first byte to its newline; `None` disables the deadline (stdin).
+    /// Timestamps come from the default monotonic clock; the serving
+    /// stack injects its own via [`BoundedLineReader::with_clock`].
     pub fn with_deadline(max_len: usize, max_line_time: Option<Duration>) -> Self {
+        Self::with_clock(max_len, max_line_time, SharedClock::default())
+    }
+
+    /// Fully injected constructor: per-line deadlines are measured on
+    /// `clock`, so `FakeClock` tests can drive slowloris timeouts without
+    /// wall-clock sleeps.
+    pub fn with_clock(
+        max_len: usize,
+        max_line_time: Option<Duration>,
+        clock: SharedClock,
+    ) -> Self {
         BoundedLineReader {
             max_len: max_len.max(1),
             max_line_time,
+            clock,
             buf: Vec::new(),
             dropped: 0,
             oversized: false,
@@ -81,7 +99,9 @@ impl BoundedLineReader {
     /// observe the deadline while bytes are arriving.
     pub fn deadline_exceeded(&self) -> bool {
         match (self.line_start, self.max_line_time) {
-            (Some(start), Some(max)) => start.elapsed() > max,
+            (Some(start), Some(max)) => {
+                self.clock.now_ms() - start > max.as_secs_f64() * 1000.0
+            }
             _ => false,
         }
     }
@@ -115,7 +135,7 @@ impl BoundedLineReader {
             return;
         }
         if self.line_start.is_none() {
-            self.line_start = Some(Instant::now());
+            self.line_start = Some(self.clock.now_ms());
         }
         if self.oversized {
             self.dropped += chunk.len();
@@ -156,6 +176,7 @@ impl BoundedLineReader {
                 }
                 match avail.iter().position(|&b| b == b'\n') {
                     Some(i) => {
+                        // fp-lint: allow(hot-index) — i comes from position() on this slice
                         self.push(&avail[..i]);
                         (i + 1, true)
                     }
@@ -329,5 +350,31 @@ mod tests {
             }
         }
         assert!(timed_out, "drip-fed line must hit the per-line deadline");
+    }
+
+    #[test]
+    fn fake_clock_drives_the_per_line_deadline_without_sleeping() {
+        let (clock, fake) = SharedClock::fake();
+        let src = Drip { data: vec![b'z'; 8], pos: 0, block_next: false };
+        let mut r = BufReader::with_capacity(4, src);
+        let mut f =
+            BoundedLineReader::with_clock(64, Some(Duration::from_millis(250)), clock);
+        // first byte starts the line at fake time 0; within the deadline
+        // nothing trips
+        match f.read_line(&mut r) {
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {}
+            other => panic!("expected WouldBlock, got {other:?}"),
+        }
+        assert!(f.in_progress());
+        fake.advance_ms(250.0);
+        assert!(!f.deadline_exceeded(), "deadline is strict: 250ms elapsed == limit");
+        fake.advance_ms(1.0);
+        assert!(f.deadline_exceeded());
+        // the next read_line pass surfaces the typed outcome and resets
+        match f.read_line(&mut r) {
+            Ok(LineOutcome::TimedOut { partial }) => assert!(partial >= 1),
+            other => panic!("expected TimedOut, got {other:?}"),
+        }
+        assert!(!f.in_progress(), "timeout must reset the reader");
     }
 }

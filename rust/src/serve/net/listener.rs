@@ -215,7 +215,7 @@ impl NetServer {
         // and the conn spans read the engine's clock.
         let clock = ecfg.clock.clone().unwrap_or_default();
         let log = match &self.cfg.event_log {
-            Some(path) => Some(EventLog::create(path, clock)?),
+            Some(path) => Some(EventLog::create(path, clock.clone())?),
             None => None,
         };
         let (intake_tx, intake_rx) = mpsc::sync_channel::<ConnEvent>(INTAKE_CAP);
@@ -258,6 +258,7 @@ impl NetServer {
             counters: Counters::new(),
             log,
             rec: ecfg.recorder.clone(),
+            clock,
         };
         let result = d.run_loop(&intake_rx, &stop);
         // Unblock and join the accept thread regardless of how the loop
@@ -297,6 +298,9 @@ struct Dispatch<'c, 'm> {
     counters: Counters,
     log: Option<EventLog>,
     rec: Option<Recorder>,
+    /// The engine's timestamp domain, handed to every reader thread so
+    /// per-line/idle deadlines replay under a fake clock.
+    clock: SharedClock,
 }
 
 impl Dispatch<'_, '_> {
@@ -436,7 +440,10 @@ impl Dispatch<'_, '_> {
         let reader_tx = self.intake.clone();
         let max_line = self.cfg.max_line;
         let timeout = self.cfg.conn_timeout;
-        thread::spawn(move || conn::reader_loop(conn, read_half, max_line, timeout, reader_tx));
+        let reader_clock = self.clock.clone();
+        thread::spawn(move || {
+            conn::reader_loop(conn, read_half, max_line, timeout, reader_clock, reader_tx)
+        });
         self.conns.insert(conn, ConnState { stream, writer_tx, in_flight: BTreeSet::new() });
         if let Some(r) = &self.rec {
             r.begin("conn", &format!("c{conn}"), vec![("peer", Json::Str(peer.to_string()))]);

@@ -83,6 +83,7 @@ impl NmMatrix {
                 // (ascending, merged below) so every group stores exactly n
                 let mut pad = (0..m).filter(|&j| grp[j] == 0.0);
                 while kept.len() < n {
+                    // fp-lint: allow(hot-panic) — kept.len() < n ≤ m implies a zero slot remains
                     kept.push(pad.next().expect("m - nnz zeros available"));
                 }
                 kept.sort_unstable();

@@ -264,6 +264,7 @@ pub fn matvec_scalar(a: &Tensor, x: &[f32]) -> Vec<f32> {
     par::for_each_row_block(&mut out, m, 1, min_rows_for(2 * n), |r0, _r1, block| {
         for (i, o) in block.iter_mut().enumerate() {
             let row = &ad[(r0 + i) * n..(r0 + i + 1) * n];
+            // fp-lint: allow(f32-reduce) — serial per-row dot, fixed iteration order
             *o = row.iter().zip(x).map(|(&p, &q)| p * q).sum();
         }
     });
@@ -916,6 +917,7 @@ pub fn fista_step(
                 w23_rest = w23_t;
                 let (p_h, p_t) = std::mem::take(&mut part_rest).split_at_mut(rows);
                 part_rest = p_t;
+                // fp-lint: allow(det-spawn) — scoped fan-out over fixed row blocks, joined at scope end
                 s.spawn(move || {
                     par::enter_worker(|| {
                         fista_step_rows(gd, wk_h, w23_h, p_h, r0, r1, n, inv_l, thresh, coef)
@@ -925,6 +927,7 @@ pub fn fista_step(
             }
         });
     }
+    // fp-lint: allow(f32-reduce) — f64 partials summed in fixed block order
     partials.iter().sum()
 }
 
@@ -978,6 +981,7 @@ pub fn quad_form(w: &Tensor, g: &Tensor) -> f64 {
     par::sum_rows(m, min_rows_for(2 * n * n), |r| {
         let wr = w.row(r);
         let t = row_times_square(wr, gd, n);
+        // fp-lint: allow(f32-reduce) — serial f64 per-row accumulation inside sum_rows
         t.iter().zip(wr).map(|(&x, &y)| (x as f64) * (y as f64)).sum()
     })
 }
@@ -992,7 +996,9 @@ pub fn quad_obj(a: &Tensor, b: &Tensor, w: &Tensor) -> f64 {
     par::sum_rows(m, min_rows_for(2 * n * n), |r| {
         let wr = w.row(r);
         let t = row_times_square(wr, ad, n);
+        // fp-lint: allow(f32-reduce) — serial f64 per-row accumulation inside sum_rows
         let quad: f64 = t.iter().zip(wr).map(|(&x, &y)| (x as f64) * (y as f64)).sum();
+        // fp-lint: allow(f32-reduce) — serial f64 per-row accumulation inside sum_rows
         let lin: f64 = wr.iter().zip(b.row(r)).map(|(&x, &y)| (x as f64) * (y as f64)).sum();
         quad - 2.0 * lin
     })
@@ -1036,6 +1042,7 @@ pub fn dot(a: &Tensor, b: &Tensor) -> f64 {
     assert_eq!(a.shape(), b.shape());
     let (ad, bd) = (a.data(), b.data());
     par::sum_flat(ad.len(), |s, e| {
+        // fp-lint: allow(f32-reduce) — serial f64 accumulation over a fixed chunk
         ad[s..e].iter().zip(&bd[s..e]).map(|(&x, &y)| (x as f64) * (y as f64)).sum()
     })
 }
@@ -1052,6 +1059,7 @@ pub fn sq_dist(a: &Tensor, b: &Tensor) -> f64 {
                 let d = (x - y) as f64;
                 d * d
             })
+            // fp-lint: allow(f32-reduce) — serial f64 accumulation over a fixed chunk
             .sum()
     })
 }

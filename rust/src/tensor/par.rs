@@ -171,6 +171,7 @@ pub fn sum_rows(rows: usize, min_rows: usize, f: impl Fn(usize) -> f64 + Sync) -
             *slot = f(r0 + i);
         }
     });
+    // fp-lint: allow(f32-reduce) — f64 partials summed in fixed block order
     partials.iter().sum()
 }
 

@@ -46,6 +46,8 @@ pub fn log(lvl: Level, module: &str, msg: std::fmt::Arguments<'_>) {
     if !enabled(lvl) {
         return;
     }
+    // wall-clock timestamps are presentation only, never fed back into logic
+    #[allow(clippy::disallowed_methods)]
     let t = SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default();
     let tag = match lvl {
         Level::Error => "ERROR",

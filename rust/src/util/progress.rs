@@ -13,6 +13,7 @@ pub struct Progress {
 }
 
 impl Progress {
+    #[allow(clippy::disallowed_methods)] // terminal progress display only
     pub fn new(label: &str, total: usize) -> Self {
         Progress {
             label: label.to_string(),

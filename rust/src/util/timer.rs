@@ -1,4 +1,10 @@
 //! Wall-clock timing helpers for the benches and EXPERIMENTS.md §Perf.
+//!
+//! Raw `Instant::now` is sanctioned here: these helpers measure offline
+//! bench wall time and never feed serving logic (which must run on the
+//! injectable `obs::Clock` — see the clippy `disallowed-methods` mirror
+//! of fp-lint's `clock` rule).
+#![allow(clippy::disallowed_methods)]
 
 use std::time::{Duration, Instant};
 
